@@ -1,0 +1,44 @@
+//! Bench target for Fig. 2 (needle score vs r*L, both tokenizer variants)
+//! and the Fig. 3/4 depth x context grids.
+//!
+//! `cargo bench --bench fig2_needle`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lagkv::engine::Engine;
+use lagkv::harness::{self, EvalOptions};
+
+fn main() -> anyhow::Result<()> {
+    let art = std::path::PathBuf::from(
+        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !art.join("manifest.json").exists() {
+        eprintln!("SKIP fig2 bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let items: usize =
+        std::env::var("LAGKV_BENCH_ITEMS").ok().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let opts = EvalOptions { n_items: items, ..Default::default() };
+    let engines = vec![
+        Arc::new(Engine::load(&art, "llama_like")?),
+        Arc::new(Engine::load(&art, "qwen_like")?),
+    ];
+    std::fs::create_dir_all("target/paper")?;
+
+    let t0 = Instant::now();
+    let fig2 = harness::fig2(&engines, &opts)?;
+    println!("{}", fig2.render());
+    std::fs::write("target/paper/fig2.txt", fig2.render())?;
+    std::fs::write("target/paper/fig2.csv", fig2.to_csv())?;
+
+    for (engine, name) in engines.iter().zip(["fig3", "fig4"]) {
+        for (ri, r) in [0.5, 0.25].into_iter().enumerate() {
+            let grid = harness::fig34(engine, 64, r, &opts)?;
+            println!("{}", grid.render());
+            std::fs::write(format!("target/paper/{name}_r{ri}.txt"), grid.render())?;
+        }
+    }
+    println!("fig2/3/4 bench wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

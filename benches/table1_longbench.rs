@@ -1,0 +1,39 @@
+//! Bench target for Table 1 (DESIGN.md §4 row T1): regenerates the
+//! LongBench-like category scores + needle column for both models over the
+//! (L, r) grid, and times the end-to-end evaluation.
+//!
+//! `cargo bench --bench table1_longbench` (honours LAGKV_BENCH_ITEMS).
+//!
+//! Accuracy tables are the paper artifact; wall-clock is reported so this
+//! doubles as an end-to-end throughput regression check.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lagkv::engine::Engine;
+use lagkv::harness::{self, EvalOptions};
+
+fn main() -> anyhow::Result<()> {
+    let art = std::path::PathBuf::from(
+        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !art.join("manifest.json").exists() {
+        eprintln!("SKIP table1 bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let items: usize = std::env::var("LAGKV_BENCH_ITEMS").ok().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let opts = EvalOptions { n_items: items, ..Default::default() };
+    let engines = vec![
+        Arc::new(Engine::load(&art, "llama_like")?),
+        Arc::new(Engine::load(&art, "qwen_like")?),
+    ];
+    let t0 = Instant::now();
+    let table = harness::table1(&engines, &opts)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}", table.render());
+    println!("table1 bench: {items} items/cell, wall {dt:.1}s");
+    std::fs::create_dir_all("target/paper")?;
+    std::fs::write("target/paper/table1.txt", table.render())?;
+    std::fs::write("target/paper/table1.csv", table.to_csv())?;
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! LongBench-like six-family suite (Table 1's columns) at one compression
+//! setting vs the uncompressed baseline.
+//!
+//! ```bash
+//! cargo run --release --example longbench_suite -- --items 8 --lag 128 --ratio 0.5
+//! ```
+
+use lagkv::config::PolicyKind;
+use lagkv::engine::Engine;
+use lagkv::harness::{cfg, eval_family, EvalOptions};
+use lagkv::metrics::Table;
+use lagkv::util::cli::Args;
+use lagkv::workloads::longbench;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let art = lagkv::config::artifacts_dir(&args);
+    let model = args.get_or("model", "llama_like");
+    let lag = args.usize_or("lag", 128)?;
+    let ratio = args.f64_or("ratio", 0.5)?;
+    let engine = Engine::load(&art, model)?;
+    let opts = EvalOptions { n_items: args.usize_or("items", 8)?, ..Default::default() };
+
+    let mut table = Table::new(
+        &format!("LongBench-like suite, {model} (S=4, L={lag})"),
+        &["family", "baseline", &format!("lagkv r={ratio}"), "delta"],
+    );
+    let base_cfg = cfg(PolicyKind::None, lag, 1.0);
+    let comp_cfg = cfg(PolicyKind::LagKv, lag, ratio);
+    let mut base_avg = 0.0;
+    let mut comp_avg = 0.0;
+    for fam in longbench::FAMILIES {
+        let b = eval_family(&engine, fam, &base_cfg, &opts)?;
+        let c = eval_family(&engine, fam, &comp_cfg, &opts)?;
+        base_avg += b;
+        comp_avg += c;
+        table.row(vec![
+            longbench::family_label(fam).to_string(),
+            Table::fmt_f(b),
+            Table::fmt_f(c),
+            format!("{:+.2}", c - b),
+        ]);
+    }
+    let n = longbench::FAMILIES.len() as f64;
+    table.row(vec![
+        "LB Avg.".into(),
+        Table::fmt_f(base_avg / n),
+        Table::fmt_f(comp_avg / n),
+        format!("{:+.2}", (comp_avg - base_avg) / n),
+    ]);
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Passkey retrieval (the paper's §3.3 headline experiment) across
+//! eviction policies, at one (S, L, r) setting.
+//!
+//! ```bash
+//! cargo run --release --example passkey_retrieval -- --items 10 --lag 64 --ratio 0.25
+//! ```
+
+use lagkv::config::PolicyKind;
+use lagkv::engine::Engine;
+use lagkv::harness::{cfg, EvalOptions};
+use lagkv::metrics::Table;
+use lagkv::util::cli::Args;
+use lagkv::util::rng::Rng;
+use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
+use lagkv::workloads::score_item;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let art = lagkv::config::artifacts_dir(&args);
+    let model = args.get_or("model", "llama_like");
+    let lag = args.usize_or("lag", 64)?;
+    let ratio = args.f64_or("ratio", 0.25)?;
+    let items = args.usize_or("items", 10)?;
+    let engine = Engine::load(&art, model)?;
+
+    let mut table = Table::new(
+        &format!("64-digit passkey retrieval, {model}, S=4, L={lag}, r={ratio}"),
+        &["policy", "partial-match", "cache_len", "events"],
+    );
+
+    for policy in [
+        PolicyKind::None,
+        PolicyKind::LagKv,
+        PolicyKind::LocalKv,
+        PolicyKind::L2Norm,
+        PolicyKind::H2O,
+        PolicyKind::Streaming,
+        PolicyKind::Random,
+    ] {
+        let comp = cfg(policy, lag, ratio);
+        let opts = EvalOptions { n_items: items, ..Default::default() };
+        let mut rng = Rng::seed_from(opts.seed);
+        let mut total = 0.0;
+        let mut cache_len = 0usize;
+        let mut events = 0usize;
+        for i in 0..items {
+            let n_filler =
+                if engine.tokenizer.digits_per_token == 1 { 210 } else { 260 };
+            let item =
+                gen_passkey(&mut rng, &PasskeySpec { n_filler, n_digits: 64, depth: None });
+            let out = engine.generate(&item.prompt, &comp, opts.max_new, i as u64)?;
+            total += score_item(&item, &out.text);
+            cache_len = out.cache_lens.iter().copied().max().unwrap_or(0);
+            events += out.compression_events;
+        }
+        table.row(vec![
+            policy.name().to_string(),
+            Table::fmt_f(total / items as f64),
+            cache_len.to_string(),
+            events.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: load a model, generate with LagKV compression, inspect the
+//! cache.  Run with:
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use lagkv::config::{CompressionConfig, PolicyKind};
+use lagkv::engine::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let art = std::path::PathBuf::from(
+        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let engine = Engine::load(&art, "llama_like")?;
+    println!(
+        "loaded {} on {}: {} layers, {} kv heads, context {}",
+        engine.variant,
+        engine.rt.platform(),
+        engine.dims.n_layers,
+        engine.dims.n_kv_heads,
+        engine.tmax
+    );
+
+    // A tiny single-doc QA prompt in the model's synthetic language.
+    let prompt = "the river was by the stone and all of it now \
+                  fact the falcon is crimson . \
+                  one year out of the time like some other there \
+                  <q> the falcon <a>";
+
+    for (label, cfg) in [
+        (
+            "baseline (no compression)",
+            CompressionConfig { policy: PolicyKind::None, ..Default::default() },
+        ),
+        (
+            "lagkv 4x (S=4, L=16, r=0.25)",
+            CompressionConfig {
+                policy: PolicyKind::LagKv,
+                sink: 4,
+                lag: 16,
+                ratio: 0.25,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let out = engine.generate(prompt, &cfg, 8, 0)?;
+        println!("\n[{label}]");
+        println!("  answer: {:?}", out.text);
+        println!(
+            "  prompt_tokens={} cache_lens={:?} compression_events={}",
+            out.prompt_tokens, out.cache_lens, out.compression_events
+        );
+        println!(
+            "  prefill {:.1} ms, decode {:.1} ms",
+            out.prefill_us as f64 / 1000.0,
+            out.decode_us as f64 / 1000.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,306 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts for the Rust
+runtime.
+
+HLO text (NOT ``lowered.compile().serialize()`` / proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the image's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).  Everything is lowered with
+``return_tuple=True`` so the Rust side unwraps with ``to_tuple*``.
+
+Exports (artifacts/hlo/):
+  prefill_t{T}.hlo.txt        T in PREFILL_BUCKETS
+  decode_b{B}.hlo.txt         B in DECODE_BUCKETS (Tmax = cfg.max_seq)
+  lagkv_score_l{L}.hlo.txt    L in SCORE_LAGS  (the L1 Pallas kernel)
+  l2norm_score_l{L}.hlo.txt
+  decode_attn.hlo.txt         standalone Pallas decode-attention kernel
+
+plus artifacts/manifest.json (shapes, param order, bucket inventory) and
+artifacts/golden/*.json (reference vectors for the Rust unit tests).
+
+Weights are HLO *parameters*, so the same HLO serves both model variants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import common as C
+from . import model as M
+from . import tokenizer as T
+from .kernels import attention as AK
+from .kernels import lagkv_score as LS
+from .kernels import ref as R
+
+PREFILL_BUCKETS = [128, 256, 512]
+DECODE_BUCKETS = [1, 4]
+SCORE_LAGS = [8, 16, 32, 64, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default HLO printer ELIDES large constants as
+    # `constant({...})`, which the text parser silently replaces with
+    # garbage values — the folded RoPE frequency table came back as
+    # denormals and scrambled every position > 0.  Print with
+    # print_large_constants so the text round-trips faithfully.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # ... and the modern printer's source-location metadata uses attributes
+    # (source_end_line etc.) the 0.5.1-era parser rejects — strip it.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg):
+    return [spec(s) for s in M.param_shapes(cfg).values()]
+
+
+# -- entry-point wrappers (flat positional args for a stable ABI) ---------------
+
+
+def prefill_flat(cfg, *args):
+    params = M.params_from_list(args[: len(M.PARAM_ORDER)])
+    tokens, true_len = args[len(M.PARAM_ORDER) :]
+    return M.prefill(cfg, params, tokens, true_len)
+
+
+def decode_flat(cfg, *args):
+    params = M.params_from_list(args[: len(M.PARAM_ORDER)])
+    k, v, lens, pos, token = args[len(M.PARAM_ORDER) :]
+    return M.decode_step(cfg, params, k, v, lens, pos, token)
+
+
+def lower_entry(fn, arg_specs):
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def export_all(cfg: C.ModelConfig, hlo_dir: str) -> dict:
+    os.makedirs(hlo_dir, exist_ok=True)
+    nl, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    tmax = cfg.max_seq
+    manifest = {
+        "model_config": json.loads(cfg.to_json()),
+        "param_order": M.PARAM_ORDER,
+        "param_shapes": {k: list(v) for k, v in M.param_shapes(cfg).items()},
+        "prefill_buckets": PREFILL_BUCKETS,
+        "decode_buckets": DECODE_BUCKETS,
+        "score_lags": SCORE_LAGS,
+        "tmax": tmax,
+        "entries": {},
+    }
+
+    def emit(name, fn, arg_specs, outputs):
+        path = os.path.join(hlo_dir, f"{name}.hlo.txt")
+        text = lower_entry(fn, arg_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"hlo/{name}.hlo.txt",
+            "args": [[list(s.shape), str(s.dtype)] for s in arg_specs],
+            "outputs": outputs,
+        }
+        print(f"  wrote {path} ({len(text) / 1024:.0f} KiB)", flush=True)
+
+    for t in PREFILL_BUCKETS:
+        emit(
+            f"prefill_t{t}",
+            functools.partial(prefill_flat, cfg),
+            param_specs(cfg) + [spec((t,), jnp.int32), spec((), jnp.int32)],
+            ["logits_last[V]", "k[nl,hkv,T,dh]", "v[nl,hkv,T,dh]", "attn_sums[nl,hkv,T]"],
+        )
+
+    for b in DECODE_BUCKETS:
+        emit(
+            f"decode_b{b}",
+            functools.partial(decode_flat, cfg),
+            param_specs(cfg)
+            + [
+                spec((nl, b, hkv, tmax, dh)),
+                spec((nl, b, hkv, tmax, dh)),
+                spec((nl, b), jnp.int32),
+                spec((b,), jnp.int32),
+                spec((b,), jnp.int32),
+            ],
+            [
+                "logits[B,V]",
+                "k_new[nl,B,hkv,dh]",
+                "v_new[nl,B,hkv,dh]",
+                "k_out[nl,B,hkv,Tmax,dh]",
+                "v_out[nl,B,hkv,Tmax,dh]",
+                "attn_row[nl,B,hkv,Tmax]",
+            ],
+        )
+
+    for l in SCORE_LAGS:
+        shp = spec((hkv, l, dh))
+        emit(
+            f"lagkv_score_l{l}",
+            lambda kc, vc, kr, vr: (LS.lagkv_scores(kc, vc, kr, vr),),
+            [shp, shp, shp, shp],
+            ["scores[H,L]"],
+        )
+        emit(
+            f"l2norm_score_l{l}",
+            lambda kc: (LS.l2norm_scores(kc),),
+            [shp],
+            ["scores[H,L]"],
+        )
+
+    emit(
+        "decode_attn",
+        lambda q, k, v, ln: (AK.decode_attention(q, k, v, ln, blk=64),),
+        [
+            spec((cfg.n_q_heads, dh)),
+            spec((hkv, tmax, dh)),
+            spec((hkv, tmax, dh)),
+            spec((), jnp.int32),
+        ],
+        ["out[Hq,D]"],
+    )
+    return manifest
+
+
+# -- golden vectors for the Rust unit tests -------------------------------------
+
+
+def export_goldens(cfg: C.ModelConfig, golden_dir: str) -> None:
+    os.makedirs(golden_dir, exist_ok=True)
+    rng = np.random.default_rng(42)
+
+    # 1. LagKV / LocalKV / L2 scores on random K/V partitions.
+    cases = []
+    for l in (8, 16):
+        shape = (cfg.n_kv_heads, l, cfg.d_head)
+        kc, vc, kr, vr = (
+            rng.standard_normal(shape).astype(np.float32) * s + o
+            for s, o in ((1, 0), (2, 1), (0.5, -3), (1, 0))
+        )
+        cases.append(
+            {
+                "l": l,
+                "k_cur": kc.ravel().tolist(),
+                "v_cur": vc.ravel().tolist(),
+                "k_ref": kr.ravel().tolist(),
+                "v_ref": vr.ravel().tolist(),
+                "lagkv": np.asarray(R.lagkv_scores_ref(kc, vc, kr, vr)).ravel().tolist(),
+                "localkv": np.asarray(R.localkv_scores_ref(kc, vc)).ravel().tolist(),
+                "l2norm": np.asarray(R.l2norm_scores_ref(kc)).ravel().tolist(),
+            }
+        )
+    with open(os.path.join(golden_dir, "scores.json"), "w") as f:
+        json.dump({"h": cfg.n_kv_heads, "d": cfg.d_head, "cases": cases}, f)
+
+    # 2. Tokenizer round-trips per variant.
+    texts = [
+        "the pass key is 1234567890 . remember it",
+        "<q> pass key <a>",
+        "code 42 is 87654321 .",
+        "fact the falcon is crimson .",
+    ]
+    tok_cases = {}
+    for variant in C.MODEL_VARIANTS:
+        tok = T.for_variant(variant)
+        tok_cases[variant] = [
+            {"text": s, "ids": tok.encode(s, bos=False)} for s in texts
+        ]
+    with open(os.path.join(golden_dir, "tokenizer.json"), "w") as f:
+        json.dump(tok_cases, f)
+
+    # 3. Top-k selection convention.
+    scores = rng.standard_normal((cfg.n_kv_heads, 16)).astype(np.float32)
+    idx = np.asarray(R.topk_indices_ref(scores, 5))
+    with open(os.path.join(golden_dir, "topk.json"), "w") as f:
+        json.dump({"scores": scores.ravel().tolist(), "k": 5, "idx": idx.ravel().tolist()}, f)
+
+
+def export_model_goldens(cfg: C.ModelConfig, art_dir: str) -> None:
+    """End-to-end goldens on the TRAINED llama_like weights: prefill logits +
+    3 greedy decode tokens for a fixed prompt.  The Rust integration test
+    replays these through the compiled HLO."""
+    wpath = os.path.join(art_dir, "models", "llama_like", "weights.npz")
+    if not os.path.exists(wpath):
+        print("  (skip model goldens: no trained weights yet)")
+        return
+    raw = np.load(wpath)
+    params = {k: jnp.asarray(raw[k]) for k in M.PARAM_ORDER}
+    tok = T.for_variant("llama_like")
+    prompt = "fact the falcon is crimson . <q> the falcon <a>"
+    ids = tok.encode(prompt, bos=True)
+    t = 128
+    tokens = np.full((t,), C.PAD, np.int32)
+    tokens[: len(ids)] = ids
+    logits, ks, vs, sums = M.prefill(cfg, params, jnp.asarray(tokens), len(ids))
+
+    # 3 greedy decode steps through decode_step (batch 1)
+    tmax = cfg.max_seq
+    nl, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    kc = np.zeros((nl, 1, hkv, tmax, dh), np.float32)
+    vc = np.zeros((nl, 1, hkv, tmax, dh), np.float32)
+    kc[:, 0, :, : len(ids)] = np.asarray(ks)[:, :, : len(ids)]
+    vc[:, 0, :, : len(ids)] = np.asarray(vs)[:, :, : len(ids)]
+    lens = np.full((nl, 1), len(ids), np.int32)
+    pos = np.array([len(ids)], np.int32)
+    token = np.array([int(np.asarray(logits).argmax())], np.int32)
+    out_tokens = [int(token[0])]
+    all_logits = [np.asarray(logits)]
+    for _ in range(3):
+        lg, kn, vn, kc, vc, row = M.decode_step(
+            cfg, params, jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(lens), jnp.asarray(pos), jnp.asarray(token)
+        )
+        kc, vc = np.asarray(kc), np.asarray(vc)
+        nxt = int(np.asarray(lg)[0].argmax())
+        out_tokens.append(nxt)
+        all_logits.append(np.asarray(lg)[0])
+        lens = lens + 1
+        pos = pos + 1
+        token = np.array([nxt], np.int32)
+    with open(os.path.join(art_dir, "golden", "model_e2e.json"), "w") as f:
+        json.dump(
+            {
+                "prompt": prompt,
+                "prompt_ids": [int(i) for i in ids],
+                "prefill_bucket": t,
+                "greedy_tokens": out_tokens,
+                "logits_first5": [l[:5].tolist() for l in all_logits],
+            },
+            f,
+        )
+    print(f"  wrote model_e2e.json (greedy tokens: {out_tokens})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+    art = args.out
+    cfg = C.ModelConfig()
+    manifest = export_all(cfg, os.path.join(art, "hlo"))
+    with open(os.path.join(art, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not args.skip_goldens:
+        export_goldens(cfg, os.path.join(art, "golden"))
+        export_model_goldens(cfg, art)
+    print("aot export complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Shared vocabulary and model configuration for the LagKV reproduction.
+
+This module is the single source of truth for the token vocabulary and the
+tiny-GQA model architecture.  The Rust coordinator loads the same vocabulary
+from ``artifacts/models/<name>/vocab.json`` so that build-time (python) and
+serve-time (rust) tokenization agree byte-for-byte.
+
+Vocabulary layout (fixed, deterministic):
+
+    0..6            specials: <pad> <bos> <eos> <sep> <q> <a> <unk>
+    7..16           single digits  "0".."9"
+    17..116         packed 2-digit "00".."99"
+    117..1116       packed 3-digit "000".."999"
+    1117..          filler / content words (WORDS below)
+
+Both the "qwen-like" (1 digit per token) and "llama-like" (3 digits per
+token) tokenizers share this vocabulary; they differ only in how runs of
+digits are segmented (see tokenizer.py).  This mirrors the paper's Fig. 2
+observation that Qwen2.5 uses one token per digit while Llama-3.1 packs
+three digits per token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List
+
+# -- specials -----------------------------------------------------------------
+
+PAD, BOS, EOS, SEP, Q, A, UNK = range(7)
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<sep>", "<q>", "<a>", "<unk>"]
+
+# -- filler / content words ---------------------------------------------------
+# A small closed vocabulary of words used by every workload generator.  The
+# first 64 are "filler" words (haystack material), the rest are "content"
+# words used as nouns/values in QA-style tasks.  Order is load-bearing: ids
+# are assigned by position and the Rust generators index into the same list.
+
+FILLER_WORDS: List[str] = [
+    "the", "a", "of", "and", "to", "in", "is", "it", "on", "as", "with",
+    "was", "for", "at", "by", "be", "this", "that", "from", "or", "an",
+    "are", "not", "we", "his", "but", "they", "she", "her", "you", "all",
+    "will", "one", "there", "so", "out", "up", "if", "about", "who", "get",
+    "which", "when", "make", "can", "like", "time", "just", "him", "know",
+    "take", "people", "into", "year", "your", "good", "some", "could",
+    "them", "see", "other", "than", "then", "now",
+]
+
+CONTENT_WORDS: List[str] = [
+    "apple", "river", "stone", "cloud", "tiger", "maple", "ocean", "candle",
+    "silver", "meadow", "falcon", "ember", "harbor", "lantern", "orchid",
+    "pebble", "quartz", "raven", "saddle", "thistle", "umbra", "velvet",
+    "willow", "zephyr", "anchor", "basil", "cedar", "dahlia", "elm",
+    "fern", "ginger", "hazel", "iris", "jasper", "kelp", "lotus",
+    "mango", "nutmeg", "olive", "pine", "quince", "rose", "sage",
+    "tulip", "violet", "walnut", "yarrow", "zinnia", "blue", "red",
+    "green", "gold", "black", "white", "amber", "coral", "crimson",
+    "indigo", "ivory", "jade", "onyx", "pearl", "ruby", "teal",
+    "alpha", "beta", "gamma", "delta", "omega", "sigma", "kappa", "theta",
+    "north", "south", "east", "west", "spring", "summer", "autumn",
+    "winter", "copper", "iron", "zinc", "nickel", "cobalt", "helium",
+    "neon", "argon", "xenon", "radon", "quark", "boson", "lepton",
+    "hadron", "photon", "proton", "magnet", "prism",
+]
+
+STRUCT_WORDS: List[str] = [
+    # structural words used by task templates (kept separate so templates
+    # never collide with haystack filler)
+    "pass", "key", "remember", "what", "summary", "value", "color",
+    "code", "call", "def", "return", "(", ")", ":", ".", ",",
+    "in:", "out:", "doc", "fact", "item", "is",
+]
+
+WORDS: List[str] = FILLER_WORDS + CONTENT_WORDS + STRUCT_WORDS
+
+# -- vocabulary ---------------------------------------------------------------
+
+DIGIT1 = [str(d) for d in range(10)]
+DIGIT2 = [f"{d:02d}" for d in range(100)]
+DIGIT3 = [f"{d:03d}" for d in range(1000)]
+
+DIGIT1_BASE = len(SPECIALS)                     # 7
+DIGIT2_BASE = DIGIT1_BASE + len(DIGIT1)         # 17
+DIGIT3_BASE = DIGIT2_BASE + len(DIGIT2)         # 117
+WORD_BASE = DIGIT3_BASE + len(DIGIT3)           # 1117
+
+
+def build_vocab() -> List[str]:
+    """Full id -> surface-string table."""
+    return SPECIALS + DIGIT1 + DIGIT2 + DIGIT3 + WORDS
+
+
+VOCAB: List[str] = build_vocab()
+VOCAB_SIZE: int = len(VOCAB)
+TOKEN_TO_ID: Dict[str, int] = {s: i for i, s in enumerate(VOCAB)}
+# Duplicate surfaces resolve to the FIRST id ("0" -> digit1, never digit3
+# slice): dict construction above keeps the first occurrence only if we
+# insert in order and skip existing keys.
+TOKEN_TO_ID = {}
+for _i, _s in enumerate(VOCAB):
+    TOKEN_TO_ID.setdefault(_s, _i)
+
+
+# -- model configuration ------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the tiny GQA transformer (shared by both models)."""
+
+    name: str = "tiny-gqa"
+    vocab_size: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 4
+    n_q_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 32
+    d_ff: int = 256
+    max_seq: int = 512
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def group_size(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @staticmethod
+    def from_json(text: str) -> "ModelConfig":
+        return ModelConfig(**json.loads(text))
+
+
+# The two model variants of the paper, distinguished only by tokenizer mode
+# (weights are trained separately on the matching token stream).
+MODEL_VARIANTS = {
+    "llama_like": {"digits_per_token": 3},
+    "qwen_like": {"digits_per_token": 1},
+}
+
+
+def write_vocab_json(path: str) -> None:
+    """Write the vocab artifact consumed by the Rust tokenizer."""
+    payload = {
+        "specials": SPECIALS,
+        "digit1_base": DIGIT1_BASE,
+        "digit2_base": DIGIT2_BASE,
+        "digit3_base": DIGIT3_BASE,
+        "word_base": WORD_BASE,
+        "words": WORDS,
+        "vocab_size": VOCAB_SIZE,
+        "tokens": VOCAB,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)

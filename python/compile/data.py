@@ -1,0 +1,211 @@
+"""Synthetic long-context task generators (training side).
+
+Seven task families.  The first is the paper's 64-digit passkey retrieval;
+the other six mirror the LongBench categories used in Table 1.  Every family
+embeds its answer-critical span at a controlled depth inside filler text so
+that KV-cache eviction policies are stressed exactly the way the paper's
+benchmarks stress them.
+
+The Rust crate re-implements these generators (rust/src/workloads/) with the
+same templates; prompts are format-identical, so the build-time-trained
+model is in-distribution at serve time.
+
+All generators return ``(prompt, answer)`` as *text* (see tokenizer.py for
+the text conventions).  ``filler(rng, n)`` produces ``n`` whitespace symbols
+of haystack material.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from . import common as C
+
+Task = Tuple[str, str]  # (prompt text, answer text)
+
+FAMILIES = [
+    "passkey",
+    "single_qa",
+    "multi_qa",
+    "summarization",
+    "fewshot",
+    "synthetic",
+    "code",
+]
+
+# Content-word helpers ---------------------------------------------------------
+
+_NOUNS = C.CONTENT_WORDS[:48]
+_VALUES = C.CONTENT_WORDS[48:]
+
+
+def filler(rng: np.random.Generator, n_words: int) -> List[str]:
+    """n_words of haystack filler, sentence-ish (period every 8..14 words)."""
+    out: List[str] = []
+    gap = int(rng.integers(8, 15))
+    for i in range(n_words):
+        out.append(C.FILLER_WORDS[int(rng.integers(0, len(C.FILLER_WORDS)))])
+        gap -= 1
+        if gap == 0:
+            out.append(".")
+            gap = int(rng.integers(8, 15))
+    return out
+
+
+def digits(rng: np.random.Generator, n: int) -> str:
+    return "".join(str(int(rng.integers(0, 10))) for _ in range(n))
+
+
+def _splice(hay: List[str], needle: List[str], depth: float) -> List[str]:
+    """Insert needle at fractional depth of the haystack."""
+    pos = int(round(depth * len(hay)))
+    return hay[:pos] + needle + hay[pos:]
+
+
+# -- 1. passkey (the paper's needle test) ---------------------------------------
+
+
+def gen_passkey(
+    rng: np.random.Generator,
+    n_filler: int = 300,
+    n_digits: int = 64,
+    depth: float | None = None,
+) -> Task:
+    if depth is None:
+        depth = float(rng.uniform(0.0, 1.0))
+    key = digits(rng, n_digits)
+    needle = ["<sep>", "pass", "key", "is", key, ".", "remember", "it", "<sep>"]
+    hay = filler(rng, n_filler)
+    body = _splice(hay, needle, depth)
+    prompt = " ".join(body + ["<q>", "pass", "key", "<a>"])
+    return prompt, key
+
+
+# -- 2. single-doc QA ------------------------------------------------------------
+
+
+def gen_single_qa(rng: np.random.Generator, n_filler: int = 300) -> Task:
+    n_facts = int(rng.integers(3, 7))
+    nouns = rng.choice(len(_NOUNS), size=n_facts, replace=False)
+    vals = rng.integers(0, len(_VALUES), size=n_facts)
+    hay = filler(rng, n_filler)
+    for j in range(n_facts):
+        fact = ["fact", "the", _NOUNS[int(nouns[j])], "is", _VALUES[int(vals[j])], "."]
+        hay = _splice(hay, fact, float(rng.uniform(0.05, 0.95)))
+    pick = int(rng.integers(0, n_facts))
+    prompt = " ".join(hay + ["<q>", "the", _NOUNS[int(nouns[pick])], "<a>"])
+    return prompt, _VALUES[int(vals[pick])]
+
+
+# -- 3. multi-doc QA -------------------------------------------------------------
+
+
+def gen_multi_qa(rng: np.random.Generator, n_filler: int = 300) -> Task:
+    """Two facts in two <sep>-separated docs; answer both values in order."""
+    nouns = rng.choice(len(_NOUNS), size=2, replace=False)
+    vals = rng.integers(0, len(_VALUES), size=2)
+    docs: List[str] = []
+    per_doc = n_filler // 2
+    for j in range(2):
+        hay = filler(rng, per_doc)
+        fact = ["fact", "the", _NOUNS[int(nouns[j])], "is", _VALUES[int(vals[j])], "."]
+        docs += ["<sep>", "doc"] + _splice(hay, fact, float(rng.uniform(0.1, 0.9)))
+    prompt = " ".join(
+        docs
+        + ["<q>", "the", _NOUNS[int(nouns[0])], "and", "the", _NOUNS[int(nouns[1])], "<a>"]
+    )
+    return prompt, f"{_VALUES[int(vals[0])]} {_VALUES[int(vals[1])]}"
+
+
+# -- 4. summarization (salient-fact coverage) ------------------------------------
+
+
+def gen_summarization(rng: np.random.Generator, n_filler: int = 300) -> Task:
+    """k salient items must all be recalled, in order (coverage metric)."""
+    k = int(rng.integers(2, 5))
+    vals = rng.choice(len(_VALUES), size=k, replace=False)
+    hay = filler(rng, n_filler)
+    # insert in order at increasing depths so answer order is well-defined
+    depths = np.sort(rng.uniform(0.05, 0.95, size=k))
+    for j in range(k - 1, -1, -1):  # back-to-front keeps earlier depths valid
+        item = ["item", _VALUES[int(vals[j])], "."]
+        hay = _splice(hay, item, float(depths[j]))
+    prompt = " ".join(hay + ["<q>", "summary", "<a>"])
+    return prompt, " ".join(_VALUES[int(v)] for v in vals)
+
+
+# -- 5. few-shot -----------------------------------------------------------------
+
+
+def _fewshot_map(w_idx: int) -> int:
+    """Deterministic pairing on the value table (fixed 'task' to learn)."""
+    return (w_idx * 7 + 3) % len(_VALUES)
+
+
+def gen_fewshot(rng: np.random.Generator, n_filler: int = 200) -> Task:
+    n_shots = int(rng.integers(3, 6))
+    idxs = rng.choice(len(_VALUES), size=n_shots + 1, replace=False)
+    shots: List[str] = []
+    for j in range(n_shots):
+        w = int(idxs[j])
+        shots += ["in:", _VALUES[w], "out:", _VALUES[_fewshot_map(w)], "."]
+    hay = filler(rng, n_filler)
+    body = _splice(hay, shots, float(rng.uniform(0.0, 0.6)))
+    q = int(idxs[n_shots])
+    prompt = " ".join(body + ["<q>", "in:", _VALUES[q], "out:", "<a>"])
+    return prompt, _VALUES[_fewshot_map(q)]
+
+
+# -- 6. synthetic (indexed code retrieval, PassageRetrieval-like) -----------------
+
+
+def gen_synthetic(rng: np.random.Generator, n_filler: int = 300) -> Task:
+    n_codes = int(rng.integers(3, 7))
+    ids = rng.choice(90, size=n_codes, replace=False) + 10  # 2-digit indices
+    codes = [digits(rng, 8) for _ in range(n_codes)]
+    hay = filler(rng, n_filler)
+    for j in range(n_codes):
+        entry = ["code", str(int(ids[j])), "is", codes[j], "."]
+        hay = _splice(hay, entry, float(rng.uniform(0.05, 0.95)))
+    pick = int(rng.integers(0, n_codes))
+    prompt = " ".join(hay + ["<q>", "code", str(int(ids[pick])), "<a>"])
+    return prompt, codes[pick]
+
+
+# -- 7. code (identifier recall) ---------------------------------------------------
+
+
+def gen_code(rng: np.random.Generator, n_filler: int = 300) -> Task:
+    n_defs = int(rng.integers(3, 7))
+    names = rng.choice(len(_NOUNS), size=n_defs, replace=False)
+    rets = rng.integers(0, len(_VALUES), size=n_defs)
+    hay = filler(rng, n_filler)
+    for j in range(n_defs):
+        d = ["def", _NOUNS[int(names[j])], "(", ")", ":", "return", _VALUES[int(rets[j])]]
+        hay = _splice(hay, d, float(rng.uniform(0.05, 0.95)))
+    pick = int(rng.integers(0, n_defs))
+    prompt = " ".join(hay + ["<q>", "call", _NOUNS[int(names[pick])], "<a>"])
+    return prompt, _VALUES[int(rets[pick])]
+
+
+GENERATORS = {
+    "passkey": gen_passkey,
+    "single_qa": gen_single_qa,
+    "multi_qa": gen_multi_qa,
+    "summarization": gen_summarization,
+    "fewshot": gen_fewshot,
+    "synthetic": gen_synthetic,
+    "code": gen_code,
+}
+
+
+def sample_task(rng: np.random.Generator, n_filler: int) -> Task:
+    """Training mixture.  Passkey (the headline benchmark) is upweighted to
+    ~1/3; the remaining mass is uniform over the LongBench-like families."""
+    if rng.uniform() < 0.34:
+        nd = int(rng.integers(4, 73))
+        return gen_passkey(rng, n_filler=n_filler, n_digits=nd)
+    fam = FAMILIES[1 + int(rng.integers(0, len(FAMILIES) - 1))]
+    return GENERATORS[fam](rng, n_filler=n_filler)

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: single-query (decode-step) attention over a compacted
+KV cache with a valid-length mask.
+
+This is the FlashAttention-style hot spot that LagKV is designed to compose
+with: the kernel never materializes attention weights for the coordinator —
+token importance comes from the LagKV score kernel instead (the paper's
+central "attention-free" point).  A separate instrumented path
+(`decode_attention_probs`) *does* expose the probability row; it exists only
+to feed the H2O baseline and to demonstrate exactly the infrastructure
+burden the paper criticizes (§1).
+
+Grid: one step per query head.  Each step stages the head's KV-group cache
+tile [T, D] into VMEM and performs an online-softmax accumulation over
+sequence tiles of size BLK.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, blk: int):
+    """One query head vs its KV group's cache.
+
+    q_ref: [1, D]; k_ref, v_ref: [1, T, D] (the group's cache); len_ref: [1]
+    valid-row count; o_ref: [1, D].
+    """
+    q = q_ref[0]  # [D]
+    _, t, d = k_ref.shape
+    length = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    n_blocks = t // blk
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        ix = (0, pl.dslice(i * blk, blk), slice(None))
+        k_tile = pl.load(k_ref, ix)  # [BLK, D]
+        v_tile = pl.load(v_ref, ix)
+        s = (k_tile @ q) * scale  # [BLK]
+        idx = i * blk + jnp.arange(blk)
+        s = jnp.where(idx < length, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # [BLK]
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc = acc * alpha + p @ v_tile  # [D]
+        return m_new, l_new, acc
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0, :] = acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def decode_attention(q, k, v, length, blk: int = 64):
+    """Online-softmax decode attention.
+
+    Args:
+      q: [Hq, D] RoPE-rotated query row.
+      k, v: [Hkv, T, D] compacted cache; rows >= `length` are masked.
+      length: scalar int32 valid-row count (shared across heads: the cache
+        compactor keeps per-head token *identities* distinct but counts
+        equal — see rust/src/kvcache/).
+      blk: sequence tile size (T must be a multiple).
+    Returns:
+      [Hq, D] attention output.
+    """
+    hq, d = q.shape
+    hkv, t, _ = k.shape
+    group = hq // hkv
+    assert t % blk == 0, (t, blk)
+    lens = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (hq,))
+
+    q_spec = pl.BlockSpec((1, d), lambda i: (i, 0))
+    kv_spec = pl.BlockSpec((1, t, d), lambda i: (i // group, 0, 0))
+    len_spec = pl.BlockSpec((1,), lambda i: (i,))
+
+    kernel = functools.partial(_decode_attn_kernel, blk=blk)
+    return pl.pallas_call(
+        kernel,
+        grid=(hq,),
+        in_specs=[q_spec, kv_spec, kv_spec, len_spec],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, lens)
+
+
+@jax.jit
+def decode_attention_probs(q, k, v, length):
+    """Instrumented (non-Pallas) decode attention that ALSO returns the
+    attention probability row, aggregated over each KV group — the extra
+    output the H2O baseline requires.  Plain jnp on purpose: this is the
+    "incompatible with FlashAttention" path of the paper's argument."""
+    hq, d = q.shape
+    hkv, t, _ = k.shape
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hd,htd->ht", q, kq) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(t)[None, :] < length
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=1) * mask
+    p = p / jnp.maximum(p.sum(axis=1, keepdims=True), 1e-30)
+    out = jnp.einsum("ht,htd->hd", p, vq)
+    probs_kv = p.reshape(hkv, group, t).sum(axis=1)  # [Hkv, T]
+    return out, probs_kv

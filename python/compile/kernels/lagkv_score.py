@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: LagKV token scoring (Eqs. 5-9).
+
+One grid step per KV head.  Each step stages the head's current partition
+and its lag reference (four [L, D] tiles, K/V x cur/ref) into VMEM, runs the
+min-max / std / softmax reduction chain entirely on-chip, and writes the
+[L] score row.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the reductions are VPU work —
+no MXU involvement — so this kernel never contends with the attention
+kernel's systolic-array pipeline.  VMEM footprint per grid step is
+4*L*D*4 bytes (~128 KiB at the paper's L=1024, D=64/128 scale), far under
+the ~16 MiB budget, leaving headroom for double-buffering the HBM->VMEM
+stream.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO ops that the
+Rust runtime's CPU client runs bit-identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+
+
+def _score_half(cur, lag):
+    """Softmax'd channel-std of the lag-normalized tile.  cur/lag: [L, D]."""
+    # Eqs. 5-6: per-channel min/max over the reference's sequence axis.
+    mn = jnp.min(lag, axis=0, keepdims=True)  # [1, D]
+    mx = jnp.max(lag, axis=0, keepdims=True)
+    # Eq. 7: min-max normalize the current partition.
+    norm = (cur - mn) / (mx - mn + EPS)  # [L, D]
+    # Eq. 8: channel-wise std per token, then softmax along the partition.
+    mean = jnp.mean(norm, axis=1, keepdims=True)
+    std = jnp.sqrt(jnp.mean((norm - mean) ** 2, axis=1))  # [L]
+    m = jnp.max(std)
+    e = jnp.exp(std - m)
+    return e / jnp.sum(e)
+
+
+def _lagkv_kernel(kc_ref, vc_ref, kl_ref, vl_ref, out_ref):
+    """Fused kernel body: score(K) + score(V) in one VMEM residency.
+
+    Block shapes are [1, L, D] (one head per grid step); out is [1, L].
+    """
+    kc = kc_ref[0]
+    vc = vc_ref[0]
+    kl = kl_ref[0]
+    vl = vl_ref[0]
+    # Eq. 9: final token score is the sum of the K-score and the V-score.
+    out_ref[0, :] = _score_half(kc, kl) + _score_half(vc, vl)
+
+
+@jax.jit
+def lagkv_scores(k_cur, v_cur, k_ref, v_ref):
+    """LagKV scores for a whole partition, all heads.
+
+    Args:
+      k_cur, v_cur, k_ref, v_ref: [H, L, D] float32.
+    Returns:
+      [H, L] float32 scores (higher = keep).
+    """
+    h, l, d = k_cur.shape
+    spec = pl.BlockSpec((1, l, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _lagkv_kernel,
+        grid=(h,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=pl.BlockSpec((1, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, l), jnp.float32),
+        interpret=True,
+    )(k_cur, v_cur, k_ref, v_ref)
+
+
+@jax.jit
+def localkv_scores(k_cur, v_cur):
+    """LocalKV variant: reference is the chunk itself (Eqs. 12-13)."""
+    return lagkv_scores(k_cur, v_cur, k_cur, v_cur)
+
+
+def _l2_kernel(k_ref, out_ref):
+    k = k_ref[0]
+    out_ref[0, :] = -jnp.sqrt(jnp.sum(k * k, axis=-1))
+
+
+@jax.jit
+def l2norm_scores(k_cur):
+    """Recursive L2-norm variant (Eq. 14): score = -||K||_2 per token."""
+    h, l, d = k_cur.shape
+    return pl.pallas_call(
+        _l2_kernel,
+        grid=(h,),
+        in_specs=[pl.BlockSpec((1, l, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, l), jnp.float32),
+        interpret=True,
+    )(k_cur)

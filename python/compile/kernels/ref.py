@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These implement the paper's equations directly and serve as the correctness
+ground truth for
+
+* the Pallas kernels (python/tests/test_kernels.py, hypothesis sweeps), and
+* the pure-Rust scorer in rust/src/compress/ (via golden vectors emitted by
+  aot.py into artifacts/golden/).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def _softmax_seq(x):
+    m = x.max(axis=1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / e.sum(axis=1, keepdims=True)
+
+
+def lagkv_scores_ref(k_cur, v_cur, k_ref, v_ref):
+    """LagKV token scores, Eqs. (5)-(9) of the paper.
+
+    Args:
+      k_cur, v_cur: [H, L, D] current partition K/V states.
+      k_ref, v_ref: [H, L, D] next ("lag") partition, the reference.
+    Returns:
+      scores: [H, L] — per-head token importance (higher = keep).
+
+    Per head h and channel d:
+      min/max over the *reference's* sequence axis (Eqs. 5-6),
+      min-max normalize the current partition (Eq. 7),
+      per-token std across channels, softmax over the partition (Eq. 8),
+      sum of K-score and V-score (Eq. 9).
+    """
+
+    def one(cur, ref):
+        mn = ref.min(axis=1, keepdims=True)  # [H, 1, D]
+        mx = ref.max(axis=1, keepdims=True)
+        norm = (cur - mn) / (mx - mn + EPS)  # [H, L, D]
+        std = norm.std(axis=2)  # [H, L] channel-wise std per token
+        return _softmax_seq(std)
+
+    return one(k_cur, k_ref) + one(v_cur, v_ref)
+
+
+def localkv_scores_ref(k_cur, v_cur):
+    """LocalKV variant (Appendix A.2, Eqs. 12-13): min/max from the local
+    chunk itself instead of the lag reference."""
+    return lagkv_scores_ref(k_cur, v_cur, k_cur, v_cur)
+
+
+def l2norm_scores_ref(k_cur):
+    """Recursive L2-norm variant (Appendix A.2, Eq. 14): score = -||K||_2.
+
+    Value states are ignored; low key-norm tokens are *kept* (the negation
+    makes higher = keep, matching the top-k convention)."""
+    return -jnp.linalg.norm(k_cur, axis=2)  # [H, L]
+
+
+def decode_attention_ref(q, k, v, length):
+    """Single-query attention against a (possibly over-allocated) KV cache.
+
+    Args:
+      q: [Hq, D] query for the new token (already RoPE-rotated).
+      k, v: [Hkv, T, D] cache (rows >= length are garbage and masked out).
+      length: scalar int — number of valid cache rows.
+    Returns:
+      out: [Hq, D], probs: [Hq, T]
+    """
+    hq, d = q.shape
+    hkv, t, _ = k.shape
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=0)  # [Hq, T, D]
+    vq = jnp.repeat(v, group, axis=0)
+    logits = jnp.einsum("hd,htd->ht", q, kq) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(t)[None, :] < length
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=1, keepdims=True))
+    probs = probs * mask
+    probs = probs / probs.sum(axis=1, keepdims=True)
+    out = jnp.einsum("ht,htd->hd", probs, vq)
+    return out, probs
+
+
+def topk_indices_ref(scores, k):
+    """Indices of the k largest scores per head, returned in ascending index
+    order (the stable layout used by the cache compactor)."""
+    idx = jnp.argsort(-scores, axis=1, stable=True)[:, :k]
+    return jnp.sort(idx, axis=1)

@@ -1,0 +1,305 @@
+"""L2: tiny GQA transformer in JAX — the compute graph the Rust coordinator
+drives through AOT-compiled HLO.
+
+Architecture mirrors Llama-3/Qwen-2.5 (the paper's base models) at 1/1000
+scale: RoPE, RMSNorm, SwiGLU, grouped-query attention.  Entry points that
+are AOT-lowered (aot.py):
+
+* ``prefill``      — full-prompt forward; returns the last-position logits,
+                     the per-layer KV cache, and per-token accumulated
+                     attention mass (the H2O baseline's food — produced by
+                     the *instrumented* path the paper argues real serving
+                     stacks cannot afford).
+* ``decode_step``  — one autoregressive step over a compacted,
+                     over-allocated KV cache with valid-length masking;
+                     appends in-graph (dynamic_update_slice) so the cache
+                     can stay device-resident across steps (§Perf).
+* ``lagkv_score_graph`` — wraps the L1 Pallas kernel so it lowers into its
+                     own HLO artifact.
+
+Weights are *parameters* of the lowered HLO, so one HLO set serves both
+trained model variants (llama_like / qwen_like): the Rust runtime feeds a
+different ``weights.npz`` per variant.
+
+RoPE is applied to K at *write* position, so evicting cache rows never
+perturbs the positional geometry of the survivors — the property that makes
+token eviction position-stable.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+# Flat, ordered parameter list — the AOT calling convention shared with the
+# Rust runtime (recorded in artifacts/manifest.json as well).
+PARAM_ORDER: List[str] = [
+    "emb",
+    "wq",
+    "wk",
+    "wv",
+    "wo",
+    "w_gate",
+    "w_up",
+    "w_down",
+    "ln1",
+    "ln2",
+    "ln_f",
+    "lm_head",
+]
+
+_STACKED = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "ln1", "ln2")
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    nl, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "emb": (cfg.vocab_size, d),
+        "wq": (nl, d, hq * dh),
+        "wk": (nl, d, hkv * dh),
+        "wv": (nl, d, hkv * dh),
+        "wo": (nl, hq * dh, d),
+        "w_gate": (nl, d, f),
+        "w_up": (nl, d, f),
+        "w_down": (nl, f, d),
+        "ln1": (nl, d),
+        "ln2": (nl, d),
+        "ln_f": (d,),
+        "lm_head": (d, cfg.vocab_size),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    out: Params = {}
+    for name, shape in param_shapes(cfg).items():
+        if name.startswith("ln"):
+            out[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            w = rng.standard_normal(shape, dtype=np.float32) / np.sqrt(fan_in)
+            out[name] = jnp.asarray(w)
+    return out
+
+
+def params_to_list(params: Params) -> List[jax.Array]:
+    return [params[n] for n in PARAM_ORDER]
+
+
+def params_from_list(flat) -> Params:
+    return dict(zip(PARAM_ORDER, flat))
+
+
+# -- building blocks ----------------------------------------------------------
+
+
+def rmsnorm(x, g, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope_angles(cfg: ModelConfig, positions):
+    """positions [...,] -> (cos, sin) of shape [..., D/2]."""
+    dh = cfg.d_head
+    inv = cfg.rope_theta ** (-jnp.arange(0, dh, 2, dtype=jnp.float32) / dh)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x, cos, sin):
+    """x: [..., D] with interleaved pairs; cos/sin broadcastable [..., D/2]."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def swiglu(x, wg, wu, wd):
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+# -- prefill ------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, true_len):
+    """Full-prompt forward.
+
+    Args:
+      tokens: [T] int32 (padded to the bucket length with <pad>).
+      true_len: scalar int32, number of valid prompt tokens.
+    Returns:
+      logits_last: [V] logits at position true_len-1.
+      k_cache, v_cache: [nl, Hkv, T, D] (RoPE-rotated keys; rows >= true_len
+        are garbage the coordinator never reads).
+      attn_sums: [nl, Hkv, T] — column sums of attention probability over
+        valid query rows, aggregated over each KV group (H2O's statistic).
+    """
+    t = tokens.shape[0]
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    group = hq // hkv
+
+    x = params["emb"][tokens]  # [T, d]
+    pos = jnp.arange(t)
+    cos, sin = rope_angles(cfg, pos)  # [T, D/2]
+    row_valid = pos < true_len
+    causal = pos[None, :] <= pos[:, None]  # key j visible to query i
+    col_valid = row_valid[None, :]
+
+    def layer(x, w):
+        xn = rmsnorm(x, w["ln1"], cfg.norm_eps)
+        q = (xn @ w["wq"]).reshape(t, hq, dh)
+        k = (xn @ w["wk"]).reshape(t, hkv, dh)
+        v = (xn @ w["wv"]).reshape(t, hkv, dh)
+        q = rope_apply(q, cos[:, None, :], sin[:, None, :])
+        k = rope_apply(k, cos[:, None, :], sin[:, None, :])
+        kg = jnp.repeat(k, group, axis=1)  # [T, Hq, D]
+        vg = jnp.repeat(v, group, axis=1)
+        s = jnp.einsum("thd,shd->hts", q, kg) / jnp.sqrt(jnp.float32(dh))
+        mask = (causal & col_valid)[None]
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        p = p * mask
+        attn = jnp.einsum("hts,shd->thd", p, vg).reshape(t, hq * dh)
+        x = x + attn @ w["wo"]
+        xn2 = rmsnorm(x, w["ln2"], cfg.norm_eps)
+        x = x + swiglu(xn2, w["w_gate"], w["w_up"], w["w_down"])
+        # H2O statistic: attention mass received by each key position from
+        # valid queries, summed over the group's query heads.
+        pv = p * row_valid[None, :, None]
+        sums = pv.sum(axis=1).reshape(hkv, group, t).sum(axis=1)  # [Hkv, T]
+        return x, (k.transpose(1, 0, 2), v.transpose(1, 0, 2), sums)
+
+    stacked = {n: params[n] for n in _STACKED}
+    x, (ks, vs, sums) = jax.lax.scan(layer, x, stacked)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits_last = x[true_len - 1] @ params["lm_head"]
+    return logits_last, ks, vs, sums
+
+
+# -- training forward (batched, full logits) -----------------------------------
+
+
+def batched_logits(cfg: ModelConfig, params: Params, tokens):
+    """[B, T] tokens -> [B, T, V] logits (causal; training batches are
+    packed, padding handled by the loss mask)."""
+    b, t = tokens.shape
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    group = hq // hkv
+    x = params["emb"][tokens]  # [B, T, d]
+    pos = jnp.arange(t)
+    cos, sin = rope_angles(cfg, pos)
+    causal = pos[None, :] <= pos[:, None]
+
+    def layer(x, w):
+        xn = rmsnorm(x, w["ln1"], cfg.norm_eps)
+        q = (xn @ w["wq"]).reshape(b, t, hq, dh)
+        k = (xn @ w["wk"]).reshape(b, t, hkv, dh)
+        v = (xn @ w["wv"]).reshape(b, t, hkv, dh)
+        q = rope_apply(q, cos[:, None, :], sin[:, None, :])
+        k = rope_apply(k, cos[:, None, :], sin[:, None, :])
+        kg = jnp.repeat(k, group, axis=2)
+        vg = jnp.repeat(v, group, axis=2)
+        s = jnp.einsum("bthd,bshd->bhts", q, kg) / jnp.sqrt(jnp.float32(dh))
+        s = jnp.where(causal[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhts,bshd->bthd", p, vg).reshape(b, t, hq * dh)
+        x = x + attn @ w["wo"]
+        xn2 = rmsnorm(x, w["ln2"], cfg.norm_eps)
+        x = x + swiglu(xn2, w["w_gate"], w["w_up"], w["w_down"])
+        return x, None
+
+    stacked = {n: params[n] for n in _STACKED}
+    x, _ = jax.lax.scan(layer, x, stacked)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+# -- decode -------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params: Params, k_cache, v_cache, lens, pos, token):
+    """One autoregressive step for a batch of B slots.
+
+    Args:
+      k_cache, v_cache: [nl, B, Hkv, Tmax, D] compacted caches (device-
+        resident across steps on the fast path).
+      lens:  [nl, B] int32 — valid cache rows per layer and slot.  Uniform
+        across heads by construction of the compactor, but NOT across
+        layers: the recursive-L2 variant (Appendix A.2) exempts the first
+        two layers from compression, so their caches stay longer.  Idle
+        slots use 0.
+      pos:   [B] int32 — absolute position of `token` (RoPE phase).
+      token: [B] int32 — the token to embed and append.
+    Returns:
+      logits:  [B, V]
+      k_new, v_new: [nl, B, Hkv, D]  (for the coordinator's host mirror)
+      k_out, v_out: [nl, B, Hkv, Tmax, D]  (in-graph appended caches)
+      attn_row: [nl, B, Hkv, Tmax] — this step's attention mass per cache
+        row, group-aggregated (H2O's decode-time statistic).
+    """
+    b = token.shape[0]
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    group = hq // hkv
+    tmax = k_cache.shape[3]
+
+    x = params["emb"][token]  # [B, d]
+    cos, sin = rope_angles(cfg, pos)  # [B, D/2]
+
+    def layer(x, w_and_cache):
+        w, kc, vc, lens_l = w_and_cache  # kc/vc: [B, Hkv, Tmax, D]; lens_l: [B]
+        xn = rmsnorm(x, w["ln1"], cfg.norm_eps)
+        q = (xn @ w["wq"]).reshape(b, hq, dh)
+        k = (xn @ w["wk"]).reshape(b, hkv, dh)
+        v = (xn @ w["wv"]).reshape(b, hkv, dh)
+        q = rope_apply(q, cos[:, None, :], sin[:, None, :])
+        k = rope_apply(k, cos[:, None, :], sin[:, None, :])
+
+        # In-graph append at lens_l[b] (same row for every head).
+        def upd(cache_b, new_b, len_b):
+            return jax.lax.dynamic_update_slice(
+                cache_b, new_b[:, None, :], (0, len_b, 0)
+            )
+
+        kc = jax.vmap(upd)(kc, k, lens_l)
+        vc = jax.vmap(upd)(vc, v, lens_l)
+
+        kg = jnp.repeat(kc, group, axis=1)  # [B, Hq, Tmax, D]
+        vg = jnp.repeat(vc, group, axis=1)
+        s = jnp.einsum("bhd,bhtd->bht", q, kg) / jnp.sqrt(jnp.float32(dh))
+        valid = jnp.arange(tmax)[None, None, :] < (lens_l + 1)[:, None, None]
+        s = jnp.where(valid, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1) * valid
+        attn = jnp.einsum("bht,bhtd->bhd", p, vg).reshape(b, hq * dh)
+        x = x + attn @ w["wo"]
+        xn2 = rmsnorm(x, w["ln2"], cfg.norm_eps)
+        x = x + swiglu(xn2, w["w_gate"], w["w_up"], w["w_down"])
+        row = p.reshape(b, hkv, group, tmax).sum(axis=2)  # [B, Hkv, Tmax]
+        return x, (k, v, kc, vc, row)
+
+    stacked = {n: params[n] for n in _STACKED}
+    x, (k_new, v_new, k_out, v_out, rows) = jax.lax.scan(
+        layer, x, (stacked, k_cache, v_cache, lens)
+    )
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, k_new, v_new, k_out, v_out, rows
+
+
+# -- LagKV score graph (L2 wrapper over the L1 Pallas kernel) -------------------
+
+
+def lagkv_score_graph(k_cur, v_cur, k_ref, v_ref):
+    """Thin L2 entry point so the L1 kernel lowers into its own HLO artifact
+    the Rust cache manager can invoke (``--scorer=xla``)."""
+    from .kernels import lagkv_score
+
+    return (lagkv_score.lagkv_scores(k_cur, v_cur, k_ref, v_ref),)

@@ -1,0 +1,96 @@
+"""Whitespace + digit-run tokenizers, mirrored in rust/src/tokenizer/.
+
+Text is a space-separated stream of symbols.  A symbol consisting purely of
+ASCII digits is a *digit run* and is segmented according to the tokenizer
+mode:
+
+* ``digits_per_token=1`` ("qwen-like"): one token per digit.
+* ``digits_per_token=3`` ("llama-like"): greedy 3-digit packing from the
+  left; a remainder of 2 or 1 digits uses the 2-digit / 1-digit slices.
+
+Any other symbol is looked up in the word table, falling back to ``<unk>``.
+Decoding inverts the mapping; digit tokens are concatenated without spaces
+when adjacent, so ``decode(encode(s)) == s`` for canonical inputs (tested).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from . import common as C
+
+
+class Tokenizer:
+    def __init__(self, digits_per_token: int):
+        assert digits_per_token in (1, 3)
+        self.digits_per_token = digits_per_token
+
+    # -- encode ---------------------------------------------------------------
+
+    def encode_digit_run(self, run: str) -> List[int]:
+        """Segment a run of digits into token ids."""
+        assert run.isdigit()
+        out: List[int] = []
+        if self.digits_per_token == 1:
+            for ch in run:
+                out.append(C.DIGIT1_BASE + int(ch))
+            return out
+        i = 0
+        n = len(run)
+        while i < n:
+            rem = n - i
+            if rem >= 3:
+                out.append(C.DIGIT3_BASE + int(run[i : i + 3]))
+                i += 3
+            elif rem == 2:
+                out.append(C.DIGIT2_BASE + int(run[i : i + 2]))
+                i += 2
+            else:
+                out.append(C.DIGIT1_BASE + int(run[i]))
+                i += 1
+        return out
+
+    def encode_symbol(self, sym: str) -> List[int]:
+        if sym.isdigit():
+            return self.encode_digit_run(sym)
+        return [C.TOKEN_TO_ID.get(sym, C.UNK)]
+
+    def encode(self, text: str, bos: bool = False) -> List[int]:
+        ids: List[int] = [C.BOS] if bos else []
+        for sym in text.split():
+            ids.extend(self.encode_symbol(sym))
+        return ids
+
+    # -- decode ---------------------------------------------------------------
+
+    @staticmethod
+    def is_digit_token(tid: int) -> bool:
+        return C.DIGIT1_BASE <= tid < C.WORD_BASE
+
+    def decode(self, ids: List[int]) -> str:
+        parts: List[str] = []
+        prev_digit = False
+        for tid in ids:
+            if tid < 0 or tid >= C.VOCAB_SIZE:
+                surf, is_digit = "<unk>", False
+            else:
+                surf = C.VOCAB[tid]
+                is_digit = self.is_digit_token(tid)
+            if is_digit and prev_digit:
+                parts[-1] = parts[-1] + surf  # merge adjacent digit tokens
+            else:
+                parts.append(surf)
+            prev_digit = is_digit
+        return " ".join(parts)
+
+    def decode_digits(self, ids: List[int]) -> str:
+        """Concatenate the digit content of a token stream (for scoring)."""
+        out = []
+        for tid in ids:
+            if self.is_digit_token(tid):
+                out.append(C.VOCAB[tid])
+        return "".join(out)
+
+
+def for_variant(variant: str) -> Tokenizer:
+    return Tokenizer(C.MODEL_VARIANTS[variant]["digits_per_token"])

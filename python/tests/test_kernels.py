@@ -1,0 +1,167 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel is swept against its pure-jnp oracle with hypothesis
+over shapes, value ranges, and adversarial inputs (constant channels,
+outlier tokens, denormal-ish magnitudes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, lagkv_score, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, shape, scale=1.0, offset=0.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale + offset)
+
+
+# ---------------------------------------------------------------------------
+# lagkv_scores
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    l=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([4, 32]),
+    scale=st.sampled_from([1e-3, 1.0, 50.0]),
+    offset=st.sampled_from([0.0, -7.5, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lagkv_matches_ref(h, l, d, scale, offset, seed):
+    rng = np.random.default_rng(seed)
+    kc, vc, kr, vr = (rand(rng, (h, l, d), scale, offset) for _ in range(4))
+    got = lagkv_score.lagkv_scores(kc, vc, kr, vr)
+    want = ref.lagkv_scores_ref(kc, vc, kr, vr)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_lagkv_scores_are_distributions():
+    rng = np.random.default_rng(0)
+    s = lagkv_score.lagkv_scores(*(rand(rng, (2, 16, 8)) for _ in range(4)))
+    # Eq. 9 sums two softmaxes -> each head row sums to 2.
+    np.testing.assert_allclose(np.asarray(s).sum(axis=1), 2.0, rtol=1e-5)
+    assert (np.asarray(s) > 0).all()
+
+
+def test_lagkv_constant_channel_is_stable():
+    """A channel that is constant in the reference (max==min) must not
+    produce NaN/inf — the EPS guard covers degenerate normalization."""
+    rng = np.random.default_rng(1)
+    kc, vc = rand(rng, (1, 8, 4)), rand(rng, (1, 8, 4))
+    kr = jnp.zeros((1, 8, 4))
+    vr = jnp.ones((1, 8, 4))
+    s = np.asarray(lagkv_score.lagkv_scores(kc, vc, kr, vr))
+    assert np.isfinite(s).all()
+
+
+def test_lagkv_outlier_token_wins():
+    """A token incoherent with the lag reference gets the top score — the
+    paper's core mechanism ('finds tokens not coherent to the next chunk')."""
+    rng = np.random.default_rng(2)
+    l = 16
+    kc = rand(rng, (1, l, 8), scale=0.1)
+    vc = rand(rng, (1, l, 8), scale=0.1)
+    kr = rand(rng, (1, l, 8), scale=0.1)
+    vr = rand(rng, (1, l, 8), scale=0.1)
+    kc = kc.at[0, 5].set(25.0)  # outlier vs the reference's min/max band
+    s = np.asarray(lagkv_score.lagkv_scores(kc, vc, kr, vr))
+    assert s[0].argmax() == 5
+
+
+def test_localkv_matches_ref():
+    rng = np.random.default_rng(3)
+    kc, vc = rand(rng, (4, 32, 16)), rand(rng, (4, 32, 16))
+    got = lagkv_score.localkv_scores(kc, vc)
+    want = ref.localkv_scores_ref(kc, vc)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([1, 2]),
+    l=st.sampled_from([8, 64]),
+    d=st.sampled_from([4, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_l2norm_matches_ref(h, l, d, seed):
+    rng = np.random.default_rng(seed)
+    kc = rand(rng, (h, l, d), scale=3.0)
+    got = lagkv_score.l2norm_scores(kc)
+    want = ref.l2norm_scores_ref(kc)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    hq=st.sampled_from([2, 8]),
+    hkv=st.sampled_from([1, 2]),
+    t=st.sampled_from([64, 128]),
+    d=st.sampled_from([8, 32]),
+    frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(hq, hkv, t, d, frac, seed):
+    if hq % hkv:
+        hq = hkv * (hq // hkv + 1)
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (hq, d))
+    k = rand(rng, (hkv, t, d))
+    v = rand(rng, (hkv, t, d))
+    length = max(1, int(frac * t))
+    got = attention.decode_attention(q, k, v, length, blk=32)
+    want, _ = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+def test_decode_attention_ignores_garbage_rows():
+    """Rows beyond `length` must have zero influence."""
+    rng = np.random.default_rng(7)
+    q = rand(rng, (4, 16))
+    k = rand(rng, (2, 64, 16))
+    v = rand(rng, (2, 64, 16))
+    length = 20
+    k2 = k.at[:, length:].set(1e4)
+    v2 = v.at[:, length:].set(-1e4)
+    a = attention.decode_attention(q, k, v, length, blk=16)
+    b = attention.decode_attention(q, k2, v2, length, blk=16)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_instrumented_probs_match_ref():
+    rng = np.random.default_rng(8)
+    q = rand(rng, (8, 16))
+    k = rand(rng, (2, 64, 16))
+    v = rand(rng, (2, 64, 16))
+    out, probs_kv = attention.decode_attention_probs(q, k, v, 40)
+    want_out, want_p = ref.decode_attention_ref(q, k, v, 40)
+    np.testing.assert_allclose(out, want_out, rtol=3e-5, atol=3e-6)
+    want_kv = np.asarray(want_p).reshape(2, 4, 64).sum(axis=1)
+    np.testing.assert_allclose(probs_kv, want_kv, rtol=3e-5, atol=3e-6)
+    # probability mass: each q-head row sums to 1 -> group rows sum to group
+    np.testing.assert_allclose(np.asarray(probs_kv).sum(axis=1), 4.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# top-k selection convention
+# ---------------------------------------------------------------------------
+
+
+def test_topk_indices_sorted_unique():
+    rng = np.random.default_rng(9)
+    s = jnp.asarray(rng.standard_normal((4, 32), dtype=np.float32))
+    idx = np.asarray(ref.topk_indices_ref(s, 8))
+    assert idx.shape == (4, 8)
+    for row in idx:
+        assert (np.diff(row) > 0).all()  # strictly ascending => unique

@@ -1,0 +1,181 @@
+"""L2 model invariants: causality, RoPE position-stability under eviction,
+prefill/decode agreement, GQA shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common as C
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = C.ModelConfig(name="test", d_model=64, n_layers=2, n_q_heads=4, n_kv_heads=2, d_head=16, d_ff=96, max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=1)
+
+
+def _prefill(params, ids, bucket=32):
+    tokens = np.full((bucket,), C.PAD, np.int32)
+    tokens[: len(ids)] = ids
+    return M.prefill(CFG, params, jnp.asarray(tokens), len(ids))
+
+
+def test_prefill_shapes(params):
+    logits, ks, vs, sums = _prefill(params, [1, 8, 9, 10])
+    assert logits.shape == (CFG.vocab_size,)
+    assert ks.shape == (CFG.n_layers, CFG.n_kv_heads, 32, CFG.d_head)
+    assert vs.shape == ks.shape
+    assert sums.shape == (CFG.n_layers, CFG.n_kv_heads, 32)
+
+
+def test_prefill_causality(params):
+    """Changing tokens AFTER position true_len-1 must not change the
+    last-position logits (they are padding)."""
+    ids = [1, 8, 9, 10, 11]
+    l1, *_ = _prefill(params, ids)
+    tokens2 = np.full((32,), 77, np.int32)
+    tokens2[: len(ids)] = ids
+    l2, *_ = M.prefill(CFG, params, jnp.asarray(tokens2), len(ids))
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+
+
+def test_prefill_padding_invariance(params):
+    """Same prompt through two bucket sizes gives the same last logits."""
+    ids = [1, 8, 9, 10, 11, 12]
+    l1, *_ = _prefill(params, ids, bucket=32)
+    l2, *_ = _prefill(params, ids, bucket=64)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-5)
+
+
+def test_attn_sums_mass(params):
+    """Total attention mass = number of valid query rows, per layer/group."""
+    ids = [1, 8, 9, 10, 11, 12, 13]
+    _, _, _, sums = _prefill(params, ids)
+    got = np.asarray(sums).sum(axis=2)  # [nl, hkv]
+    group = CFG.n_q_heads // CFG.n_kv_heads
+    np.testing.assert_allclose(got, len(ids) * group, rtol=1e-4)
+
+
+def _mk_cache(ks, vs, n, tmax=64):
+    nl, hkv, _, dh = ks.shape
+    kc = np.zeros((nl, 1, hkv, tmax, dh), np.float32)
+    vc = np.zeros_like(kc)
+    kc[:, 0, :, :n] = np.asarray(ks)[:, :, :n]
+    vc[:, 0, :, :n] = np.asarray(vs)[:, :, :n]
+    return jnp.asarray(kc), jnp.asarray(vc)
+
+
+def test_prefill_decode_agreement(params):
+    """Prefill over [t0..t5] == prefill over [t0..t4] + decode_step(t5)."""
+    ids = [1, 8, 9, 10, 11, 12]
+    l_full, *_ = _prefill(params, ids)
+    l_pre, ks, vs, _ = _prefill(params, ids[:-1])
+    kc, vc = _mk_cache(ks, vs, len(ids) - 1)
+    logits, kn, vn, ko, vo, row = M.decode_step(
+        CFG,
+        params,
+        kc,
+        vc,
+        jnp.full((CFG.n_layers, 1), len(ids) - 1, jnp.int32),
+        jnp.asarray([len(ids) - 1], jnp.int32),
+        jnp.asarray([ids[-1]], jnp.int32),
+    )
+    np.testing.assert_allclose(logits[0], l_full, rtol=2e-4, atol=1e-5)
+
+
+def test_decode_appends_in_graph(params):
+    ids = [1, 8, 9]
+    _, ks, vs, _ = _prefill(params, ids)
+    kc, vc = _mk_cache(ks, vs, 3)
+    _, kn, vn, ko, vo, _ = M.decode_step(
+        CFG, params, kc, vc,
+        jnp.full((CFG.n_layers, 1), 3, jnp.int32),
+        jnp.asarray([3], jnp.int32), jnp.asarray([10], jnp.int32),
+    )
+    # appended row equals the returned new K/V
+    np.testing.assert_allclose(np.asarray(ko)[:, 0, :, 3], np.asarray(kn)[:, 0], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(vo)[:, 0, :, 3], np.asarray(vn)[:, 0], rtol=1e-6)
+    # earlier rows untouched
+    np.testing.assert_allclose(np.asarray(ko)[:, 0, :, :3], np.asarray(kc)[:, 0, :, :3], rtol=1e-6)
+
+
+def test_eviction_position_stability(params):
+    """Decode logits depend on WHICH rows are in the cache, not on where
+    they sit after compaction: dropping row j then compacting must equal
+    attention over the surviving rows in any layout.  This is the property
+    that makes LagKV eviction sound with RoPE-at-write."""
+    ids = [1, 8, 9, 10, 11, 12, 13, 14]
+    n = len(ids)
+    _, ks, vs, _ = _prefill(params, ids)
+    ks, vs = np.asarray(ks), np.asarray(vs)
+
+    # evict row 3 everywhere, compact
+    keep = [i for i in range(n) if i != 3]
+    kc = np.zeros((CFG.n_layers, 1, CFG.n_kv_heads, 64, CFG.d_head), np.float32)
+    vc = np.zeros_like(kc)
+    kc[:, 0, :, : n - 1] = ks[:, :, keep]
+    vc[:, 0, :, : n - 1] = vs[:, :, keep]
+
+    # same content, but with the cache over-allocated rows poisoned
+    kc2, vc2 = kc.copy(), vc.copy()
+    kc2[:, 0, :, n - 1 :] = 1e3
+    vc2[:, 0, :, n - 1 :] = -1e3
+
+    args = (
+        jnp.full((CFG.n_layers, 1), n - 1, jnp.int32),
+        jnp.asarray([n], jnp.int32),
+        jnp.asarray([15], jnp.int32),
+    )
+    l1, *_ = M.decode_step(CFG, params, jnp.asarray(kc), jnp.asarray(vc), *args)
+    l2, *_ = M.decode_step(CFG, params, jnp.asarray(kc2), jnp.asarray(vc2), *args)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+
+
+def test_decode_batch_slots_independent(params):
+    """Slot 0's output is unaffected by slot 1's content (batched decode)."""
+    ids = [1, 8, 9, 10]
+    _, ks, vs, _ = _prefill(params, ids)
+    tmax = 64
+    kc = np.zeros((CFG.n_layers, 2, CFG.n_kv_heads, tmax, CFG.d_head), np.float32)
+    vc = np.zeros_like(kc)
+    kc[:, 0, :, :4] = np.asarray(ks)[:, :, :4]
+    vc[:, 0, :, :4] = np.asarray(vs)[:, :, :4]
+    kcb = kc.copy()
+    vcb = vc.copy()
+    kcb[:, 1] = np.random.default_rng(5).standard_normal(kcb[:, 1].shape)
+
+    def run(k, v, t1):
+        lg, *_ = M.decode_step(
+            CFG, params, jnp.asarray(k), jnp.asarray(v),
+            jnp.asarray(np.broadcast_to(np.array([4, 9], np.int32), (CFG.n_layers, 2)).copy()),
+            jnp.asarray([4, 9], jnp.int32),
+            jnp.asarray([10, t1], jnp.int32),
+        )
+        return np.asarray(lg)
+
+    a = run(kc, vc, 11)
+    b = run(kcb, vcb, 12)
+    np.testing.assert_allclose(a[0], b[0], rtol=1e-5)
+
+
+def test_rope_rotation_preserves_norm():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((5, 16)).astype(np.float32))
+    cos, sin = M.rope_angles(CFG, jnp.arange(5))
+    y = M.rope_apply(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_identity():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((1, 16)).astype(np.float32))
+    cos, sin = M.rope_angles(CFG, jnp.zeros((1,)))
+    y = M.rope_apply(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)

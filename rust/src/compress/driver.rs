@@ -1,0 +1,357 @@
+//! The recursive compression driver (Fig. 1 of the paper).
+//!
+//! Whenever a layer's uncompressed tail reaches `2L` (+ sink handling), the
+//! oldest `L` tail rows form the *partition* and the next `L` rows the *lag
+//! reference*; the policy scores the partition per head, top `floor(r*L)`
+//! survive, and the cache is compacted.  The same code path runs after
+//! prefill ingestion and after every decode append, which is what makes the
+//! scheme "recursive in both prefill and decode stages".
+//!
+//! Sink rows (`S`) are never scored or evicted; the last partition and the
+//! modulo remainder form the sliding window and stay whole — together this
+//! realizes Eq. 10 exactly (asserted by integration tests against
+//! kvcache::ratio).
+
+use anyhow::Result;
+
+use crate::config::CompressionConfig;
+use crate::config::PolicyKind;
+use crate::kvcache::KvCache;
+
+use super::policy::{PartitionInput, Scorer};
+use super::topk;
+
+/// Record of one partition compression (telemetry / tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionEvent {
+    pub layer: usize,
+    /// First row of the compressed window (absolute row index).
+    pub start: usize,
+    /// Window length (= lag L).
+    pub l: usize,
+    /// Rows kept per head.
+    pub kept: usize,
+}
+
+/// Run as many compression rounds as are due on every eligible layer.
+/// Returns the events performed (empty when nothing was due).
+pub fn maybe_compress(
+    cache: &mut KvCache,
+    cfg: &CompressionConfig,
+    scorer: &mut dyn Scorer,
+) -> Result<Vec<CompressionEvent>> {
+    let mut events = Vec::new();
+    if cfg.policy == PolicyKind::None {
+        return Ok(events);
+    }
+    let keep = cfg.keep_per_partition();
+    if keep >= cfg.lag {
+        return Ok(events); // r == 1: nothing to evict
+    }
+    for layer in 0..cache.n_layers {
+        if layer < cfg.skip_layers {
+            continue;
+        }
+        loop {
+            let len = cache.len(layer);
+            let boundary = cache.layers[layer].boundary;
+            // The first compression on a layer must also leave the sink
+            // prefix untouched: the window starts after max(boundary, S).
+            let start = boundary.max(cfg.sink);
+            if len < start + 2 * cfg.lag {
+                break;
+            }
+            let ev = if scorer.global_scope() {
+                compress_global(cache, cfg, scorer, layer, start, keep)?
+            } else {
+                compress_one(cache, cfg, scorer, layer, start, keep)?
+            };
+            events.push(ev);
+        }
+    }
+    Ok(events)
+}
+
+fn compress_one(
+    cache: &mut KvCache,
+    cfg: &CompressionConfig,
+    scorer: &mut dyn Scorer,
+    layer: usize,
+    start: usize,
+    keep: usize,
+) -> Result<CompressionEvent> {
+    let l = cfg.lag;
+    let d = cache.d_head;
+    let n_heads = cache.n_heads;
+    let mut keeps: Vec<Vec<usize>> = Vec::with_capacity(n_heads);
+    let mut scratch = Vec::new();
+    for head in 0..n_heads {
+        let cur = cache.window(layer, head, start, l);
+        let lag = cache.window(layer, head, start + l, l);
+        let inp = PartitionInput {
+            layer,
+            head,
+            k_cur: cur.k,
+            v_cur: cur.v,
+            k_ref: lag.k,
+            v_ref: lag.v,
+            attn_acc: cur.attn,
+            positions: cur.pos,
+            l,
+            d,
+        };
+        let scores = scorer.score(&inp)?;
+        debug_assert_eq!(scores.len(), l);
+        let mut kept_idx = Vec::with_capacity(keep);
+        topk::topk_indices_into(&scores, keep, &mut scratch, &mut kept_idx);
+        keeps.push(kept_idx);
+    }
+    cache.compact_layer(layer, start, l, &keeps)?;
+    Ok(CompressionEvent { layer, start, l, kept: keep })
+}
+
+/// Global-scope eviction (original H2O): evict `L - keep` rows per event
+/// from the whole region between the sink and the newest `L` window, by
+/// lowest score.  Same eviction budget and trigger cadence as the partition
+/// path, so the retained-length law (Eq. 10) is unchanged.
+fn compress_global(
+    cache: &mut KvCache,
+    cfg: &CompressionConfig,
+    scorer: &mut dyn Scorer,
+    layer: usize,
+    trigger_start: usize,
+    keep: usize,
+) -> Result<CompressionEvent> {
+    let len = cache.len(layer);
+    let d = cache.d_head;
+    let start = cfg.sink.min(len);
+    let window_len = len - cfg.lag - start; // evictable region length
+    let evict = cfg.lag - keep;
+    debug_assert!(window_len >= evict);
+    let n_heads = cache.n_heads;
+    let mut keeps: Vec<Vec<usize>> = Vec::with_capacity(n_heads);
+    let mut scratch = Vec::new();
+    for head in 0..n_heads {
+        let cur = cache.window(layer, head, start, window_len);
+        let inp = PartitionInput {
+            layer,
+            head,
+            k_cur: cur.k,
+            v_cur: cur.v,
+            // no lag reference in global scope; score policies that need
+            // one are partition-scoped by construction
+            k_ref: &[],
+            v_ref: &[],
+            attn_acc: cur.attn,
+            positions: cur.pos,
+            l: window_len,
+            d,
+        };
+        let scores = scorer.score(&inp)?;
+        debug_assert_eq!(scores.len(), window_len);
+        let mut kept_idx = Vec::with_capacity(window_len - evict);
+        topk::topk_indices_into(&scores, window_len - evict, &mut scratch, &mut kept_idx);
+        keeps.push(kept_idx);
+    }
+    cache.compact_layer(layer, start, window_len, &keeps)?;
+    // In global scope `boundary` is purely a cadence counter: advancing it
+    // exactly like the partition path (trigger start + keep) makes events
+    // fire at the same lengths, so Eq. 10 holds for every policy and the
+    // comparisons stay apples-to-apples.
+    cache.layers[layer].boundary = trigger_start + keep;
+    Ok(CompressionEvent { layer, start, l: window_len, kept: window_len - evict })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::policy::make_policy;
+    use crate::kvcache::ratio;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn mk_cfg(sink: usize, lag: usize, ratio: f64, policy: PolicyKind) -> CompressionConfig {
+        CompressionConfig { policy, sink, lag, ratio, ..Default::default() }
+    }
+
+    fn fill(cache: &mut KvCache, n: usize, seed: u64) {
+        let mut rng = Rng::seed_from(seed);
+        let w = cache.n_layers * cache.n_heads * cache.d_head;
+        for _ in 0..n {
+            let t = cache.appended as i32;
+            let k: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+            let v: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+            cache.append_token(&k, &v, t).unwrap();
+        }
+    }
+
+    #[test]
+    fn matches_eq10_exactly() {
+        // Stream tokens one by one; after every append run the driver; the
+        // retained length must equal the paper's closed form at every step.
+        let cfg = mk_cfg(4, 16, 0.5, PolicyKind::LagKv);
+        let mut scorer = make_policy(cfg.policy, 0);
+        let mut cache = KvCache::new(2, 2, 4);
+        for ls in 1..=300usize {
+            fill(&mut cache, 1, ls as u64);
+            maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+            let want = ratio::retained_len(ls, cfg.sink, cfg.lag, cfg.keep_per_partition());
+            assert_eq!(cache.len(0), want, "at Ls={ls}");
+            assert_eq!(cache.len(1), want, "at Ls={ls}");
+        }
+    }
+
+    #[test]
+    fn sink_rows_never_evicted() {
+        let cfg = mk_cfg(4, 8, 0.25, PolicyKind::LagKv);
+        let mut scorer = make_policy(cfg.policy, 0);
+        let mut cache = KvCache::new(1, 2, 4);
+        fill(&mut cache, 200, 7);
+        maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+        for h in 0..2 {
+            let pos = cache.positions(0, h);
+            assert_eq!(&pos[..4], &[0, 1, 2, 3], "sink must survive (head {h})");
+        }
+    }
+
+    #[test]
+    fn window_tail_stays_whole() {
+        // After compression, the last rows must be the most recent tokens,
+        // contiguous (the sliding window of Fig. 1).
+        let cfg = mk_cfg(4, 16, 0.5, PolicyKind::LagKv);
+        let mut scorer = make_policy(cfg.policy, 0);
+        let mut cache = KvCache::new(1, 1, 4);
+        let n = 4 + 16 * 4 + 5; // partitions=4, rem=5
+        fill(&mut cache, n, 11);
+        maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+        let pos = cache.positions(0, 0);
+        let tail = cfg.lag + 5; // L + mod
+        let want: Vec<i32> = ((n - tail) as i32..n as i32).collect();
+        assert_eq!(&pos[pos.len() - tail..], &want[..]);
+    }
+
+    #[test]
+    fn skip_layers_exempt() {
+        let mut cfg = mk_cfg(4, 8, 0.5, PolicyKind::L2Norm);
+        cfg.skip_layers = 2;
+        let mut scorer = make_policy(cfg.policy, 0);
+        let mut cache = KvCache::new(3, 1, 4);
+        fill(&mut cache, 100, 3);
+        maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+        assert_eq!(cache.len(0), 100);
+        assert_eq!(cache.len(1), 100);
+        assert!(cache.len(2) < 100);
+    }
+
+    #[test]
+    fn policy_none_is_identity() {
+        let cfg = mk_cfg(4, 8, 0.5, PolicyKind::None);
+        let mut scorer = make_policy(cfg.policy, 0);
+        let mut cache = KvCache::new(1, 1, 2);
+        fill(&mut cache, 64, 5);
+        let ev = maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+        assert!(ev.is_empty());
+        assert_eq!(cache.len(0), 64);
+    }
+
+    #[test]
+    fn ratio_one_is_identity() {
+        let cfg = mk_cfg(4, 8, 1.0, PolicyKind::LagKv);
+        let mut scorer = make_policy(cfg.policy, 0);
+        let mut cache = KvCache::new(1, 1, 2);
+        fill(&mut cache, 64, 5);
+        let ev = maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+        assert!(ev.is_empty());
+    }
+
+    #[test]
+    fn batch_ingest_equals_streaming_appends() {
+        // Prefill-then-compress must land in the same state as append-one-
+        // at-a-time-with-compression (recursion is order-insensitive here
+        // because scores depend only on chunk contents).
+        let cfg = mk_cfg(2, 8, 0.5, PolicyKind::LagKv);
+        let n = 100;
+        let mk = |stream: bool| {
+            let mut scorer = make_policy(cfg.policy, 0);
+            let mut cache = KvCache::new(1, 2, 4);
+            let mut rng = Rng::seed_from(99);
+            let w = cache.n_layers * cache.n_heads * cache.d_head;
+            let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+                .map(|_| {
+                    (
+                        (0..w).map(|_| rng.normal()).collect(),
+                        (0..w).map(|_| rng.normal()).collect(),
+                    )
+                })
+                .collect();
+            for (t, (k, v)) in rows.iter().enumerate() {
+                cache.append_token(k, v, t as i32).unwrap();
+                if stream {
+                    maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+                }
+            }
+            if !stream {
+                maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+            }
+            cache
+        };
+        let a = mk(true);
+        let b = mk(false);
+        assert_eq!(a.positions(0, 0), b.positions(0, 0));
+        assert_eq!(a.positions(0, 1), b.positions(0, 1));
+        assert_eq!(a.layers[0].heads[0].k, b.layers[0].heads[0].k);
+    }
+
+    #[test]
+    fn prop_invariants_all_policies() {
+        prop::check(40, |g| {
+            let kinds = PolicyKind::all();
+            let kind = *g.pick(kinds);
+            let sink = g.usize(0, 6);
+            let lag = g.usize(2, 24);
+            let ratio = [0.5, 0.25, 0.167, 0.125][g.usize(0, 3)];
+            let n = g.usize(1, 200);
+            let cfg = mk_cfg(sink, lag, ratio, kind);
+            let mut scorer = make_policy(kind, g.case as u64);
+            let mut cache = KvCache::new(2, 2, 3);
+            fill(&mut cache, n, g.case as u64 + 1);
+            maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+            for layer in 0..2 {
+                // length law
+                let want = if kind == PolicyKind::None {
+                    n
+                } else {
+                    crate::kvcache::ratio::retained_len(
+                        n,
+                        sink,
+                        lag,
+                        cfg.keep_per_partition(),
+                    )
+                };
+                if cache.len(layer) != want {
+                    return Err(format!(
+                        "{}: len {} != {} (n={n} S={sink} L={lag} r={ratio})",
+                        kind.name(),
+                        cache.len(layer),
+                        want
+                    ));
+                }
+                for head in 0..2 {
+                    let pos = cache.positions(layer, head);
+                    // positions strictly ascending (temporal order kept)
+                    if pos.windows(2).any(|w| w[0] >= w[1]) {
+                        return Err(format!("{}: positions not ascending", kind.name()));
+                    }
+                    // sink prefix intact
+                    let s = sink.min(n).min(pos.len());
+                    for i in 0..s {
+                        if pos[i] != i as i32 {
+                            return Err(format!("{}: sink evicted", kind.name()));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Eviction policies and the recursive compression driver.
+//!
+//! A [`Scorer`] maps one partition of one head's cache (plus its lag
+//! reference and optional attention statistics) to per-token importance
+//! scores; the [`driver`] selects the top `floor(r*L)` per head and
+//! compacts the cache.  All policies plug into the *same* driver, which is
+//! exactly the paper's framing in Appendix A.2 ("variants from the LagKV
+//! framework: only the scoring method changes").
+//!
+//! Scoring backends:
+//! * [`scores`]   — pure-Rust implementations (default hot path, validated
+//!                  against the python jnp oracles through golden vectors
+//!                  *and* against the AOT Pallas kernel at runtime).
+//! * the XLA backend lives in `engine::XlaScorer` (it needs a PJRT client),
+//!   selected with `--scorer=xla`.
+
+pub mod driver;
+pub mod policy;
+pub mod scores;
+pub mod topk;
+
+pub use driver::{maybe_compress, CompressionEvent};
+pub use policy::{make_policy, PartitionInput, Scorer};

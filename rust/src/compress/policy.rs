@@ -1,0 +1,247 @@
+//! The [`Scorer`] trait and the built-in policy implementations.
+
+use anyhow::Result;
+
+use crate::config::PolicyKind;
+
+use super::scores;
+
+/// Everything a policy may look at when scoring one partition of one head.
+pub struct PartitionInput<'a> {
+    pub layer: usize,
+    pub head: usize,
+    /// Current partition K/V, row-major `[l, d]`.
+    pub k_cur: &'a [f32],
+    pub v_cur: &'a [f32],
+    /// Lag reference (the next chunk), row-major `[l, d]`.
+    pub k_ref: &'a [f32],
+    pub v_ref: &'a [f32],
+    /// Accumulated attention mass per current-partition token (H2O).
+    pub attn_acc: &'a [f32],
+    /// Original absolute positions of the current partition's tokens.
+    pub positions: &'a [i32],
+    pub l: usize,
+    pub d: usize,
+}
+
+/// A partition-scoring policy.  Implementations must be deterministic given
+/// their construction parameters (the Random policy is seeded).
+///
+/// NOT `Send`: the XLA-backed scorer holds PJRT handles, which are
+/// single-threaded; scorers live and die on their coordinator's thread.
+pub trait Scorer {
+    fn name(&self) -> &'static str;
+    /// Per-token scores, higher = keep.  Length must equal `inp.l`.
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>>;
+    /// Whether the policy consumes the instrumented attention statistics.
+    fn needs_attention(&self) -> bool {
+        false
+    }
+    /// Global-scope policies (the original H2O) pick victims across the
+    /// WHOLE evictable region (everything but the sink and the newest lag
+    /// window) instead of inside one partition.  The eviction *budget* per
+    /// event is identical (L - floor(rL) rows), so cache lengths follow the
+    /// same Eq. 10 law and comparisons stay apples-to-apples.
+    fn global_scope(&self) -> bool {
+        false
+    }
+}
+
+/// The paper's method, Eqs. 5-9.
+pub struct LagKvScorer;
+
+impl Scorer for LagKvScorer {
+    fn name(&self) -> &'static str {
+        "lagkv"
+    }
+
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        Ok(scores::lagkv_score(inp.k_cur, inp.v_cur, inp.k_ref, inp.v_ref, inp.l, inp.d))
+    }
+}
+
+/// Appendix A.2 LocalKV: min/max from the local chunk (Eqs. 12-13).
+pub struct LocalKvScorer;
+
+impl Scorer for LocalKvScorer {
+    fn name(&self) -> &'static str {
+        "localkv"
+    }
+
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        Ok(scores::localkv_score(inp.k_cur, inp.v_cur, inp.l, inp.d))
+    }
+}
+
+/// Appendix A.2 recursive L2-norm: -||K||2 (Eq. 14).  Layer skipping is
+/// handled by the driver via `CompressionConfig::skip_layers`.
+pub struct L2NormScorer;
+
+impl Scorer for L2NormScorer {
+    fn name(&self) -> &'static str {
+        "l2norm"
+    }
+
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        Ok(scores::l2norm_score(inp.k_cur, inp.l, inp.d))
+    }
+}
+
+/// H2O heavy-hitter oracle: the score of a token is its accumulated
+/// attention mass (prefill column sums plus every decode step's row), the
+/// statistic the original H2O keeps running.  Scope is GLOBAL, matching
+/// Zhang et al.: low-mass tokens are evicted from anywhere in the cache
+/// (outside the sink and the sliding window), which is precisely what makes
+/// long digit strings leak (§3.3) — pre-query attention cannot know the
+/// passkey will matter.
+pub struct H2oScorer;
+
+impl Scorer for H2oScorer {
+    fn name(&self) -> &'static str {
+        "h2o"
+    }
+
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        Ok(inp.attn_acc.to_vec())
+    }
+
+    fn needs_attention(&self) -> bool {
+        true
+    }
+
+    fn global_scope(&self) -> bool {
+        true
+    }
+}
+
+/// StreamingLLM-style recency: keep the newest tokens of each partition.
+pub struct StreamingScorer;
+
+impl Scorer for StreamingScorer {
+    fn name(&self) -> &'static str {
+        "streaming"
+    }
+
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        Ok((0..inp.l).map(|i| i as f32).collect())
+    }
+}
+
+/// Uniform-random retention (sanity floor).  Seeded per (layer, head,
+/// partition-start position) so runs are reproducible and heads diverge.
+pub struct RandomScorer {
+    pub seed: u64,
+}
+
+impl Scorer for RandomScorer {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        let start_pos = inp.positions.first().copied().unwrap_or(0) as u64;
+        let mut rng = crate::util::rng::Rng::seed_from(
+            self.seed ^ (inp.layer as u64) << 40 ^ (inp.head as u64) << 32 ^ start_pos,
+        );
+        Ok((0..inp.l).map(|_| rng.f32()).collect())
+    }
+}
+
+/// Construct the pure-Rust scorer for a policy.  `PolicyKind::None` never
+/// reaches the driver (compression disabled upstream) but returns a
+/// recency scorer for safety.
+pub fn make_policy(kind: PolicyKind, seed: u64) -> Box<dyn Scorer> {
+    match kind {
+        PolicyKind::LagKv => Box::new(LagKvScorer),
+        PolicyKind::LocalKv => Box::new(LocalKvScorer),
+        PolicyKind::L2Norm => Box::new(L2NormScorer),
+        PolicyKind::H2O => Box::new(H2oScorer),
+        PolicyKind::Streaming | PolicyKind::None => Box::new(StreamingScorer),
+        PolicyKind::Random => Box::new(RandomScorer { seed }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_input<'a>(
+        k: &'a [f32],
+        v: &'a [f32],
+        attn: &'a [f32],
+        pos: &'a [i32],
+        l: usize,
+        d: usize,
+    ) -> PartitionInput<'a> {
+        PartitionInput {
+            layer: 0,
+            head: 0,
+            k_cur: k,
+            v_cur: v,
+            k_ref: k,
+            v_ref: v,
+            attn_acc: attn,
+            positions: pos,
+            l,
+            d,
+        }
+    }
+
+    #[test]
+    fn all_policies_return_l_scores() {
+        let l = 8;
+        let d = 4;
+        let k: Vec<f32> = (0..l * d).map(|i| (i as f32).sin()).collect();
+        let v = k.clone();
+        let attn: Vec<f32> = (0..l).map(|i| i as f32 * 0.1).collect();
+        let pos: Vec<i32> = (0..l as i32).collect();
+        for kind in crate::config::PolicyKind::all() {
+            let mut p = make_policy(*kind, 7);
+            let s = p.score(&dummy_input(&k, &v, &attn, &pos, l, d)).unwrap();
+            assert_eq!(s.len(), l, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn h2o_scores_are_attention() {
+        let l = 4;
+        let d = 2;
+        let k = vec![0.0; l * d];
+        let attn = vec![3.0, 1.0, 2.0, 0.5];
+        let pos = vec![0, 1, 2, 3];
+        let mut p = make_policy(PolicyKind::H2O, 0);
+        assert!(p.needs_attention());
+        let s = p.score(&dummy_input(&k, &k, &attn, &pos, l, d)).unwrap();
+        assert_eq!(s, attn);
+    }
+
+    #[test]
+    fn streaming_prefers_recent() {
+        let l = 5;
+        let d = 1;
+        let k = vec![0.0; l];
+        let attn = vec![0.0; l];
+        let pos = vec![0, 1, 2, 3, 4];
+        let mut p = make_policy(PolicyKind::Streaming, 0);
+        let s = p.score(&dummy_input(&k, &k, &attn, &pos, l, d)).unwrap();
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn random_is_deterministic_per_position() {
+        let l = 6;
+        let d = 1;
+        let k = vec![0.0; l];
+        let attn = vec![0.0; l];
+        let pos = vec![10, 11, 12, 13, 14, 15];
+        let mut p1 = make_policy(PolicyKind::Random, 42);
+        let mut p2 = make_policy(PolicyKind::Random, 42);
+        let a = p1.score(&dummy_input(&k, &k, &attn, &pos, l, d)).unwrap();
+        let b = p2.score(&dummy_input(&k, &k, &attn, &pos, l, d)).unwrap();
+        assert_eq!(a, b);
+        // different start position -> different scores
+        let pos2 = vec![20, 21, 22, 23, 24, 25];
+        let c = p1.score(&dummy_input(&k, &k, &attn, &pos2, l, d)).unwrap();
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,205 @@
+//! Pure-Rust scoring kernels — numerical mirrors of the L1 Pallas kernels
+//! (python/compile/kernels/lagkv_score.py) and the jnp oracles (ref.py).
+//!
+//! Layouts: every partition is a row-major `[l, d]` slice of one head.
+//! Scores are "higher = keep".  Cross-validated three ways:
+//!   * golden vectors from the python oracle (rust/tests/golden.rs),
+//!   * the AOT-compiled Pallas kernel via PJRT (rust/tests/integration.rs),
+//!   * property tests on distribution/outlier invariants (below).
+
+pub const EPS: f32 = 1e-6;
+
+/// Softmax'd channel-std of the lag-normalized tile — one "half" of the
+/// LagKV score (Eqs. 5-8) for a single head.
+///
+/// `cur`/`lag`: `[l, d]` row-major.  Returns `l` scores summing to 1.
+pub fn half_score(cur: &[f32], lag: &[f32], l: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(cur.len(), l * d);
+    debug_assert_eq!(lag.len(), l * d);
+    // Eqs. 5-6: per-channel min/max over the REFERENCE's sequence axis.
+    let mut mn = vec![f32::INFINITY; d];
+    let mut mx = vec![f32::NEG_INFINITY; d];
+    for row in lag.chunks_exact(d) {
+        for (c, &x) in row.iter().enumerate() {
+            if x < mn[c] {
+                mn[c] = x;
+            }
+            if x > mx[c] {
+                mx[c] = x;
+            }
+        }
+    }
+    let mut inv_range = vec![0.0f32; d];
+    for c in 0..d {
+        inv_range[c] = 1.0 / (mx[c] - mn[c] + EPS);
+    }
+    // Eq. 7 + Eq. 8 first half: normalize, per-token channel-wise std
+    // (population, ddof=0 — matching jnp .std()).
+    let mut std = Vec::with_capacity(l);
+    for row in cur.chunks_exact(d) {
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        for (c, &x) in row.iter().enumerate() {
+            let n = ((x - mn[c]) * inv_range[c]) as f64;
+            sum += n;
+            sum2 += n * n;
+        }
+        let mean = sum / d as f64;
+        let var = (sum2 / d as f64 - mean * mean).max(0.0);
+        std.push(var.sqrt() as f32);
+    }
+    // Eq. 8 second half: softmax along the partition.
+    softmax_inplace(&mut std);
+    std
+}
+
+/// Full LagKV score for one head (Eq. 9: K-half + V-half).
+pub fn lagkv_score(
+    k_cur: &[f32],
+    v_cur: &[f32],
+    k_ref: &[f32],
+    v_ref: &[f32],
+    l: usize,
+    d: usize,
+) -> Vec<f32> {
+    let ks = half_score(k_cur, k_ref, l, d);
+    let vs = half_score(v_cur, v_ref, l, d);
+    ks.iter().zip(&vs).map(|(a, b)| a + b).collect()
+}
+
+/// LocalKV variant (Eqs. 12-13): the chunk is its own reference.
+pub fn localkv_score(k_cur: &[f32], v_cur: &[f32], l: usize, d: usize) -> Vec<f32> {
+    lagkv_score(k_cur, v_cur, k_cur, v_cur, l, d)
+}
+
+/// Recursive L2-norm variant (Eq. 14): score = -||K_i||_2.
+pub fn l2norm_score(k_cur: &[f32], l: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(k_cur.len(), l * d);
+    k_cur
+        .chunks_exact(d)
+        .map(|row| -(row.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32))
+        .collect()
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn half_score_is_distribution() {
+        prop::check(100, |g| {
+            let l = g.usize(2, 64);
+            let d = g.usize(1, 32);
+            let (s1, o1) = (g.f32(0.01, 20.0), g.f32(-10.0, 10.0));
+            let (s2, o2) = (g.f32(0.01, 20.0), g.f32(-10.0, 10.0));
+            let cur = g.vec_normal(l * d, s1, o1);
+            let lag = g.vec_normal(l * d, s2, o2);
+            let s = half_score(&cur, &lag, l, d);
+            let sum: f32 = s.iter().sum();
+            if (sum - 1.0).abs() > 1e-4 {
+                return Err(format!("softmax sum {sum}"));
+            }
+            if s.iter().any(|&x| !(x > 0.0) || !x.is_finite()) {
+                return Err("non-positive or non-finite score".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_reference_is_stable() {
+        // max == min in every channel of the reference: EPS guard must hold
+        let l = 8;
+        let d = 4;
+        let cur: Vec<f32> = (0..l * d).map(|i| i as f32 * 0.1).collect();
+        let lag = vec![2.5f32; l * d];
+        let s = half_score(&cur, &lag, l, d);
+        assert!(s.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn outlier_token_wins() {
+        // The paper's core mechanism: a token incoherent with the lag
+        // reference's min/max band gets the top score.
+        let l = 16;
+        let d = 8;
+        let mut rng = crate::util::rng::Rng::seed_from(2);
+        let mut mk = |scale: f32| -> Vec<f32> {
+            (0..l * d).map(|_| rng.normal() * scale).collect()
+        };
+        let mut k_cur = mk(0.1);
+        let v_cur = mk(0.1);
+        let k_ref = mk(0.1);
+        let v_ref = mk(0.1);
+        for c in 0..d {
+            k_cur[5 * d + c] = 25.0;
+        }
+        let s = lagkv_score(&k_cur, &v_cur, &k_ref, &v_ref, l, d);
+        let argmax = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 5);
+    }
+
+    #[test]
+    fn lagkv_sums_to_two() {
+        let mut rng = crate::util::rng::Rng::seed_from(3);
+        let l = 32;
+        let d = 16;
+        let xs: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..l * d).map(|_| rng.normal()).collect()).collect();
+        let s = lagkv_score(&xs[0], &xs[1], &xs[2], &xs[3], l, d);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 2.0).abs() < 1e-4, "sum {sum}");
+    }
+
+    #[test]
+    fn l2norm_prefers_small_keys() {
+        let l = 4;
+        let d = 2;
+        let k = vec![
+            1.0, 1.0, // norm ~1.41
+            0.1, 0.1, // norm ~0.14  <- highest score
+            5.0, 5.0, // norm ~7.07  <- lowest
+            2.0, 0.0,
+        ];
+        let s = l2norm_score(&k, l, d);
+        assert!(s[1] > s[0] && s[0] > s[3] && s[3] > s[2]);
+    }
+
+    #[test]
+    fn localkv_equals_lagkv_with_self_reference() {
+        let mut rng = crate::util::rng::Rng::seed_from(4);
+        let l = 8;
+        let d = 4;
+        let k: Vec<f32> = (0..l * d).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..l * d).map(|_| rng.normal()).collect();
+        assert_eq!(localkv_score(&k, &v, l, d), lagkv_score(&k, &v, &k, &v, l, d));
+    }
+
+    #[test]
+    fn softmax_stability_extremes() {
+        let mut xs = vec![1e30f32, -1e30, 0.0];
+        softmax_inplace(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+}

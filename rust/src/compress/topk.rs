@@ -1,0 +1,88 @@
+//! Top-k index selection with the cache compactor's layout convention:
+//! the k best-scoring indices, returned in **ascending index order** so the
+//! surviving rows keep their temporal order (matches ref.topk_indices_ref:
+//! stable argsort by descending score, take k, sort).
+
+/// Indices of the `k` largest scores, ties broken toward the EARLIER index
+/// (stable), returned ascending.  `k` is clamped to `scores.len()`.
+pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    // stable sort by descending score => ties keep ascending index order
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// Selection on an already-allocated scratch vector (hot-path variant used
+/// by the driver; avoids per-partition allocation).
+pub fn topk_indices_into(scores: &[f32], k: usize, scratch: &mut Vec<usize>, out: &mut Vec<usize>) {
+    let k = k.min(scores.len());
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    scratch.clear();
+    scratch.extend(0..scores.len());
+    // partial selection: kth-element then sort the prefix
+    scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    out.extend_from_slice(&scratch[..k]);
+    out.sort_unstable();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn basic_selection() {
+        let s = [0.1, 0.9, 0.5, 0.7];
+        assert_eq!(topk_indices(&s, 2), vec![1, 3]);
+        assert_eq!(topk_indices(&s, 4), vec![0, 1, 2, 3]);
+        assert_eq!(topk_indices(&s, 9), vec![0, 1, 2, 3]);
+        assert!(topk_indices(&s, 0).is_empty());
+    }
+
+    #[test]
+    fn ties_prefer_earlier() {
+        let s = [1.0, 1.0, 1.0, 1.0];
+        assert_eq!(topk_indices(&s, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn fast_variant_agrees_with_reference() {
+        prop::check(200, |g| {
+            let n = g.usize(1, 100);
+            let k = g.usize(0, n);
+            let scores = g.vec_f32(n, -5.0, 5.0);
+            let want = topk_indices(&scores, k);
+            let mut scratch = Vec::new();
+            let mut got = Vec::new();
+            topk_indices_into(&scores, k, &mut scratch, &mut got);
+            // Both must pick k indices whose score multiset is maximal; with
+            // distinct floats they are identical.
+            if got != want {
+                // tolerate tie permutations: compare score multisets
+                let sum_got: f32 = got.iter().map(|&i| scores[i]).sum();
+                let sum_want: f32 = want.iter().map(|&i| scores[i]).sum();
+                if (sum_got - sum_want).abs() > 1e-5 {
+                    return Err(format!("topk mismatch: {got:?} vs {want:?}"));
+                }
+            }
+            if got.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("not ascending".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,313 @@
+//! Layered configuration for the serving stack.
+//!
+//! Three pieces compose a run:
+//! * [`ModelDims`]       — architecture, parsed from `artifacts/manifest.json`
+//!                         (authored by python/compile/aot.py; never hand-edited).
+//! * [`CompressionConfig`] — the paper's knobs: sink `S`, lag `L`, retained
+//!                         ratio `r`, policy, scorer backend.
+//! * [`ServingConfig`]   — coordinator knobs: batch buckets, queue depth,
+//!                         decode limits.
+//!
+//! Everything has CLI overrides (`--lag 64 --ratio 0.25 --policy lagkv`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Architecture of the AOT-compiled model (mirror of python ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+}
+
+impl ModelDims {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(ModelDims {
+            vocab_size: v.get("vocab_size")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_q_heads: v.get("n_q_heads")?.as_usize()?,
+            n_kv_heads: v.get("n_kv_heads")?.as_usize()?,
+            d_head: v.get("d_head")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            max_seq: v.get("max_seq")?.as_usize()?,
+            rope_theta: v.get("rope_theta")?.as_f64()?,
+            norm_eps: v.get("norm_eps")?.as_f64()?,
+        })
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+}
+
+/// Which eviction policy the KV-cache manager runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// The paper's method (Eqs. 5-9).
+    LagKv,
+    /// Appendix A.2 variant: min/max from the local chunk.
+    LocalKv,
+    /// Appendix A.2 variant: -||K||2, first two layers skipped.
+    L2Norm,
+    /// Heavy-hitter oracle: accumulated attention mass (needs instrumented
+    /// executables — the FlashAttention-incompatible baseline).
+    H2O,
+    /// StreamingLLM-style recency: keep the newest rL of each partition.
+    Streaming,
+    /// Uniform-random retention (sanity floor).
+    Random,
+    /// No compression (the paper's "Baseline" rows).
+    None,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "lagkv" => PolicyKind::LagKv,
+            "localkv" => PolicyKind::LocalKv,
+            "l2norm" | "l2" => PolicyKind::L2Norm,
+            "h2o" => PolicyKind::H2O,
+            "streaming" | "window" => PolicyKind::Streaming,
+            "random" => PolicyKind::Random,
+            "none" | "baseline" | "full" => PolicyKind::None,
+            other => bail!("unknown policy {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::LagKv => "lagkv",
+            PolicyKind::LocalKv => "localkv",
+            PolicyKind::L2Norm => "l2norm",
+            PolicyKind::H2O => "h2o",
+            PolicyKind::Streaming => "streaming",
+            PolicyKind::Random => "random",
+            PolicyKind::None => "none",
+        }
+    }
+
+    pub fn all() -> &'static [PolicyKind] {
+        &[
+            PolicyKind::LagKv,
+            PolicyKind::LocalKv,
+            PolicyKind::L2Norm,
+            PolicyKind::H2O,
+            PolicyKind::Streaming,
+            PolicyKind::Random,
+            PolicyKind::None,
+        ]
+    }
+
+    /// Does this policy need per-token attention statistics from the
+    /// instrumented executables?
+    pub fn needs_attention(&self) -> bool {
+        matches!(self, PolicyKind::H2O)
+    }
+}
+
+/// Scorer backend for the score-computing policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScorerBackend {
+    /// Pure-Rust scorer (default; zero transfer overhead).
+    Rust,
+    /// AOT-compiled Pallas kernel via PJRT (proves L1 integration; used by
+    /// tests to cross-validate the Rust scorer bit-for-bit-ish).
+    Xla,
+}
+
+/// The paper's compression knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionConfig {
+    pub policy: PolicyKind,
+    /// Attention-sink prefix size S (paper: 16 at 8B scale; 4 at ours).
+    pub sink: usize,
+    /// Lag / partition size L.
+    pub lag: usize,
+    /// Retained fraction r in each partition (0 < r <= 1); the paper's
+    /// "2x/4x/6x/8x" map to r = 0.5 / 0.25 / 0.167 / 0.125.
+    pub ratio: f64,
+    pub scorer: ScorerBackend,
+    /// Layers exempt from compression (the L2-norm variant skips 2).
+    pub skip_layers: usize,
+}
+
+impl Default for CompressionConfig {
+    fn default() -> Self {
+        CompressionConfig {
+            policy: PolicyKind::LagKv,
+            sink: 4,
+            lag: 64,
+            ratio: 0.5,
+            scorer: ScorerBackend::Rust,
+            skip_layers: 0,
+        }
+    }
+}
+
+impl CompressionConfig {
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut c = CompressionConfig::default();
+        if let Some(p) = args.get("policy") {
+            c.policy = PolicyKind::parse(p)?;
+        }
+        c.sink = args.usize_or("sink", c.sink)?;
+        c.lag = args.usize_or("lag", c.lag)?;
+        c.ratio = args.f64_or("ratio", c.ratio)?;
+        if let Some(s) = args.get("scorer") {
+            c.scorer = match s {
+                "rust" => ScorerBackend::Rust,
+                "xla" => ScorerBackend::Xla,
+                other => bail!("unknown scorer {other:?} (rust|xla)"),
+            };
+        }
+        if c.policy == PolicyKind::L2Norm {
+            c.skip_layers = args.usize_or("skip-layers", 2)?;
+        } else {
+            c.skip_layers = args.usize_or("skip-layers", 0)?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 < self.ratio && self.ratio <= 1.0) {
+            bail!("ratio must be in (0, 1], got {}", self.ratio);
+        }
+        if self.lag == 0 {
+            bail!("lag must be positive");
+        }
+        Ok(())
+    }
+
+    /// Tokens kept per compressed partition: floor(r * L), min 1.
+    pub fn keep_per_partition(&self) -> usize {
+        ((self.ratio * self.lag as f64).floor() as usize).max(1)
+    }
+
+    /// The paper's notation "Nx" (2x = r 0.5 ...).
+    pub fn ratio_label(&self) -> String {
+        format!("{:.0}x", 1.0 / self.ratio)
+    }
+}
+
+/// Coordinator / serving parameters.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Decode batch buckets available as AOT executables (ascending).
+    pub decode_buckets: Vec<usize>,
+    /// Prefill length buckets available as AOT executables (ascending).
+    pub prefill_buckets: Vec<usize>,
+    pub max_new_tokens: usize,
+    pub max_queue: usize,
+    /// Port for the TCP front-end.
+    pub port: u16,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            decode_buckets: vec![1, 4],
+            prefill_buckets: vec![128, 256, 512],
+            max_new_tokens: 72,
+            max_queue: 256,
+            port: 7199,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut c = ServingConfig::default();
+        c.max_new_tokens = args.usize_or("max-new", c.max_new_tokens)?;
+        c.max_queue = args.usize_or("max-queue", c.max_queue)?;
+        c.port = args.usize_or("port", c.port as usize)? as u16;
+        Ok(c)
+    }
+}
+
+/// Locate the artifacts directory (env LAGKV_ARTIFACTS, --artifacts, or ./artifacts).
+pub fn artifacts_dir(args: &Args) -> PathBuf {
+    if let Some(p) = args.get("artifacts") {
+        return PathBuf::from(p);
+    }
+    if let Ok(p) = std::env::var("LAGKV_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from("artifacts")
+}
+
+pub fn read_json(path: &Path) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(p.name()).unwrap(), *p);
+        }
+        assert!(PolicyKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn ratio_labels() {
+        let mk = |r| CompressionConfig { ratio: r, ..Default::default() };
+        assert_eq!(mk(0.5).ratio_label(), "2x");
+        assert_eq!(mk(0.25).ratio_label(), "4x");
+        assert_eq!(mk(0.125).ratio_label(), "8x");
+    }
+
+    #[test]
+    fn keep_per_partition_floor() {
+        let c = CompressionConfig { lag: 64, ratio: 0.167, ..Default::default() };
+        assert_eq!(c.keep_per_partition(), 10); // floor(10.688)
+        let c = CompressionConfig { lag: 8, ratio: 0.01, ..Default::default() };
+        assert_eq!(c.keep_per_partition(), 1); // never zero
+    }
+
+    #[test]
+    fn validation() {
+        let bad = CompressionConfig { ratio: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = CompressionConfig { lag: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let args = Args::parse(
+            ["--policy", "h2o", "--lag", "32", "--ratio", "0.25"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = CompressionConfig::from_args(&args).unwrap();
+        assert_eq!(c.policy, PolicyKind::H2O);
+        assert_eq!(c.lag, 32);
+        assert_eq!(c.ratio, 0.25);
+    }
+
+    #[test]
+    fn l2norm_default_skip_layers() {
+        let args =
+            Args::parse(["--policy", "l2norm"].iter().map(|s| s.to_string())).unwrap();
+        let c = CompressionConfig::from_args(&args).unwrap();
+        assert_eq!(c.skip_layers, 2);
+    }
+}

@@ -1,0 +1,177 @@
+//! Continuous batcher: keeps a fixed-shape decode bucket full by admitting
+//! queued requests into slots the moment they free up (prefill happens at
+//! admission, decode proceeds in lockstep across occupied slots).
+//!
+//! Bucket policy: with one pending request the B=1 executable is used (no
+//! padding waste); with more, the largest exported bucket.  A sequence
+//! joining mid-flight simply occupies an idle slot at the next step
+//! boundary — the defining property of continuous batching.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::compress::maybe_compress;
+use crate::engine::{Engine, SlotState};
+use crate::runtime::literals::argmax;
+
+use super::{Response, WorkItem};
+
+pub struct Coordinator {
+    pub engine: Engine,
+    /// Max decode steps a batch runs before re-checking the queue (keeps
+    /// admission latency bounded even under long generations).
+    pub admission_interval: usize,
+}
+
+struct Pending {
+    respond: std::sync::mpsc::Sender<Response>,
+    id: u64,
+    queue_us: u64,
+    prefill_us: u64,
+    prompt_tokens: usize,
+    started: Instant,
+}
+
+impl Coordinator {
+    pub fn new(engine: Engine) -> Self {
+        Coordinator { engine, admission_interval: 8 }
+    }
+
+    /// Serve until the work channel closes; blocks the calling thread.
+    pub fn run(&self, queue: Receiver<WorkItem>) -> Result<()> {
+        let bucket = *self.engine.decode_buckets().iter().max().unwrap_or(&1);
+        let mut slots: Vec<SlotState> = (0..bucket).map(|_| SlotState::idle()).collect();
+        let mut meta: Vec<Option<Pending>> = (0..bucket).map(|_| None).collect();
+        loop {
+            let occupied = slots.iter().filter(|s| s.occupied_any()).count();
+            // Admit while there is room.
+            let mut admitted = false;
+            while slots.iter().any(|s| !s.occupied_any()) {
+                let item = if occupied == 0 && !admitted {
+                    // Block for work when fully idle.
+                    match queue.recv_timeout(Duration::from_millis(200)) {
+                        Ok(i) => i,
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => return Ok(()),
+                    }
+                } else {
+                    match queue.try_recv() {
+                        Ok(i) => i,
+                        Err(_) => break,
+                    }
+                };
+                admitted = true;
+                self.admit(item, &mut slots, &mut meta)?;
+            }
+
+            if !slots.iter().any(|s| s.occupied_any()) {
+                // Nothing in flight; check for disconnect to terminate.
+                match queue.recv_timeout(Duration::from_millis(50)) {
+                    Ok(item) => {
+                        self.admit(item, &mut slots, &mut meta)?;
+                    }
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => return Ok(()),
+                }
+            }
+
+            // Decode burst, then recheck admissions.
+            for _ in 0..self.admission_interval {
+                if !slots.iter().any(|s| s.active().is_some()) {
+                    break;
+                }
+                self.engine.step_batch(&mut slots)?;
+                self.reap(&mut slots, &mut meta);
+            }
+        }
+    }
+
+    fn admit(
+        &self,
+        item: WorkItem,
+        slots: &mut [SlotState],
+        meta: &mut [Option<Pending>],
+    ) -> Result<()> {
+        let idx = slots.iter().position(|s| !s.occupied_any()).expect("free slot");
+        let queue_us = item.enqueued.elapsed().as_micros() as u64;
+        let req = item.request;
+        let t0 = Instant::now();
+        let ids = self.engine.tokenizer.encode(&req.prompt, true);
+        let prefill = self.engine.prefill(&ids);
+        match prefill {
+            Ok((logits, cache)) => {
+                let first = argmax(&logits) as i32;
+                let scorer = self.engine.make_scorer(&req.compression, req.seed);
+                let mut slot = SlotState::occupied(
+                    cache,
+                    req.compression.clone(),
+                    scorer,
+                    first,
+                    req.max_new,
+                );
+                if let Some(seq) = slot.active_mut() {
+                    // prefill-stage recursive compression
+                    let ev =
+                        maybe_compress(&mut seq.cache, &req.compression, seq.scorer.as_mut())?;
+                    seq.compression_events += ev.len();
+                    seq.push_generated(first, self.engine.tmax);
+                }
+                slots[idx] = slot;
+                meta[idx] = Some(Pending {
+                    respond: item.respond,
+                    id: req.id,
+                    queue_us,
+                    prefill_us: t0.elapsed().as_micros() as u64,
+                    prompt_tokens: ids.len(),
+                    started: Instant::now(),
+                });
+                // a freshly admitted sequence may already be done (max_new=1)
+                self.reap_slot(idx, slots, meta);
+            }
+            Err(e) => {
+                let _ = item.respond.send(Response {
+                    id: req.id,
+                    text: String::new(),
+                    tokens: vec![],
+                    prompt_tokens: ids.len(),
+                    cache_lens: vec![],
+                    compression_events: 0,
+                    queue_us,
+                    prefill_us: 0,
+                    decode_us: 0,
+                    error: Some(format!("{e:#}")),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn reap(&self, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
+        for idx in 0..slots.len() {
+            self.reap_slot(idx, slots, meta);
+        }
+    }
+
+    fn reap_slot(&self, idx: usize, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
+        if !slots[idx].finished() {
+            return;
+        }
+        let seq = slots[idx].take().unwrap();
+        let pending = meta[idx].take().expect("finished slot has metadata");
+        let text = self.engine.tokenizer.decode(&seq.generated_without_eos());
+        let _ = pending.respond.send(Response {
+            id: pending.id,
+            text,
+            tokens: seq.generated.clone(),
+            prompt_tokens: pending.prompt_tokens,
+            cache_lens: seq.cache.lens(),
+            compression_events: seq.compression_events,
+            queue_us: pending.queue_us,
+            prefill_us: pending.prefill_us,
+            decode_us: pending.started.elapsed().as_micros() as u64,
+            error: None,
+        });
+    }
+}

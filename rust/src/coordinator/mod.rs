@@ -1,0 +1,80 @@
+//! L3 coordination: request types, the FCFS admission queue, the
+//! continuous batcher, and the multi-model router.
+//!
+//! Data flow (vLLM-router-like, scaled to this testbed):
+//!
+//! ```text
+//!   clients ──> server (TCP/json or in-proc) ──> Router
+//!                                                  │ per model variant
+//!                                                  ▼
+//!                                   Coordinator (one thread per model)
+//!                                     admission queue (bounded, FCFS)
+//!                                     continuous batcher over decode slots
+//!                                     engine.step_batch / prefill
+//! ```
+//!
+//! Compression is a *per-request* property: each request carries its own
+//! (policy, S, L, r), so a single deployment can serve baseline and
+//! compressed traffic side by side — the integration story the paper's
+//! "easy integration into the mainstream inference platform" claim implies.
+
+pub mod batcher;
+pub mod router;
+
+use std::sync::mpsc;
+
+use crate::config::CompressionConfig;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub compression: CompressionConfig,
+    pub max_new: usize,
+    /// Random seed for seeded policies.
+    pub seed: u64,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    pub cache_lens: Vec<usize>,
+    pub compression_events: usize,
+    /// Queue wait + prefill + decode, microseconds.
+    pub queue_us: u64,
+    pub prefill_us: u64,
+    pub decode_us: u64,
+    pub error: Option<String>,
+}
+
+/// A queued unit: request plus its response channel and enqueue timestamp.
+pub struct WorkItem {
+    pub request: Request,
+    pub respond: mpsc::Sender<Response>,
+    pub enqueued: std::time::Instant,
+}
+
+impl Response {
+    pub fn error(id: u64, msg: &str) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            tokens: vec![],
+            prompt_tokens: 0,
+            cache_lens: vec![],
+            compression_events: 0,
+            queue_us: 0,
+            prefill_us: 0,
+            decode_us: 0,
+            error: Some(msg.to_string()),
+        }
+    }
+}
+
+pub use batcher::Coordinator;
+pub use router::Router;

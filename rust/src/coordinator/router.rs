@@ -1,0 +1,85 @@
+//! Multi-model router: one coordinator thread per model variant, a shared
+//! handle for clients (in-proc or the TCP server).
+//!
+//! PJRT client handles are not `Send` (the `xla` crate wraps them in `Rc`),
+//! so each coordinator thread constructs its own [`Engine`] and the router
+//! moves only plain-data [`WorkItem`]s across threads.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::Engine;
+
+use super::{Coordinator, Request, Response, WorkItem};
+
+pub struct Router {
+    senders: HashMap<String, Sender<WorkItem>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Spin up one coordinator thread per model variant.  Engine loading
+    /// happens inside the thread; a variant that fails to load answers all
+    /// of its requests with an error instead of killing the router.
+    pub fn start(art_dir: PathBuf, variants: &[String]) -> Router {
+        let mut senders = HashMap::new();
+        let mut threads = Vec::new();
+        for variant in variants {
+            let (tx, rx) = mpsc::channel::<WorkItem>();
+            senders.insert(variant.clone(), tx);
+            let art = art_dir.clone();
+            let name = variant.clone();
+            threads.push(std::thread::spawn(move || match Engine::load(&art, &name) {
+                Ok(engine) => {
+                    let coord = Coordinator::new(engine);
+                    if let Err(e) = coord.run(rx) {
+                        eprintln!("coordinator {name} died: {e:#}");
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("engine {name} failed to load: {e:#}");
+                    eprintln!("{msg}");
+                    while let Ok(item) = rx.recv() {
+                        let _ = item.respond.send(Response::error(item.request.id, &msg));
+                    }
+                }
+            }));
+        }
+        Router { senders, threads }
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.senders.keys().cloned().collect()
+    }
+
+    /// Submit a request; returns a receiver for its response.
+    pub fn submit(&self, model: &str, request: Request) -> Result<mpsc::Receiver<Response>> {
+        let tx = self
+            .senders
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model:?} (have {:?})", self.models()))?;
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(WorkItem { request, respond: rtx, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("coordinator for {model} is gone"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait (in-proc convenience).
+    pub fn generate(&self, model: &str, request: Request) -> Result<Response> {
+        let rx = self.submit(model, request)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the response"))
+    }
+
+    /// Drop the senders and join the worker threads.
+    pub fn shutdown(mut self) {
+        self.senders.clear();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}

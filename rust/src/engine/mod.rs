@@ -1,0 +1,291 @@
+//! Model engine: drives the AOT-compiled prefill/decode executables over
+//! [`KvCache`]s with recursive compression — the bridge between the
+//! coordinator (L3) and the compiled model (L2/L1).
+//!
+//! Responsibilities:
+//! * load manifest + weights, compile executables on first use,
+//! * single-sequence [`Engine::generate`] (greedy decoding),
+//! * batched [`Engine::step_batch`] for the continuous batcher,
+//! * fire the compression driver after prefill and after every appended
+//!   token (the paper's "dynamically ... in both prefill and decode"),
+//! * optional XLA-backed scoring ([`xla_scorer::XlaScorer`]) that runs the
+//!   L1 Pallas kernel instead of the pure-Rust mirror.
+
+pub mod slot;
+pub mod xla_scorer;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compress::{maybe_compress, policy::make_policy, Scorer};
+use crate::config::{CompressionConfig, ModelDims, ScorerBackend};
+use crate::kvcache::KvCache;
+use crate::runtime::literals::argmax as argmax_slice;
+use crate::runtime::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32, Runtime};
+use crate::tokenizer::Tokenizer;
+
+pub use slot::SlotState;
+
+/// Result of a single-sequence generation.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    pub prompt_tokens: usize,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    /// Final per-layer cache lengths (compression evidence).
+    pub cache_lens: Vec<usize>,
+    /// Number of partition-compression events fired.
+    pub compression_events: usize,
+    pub prefill_us: u64,
+    pub decode_us: u64,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub dims: ModelDims,
+    pub tokenizer: Tokenizer,
+    pub variant: String,
+    weights: Vec<xla::Literal>,
+    prefill_buckets: Vec<usize>,
+    decode_buckets: Vec<usize>,
+    score_lags: Vec<usize>,
+    pub tmax: usize,
+}
+
+impl Engine {
+    /// `art_dir` = artifacts/, `variant` = "llama_like" | "qwen_like".
+    pub fn load(art_dir: &Path, variant: &str) -> Result<Engine> {
+        let rt = Runtime::open(art_dir)?;
+        let dims = ModelDims::from_json(rt.manifest.get("model_config")?)?;
+        let model_dir: PathBuf = art_dir.join("models").join(variant);
+        let digits_per_token = match variant {
+            "llama_like" => 3,
+            "qwen_like" => 1,
+            other => bail!("unknown model variant {other:?}"),
+        };
+        let tokenizer = Tokenizer::load(&model_dir, digits_per_token)
+            .with_context(|| format!("loading tokenizer for {variant}"))?;
+        if tokenizer.vocab.size() != dims.vocab_size {
+            bail!(
+                "vocab size mismatch: tokenizer {} vs model {}",
+                tokenizer.vocab.size(),
+                dims.vocab_size
+            );
+        }
+        let weights = rt.load_weights(&model_dir)?;
+        let prefill_buckets = rt.manifest.get("prefill_buckets")?.as_usize_vec()?;
+        let decode_buckets = rt.manifest.get("decode_buckets")?.as_usize_vec()?;
+        let score_lags = rt.manifest.get("score_lags")?.as_usize_vec()?;
+        let tmax = rt.manifest.get("tmax")?.as_usize()?;
+        Ok(Engine {
+            rt,
+            dims,
+            tokenizer,
+            variant: variant.to_string(),
+            weights,
+            prefill_buckets,
+            decode_buckets,
+            score_lags,
+            tmax,
+        })
+    }
+
+    pub fn decode_buckets(&self) -> &[usize] {
+        &self.decode_buckets
+    }
+
+    /// Smallest prefill bucket that fits `n` tokens.
+    pub fn pick_prefill_bucket(&self, n: usize) -> Result<usize> {
+        self.prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!("prompt of {n} tokens exceeds largest prefill bucket"))
+    }
+
+    /// Build the per-sequence scorer for a compression config.
+    pub fn make_scorer(&self, cfg: &CompressionConfig, seed: u64) -> Box<dyn Scorer> {
+        match cfg.scorer {
+            ScorerBackend::Rust => make_policy(cfg.policy, seed),
+            // Executables are Arc-cached inside the runtime, so the scorer
+            // holds its own handles and does not borrow the engine.
+            ScorerBackend::Xla => Box::new(xla_scorer::XlaScorer::new(
+                self.score_exe_handles(),
+                cfg.policy,
+                seed,
+                self.dims.n_kv_heads,
+            )),
+        }
+    }
+
+    fn score_exe_handles(&self) -> xla_scorer::ScoreExes {
+        let mut map = std::collections::HashMap::new();
+        for &l in &self.score_lags {
+            if let Ok(exe) = self.rt.executable(&format!("lagkv_score_l{l}")) {
+                map.insert(l, exe);
+            }
+        }
+        xla_scorer::ScoreExes { by_lag: map }
+    }
+
+    /// Run prefill for a prompt; returns (last_logits, populated cache).
+    pub fn prefill(&self, ids: &[i32]) -> Result<(Vec<f32>, KvCache)> {
+        let bucket = self.pick_prefill_bucket(ids.len())?;
+        let mut tokens = vec![0i32; bucket];
+        tokens[..ids.len()].copy_from_slice(ids);
+        // Literal path: see EXPERIMENTS.md §Perf — the device-resident
+        // buffer path (execute_b) segfaults nondeterministically inside
+        // this prebuilt xla_extension, so arguments go as literals.
+        let mut args = self.weights.clone();
+        args.push(lit_i32(&tokens, &[bucket])?);
+        args.push(lit_i32_scalar(ids.len() as i32));
+        let out = self.rt.execute(&format!("prefill_t{bucket}"), &args)?;
+        if out.len() != 4 {
+            bail!("prefill returned {} outputs, expected 4", out.len());
+        }
+        let logits = to_vec_f32(&out[0])?;
+        let k = to_vec_f32(&out[1])?;
+        let v = to_vec_f32(&out[2])?;
+        let attn = to_vec_f32(&out[3])?;
+        let mut cache = KvCache::new(self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
+        cache.ingest_prefill(&k, &v, &attn, bucket, ids.len())?;
+        Ok((logits, cache))
+    }
+
+    /// One batched decode step over `slots` (entries may be idle).
+    /// Bucket = slots.len() and must be an exported decode bucket.
+    pub fn step_batch(&self, slots: &mut [SlotState]) -> Result<()> {
+        let b = slots.len();
+        if !self.decode_buckets.contains(&b) {
+            bail!("no decode executable for batch {b}");
+        }
+        let (nl, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
+        let tmax = self.tmax;
+        let per_slot = hkv * tmax * dh;
+
+        // assemble K/V [nl, B, hkv, tmax, dh] + lens [nl, B] + pos/token [B]
+        let mut kbuf = vec![0.0f32; nl * b * per_slot];
+        let mut vbuf = vec![0.0f32; nl * b * per_slot];
+        let mut lens = vec![0i32; nl * b];
+        let mut pos = vec![0i32; b];
+        let mut tok = vec![0i32; b];
+        for (s, slot) in slots.iter().enumerate() {
+            if let Some(seq) = slot.active() {
+                for layer in 0..nl {
+                    let (lk, lv) = seq.cache.layer_padded(layer, tmax);
+                    let dst = (layer * b + s) * per_slot;
+                    kbuf[dst..dst + per_slot].copy_from_slice(&lk);
+                    vbuf[dst..dst + per_slot].copy_from_slice(&lv);
+                    lens[layer * b + s] = seq.cache.len(layer) as i32;
+                }
+                pos[s] = seq.cache.appended as i32;
+                tok[s] = seq.next_token;
+            }
+        }
+        // Literal path (see EXPERIMENTS.md §Perf re: execute_b instability).
+        let args: Vec<xla::Literal> = self
+            .weights
+            .iter()
+            .cloned()
+            .chain([
+                lit_f32(&kbuf, &[nl, b, hkv, tmax, dh])?,
+                lit_f32(&vbuf, &[nl, b, hkv, tmax, dh])?,
+                lit_i32(&lens, &[nl, b])?,
+                lit_i32(&pos, &[b])?,
+                lit_i32(&tok, &[b])?,
+            ])
+            .collect();
+        let out = self.rt.execute(&format!("decode_b{b}"), &args)?;
+        if out.len() != 6 {
+            bail!("decode returned {} outputs, expected 6", out.len());
+        }
+        let logits = to_vec_f32(&out[0])?; // [B, V]
+        let k_new = to_vec_f32(&out[1])?; // [nl, B, hkv, dh]
+        let v_new = to_vec_f32(&out[2])?;
+        let attn_row = to_vec_f32(&out[5])?; // [nl, B, hkv, tmax]
+        let v_size = self.dims.vocab_size;
+
+        for (s, slot) in slots.iter_mut().enumerate() {
+            let Some(seq) = slot.active_mut() else { continue };
+            // extract this slot's k_new/v_new -> [nl, hkv, dh] flat
+            let mut kn = Vec::with_capacity(nl * hkv * dh);
+            let mut vn = Vec::with_capacity(nl * hkv * dh);
+            for layer in 0..nl {
+                let off = ((layer * b) + s) * hkv * dh;
+                kn.extend_from_slice(&k_new[off..off + hkv * dh]);
+                vn.extend_from_slice(&v_new[off..off + hkv * dh]);
+            }
+            let position = seq.cache.appended as i32;
+            seq.cache.append_token(&kn, &vn, position)?;
+            if seq.compression.policy.needs_attention() {
+                let mut row = Vec::with_capacity(nl * hkv * tmax);
+                for layer in 0..nl {
+                    let off = ((layer * b) + s) * hkv * tmax;
+                    row.extend_from_slice(&attn_row[off..off + hkv * tmax]);
+                }
+                seq.cache.accumulate_attention(&row, tmax)?;
+            }
+            let events =
+                maybe_compress(&mut seq.cache, &seq.compression, seq.scorer.as_mut())?;
+            seq.compression_events += events.len();
+
+            let next = argmax_slice(&logits[s * v_size..(s + 1) * v_size]) as i32;
+            seq.push_generated(next, self.tmax);
+        }
+        Ok(())
+    }
+
+    /// Greedy single-sequence generation with recursive compression.
+    pub fn generate(
+        &self,
+        prompt: &str,
+        cfg: &CompressionConfig,
+        max_new: usize,
+        seed: u64,
+    ) -> Result<GenOutput> {
+        let ids = self.tokenizer.encode(prompt, true);
+        self.generate_ids(&ids, cfg, max_new, seed)
+    }
+
+    pub fn generate_ids(
+        &self,
+        ids: &[i32],
+        cfg: &CompressionConfig,
+        max_new: usize,
+        seed: u64,
+    ) -> Result<GenOutput> {
+        let t0 = std::time::Instant::now();
+        let (logits, cache) = self.prefill(ids)?;
+        let prefill_us = t0.elapsed().as_micros() as u64;
+
+        let scorer = self.make_scorer(cfg, seed);
+        let first = argmax_slice(&logits) as i32;
+        let mut slot = SlotState::occupied(cache, cfg.clone(), scorer, first, max_new);
+        // prefill-stage recursive compression
+        {
+            let seq = slot.active_mut().unwrap();
+            let events = maybe_compress(&mut seq.cache, cfg, seq.scorer.as_mut())?;
+            seq.compression_events += events.len();
+            seq.push_generated(first, self.tmax);
+        }
+
+        let t1 = std::time::Instant::now();
+        let mut slots = vec![slot];
+        while slots[0].active().map(|s| !s.done).unwrap_or(false) {
+            self.step_batch(&mut slots)?;
+        }
+        let decode_us = t1.elapsed().as_micros() as u64;
+        let seq = slots[0].take().unwrap();
+        let text = self.tokenizer.decode(&seq.generated_without_eos());
+        Ok(GenOutput {
+            prompt_tokens: ids.len(),
+            tokens: seq.generated.clone(),
+            text,
+            cache_lens: seq.cache.lens(),
+            compression_events: seq.compression_events,
+            prefill_us,
+            decode_us,
+        })
+    }
+}

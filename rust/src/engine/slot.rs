@@ -1,0 +1,153 @@
+//! Decode-slot state: one in-flight sequence inside a batch bucket.
+
+use crate::compress::Scorer;
+use crate::config::CompressionConfig;
+use crate::kvcache::KvCache;
+use crate::tokenizer::EOS;
+
+/// A live sequence occupying a decode slot.
+pub struct SeqState {
+    pub cache: KvCache,
+    pub compression: CompressionConfig,
+    pub scorer: Box<dyn Scorer>,
+    /// Token to feed at the next decode step.
+    pub next_token: i32,
+    /// Everything generated so far (greedy), including the token produced
+    /// by prefill and possibly a final EOS.
+    pub generated: Vec<i32>,
+    pub max_new: usize,
+    pub done: bool,
+    pub compression_events: usize,
+}
+
+impl SeqState {
+    /// Record a newly generated token and update termination state.
+    /// `tmax` bounds the absolute position (cache capacity guard).
+    pub fn push_generated(&mut self, token: i32, tmax: usize) {
+        if self.done {
+            return;
+        }
+        // `next_token` was just consumed by the step; `token` is its output.
+        self.next_token = token;
+        self.generated.push(token);
+        if token == EOS
+            || self.generated.len() >= self.max_new
+            || self.cache.appended + 1 >= tmax
+        {
+            self.done = true;
+        }
+    }
+
+    pub fn generated_without_eos(&self) -> Vec<i32> {
+        self.generated.iter().copied().filter(|&t| t != EOS).collect()
+    }
+}
+
+/// A batch slot: occupied or idle.  Idle slots decode garbage on a zeroed
+/// cache; their outputs are ignored (the executable's shape is fixed).
+#[derive(Default)]
+pub struct SlotState {
+    seq: Option<SeqState>,
+}
+
+impl SlotState {
+    pub fn idle() -> SlotState {
+        SlotState { seq: None }
+    }
+
+    pub fn occupied(
+        cache: KvCache,
+        compression: CompressionConfig,
+        scorer: Box<dyn Scorer>,
+        first_token: i32,
+        max_new: usize,
+    ) -> SlotState {
+        SlotState {
+            seq: Some(SeqState {
+                cache,
+                compression,
+                scorer,
+                next_token: first_token,
+                generated: Vec::new(),
+                max_new,
+                done: false,
+                compression_events: 0,
+            }),
+        }
+    }
+
+    pub fn active(&self) -> Option<&SeqState> {
+        self.seq.as_ref().filter(|s| !s.done)
+    }
+
+    pub fn active_mut(&mut self) -> Option<&mut SeqState> {
+        self.seq.as_mut().filter(|s| !s.done)
+    }
+
+    pub fn occupied_any(&self) -> bool {
+        self.seq.is_some()
+    }
+
+    pub fn finished(&self) -> bool {
+        self.seq.as_ref().map(|s| s.done).unwrap_or(false)
+    }
+
+    pub fn take(&mut self) -> Option<SeqState> {
+        self.seq.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::policy::make_policy;
+    use crate::config::PolicyKind;
+
+    fn mk_slot(max_new: usize) -> SlotState {
+        SlotState::occupied(
+            KvCache::new(1, 1, 2),
+            CompressionConfig::default(),
+            make_policy(PolicyKind::LagKv, 0),
+            7,
+            max_new,
+        )
+    }
+
+    #[test]
+    fn terminates_on_eos() {
+        let mut slot = mk_slot(100);
+        slot.active_mut().unwrap().push_generated(9, 512);
+        assert!(!slot.finished());
+        slot.active_mut().unwrap().push_generated(EOS, 512);
+        assert!(slot.finished());
+        assert!(slot.active().is_none());
+    }
+
+    #[test]
+    fn terminates_on_budget() {
+        let mut slot = mk_slot(2);
+        slot.active_mut().unwrap().push_generated(9, 512);
+        slot.active_mut().unwrap().push_generated(9, 512);
+        assert!(slot.finished());
+    }
+
+    #[test]
+    fn eos_stripped_from_text_tokens() {
+        let mut slot = mk_slot(5);
+        let seq = slot.active_mut().unwrap();
+        seq.push_generated(9, 512);
+        seq.push_generated(EOS, 512);
+        let seq = slot.take().unwrap();
+        assert_eq!(seq.generated, vec![9, EOS]);
+        assert_eq!(seq.generated_without_eos(), vec![9]);
+    }
+
+    #[test]
+    fn idle_slot_is_inert() {
+        let mut s = SlotState::idle();
+        assert!(s.active().is_none());
+        assert!(!s.occupied_any());
+        assert!(!s.finished());
+        assert!(s.take().is_none());
+    }
+}

@@ -1,0 +1,101 @@
+//! XLA-backed scorer: runs the AOT-compiled L1 Pallas kernel
+//! (`lagkv_score_l{L}.hlo.txt`) through PJRT instead of the pure-Rust
+//! mirror.
+//!
+//! This exists for two reasons:
+//! 1. it proves the L1 kernel is a first-class runtime citizen (the paper's
+//!    "easy integration" claim exercised end-to-end), and
+//! 2. the integration tests cross-validate Rust scores against the Pallas
+//!    kernel's scores on identical inputs, pinning all three
+//!    implementations (jnp ref / Pallas / Rust) together.
+//!
+//! The exported kernel scores `[H, L, D]` (all KV heads at once) while the
+//! driver calls per head; the head's tile is replicated across the H rows
+//! (the kernel is per-head independent, so row 0 is exactly this head's
+//! score).  The small redundancy is irrelevant at H=2 and keeps one
+//! artifact shape per lag.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::policy::{PartitionInput, RandomScorer, Scorer};
+use crate::compress::scores as rust_scores;
+use crate::config::PolicyKind;
+use crate::runtime::{lit_f32, to_vec_f32};
+
+/// Compiled score executables keyed by lag size, plus the exported head
+/// count.
+pub struct ScoreExes {
+    pub by_lag: HashMap<usize, Arc<xla::PjRtLoadedExecutable>>,
+}
+
+pub struct XlaScorer {
+    exes: ScoreExes,
+    policy: PolicyKind,
+    seed: u64,
+    /// Head count of the exported kernels (model n_kv_heads).
+    n_heads: usize,
+}
+
+impl XlaScorer {
+    pub fn new(exes: ScoreExes, policy: PolicyKind, seed: u64, n_heads: usize) -> Self {
+        XlaScorer { exes, policy, seed, n_heads }
+    }
+
+    fn exec_tiled(&self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        let exe = self
+            .exes
+            .by_lag
+            .get(&inp.l)
+            .ok_or_else(|| anyhow!("no lagkv_score executable for L={}", inp.l))?;
+        let h = self.n_heads;
+        let tile = |x: &[f32]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(h * x.len());
+            for _ in 0..h {
+                out.extend_from_slice(x);
+            }
+            out
+        };
+        let dims = [h, inp.l, inp.d];
+        let args = [
+            lit_f32(&tile(inp.k_cur), &dims)?,
+            lit_f32(&tile(inp.v_cur), &dims)?,
+            lit_f32(&tile(inp.k_ref), &dims)?,
+            lit_f32(&tile(inp.v_ref), &dims)?,
+        ];
+        let out = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("xla scorer: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("xla scorer fetch: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("xla scorer tuple: {e:?}"))?;
+        let flat = to_vec_f32(&out[0])?; // [H, L]
+        Ok(flat[..inp.l].to_vec())
+    }
+}
+
+impl Scorer for XlaScorer {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        match self.policy {
+            PolicyKind::LagKv => self.exec_tiled(inp),
+            // Only the LagKV kernel is exported; the remaining policies
+            // fall back to their Rust scorers even under --scorer=xla.
+            PolicyKind::LocalKv => {
+                Ok(rust_scores::localkv_score(inp.k_cur, inp.v_cur, inp.l, inp.d))
+            }
+            PolicyKind::L2Norm => Ok(rust_scores::l2norm_score(inp.k_cur, inp.l, inp.d)),
+            PolicyKind::H2O => Ok(inp.attn_acc.to_vec()),
+            PolicyKind::Streaming | PolicyKind::None => {
+                Ok((0..inp.l).map(|i| i as f32).collect())
+            }
+            PolicyKind::Random => RandomScorer { seed: self.seed }.score(inp),
+        }
+    }
+}

@@ -1,0 +1,430 @@
+//! KV-cache manager: per-sequence, per-layer, per-head compacted storage
+//! with the paper's sink / compressed / tail layout.
+//!
+//! Row order within each (layer, head):
+//!
+//! ```text
+//!   [ sink S | compressed survivors ... | tail (uncompressed) ]
+//!             ^ boundary                                      ^ len
+//! ```
+//!
+//! * Rows `< boundary` are final: sink plus the winners of past partition
+//!   compressions.
+//! * The *tail* accumulates appended tokens.  When it reaches `2L`, the
+//!   compression driver (compress/driver.rs) scores the oldest `L` against
+//!   the next `L` (the lag reference) and keeps the top `floor(r*L)` per
+//!   head — the paper's recursive scheme (Fig. 1), identical in prefill and
+//!   decode.
+//! * Head token *identities* diverge after eviction (per-head top-k) but
+//!   head *counts* stay equal, so a single length per layer suffices — the
+//!   shape contract of the decode executable.  Lengths may differ across
+//!   layers (the recursive-L2 variant skips layers).
+//!
+//! The cache also carries per-row original positions (debug/analysis) and
+//! per-row accumulated attention mass (the H2O baseline's statistic).
+
+pub mod ratio;
+
+use anyhow::{bail, Result};
+
+/// Storage for one (layer, head).
+#[derive(Debug, Clone, Default)]
+pub struct HeadStore {
+    /// Row-major keys, `len * d_head`.
+    pub k: Vec<f32>,
+    /// Row-major values, `len * d_head`.
+    pub v: Vec<f32>,
+    /// Original absolute position of each row.
+    pub pos: Vec<i32>,
+    /// Accumulated attention mass per row (H2O).
+    pub attn: Vec<f32>,
+}
+
+impl HeadStore {
+    fn len(&self, d: usize) -> usize {
+        debug_assert_eq!(self.k.len() % d, 0);
+        self.k.len() / d
+    }
+
+    /// Keep only `keep` (ascending row indices) within `[start, start+l)`,
+    /// leaving rows outside the window untouched.
+    fn compact_window(&mut self, d: usize, start: usize, l: usize, keep: &[usize]) {
+        debug_assert!(keep.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(keep.iter().all(|&i| i < l));
+        let mut k = Vec::with_capacity(self.k.len() - (l - keep.len()) * d);
+        let mut v = Vec::with_capacity(k.capacity());
+        let mut pos = Vec::with_capacity(self.pos.len() - (l - keep.len()));
+        let mut attn = Vec::with_capacity(pos.capacity());
+        k.extend_from_slice(&self.k[..start * d]);
+        v.extend_from_slice(&self.v[..start * d]);
+        pos.extend_from_slice(&self.pos[..start]);
+        attn.extend_from_slice(&self.attn[..start]);
+        for &i in keep {
+            let r = start + i;
+            k.extend_from_slice(&self.k[r * d..(r + 1) * d]);
+            v.extend_from_slice(&self.v[r * d..(r + 1) * d]);
+            pos.push(self.pos[r]);
+            attn.push(self.attn[r]);
+        }
+        k.extend_from_slice(&self.k[(start + l) * d..]);
+        v.extend_from_slice(&self.v[(start + l) * d..]);
+        pos.extend_from_slice(&self.pos[start + l..]);
+        attn.extend_from_slice(&self.attn[start + l..]);
+        self.k = k;
+        self.v = v;
+        self.pos = pos;
+        self.attn = attn;
+    }
+}
+
+/// Per-layer state.
+#[derive(Debug, Clone)]
+pub struct LayerCache {
+    pub heads: Vec<HeadStore>,
+    /// Rows `< boundary` are sink + already-compressed survivors.
+    pub boundary: usize,
+}
+
+/// The full per-sequence cache.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub layers: Vec<LayerCache>,
+    /// Total tokens ever appended (= next absolute position).
+    pub appended: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, n_heads: usize, d_head: usize) -> Self {
+        KvCache {
+            n_layers,
+            n_heads,
+            d_head,
+            layers: (0..n_layers)
+                .map(|_| LayerCache {
+                    heads: vec![HeadStore::default(); n_heads],
+                    boundary: 0,
+                })
+                .collect(),
+            appended: 0,
+        }
+    }
+
+    /// Current row count of `layer` (uniform across its heads).
+    pub fn len(&self, layer: usize) -> usize {
+        self.layers[layer].heads[0].len(self.d_head)
+    }
+
+    pub fn lens(&self) -> Vec<usize> {
+        (0..self.n_layers).map(|l| self.len(l)).collect()
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.lens().into_iter().max().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.appended == 0
+    }
+
+    /// Uncompressed tail length of `layer`.
+    pub fn tail_len(&self, layer: usize) -> usize {
+        self.len(layer) - self.layers[layer].boundary
+    }
+
+    /// Append one token's K/V for every layer/head.
+    ///
+    /// `k_new`/`v_new` layout: `[n_layers, n_heads, d_head]` row-major —
+    /// exactly the decode executable's `k_new` output.
+    pub fn append_token(&mut self, k_new: &[f32], v_new: &[f32], position: i32) -> Result<()> {
+        let d = self.d_head;
+        let expect = self.n_layers * self.n_heads * d;
+        if k_new.len() != expect || v_new.len() != expect {
+            bail!("append_token: expected {expect} floats, got {}", k_new.len());
+        }
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            for (hi, head) in layer.heads.iter_mut().enumerate() {
+                let off = (li * self.n_heads + hi) * d;
+                head.k.extend_from_slice(&k_new[off..off + d]);
+                head.v.extend_from_slice(&v_new[off..off + d]);
+                head.pos.push(position);
+                head.attn.push(0.0);
+            }
+        }
+        self.appended += 1;
+        Ok(())
+    }
+
+    /// Ingest a prefill output: `k`/`v` are `[n_layers, n_heads, t_bucket,
+    /// d_head]` and `attn_sums` is `[n_layers, n_heads, t_bucket]`; only the
+    /// first `true_len` rows are real.
+    pub fn ingest_prefill(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        attn_sums: &[f32],
+        t_bucket: usize,
+        true_len: usize,
+    ) -> Result<()> {
+        let d = self.d_head;
+        if k.len() != self.n_layers * self.n_heads * t_bucket * d {
+            bail!(
+                "ingest_prefill: bad k len {} for bucket {t_bucket}",
+                k.len()
+            );
+        }
+        if true_len > t_bucket {
+            bail!("true_len {true_len} > bucket {t_bucket}");
+        }
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            for (hi, head) in layer.heads.iter_mut().enumerate() {
+                let base = (li * self.n_heads + hi) * t_bucket;
+                let row0 = base * d;
+                head.k.extend_from_slice(&k[row0..row0 + true_len * d]);
+                head.v.extend_from_slice(&v[row0..row0 + true_len * d]);
+                head.pos.extend((0..true_len as i32).map(|p| self.appended as i32 + p));
+                head.attn.extend_from_slice(&attn_sums[base..base + true_len]);
+            }
+        }
+        self.appended += true_len;
+        Ok(())
+    }
+
+    /// Add one decode step's attention row (`[n_layers, n_heads, t_max]`,
+    /// aligned with current row order) to the accumulated H2O statistic.
+    pub fn accumulate_attention(&mut self, attn_row: &[f32], t_max: usize) -> Result<()> {
+        if attn_row.len() != self.n_layers * self.n_heads * t_max {
+            bail!("accumulate_attention: bad len {}", attn_row.len());
+        }
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            for (hi, head) in layer.heads.iter_mut().enumerate() {
+                let base = (li * self.n_heads + hi) * t_max;
+                let n = head.attn.len().min(t_max);
+                for r in 0..n {
+                    head.attn[r] += attn_row[base + r];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a per-head keep-set to the window `[start, start+l)` of
+    /// `layer`.  `keeps[h]` must be ascending indices into the window and
+    /// all heads must keep the same count (shape contract).
+    pub fn compact_layer(
+        &mut self,
+        layer: usize,
+        start: usize,
+        l: usize,
+        keeps: &[Vec<usize>],
+    ) -> Result<()> {
+        let d = self.d_head;
+        if keeps.len() != self.n_heads {
+            bail!("compact_layer: {} keep sets for {} heads", keeps.len(), self.n_heads);
+        }
+        let kept = keeps[0].len();
+        if keeps.iter().any(|ks| ks.len() != kept) {
+            bail!("compact_layer: unequal keep counts across heads");
+        }
+        let len = self.len(layer);
+        if start + l > len {
+            bail!("compact_layer: window [{start}, {}) out of bounds {len}", start + l);
+        }
+        for (hi, head) in self.layers[layer].heads.iter_mut().enumerate() {
+            head.compact_window(d, start, l, &keeps[hi]);
+        }
+        self.layers[layer].boundary = start + kept;
+        Ok(())
+    }
+
+    /// Flat padded export of one layer for upload: `([n_heads, t_max, d],
+    /// same for v)`; rows `>= len` are zero.
+    pub fn layer_padded(&self, layer: usize, t_max: usize) -> (Vec<f32>, Vec<f32>) {
+        let d = self.d_head;
+        let len = self.len(layer).min(t_max);
+        let mut k = vec![0.0f32; self.n_heads * t_max * d];
+        let mut v = vec![0.0f32; self.n_heads * t_max * d];
+        for (hi, head) in self.layers[layer].heads.iter().enumerate() {
+            let dst = hi * t_max * d;
+            k[dst..dst + len * d].copy_from_slice(&head.k[..len * d]);
+            v[dst..dst + len * d].copy_from_slice(&head.v[..len * d]);
+        }
+        (k, v)
+    }
+
+    /// Flat padded export of the whole cache: `[n_layers, n_heads, t_max, d]`.
+    pub fn all_padded(&self, t_max: usize) -> (Vec<f32>, Vec<f32>) {
+        let per = self.n_heads * t_max * self.d_head;
+        let mut k = Vec::with_capacity(self.n_layers * per);
+        let mut v = Vec::with_capacity(self.n_layers * per);
+        for l in 0..self.n_layers {
+            let (lk, lv) = self.layer_padded(l, t_max);
+            k.extend_from_slice(&lk);
+            v.extend_from_slice(&lv);
+        }
+        (k, v)
+    }
+
+    /// Borrow the row range `[start, start+l)` of one head as K/V slices.
+    pub fn window(&self, layer: usize, head: usize, start: usize, l: usize) -> Window<'_> {
+        let d = self.d_head;
+        let h = &self.layers[layer].heads[head];
+        Window {
+            k: &h.k[start * d..(start + l) * d],
+            v: &h.v[start * d..(start + l) * d],
+            attn: &h.attn[start..start + l],
+            pos: &h.pos[start..start + l],
+        }
+    }
+
+    /// Retained original positions of one head (analysis / tests).
+    pub fn positions(&self, layer: usize, head: usize) -> &[i32] {
+        &self.layers[layer].heads[head].pos
+    }
+}
+
+/// A borrowed view of `l` consecutive rows of one head.
+pub struct Window<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub attn: &'a [f32],
+    pub pos: &'a [i32],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn filled(nl: usize, nh: usize, d: usize, n: usize) -> KvCache {
+        let mut c = KvCache::new(nl, nh, d);
+        let mut rng = Rng::seed_from(1);
+        for t in 0..n {
+            let k: Vec<f32> = (0..nl * nh * d).map(|_| rng.normal()).collect();
+            let v: Vec<f32> = (0..nl * nh * d).map(|_| rng.normal()).collect();
+            c.append_token(&k, &v, t as i32).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn append_grows_uniformly() {
+        let c = filled(3, 2, 4, 10);
+        assert_eq!(c.lens(), vec![10, 10, 10]);
+        assert_eq!(c.appended, 10);
+    }
+
+    #[test]
+    fn compact_keeps_selected_rows() {
+        let mut c = filled(1, 2, 4, 8);
+        let before_h0: Vec<f32> = c.layers[0].heads[0].k.clone();
+        // window rows 2..6, head0 keeps {1,3} (abs 3,5), head1 keeps {0,2} (abs 2,4)
+        c.compact_layer(0, 2, 4, &[vec![1, 3], vec![0, 2]]).unwrap();
+        assert_eq!(c.len(0), 6);
+        assert_eq!(c.layers[0].boundary, 4);
+        let d = 4;
+        // head0 row2 should be old row 3
+        assert_eq!(&c.layers[0].heads[0].k[2 * d..3 * d], &before_h0[3 * d..4 * d]);
+        assert_eq!(&c.layers[0].heads[0].k[3 * d..4 * d], &before_h0[5 * d..6 * d]);
+        // trailing rows shift down
+        assert_eq!(&c.layers[0].heads[0].k[4 * d..5 * d], &before_h0[6 * d..7 * d]);
+        assert_eq!(c.positions(0, 0), &[0, 1, 3, 5, 6, 7]);
+        assert_eq!(c.positions(0, 1), &[0, 1, 2, 4, 6, 7]);
+    }
+
+    #[test]
+    fn compact_rejects_unequal_counts() {
+        let mut c = filled(1, 2, 4, 8);
+        assert!(c.compact_layer(0, 2, 4, &[vec![1], vec![0, 2]]).is_err());
+    }
+
+    #[test]
+    fn padded_export_zero_fills() {
+        let c = filled(2, 2, 4, 5);
+        let (k, _v) = c.layer_padded(0, 8);
+        assert_eq!(k.len(), 2 * 8 * 4);
+        // row 5.. are zero
+        for h in 0..2 {
+            for r in 5..8 {
+                let off = (h * 8 + r) * 4;
+                assert!(k[off..off + 4].iter().all(|&x| x == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn ingest_prefill_respects_true_len() {
+        let nl = 2;
+        let nh = 2;
+        let d = 3;
+        let t_bucket = 6;
+        let true_len = 4;
+        let mut c = KvCache::new(nl, nh, d);
+        let k: Vec<f32> = (0..nl * nh * t_bucket * d).map(|i| i as f32).collect();
+        let v = k.clone();
+        let attn: Vec<f32> = (0..nl * nh * t_bucket).map(|i| i as f32).collect();
+        c.ingest_prefill(&k, &v, &attn, t_bucket, true_len).unwrap();
+        assert_eq!(c.lens(), vec![4, 4]);
+        assert_eq!(c.appended, 4);
+        // layer1/head1 row0 == k[(1*2+1)*6*3 ..]
+        let off = (1 * nh + 1) * t_bucket * d;
+        assert_eq!(&c.layers[1].heads[1].k[..d], &k[off..off + d]);
+        assert_eq!(c.layers[1].heads[1].attn, attn[(1 * nh + 1) * t_bucket..][..4]);
+    }
+
+    #[test]
+    fn attention_accumulates_in_row_order() {
+        let mut c = filled(1, 1, 2, 3);
+        let t_max = 8;
+        let mut row = vec![0.0f32; t_max];
+        row[0] = 0.5;
+        row[2] = 0.25;
+        c.accumulate_attention(&row, t_max).unwrap();
+        c.accumulate_attention(&row, t_max).unwrap();
+        assert_eq!(c.layers[0].heads[0].attn, vec![1.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn prop_compact_preserves_untouched_regions() {
+        prop::check(60, |g| {
+            let d = g.usize(1, 6);
+            let n = g.usize(6, 40);
+            let start = g.usize(0, n.saturating_sub(6));
+            let l = g.usize(2, (n - start).min(8)).max(2);
+            let kept = g.usize(1, l - 1);
+            let mut c = KvCache::new(1, 1, d);
+            let mut rng = Rng::seed_from(g.case as u64);
+            for t in 0..n {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                c.append_token(&k, &k, t as i32).unwrap();
+            }
+            let before = c.layers[0].heads[0].k.clone();
+            let mut keep: Vec<usize> = (0..l).collect();
+            let mut r2 = Rng::seed_from(g.case as u64 + 999);
+            r2.shuffle(&mut keep);
+            keep.truncate(kept);
+            keep.sort_unstable();
+            c.compact_layer(0, start, l, &[keep.clone()]).unwrap();
+            // prefix untouched
+            if c.layers[0].heads[0].k[..start * d] != before[..start * d] {
+                return Err("prefix changed".into());
+            }
+            // suffix shifted but identical content
+            let suffix_rows = n - start - l;
+            let got = &c.layers[0].heads[0].k[(start + kept) * d..];
+            let want = &before[(start + l) * d..];
+            if got != want || got.len() != suffix_rows * d {
+                return Err("suffix mismatch".into());
+            }
+            // positions of kept rows ascend
+            let pos = c.positions(0, 0);
+            if pos.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("positions not ascending: {pos:?}"));
+            }
+            Ok(())
+        });
+    }
+}

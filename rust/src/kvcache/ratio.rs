@@ -1,0 +1,98 @@
+//! Compression-ratio arithmetic, Eqs. (10)-(11) of the paper.
+//!
+//! For sequence length `Ls >= S + 2L` the retained cache length is
+//!
+//! ```text
+//!   L_R = S + rL * (floor((Ls - S)/L) - 1) + L + mod(Ls - S, L)
+//!   C   = 1 - L_R / Ls
+//! ```
+//!
+//! For `Ls < S + 2L` the compression ratio is zero (nothing is evicted).
+//! (The paper states the zero case as `Ls <= S + 2L` but its own Eq. 10 is
+//! defined for `Ls` "not less than" `S + 2L`; at exact equality the first
+//! partition has its lag reference available and compression fires, so the
+//! strict inequality is the consistent reading — the recursive driver and
+//! this closed form agree at every length, which the tests assert.)
+//! These closed forms are cross-checked against the actual cache manager in
+//! rust/tests/ (the measured retained length must match exactly).
+
+/// Retained cache length after recursive compression (Eq. 10).
+pub fn retained_len(ls: usize, sink: usize, lag: usize, keep_per_partition: usize) -> usize {
+    if ls < sink + 2 * lag {
+        return ls;
+    }
+    let rest = ls - sink;
+    let partitions = rest / lag; // floor
+    let rem = rest % lag;
+    sink + keep_per_partition * (partitions - 1) + lag + rem
+}
+
+/// Compression ratio C (Eq. 11): fraction of the cache evicted.
+pub fn compression_ratio(ls: usize, sink: usize, lag: usize, keep_per_partition: usize) -> f64 {
+    if ls == 0 {
+        return 0.0;
+    }
+    1.0 - retained_len(ls, sink, lag, keep_per_partition) as f64 / ls as f64
+}
+
+/// Asymptotic ratio as Ls -> inf: 1 - r (all mass ends up in compressed
+/// partitions).
+pub fn asymptotic_ratio(r: f64) -> f64 {
+    1.0 - r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn below_threshold_is_identity() {
+        for ls in 0..(4 + 2 * 16) {
+            assert_eq!(retained_len(ls, 4, 16, 8), ls);
+            assert_eq!(compression_ratio(ls, 4, 16, 8), 0.0);
+        }
+        // at exactly S+2L the first compression fires
+        assert_eq!(retained_len(36, 4, 16, 8), 28);
+    }
+
+    #[test]
+    fn paper_formula_exact() {
+        // S=4, L=16, r=0.5 (keep 8), Ls = 4 + 16*5 + 7 = 91
+        // partitions = floor(87/16) = 5, rem = 7
+        // L_R = 4 + 8*4 + 16 + 7 = 59
+        assert_eq!(retained_len(91, 4, 16, 8), 59);
+        let c = compression_ratio(91, 4, 16, 8);
+        assert!((c - (1.0 - 59.0 / 91.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_multiple_boundary() {
+        // Ls - S an exact multiple of L: rem = 0, last partition stays whole
+        // S=4, L=16, Ls = 4 + 48: partitions=3, L_R = 4 + 8*2 + 16 + 0 = 36
+        assert_eq!(retained_len(52, 4, 16, 8), 36);
+    }
+
+    #[test]
+    fn ratio_sawtooth_monotone_at_partition_boundaries() {
+        // The ratio is a sawtooth in Ls (the uncompressed window refills
+        // between partition boundaries); sampled AT the boundaries it is
+        // monotone non-decreasing.
+        let mut prev = 0.0;
+        for k in 2..30 {
+            let ls = 4 + 64 * k;
+            let c = compression_ratio(ls, 4, 64, 16);
+            assert!(c >= prev - 1e-12, "boundary ratio dropped at k={k}");
+            prev = c;
+        }
+        // and everywhere it is bounded by the asymptote
+        for ls in 40..4000 {
+            assert!(compression_ratio(ls, 4, 64, 16) < asymptotic_ratio(0.25));
+        }
+    }
+
+    #[test]
+    fn approaches_asymptote() {
+        let c = compression_ratio(1_000_000, 4, 64, 16);
+        assert!((c - asymptotic_ratio(0.25)).abs() < 0.001);
+    }
+}

@@ -1,0 +1,34 @@
+//! # LagKV — attention-free KV-cache compression inside a Rust serving stack
+//!
+//! Reproduction of *"LagKV: Lag-Relative Information of the KV Cache Tells
+//! Which Tokens Are Important"* (Liang et al., 2025) as a three-layer
+//! system:
+//!
+//! * **L3 (this crate)** — serving coordinator: request router, continuous
+//!   batcher, prefill/decode scheduler, and the KV-cache manager in which
+//!   LagKV and its baselines live as pluggable eviction policies.
+//! * **L2 (python/compile, build time only)** — a tiny GQA transformer in
+//!   JAX, AOT-lowered to HLO text that the [`runtime`] loads via PJRT.
+//! * **L1 (python/compile/kernels)** — the LagKV scoring Pallas kernel,
+//!   lowered into its own HLO artifact and cross-validated against the
+//!   pure-Rust scorer in [`compress::scores`].
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `lagkv` binary is self-contained.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
+//! results.
+
+pub mod config;
+pub mod compress;
+pub mod coordinator;
+pub mod engine;
+pub mod harness;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,178 @@
+//! `lagkv` — CLI for the LagKV serving stack.
+//!
+//! Subcommands:
+//!   info                         artifact + model inventory
+//!   generate --prompt "..."      one-shot generation with any policy
+//!   serve [--port 7199]          TCP server (newline-delimited JSON)
+//!   tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
+//!                                regenerate the paper's tables/figures
+//!
+//! Common flags: --artifacts DIR, --model llama_like|qwen_like,
+//! --policy P --sink S --lag L --ratio R --scorer rust|xla, --items N.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use lagkv::config::{artifacts_dir, CompressionConfig, ServingConfig};
+use lagkv::engine::Engine;
+use lagkv::harness;
+use lagkv::coordinator::Router;
+use lagkv::server::Server;
+use lagkv::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "generate" => generate(&args),
+        "serve" => serve(&args),
+        "tables" => tables(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"lagkv — LagKV KV-cache compression serving stack
+
+USAGE:
+  lagkv info [--artifacts DIR]
+  lagkv generate --prompt "..." [--model M] [--policy P --lag L --ratio R]
+  lagkv serve [--port 7199] [--models llama_like,qwen_like]
+  lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
+               [--items N] [--lag L] [--out FILE]
+
+POLICIES: lagkv localkv l2norm h2o streaming random none
+"#;
+
+fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
+    let art = artifacts_dir(args);
+    Ok(Arc::new(Engine::load(&art, variant)?))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let art = artifacts_dir(args);
+    println!("artifacts: {}", art.display());
+    for variant in ["llama_like", "qwen_like"] {
+        match Engine::load(&art, variant) {
+            Ok(e) => {
+                println!(
+                    "model {variant}: vocab={} d={} layers={} heads={}q/{}kv tmax={} (platform {})",
+                    e.dims.vocab_size,
+                    e.dims.d_model,
+                    e.dims.n_layers,
+                    e.dims.n_q_heads,
+                    e.dims.n_kv_heads,
+                    e.tmax,
+                    e.rt.platform(),
+                );
+                println!("  entries: {}", e.rt.entries().join(", "));
+            }
+            Err(e) => println!("model {variant}: unavailable ({e:#})"),
+        }
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "llama_like");
+    let engine = load_engine(args, model)?;
+    let comp = CompressionConfig::from_args(args)?;
+    let prompt = match args.get("prompt") {
+        Some(p) => p.to_string(),
+        None => bail!("--prompt required"),
+    };
+    let max_new = args.usize_or("max-new", 72)?;
+    let out = engine.generate(&prompt, &comp, max_new, args.u64_or("seed", 0)?)?;
+    println!("text: {}", out.text);
+    println!(
+        "prompt_tokens={} new_tokens={} cache_lens={:?} compression_events={} prefill={}us decode={}us",
+        out.prompt_tokens,
+        out.tokens.len(),
+        out.cache_lens,
+        out.compression_events,
+        out.prefill_us,
+        out.decode_us
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let serving = ServingConfig::from_args(args)?;
+    let models = args.list_or("models", &["llama_like", "qwen_like"]);
+    let router = Arc::new(Router::start(artifacts_dir(args), &models));
+    let server = Arc::new(Server::new(router));
+    let stop = Arc::new(AtomicBool::new(false));
+    server.serve(serving.port, stop)
+}
+
+fn tables(args: &Args) -> Result<()> {
+    let mut opts = harness::EvalOptions::default();
+    opts.n_items = args.usize_or("items", opts.n_items)?;
+    opts.seed = args.u64_or("seed", opts.seed)?;
+    opts.n_digits = args.usize_or("digits", opts.n_digits)?;
+    opts.max_new = args.usize_or("max-new", opts.max_new)?;
+    let lag = args.usize_or("lag", 128)?;
+    let mut outputs: Vec<String> = Vec::new();
+
+    let need_engines = args.has("table1") || args.has("fig2");
+    let engines: Vec<Arc<Engine>> = if need_engines {
+        vec![load_engine(args, "llama_like")?, load_engine(args, "qwen_like")?]
+    } else {
+        vec![]
+    };
+
+    if args.has("table1") {
+        outputs.push(harness::table1(&engines, &opts)?.render());
+    }
+    if args.has("fig2") {
+        outputs.push(harness::fig2(&engines, &opts)?.render());
+    }
+    if args.has("fig3") {
+        let e = load_engine(args, "llama_like")?;
+        for r in [0.5, 0.25] {
+            outputs.push(harness::fig34(&e, lag, r, &opts)?.render());
+        }
+    }
+    if args.has("fig4") {
+        let e = load_engine(args, "qwen_like")?;
+        for r in [0.5, 0.25] {
+            outputs.push(harness::fig34(&e, lag, r, &opts)?.render());
+        }
+    }
+    if args.has("fig5") {
+        let e = load_engine(args, args.get_or("model", "llama_like"))?;
+        outputs.push(harness::fig5(&e, lag, &opts)?.render());
+    }
+    if args.has("h2o") {
+        let e = load_engine(args, args.get_or("model", "llama_like"))?;
+        outputs.push(harness::h2o_table(&e, lag, &opts)?.render());
+    }
+    if args.has("ratio") {
+        outputs.push(harness::ratio_table().render());
+    }
+    if args.has("sim") {
+        outputs.push(harness::sim_fig5(args.u64_or("sim-seeds", 8)?).render());
+    }
+    if outputs.is_empty() {
+        bail!("pick at least one of --table1 --fig2 --fig3 --fig4 --fig5 --h2o --ratio --sim");
+    }
+    let text = outputs.join("\n");
+    println!("{text}");
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &text)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}

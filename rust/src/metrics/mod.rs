@@ -1,0 +1,10 @@
+//! Scoring functions for the evaluation harnesses plus serving-side
+//! latency/throughput instrumentation and a fixed-width table printer.
+
+pub mod score;
+pub mod stats;
+pub mod table;
+
+pub use score::{coverage_score, exact_match, f1_token_score, partial_match_digits};
+pub use stats::{Histogram, ThroughputMeter};
+pub use table::Table;

@@ -1,0 +1,112 @@
+//! Task scoring, matching the evaluation conventions of the paper's
+//! benchmark facility (Yuan et al. 2024):
+//!
+//! * passkey retrieval  -> **partial match** over digits,
+//! * QA / few-shot / code -> exact match on the answer tokens,
+//! * summarization      -> coverage (recall of salient items, order-free),
+//! * generic            -> token-level F1.
+
+/// Partial-match score in [0, 100]: positionally aligned digit agreement
+/// between prediction and reference (the 64-digit needle metric).  A
+/// missing/short prediction scores only its aligned prefix.
+pub fn partial_match_digits(pred: &str, truth: &str) -> f64 {
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let hits = pred
+        .bytes()
+        .zip(truth.bytes())
+        .filter(|(a, b)| a == b)
+        .count();
+    100.0 * hits as f64 / truth.len() as f64
+}
+
+/// Exact match on whitespace-normalized text, in {0, 100}.
+pub fn exact_match(pred: &str, truth: &str) -> f64 {
+    let norm = |s: &str| s.split_whitespace().collect::<Vec<_>>().join(" ");
+    if norm(pred) == norm(truth) {
+        100.0
+    } else {
+        0.0
+    }
+}
+
+/// Coverage: fraction of reference symbols that appear in the prediction
+/// (order-free, multiset-aware), in [0, 100].  Used for the summarization
+/// family.
+pub fn coverage_score(pred: &str, truth: &str) -> f64 {
+    let want: Vec<&str> = truth.split_whitespace().collect();
+    if want.is_empty() {
+        return 0.0;
+    }
+    let mut have: Vec<&str> = pred.split_whitespace().collect();
+    let mut hits = 0usize;
+    for w in &want {
+        if let Some(i) = have.iter().position(|h| h == w) {
+            have.swap_remove(i);
+            hits += 1;
+        }
+    }
+    100.0 * hits as f64 / want.len() as f64
+}
+
+/// Token-level F1 (SQuAD-style), in [0, 100].
+pub fn f1_token_score(pred: &str, truth: &str) -> f64 {
+    let p: Vec<&str> = pred.split_whitespace().collect();
+    let t: Vec<&str> = truth.split_whitespace().collect();
+    if p.is_empty() || t.is_empty() {
+        return if p.is_empty() && t.is_empty() { 100.0 } else { 0.0 };
+    }
+    let mut t_left = t.clone();
+    let mut common = 0usize;
+    for w in &p {
+        if let Some(i) = t_left.iter().position(|x| x == w) {
+            t_left.swap_remove(i);
+            common += 1;
+        }
+    }
+    if common == 0 {
+        return 0.0;
+    }
+    let precision = common as f64 / p.len() as f64;
+    let recall = common as f64 / t.len() as f64;
+    100.0 * 2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_match_basics() {
+        assert_eq!(partial_match_digits("1234", "1234"), 100.0);
+        assert_eq!(partial_match_digits("1234", "1235"), 75.0);
+        assert_eq!(partial_match_digits("", "1234"), 0.0);
+        assert_eq!(partial_match_digits("12", "1234"), 50.0);
+        // extra digits beyond the reference length are ignored
+        assert_eq!(partial_match_digits("123499", "1234"), 100.0);
+    }
+
+    #[test]
+    fn exact_match_normalizes_whitespace() {
+        assert_eq!(exact_match(" blue  ", "blue"), 100.0);
+        assert_eq!(exact_match("blue red", "blue"), 0.0);
+    }
+
+    #[test]
+    fn coverage_order_free() {
+        assert_eq!(coverage_score("b a", "a b"), 100.0);
+        assert_eq!(coverage_score("a", "a b"), 50.0);
+        // multiset: a single "a" cannot cover two
+        assert_eq!(coverage_score("a", "a a"), 50.0);
+    }
+
+    #[test]
+    fn f1_partial_overlap() {
+        let f1 = f1_token_score("red blue", "blue green");
+        // precision 0.5, recall 0.5 -> F1 50
+        assert!((f1 - 50.0).abs() < 1e-9);
+        assert_eq!(f1_token_score("x", "y"), 0.0);
+        assert_eq!(f1_token_score("same", "same"), 100.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Latency histograms and throughput meters for the serving path.
+
+use std::time::{Duration, Instant};
+
+/// Streaming latency recorder with exact quantiles over a bounded sample
+/// buffer (fine for benchmark-scale request counts).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples_us: Vec<u64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+        self.sorted = false;
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples_us.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// q in [0, 1]; nearest-rank.
+    pub fn quantile_ms(&mut self, q: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = ((q * self.samples_us.len() as f64).ceil() as usize)
+            .clamp(1, self.samples_us.len());
+        self.samples_us[rank - 1] as f64 / 1000.0
+    }
+
+    pub fn p50_ms(&mut self) -> f64 {
+        self.quantile_ms(0.50)
+    }
+
+    pub fn p95_ms(&mut self) -> f64 {
+        self.quantile_ms(0.95)
+    }
+
+    pub fn p99_ms(&mut self) -> f64 {
+        self.quantile_ms(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+        self.sorted = false;
+    }
+}
+
+/// Tokens/requests per second over a wall-clock window.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    start: Instant,
+    pub tokens: u64,
+    pub requests: u64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        ThroughputMeter { start: Instant::now(), tokens: 0, requests: 0 }
+    }
+
+    pub fn add_tokens(&mut self, n: u64) {
+        self.tokens += n;
+    }
+
+    pub fn add_request(&mut self) {
+        self.requests += 1;
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        self.requests as f64 / self.elapsed_s().max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_nearest_rank() {
+        let mut h = Histogram::new();
+        for us in [1000u64, 2000, 3000, 4000, 5000, 6000, 7000, 8000, 9000, 10000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 10);
+        assert!((h.mean_ms() - 5.5).abs() < 1e-9);
+        assert_eq!(h.p50_ms(), 5.0);
+        assert_eq!(h.quantile_ms(0.9), 9.0);
+        assert_eq!(h.p99_ms(), 10.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let mut h = Histogram::new();
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.p95_ms(), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = Histogram::new();
+        a.record_us(1000);
+        let mut b = Histogram::new();
+        b.record_us(3000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean_ms() - 2.0).abs() < 1e-9);
+    }
+}

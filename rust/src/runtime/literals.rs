@@ -1,0 +1,58 @@
+//! Literal construction/extraction helpers over the `xla` crate.
+
+use anyhow::{anyhow, Result};
+
+/// f32 literal with the given shape.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+/// i32 literal with the given shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+}
+
+/// Argmax over a flat f32 slice (greedy sampling).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0]), 1);
+        assert_eq!(argmax(&[7.0]), 0);
+    }
+}

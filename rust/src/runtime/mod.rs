@@ -1,0 +1,209 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU client (adapted from /opt/xla-example/load_hlo).
+//!
+//! Key facts encoded here:
+//! * The interchange format is **HLO text** — jax >= 0.5 emits protos with
+//!   64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//!   parser reassigns ids.
+//! * Everything was lowered with `return_tuple=True`, so outputs arrive as
+//!   a 1-level tuple which [`Runtime::execute`] decomposes.
+//! * Executables are compiled once and cached by entry name; weights are
+//!   uploaded once as device-resident [`xla::PjRtBuffer`]s (the serving hot
+//!   path never re-transfers them).
+
+pub mod literals;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::read_json;
+use crate::util::json::Json;
+
+pub use literals::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32, to_vec_i32};
+
+/// A compiled-executable cache over the artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    art_dir: PathBuf,
+    pub manifest: Json,
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over `artifacts/`.
+    pub fn open(art_dir: &Path) -> Result<Runtime> {
+        let manifest = read_json(&art_dir.join("manifest.json"))
+            .context("manifest.json missing — run `make artifacts` first")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            art_dir: art_dir.to_path_buf(),
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Entry names available in the manifest.
+    pub fn entries(&self) -> Vec<String> {
+        self.manifest
+            .get("entries")
+            .ok()
+            .and_then(|e| e.as_obj().ok())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Load + compile (cached) an entry by manifest name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let rel = self
+            .manifest
+            .get("entries")?
+            .get(name)
+            .with_context(|| format!("entry {name:?} not in manifest"))?
+            .get("file")?
+            .as_str()?
+            .to_string();
+        let path = self.art_dir.join(&rel);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let arc = std::sync::Arc::new(exe);
+        self.exes.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute an entry with literal inputs; outputs decomposed from the
+    /// return tuple, fetched to host.
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("detupling {name}: {e:?}"))
+    }
+
+    /// Execute with device-resident buffers (fast path); returns the raw
+    /// output tuple buffer WITHOUT host transfer.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.executable(name)?;
+        let mut out = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        if out.is_empty() || out[0].is_empty() {
+            bail!("{name}: empty execution result");
+        }
+        Ok(out.swap_remove(0))
+    }
+
+    /// Execute with device-resident buffer args; fetch + decompose the
+    /// return tuple to host literals.  Saves re-uploading static args
+    /// (weights) on every call — the decode hot path's dominant cost.
+    pub fn execute_buffers_detuple(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self.execute_buffers(name, args)?;
+        let lit = bufs[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("detupling {name}: {e:?}"))
+    }
+
+    /// Upload a literal to the device.
+    ///
+    /// SAFETY CONTRACT: the CPU PJRT client may ZERO-COPY the literal's
+    /// host memory into the buffer; the literal MUST outlive every
+    /// execution that uses the returned buffer (dropping it first is a
+    /// use-after-free that surfaces as content-dependent segfaults).
+    /// Callers keep the source literal bound in scope across execute calls.
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("uploading literal: {e:?}"))
+    }
+
+    /// Load a model's weights.npz as literals in manifest `param_order`.
+    pub fn load_weights(&self, model_dir: &Path) -> Result<Vec<xla::Literal>> {
+        let order = self.manifest.get("param_order")?.as_str_vec()?;
+        let path = model_dir.join("weights.npz");
+        let named = <xla::Literal as xla::FromRawBytes>::read_npz(&path, &())
+            .map_err(|e| anyhow!("reading {}: {e:?}", path.display()))?;
+        let mut by_name: HashMap<String, xla::Literal> = named
+            .into_iter()
+            .map(|(mut n, l)| {
+                // npz member names carry the ".npy" suffix
+                if let Some(s) = n.strip_suffix(".npy") {
+                    n = s.to_string();
+                }
+                (n, l)
+            })
+            .collect();
+        let mut out = Vec::with_capacity(order.len());
+        for name in &order {
+            let lit = by_name
+                .remove(name)
+                .with_context(|| format!("weights.npz missing {name:?}"))?;
+            // Normalize through vec -> reshape: literals built by the npy
+            // reader (create_from_shape_and_untyped_data) carry no layout,
+            // and executing with device buffers made from them segfaults
+            // inside PJRT.  Rebuilding via vec1().reshape() installs the
+            // default major-to-minor layout and round-trips safely.
+            let dims: Vec<usize> =
+                lit.array_shape().map_err(|e| anyhow!("shape of {name}: {e:?}"))?
+                    .dims()
+                    .iter()
+                    .map(|&d| d as usize)
+                    .collect();
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("read {name}: {e:?}"))?;
+            out.push(literals::lit_f32(&data, &dims)?);
+        }
+        Ok(out)
+    }
+
+    /// Upload weights once; reuse for every call.
+    pub fn weights_to_device(&self, weights: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+        weights.iter().map(|l| self.to_device(l)).collect()
+    }
+
+    /// Shape/dtype signature of an entry (from the manifest, for validation).
+    pub fn entry_arg_shapes(&self, name: &str) -> Result<Vec<(Vec<usize>, String)>> {
+        let args = self
+            .manifest
+            .get("entries")?
+            .get(name)?
+            .get("args")?
+            .as_arr()?
+            .to_vec();
+        let mut out = Vec::new();
+        for a in &args {
+            let pair = a.as_arr()?;
+            if pair.len() != 2 {
+                bail!("bad arg spec");
+            }
+            out.push((pair[0].as_usize_vec()?, pair[1].as_str()?.to_string()));
+        }
+        Ok(out)
+    }
+}

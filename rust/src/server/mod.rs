@@ -1,0 +1,224 @@
+//! TCP front end: newline-delimited JSON over std::net (the offline image
+//! has no tokio; one thread per connection is ample at this scale).
+//!
+//! Request line:
+//! ```json
+//! {"id": 1, "model": "llama_like", "prompt": "...", "policy": "lagkv",
+//!  "sink": 4, "lag": 64, "ratio": 0.5, "max_new": 72}
+//! ```
+//! Response line mirrors [`crate::coordinator::Response`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{CompressionConfig, PolicyKind, ScorerBackend};
+use crate::coordinator::{Request, Response, Router};
+use crate::util::json::{arr, n, obj, s, Json};
+
+pub struct Server {
+    pub router: Arc<Router>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn new(router: Arc<Router>) -> Server {
+        Server { router, next_id: AtomicU64::new(1) }
+    }
+
+    /// Parse one request line.  Unknown fields are ignored; absent fields
+    /// use CompressionConfig defaults.
+    pub fn parse_request(&self, line: &str) -> Result<(String, Request)> {
+        let v = Json::parse(line)?;
+        let model = v
+            .opt("model")
+            .and_then(|m| m.as_str().ok())
+            .unwrap_or("llama_like")
+            .to_string();
+        let mut comp = CompressionConfig::default();
+        if let Some(p) = v.opt("policy") {
+            comp.policy = PolicyKind::parse(p.as_str()?)?;
+        }
+        if let Some(x) = v.opt("sink") {
+            comp.sink = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("lag") {
+            comp.lag = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("ratio") {
+            comp.ratio = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("scorer") {
+            comp.scorer = match x.as_str()? {
+                "xla" => ScorerBackend::Xla,
+                _ => ScorerBackend::Rust,
+            };
+        }
+        if comp.policy == PolicyKind::L2Norm {
+            comp.skip_layers = 2;
+        }
+        comp.validate()?;
+        let id = match v.opt("id") {
+            Some(x) => x.as_i64()? as u64,
+            None => self.next_id.fetch_add(1, Ordering::Relaxed),
+        };
+        let req = Request {
+            id,
+            prompt: v.get("prompt")?.as_str()?.to_string(),
+            compression: comp,
+            max_new: v.opt("max_new").and_then(|x| x.as_usize().ok()).unwrap_or(72),
+            seed: v.opt("seed").and_then(|x| x.as_i64().ok()).unwrap_or(0) as u64,
+        };
+        Ok((model, req))
+    }
+
+    pub fn render_response(resp: &Response) -> String {
+        obj(vec![
+            ("id", n(resp.id as f64)),
+            ("text", s(resp.text.clone())),
+            ("prompt_tokens", n(resp.prompt_tokens as f64)),
+            ("new_tokens", n(resp.tokens.len() as f64)),
+            (
+                "cache_lens",
+                arr(resp.cache_lens.iter().map(|&l| n(l as f64)).collect()),
+            ),
+            ("compression_events", n(resp.compression_events as f64)),
+            ("queue_us", n(resp.queue_us as f64)),
+            ("prefill_us", n(resp.prefill_us as f64)),
+            ("decode_us", n(resp.decode_us as f64)),
+            (
+                "error",
+                resp.error.clone().map(s).unwrap_or(Json::Null),
+            ),
+        ])
+        .to_string()
+    }
+
+    fn handle_conn(&self, stream: TcpStream) -> Result<()> {
+        let peer = stream.peer_addr().ok();
+        let mut writer = stream.try_clone().context("clone stream")?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = match self.parse_request(&line) {
+                Ok((model, req)) => match self.router.generate(&model, req) {
+                    Ok(resp) => Self::render_response(&resp),
+                    Err(e) => obj(vec![("error", s(format!("{e:#}")))]).to_string(),
+                },
+                Err(e) => obj(vec![("error", s(format!("bad request: {e:#}")))]).to_string(),
+            };
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+        }
+        let _ = peer;
+        Ok(())
+    }
+
+    /// Serve until `stop` flips true (checked between accepts).
+    pub fn serve(self: Arc<Self>, port: u16, stop: Arc<AtomicBool>) -> Result<()> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+        listener.set_nonblocking(true)?;
+        eprintln!("lagkv server listening on 127.0.0.1:{port}");
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    let me = self.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = me.handle_conn(stream) {
+                            eprintln!("connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+/// Minimal blocking client for the line protocol (used by serve_demo and
+/// integration tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(port: u16) -> Result<Client> {
+        let stream = TcpStream::connect(("127.0.0.1", port))?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn call(&mut self, request_json: &str) -> Result<Json> {
+        self.writer.write_all(request_json.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_defaults_and_overrides() {
+        let router = Arc::new(Router::start(std::path::PathBuf::from("."), &[]));
+        let srv = Server::new(router);
+        let (model, req) = srv
+            .parse_request(
+                r#"{"prompt": "hello", "policy": "h2o", "lag": 32, "max_new": 5}"#,
+            )
+            .unwrap();
+        assert_eq!(model, "llama_like");
+        assert_eq!(req.compression.policy, PolicyKind::H2O);
+        assert_eq!(req.compression.lag, 32);
+        assert_eq!(req.max_new, 5);
+        assert_eq!(req.prompt, "hello");
+    }
+
+    #[test]
+    fn bad_request_is_error() {
+        let router = Arc::new(Router::start(std::path::PathBuf::from("."), &[]));
+        let srv = Server::new(router);
+        assert!(srv.parse_request("{}").is_err());
+        assert!(srv.parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn response_renders_as_json() {
+        let resp = Response {
+            id: 3,
+            text: "42".into(),
+            tokens: vec![9, 2],
+            prompt_tokens: 10,
+            cache_lens: vec![12, 12],
+            compression_events: 1,
+            queue_us: 5,
+            prefill_us: 6,
+            decode_us: 7,
+            error: None,
+        };
+        let v = Json::parse(&Server::render_response(&resp)).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(v.get("text").unwrap().as_str().unwrap(), "42");
+        assert_eq!(v.get("cache_lens").unwrap().as_usize_vec().unwrap(), vec![12, 12]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Serve-time tokenizer, byte-identical with python/compile/tokenizer.py.
+//!
+//! The vocabulary is loaded from `artifacts/models/<variant>/vocab.json`
+//! (written at train time); golden cross-checks live in
+//! `artifacts/golden/tokenizer.json` and rust/tests/golden.rs.
+//!
+//! Digit runs are segmented by the variant's `digits_per_token`:
+//! 1 ("qwen-like", one token per digit) or 3 ("llama-like", greedy 3-digit
+//! packing) — the mechanism behind the paper's Fig. 2 divergence.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::read_json;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const Q: i32 = 4;
+pub const A: i32 = 5;
+pub const UNK: i32 = 6;
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    pub tokens: Vec<String>,
+    pub token_to_id: HashMap<String, i32>,
+    pub digit1_base: i32,
+    pub digit2_base: i32,
+    pub digit3_base: i32,
+    pub word_base: i32,
+    pub words: Vec<String>,
+}
+
+impl Vocab {
+    pub fn load(path: &Path) -> Result<Vocab> {
+        let v = read_json(path)?;
+        let tokens = v.get("tokens")?.as_str_vec()?;
+        let mut token_to_id = HashMap::with_capacity(tokens.len());
+        for (i, t) in tokens.iter().enumerate() {
+            // first occurrence wins (duplicate surfaces like "0" vs digit3 "000"
+            // never collide, but keep python's setdefault semantics)
+            token_to_id.entry(t.clone()).or_insert(i as i32);
+        }
+        Ok(Vocab {
+            token_to_id,
+            digit1_base: v.get("digit1_base")?.as_i64()? as i32,
+            digit2_base: v.get("digit2_base")?.as_i64()? as i32,
+            digit3_base: v.get("digit3_base")?.as_i64()? as i32,
+            word_base: v.get("word_base")?.as_i64()? as i32,
+            words: v.get("words")?.as_str_vec()?,
+            tokens,
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_digit_token(&self, id: i32) -> bool {
+        id >= self.digit1_base && id < self.word_base
+    }
+
+    pub fn surface(&self, id: i32) -> &str {
+        self.tokens.get(id as usize).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: Vocab,
+    pub digits_per_token: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: Vocab, digits_per_token: usize) -> Result<Tokenizer> {
+        if digits_per_token != 1 && digits_per_token != 3 {
+            bail!("digits_per_token must be 1 or 3");
+        }
+        Ok(Tokenizer { vocab, digits_per_token })
+    }
+
+    pub fn load(model_dir: &Path, digits_per_token: usize) -> Result<Tokenizer> {
+        Tokenizer::new(Vocab::load(&model_dir.join("vocab.json"))?, digits_per_token)
+    }
+
+    pub fn encode_digit_run(&self, run: &str) -> Vec<i32> {
+        debug_assert!(run.bytes().all(|b| b.is_ascii_digit()));
+        let b = run.as_bytes();
+        let mut out = Vec::with_capacity(run.len());
+        if self.digits_per_token == 1 {
+            for &c in b {
+                out.push(self.vocab.digit1_base + (c - b'0') as i32);
+            }
+            return out;
+        }
+        let mut i = 0;
+        while i < b.len() {
+            let rem = b.len() - i;
+            if rem >= 3 {
+                let v = (b[i] - b'0') as i32 * 100 + (b[i + 1] - b'0') as i32 * 10
+                    + (b[i + 2] - b'0') as i32;
+                out.push(self.vocab.digit3_base + v);
+                i += 3;
+            } else if rem == 2 {
+                let v = (b[i] - b'0') as i32 * 10 + (b[i + 1] - b'0') as i32;
+                out.push(self.vocab.digit2_base + v);
+                i += 2;
+            } else {
+                out.push(self.vocab.digit1_base + (b[i] - b'0') as i32);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn encode_symbol(&self, sym: &str, out: &mut Vec<i32>) {
+        if !sym.is_empty() && sym.bytes().all(|b| b.is_ascii_digit()) {
+            out.extend(self.encode_digit_run(sym));
+        } else {
+            out.push(*self.vocab.token_to_id.get(sym).unwrap_or(&UNK));
+        }
+    }
+
+    pub fn encode(&self, text: &str, bos: bool) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() / 4 + 1);
+        if bos {
+            out.push(BOS);
+        }
+        for sym in text.split_whitespace() {
+            self.encode_symbol(sym, &mut out);
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let mut prev_digit = false;
+        for &id in ids {
+            let (surf, is_digit) = if id < 0 || id as usize >= self.vocab.size() {
+                ("<unk>", false)
+            } else {
+                (self.vocab.surface(id), self.vocab.is_digit_token(id))
+            };
+            if is_digit && prev_digit {
+                parts.last_mut().unwrap().push_str(surf);
+            } else {
+                parts.push(surf.to_string());
+            }
+            prev_digit = is_digit;
+        }
+        parts.join(" ")
+    }
+
+    /// Concatenated digit content of a token stream (passkey scoring).
+    pub fn decode_digits(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if self.vocab.is_digit_token(id) {
+                out.push_str(self.vocab.surface(id));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory vocab mirroring python/compile/common.py (subset of words
+    /// is fine for unit tests; golden.rs validates against the artifact).
+    pub fn test_vocab() -> Vocab {
+        let mut tokens: Vec<String> =
+            ["<pad>", "<bos>", "<eos>", "<sep>", "<q>", "<a>", "<unk>"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        for d in 0..10 {
+            tokens.push(format!("{d}"));
+        }
+        for d in 0..100 {
+            tokens.push(format!("{d:02}"));
+        }
+        for d in 0..1000 {
+            tokens.push(format!("{d:03}"));
+        }
+        let words = ["the", "pass", "key", "is", "remember", "it", "fact", "falcon"];
+        for w in words {
+            tokens.push(w.to_string());
+        }
+        let mut token_to_id = HashMap::new();
+        for (i, t) in tokens.iter().enumerate() {
+            token_to_id.entry(t.clone()).or_insert(i as i32);
+        }
+        Vocab {
+            token_to_id,
+            digit1_base: 7,
+            digit2_base: 17,
+            digit3_base: 117,
+            word_base: 1117,
+            words: words.iter().map(|s| s.to_string()).collect(),
+            tokens,
+        }
+    }
+
+    #[test]
+    fn digit_run_lengths_match_fig2_mechanism() {
+        let qwen = Tokenizer::new(test_vocab(), 1).unwrap();
+        let llama = Tokenizer::new(test_vocab(), 3).unwrap();
+        let run: String = "1234567890".repeat(6) + "1234"; // 64 digits
+        assert_eq!(qwen.encode_digit_run(&run).len(), 64);
+        assert_eq!(llama.encode_digit_run(&run).len(), 22);
+    }
+
+    #[test]
+    fn packed_segmentation() {
+        let t = Tokenizer::new(test_vocab(), 3).unwrap();
+        // "1234567" -> "123" "456" "7"
+        let ids = t.encode_digit_run("1234567");
+        assert_eq!(ids, vec![117 + 123, 117 + 456, 7 + 7]);
+        // "12" -> 2-digit slice
+        assert_eq!(t.encode_digit_run("12"), vec![17 + 12]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for dpt in [1usize, 3] {
+            let t = Tokenizer::new(test_vocab(), dpt).unwrap();
+            let text = "the pass key is 9081726354 . remember it";
+            let ids = t.encode(text, false);
+            // "." is not in the test vocab -> <unk>; replace for comparison
+            let decoded = t.decode(&ids);
+            assert_eq!(decoded, text.replace(" . ", " <unk> "));
+            assert_eq!(t.decode_digits(&ids), "9081726354");
+        }
+    }
+
+    #[test]
+    fn bos_and_specials() {
+        let t = Tokenizer::new(test_vocab(), 1).unwrap();
+        let ids = t.encode("<q> pass key <a>", true);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(ids[1], Q);
+        assert_eq!(*ids.last().unwrap(), A);
+    }
+
+    #[test]
+    fn property_digit_roundtrip() {
+        use crate::util::prop;
+        let qwen = Tokenizer::new(test_vocab(), 1).unwrap();
+        let llama = Tokenizer::new(test_vocab(), 3).unwrap();
+        prop::check(200, |g| {
+            let n = g.usize(1, 80);
+            let run: String =
+                (0..n).map(|_| char::from(b'0' + g.usize(0, 9) as u8)).collect();
+            for t in [&qwen, &llama] {
+                let ids = t.encode_digit_run(&run);
+                if t.decode_digits(&ids) != run {
+                    return Err(format!("roundtrip failed for {run}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

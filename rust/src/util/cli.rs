@@ -1,0 +1,125 @@
+//! Tiny argument parser (no `clap` in the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "true";
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|nxt| !nxt.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), FLAG_SET.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    /// Comma-separated list flag, e.g. `--lags 16,64,128`.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["tables", "--fig2", "--lag", "64", "--ratio=0.25", "out.txt"]);
+        assert_eq!(a.positional, vec!["tables", "out.txt"]);
+        assert!(a.has("fig2"));
+        assert_eq!(a.get("lag"), Some("64"));
+        assert_eq!(a.get("ratio"), Some("0.25"));
+    }
+
+    #[test]
+    fn numeric_helpers() {
+        let a = parse(&["--n", "12", "--r", "0.5"]);
+        assert_eq!(a.usize_or("n", 1).unwrap(), 12);
+        assert_eq!(a.f64_or("r", 1.0).unwrap(), 0.5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--lags", "16,64,128"]);
+        assert_eq!(a.list_or("lags", &[]), vec!["16", "64", "128"]);
+    }
+
+    #[test]
+    fn boolean_flag_before_positional_consumes_next() {
+        // documented behaviour: `--flag value` binds value to flag
+        let a = parse(&["--verbose", "serve"]);
+        assert_eq!(a.get("verbose"), Some("serve"));
+    }
+}

@@ -1,0 +1,28 @@
+//! Self-contained substitutes for crates unavailable in the offline image
+//! (see the note in Cargo.toml): JSON, CLI parsing, RNG, property testing,
+//! and a tiny timing helper for the bench harnesses.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Measure wall-clock of `f` over `iters` runs after `warmup` runs;
+/// returns (mean_ns, min_ns).
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut total = 0.0f64;
+    let mut min = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        total += dt;
+        min = min.min(dt);
+    }
+    (total / iters as f64, min)
+}

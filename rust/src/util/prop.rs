@@ -1,0 +1,99 @@
+//! Seeded property-testing harness (no `proptest` in the offline image).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(256, |g| {
+//!     let n = g.usize(1, 100);
+//!     let xs = g.vec_f32(n, -10.0, 10.0);
+//!     // ... assert invariant, or return Err(reason)
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the harness reports the failing case number and the seed so a
+//! `PROP_SEED=<seed> cargo test` rerun reproduces it exactly.
+
+use crate::util::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi_incl: usize) -> usize {
+        self.rng.range(lo, hi_incl + 1)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f32, offset: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() * scale + offset).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `property`.  Panics with seed info on the
+/// first failure.
+pub fn check<F>(cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::seed_from(seed), case };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property failed at case {case} (PROP_SEED={base_seed}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(64, |g| {
+            let n = g.usize(1, 50);
+            let v = g.vec_f32(n, 0.0, 1.0);
+            if v.len() == n {
+                Ok(())
+            } else {
+                Err("length mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        check(16, |g| {
+            let x = g.usize(0, 10);
+            if x < 10 {
+                Ok(())
+            } else {
+                Err(format!("x = {x}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,68 @@
+//! Serve-time workload generators — Rust mirrors of
+//! python/compile/data.py (same templates, same word lists), so the
+//! build-time-trained models are in-distribution at evaluation time.
+
+pub mod longbench;
+pub mod passkey;
+pub mod words;
+
+/// One evaluation item: prompt text (ends with "<a>"), reference answer,
+/// and the scoring rule of its family.
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub family: &'static str,
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Scoring rule per family (see metrics::score).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreKind {
+    PartialDigits,
+    Exact,
+    Coverage,
+    F1,
+}
+
+pub fn score_kind(family: &str) -> ScoreKind {
+    match family {
+        "passkey" | "synthetic" => ScoreKind::PartialDigits,
+        "summarization" => ScoreKind::Coverage,
+        "single_qa" | "multi_qa" | "fewshot" | "code" => ScoreKind::Exact,
+        _ => ScoreKind::F1,
+    }
+}
+
+pub fn score_item(item: &TaskItem, pred: &str) -> f64 {
+    use crate::metrics::score::*;
+    match score_kind(item.family) {
+        ScoreKind::PartialDigits => {
+            let digits: String = pred.chars().filter(|c| c.is_ascii_digit()).collect();
+            partial_match_digits(&digits, &item.answer)
+        }
+        ScoreKind::Exact => exact_match(pred, &item.answer),
+        ScoreKind::Coverage => coverage_score(pred, &item.answer),
+        ScoreKind::F1 => f1_token_score(pred, &item.answer),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoring_dispatch() {
+        let item = TaskItem {
+            family: "passkey",
+            prompt: "x <a>".into(),
+            answer: "1234".into(),
+        };
+        assert_eq!(score_item(&item, "12 99"), 50.0);
+        let item = TaskItem {
+            family: "single_qa",
+            prompt: "x <a>".into(),
+            answer: "blue".into(),
+        };
+        assert_eq!(score_item(&item, " blue "), 100.0);
+    }
+}

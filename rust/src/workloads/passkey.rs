@@ -1,0 +1,97 @@
+//! Needle-in-a-Haystack / passkey-retrieval generator (the paper's §3.3
+//! benchmark): a run of digits hidden at a controlled depth inside filler
+//! text, queried at the end.  Mirror of data.gen_passkey.
+
+use crate::util::rng::Rng;
+
+use super::words::FILLER_WORDS;
+use super::TaskItem;
+
+/// Sentence-ish filler: `n_words` words with a period every 8..14 words.
+pub fn filler(rng: &mut Rng, n_words: usize) -> Vec<String> {
+    let mut out = Vec::with_capacity(n_words + n_words / 8 + 1);
+    let mut gap = rng.range(8, 15);
+    for _ in 0..n_words {
+        out.push(FILLER_WORDS[rng.below(FILLER_WORDS.len())].to_string());
+        gap -= 1;
+        if gap == 0 {
+            out.push(".".to_string());
+            gap = rng.range(8, 15);
+        }
+    }
+    out
+}
+
+pub fn digits(rng: &mut Rng, n: usize) -> String {
+    (0..n).map(|_| char::from(b'0' + rng.below(10) as u8)).collect()
+}
+
+/// Insert `needle` at fractional `depth` of `hay`.
+pub fn splice(hay: &mut Vec<String>, needle: Vec<String>, depth: f64) {
+    let pos = ((depth * hay.len() as f64).round() as usize).min(hay.len());
+    hay.splice(pos..pos, needle);
+}
+
+#[derive(Debug, Clone)]
+pub struct PasskeySpec {
+    pub n_filler: usize,
+    pub n_digits: usize,
+    /// None -> uniform random depth.
+    pub depth: Option<f64>,
+}
+
+impl Default for PasskeySpec {
+    fn default() -> Self {
+        PasskeySpec { n_filler: 300, n_digits: 64, depth: None }
+    }
+}
+
+pub fn gen_passkey(rng: &mut Rng, spec: &PasskeySpec) -> TaskItem {
+    let depth = spec.depth.unwrap_or_else(|| rng.f64());
+    let key = digits(rng, spec.n_digits);
+    let needle: Vec<String> =
+        ["<sep>", "pass", "key", "is", key.as_str(), ".", "remember", "it", "<sep>"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    let mut hay = filler(rng, spec.n_filler);
+    splice(&mut hay, needle, depth);
+    hay.extend(["<q>", "pass", "key", "<a>"].iter().map(|s| s.to_string()));
+    TaskItem { family: "passkey", prompt: hay.join(" "), answer: key }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answer_embedded_in_prompt() {
+        let mut rng = Rng::seed_from(1);
+        let item = gen_passkey(&mut rng, &PasskeySpec::default());
+        assert_eq!(item.answer.len(), 64);
+        assert!(item.prompt.contains(&item.answer));
+        assert!(item.prompt.ends_with("<a>"));
+    }
+
+    #[test]
+    fn depth_controls_position() {
+        let spec0 = PasskeySpec { depth: Some(0.0), ..Default::default() };
+        let spec1 = PasskeySpec { depth: Some(1.0), ..Default::default() };
+        let mut r0 = Rng::seed_from(2);
+        let mut r1 = Rng::seed_from(2);
+        let a = gen_passkey(&mut r0, &spec0);
+        let b = gen_passkey(&mut r1, &spec1);
+        let posa = a.prompt.find("pass key is").unwrap();
+        let posb = b.prompt.find("pass key is").unwrap();
+        assert!(posa < posb);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let spec = PasskeySpec::default();
+        let a = gen_passkey(&mut Rng::seed_from(3), &spec);
+        let b = gen_passkey(&mut Rng::seed_from(3), &spec);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.answer, b.answer);
+    }
+}

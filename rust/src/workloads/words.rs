@@ -1,0 +1,65 @@
+//! Word tables — byte-identical mirror of python/compile/common.py.
+//! Order is load-bearing: generators index into these lists.
+
+pub const FILLER_WORDS: &[&str] = &[
+    "the", "a", "of", "and", "to", "in", "is", "it", "on", "as", "with",
+    "was", "for", "at", "by", "be", "this", "that", "from", "or", "an",
+    "are", "not", "we", "his", "but", "they", "she", "her", "you", "all",
+    "will", "one", "there", "so", "out", "up", "if", "about", "who", "get",
+    "which", "when", "make", "can", "like", "time", "just", "him", "know",
+    "take", "people", "into", "year", "your", "good", "some", "could",
+    "them", "see", "other", "than", "then", "now",
+];
+
+pub const CONTENT_WORDS: &[&str] = &[
+    "apple", "river", "stone", "cloud", "tiger", "maple", "ocean", "candle",
+    "silver", "meadow", "falcon", "ember", "harbor", "lantern", "orchid",
+    "pebble", "quartz", "raven", "saddle", "thistle", "umbra", "velvet",
+    "willow", "zephyr", "anchor", "basil", "cedar", "dahlia", "elm",
+    "fern", "ginger", "hazel", "iris", "jasper", "kelp", "lotus",
+    "mango", "nutmeg", "olive", "pine", "quince", "rose", "sage",
+    "tulip", "violet", "walnut", "yarrow", "zinnia", "blue", "red",
+    "green", "gold", "black", "white", "amber", "coral", "crimson",
+    "indigo", "ivory", "jade", "onyx", "pearl", "ruby", "teal",
+    "alpha", "beta", "gamma", "delta", "omega", "sigma", "kappa", "theta",
+    "north", "south", "east", "west", "spring", "summer", "autumn",
+    "winter", "copper", "iron", "zinc", "nickel", "cobalt", "helium",
+    "neon", "argon", "xenon", "radon", "quark", "boson", "lepton",
+    "hadron", "photon", "proton", "magnet", "prism",
+];
+
+/// Nouns = first 48 content words; values = the rest (mirror of data.py).
+pub fn nouns() -> &'static [&'static str] {
+    &CONTENT_WORDS[..48]
+}
+
+pub fn values() -> &'static [&'static str] {
+    &CONTENT_WORDS[48..]
+}
+
+/// The deterministic few-shot pairing on the value table (data._fewshot_map).
+pub fn fewshot_map(w_idx: usize) -> usize {
+    (w_idx * 7 + 3) % values().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_sizes_match_python() {
+        assert_eq!(FILLER_WORDS.len(), 64);
+        assert_eq!(CONTENT_WORDS.len(), 98);
+        assert_eq!(nouns().len(), 48);
+        assert_eq!(values().len(), 50);
+    }
+
+    #[test]
+    fn fewshot_map_is_permutation_free_but_total() {
+        // every index maps inside the table and the map is deterministic
+        for i in 0..values().len() {
+            assert!(fewshot_map(i) < values().len());
+            assert_eq!(fewshot_map(i), fewshot_map(i));
+        }
+    }
+}

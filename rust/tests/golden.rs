@@ -1,0 +1,97 @@
+//! Golden-vector tests: the pure-Rust scorers, top-k convention, and
+//! tokenizer must agree with the python jnp oracles byte-for-byte-ish.
+//! Vectors are emitted by python/compile/aot.py into artifacts/golden/.
+//!
+//! These tests SKIP (with a loud message) when artifacts are absent so that
+//! `cargo test` works before `make artifacts`; CI runs them after.
+
+use std::path::PathBuf;
+
+use lagkv::compress::scores;
+use lagkv::compress::topk::topk_indices;
+use lagkv::config::read_json;
+use lagkv::tokenizer::Tokenizer;
+
+fn art() -> Option<PathBuf> {
+    let p = PathBuf::from(std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    if p.join("golden").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts/golden (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn scores_match_python_oracle() {
+    let Some(art) = art() else { return };
+    let v = read_json(&art.join("golden/scores.json")).unwrap();
+    let h = v.get("h").unwrap().as_usize().unwrap();
+    let d = v.get("d").unwrap().as_usize().unwrap();
+    for case in v.get("cases").unwrap().as_arr().unwrap() {
+        let l = case.get("l").unwrap().as_usize().unwrap();
+        let kc = case.get("k_cur").unwrap().as_f32_vec().unwrap();
+        let vc = case.get("v_cur").unwrap().as_f32_vec().unwrap();
+        let kr = case.get("k_ref").unwrap().as_f32_vec().unwrap();
+        let vr = case.get("v_ref").unwrap().as_f32_vec().unwrap();
+        let want_lag = case.get("lagkv").unwrap().as_f32_vec().unwrap();
+        let want_local = case.get("localkv").unwrap().as_f32_vec().unwrap();
+        let want_l2 = case.get("l2norm").unwrap().as_f32_vec().unwrap();
+        for head in 0..h {
+            let s = |x: &[f32]| x[head * l * d..(head + 1) * l * d].to_vec();
+            let got = scores::lagkv_score(&s(&kc), &s(&vc), &s(&kr), &s(&vr), l, d);
+            for (i, (&g, &w)) in got.iter().zip(&want_lag[head * l..(head + 1) * l]).enumerate()
+            {
+                assert!(
+                    (g - w).abs() < 2e-5,
+                    "lagkv mismatch l={l} head={head} i={i}: {g} vs {w}"
+                );
+            }
+            let got = scores::localkv_score(&s(&kc), &s(&vc), l, d);
+            for (&g, &w) in got.iter().zip(&want_local[head * l..(head + 1) * l]) {
+                assert!((g - w).abs() < 2e-5, "localkv mismatch: {g} vs {w}");
+            }
+            let got = scores::l2norm_score(&s(&kc), l, d);
+            for (&g, &w) in got.iter().zip(&want_l2[head * l..(head + 1) * l]) {
+                assert!((g - w).abs() < 2e-4, "l2norm mismatch: {g} vs {w}");
+            }
+        }
+    }
+}
+
+#[test]
+fn topk_matches_python_convention() {
+    let Some(art) = art() else { return };
+    let v = read_json(&art.join("golden/topk.json")).unwrap();
+    let scores_flat = v.get("scores").unwrap().as_f32_vec().unwrap();
+    let k = v.get("k").unwrap().as_usize().unwrap();
+    let want = v.get("idx").unwrap().as_usize_vec().unwrap();
+    let h = want.len() / k;
+    let l = scores_flat.len() / h;
+    for head in 0..h {
+        let got = topk_indices(&scores_flat[head * l..(head + 1) * l], k);
+        assert_eq!(got, want[head * k..(head + 1) * k].to_vec(), "head {head}");
+    }
+}
+
+#[test]
+fn tokenizer_matches_python() {
+    let Some(art) = art() else { return };
+    let v = read_json(&art.join("golden/tokenizer.json")).unwrap();
+    for (variant, dpt) in [("llama_like", 3usize), ("qwen_like", 1usize)] {
+        let tok = Tokenizer::load(&art.join("models").join(variant), dpt).unwrap();
+        for case in v.get(variant).unwrap().as_arr().unwrap() {
+            let text = case.get("text").unwrap().as_str().unwrap();
+            let want: Vec<i32> = case
+                .get("ids")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_i64().unwrap() as i32)
+                .collect();
+            let got = tok.encode(text, false);
+            assert_eq!(got, want, "{variant}: {text:?}");
+        }
+    }
+}

@@ -9,20 +9,18 @@ use std::time::Instant;
 use lagkv::engine::Engine;
 use lagkv::harness::{self, EvalOptions};
 
+/// CPU reference backend by default; LAGKV_BACKEND=xla for the PJRT path.
+fn load_engine(variant: &str) -> anyhow::Result<Engine> {
+    lagkv::backend::EngineSpec::from_env()?.build(variant)
+}
+
 fn main() -> anyhow::Result<()> {
-    let art = std::path::PathBuf::from(
-        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
-    if !art.join("manifest.json").exists() {
-        eprintln!("SKIP fig2 bench: run `make artifacts` first");
-        return Ok(());
-    }
     let items: usize =
         std::env::var("LAGKV_BENCH_ITEMS").ok().and_then(|s| s.parse().ok()).unwrap_or(6);
     let opts = EvalOptions { n_items: items, ..Default::default() };
     let engines = vec![
-        Arc::new(Engine::load(&art, "llama_like")?),
-        Arc::new(Engine::load(&art, "qwen_like")?),
+        Arc::new(load_engine("llama_like")?),
+        Arc::new(load_engine("qwen_like")?),
     ];
     std::fs::create_dir_all("target/paper")?;
 

@@ -9,10 +9,12 @@ use std::time::Instant;
 use lagkv::engine::Engine;
 use lagkv::harness::{self, EvalOptions};
 
+/// CPU reference backend by default; LAGKV_BACKEND=xla for the PJRT path.
+fn load_engine(variant: &str) -> anyhow::Result<Engine> {
+    lagkv::backend::EngineSpec::from_env()?.build(variant)
+}
+
 fn main() -> anyhow::Result<()> {
-    let art = std::path::PathBuf::from(
-        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
     std::fs::create_dir_all("target/paper")?;
 
     // Model-free pieces always run.
@@ -24,14 +26,10 @@ fn main() -> anyhow::Result<()> {
     println!("{}", sim.render());
     std::fs::write("target/paper/sim_fig5.txt", sim.render())?;
 
-    if !art.join("manifest.json").exists() {
-        eprintln!("SKIP model-backed fig5/h2o: run `make artifacts` first");
-        return Ok(());
-    }
     let items: usize =
         std::env::var("LAGKV_BENCH_ITEMS").ok().and_then(|s| s.parse().ok()).unwrap_or(6);
     let opts = EvalOptions { n_items: items, ..Default::default() };
-    let engine = Engine::load(&art, "llama_like")?;
+    let engine = load_engine("llama_like")?;
     let t0 = Instant::now();
     let fig5 = harness::fig5(&engine, 128, &opts)?;
     println!("{}", fig5.render());

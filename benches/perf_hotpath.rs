@@ -17,10 +17,16 @@ use lagkv::compress::{maybe_compress, scores, topk};
 use lagkv::config::{CompressionConfig, PolicyKind};
 use lagkv::engine::{Engine, SlotState};
 use lagkv::kvcache::KvCache;
-use lagkv::runtime::literals::argmax;
+use lagkv::util::argmax;
 use lagkv::util::rng::Rng;
 use lagkv::util::time_it;
 use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
+
+/// Backend selection for engine-level benches: the hermetic CPU reference
+/// backend by default, the PJRT artifact path with LAGKV_BACKEND=xla.
+fn load_engine(variant: &str) -> anyhow::Result<Engine> {
+    lagkv::backend::EngineSpec::from_env()?.build(variant)
+}
 
 fn row(name: &str, mean_ns: f64, note: &str) {
     let (val, unit) = if mean_ns >= 1e6 {
@@ -105,8 +111,7 @@ fn bench_kvcache() {
     row("all_padded export (400 rows -> 512)", mean, "");
 }
 
-fn bench_engine(art: &std::path::Path) -> anyhow::Result<()> {
-    let engine = Engine::load(art, "llama_like")?;
+fn bench_engine(engine: &Engine) -> anyhow::Result<()> {
     let mut rng = Rng::seed_from(4);
     let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 260, n_digits: 32, depth: None });
     let ids = engine.tokenizer.encode(&item.prompt, true);
@@ -167,13 +172,12 @@ fn main() -> anyhow::Result<()> {
     bench_scores();
     bench_topk();
     bench_kvcache();
-    let art = std::path::PathBuf::from(
-        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
-    if art.join("manifest.json").exists() {
-        bench_engine(&art)?;
-    } else {
-        eprintln!("SKIP engine benches: run `make artifacts` first");
+    match load_engine("llama_like") {
+        Ok(engine) => {
+            println!("-- engine benches ({}) --", engine.backend().platform());
+            bench_engine(&engine)?;
+        }
+        Err(e) => eprintln!("SKIP engine benches: {e:#}"),
     }
     Ok(())
 }

@@ -5,8 +5,8 @@
 //! cargo run --release --example longbench_suite -- --items 8 --lag 128 --ratio 0.5
 //! ```
 
+use lagkv::backend::EngineSpec;
 use lagkv::config::PolicyKind;
-use lagkv::engine::Engine;
 use lagkv::harness::{cfg, eval_family, EvalOptions};
 use lagkv::metrics::Table;
 use lagkv::util::cli::Args;
@@ -14,11 +14,10 @@ use lagkv::workloads::longbench;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let art = lagkv::config::artifacts_dir(&args);
     let model = args.get_or("model", "llama_like");
     let lag = args.usize_or("lag", 128)?;
     let ratio = args.f64_or("ratio", 0.5)?;
-    let engine = Engine::load(&art, model)?;
+    let engine = EngineSpec::from_args(&args)?.build(model)?;
     let opts = EvalOptions { n_items: args.usize_or("items", 8)?, ..Default::default() };
 
     let mut table = Table::new(

@@ -5,8 +5,8 @@
 //! cargo run --release --example passkey_retrieval -- --items 10 --lag 64 --ratio 0.25
 //! ```
 
+use lagkv::backend::EngineSpec;
 use lagkv::config::PolicyKind;
-use lagkv::engine::Engine;
 use lagkv::harness::{cfg, EvalOptions};
 use lagkv::metrics::Table;
 use lagkv::util::cli::Args;
@@ -16,12 +16,11 @@ use lagkv::workloads::score_item;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let art = lagkv::config::artifacts_dir(&args);
     let model = args.get_or("model", "llama_like");
     let lag = args.usize_or("lag", 64)?;
     let ratio = args.f64_or("ratio", 0.25)?;
     let items = args.usize_or("items", 10)?;
-    let engine = Engine::load(&art, model)?;
+    let engine = EngineSpec::from_args(&args)?.build(model)?;
 
     let mut table = Table::new(
         &format!("64-digit passkey retrieval, {model}, S=4, L={lag}, r={ratio}"),

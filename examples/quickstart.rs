@@ -1,22 +1,23 @@
 //! Quickstart: load a model, generate with LagKV compression, inspect the
-//! cache.  Run with:
+//! cache.  Runs hermetically on the CPU reference backend:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
+//! # or, with the PJRT artifact path:
+//! make artifacts && cargo run --release --features xla --example quickstart -- --backend xla
 //! ```
 
+use lagkv::backend::EngineSpec;
 use lagkv::config::{CompressionConfig, PolicyKind};
-use lagkv::engine::Engine;
+use lagkv::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
-    let art = std::path::PathBuf::from(
-        std::env::var("LAGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
-    let engine = Engine::load(&art, "llama_like")?;
+    let args = Args::from_env()?;
+    let engine = EngineSpec::from_args(&args)?.build("llama_like")?;
     println!(
         "loaded {} on {}: {} layers, {} kv heads, context {}",
         engine.variant,
-        engine.rt.platform(),
+        engine.backend().platform(),
         engine.dims.n_layers,
         engine.dims.n_kv_heads,
         engine.tmax

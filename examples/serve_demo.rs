@@ -25,14 +25,14 @@ use lagkv::workloads::score_item;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let art = lagkv::config::artifacts_dir(&args);
+    let spec = lagkv::backend::EngineSpec::from_args(&args)?;
     let port = args.usize_or("port", 7199)? as u16;
     let n_requests = args.usize_or("requests", 24)?;
     let n_clients = args.usize_or("clients", 6)?;
 
     // Boot the stack.
     let models = vec!["llama_like".to_string(), "qwen_like".to_string()];
-    let router = Arc::new(Router::start(art, &models));
+    let router = Arc::new(Router::start(spec, &models));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));
     {

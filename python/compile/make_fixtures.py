@@ -1,0 +1,122 @@
+"""Emit the small hermetic golden fixtures for `cargo test`.
+
+Unlike artifacts/golden/* (written by aot.py during `make artifacts`),
+these vectors are tiny, checked into the repo at rust/tests/fixtures/, and
+validated by rust/tests/golden.rs on every `cargo test` — no artifacts, no
+XLA.  Inputs are quantized to 4 decimals so the JSON stays small and both
+languages parse the exact same decimal strings (f64 -> f32 double-rounding
+is identical on both sides).
+
+Regenerate with:
+
+    cd python && python -m compile.make_fixtures
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from compile import tokenizer as T
+from compile.kernels import ref as R
+
+H = 2  # heads per fixture case
+D = 8  # channels per head (small on purpose; oracles are shape-generic)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures")
+
+
+def quantized(rng: np.random.Generator, shape, scale: float, offset: float) -> np.ndarray:
+    x = rng.standard_normal(shape) * scale + offset
+    return np.round(x, 4).astype(np.float32)
+
+
+def emit_scores() -> None:
+    rng = np.random.default_rng(20250727)
+    cases = []
+    for l in (4, 8, 16):
+        shape = (H, l, D)
+        kc = quantized(rng, shape, 1.0, 0.0)
+        vc = quantized(rng, shape, 2.0, 1.0)
+        kr = quantized(rng, shape, 0.5, -3.0)
+        vr = quantized(rng, shape, 1.0, 0.0)
+        cases.append(
+            {
+                "l": l,
+                "k_cur": kc.ravel().tolist(),
+                "v_cur": vc.ravel().tolist(),
+                "k_ref": kr.ravel().tolist(),
+                "v_ref": vr.ravel().tolist(),
+                "lagkv": np.asarray(R.lagkv_scores_ref(kc, vc, kr, vr)).ravel().tolist(),
+                "localkv": np.asarray(R.localkv_scores_ref(kc, vc)).ravel().tolist(),
+                "l2norm": np.asarray(R.l2norm_scores_ref(kc)).ravel().tolist(),
+            }
+        )
+    # adversarial: constant reference channels (EPS guard parity)
+    l = 8
+    kc = quantized(rng, (H, l, D), 1.0, 0.0)
+    vc = quantized(rng, (H, l, D), 1.0, 0.0)
+    kr = np.full((H, l, D), 2.5, np.float32)
+    vr = np.full((H, l, D), -1.25, np.float32)
+    cases.append(
+        {
+            "l": l,
+            "k_cur": kc.ravel().tolist(),
+            "v_cur": vc.ravel().tolist(),
+            "k_ref": kr.ravel().tolist(),
+            "v_ref": vr.ravel().tolist(),
+            "lagkv": np.asarray(R.lagkv_scores_ref(kc, vc, kr, vr)).ravel().tolist(),
+            "localkv": np.asarray(R.localkv_scores_ref(kc, vc)).ravel().tolist(),
+            "l2norm": np.asarray(R.l2norm_scores_ref(kc)).ravel().tolist(),
+        }
+    )
+    with open(os.path.join(OUT_DIR, "scores.json"), "w") as f:
+        json.dump({"h": H, "d": D, "cases": cases}, f)
+
+
+def emit_topk() -> None:
+    rng = np.random.default_rng(7)
+    scores = np.round(rng.standard_normal((3, 16)), 4).astype(np.float32)
+    # row 2 carries deliberate ties: the earlier index must win
+    scores[2, :] = np.float32(0.5)
+    scores[2, 3] = np.float32(0.75)
+    scores[2, 11] = np.float32(0.75)
+    idx = np.asarray(R.topk_indices_ref(scores, 5))
+    with open(os.path.join(OUT_DIR, "topk.json"), "w") as f:
+        json.dump(
+            {"scores": scores.ravel().tolist(), "k": 5, "idx": idx.ravel().tolist()}, f
+        )
+
+
+def emit_tokenizer() -> None:
+    texts = [
+        "the pass key is 1234567890 . remember it",
+        "<q> pass key <a>",
+        "code 42 is 87654321 .",
+        "fact the falcon is crimson .",
+        "<sep> pass key is 98765432109876543210 . remember it <sep>",
+        "call def return ( ) : in: out: doc item",
+        "unknownword 7 007 1 22 333 4444",
+    ]
+    tok_cases = {}
+    for variant in ("llama_like", "qwen_like"):
+        tok = T.for_variant(variant)
+        tok_cases[variant] = [{"text": s, "ids": tok.encode(s, bos=False)} for s in texts]
+    with open(os.path.join(OUT_DIR, "tokenizer.json"), "w") as f:
+        json.dump(tok_cases, f)
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    emit_scores()
+    emit_topk()
+    emit_tokenizer()
+    for name in ("scores.json", "topk.json", "tokenizer.json"):
+        path = os.path.join(OUT_DIR, name)
+        print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

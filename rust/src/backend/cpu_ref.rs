@@ -1,0 +1,362 @@
+//! Pure-Rust reference backend: a synthetic model that exercises the whole
+//! serving stack with zero artifacts and zero native libraries.
+//!
+//! KV rows are a *pure function* of `(token id, absolute position)` with the
+//! two statistical properties the paper's mechanism rests on (§1):
+//!
+//! * **channel-wise structure** — fixed per-channel means plus a slow
+//!   positional drift, so a lag-reference chunk's min/max band is a stable
+//!   normalizer for its neighbor chunk;
+//! * **locality breakers** — digit tokens (passkey material) get large
+//!   random excursions, the incoherence signal LagKV scores highly.
+//!
+//! Purity matters: prefill and decode produce byte-identical rows for the
+//! same `(token, position)`, so streamed and batched execution agree and
+//! the "batched decode == solo decode" and "prefill+compress == stream+
+//! compress" invariants hold exactly, like the real AOT model.
+//!
+//! The language-model head is a deterministic toy: the next token is a
+//! hash of `(token, position)` over the word table, with a rare EOS.  It
+//! is *not* meant to solve retrieval tasks — task-quality orderings are
+//! measured model-free in [`crate::sim`] — it exists so generation,
+//! continuous batching, compression cadence, and the server all run
+//! end-to-end under `cargo test` on a clean machine.
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelDims;
+use crate::tokenizer::{Tokenizer, Vocab, EOS};
+use crate::util::rng::Rng;
+
+use super::{digits_per_token, DecodeBatch, DecodeOutput, ExecBackend, PrefillOutput};
+
+/// splitmix64-style mixer: decorrelates `(token, position)` seeds.
+fn mix2(a: u64, b: u64) -> u64 {
+    let mut z = a
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add(b)
+        .wrapping_add(0x632be59bd9b4e019);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+pub struct CpuRefBackend {
+    dims: ModelDims,
+    tmax: usize,
+    prefill_buckets: Vec<usize>,
+    decode_buckets: Vec<usize>,
+    /// Fixed per-channel means, `[n_layers * n_kv_heads * d_head]`.
+    k_mean: Vec<f32>,
+    v_mean: Vec<f32>,
+    /// Token-id range of digit tokens (the salient/locality-breaking ids).
+    digit_lo: i32,
+    digit_hi: i32,
+    word_base: usize,
+    n_words: usize,
+}
+
+impl CpuRefBackend {
+    /// Build the backend plus the matching tokenizer for a model variant
+    /// ("llama_like" packs 3 digits per token, "qwen_like" packs 1).
+    pub fn load(variant: &str) -> Result<(CpuRefBackend, Tokenizer)> {
+        let tokenizer = Tokenizer::new(Vocab::synthetic(), digits_per_token(variant)?)?;
+        let backend = CpuRefBackend::new(&tokenizer.vocab);
+        Ok((backend, tokenizer))
+    }
+
+    pub fn new(vocab: &Vocab) -> CpuRefBackend {
+        let dims = ModelDims {
+            vocab_size: vocab.size(),
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            max_seq: 640,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        };
+        let w = dims.n_layers * dims.n_kv_heads * dims.d_head;
+        let mut rng = Rng::seed_from(0xC0DE);
+        let k_mean: Vec<f32> = (0..w).map(|_| rng.normal() * 1.5).collect();
+        let v_mean: Vec<f32> = (0..w).map(|_| rng.normal() * 1.5).collect();
+        CpuRefBackend {
+            tmax: dims.max_seq,
+            prefill_buckets: vec![128, 256, 512, 640],
+            decode_buckets: vec![1, 4],
+            k_mean,
+            v_mean,
+            digit_lo: vocab.digit1_base,
+            digit_hi: vocab.word_base,
+            word_base: vocab.word_base as usize,
+            n_words: vocab.words.len(),
+            dims,
+        }
+    }
+
+    fn row_width(&self) -> usize {
+        self.dims.n_layers * self.dims.n_kv_heads * self.dims.d_head
+    }
+
+    fn is_salient(&self, token: i32) -> bool {
+        token >= self.digit_lo && token < self.digit_hi
+    }
+
+    /// One token's K/V rows for every (layer, head): `[n_layers,
+    /// n_kv_heads, d_head]` row-major, a pure function of `(token, pos)`.
+    fn kv_row(&self, token: i32, pos: i32) -> (Vec<f32>, Vec<f32>) {
+        let w = self.row_width();
+        let boost = if self.is_salient(token) { 3.0 } else { 0.0 };
+        let drift = ((pos as f32) * 0.05).sin() * 0.4;
+        let mut rng = Rng::seed_from(mix2(token as u32 as u64, pos as u32 as u64));
+        let mut k = Vec::with_capacity(w);
+        let mut v = Vec::with_capacity(w);
+        for c in 0..w {
+            let nk = rng.normal();
+            let nv = rng.normal();
+            let sk = rng.normal();
+            let sv = rng.normal();
+            k.push(self.k_mean[c] + drift + 0.35 * nk + boost * sk);
+            v.push(self.v_mean[c] - 0.5 * drift + 0.35 * nv + boost * sv);
+        }
+        (k, v)
+    }
+
+    /// Deterministic toy LM head: `[vocab]` logits with a unique argmax.
+    fn next_logits(&self, token: i32, pos: i32) -> Vec<f32> {
+        let vocab = self.dims.vocab_size;
+        let mut logits = vec![-4.0f32; vocab];
+        let h = mix2(token as u32 as u64, (pos as u32 as u64) ^ 0xABCD_1234);
+        let next = if h % 37 == 0 {
+            EOS as usize
+        } else {
+            self.word_base + (h >> 8) as usize % self.n_words
+        };
+        logits[next] = 6.0;
+        // mild secondary structure so the distribution is not one-hot
+        logits[(h >> 32) as usize % vocab] += 0.5;
+        logits
+    }
+
+    /// Synthetic attention column masses over `len` valid rows: sink +
+    /// recency dominate; digit rows (when known) are down-weighted, the
+    /// §3.3 "pre-query attention cannot foresee the passkey" premise.
+    fn attn_masses(&self, len: usize, salient: impl Fn(usize) -> bool) -> Vec<f32> {
+        let mut row = vec![0.0f32; len];
+        let mut total = 0.0f32;
+        for (r, slot) in row.iter_mut().enumerate() {
+            let sink = if r < 4 { 3.0 } else { 0.0 };
+            let recency = (-((len - 1 - r) as f32) / 24.0).exp();
+            let mut m = sink + recency + 0.02;
+            if salient(r) {
+                m *= 0.4;
+            }
+            *slot = m;
+            total += m;
+        }
+        if total > 0.0 {
+            for slot in row.iter_mut() {
+                *slot /= total;
+            }
+        }
+        row
+    }
+}
+
+impl ExecBackend for CpuRefBackend {
+    fn kind(&self) -> &'static str {
+        "cpu-ref"
+    }
+
+    fn platform(&self) -> String {
+        "cpu-ref (synthetic, hermetic)".to_string()
+    }
+
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn tmax(&self) -> usize {
+        self.tmax
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.prefill_buckets
+    }
+
+    fn decode_buckets(&self) -> &[usize] {
+        &self.decode_buckets
+    }
+
+    fn prefill(&self, tokens: &[i32], true_len: usize) -> Result<PrefillOutput> {
+        let bucket = tokens.len();
+        if true_len == 0 || true_len > bucket {
+            bail!("prefill: true_len {true_len} outside bucket {bucket}");
+        }
+        let (nl, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
+        let mut k = vec![0.0f32; nl * hkv * bucket * dh];
+        let mut v = vec![0.0f32; nl * hkv * bucket * dh];
+        for (t, &tok) in tokens.iter().enumerate().take(true_len) {
+            let (kr, vr) = self.kv_row(tok, t as i32);
+            for lh in 0..nl * hkv {
+                let src = lh * dh;
+                let dst = (lh * bucket + t) * dh;
+                k[dst..dst + dh].copy_from_slice(&kr[src..src + dh]);
+                v[dst..dst + dh].copy_from_slice(&vr[src..src + dh]);
+            }
+        }
+        let masses = self.attn_masses(true_len, |r| self.is_salient(tokens[r]));
+        let mut attn_sums = vec![0.0f32; nl * hkv * bucket];
+        for lh in 0..nl * hkv {
+            attn_sums[lh * bucket..lh * bucket + true_len].copy_from_slice(&masses);
+        }
+        let logits = self.next_logits(tokens[true_len - 1], (true_len - 1) as i32);
+        Ok(PrefillOutput { logits, k, v, attn_sums })
+    }
+
+    fn decode(&self, batch: &DecodeBatch<'_>) -> Result<DecodeOutput> {
+        let (nl, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
+        let (b, tmax) = (batch.batch, self.tmax);
+        if batch.k.len() != nl * b * hkv * tmax * dh
+            || batch.lens.len() != nl * b
+            || batch.tokens.len() != b
+            || batch.pos.len() != b
+        {
+            bail!("decode: malformed batch shapes (b={b})");
+        }
+        let vocab = self.dims.vocab_size;
+        let mut logits = vec![0.0f32; b * vocab];
+        let mut k_new = vec![0.0f32; nl * b * hkv * dh];
+        let mut v_new = vec![0.0f32; nl * b * hkv * dh];
+        let mut attn_rows = vec![0.0f32; nl * b * hkv * tmax];
+        for s in 0..b {
+            let (kr, vr) = self.kv_row(batch.tokens[s], batch.pos[s]);
+            for layer in 0..nl {
+                for h in 0..hkv {
+                    let src = (layer * hkv + h) * dh;
+                    let dst = (((layer * b) + s) * hkv + h) * dh;
+                    k_new[dst..dst + dh].copy_from_slice(&kr[src..src + dh]);
+                    v_new[dst..dst + dh].copy_from_slice(&vr[src..src + dh]);
+                }
+                let len = (batch.lens[layer * b + s].max(0) as usize).min(tmax);
+                if len > 0 {
+                    // Cached-row token identity is gone after compaction;
+                    // the surrogate down-weights nothing here.
+                    let masses = self.attn_masses(len, |_| false);
+                    for h in 0..hkv {
+                        let dst = (((layer * b) + s) * hkv + h) * tmax;
+                        attn_rows[dst..dst + len].copy_from_slice(&masses);
+                    }
+                }
+            }
+            logits[s * vocab..(s + 1) * vocab]
+                .copy_from_slice(&self.next_logits(batch.tokens[s], batch.pos[s]));
+        }
+        Ok(DecodeOutput { logits, k_new, v_new, attn_rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::argmax;
+
+    fn backend() -> CpuRefBackend {
+        CpuRefBackend::load("llama_like").unwrap().0
+    }
+
+    #[test]
+    fn kv_rows_are_pure_functions() {
+        let b = backend();
+        let (k1, v1) = b.kv_row(42, 7);
+        let (k2, v2) = b.kv_row(42, 7);
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+        let (k3, _) = b.kv_row(42, 8);
+        assert_ne!(k1, k3, "different positions must differ");
+    }
+
+    #[test]
+    fn digit_tokens_are_locality_breakers() {
+        let b = backend();
+        let spread = |xs: &[f32]| -> f32 {
+            let m = xs.iter().sum::<f32>() / xs.len() as f32;
+            xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32
+        };
+        // average over several tokens: digit rows carry far more energy
+        let mut digit = 0.0;
+        let mut word = 0.0;
+        for i in 0..8 {
+            let (kd, _) = b.kv_row(b.digit_lo + i, 100 + i);
+            let (kw, _) = b.kv_row(b.word_base as i32 + i, 100 + i);
+            digit += spread(&kd);
+            word += spread(&kw);
+        }
+        assert!(digit > 4.0 * word, "digit spread {digit} vs word {word}");
+    }
+
+    #[test]
+    fn prefill_and_decode_rows_agree() {
+        // The purity contract: the row a token gets at prefill equals the
+        // row it would get decoded at the same absolute position.
+        let b = backend();
+        let dims = b.dims().clone();
+        let (nl, hkv, dh) = (dims.n_layers, dims.n_kv_heads, dims.d_head);
+        let tokens = vec![1, 9, 12, 1200, 7];
+        let mut padded = tokens.clone();
+        padded.resize(128, 0);
+        let pre = b.prefill(&padded, tokens.len()).unwrap();
+
+        let tmax = b.tmax();
+        let k = vec![0.0f32; nl * hkv * tmax * dh];
+        let lens = vec![0i32; nl];
+        let batch = DecodeBatch {
+            batch: 1,
+            k: &k,
+            v: &k,
+            lens: &lens,
+            pos: &[3],
+            tokens: &[tokens[3]],
+        };
+        let dec = b.decode(&batch).unwrap();
+        for layer in 0..nl {
+            for h in 0..hkv {
+                let lh = layer * hkv + h;
+                let pre_row = &pre.k[(lh * 128 + 3) * dh..(lh * 128 + 4) * dh];
+                let dec_row = &dec.k_new[lh * dh..(lh + 1) * dh];
+                assert_eq!(pre_row, dec_row, "layer {layer} head {h}");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_have_unique_argmax_in_vocab() {
+        let b = backend();
+        for (tok, pos) in [(1, 0), (2000, 55), (9, 600)] {
+            let l = b.next_logits(tok, pos);
+            assert_eq!(l.len(), b.dims().vocab_size);
+            let best = argmax(&l);
+            let second = l
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != best)
+                .map(|(_, &x)| x)
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert!(l[best] > second, "argmax must be strict");
+        }
+    }
+
+    #[test]
+    fn attention_surrogate_is_normalized_distribution() {
+        let b = backend();
+        let m = b.attn_masses(40, |r| r >= 10 && r < 18);
+        assert_eq!(m.len(), 40);
+        let sum: f32 = m.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "sum {sum}");
+        // sink rows outweigh mid rows; down-weighted rows lose mass
+        assert!(m[0] > m[20]);
+        assert!(m[12] < m[20] || m[20] == m[12], "salient rows are damped");
+    }
+}

@@ -1,0 +1,238 @@
+//! Execution-backend seam between the serving layers and the model.
+//!
+//! Everything above this line — [`crate::engine`], [`crate::coordinator`],
+//! [`crate::server`], the CLI — speaks only [`ExecBackend`]: *"run prefill
+//! over these padded tokens"*, *"run one decode step over this batch"*.
+//! What executes underneath is a backend choice:
+//!
+//! * [`cpu_ref::CpuRefBackend`] (default, hermetic) — a pure-Rust synthetic
+//!   model that emits KV streams with the paper's two statistical
+//!   properties (token-wise locality, channel-wise structure; same recipe
+//!   as [`crate::sim`]) and a deterministic toy language model head.  It
+//!   exercises generation, continuous batching, and the recursive
+//!   compression driver end-to-end with zero artifacts and zero native
+//!   libraries — this is what makes `cargo test` a first-class gate.
+//! * [`xla::XlaBackend`] (`--features xla`) — the PJRT path: AOT-lowered
+//!   HLO executables produced by `make artifacts`, plus the L1 Pallas
+//!   scoring kernel behind [`crate::compress::Scorer`].
+//!
+//! LagKV itself never needs attention weights, so the entire compression
+//! stack (scores → topk → policy → driver → kvcache) is backend-agnostic;
+//! the seam is exactly the paper's "easy integration to the mainstream
+//! inference platform" claim expressed as a trait.
+
+pub mod cpu_ref;
+#[cfg(feature = "xla")]
+pub mod xla;
+#[cfg(feature = "xla")]
+pub mod xla_scorer;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::compress::Scorer;
+use crate::config::{artifacts_dir, CompressionConfig, ModelDims};
+use crate::engine::Engine;
+use crate::util::cli::Args;
+
+/// Output of one prefill execution over a padded token bucket.
+#[derive(Debug, Clone)]
+pub struct PrefillOutput {
+    /// Last real token's next-token logits, `[vocab]`.
+    pub logits: Vec<f32>,
+    /// Keys, `[n_layers, n_kv_heads, bucket, d_head]` row-major.
+    pub k: Vec<f32>,
+    /// Values, same layout as `k`.
+    pub v: Vec<f32>,
+    /// Accumulated attention column sums, `[n_layers, n_kv_heads, bucket]`
+    /// (the H2O statistic; zeros are fine for attention-free backends).
+    pub attn_sums: Vec<f32>,
+}
+
+/// Input of one batched decode step.  All slices use the fixed-shape
+/// layouts the engine assembles from the per-sequence caches.
+pub struct DecodeBatch<'a> {
+    pub batch: usize,
+    /// Padded keys, `[n_layers, batch, n_kv_heads, tmax, d_head]`.
+    pub k: &'a [f32],
+    /// Padded values, same layout as `k`.
+    pub v: &'a [f32],
+    /// Valid row counts, `[n_layers, batch]`.
+    pub lens: &'a [i32],
+    /// Absolute position of the token being decoded, `[batch]`.
+    pub pos: &'a [i32],
+    /// Token ids being decoded, `[batch]`.
+    pub tokens: &'a [i32],
+}
+
+/// Output of one batched decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    /// Next-token logits, `[batch, vocab]`.
+    pub logits: Vec<f32>,
+    /// New key rows, `[n_layers, batch, n_kv_heads, d_head]`.
+    pub k_new: Vec<f32>,
+    /// New value rows, same layout as `k_new`.
+    pub v_new: Vec<f32>,
+    /// This step's attention rows, `[n_layers, batch, n_kv_heads, tmax]`,
+    /// aligned with current cache row order (H2O accumulation).
+    pub attn_rows: Vec<f32>,
+}
+
+/// A model execution backend: prefill/decode/score, nothing else.
+///
+/// NOT necessarily `Send` (the PJRT client is thread-pinned); backends are
+/// constructed on the thread that drives them, exactly like the engines
+/// they power.
+pub trait ExecBackend {
+    /// Short machine name ("cpu-ref", "xla").
+    fn kind(&self) -> &'static str;
+
+    /// Human-readable platform string (e.g. PJRT platform name).
+    fn platform(&self) -> String {
+        self.kind().to_string()
+    }
+
+    /// Loadable executable entry names (artifact inventory; may be empty).
+    fn entries(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn dims(&self) -> &ModelDims;
+
+    /// Maximum cache rows per (layer, head) the decode path supports.
+    fn tmax(&self) -> usize;
+
+    /// Ascending prefill token buckets.
+    fn prefill_buckets(&self) -> &[usize];
+
+    /// Ascending decode batch buckets.
+    fn decode_buckets(&self) -> &[usize];
+
+    /// Run prefill.  `tokens` is padded to a bucket length; only the first
+    /// `true_len` entries are real.
+    fn prefill(&self, tokens: &[i32], true_len: usize) -> Result<PrefillOutput>;
+
+    /// Run one decode step over a fixed-shape batch.
+    fn decode(&self, batch: &DecodeBatch<'_>) -> Result<DecodeOutput>;
+
+    /// Backend-accelerated scorer for this compression config, if the
+    /// backend provides one (`None` -> the engine falls back to the
+    /// pure-Rust policy scorer).
+    fn scorer(&self, cfg: &CompressionConfig, seed: u64) -> Option<Box<dyn Scorer>> {
+        let _ = (cfg, seed);
+        None
+    }
+}
+
+/// Which backend family to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Hermetic pure-Rust synthetic backend (default).
+    CpuRef,
+    /// PJRT/HLO artifact backend (`--features xla` + `make artifacts`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "cpu" | "cpu-ref" | "cpuref" | "ref" => BackendKind::CpuRef,
+            "xla" | "pjrt" => BackendKind::Xla,
+            other => bail!("unknown backend {other:?} (cpu|xla)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::CpuRef => "cpu",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Digit-run segmentation width for a model variant (the paper's Fig. 2
+/// llama-vs-qwen tokenizer mechanism).
+pub fn digits_per_token(variant: &str) -> Result<usize> {
+    match variant {
+        "llama_like" => Ok(3),
+        "qwen_like" => Ok(1),
+        other => bail!("unknown model variant {other:?}"),
+    }
+}
+
+/// Everything needed to construct an [`Engine`] on any thread: plain data,
+/// `Clone + Send`.  The coordinator router moves one of these into each
+/// per-model thread and builds the engine there (PJRT handles are not
+/// `Send`, so engines never cross threads).
+#[derive(Debug, Clone)]
+pub struct EngineSpec {
+    pub backend: BackendKind,
+    pub art_dir: PathBuf,
+}
+
+impl EngineSpec {
+    /// Hermetic default: CPU reference backend, conventional artifact dir.
+    pub fn cpu() -> EngineSpec {
+        EngineSpec { backend: BackendKind::CpuRef, art_dir: PathBuf::from("artifacts") }
+    }
+
+    /// From CLI flags: `--backend cpu|xla` (default cpu), `--artifacts DIR`.
+    pub fn from_args(args: &Args) -> Result<EngineSpec> {
+        let backend = match args.get("backend") {
+            Some(s) => BackendKind::parse(s)?,
+            None => BackendKind::CpuRef,
+        };
+        Ok(EngineSpec { backend, art_dir: artifacts_dir(args) })
+    }
+
+    /// From the environment (bench targets, which take no CLI flags):
+    /// `LAGKV_BACKEND=cpu|xla` (default cpu), `LAGKV_ARTIFACTS=DIR`.
+    pub fn from_env() -> Result<EngineSpec> {
+        let backend = match std::env::var("LAGKV_BACKEND") {
+            Ok(v) => BackendKind::parse(&v)?,
+            Err(_) => BackendKind::CpuRef,
+        };
+        let art_dir = std::env::var("LAGKV_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Ok(EngineSpec { backend, art_dir })
+    }
+
+    /// Construct the engine for one model variant.
+    pub fn build(&self, variant: &str) -> Result<Engine> {
+        match self.backend {
+            BackendKind::CpuRef => Engine::cpu_ref(variant),
+            BackendKind::Xla => Engine::load(&self.art_dir, variant),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("cpu").unwrap(), BackendKind::CpuRef);
+        assert_eq!(BackendKind::parse("XLA").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn digits_per_token_by_variant() {
+        assert_eq!(digits_per_token("llama_like").unwrap(), 3);
+        assert_eq!(digits_per_token("qwen_like").unwrap(), 1);
+        assert!(digits_per_token("gpt_like").is_err());
+    }
+
+    #[test]
+    fn spec_builds_cpu_engines() {
+        let spec = EngineSpec::cpu();
+        let e = spec.build("llama_like").unwrap();
+        assert_eq!(e.backend().kind(), "cpu-ref");
+        assert_eq!(e.tokenizer.digits_per_token, 3);
+        assert!(spec.build("nope").is_err());
+    }
+}

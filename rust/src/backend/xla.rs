@@ -1,0 +1,152 @@
+//! PJRT execution backend (`--features xla`): drives the AOT-compiled
+//! prefill/decode HLO executables produced by `make artifacts`.
+//!
+//! All `xla::` types live behind this module (and [`super::xla_scorer`]);
+//! the engine and everything above it see only [`ExecBackend`].
+//!
+//! Implementation notes carried over from the original engine:
+//! * Arguments travel as host literals — the device-resident buffer path
+//!   (`execute_b`) segfaults nondeterministically inside the prebuilt
+//!   `xla_extension` (see EXPERIMENTS.md §Perf).
+//! * Executables are Arc-cached inside the runtime; the XLA scorer holds
+//!   its own handles and does not borrow the backend.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::compress::Scorer;
+use crate::config::{CompressionConfig, ModelDims, ScorerBackend};
+use crate::runtime::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32, Runtime};
+
+use super::{DecodeBatch, DecodeOutput, ExecBackend, PrefillOutput};
+
+pub struct XlaBackend {
+    pub rt: Runtime,
+    dims: ModelDims,
+    weights: Vec<xla::Literal>,
+    prefill_buckets: Vec<usize>,
+    decode_buckets: Vec<usize>,
+    score_lags: Vec<usize>,
+    tmax: usize,
+}
+
+impl XlaBackend {
+    /// `art_dir` = artifacts/, `variant` = "llama_like" | "qwen_like".
+    pub fn load(art_dir: &Path, variant: &str) -> Result<XlaBackend> {
+        let rt = Runtime::open(art_dir)?;
+        let dims = ModelDims::from_json(rt.manifest.get("model_config")?)?;
+        let model_dir = art_dir.join("models").join(variant);
+        let weights = rt.load_weights(&model_dir)?;
+        let prefill_buckets = rt.manifest.get("prefill_buckets")?.as_usize_vec()?;
+        let decode_buckets = rt.manifest.get("decode_buckets")?.as_usize_vec()?;
+        let score_lags = rt.manifest.get("score_lags")?.as_usize_vec()?;
+        let tmax = rt.manifest.get("tmax")?.as_usize()?;
+        Ok(XlaBackend {
+            rt,
+            dims,
+            weights,
+            prefill_buckets,
+            decode_buckets,
+            score_lags,
+            tmax,
+        })
+    }
+
+    fn score_exe_handles(&self) -> super::xla_scorer::ScoreExes {
+        let mut map = std::collections::HashMap::new();
+        for &l in &self.score_lags {
+            if let Ok(exe) = self.rt.executable(&format!("lagkv_score_l{l}")) {
+                map.insert(l, exe);
+            }
+        }
+        super::xla_scorer::ScoreExes { by_lag: map }
+    }
+}
+
+impl ExecBackend for XlaBackend {
+    fn kind(&self) -> &'static str {
+        "xla"
+    }
+
+    fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    fn entries(&self) -> Vec<String> {
+        self.rt.entries()
+    }
+
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn tmax(&self) -> usize {
+        self.tmax
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.prefill_buckets
+    }
+
+    fn decode_buckets(&self) -> &[usize] {
+        &self.decode_buckets
+    }
+
+    fn prefill(&self, tokens: &[i32], true_len: usize) -> Result<PrefillOutput> {
+        let bucket = tokens.len();
+        let mut args = self.weights.clone();
+        args.push(lit_i32(tokens, &[bucket])?);
+        args.push(lit_i32_scalar(true_len as i32));
+        let out = self.rt.execute(&format!("prefill_t{bucket}"), &args)?;
+        if out.len() != 4 {
+            bail!("prefill returned {} outputs, expected 4", out.len());
+        }
+        Ok(PrefillOutput {
+            logits: to_vec_f32(&out[0])?,
+            k: to_vec_f32(&out[1])?,
+            v: to_vec_f32(&out[2])?,
+            attn_sums: to_vec_f32(&out[3])?,
+        })
+    }
+
+    fn decode(&self, batch: &DecodeBatch<'_>) -> Result<DecodeOutput> {
+        let b = batch.batch;
+        let (nl, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
+        let tmax = self.tmax;
+        let args: Vec<xla::Literal> = self
+            .weights
+            .iter()
+            .cloned()
+            .chain([
+                lit_f32(batch.k, &[nl, b, hkv, tmax, dh])?,
+                lit_f32(batch.v, &[nl, b, hkv, tmax, dh])?,
+                lit_i32(batch.lens, &[nl, b])?,
+                lit_i32(batch.pos, &[b])?,
+                lit_i32(batch.tokens, &[b])?,
+            ])
+            .collect();
+        let out = self.rt.execute(&format!("decode_b{b}"), &args)?;
+        if out.len() != 6 {
+            bail!("decode returned {} outputs, expected 6", out.len());
+        }
+        Ok(DecodeOutput {
+            logits: to_vec_f32(&out[0])?,
+            k_new: to_vec_f32(&out[1])?,
+            v_new: to_vec_f32(&out[2])?,
+            attn_rows: to_vec_f32(&out[5])?,
+        })
+    }
+
+    fn scorer(&self, cfg: &CompressionConfig, seed: u64) -> Option<Box<dyn Scorer>> {
+        if cfg.scorer != ScorerBackend::Xla {
+            return None;
+        }
+        Some(Box::new(super::xla_scorer::XlaScorer::new(
+            self.score_exe_handles(),
+            cfg.policy,
+            seed,
+            self.dims.n_kv_heads,
+        )))
+    }
+}

@@ -2,6 +2,25 @@
 //! the k best-scoring indices, returned in **ascending index order** so the
 //! surviving rows keep their temporal order (matches ref.topk_indices_ref:
 //! stable argsort by descending score, take k, sort).
+//!
+//! NaN contract: a NaN score sorts BELOW every finite score (and below
+//! -inf), so corrupted scores are evicted first and never displace a real
+//! candidate — pinned by the tie/NaN property tests.
+
+use std::cmp::Ordering;
+
+/// Descending-score comparator over indices with the NaN contract: any NaN
+/// orders after every non-NaN score (including -inf); NaN vs NaN is a tie.
+#[inline]
+fn desc_cmp(scores: &[f32], a: usize, b: usize) -> Ordering {
+    let (sa, sb) = (scores[a], scores[b]);
+    match (sa.is_nan(), sb.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater, // a sorts last
+        (false, true) => Ordering::Less,
+        (false, false) => sb.partial_cmp(&sa).expect("non-NaN scores are comparable"),
+    }
+}
 
 /// Indices of the `k` largest scores, ties broken toward the EARLIER index
 /// (stable), returned ascending.  `k` is clamped to `scores.len()`.
@@ -12,7 +31,7 @@ pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
     }
     let mut idx: Vec<usize> = (0..scores.len()).collect();
     // stable sort by descending score => ties keep ascending index order
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.sort_by(|&a, &b| desc_cmp(scores, a, b));
     idx.truncate(k);
     idx.sort_unstable();
     idx
@@ -29,12 +48,7 @@ pub fn topk_indices_into(scores: &[f32], k: usize, scratch: &mut Vec<usize>, out
     scratch.clear();
     scratch.extend(0..scores.len());
     // partial selection: kth-element then sort the prefix
-    scratch.select_nth_unstable_by(k - 1, |&a, &b| {
-        scores[b]
-            .partial_cmp(&scores[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    scratch.select_nth_unstable_by(k - 1, |&a, &b| desc_cmp(scores, a, b).then(a.cmp(&b)));
     out.extend_from_slice(&scratch[..k]);
     out.sort_unstable();
 }
@@ -57,6 +71,22 @@ mod tests {
     fn ties_prefer_earlier() {
         let s = [1.0, 1.0, 1.0, 1.0];
         assert_eq!(topk_indices(&s, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_scores_sort_below_everything() {
+        let s = [0.5, f32::NAN, 0.9, f32::NAN, f32::NEG_INFINITY];
+        assert_eq!(topk_indices(&s, 2), vec![0, 2]);
+        // -inf still beats NaN; NaNs are only admitted when finite (and
+        // -inf) candidates are exhausted, earliest NaN first
+        assert_eq!(topk_indices(&s, 3), vec![0, 2, 4]);
+        assert_eq!(topk_indices(&s, 4), vec![0, 1, 2, 4]);
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        topk_indices_into(&s, 3, &mut scratch, &mut out);
+        assert_eq!(out, vec![0, 2, 4]);
+        topk_indices_into(&s, 4, &mut scratch, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 4]);
     }
 
     #[test]

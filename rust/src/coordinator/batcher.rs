@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::compress::maybe_compress;
 use crate::engine::{Engine, SlotState};
-use crate::runtime::literals::argmax;
+use crate::util::argmax;
 
 use super::{Response, WorkItem};
 

@@ -1,19 +1,21 @@
 //! Multi-model router: one coordinator thread per model variant, a shared
 //! handle for clients (in-proc or the TCP server).
 //!
-//! PJRT client handles are not `Send` (the `xla` crate wraps them in `Rc`),
-//! so each coordinator thread constructs its own [`Engine`] and the router
-//! moves only plain-data [`WorkItem`]s across threads.
+//! Engine handles may not be `Send` (the PJRT client wraps its state in
+//! `Rc`), so each coordinator thread constructs its own [`Engine`] from a
+//! plain-data [`EngineSpec`] and the router moves only [`WorkItem`]s across
+//! threads.  The spec also carries the backend choice, so a router can
+//! serve the hermetic CPU reference backend and the XLA artifact backend
+//! with identical plumbing.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
 use std::sync::mpsc::{self, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::Engine;
+use crate::backend::EngineSpec;
 
 use super::{Coordinator, Request, Response, WorkItem};
 
@@ -26,15 +28,15 @@ impl Router {
     /// Spin up one coordinator thread per model variant.  Engine loading
     /// happens inside the thread; a variant that fails to load answers all
     /// of its requests with an error instead of killing the router.
-    pub fn start(art_dir: PathBuf, variants: &[String]) -> Router {
+    pub fn start(spec: EngineSpec, variants: &[String]) -> Router {
         let mut senders = HashMap::new();
         let mut threads = Vec::new();
         for variant in variants {
             let (tx, rx) = mpsc::channel::<WorkItem>();
             senders.insert(variant.clone(), tx);
-            let art = art_dir.clone();
+            let spec = spec.clone();
             let name = variant.clone();
-            threads.push(std::thread::spawn(move || match Engine::load(&art, &name) {
+            threads.push(std::thread::spawn(move || match spec.build(&name) {
                 Ok(engine) => {
                     let coord = Coordinator::new(engine);
                     if let Err(e) = coord.run(rx) {

@@ -1,29 +1,33 @@
-//! Model engine: drives the AOT-compiled prefill/decode executables over
-//! [`KvCache`]s with recursive compression — the bridge between the
-//! coordinator (L3) and the compiled model (L2/L1).
+//! Model engine: drives an [`ExecBackend`] over [`KvCache`]s with recursive
+//! compression — the bridge between the coordinator (L3) and the model,
+//! whatever executes it.
 //!
 //! Responsibilities:
-//! * load manifest + weights, compile executables on first use,
 //! * single-sequence [`Engine::generate`] (greedy decoding),
 //! * batched [`Engine::step_batch`] for the continuous batcher,
 //! * fire the compression driver after prefill and after every appended
 //!   token (the paper's "dynamically ... in both prefill and decode"),
-//! * optional XLA-backed scoring ([`xla_scorer::XlaScorer`]) that runs the
-//!   L1 Pallas kernel instead of the pure-Rust mirror.
+//! * delegate scoring to the backend when it provides an accelerated
+//!   scorer (the XLA Pallas kernel), falling back to the pure-Rust
+//!   policies otherwise.
+//!
+//! The engine never names a backend type: all model execution goes through
+//! [`crate::backend::ExecBackend`], so the same generation / batching /
+//! compression code runs identically on the hermetic CPU reference backend
+//! and on the PJRT artifact backend.
 
 pub mod slot;
-pub mod xla_scorer;
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::backend::{DecodeBatch, ExecBackend};
 use crate::compress::{maybe_compress, policy::make_policy, Scorer};
-use crate::config::{CompressionConfig, ModelDims, ScorerBackend};
+use crate::config::{CompressionConfig, ModelDims};
 use crate::kvcache::KvCache;
-use crate::runtime::literals::argmax as argmax_slice;
-use crate::runtime::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32, Runtime};
 use crate::tokenizer::Tokenizer;
+use crate::util::argmax as argmax_slice;
 
 pub use slot::SlotState;
 
@@ -42,30 +46,18 @@ pub struct GenOutput {
 }
 
 pub struct Engine {
-    pub rt: Runtime,
+    backend: Box<dyn ExecBackend>,
     pub dims: ModelDims,
     pub tokenizer: Tokenizer,
     pub variant: String,
-    weights: Vec<xla::Literal>,
-    prefill_buckets: Vec<usize>,
-    decode_buckets: Vec<usize>,
-    score_lags: Vec<usize>,
     pub tmax: usize,
 }
 
 impl Engine {
-    /// `art_dir` = artifacts/, `variant` = "llama_like" | "qwen_like".
-    pub fn load(art_dir: &Path, variant: &str) -> Result<Engine> {
-        let rt = Runtime::open(art_dir)?;
-        let dims = ModelDims::from_json(rt.manifest.get("model_config")?)?;
-        let model_dir: PathBuf = art_dir.join("models").join(variant);
-        let digits_per_token = match variant {
-            "llama_like" => 3,
-            "qwen_like" => 1,
-            other => bail!("unknown model variant {other:?}"),
-        };
-        let tokenizer = Tokenizer::load(&model_dir, digits_per_token)
-            .with_context(|| format!("loading tokenizer for {variant}"))?;
+    /// Wrap an already-constructed backend.  The tokenizer must agree with
+    /// the backend's vocabulary.
+    pub fn new(backend: Box<dyn ExecBackend>, tokenizer: Tokenizer, variant: &str) -> Result<Engine> {
+        let dims = backend.dims().clone();
         if tokenizer.vocab.size() != dims.vocab_size {
             bail!(
                 "vocab size mismatch: tokenizer {} vs model {}",
@@ -73,60 +65,66 @@ impl Engine {
                 dims.vocab_size
             );
         }
-        let weights = rt.load_weights(&model_dir)?;
-        let prefill_buckets = rt.manifest.get("prefill_buckets")?.as_usize_vec()?;
-        let decode_buckets = rt.manifest.get("decode_buckets")?.as_usize_vec()?;
-        let score_lags = rt.manifest.get("score_lags")?.as_usize_vec()?;
-        let tmax = rt.manifest.get("tmax")?.as_usize()?;
-        Ok(Engine {
-            rt,
-            dims,
-            tokenizer,
-            variant: variant.to_string(),
-            weights,
-            prefill_buckets,
-            decode_buckets,
-            score_lags,
-            tmax,
-        })
+        let tmax = backend.tmax();
+        Ok(Engine { backend, dims, tokenizer, variant: variant.to_string(), tmax })
+    }
+
+    /// Hermetic default: the pure-Rust synthetic reference backend.
+    pub fn cpu_ref(variant: &str) -> Result<Engine> {
+        let (backend, tokenizer) = crate::backend::cpu_ref::CpuRefBackend::load(variant)?;
+        Engine::new(Box::new(backend), tokenizer, variant)
+    }
+
+    /// PJRT artifact backend: `art_dir` = artifacts/, `variant` =
+    /// "llama_like" | "qwen_like".  Requires `--features xla`.
+    #[cfg(feature = "xla")]
+    pub fn load(art_dir: &Path, variant: &str) -> Result<Engine> {
+        use anyhow::Context;
+        let backend = crate::backend::xla::XlaBackend::load(art_dir, variant)?;
+        let model_dir = art_dir.join("models").join(variant);
+        let dpt = crate::backend::digits_per_token(variant)?;
+        let tokenizer = Tokenizer::load(&model_dir, dpt)
+            .with_context(|| format!("loading tokenizer for {variant}"))?;
+        Engine::new(Box::new(backend), tokenizer, variant)
+    }
+
+    /// Without the `xla` feature there is no artifact backend; callers get
+    /// a clear error instead of a link failure.
+    #[cfg(not(feature = "xla"))]
+    pub fn load(art_dir: &Path, variant: &str) -> Result<Engine> {
+        let _ = (art_dir, variant);
+        bail!(
+            "this build has no XLA backend (compiled without `--features xla`); \
+             use the default cpu backend (`--backend cpu`) or rebuild with the feature"
+        )
+    }
+
+    /// The execution backend behind this engine.
+    pub fn backend(&self) -> &dyn ExecBackend {
+        self.backend.as_ref()
     }
 
     pub fn decode_buckets(&self) -> &[usize] {
-        &self.decode_buckets
+        self.backend.decode_buckets()
     }
 
     /// Smallest prefill bucket that fits `n` tokens.
     pub fn pick_prefill_bucket(&self, n: usize) -> Result<usize> {
-        self.prefill_buckets
+        self.backend
+            .prefill_buckets()
             .iter()
             .copied()
             .find(|&b| b >= n)
             .ok_or_else(|| anyhow!("prompt of {n} tokens exceeds largest prefill bucket"))
     }
 
-    /// Build the per-sequence scorer for a compression config.
+    /// Build the per-sequence scorer for a compression config: the
+    /// backend's accelerated scorer when it offers one, else the pure-Rust
+    /// policy implementation.
     pub fn make_scorer(&self, cfg: &CompressionConfig, seed: u64) -> Box<dyn Scorer> {
-        match cfg.scorer {
-            ScorerBackend::Rust => make_policy(cfg.policy, seed),
-            // Executables are Arc-cached inside the runtime, so the scorer
-            // holds its own handles and does not borrow the engine.
-            ScorerBackend::Xla => Box::new(xla_scorer::XlaScorer::new(
-                self.score_exe_handles(),
-                cfg.policy,
-                seed,
-                self.dims.n_kv_heads,
-            )),
-        }
-    }
-
-    fn score_exe_handles(&self) -> xla_scorer::ScoreExes {
-        let mut map = std::collections::HashMap::new();
-        for &l in &self.score_lags {
-            if let Ok(exe) = self.rt.executable(&format!("lagkv_score_l{l}")) {
-                map.insert(l, exe);
-            }
-        }
-        xla_scorer::ScoreExes { by_lag: map }
+        self.backend
+            .scorer(cfg, seed)
+            .unwrap_or_else(|| make_policy(cfg.policy, seed))
     }
 
     /// Run prefill for a prompt; returns (last_logits, populated cache).
@@ -134,30 +132,17 @@ impl Engine {
         let bucket = self.pick_prefill_bucket(ids.len())?;
         let mut tokens = vec![0i32; bucket];
         tokens[..ids.len()].copy_from_slice(ids);
-        // Literal path: see EXPERIMENTS.md §Perf — the device-resident
-        // buffer path (execute_b) segfaults nondeterministically inside
-        // this prebuilt xla_extension, so arguments go as literals.
-        let mut args = self.weights.clone();
-        args.push(lit_i32(&tokens, &[bucket])?);
-        args.push(lit_i32_scalar(ids.len() as i32));
-        let out = self.rt.execute(&format!("prefill_t{bucket}"), &args)?;
-        if out.len() != 4 {
-            bail!("prefill returned {} outputs, expected 4", out.len());
-        }
-        let logits = to_vec_f32(&out[0])?;
-        let k = to_vec_f32(&out[1])?;
-        let v = to_vec_f32(&out[2])?;
-        let attn = to_vec_f32(&out[3])?;
+        let out = self.backend.prefill(&tokens, ids.len())?;
         let mut cache = KvCache::new(self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
-        cache.ingest_prefill(&k, &v, &attn, bucket, ids.len())?;
-        Ok((logits, cache))
+        cache.ingest_prefill(&out.k, &out.v, &out.attn_sums, bucket, ids.len())?;
+        Ok((out.logits, cache))
     }
 
     /// One batched decode step over `slots` (entries may be idle).
     /// Bucket = slots.len() and must be an exported decode bucket.
     pub fn step_batch(&self, slots: &mut [SlotState]) -> Result<()> {
         let b = slots.len();
-        if !self.decode_buckets.contains(&b) {
+        if !self.backend.decode_buckets().contains(&b) {
             bail!("no decode executable for batch {b}");
         }
         let (nl, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
@@ -183,27 +168,14 @@ impl Engine {
                 tok[s] = seq.next_token;
             }
         }
-        // Literal path (see EXPERIMENTS.md §Perf re: execute_b instability).
-        let args: Vec<xla::Literal> = self
-            .weights
-            .iter()
-            .cloned()
-            .chain([
-                lit_f32(&kbuf, &[nl, b, hkv, tmax, dh])?,
-                lit_f32(&vbuf, &[nl, b, hkv, tmax, dh])?,
-                lit_i32(&lens, &[nl, b])?,
-                lit_i32(&pos, &[b])?,
-                lit_i32(&tok, &[b])?,
-            ])
-            .collect();
-        let out = self.rt.execute(&format!("decode_b{b}"), &args)?;
-        if out.len() != 6 {
-            bail!("decode returned {} outputs, expected 6", out.len());
-        }
-        let logits = to_vec_f32(&out[0])?; // [B, V]
-        let k_new = to_vec_f32(&out[1])?; // [nl, B, hkv, dh]
-        let v_new = to_vec_f32(&out[2])?;
-        let attn_row = to_vec_f32(&out[5])?; // [nl, B, hkv, tmax]
+        let out = self.backend.decode(&DecodeBatch {
+            batch: b,
+            k: &kbuf,
+            v: &vbuf,
+            lens: &lens,
+            pos: &pos,
+            tokens: &tok,
+        })?;
         let v_size = self.dims.vocab_size;
 
         for (s, slot) in slots.iter_mut().enumerate() {
@@ -213,8 +185,8 @@ impl Engine {
             let mut vn = Vec::with_capacity(nl * hkv * dh);
             for layer in 0..nl {
                 let off = ((layer * b) + s) * hkv * dh;
-                kn.extend_from_slice(&k_new[off..off + hkv * dh]);
-                vn.extend_from_slice(&v_new[off..off + hkv * dh]);
+                kn.extend_from_slice(&out.k_new[off..off + hkv * dh]);
+                vn.extend_from_slice(&out.v_new[off..off + hkv * dh]);
             }
             let position = seq.cache.appended as i32;
             seq.cache.append_token(&kn, &vn, position)?;
@@ -222,7 +194,7 @@ impl Engine {
                 let mut row = Vec::with_capacity(nl * hkv * tmax);
                 for layer in 0..nl {
                     let off = ((layer * b) + s) * hkv * tmax;
-                    row.extend_from_slice(&attn_row[off..off + hkv * tmax]);
+                    row.extend_from_slice(&out.attn_rows[off..off + hkv * tmax]);
                 }
                 seq.cache.accumulate_attention(&row, tmax)?;
             }
@@ -230,7 +202,7 @@ impl Engine {
                 maybe_compress(&mut seq.cache, &seq.compression, seq.scorer.as_mut())?;
             seq.compression_events += events.len();
 
-            let next = argmax_slice(&logits[s * v_size..(s + 1) * v_size]) as i32;
+            let next = argmax_slice(&out.logits[s * v_size..(s + 1) * v_size]) as i32;
             seq.push_generated(next, self.tmax);
         }
         Ok(())

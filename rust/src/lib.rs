@@ -8,24 +8,33 @@
 //!   batcher, prefill/decode scheduler, and the KV-cache manager in which
 //!   LagKV and its baselines live as pluggable eviction policies.
 //! * **L2 (python/compile, build time only)** — a tiny GQA transformer in
-//!   JAX, AOT-lowered to HLO text that the [`runtime`] loads via PJRT.
+//!   JAX, AOT-lowered to HLO text that the PJRT runtime loads.
 //! * **L1 (python/compile/kernels)** — the LagKV scoring Pallas kernel,
 //!   lowered into its own HLO artifact and cross-validated against the
 //!   pure-Rust scorer in [`compress::scores`].
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! `lagkv` binary is self-contained.
+//! Model execution is abstracted behind [`backend::ExecBackend`]:
+//!
+//! * the default **CPU reference backend** is pure Rust and hermetic — the
+//!   whole stack (generation, continuous batching, recursive compression)
+//!   runs under `cargo test` on a clean machine with no artifacts and no
+//!   native libraries;
+//! * the **XLA backend** (`--features xla`) is the PJRT path over the AOT
+//!   HLO artifacts from `make artifacts`; python never runs on the request
+//!   path — after `make artifacts` the `lagkv` binary is self-contained.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
 //! results.
 
-pub mod config;
+pub mod backend;
 pub mod compress;
+pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod harness;
 pub mod kvcache;
 pub mod metrics;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod server;
 pub mod sim;

@@ -1,24 +1,30 @@
 //! `lagkv` — CLI for the LagKV serving stack.
 //!
 //! Subcommands:
-//!   info                         artifact + model inventory
+//!   info                         backend + model inventory
 //!   generate --prompt "..."      one-shot generation with any policy
 //!   serve [--port 7199]          TCP server (newline-delimited JSON)
 //!   tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
 //!                                regenerate the paper's tables/figures
 //!
-//! Common flags: --artifacts DIR, --model llama_like|qwen_like,
-//! --policy P --sink S --lag L --ratio R --scorer rust|xla, --items N.
+//! Common flags: --backend cpu|xla, --artifacts DIR,
+//! --model llama_like|qwen_like, --policy P --sink S --lag L --ratio R
+//! --scorer rust|xla, --items N.
+//!
+//! The default `cpu` backend is hermetic (no artifacts needed); `--backend
+//! xla` drives the AOT PJRT path and requires `--features xla` plus
+//! `make artifacts`.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use lagkv::config::{artifacts_dir, CompressionConfig, ServingConfig};
+use lagkv::backend::EngineSpec;
+use lagkv::config::{CompressionConfig, ServingConfig};
+use lagkv::coordinator::Router;
 use lagkv::engine::Engine;
 use lagkv::harness;
-use lagkv::coordinator::Router;
 use lagkv::server::Server;
 use lagkv::util::cli::Args;
 
@@ -47,25 +53,26 @@ fn run() -> Result<()> {
 const HELP: &str = r#"lagkv — LagKV KV-cache compression serving stack
 
 USAGE:
-  lagkv info [--artifacts DIR]
+  lagkv info [--backend cpu|xla] [--artifacts DIR]
   lagkv generate --prompt "..." [--model M] [--policy P --lag L --ratio R]
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
 
+BACKENDS: cpu (default, hermetic) | xla (--features xla + make artifacts)
 POLICIES: lagkv localkv l2norm h2o streaming random none
 "#;
 
 fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
-    let art = artifacts_dir(args);
-    Ok(Arc::new(Engine::load(&art, variant)?))
+    Ok(Arc::new(EngineSpec::from_args(args)?.build(variant)?))
 }
 
 fn info(args: &Args) -> Result<()> {
-    let art = artifacts_dir(args);
-    println!("artifacts: {}", art.display());
+    let spec = EngineSpec::from_args(args)?;
+    println!("backend: {}", spec.backend.name());
+    println!("artifacts: {}", spec.art_dir.display());
     for variant in ["llama_like", "qwen_like"] {
-        match Engine::load(&art, variant) {
+        match spec.build(variant) {
             Ok(e) => {
                 println!(
                     "model {variant}: vocab={} d={} layers={} heads={}q/{}kv tmax={} (platform {})",
@@ -75,9 +82,12 @@ fn info(args: &Args) -> Result<()> {
                     e.dims.n_q_heads,
                     e.dims.n_kv_heads,
                     e.tmax,
-                    e.rt.platform(),
+                    e.backend().platform(),
                 );
-                println!("  entries: {}", e.rt.entries().join(", "));
+                let entries = e.backend().entries();
+                if !entries.is_empty() {
+                    println!("  entries: {}", entries.join(", "));
+                }
             }
             Err(e) => println!("model {variant}: unavailable ({e:#})"),
         }
@@ -111,7 +121,7 @@ fn generate(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let serving = ServingConfig::from_args(args)?;
     let models = args.list_or("models", &["llama_like", "qwen_like"]);
-    let router = Arc::new(Router::start(artifacts_dir(args), &models));
+    let router = Arc::new(Router::start(EngineSpec::from_args(args)?, &models));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));
     server.serve(serving.port, stop)

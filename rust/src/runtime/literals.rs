@@ -32,27 +32,3 @@ pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
     lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
 }
 
-/// Argmax over a flat f32 slice (greedy sampling).
-pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0usize;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > bv {
-            bv = x;
-            best = i;
-        }
-    }
-    best
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_basics() {
-        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
-        assert_eq!(argmax(&[-5.0, -1.0]), 1);
-        assert_eq!(argmax(&[7.0]), 0);
-    }
-}

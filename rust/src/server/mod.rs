@@ -178,9 +178,11 @@ impl Client {
 mod tests {
     use super::*;
 
+    use crate::backend::EngineSpec;
+
     #[test]
     fn parse_request_defaults_and_overrides() {
-        let router = Arc::new(Router::start(std::path::PathBuf::from("."), &[]));
+        let router = Arc::new(Router::start(EngineSpec::cpu(), &[]));
         let srv = Server::new(router);
         let (model, req) = srv
             .parse_request(
@@ -196,7 +198,7 @@ mod tests {
 
     #[test]
     fn bad_request_is_error() {
-        let router = Arc::new(Router::start(std::path::PathBuf::from("."), &[]));
+        let router = Arc::new(Router::start(EngineSpec::cpu(), &[]));
         let srv = Server::new(router);
         assert!(srv.parse_request("{}").is_err());
         assert!(srv.parse_request("not json").is_err());

@@ -55,6 +55,50 @@ impl Vocab {
         })
     }
 
+    /// The full synthetic vocabulary, built in-process — byte-identical to
+    /// python/compile/common.py's `build_vocab()` (specials, digit slices,
+    /// then filler + content + structural words, in that order; order is
+    /// load-bearing because ids are positional).  This is what makes the
+    /// CPU reference backend and the hermetic tokenizer tests independent
+    /// of `make artifacts`.
+    pub fn synthetic() -> Vocab {
+        use crate::workloads::words::{CONTENT_WORDS, FILLER_WORDS, STRUCT_WORDS};
+        let mut tokens: Vec<String> =
+            ["<pad>", "<bos>", "<eos>", "<sep>", "<q>", "<a>", "<unk>"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        for d in 0..10 {
+            tokens.push(format!("{d}"));
+        }
+        for d in 0..100 {
+            tokens.push(format!("{d:02}"));
+        }
+        for d in 0..1000 {
+            tokens.push(format!("{d:03}"));
+        }
+        let words: Vec<String> = FILLER_WORDS
+            .iter()
+            .chain(CONTENT_WORDS)
+            .chain(STRUCT_WORDS)
+            .map(|s| s.to_string())
+            .collect();
+        tokens.extend(words.iter().cloned());
+        let mut token_to_id = HashMap::with_capacity(tokens.len());
+        for (i, t) in tokens.iter().enumerate() {
+            token_to_id.entry(t.clone()).or_insert(i as i32);
+        }
+        Vocab {
+            token_to_id,
+            digit1_base: 7,
+            digit2_base: 17,
+            digit3_base: 117,
+            word_base: 1117,
+            words,
+            tokens,
+        }
+    }
+
     pub fn size(&self) -> usize {
         self.tokens.len()
     }
@@ -203,6 +247,36 @@ mod tests {
             word_base: 1117,
             words: words.iter().map(|s| s.to_string()).collect(),
             tokens,
+        }
+    }
+
+    #[test]
+    fn synthetic_vocab_layout_matches_python() {
+        let v = Vocab::synthetic();
+        // 7 specials + 10 + 100 + 1000 digits + 64 filler + 98 content
+        // + 22 struct words
+        assert_eq!(v.size(), 7 + 10 + 100 + 1000 + 64 + 98 + 22);
+        assert_eq!(v.word_base, 1117);
+        assert_eq!(v.surface(0), "<pad>");
+        assert_eq!(v.surface(7), "0");
+        assert_eq!(v.surface(17), "00");
+        assert_eq!(v.surface(117), "000");
+        assert_eq!(v.surface(1117), "the");
+        // duplicate surfaces ("0" vs padded digits) resolve to first id
+        assert_eq!(v.token_to_id["0"], 7);
+        assert!(v.is_digit_token(500));
+        assert!(!v.is_digit_token(1200));
+    }
+
+    #[test]
+    fn synthetic_vocab_encodes_task_templates_without_unk() {
+        for dpt in [1usize, 3] {
+            let t = Tokenizer::new(Vocab::synthetic(), dpt).unwrap();
+            let text = "<sep> pass key is 9081726354 . remember it <sep> <q> pass key <a>";
+            let ids = t.encode(text, false);
+            assert!(!ids.contains(&UNK), "template words must all be in-vocab");
+            assert_eq!(t.decode(&ids), text);
+            assert_eq!(t.decode_digits(&ids), "9081726354");
         }
     }
 

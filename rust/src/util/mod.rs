@@ -9,6 +9,20 @@ pub mod rng;
 
 use std::time::Instant;
 
+/// Argmax over a flat f32 slice (greedy sampling).  Lives here (not in the
+/// feature-gated runtime) because every backend's decode loop needs it.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
 /// Measure wall-clock of `f` over `iters` runs after `warmup` runs;
 /// returns (mean_ns, min_ns).
 pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
@@ -25,4 +39,21 @@ pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) 
         min = min.min(dt);
     }
     (total / iters as f64, min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0]), 1);
+        assert_eq!(argmax(&[7.0]), 0);
+    }
+
+    #[test]
+    fn argmax_prefers_first_on_ties() {
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0);
+    }
 }

@@ -28,6 +28,14 @@ pub const CONTENT_WORDS: &[&str] = &[
     "hadron", "photon", "proton", "magnet", "prism",
 ];
 
+pub const STRUCT_WORDS: &[&str] = &[
+    // structural words used by task templates (kept separate so templates
+    // never collide with haystack filler) — mirror of common.STRUCT_WORDS
+    "pass", "key", "remember", "what", "summary", "value", "color",
+    "code", "call", "def", "return", "(", ")", ":", ".", ",",
+    "in:", "out:", "doc", "fact", "item", "is",
+];
+
 /// Nouns = first 48 content words; values = the rest (mirror of data.py).
 pub fn nouns() -> &'static [&'static str] {
     &CONTENT_WORDS[..48]
@@ -50,6 +58,7 @@ mod tests {
     fn table_sizes_match_python() {
         assert_eq!(FILLER_WORDS.len(), 64);
         assert_eq!(CONTENT_WORDS.len(), 98);
+        assert_eq!(STRUCT_WORDS.len(), 22);
         assert_eq!(nouns().len(), 48);
         assert_eq!(values().len(), 50);
     }

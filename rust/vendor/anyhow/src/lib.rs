@@ -1,0 +1,207 @@
+//! Hermetic, dependency-free subset of the `anyhow` error-handling crate.
+//!
+//! The lagkv workspace builds on machines with no network access and no
+//! registry cache, so this small in-tree crate provides the exact surface
+//! the codebase uses:
+//!
+//! * [`Error`] — an opaque error with a context chain,
+//! * [`Result<T>`] — `std::result::Result<T, Error>`,
+//! * [`anyhow!`] / [`bail!`] — formatted-error construction macros,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Semantics match real `anyhow` where the codebase can observe them:
+//! `Display` shows the outermost message, `{:#}` (alternate) shows the
+//! whole chain joined by `": "`, and `Debug` shows the chain with a
+//! `Caused by:` trailer.
+
+use std::fmt;
+
+/// An error with an optional chain of wrapped causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into [`Error`] (this is what makes `?` work on
+/// io/parse errors inside `anyhow::Result` functions).  Note that `Error`
+/// itself deliberately does NOT implement `std::error::Error`, exactly like
+/// real anyhow, so this blanket impl cannot collide with `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std source chain as context layers.
+        let mut msgs = Vec::new();
+        msgs.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error::msg(msgs.pop().expect("at least one message"));
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate_show_chain() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("missing thing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening file: missing thing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("no value {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "no value 7");
+
+        let ok: Option<u32> = Some(3);
+        assert_eq!(ok.context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_on_anyhow_result_stacks() {
+        fn inner() -> Result<()> {
+            bail!("bad state {}", 42)
+        }
+        let e = inner().context("while validating").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while validating: bad state 42");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}, y = {y:?}", 1, y = "z");
+        assert_eq!(format!("{e}"), "x = 1, y = \"z\"");
+    }
+
+    #[test]
+    fn debug_shows_caused_by() {
+        let e = Error::msg("root").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+    }
+}

@@ -1,0 +1,238 @@
+//! Type-level stub of the PJRT (`xla`) bindings.
+//!
+//! This crate mirrors the exact API surface the lagkv runtime and XLA
+//! backend consume — `PjRtClient`, `PjRtLoadedExecutable`, `PjRtBuffer`,
+//! `Literal`, `HloModuleProto`, `XlaComputation`, and the `FromRawBytes`
+//! npz loader — so the feature-gated PJRT path stays compiling (and
+//! reviewable) on machines without the XLA shared libraries.  Every
+//! operation that would touch PJRT returns [`Error::StubUnavailable`];
+//! nothing panics, so `lagkv --backend xla` degrades into a clean runtime
+//! error instead of a crash.
+
+use std::path::Path;
+
+/// Stub error: every PJRT entry point produces this.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub cannot execute anything; swap in the real binding.
+    StubUnavailable(&'static str),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::StubUnavailable(what))
+}
+
+// -- element types ------------------------------------------------------------
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types the lagkv artifacts use (f32 tensors, i32 index tensors).
+pub trait NativeType: sealed::Sealed + Copy + Default + 'static {
+    const NAME: &'static str;
+}
+
+impl NativeType for f32 {
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    const NAME: &'static str = "i32";
+}
+
+// -- literals -----------------------------------------------------------------
+
+/// Host-side tensor value.  The stub stores nothing; constructors succeed
+/// (shape bookkeeping only) and host<->device transfers fail.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal { dims: vec![] }
+    }
+
+    /// Reinterpret with a new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = self.dims.iter().product();
+        let m: i64 = dims.iter().product();
+        if n != m {
+            return unavailable("reshape: element count mismatch");
+        }
+        Ok(Literal { dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// npz weight loading (real binding reads `weights.npz`).
+pub trait FromRawBytes: Sized {
+    type Context;
+    fn read_npz<P: AsRef<Path>>(path: P, ctx: &Self::Context) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+
+    fn read_npz<P: AsRef<Path>>(_path: P, _ctx: &Self::Context) -> Result<Vec<(String, Self)>> {
+        unavailable("Literal::read_npz")
+    }
+}
+
+// -- HLO artifacts ------------------------------------------------------------
+
+/// Parsed HLO module (text interchange format).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+// -- PJRT ---------------------------------------------------------------------
+
+/// Device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Something a compiled executable can take as an argument: a host literal
+/// (uploaded per call) or an already-device-resident buffer.
+pub trait BufferArgument: sealed_arg::SealedArg {}
+
+mod sealed_arg {
+    pub trait SealedArg {}
+    impl SealedArg for super::Literal {}
+    impl<'a> SealedArg for &'a super::PjRtBuffer {}
+}
+
+impl BufferArgument for Literal {}
+impl<'a> BufferArgument for &'a PjRtBuffer {}
+
+/// Compiled + loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host-literal arguments.  Outer vec: devices; inner:
+    /// outputs (the lagkv artifacts return a single tuple).
+    pub fn execute<T: BufferArgument>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    /// Execute with device-buffer arguments (no host transfer).
+    pub fn execute_b<T: BufferArgument>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client handle (CPU plugin in the real binding).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The stub has no PJRT plugin: constructing the client fails, which is
+    /// what surfaces the "swap in the real binding" message to users.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu (stub build: no XLA shared libraries)")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_bookkeeping_works() {
+        let l = Literal::vec1(&[1.0f32; 12]);
+        let r = l.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[3, 4]);
+        assert!(l.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        let l = Literal::scalar(3i32);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+}

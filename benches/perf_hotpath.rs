@@ -6,17 +6,22 @@
 //!   * decode step (engine, literal path),
 //!   * prefill per bucket,
 //!   * end-to-end generation tokens/s,
+//!   * streaming TTFT + inter-token latency off the live event stream,
 //!   * XLA scorer vs Rust scorer (transfer overhead quantified).
 //!
 //! `cargo bench --bench perf_hotpath` — self-timed (no criterion offline).
+//! Record results per backend in EXPERIMENTS.md (convention documented
+//! there) so perf regressions stay attributable.
 
 use std::time::Instant;
 
 use lagkv::compress::policy::make_policy;
 use lagkv::compress::{maybe_compress, scores, topk};
 use lagkv::config::{CompressionConfig, PolicyKind};
+use lagkv::coordinator::{Event, GenerateParams, Router};
 use lagkv::engine::{Engine, SlotState};
 use lagkv::kvcache::KvCache;
+use lagkv::metrics::Histogram;
 use lagkv::util::argmax;
 use lagkv::util::rng::Rng;
 use lagkv::util::time_it;
@@ -167,6 +172,55 @@ fn bench_engine(engine: &Engine) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Streaming latencies only the event API can expose: time-to-first-token
+/// (queue + prefill + first decode) and the inter-token gap, measured off
+/// the live `Router::submit` stream.
+fn bench_streaming() -> anyhow::Result<()> {
+    let spec = lagkv::backend::EngineSpec::from_env()?;
+    let router = Router::start(spec, &["llama_like".to_string()]);
+    let mut rng = Rng::seed_from(7);
+    let mut ttft = Histogram::new();
+    let mut gaps = Histogram::new();
+    for i in 0..6u64 {
+        let item =
+            gen_passkey(&mut rng, &PasskeySpec { n_filler: 200, n_digits: 16, depth: None });
+        let req = GenerateParams::new(item.prompt)
+            .lag(64)
+            .ratio(0.5)
+            .max_new(48)
+            .seed(i)
+            .into_request(i)?;
+        let t0 = Instant::now();
+        let handle = router.submit("llama_like", req)?;
+        let mut last: Option<Instant> = None;
+        for ev in handle.events.iter() {
+            if matches!(ev, Event::Token { .. }) {
+                let now = Instant::now();
+                match last {
+                    None => ttft.record(now - t0),
+                    Some(prev) => gaps.record(now - prev),
+                }
+                last = Some(now);
+            }
+            if ev.is_terminal() {
+                break;
+            }
+        }
+    }
+    row(
+        "stream TTFT (submit -> first token)",
+        ttft.mean_ms() * 1e6,
+        &format!("p95 {:.2} ms over {} streams", ttft.p95_ms(), ttft.count()),
+    );
+    row(
+        "stream inter-token latency",
+        gaps.mean_ms() * 1e6,
+        &format!("p95 {:.3} ms over {} gaps", gaps.p95_ms(), gaps.count()),
+    );
+    router.shutdown();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     println!("== perf_hotpath ==");
     bench_scores();
@@ -178,6 +232,10 @@ fn main() -> anyhow::Result<()> {
             bench_engine(&engine)?;
         }
         Err(e) => eprintln!("SKIP engine benches: {e:#}"),
+    }
+    match bench_streaming() {
+        Ok(()) => {}
+        Err(e) => eprintln!("SKIP streaming benches: {e:#}"),
     }
     Ok(())
 }

@@ -8,7 +8,8 @@
 //! ```
 
 use lagkv::backend::EngineSpec;
-use lagkv::config::{CompressionConfig, PolicyKind};
+use lagkv::config::PolicyKind;
+use lagkv::coordinator::GenerateParams;
 use lagkv::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -29,23 +30,22 @@ fn main() -> anyhow::Result<()> {
                   one year out of the time like some other there \
                   <q> the falcon <a>";
 
-    for (label, cfg) in [
+    for (label, params) in [
         (
             "baseline (no compression)",
-            CompressionConfig { policy: PolicyKind::None, ..Default::default() },
+            GenerateParams::new(prompt).policy(PolicyKind::None).max_new(8),
         ),
         (
             "lagkv 4x (S=4, L=16, r=0.25)",
-            CompressionConfig {
-                policy: PolicyKind::LagKv,
-                sink: 4,
-                lag: 16,
-                ratio: 0.25,
-                ..Default::default()
-            },
+            GenerateParams::new(prompt)
+                .policy(PolicyKind::LagKv)
+                .sink(4)
+                .lag(16)
+                .ratio(0.25)
+                .max_new(8),
         ),
     ] {
-        let out = engine.generate(prompt, &cfg, 8, 0)?;
+        let out = engine.run(&params)?;
         println!("\n[{label}]");
         println!("  answer: {:?}", out.text);
         println!(

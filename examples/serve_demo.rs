@@ -1,9 +1,9 @@
 //! End-to-end serving driver (DESIGN.md §4 row E2E): boots the full stack —
 //! router, per-model coordinator threads with continuous batching, TCP
-//! server — fires a mixed batch of concurrent clients at it, and reports
-//! latency percentiles + throughput.  This is the proof that all layers
-//! compose: rust coordinator -> PJRT runtime -> AOT HLO of the JAX model
-//! that calls the Pallas kernel's scoring graph.
+//! server — fires a mixed batch of concurrent clients at it (one-shot and
+//! streaming traffic interleaved), reports latency percentiles, throughput,
+//! and streaming TTFT, then runs a two-turn session to show the compressed
+//! cache being reused across turns.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo -- --requests 24 --clients 6
@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use lagkv::coordinator::Router;
+use lagkv::coordinator::{GenerateParams, Router, RouterConfig};
 use lagkv::metrics::{Histogram, Table};
 use lagkv::server::{Client, Server};
 use lagkv::util::cli::Args;
@@ -21,102 +21,118 @@ use lagkv::util::json::Json;
 use lagkv::util::rng::Rng;
 use lagkv::workloads::longbench;
 use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
-use lagkv::workloads::score_item;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let spec = lagkv::backend::EngineSpec::from_args(&args)?;
-    let port = args.usize_or("port", 7199)? as u16;
     let n_requests = args.usize_or("requests", 24)?;
     let n_clients = args.usize_or("clients", 6)?;
 
-    // Boot the stack.
+    // Boot the stack on an ephemeral port.
     let models = vec!["llama_like".to_string(), "qwen_like".to_string()];
-    let router = Arc::new(Router::start(spec, &models));
+    let router = Arc::new(Router::start_with(spec, &models, RouterConfig::default()));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));
+    let (listener, port) = Server::bind(args.usize_or("port", 0)? as u16)?;
     {
         let server = server.clone();
         let stop = stop.clone();
         std::thread::spawn(move || {
-            if let Err(e) = server.serve(port, stop) {
+            if let Err(e) = server.serve_listener(listener, stop) {
                 eprintln!("server: {e:#}");
             }
         });
     }
-    std::thread::sleep(std::time::Duration::from_millis(300));
 
     // Build a mixed workload: passkey + longbench families, two models,
-    // compressed and baseline traffic interleaved.
+    // compressed and baseline traffic, every third request streaming.
     let mut rng = Rng::seed_from(5);
-    let mut requests: Vec<(String, String, String)> = Vec::new(); // (model, json, answer)
+    let mut requests: Vec<(String, bool)> = Vec::new(); // (wire line, stream?)
     for i in 0..n_requests {
         let model = if i % 2 == 0 { "llama_like" } else { "qwen_like" };
-        let (item, policy) = if i % 3 == 0 {
+        let item = if i % 3 == 0 {
             let nf = if model == "qwen_like" { 180 } else { 230 };
-            (
-                gen_passkey(&mut rng, &PasskeySpec { n_filler: nf, n_digits: 32, depth: None }),
-                "lagkv",
-            )
+            gen_passkey(&mut rng, &PasskeySpec { n_filler: nf, n_digits: 32, depth: None })
         } else {
             let fam = longbench::FAMILIES[i % longbench::FAMILIES.len()];
-            (longbench::generate(fam, &mut rng, 180), if i % 2 == 0 { "lagkv" } else { "none" })
+            longbench::generate(fam, &mut rng, 180)
         };
-        let req = lagkv::util::json::obj(vec![
-            ("id", lagkv::util::json::n(i as f64)),
-            ("model", lagkv::util::json::s(model)),
-            ("prompt", lagkv::util::json::s(item.prompt.clone())),
-            ("policy", lagkv::util::json::s(policy)),
-            ("lag", lagkv::util::json::n(32.0)),
-            ("ratio", lagkv::util::json::n(0.5)),
-            ("max_new", lagkv::util::json::n(40.0)),
-        ]);
-        requests.push((model.to_string(), req.to_string(), item.answer.clone()));
-        // keep the item for scoring
-        requests.last_mut().unwrap().2 = item.answer.clone();
-        // stash family in the answer tuple via item (scored below against passkey family only)
-        let _ = &item;
+        let policy = if i % 2 == 0 { "lagkv" } else { "none" };
+        let params = GenerateParams::new(item.prompt)
+            .model(model)
+            .policy(lagkv::config::PolicyKind::parse(policy)?)
+            .lag(32)
+            .ratio(0.5)
+            .max_new(40);
+        let streaming = i % 3 == 0;
+        requests.push((params.request_line(Some(i as u64), streaming), streaming));
     }
 
     // Fan out over client threads.
     let started = Instant::now();
     let chunk = requests.len().div_ceil(n_clients);
     let mut handles = Vec::new();
-    for (ci, batch) in requests.chunks(chunk).enumerate() {
+    for batch in requests.chunks(chunk) {
         let batch: Vec<_> = batch.to_vec();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<(Histogram, u64, usize)> {
-            let mut client = Client::connect(port)?;
-            let mut hist = Histogram::new();
-            let mut tokens = 0u64;
-            let mut errors = 0usize;
-            for (_, line, _) in &batch {
-                let t0 = Instant::now();
-                let resp = client.call(line)?;
-                hist.record(t0.elapsed());
-                if resp.opt("error").map(|e| *e != Json::Null).unwrap_or(false) {
-                    errors += 1;
-                } else {
-                    tokens += resp.get("new_tokens")?.as_usize()? as u64;
+        handles.push(std::thread::spawn(
+            move || -> anyhow::Result<(Histogram, Histogram, u64, usize)> {
+                let mut client = Client::connect(port)?;
+                let mut lat = Histogram::new();
+                let mut ttft = Histogram::new();
+                let mut tokens = 0u64;
+                let mut errors = 0usize;
+                for (line, streaming) in &batch {
+                    let t0 = Instant::now();
+                    if *streaming {
+                        let events = client.stream(line)?;
+                        let mut saw_token = false;
+                        for ev in &events {
+                            let kind = ev
+                                .opt("event")
+                                .and_then(|e| e.as_str().ok())
+                                .unwrap_or("");
+                            match kind {
+                                "token" if !saw_token => {
+                                    saw_token = true;
+                                    ttft.record(t0.elapsed());
+                                    tokens += 1;
+                                }
+                                "token" => tokens += 1,
+                                "error" => errors += 1,
+                                _ => {}
+                            }
+                        }
+                        lat.record(t0.elapsed());
+                    } else {
+                        let resp = client.call(line)?;
+                        lat.record(t0.elapsed());
+                        if resp.opt("error").map(|e| *e != Json::Null).unwrap_or(false) {
+                            errors += 1;
+                        } else {
+                            tokens += resp.get("new_tokens")?.as_usize()? as u64;
+                        }
+                    }
                 }
-            }
-            let _ = ci;
-            Ok((hist, tokens, errors))
-        }));
+                Ok((lat, ttft, tokens, errors))
+            },
+        ));
     }
 
-    let mut hist = Histogram::new();
+    let mut lat = Histogram::new();
+    let mut ttft = Histogram::new();
     let mut total_tokens = 0u64;
     let mut errors = 0usize;
     for h in handles {
-        let (h2, t, e) = h.join().expect("client thread")?;
-        hist.merge(&h2);
+        let (h_lat, h_ttft, t, e) = h.join().expect("client thread")?;
+        lat.merge(&h_lat);
+        ttft.merge(&h_ttft);
         total_tokens += t;
         errors += e;
     }
     let wall = started.elapsed().as_secs_f64();
 
     let mut t = Table::new(
-        "serve_demo: end-to-end serving (continuous batching, 2 models)",
+        "serve_demo: end-to-end serving (continuous batching, streaming, 2 models)",
         &["metric", "value"],
     );
     t.row(vec!["requests".into(), n_requests.to_string()]);
@@ -125,10 +141,45 @@ fn main() -> anyhow::Result<()> {
     t.row(vec!["wall s".into(), format!("{wall:.2}")]);
     t.row(vec!["requests/s".into(), format!("{:.2}", n_requests as f64 / wall)]);
     t.row(vec!["gen tokens/s".into(), format!("{:.1}", total_tokens as f64 / wall)]);
-    t.row(vec!["latency p50 ms".into(), format!("{:.1}", hist.p50_ms())]);
-    t.row(vec!["latency p95 ms".into(), format!("{:.1}", hist.p95_ms())]);
-    t.row(vec!["latency p99 ms".into(), format!("{:.1}", hist.p99_ms())]);
+    t.row(vec!["latency p50 ms".into(), format!("{:.1}", lat.p50_ms())]);
+    t.row(vec!["latency p95 ms".into(), format!("{:.1}", lat.p95_ms())]);
+    t.row(vec!["latency p99 ms".into(), format!("{:.1}", lat.p99_ms())]);
+    t.row(vec!["stream TTFT p50 ms".into(), format!("{:.1}", ttft.p50_ms())]);
     println!("{}", t.render());
+
+    // Two-turn session: the second turn prefills only its own text and the
+    // cache lengths continue the compressed trajectory from turn 1.
+    let mut client = Client::connect(port)?;
+    let mut rng = Rng::seed_from(9);
+    let turn1 = gen_passkey(&mut rng, &PasskeySpec { n_filler: 150, n_digits: 16, depth: None });
+    let t1 = client.call(
+        &GenerateParams::new(turn1.prompt)
+            .lag(16)
+            .ratio(0.25)
+            .max_new(12)
+            .session("demo-chat")
+            .request_line(Some(9001), false),
+    )?;
+    let t2 = client.call(
+        &GenerateParams::new("<q> the pass key <a>")
+            .lag(16)
+            .ratio(0.25)
+            .max_new(12)
+            .session("demo-chat")
+            .request_line(Some(9002), false),
+    )?;
+    println!("\nsession demo (id \"demo-chat\"):");
+    println!(
+        "  turn 1: prompt_tokens={} cache_lens={}",
+        t1.get("prompt_tokens")?.as_usize()?,
+        t1.get("cache_lens")?.to_string(),
+    );
+    println!(
+        "  turn 2: prompt_tokens={} reused_tokens={} cache_lens={}",
+        t2.get("prompt_tokens")?.as_usize()?,
+        t2.get("reused_tokens")?.as_usize()?,
+        t2.get("cache_lens")?.to_string(),
+    );
 
     stop.store(true, Ordering::Relaxed);
     Ok(())

@@ -1,0 +1,135 @@
+//! Hermetic server smoke check (CI job `server-smoke`): boots the TCP
+//! server on an ephemeral port over the CPU reference backend, runs one
+//! streaming request and one cancelled request, and asserts a clean
+//! shutdown.  Exits non-zero on any protocol violation.
+//!
+//! ```bash
+//! cargo run --release --example server_smoke
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use lagkv::backend::EngineSpec;
+use lagkv::config::PolicyKind;
+use lagkv::coordinator::{GenerateParams, Router, RouterConfig};
+use lagkv::engine::Engine;
+use lagkv::server::{Client, Server};
+use lagkv::util::json::Json;
+use lagkv::util::rng::Rng;
+use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
+
+fn kind(ev: &Json) -> String {
+    ev.opt("event").and_then(|e| e.as_str().ok()).unwrap_or("").to_string()
+}
+
+/// A prompt whose greedy chain runs long enough that a cancel sent after
+/// the first token always lands mid-decode (the toy LM head ends most
+/// chains early with EOS, so scan for a long one).
+fn long_prompt(engine: &Engine) -> anyhow::Result<String> {
+    let none = GenerateParams::new("x").policy(PolicyKind::None).compression();
+    for seed in 0..400u64 {
+        let mut rng = Rng::seed_from(seed);
+        let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 20, n_digits: 8, depth: None });
+        let out = engine.generate(&item.prompt, &none, 600, 0)?;
+        if out.tokens.len() >= 64 {
+            return Ok(item.prompt);
+        }
+    }
+    anyhow::bail!("no prompt with a >=64-token greedy chain in 400 candidates")
+}
+
+fn main() -> anyhow::Result<()> {
+    // The chain scan runs on a throwaway engine; the server gets its own.
+    let probe = Engine::cpu_ref("llama_like")?;
+    let prompt = long_prompt(&probe)?;
+
+    let models = vec!["llama_like".to_string()];
+    let cfg = RouterConfig::default();
+    let router = Arc::new(Router::start_with(EngineSpec::cpu(), &models, cfg));
+    let server = Arc::new(Server::new(router));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (listener, port) = Server::bind(0)?;
+    let serve_thread = {
+        let server = server.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || server.serve_listener(listener, stop))
+    };
+
+    // 1. One streaming request: started -> token+ -> done, deltas nonempty.
+    let mut client = Client::connect(port)?;
+    let line = GenerateParams::new("the pass key is 12345678 . remember it <q> pass key <a>")
+        .lag(16)
+        .ratio(0.5)
+        .max_new(12)
+        .request_line(Some(1), true);
+    let events = client.stream(&line)?;
+    assert!(events.len() >= 3, "expected started/token/done, got {} events", events.len());
+    assert_eq!(kind(&events[0]), "started", "first event: {:?}", events[0]);
+    assert_eq!(kind(events.last().unwrap()), "done");
+    let n_tokens = events.iter().filter(|e| kind(e) == "token").count();
+    assert!(n_tokens >= 1, "stream produced no tokens");
+    let done = events.last().unwrap();
+    assert_eq!(done.get("new_tokens")?.as_usize()?, n_tokens, "done must count the tokens");
+    println!("streaming ok: {n_tokens} tokens");
+
+    // 2. Cancel an unknown id: acked, not found.
+    client.send_line(r#"{"cancel": 777}"#)?;
+    let ack = client.read_json()?;
+    assert_eq!(kind(&ack), "cancel_ack");
+    assert!(!ack.get("found")?.as_bool()?, "unknown id must not be found");
+
+    // 3. A long streaming request cancelled mid-decode: read one token,
+    //    send {"cancel"}, then the stream must terminate with code
+    //    "cancelled" before the generation budget is spent.
+    let line = GenerateParams::new(prompt)
+        .lag(16)
+        .ratio(0.5)
+        .max_new(600)
+        .request_line(Some(2), true);
+    client.send_line(&line)?;
+    let mut seen_tokens = 0usize;
+    let mut cancelled = false;
+    let mut sent_cancel = false;
+    loop {
+        let ev = client.read_json()?;
+        match kind(&ev).as_str() {
+            "token" => {
+                seen_tokens += 1;
+                if !sent_cancel {
+                    sent_cancel = true;
+                    client.send_line(r#"{"cancel": 2}"#)?;
+                }
+            }
+            "cancel_ack" => {
+                assert!(ev.get("found")?.as_bool()?, "live id must be found");
+            }
+            "error" => {
+                let code = ev.get("error")?.get("code")?.as_str()?.to_string();
+                assert_eq!(code, "cancelled", "terminal error: {ev:?}");
+                cancelled = true;
+                break;
+            }
+            "done" => panic!("request completed before the cancel landed"),
+            _ => {}
+        }
+    }
+    assert!(cancelled);
+    assert!(seen_tokens < 600, "cancel must abort mid-decode ({seen_tokens} tokens seen)");
+    println!("cancellation ok: aborted after {seen_tokens} tokens");
+
+    // 4. Clean shutdown.  The forwarder thread deregisters its request
+    //    right after writing the terminal line; give it a moment.
+    drop(client);
+    stop.store(true, Ordering::Relaxed);
+    serve_thread.join().expect("server thread")?;
+    for _ in 0..100 {
+        if server.live_requests() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(server.live_requests(), 0, "no request may survive shutdown");
+    println!("SMOKE OK");
+    Ok(())
+}

@@ -211,7 +211,12 @@ pub struct ServingConfig {
     /// Prefill length buckets available as AOT executables (ascending).
     pub prefill_buckets: Vec<usize>,
     pub max_new_tokens: usize,
+    /// Bounded admission-queue depth per model (`queue-full` beyond it).
     pub max_queue: usize,
+    /// Session-store capacity per model (0 disables cross-turn reuse).
+    pub session_capacity: usize,
+    /// Session idle time-to-live, seconds.
+    pub session_ttl_s: u64,
     /// Port for the TCP front-end.
     pub port: u16,
 }
@@ -223,6 +228,8 @@ impl Default for ServingConfig {
             prefill_buckets: vec![128, 256, 512],
             max_new_tokens: 72,
             max_queue: 256,
+            session_capacity: 64,
+            session_ttl_s: 600,
             port: 7199,
         }
     }
@@ -233,6 +240,8 @@ impl ServingConfig {
         let mut c = ServingConfig::default();
         c.max_new_tokens = args.usize_or("max-new", c.max_new_tokens)?;
         c.max_queue = args.usize_or("max-queue", c.max_queue)?;
+        c.session_capacity = args.usize_or("sessions", c.session_capacity)?;
+        c.session_ttl_s = args.u64_or("session-ttl", c.session_ttl_s)?;
         c.port = args.usize_or("port", c.port as usize)? as u16;
         Ok(c)
     }

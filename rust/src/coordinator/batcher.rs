@@ -1,46 +1,108 @@
 //! Continuous batcher: keeps a fixed-shape decode bucket full by admitting
 //! queued requests into slots the moment they free up (prefill happens at
-//! admission, decode proceeds in lockstep across occupied slots).
+//! admission, decode proceeds in lockstep across occupied slots), and
+//! emits the typed [`Event`] stream live — `Started` after prefill, one
+//! `Token` per decode step, one `Compression` per partition event, and a
+//! terminal `Done`/`Error`.
 //!
 //! Bucket policy: with one pending request the B=1 executable is used (no
 //! padding waste); with more, the largest exported bucket.  A sequence
 //! joining mid-flight simply occupies an idle slot at the next step
 //! boundary — the defining property of continuous batching.
+//!
+//! Cancellation is cooperative: each burst boundary checks every slot's
+//! cancel flag and its event channel.  A set flag *or* a dropped receiver
+//! (the in-proc drop-abort path) frees the slot before the next decode
+//! step and emits `Error(Cancelled)` if anyone is still listening.
+//!
+//! Sessions: a request carrying a session id re-attaches that session's
+//! compressed cache (prefilling only the new text via the decode path) and
+//! detaches its cache back into the [`SessionStore`] when it finishes or
+//! is cancelled, so the next turn continues the Eq. 10 trajectory.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::compress::maybe_compress;
-use crate::engine::{Engine, SlotState};
+use crate::engine::{Engine, SeqState, SlotState};
+use crate::tokenizer::EOS;
 use crate::util::argmax;
 
-use super::{Response, WorkItem};
+use super::{ApiError, Event, SessionConfig, SessionStore, Timings, Usage, WorkItem};
+
+/// Liveness counters shared with the router (and tests): how many requests
+/// this coordinator finished, cancelled/aborted, or failed.
+#[derive(Default)]
+pub struct CoordStats {
+    pub completed: AtomicU64,
+    pub cancelled: AtomicU64,
+    pub failed: AtomicU64,
+    pub sessions_resumed: AtomicU64,
+}
 
 pub struct Coordinator {
     pub engine: Engine,
     /// Max decode steps a batch runs before re-checking the queue (keeps
     /// admission latency bounded even under long generations).
     pub admission_interval: usize,
+    sessions: SessionStore,
+    stats: Arc<CoordStats>,
 }
 
 struct Pending {
-    respond: std::sync::mpsc::Sender<Response>,
+    events: Sender<Event>,
+    cancel: Arc<std::sync::atomic::AtomicBool>,
+    /// False once a send failed (receiver dropped): drop-abort.
+    alive: bool,
     id: u64,
+    session: Option<String>,
+    /// Turns completed before this one (from the session entry).
+    turns: u32,
     queue_us: u64,
     prefill_us: u64,
     prompt_tokens: usize,
+    reused_tokens: usize,
     started: Instant,
+    /// Digit-ness of the last emitted visible token (`None` before the
+    /// first), which is all `Tokenizer::decode_delta` needs to extend the
+    /// running text in O(1) per token.
+    prev_digit: Option<bool>,
+    /// How many generated tokens have been emitted as `Token` events.
+    sent_tokens: usize,
+}
+
+impl Pending {
+    fn send(&mut self, ev: Event) {
+        if self.alive && self.events.send(ev).is_err() {
+            self.alive = false;
+        }
+    }
+
+    fn flagged(&self) -> bool {
+        !self.alive || self.cancel.load(Ordering::Relaxed)
+    }
 }
 
 impl Coordinator {
     pub fn new(engine: Engine) -> Self {
-        Coordinator { engine, admission_interval: 8 }
+        Coordinator::with_config(engine, SessionConfig::default(), Arc::default())
+    }
+
+    pub fn with_config(engine: Engine, sessions: SessionConfig, stats: Arc<CoordStats>) -> Self {
+        Coordinator {
+            engine,
+            admission_interval: 8,
+            sessions: SessionStore::new(sessions),
+            stats,
+        }
     }
 
     /// Serve until the work channel closes; blocks the calling thread.
-    pub fn run(&self, queue: Receiver<WorkItem>) -> Result<()> {
+    pub fn run(&mut self, queue: Receiver<WorkItem>) -> Result<()> {
         let bucket = *self.engine.decode_buckets().iter().max().unwrap_or(&1);
         let mut slots: Vec<SlotState> = (0..bucket).map(|_| SlotState::idle()).collect();
         let mut meta: Vec<Option<Pending>> = (0..bucket).map(|_| None).collect();
@@ -63,47 +125,120 @@ impl Coordinator {
                     }
                 };
                 admitted = true;
-                self.admit(item, &mut slots, &mut meta)?;
+                self.admit(item, &mut slots, &mut meta);
             }
 
             if !slots.iter().any(|s| s.occupied_any()) {
                 // Nothing in flight; check for disconnect to terminate.
                 match queue.recv_timeout(Duration::from_millis(50)) {
                     Ok(item) => {
-                        self.admit(item, &mut slots, &mut meta)?;
+                        self.admit(item, &mut slots, &mut meta);
                     }
                     Err(RecvTimeoutError::Timeout) => continue,
                     Err(RecvTimeoutError::Disconnected) => return Ok(()),
                 }
             }
 
-            // Decode burst, then recheck admissions.
+            // Decode burst, then recheck admissions.  Cancel flags are
+            // honoured at every step boundary.
             for _ in 0..self.admission_interval {
+                self.abort_flagged(&mut slots, &mut meta);
                 if !slots.iter().any(|s| s.active().is_some()) {
                     break;
                 }
                 self.engine.step_batch(&mut slots)?;
-                self.reap(&mut slots, &mut meta);
+                for idx in 0..slots.len() {
+                    self.progress_slot(idx, &mut slots, &mut meta);
+                    self.reap_slot(idx, &mut slots, &mut meta);
+                }
             }
         }
     }
 
-    fn admit(
-        &self,
-        item: WorkItem,
-        slots: &mut [SlotState],
-        meta: &mut [Option<Pending>],
-    ) -> Result<()> {
+    fn admit(&mut self, item: WorkItem, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
         let idx = slots.iter().position(|s| !s.occupied_any()).expect("free slot");
-        let queue_us = item.enqueued.elapsed().as_micros() as u64;
         let req = item.request;
+        let mut pending = Pending {
+            events: item.events,
+            cancel: item.cancel,
+            alive: true,
+            id: req.id,
+            session: req.session.clone(),
+            turns: 0,
+            queue_us: item.enqueued.elapsed().as_micros() as u64,
+            prefill_us: 0,
+            prompt_tokens: 0,
+            reused_tokens: 0,
+            started: Instant::now(),
+            prev_digit: None,
+            sent_tokens: 0,
+        };
+        if pending.flagged() {
+            // Cancelled while queued: never prefill.
+            pending.send(Event::Error { id: pending.id, error: ApiError::Cancelled });
+            self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+
         let t0 = Instant::now();
-        let ids = self.engine.tokenizer.encode(&req.prompt, true);
-        let prefill = self.engine.prefill(&ids);
+        let mut scorer = self.engine.make_scorer(&req.compression, req.seed);
+        let resumed = req.session.as_deref().and_then(|sid| self.sessions.take(sid));
+        // (logits, cache, prefill-stage compression events)
+        let prefill = match resumed {
+            Some(entry) => {
+                // Session resume: prefill only the new turn (no BOS) onto
+                // the reattached compressed history, via the decode path.
+                let ids = self.engine.tokenizer.encode(&req.prompt, false);
+                pending.prompt_tokens = ids.len();
+                pending.reused_tokens = entry.cache.appended;
+                pending.turns = entry.turns;
+                let mut feed = vec![entry.pending];
+                feed.extend_from_slice(&ids);
+                if entry.cache.appended + feed.len() + 1 >= self.engine.tmax {
+                    // Refuse before touching the cache so the stored
+                    // conversation survives for a shorter retry.
+                    let sid = req.session.as_deref().unwrap_or("");
+                    let message = format!(
+                        "session {sid:?}: history of {} + {} new tokens exceeds capacity {}",
+                        entry.cache.appended,
+                        feed.len(),
+                        self.engine.tmax
+                    );
+                    self.sessions.put(sid, entry.cache, entry.pending, entry.turns);
+                    pending.send(Event::Error {
+                        id: pending.id,
+                        error: ApiError::EngineFailure { message },
+                    });
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                self.stats.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+                let mut cache = entry.cache;
+                self.engine
+                    .prefill_onto(&mut cache, &req.compression, scorer.as_mut(), &feed)
+                    .map(|(logits, events)| (logits, cache, events))
+            }
+            None => {
+                let ids = self.engine.tokenizer.encode(&req.prompt, true);
+                pending.prompt_tokens = ids.len();
+                self.engine.prefill(&ids).and_then(|(logits, mut cache)| {
+                    // prefill-stage recursive compression
+                    let events = maybe_compress(&mut cache, &req.compression, scorer.as_mut())?;
+                    Ok((logits, cache, events))
+                })
+            }
+        };
+
         match prefill {
-            Ok((logits, cache)) => {
+            Ok((logits, cache, events)) => {
+                pending.prefill_us = t0.elapsed().as_micros() as u64;
+                pending.started = Instant::now();
+                pending.send(Event::Started {
+                    id: pending.id,
+                    prompt_tokens: pending.prompt_tokens,
+                    reused_tokens: pending.reused_tokens,
+                });
                 let first = argmax(&logits) as i32;
-                let scorer = self.engine.make_scorer(&req.compression, req.seed);
                 let mut slot = SlotState::occupied(
                     cache,
                     req.compression.clone(),
@@ -111,67 +246,102 @@ impl Coordinator {
                     first,
                     req.max_new,
                 );
-                if let Some(seq) = slot.active_mut() {
-                    // prefill-stage recursive compression
-                    let ev =
-                        maybe_compress(&mut seq.cache, &req.compression, seq.scorer.as_mut())?;
-                    seq.compression_events += ev.len();
+                if let Some(seq) = slot.seq_mut() {
+                    seq.compression_events += events.len();
+                    seq.step_events = events;
                     seq.push_generated(first, self.engine.tmax);
                 }
                 slots[idx] = slot;
-                meta[idx] = Some(Pending {
-                    respond: item.respond,
-                    id: req.id,
-                    queue_us,
-                    prefill_us: t0.elapsed().as_micros() as u64,
-                    prompt_tokens: ids.len(),
-                    started: Instant::now(),
-                });
-                // a freshly admitted sequence may already be done (max_new=1)
+                meta[idx] = Some(pending);
+                // emit the prefill-stage events and the first token; a
+                // freshly admitted sequence may already be done (max_new=1)
+                self.progress_slot(idx, slots, meta);
                 self.reap_slot(idx, slots, meta);
             }
             Err(e) => {
-                let _ = item.respond.send(Response {
-                    id: req.id,
-                    text: String::new(),
-                    tokens: vec![],
-                    prompt_tokens: ids.len(),
-                    cache_lens: vec![],
-                    compression_events: 0,
-                    queue_us,
-                    prefill_us: 0,
-                    decode_us: 0,
-                    error: Some(format!("{e:#}")),
+                pending.send(Event::Error {
+                    id: pending.id,
+                    error: ApiError::EngineFailure { message: format!("{e:#}") },
                 });
+                self.stats.failed.fetch_add(1, Ordering::Relaxed);
             }
         }
-        Ok(())
     }
 
-    fn reap(&self, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
-        for idx in 0..slots.len() {
-            self.reap_slot(idx, slots, meta);
+    /// Emit `Compression` and `Token` events for whatever the last step (or
+    /// admission) produced on one slot.
+    fn progress_slot(&self, idx: usize, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
+        let Some(seq) = slots[idx].seq_mut() else { return };
+        let Some(p) = meta[idx].as_mut() else { return };
+        for ev in std::mem::take(&mut seq.step_events) {
+            p.send(Event::Compression {
+                id: p.id,
+                layer_lens: seq.cache.lens(),
+                evicted: ev.l - ev.kept,
+            });
+        }
+        while p.sent_tokens < seq.generated.len() {
+            let token = seq.generated[p.sent_tokens];
+            // EOS is stripped from the folded text, so it streams an empty
+            // delta; everything else extends the text in O(1).
+            let text_delta = if token == EOS {
+                String::new()
+            } else {
+                let (delta, is_digit) = self.engine.tokenizer.decode_delta(p.prev_digit, token);
+                p.prev_digit = Some(is_digit);
+                delta
+            };
+            p.send(Event::Token { id: p.id, token, text_delta });
+            p.sent_tokens += 1;
         }
     }
 
-    fn reap_slot(&self, idx: usize, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
+    fn reap_slot(&mut self, idx: usize, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
         if !slots[idx].finished() {
             return;
         }
         let seq = slots[idx].take().unwrap();
-        let pending = meta[idx].take().expect("finished slot has metadata");
-        let text = self.engine.tokenizer.decode(&seq.generated_without_eos());
-        let _ = pending.respond.send(Response {
-            id: pending.id,
-            text,
-            tokens: seq.generated.clone(),
-            prompt_tokens: pending.prompt_tokens,
+        let mut p = meta[idx].take().expect("finished slot has metadata");
+        let usage = Usage {
+            prompt_tokens: p.prompt_tokens,
+            new_tokens: seq.generated.len(),
+            reused_tokens: p.reused_tokens,
             cache_lens: seq.cache.lens(),
             compression_events: seq.compression_events,
-            queue_us: pending.queue_us,
-            prefill_us: pending.prefill_us,
-            decode_us: pending.started.elapsed().as_micros() as u64,
-            error: None,
-        });
+        };
+        let timings = Timings {
+            queue_us: p.queue_us,
+            prefill_us: p.prefill_us,
+            decode_us: p.started.elapsed().as_micros() as u64,
+        };
+        p.send(Event::Done { id: p.id, usage, timings });
+        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.stash_session(&p, seq);
+    }
+
+    /// Free every slot whose request was cancelled or whose event receiver
+    /// is gone.  Runs at step boundaries, so an abort never wastes more
+    /// than one decode step.
+    fn abort_flagged(&mut self, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
+        for idx in 0..slots.len() {
+            let flagged = slots[idx].occupied_any()
+                && meta[idx].as_ref().map(|p| p.flagged()).unwrap_or(false);
+            if !flagged {
+                continue;
+            }
+            let seq = slots[idx].take().unwrap();
+            let mut p = meta[idx].take().expect("occupied slot has metadata");
+            p.send(Event::Error { id: p.id, error: ApiError::Cancelled });
+            self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            // A cancelled turn still advances its conversation: the cache
+            // holds everything decoded so far.
+            self.stash_session(&p, seq);
+        }
+    }
+
+    fn stash_session(&mut self, p: &Pending, seq: SeqState) {
+        if let Some(sid) = &p.session {
+            self.sessions.put(sid, seq.cache, seq.next_token, p.turns + 1);
+        }
     }
 }

@@ -1,17 +1,37 @@
-//! L3 coordination: request types, the FCFS admission queue, the
-//! continuous batcher, and the multi-model router.
+//! L3 coordination: the typed serving API (events, errors, params), the
+//! FCFS admission queue, the continuous batcher, the session store, and the
+//! multi-model router.
 //!
 //! Data flow (vLLM-router-like, scaled to this testbed):
 //!
 //! ```text
-//!   clients ──> server (TCP/json or in-proc) ──> Router
-//!                                                  │ per model variant
-//!                                                  ▼
-//!                                   Coordinator (one thread per model)
-//!                                     admission queue (bounded, FCFS)
-//!                                     continuous batcher over decode slots
-//!                                     engine.step_batch / prefill
+//!   clients ──> server (TCP/ndjson or in-proc) ──> Router
+//!                                                    │ per model variant
+//!                                                    ▼
+//!                                     Coordinator (one thread per model)
+//!                                       admission queue (bounded, FCFS)
+//!                                       continuous batcher over decode slots
+//!                                       SessionStore (LRU+TTL, cross-turn
+//!                                         reuse of the compressed KvCache)
+//!                                       engine.step_batch / prefill
 //! ```
+//!
+//! The public surface is **streaming- and session-first**:
+//!
+//! * [`Router::submit`] returns a [`GenHandle`] whose receiver yields typed
+//!   [`Event`]s live from the continuous batcher — one `Token` per decode
+//!   step, one `Compression` per partition-compression event, bracketed by
+//!   `Started` and `Done`/`Error`.
+//! * [`Router::generate`] folds the same events back into a [`Response`],
+//!   so one-shot callers and the old tests keep working unchanged.
+//! * Dropping a [`GenHandle`] mid-stream aborts the slot (the coordinator
+//!   notices the dead channel at the next event); [`GenHandle::cancel`]
+//!   aborts it explicitly, which is what the server's `{"cancel": id}`
+//!   control line drives.
+//! * A [`Request`] carrying a `session` id detaches its finished per-layer
+//!   [`crate::kvcache::KvCache`] into the coordinator's [`SessionStore`];
+//!   the next turn re-attaches it and prefills only the new text against
+//!   the already-LagKV-compressed history (see [`session`]).
 //!
 //! Compression is a *per-request* property: each request carries its own
 //! (policy, S, L, r), so a single deployment can serve baseline and
@@ -20,12 +40,301 @@
 
 pub mod batcher;
 pub mod router;
+pub mod session;
 
-use std::sync::mpsc;
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
 
-use crate::config::CompressionConfig;
+use crate::config::{CompressionConfig, PolicyKind, ScorerBackend};
+use crate::util::json::{arr, n, obj, s, Json};
 
-/// A generation request.
+/// Structured serving-API error.  Replaces the stringly `Response.error`;
+/// every variant has a stable wire `code()` the server emits verbatim.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// The model's admission queue is at capacity; retry later.
+    QueueFull { model: String },
+    /// No coordinator serves this model variant.
+    UnknownModel { model: String, have: Vec<String> },
+    /// Request parameters failed validation (bad values, unknown fields).
+    BadParams { message: String },
+    /// The engine failed to load or a prefill/decode step errored.
+    EngineFailure { message: String },
+    /// The request was cancelled (explicitly, or by dropping its handle).
+    Cancelled,
+}
+
+impl ApiError {
+    /// Stable machine-readable code (the wire `"code"` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ApiError::QueueFull { .. } => "queue-full",
+            ApiError::UnknownModel { .. } => "unknown-model",
+            ApiError::BadParams { .. } => "bad-params",
+            ApiError::EngineFailure { .. } => "engine-failure",
+            ApiError::Cancelled => "cancelled",
+        }
+    }
+
+    /// Human-readable detail (the wire `"message"` field).
+    pub fn message(&self) -> String {
+        match self {
+            ApiError::QueueFull { model } => {
+                format!("admission queue for {model} is full")
+            }
+            ApiError::UnknownModel { model, have } => {
+                format!("unknown model {model:?} (have {have:?})")
+            }
+            ApiError::BadParams { message } => message.clone(),
+            ApiError::EngineFailure { message } => message.clone(),
+            ApiError::Cancelled => "request cancelled".to_string(),
+        }
+    }
+
+    /// Wire rendering: `{"code": ..., "message": ...}`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![("code", s(self.code())), ("message", s(self.message()))])
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code(), self.message())
+    }
+}
+
+// Makes `?` lift ApiError into anyhow::Error at call sites that want it.
+impl std::error::Error for ApiError {}
+
+/// Token accounting for one finished (or aborted) generation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Usage {
+    /// Tokens prefilled from the request's *own* prompt text.  On a session
+    /// resume this counts only the new turn — the reattached history is
+    /// reported via `reused_tokens` instead.
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    /// History tokens reattached from the session store (0 when fresh).
+    pub reused_tokens: usize,
+    /// Final per-layer cache lengths (the Eq. 10 trajectory evidence).
+    pub cache_lens: Vec<usize>,
+    /// Partition-compression events fired over the request's lifetime.
+    pub compression_events: usize,
+}
+
+/// Latency breakdown, microseconds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Timings {
+    pub queue_us: u64,
+    pub prefill_us: u64,
+    pub decode_us: u64,
+}
+
+/// One serving event, emitted live from the continuous batcher.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Prefill finished; decode is about to begin.
+    Started { id: u64, prompt_tokens: usize, reused_tokens: usize },
+    /// One decoded token.  `text_delta` is the suffix the token appended to
+    /// the running text (empty for EOS); concatenating the deltas of a
+    /// stream reproduces the folded `Response.text` exactly.
+    Token { id: u64, token: i32, text_delta: String },
+    /// One partition-compression event (Fig. 1) fired on this request's
+    /// cache.  `layer_lens` is the per-layer length snapshot *after* the
+    /// event; `evicted` is the number of rows it removed per head.
+    Compression { id: u64, layer_lens: Vec<usize>, evicted: usize },
+    /// Generation finished cleanly.
+    Done { id: u64, usage: Usage, timings: Timings },
+    /// Generation failed or was cancelled; terminal.
+    Error { id: u64, error: ApiError },
+}
+
+impl Event {
+    pub fn id(&self) -> u64 {
+        match self {
+            Event::Started { id, .. }
+            | Event::Token { id, .. }
+            | Event::Compression { id, .. }
+            | Event::Done { id, .. }
+            | Event::Error { id, .. } => *id,
+        }
+    }
+
+    /// Does this event terminate its stream?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::Done { .. } | Event::Error { .. })
+    }
+}
+
+/// Everything a caller can set on a generation, with defaults matching
+/// [`CompressionConfig::default`].  This is the one way the server parser,
+/// the examples, the benches, and the harness construct requests — nothing
+/// hand-mutates a `CompressionConfig` anymore.
+#[derive(Debug, Clone)]
+pub struct GenerateParams {
+    pub model: String,
+    pub prompt: String,
+    pub policy: PolicyKind,
+    pub sink: usize,
+    pub lag: usize,
+    pub ratio: f64,
+    pub scorer: ScorerBackend,
+    /// `None` -> the policy's default (2 for recursive-L2, else 0).
+    pub skip_layers: Option<usize>,
+    pub max_new: usize,
+    pub seed: u64,
+    /// Conversation key for cross-turn KV-cache reuse.
+    pub session: Option<String>,
+}
+
+impl Default for GenerateParams {
+    fn default() -> Self {
+        let c = CompressionConfig::default();
+        GenerateParams {
+            model: "llama_like".to_string(),
+            prompt: String::new(),
+            policy: c.policy,
+            sink: c.sink,
+            lag: c.lag,
+            ratio: c.ratio,
+            scorer: c.scorer,
+            skip_layers: None,
+            max_new: 72,
+            seed: 0,
+            session: None,
+        }
+    }
+}
+
+impl GenerateParams {
+    pub fn new(prompt: impl Into<String>) -> GenerateParams {
+        GenerateParams { prompt: prompt.into(), ..Default::default() }
+    }
+
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = model.to_string();
+        self
+    }
+
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn sink(mut self, sink: usize) -> Self {
+        self.sink = sink;
+        self
+    }
+
+    pub fn lag(mut self, lag: usize) -> Self {
+        self.lag = lag;
+        self
+    }
+
+    pub fn ratio(mut self, ratio: f64) -> Self {
+        self.ratio = ratio;
+        self
+    }
+
+    pub fn scorer(mut self, scorer: ScorerBackend) -> Self {
+        self.scorer = scorer;
+        self
+    }
+
+    pub fn skip_layers(mut self, n_layers: usize) -> Self {
+        self.skip_layers = Some(n_layers);
+        self
+    }
+
+    pub fn max_new(mut self, max_new: usize) -> Self {
+        self.max_new = max_new;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn session(mut self, id: impl Into<String>) -> Self {
+        self.session = Some(id.into());
+        self
+    }
+
+    /// The compression knobs as the driver-level config.
+    pub fn compression(&self) -> CompressionConfig {
+        let skip = self.skip_layers.unwrap_or(match self.policy {
+            PolicyKind::L2Norm => 2,
+            _ => 0,
+        });
+        CompressionConfig {
+            policy: self.policy,
+            sink: self.sink,
+            lag: self.lag,
+            ratio: self.ratio,
+            scorer: self.scorer,
+            skip_layers: skip,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.prompt.is_empty() && self.session.is_none() {
+            return Err(ApiError::BadParams {
+                message: "prompt must be non-empty (or carry a session id)".to_string(),
+            });
+        }
+        self.compression()
+            .validate()
+            .map_err(|e| ApiError::BadParams { message: format!("{e:#}") })
+    }
+
+    /// Validate and produce the queued request form.
+    pub fn into_request(self, id: u64) -> Result<Request, ApiError> {
+        self.validate()?;
+        let compression = self.compression();
+        Ok(Request {
+            id,
+            prompt: self.prompt,
+            compression,
+            max_new: self.max_new,
+            seed: self.seed,
+            session: self.session,
+        })
+    }
+
+    /// The TCP wire form of this request (see DESIGN.md): one JSON line.
+    /// Fields at their defaults are omitted, matching the parser's
+    /// fill-in-defaults behaviour.
+    pub fn request_line(&self, id: Option<u64>, stream: bool) -> String {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if let Some(id) = id {
+            pairs.push(("id", n(id as f64)));
+        }
+        pairs.push(("model", s(self.model.clone())));
+        pairs.push(("prompt", s(self.prompt.clone())));
+        pairs.push(("policy", s(self.policy.name())));
+        pairs.push(("sink", n(self.sink as f64)));
+        pairs.push(("lag", n(self.lag as f64)));
+        pairs.push(("ratio", n(self.ratio)));
+        if self.scorer == ScorerBackend::Xla {
+            pairs.push(("scorer", s("xla")));
+        }
+        if let Some(skip) = self.skip_layers {
+            pairs.push(("skip_layers", n(skip as f64)));
+        }
+        pairs.push(("max_new", n(self.max_new as f64)));
+        pairs.push(("seed", n(self.seed as f64)));
+        if let Some(sid) = &self.session {
+            pairs.push(("session_id", s(sid.clone())));
+        }
+        if stream {
+            pairs.push(("stream", Json::Bool(true)));
+        }
+        obj(pairs).to_string()
+    }
+}
+
+/// A generation request as queued at a coordinator.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -34,47 +343,237 @@ pub struct Request {
     pub max_new: usize,
     /// Random seed for seeded policies.
     pub seed: u64,
+    /// Conversation key: reattach this session's compressed cache before
+    /// prefill and detach it back into the store afterwards.
+    pub session: Option<String>,
 }
 
-/// A finished generation.
+/// A finished generation, as folded from an event stream.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub text: String,
     pub tokens: Vec<i32>,
     pub prompt_tokens: usize,
+    pub reused_tokens: usize,
     pub cache_lens: Vec<usize>,
     pub compression_events: usize,
     /// Queue wait + prefill + decode, microseconds.
     pub queue_us: u64,
     pub prefill_us: u64,
     pub decode_us: u64,
-    pub error: Option<String>,
-}
-
-/// A queued unit: request plus its response channel and enqueue timestamp.
-pub struct WorkItem {
-    pub request: Request,
-    pub respond: mpsc::Sender<Response>,
-    pub enqueued: std::time::Instant,
+    pub error: Option<ApiError>,
 }
 
 impl Response {
-    pub fn error(id: u64, msg: &str) -> Response {
+    fn empty(id: u64) -> Response {
         Response {
             id,
             text: String::new(),
             tokens: vec![],
             prompt_tokens: 0,
+            reused_tokens: 0,
             cache_lens: vec![],
             compression_events: 0,
             queue_us: 0,
             prefill_us: 0,
             decode_us: 0,
-            error: Some(msg.to_string()),
+            error: None,
         }
+    }
+
+    pub fn from_error(id: u64, error: ApiError) -> Response {
+        Response { error: Some(error), ..Response::empty(id) }
+    }
+
+    /// Fold an event stream back into the one-shot response shape.  The
+    /// stream may be partial (terminal event missing == engine failure).
+    pub fn from_events<I: IntoIterator<Item = Event>>(events: I) -> Response {
+        let mut r = Response::empty(0);
+        let mut terminal = false;
+        for ev in events {
+            r.id = ev.id();
+            match ev {
+                Event::Started { prompt_tokens, reused_tokens, .. } => {
+                    r.prompt_tokens = prompt_tokens;
+                    r.reused_tokens = reused_tokens;
+                }
+                Event::Token { token, text_delta, .. } => {
+                    r.tokens.push(token);
+                    r.text.push_str(&text_delta);
+                }
+                Event::Compression { .. } => {
+                    r.compression_events += 1;
+                }
+                Event::Done { usage, timings, .. } => {
+                    r.prompt_tokens = usage.prompt_tokens;
+                    r.reused_tokens = usage.reused_tokens;
+                    r.cache_lens = usage.cache_lens;
+                    r.compression_events = usage.compression_events;
+                    r.queue_us = timings.queue_us;
+                    r.prefill_us = timings.prefill_us;
+                    r.decode_us = timings.decode_us;
+                    terminal = true;
+                }
+                Event::Error { error, .. } => {
+                    r.error = Some(error);
+                    terminal = true;
+                }
+            }
+            if terminal {
+                break;
+            }
+        }
+        if !terminal && r.error.is_none() {
+            r.error = Some(ApiError::EngineFailure {
+                message: "event stream ended without Done/Error".to_string(),
+            });
+        }
+        r
+    }
+
+    /// Render as one JSON wire line (the non-streaming response shape).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", n(self.id as f64)),
+            ("text", s(self.text.clone())),
+            ("tokens", arr(self.tokens.iter().map(|&t| n(t as f64)).collect())),
+            ("prompt_tokens", n(self.prompt_tokens as f64)),
+            ("reused_tokens", n(self.reused_tokens as f64)),
+            ("new_tokens", n(self.tokens.len() as f64)),
+            ("cache_lens", arr(self.cache_lens.iter().map(|&l| n(l as f64)).collect())),
+            ("compression_events", n(self.compression_events as f64)),
+            ("queue_us", n(self.queue_us as f64)),
+            ("prefill_us", n(self.prefill_us as f64)),
+            ("decode_us", n(self.decode_us as f64)),
+            ("error", self.error.as_ref().map(|e| e.to_json()).unwrap_or(Json::Null)),
+        ])
     }
 }
 
-pub use batcher::Coordinator;
-pub use router::Router;
+/// A queued unit: request, its live event channel, its cancel flag, and
+/// the enqueue timestamp.
+pub struct WorkItem {
+    pub request: Request,
+    pub events: mpsc::Sender<Event>,
+    pub cancel: Arc<AtomicBool>,
+    pub enqueued: std::time::Instant,
+}
+
+pub use batcher::{CoordStats, Coordinator};
+pub use router::{GenHandle, Router, RouterConfig};
+pub use session::{SessionConfig, SessionStore};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn api_error_codes_are_stable() {
+        let errs = [
+            ApiError::QueueFull { model: "m".into() },
+            ApiError::UnknownModel { model: "m".into(), have: vec![] },
+            ApiError::BadParams { message: "x".into() },
+            ApiError::EngineFailure { message: "y".into() },
+            ApiError::Cancelled,
+        ];
+        let codes: Vec<&str> = errs.iter().map(|e| e.code()).collect();
+        assert_eq!(
+            codes,
+            vec!["queue-full", "unknown-model", "bad-params", "engine-failure", "cancelled"]
+        );
+        for e in &errs {
+            let j = e.to_json();
+            assert_eq!(j.get("code").unwrap().as_str().unwrap(), e.code());
+            assert!(!e.message().is_empty());
+        }
+    }
+
+    #[test]
+    fn params_builder_defaults_and_compression() {
+        let p = GenerateParams::new("hi").lag(32).ratio(0.25).policy(PolicyKind::L2Norm);
+        let c = p.compression();
+        assert_eq!(c.lag, 32);
+        assert_eq!(c.ratio, 0.25);
+        assert_eq!(c.skip_layers, 2, "L2Norm defaults to skipping 2 layers");
+        let c2 = p.clone().skip_layers(0).compression();
+        assert_eq!(c2.skip_layers, 0, "explicit skip_layers wins");
+        let req = p.into_request(7).unwrap();
+        assert_eq!(req.id, 7);
+        assert_eq!(req.prompt, "hi");
+    }
+
+    #[test]
+    fn params_validation_rejects_bad_values() {
+        let bad = GenerateParams::new("x").ratio(0.0);
+        assert_eq!(bad.validate().unwrap_err().code(), "bad-params");
+        let empty = GenerateParams::new("");
+        assert_eq!(empty.validate().unwrap_err().code(), "bad-params");
+        // empty prompt is fine on a session resume
+        assert!(GenerateParams::new("").session("s1").validate().is_ok());
+    }
+
+    #[test]
+    fn request_line_round_trips_through_json() {
+        let p = GenerateParams::new("the falcon")
+            .model("qwen_like")
+            .policy(PolicyKind::H2O)
+            .session("chat-1");
+        let v = Json::parse(&p.request_line(Some(3), true)).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(v.get("model").unwrap().as_str().unwrap(), "qwen_like");
+        assert_eq!(v.get("policy").unwrap().as_str().unwrap(), "h2o");
+        assert_eq!(v.get("session_id").unwrap().as_str().unwrap(), "chat-1");
+        assert!(v.get("stream").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn fold_reconstructs_response_from_events() {
+        let events = vec![
+            Event::Started { id: 9, prompt_tokens: 5, reused_tokens: 0 },
+            Event::Token { id: 9, token: 1200, text_delta: "the".into() },
+            Event::Compression { id: 9, layer_lens: vec![8, 8], evicted: 4 },
+            Event::Token { id: 9, token: 1201, text_delta: " of".into() },
+            Event::Done {
+                id: 9,
+                usage: Usage {
+                    prompt_tokens: 5,
+                    new_tokens: 2,
+                    reused_tokens: 0,
+                    cache_lens: vec![8, 8],
+                    compression_events: 1,
+                },
+                timings: Timings { queue_us: 1, prefill_us: 2, decode_us: 3 },
+            },
+        ];
+        let r = Response::from_events(events);
+        assert_eq!(r.id, 9);
+        assert_eq!(r.text, "the of");
+        assert_eq!(r.tokens, vec![1200, 1201]);
+        assert_eq!(r.compression_events, 1);
+        assert_eq!(r.cache_lens, vec![8, 8]);
+        assert_eq!(r.decode_us, 3);
+        assert!(r.error.is_none());
+    }
+
+    #[test]
+    fn fold_without_terminal_event_is_an_engine_failure() {
+        let r = Response::from_events(vec![Event::Started {
+            id: 2,
+            prompt_tokens: 1,
+            reused_tokens: 0,
+        }]);
+        assert_eq!(r.error.as_ref().unwrap().code(), "engine-failure");
+    }
+
+    #[test]
+    fn fold_stops_at_terminal_error() {
+        let r = Response::from_events(vec![
+            Event::Started { id: 4, prompt_tokens: 1, reused_tokens: 0 },
+            Event::Error { id: 4, error: ApiError::Cancelled },
+            Event::Token { id: 4, token: 1, text_delta: "never".into() },
+        ]);
+        assert_eq!(r.error, Some(ApiError::Cancelled));
+        assert!(r.tokens.is_empty(), "events after the terminal one are ignored");
+    }
+}

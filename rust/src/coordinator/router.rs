@@ -7,74 +7,164 @@
 //! threads.  The spec also carries the backend choice, so a router can
 //! serve the hermetic CPU reference backend and the XLA artifact backend
 //! with identical plumbing.
+//!
+//! [`Router::submit`] is the streaming entry point: it returns a
+//! [`GenHandle`] whose receiver yields live [`Event`]s.  [`Router::generate`]
+//! folds the stream back into a [`Response`] for one-shot callers.  The
+//! admission queue is bounded ([`RouterConfig::queue_depth`]); a full queue
+//! is a typed [`ApiError::QueueFull`] instead of unbounded memory growth.
+//!
+//! [`Engine`]: crate::engine::Engine
 
 use std::collections::HashMap;
-use std::sync::mpsc::{self, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::backend::EngineSpec;
 
-use super::{Coordinator, Request, Response, WorkItem};
+use super::{
+    ApiError, CoordStats, Coordinator, Event, Request, Response, SessionConfig, WorkItem,
+};
+
+/// Per-coordinator serving knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Bounded admission-queue depth per model; a full queue rejects with
+    /// [`ApiError::QueueFull`].
+    pub queue_depth: usize,
+    pub sessions: SessionConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { queue_depth: 256, sessions: SessionConfig::default() }
+    }
+}
+
+/// A live generation: the event receiver plus its cancel flag.  Dropping
+/// the handle aborts the request (the coordinator notices the dead channel
+/// at the next event it emits); [`GenHandle::cancel`] aborts it explicitly.
+pub struct GenHandle {
+    pub id: u64,
+    pub events: mpsc::Receiver<Event>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl GenHandle {
+    /// Ask the coordinator to abort this request at the next step boundary.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// The shared cancel flag (the server keeps one per live request so a
+    /// `{"cancel": id}` line — possibly on another connection — can abort).
+    pub fn cancel_flag(&self) -> Arc<AtomicBool> {
+        self.cancel.clone()
+    }
+
+    /// Block until the stream terminates and fold it into a [`Response`].
+    pub fn wait(self) -> Response {
+        Response::from_events(self.events)
+    }
+}
 
 pub struct Router {
-    senders: HashMap<String, Sender<WorkItem>>,
+    senders: HashMap<String, SyncSender<WorkItem>>,
+    stats: HashMap<String, Arc<CoordStats>>,
     threads: Vec<JoinHandle<()>>,
 }
 
 impl Router {
+    /// Spin up one coordinator thread per model variant with default
+    /// serving knobs.
+    pub fn start(spec: EngineSpec, variants: &[String]) -> Router {
+        Router::start_with(spec, variants, RouterConfig::default())
+    }
+
     /// Spin up one coordinator thread per model variant.  Engine loading
     /// happens inside the thread; a variant that fails to load answers all
-    /// of its requests with an error instead of killing the router.
-    pub fn start(spec: EngineSpec, variants: &[String]) -> Router {
+    /// of its requests with `engine-failure` instead of killing the router.
+    pub fn start_with(spec: EngineSpec, variants: &[String], cfg: RouterConfig) -> Router {
         let mut senders = HashMap::new();
+        let mut stats = HashMap::new();
         let mut threads = Vec::new();
         for variant in variants {
-            let (tx, rx) = mpsc::channel::<WorkItem>();
+            let (tx, rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
             senders.insert(variant.clone(), tx);
+            let coord_stats = Arc::new(CoordStats::default());
+            stats.insert(variant.clone(), coord_stats.clone());
             let spec = spec.clone();
             let name = variant.clone();
+            let sessions = cfg.sessions.clone();
             threads.push(std::thread::spawn(move || match spec.build(&name) {
                 Ok(engine) => {
-                    let coord = Coordinator::new(engine);
+                    let mut coord = Coordinator::with_config(engine, sessions, coord_stats);
                     if let Err(e) = coord.run(rx) {
                         eprintln!("coordinator {name} died: {e:#}");
                     }
                 }
                 Err(e) => {
-                    let msg = format!("engine {name} failed to load: {e:#}");
-                    eprintln!("{msg}");
+                    let error = ApiError::EngineFailure {
+                        message: format!("engine {name} failed to load: {e:#}"),
+                    };
+                    eprintln!("{error}");
                     while let Ok(item) = rx.recv() {
-                        let _ = item.respond.send(Response::error(item.request.id, &msg));
+                        let _ = item.events.send(Event::Error {
+                            id: item.request.id,
+                            error: error.clone(),
+                        });
                     }
                 }
             }));
         }
-        Router { senders, threads }
+        Router { senders, stats, threads }
     }
 
     pub fn models(&self) -> Vec<String> {
         self.senders.keys().cloned().collect()
     }
 
-    /// Submit a request; returns a receiver for its response.
-    pub fn submit(&self, model: &str, request: Request) -> Result<mpsc::Receiver<Response>> {
-        let tx = self
-            .senders
-            .get(model)
-            .ok_or_else(|| anyhow!("unknown model {model:?} (have {:?})", self.models()))?;
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(WorkItem { request, respond: rtx, enqueued: Instant::now() })
-            .map_err(|_| anyhow!("coordinator for {model} is gone"))?;
-        Ok(rrx)
+    /// This model's liveness counters (completed/cancelled/failed).
+    pub fn stats(&self, model: &str) -> Option<Arc<CoordStats>> {
+        self.stats.get(model).cloned()
     }
 
-    /// Submit and wait (in-proc convenience).
+    /// Submit a request; returns the live event stream.
+    pub fn submit(&self, model: &str, request: Request) -> Result<GenHandle, ApiError> {
+        let tx = self.senders.get(model).ok_or_else(|| ApiError::UnknownModel {
+            model: model.to_string(),
+            have: self.models(),
+        })?;
+        let (etx, erx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let id = request.id;
+        let item = WorkItem {
+            request,
+            events: etx,
+            cancel: cancel.clone(),
+            enqueued: Instant::now(),
+        };
+        match tx.try_send(item) {
+            Ok(()) => Ok(GenHandle { id, events: erx, cancel }),
+            Err(TrySendError::Full(_)) => {
+                Err(ApiError::QueueFull { model: model.to_string() })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ApiError::EngineFailure {
+                message: format!("coordinator for {model} is gone"),
+            }),
+        }
+    }
+
+    /// Submit and fold the event stream (one-shot convenience; this is the
+    /// pre-streaming API surface, kept for callers and tests).
     pub fn generate(&self, model: &str, request: Request) -> Result<Response> {
-        let rx = self.submit(model, request)?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped the response"))
+        let handle = self.submit(model, request)?;
+        Ok(handle.wait())
     }
 
     /// Drop the senders and join the worker threads.

@@ -1,0 +1,181 @@
+//! Cross-turn session store: keeps a finished request's per-layer
+//! [`KvCache`] — sink rows, compressed survivors, uncompressed tail,
+//! per-head positions and accumulated attention mass, all intact — so the
+//! next turn of the conversation prefills only its *new* text against an
+//! already-LagKV-compressed history.
+//!
+//! This is where an attention-free eviction policy earns its keep in a
+//! serving stack: the detached cache needs no attention statistics to stay
+//! compressible, so a turn can resume under any policy and the Eq. 10
+//! length trajectory simply continues from where turn N left off.
+//!
+//! The store is bounded two ways: a capacity cap (LRU eviction once full)
+//! and a TTL (entries expire `ttl` after their last use).  Both bounds are
+//! enforced on every mutation, so the store can never grow past
+//! `capacity` entries regardless of traffic shape.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::kvcache::KvCache;
+
+/// Store bounds.  `capacity == 0` disables session persistence entirely
+/// (requests still run; their caches are simply dropped at the end).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub capacity: usize,
+    pub ttl: Duration,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { capacity: 64, ttl: Duration::from_secs(600) }
+    }
+}
+
+/// One detached conversation: the compressed cache plus the token the last
+/// turn generated but never appended (decode always runs one token behind
+/// generation), which the next turn must feed first so the cache matches
+/// the equivalent concatenated prompt exactly.
+pub struct SessionEntry {
+    pub cache: KvCache,
+    pub pending: i32,
+    pub turns: u32,
+    last_used: Instant,
+}
+
+pub struct SessionStore {
+    cfg: SessionConfig,
+    map: HashMap<String, SessionEntry>,
+}
+
+impl SessionStore {
+    pub fn new(cfg: SessionConfig) -> SessionStore {
+        SessionStore { cfg, map: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total KV rows currently held across all sessions (accounting).
+    pub fn total_rows(&self) -> usize {
+        self.map.values().map(|e| e.cache.total_rows()).sum()
+    }
+
+    /// Detach a session's cache for reattachment.  Removes the entry; the
+    /// caller owns the cache until it `put`s an updated one back.
+    pub fn take(&mut self, id: &str) -> Option<SessionEntry> {
+        self.purge_expired();
+        self.map.remove(id)
+    }
+
+    /// Attach (or re-attach) a finished turn's cache under `id`.  Enforces
+    /// the TTL and the capacity cap (evicting the least-recently-used
+    /// entry when full).
+    pub fn put(&mut self, id: &str, cache: KvCache, pending: i32, turns: u32) {
+        if self.cfg.capacity == 0 {
+            return;
+        }
+        self.purge_expired();
+        while !self.map.contains_key(id) && self.map.len() >= self.cfg.capacity {
+            if let Some(key) = self.lru_key() {
+                self.map.remove(&key);
+            } else {
+                break;
+            }
+        }
+        let entry = SessionEntry { cache, pending, turns, last_used: Instant::now() };
+        self.map.insert(id.to_string(), entry);
+    }
+
+    fn lru_key(&self) -> Option<String> {
+        self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
+    }
+
+    fn purge_expired(&mut self) {
+        let ttl = self.cfg.ttl;
+        let now = Instant::now();
+        self.map.retain(|_, e| now.duration_since(e.last_used) <= ttl);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache_with_rows(n: usize) -> KvCache {
+        let mut c = KvCache::new(1, 1, 2);
+        for t in 0..n {
+            c.append_token(&[0.0, 0.0], &[0.0, 0.0], t as i32).unwrap();
+        }
+        c
+    }
+
+    fn store(capacity: usize, ttl: Duration) -> SessionStore {
+        SessionStore::new(SessionConfig { capacity, ttl })
+    }
+
+    #[test]
+    fn take_detaches_and_put_reattaches() {
+        let mut st = store(4, Duration::from_secs(60));
+        st.put("a", cache_with_rows(7), 42, 1);
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.total_rows(), 7);
+        let e = st.take("a").unwrap();
+        assert_eq!(e.pending, 42);
+        assert_eq!(e.turns, 1);
+        assert_eq!(e.cache.appended, 7);
+        assert!(st.is_empty(), "take removes the entry");
+        assert!(st.take("a").is_none());
+    }
+
+    #[test]
+    fn capacity_cap_evicts_lru() {
+        let mut st = store(2, Duration::from_secs(60));
+        st.put("a", cache_with_rows(1), 0, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        st.put("b", cache_with_rows(1), 0, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        // refresh "a" so "b" becomes the LRU victim
+        let e = st.take("a").unwrap();
+        st.put("a", e.cache, e.pending, e.turns + 1);
+        std::thread::sleep(Duration::from_millis(2));
+        st.put("c", cache_with_rows(1), 0, 1);
+        assert_eq!(st.len(), 2);
+        assert!(st.take("b").is_none(), "LRU entry evicted");
+        assert!(st.take("a").is_some());
+        assert!(st.take("c").is_some());
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let mut st = store(4, Duration::from_millis(1));
+        st.put("a", cache_with_rows(1), 0, 1);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(st.take("a").is_none(), "expired entry is gone");
+    }
+
+    #[test]
+    fn zero_capacity_disables_persistence() {
+        let mut st = store(0, Duration::from_secs(60));
+        st.put("a", cache_with_rows(1), 0, 1);
+        assert!(st.is_empty());
+        assert!(st.take("a").is_none());
+    }
+
+    #[test]
+    fn updating_existing_key_never_evicts_others() {
+        let mut st = store(2, Duration::from_secs(60));
+        st.put("a", cache_with_rows(1), 0, 1);
+        st.put("b", cache_with_rows(1), 0, 1);
+        st.put("a", cache_with_rows(2), 1, 2);
+        assert_eq!(st.len(), 2);
+        assert!(st.take("b").is_some(), "re-putting a live key keeps the other");
+        assert_eq!(st.take("a").unwrap().cache.appended, 2);
+    }
+}

@@ -29,7 +29,7 @@ use crate::kvcache::KvCache;
 use crate::tokenizer::Tokenizer;
 use crate::util::argmax as argmax_slice;
 
-pub use slot::SlotState;
+pub use slot::{SeqState, SlotState};
 
 /// Result of a single-sequence generation.
 #[derive(Debug, Clone)]
@@ -201,11 +201,81 @@ impl Engine {
             let events =
                 maybe_compress(&mut seq.cache, &seq.compression, seq.scorer.as_mut())?;
             seq.compression_events += events.len();
+            seq.step_events = events;
 
             let next = argmax_slice(&out.logits[s * v_size..(s + 1) * v_size]) as i32;
             seq.push_generated(next, self.tmax);
         }
         Ok(())
+    }
+
+    /// Incremental ("session") prefill: run `ids` through the decode path
+    /// on top of an existing cache, appending each token at its absolute
+    /// position and firing the recursive compression driver after every
+    /// append — exactly the trajectory a concatenated one-shot prefill
+    /// would have produced (the driver is order-insensitive).  Returns the
+    /// last token's next-token logits plus the compression events fired.
+    pub fn prefill_onto(
+        &self,
+        cache: &mut KvCache,
+        cfg: &CompressionConfig,
+        scorer: &mut dyn Scorer,
+        ids: &[i32],
+    ) -> Result<(Vec<f32>, Vec<crate::compress::driver::CompressionEvent>)> {
+        if ids.is_empty() {
+            bail!("prefill_onto: empty token stream");
+        }
+        if !self.backend.decode_buckets().contains(&1) {
+            bail!("prefill_onto needs a b=1 decode bucket");
+        }
+        let (nl, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
+        let tmax = self.tmax;
+        let per_slot = hkv * tmax * dh;
+        let mut kbuf = vec![0.0f32; nl * per_slot];
+        let mut vbuf = vec![0.0f32; nl * per_slot];
+        let mut lens = vec![0i32; nl];
+        let mut events = Vec::new();
+        let mut logits = Vec::new();
+        for &tok in ids {
+            if cache.appended + 1 >= tmax {
+                bail!(
+                    "session history of {} tokens exceeds decode capacity {tmax}",
+                    cache.appended
+                );
+            }
+            for layer in 0..nl {
+                let (lk, lv) = cache.layer_padded(layer, tmax);
+                let dst = layer * per_slot;
+                kbuf[dst..dst + per_slot].copy_from_slice(&lk);
+                vbuf[dst..dst + per_slot].copy_from_slice(&lv);
+                lens[layer] = cache.len(layer) as i32;
+            }
+            let pos = cache.appended as i32;
+            let out = self.backend.decode(&DecodeBatch {
+                batch: 1,
+                k: &kbuf,
+                v: &vbuf,
+                lens: &lens,
+                pos: &[pos],
+                tokens: &[tok],
+            })?;
+            cache.append_token(&out.k_new, &out.v_new, pos)?;
+            if cfg.policy.needs_attention() {
+                cache.accumulate_attention(&out.attn_rows, tmax)?;
+            }
+            events.extend(maybe_compress(cache, cfg, scorer)?);
+            logits = out.logits;
+        }
+        Ok((logits, events))
+    }
+
+    /// Run one generation described by a [`GenerateParams`] bundle (the
+    /// engine-level analogue of `Router::generate`; sessions and events
+    /// need the coordinator).
+    ///
+    /// [`GenerateParams`]: crate::coordinator::GenerateParams
+    pub fn run(&self, params: &crate::coordinator::GenerateParams) -> Result<GenOutput> {
+        self.generate(&params.prompt, &params.compression(), params.max_new, params.seed)
     }
 
     /// Greedy single-sequence generation with recursive compression.

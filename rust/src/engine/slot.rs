@@ -1,5 +1,6 @@
 //! Decode-slot state: one in-flight sequence inside a batch bucket.
 
+use crate::compress::driver::CompressionEvent;
 use crate::compress::Scorer;
 use crate::config::CompressionConfig;
 use crate::kvcache::KvCache;
@@ -18,6 +19,9 @@ pub struct SeqState {
     pub max_new: usize,
     pub done: bool,
     pub compression_events: usize,
+    /// Compression events fired by the most recent decode step (replaced
+    /// each step; the event-stream emitter drains it).
+    pub step_events: Vec<CompressionEvent>,
 }
 
 impl SeqState {
@@ -72,6 +76,7 @@ impl SlotState {
                 max_new,
                 done: false,
                 compression_events: 0,
+                step_events: Vec::new(),
             }),
         }
     }
@@ -82,6 +87,16 @@ impl SlotState {
 
     pub fn active_mut(&mut self) -> Option<&mut SeqState> {
         self.seq.as_mut().filter(|s| !s.done)
+    }
+
+    /// The occupying sequence, finished or not (event emission needs to
+    /// observe a sequence after its final step marks it done).
+    pub fn seq(&self) -> Option<&SeqState> {
+        self.seq.as_ref()
+    }
+
+    pub fn seq_mut(&mut self) -> Option<&mut SeqState> {
+        self.seq.as_mut()
     }
 
     pub fn occupied_any(&self) -> bool {

@@ -7,6 +7,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::{CompressionConfig, PolicyKind};
+use crate::coordinator::GenerateParams;
 use crate::engine::Engine;
 use crate::metrics::Table;
 use crate::sim::{self, SimSpec};
@@ -45,14 +46,9 @@ pub fn paper_ratios() -> Vec<f64> {
 }
 
 pub fn cfg(policy: PolicyKind, lag: usize, ratio: f64) -> CompressionConfig {
-    CompressionConfig {
-        policy,
-        sink: 4,
-        lag,
-        ratio,
-        skip_layers: if policy == PolicyKind::L2Norm { 2 } else { 0 },
-        ..Default::default()
-    }
+    // One construction path for the whole stack: the params builder picks
+    // the policy-appropriate skip_layers (2 for recursive-L2).
+    GenerateParams::default().policy(policy).sink(4).lag(lag).ratio(ratio).compression()
 }
 
 /// Evaluate one family at one config; returns the mean score (0-100).

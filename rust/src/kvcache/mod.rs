@@ -125,6 +125,18 @@ impl KvCache {
         self.lens().into_iter().max().unwrap_or(0)
     }
 
+    /// Total retained rows summed over layers (session-store accounting;
+    /// head counts are uniform within a layer, so one length per layer).
+    pub fn total_rows(&self) -> usize {
+        self.lens().into_iter().sum()
+    }
+
+    /// Approximate resident bytes of the K/V payload (positions and
+    /// attention mass excluded): rows * heads * d_head * 2 tensors * f32.
+    pub fn approx_bytes(&self) -> usize {
+        self.total_rows() * self.n_heads * self.d_head * 2 * std::mem::size_of::<f32>()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.appended == 0
     }

@@ -6,7 +6,11 @@
 //!
 //! * **L3 (this crate)** — serving coordinator: request router, continuous
 //!   batcher, prefill/decode scheduler, and the KV-cache manager in which
-//!   LagKV and its baselines live as pluggable eviction policies.
+//!   LagKV and its baselines live as pluggable eviction policies.  The
+//!   public API is streaming- and session-first: requests yield typed
+//!   [`coordinator::Event`] streams (cancellable mid-decode), and a
+//!   [`coordinator::SessionStore`] carries the compressed cache across
+//!   conversation turns so turn N+1 prefills only its new text.
 //! * **L2 (python/compile, build time only)** — a tiny GQA transformer in
 //!   JAX, AOT-lowered to HLO text that the PJRT runtime loads.
 //! * **L1 (python/compile/kernels)** — the LagKV scoring Pallas kernel,

@@ -17,12 +17,13 @@
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use lagkv::backend::EngineSpec;
-use lagkv::config::{CompressionConfig, ServingConfig};
-use lagkv::coordinator::Router;
+use lagkv::config::ServingConfig;
+use lagkv::coordinator::{GenerateParams, Router, RouterConfig, SessionConfig};
 use lagkv::engine::Engine;
 use lagkv::harness;
 use lagkv::server::Server;
@@ -55,12 +56,15 @@ const HELP: &str = r#"lagkv — LagKV KV-cache compression serving stack
 USAGE:
   lagkv info [--backend cpu|xla] [--artifacts DIR]
   lagkv generate --prompt "..." [--model M] [--policy P --lag L --ratio R]
+                 [--stream] [--session ID]
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
+              [--max-queue 256] [--sessions 64] [--session-ttl 600]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
 
 BACKENDS: cpu (default, hermetic) | xla (--features xla + make artifacts)
 POLICIES: lagkv localkv l2norm h2o streaming random none
+WIRE PROTOCOL: see DESIGN.md (NDJSON events, {"cancel": id}, session_id)
 "#;
 
 fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
@@ -95,16 +99,52 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn generate(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "llama_like");
-    let engine = load_engine(args, model)?;
-    let comp = CompressionConfig::from_args(args)?;
+/// The one knob bundle every front end constructs (see coordinator docs).
+fn params_from_args(args: &Args) -> Result<GenerateParams> {
     let prompt = match args.get("prompt") {
         Some(p) => p.to_string(),
         None => bail!("--prompt required"),
     };
-    let max_new = args.usize_or("max-new", 72)?;
-    let out = engine.generate(&prompt, &comp, max_new, args.u64_or("seed", 0)?)?;
+    let mut p = GenerateParams::new(prompt)
+        .model(args.get_or("model", "llama_like"))
+        .sink(args.usize_or("sink", 4)?)
+        .lag(args.usize_or("lag", 64)?)
+        .ratio(args.f64_or("ratio", 0.5)?)
+        .max_new(args.usize_or("max-new", 72)?)
+        .seed(args.u64_or("seed", 0)?);
+    if let Some(name) = args.get("policy") {
+        p = p.policy(lagkv::config::PolicyKind::parse(name)?);
+    }
+    if let Some(skip) = args.get("skip-layers") {
+        p = p.skip_layers(skip.parse()?);
+    }
+    if let Some(sid) = args.get("session") {
+        p = p.session(sid);
+    }
+    Ok(p)
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let params = params_from_args(args)?;
+    if args.has("stream") {
+        // Stream through the full serving path: router -> coordinator ->
+        // live events, printed as the same NDJSON lines the TCP server
+        // emits.
+        let model = params.model.clone();
+        let router = Router::start(EngineSpec::from_args(args)?, &[model.clone()]);
+        let handle = router.submit(&model, params.into_request(1)?)?;
+        for ev in handle.events.iter() {
+            println!("{}", Server::render_event(&ev));
+            if ev.is_terminal() {
+                break;
+            }
+        }
+        drop(handle);
+        router.shutdown();
+        return Ok(());
+    }
+    let engine = load_engine(args, &params.model)?;
+    let out = engine.run(&params)?;
     println!("text: {}", out.text);
     println!(
         "prompt_tokens={} new_tokens={} cache_lens={:?} compression_events={} prefill={}us decode={}us",
@@ -121,7 +161,14 @@ fn generate(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let serving = ServingConfig::from_args(args)?;
     let models = args.list_or("models", &["llama_like", "qwen_like"]);
-    let router = Arc::new(Router::start(EngineSpec::from_args(args)?, &models));
+    let router_cfg = RouterConfig {
+        queue_depth: serving.max_queue,
+        sessions: SessionConfig {
+            capacity: serving.session_capacity,
+            ttl: Duration::from_secs(serving.session_ttl_s),
+        },
+    };
+    let router = Arc::new(Router::start_with(EngineSpec::from_args(args)?, &models, router_cfg));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));
     server.serve(serving.port, stop)

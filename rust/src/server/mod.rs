@@ -1,132 +1,331 @@
 //! TCP front end: newline-delimited JSON over std::net (the offline image
 //! has no tokio; one thread per connection is ample at this scale).
 //!
-//! Request line:
+//! The full wire protocol lives in DESIGN.md; the short version:
+//!
+//! Request line (all fields except `prompt` optional):
 //! ```json
 //! {"id": 1, "model": "llama_like", "prompt": "...", "policy": "lagkv",
-//!  "sink": 4, "lag": 64, "ratio": 0.5, "max_new": 72}
+//!  "sink": 4, "lag": 64, "ratio": 0.5, "max_new": 72,
+//!  "stream": true, "session_id": "chat-7"}
 //! ```
-//! Response line mirrors [`crate::coordinator::Response`].
+//!
+//! * Without `"stream"` the reply is one JSON line mirroring
+//!   [`crate::coordinator::Response`] (errors are structured
+//!   `{"code", "message"}` objects, never bare strings).
+//! * With `"stream": true` the reply is NDJSON: one line per
+//!   [`crate::coordinator::Event`] (`started`, `token`, `compression`,
+//!   then a terminal `done` or `error`), and the connection immediately
+//!   accepts further request lines while the stream runs.
+//! * `{"cancel": ID}` aborts a live request (same or another connection);
+//!   the server acks with `{"event": "cancel_ack", "id": ID, "found": ..}`
+//!   and the aborted stream terminates with an `error` event of code
+//!   `"cancelled"`.
+//! * Unknown request fields are a hard `bad-params` error listing the
+//!   offending keys — a typo in `stream` or `session_id` must never
+//!   silently fall back to one-shot, session-less behaviour.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::config::{CompressionConfig, PolicyKind, ScorerBackend};
-use crate::coordinator::{Request, Response, Router};
+use crate::config::{PolicyKind, ScorerBackend};
+use crate::coordinator::{ApiError, Event, GenHandle, GenerateParams, Request, Response, Router};
 use crate::util::json::{arr, n, obj, s, Json};
+
+/// Request-line fields the parser accepts; anything else is `bad-params`.
+const KNOWN_FIELDS: &[&str] = &[
+    "id",
+    "model",
+    "prompt",
+    "policy",
+    "sink",
+    "lag",
+    "ratio",
+    "scorer",
+    "skip_layers",
+    "max_new",
+    "seed",
+    "stream",
+    "session_id",
+];
+
+/// One parsed client line.
+pub enum ClientLine {
+    Generate { model: String, request: Request, stream: bool },
+    Cancel { id: u64 },
+}
 
 pub struct Server {
     pub router: Arc<Router>,
     next_id: AtomicU64,
+    /// Cancel flags of in-flight requests, keyed by request id, so a
+    /// `{"cancel": id}` line on any connection can abort them.
+    live: Mutex<HashMap<u64, Arc<AtomicBool>>>,
 }
 
 impl Server {
     pub fn new(router: Arc<Router>) -> Server {
-        Server { router, next_id: AtomicU64::new(1) }
+        Server { router, next_id: AtomicU64::new(1), live: Mutex::new(HashMap::new()) }
     }
 
-    /// Parse one request line.  Unknown fields are ignored; absent fields
-    /// use CompressionConfig defaults.
-    pub fn parse_request(&self, line: &str) -> Result<(String, Request)> {
-        let v = Json::parse(line)?;
-        let model = v
-            .opt("model")
-            .and_then(|m| m.as_str().ok())
-            .unwrap_or("llama_like")
-            .to_string();
-        let mut comp = CompressionConfig::default();
-        if let Some(p) = v.opt("policy") {
-            comp.policy = PolicyKind::parse(p.as_str()?)?;
+    fn bad(message: String) -> ApiError {
+        ApiError::BadParams { message }
+    }
+
+    /// Parse one client line into a generate request or a cancel command.
+    /// Absent fields use [`GenerateParams`] defaults; unknown fields are a
+    /// structured `bad-params` error naming every unrecognized key.
+    pub fn parse_line(&self, line: &str) -> Result<ClientLine, ApiError> {
+        let v = Json::parse(line).map_err(|e| Self::bad(format!("invalid JSON: {e:#}")))?;
+        let m = v.as_obj().map_err(|_| Self::bad("request must be a JSON object".into()))?;
+
+        if m.contains_key("cancel") {
+            let extra: Vec<&str> =
+                m.keys().filter(|k| k.as_str() != "cancel").map(|k| k.as_str()).collect();
+            if !extra.is_empty() {
+                return Err(Self::bad(format!("cancel line has extra fields: {extra:?}")));
+            }
+            let id = v
+                .get("cancel")
+                .and_then(|x| x.as_i64())
+                .map_err(|e| Self::bad(format!("bad cancel id: {e:#}")))?;
+            return Ok(ClientLine::Cancel { id: id as u64 });
+        }
+
+        let unknown: Vec<&str> = m
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| !KNOWN_FIELDS.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            return Err(Self::bad(format!(
+                "unrecognized fields {unknown:?} (known: {KNOWN_FIELDS:?})"
+            )));
+        }
+
+        let mut p = GenerateParams::default();
+        let field = |e: anyhow::Error, name: &str| Self::bad(format!("field {name:?}: {e:#}"));
+        if let Some(x) = v.opt("model") {
+            p.model = x.as_str().map_err(|e| field(e, "model"))?.to_string();
+        }
+        if let Some(x) = v.opt("prompt") {
+            p.prompt = x.as_str().map_err(|e| field(e, "prompt"))?.to_string();
+        }
+        if let Some(x) = v.opt("policy") {
+            let name = x.as_str().map_err(|e| field(e, "policy"))?;
+            p.policy = PolicyKind::parse(name).map_err(|e| field(e, "policy"))?;
         }
         if let Some(x) = v.opt("sink") {
-            comp.sink = x.as_usize()?;
+            p.sink = x.as_usize().map_err(|e| field(e, "sink"))?;
         }
         if let Some(x) = v.opt("lag") {
-            comp.lag = x.as_usize()?;
+            p.lag = x.as_usize().map_err(|e| field(e, "lag"))?;
         }
         if let Some(x) = v.opt("ratio") {
-            comp.ratio = x.as_f64()?;
+            p.ratio = x.as_f64().map_err(|e| field(e, "ratio"))?;
         }
         if let Some(x) = v.opt("scorer") {
-            comp.scorer = match x.as_str()? {
+            p.scorer = match x.as_str().map_err(|e| field(e, "scorer"))? {
                 "xla" => ScorerBackend::Xla,
-                _ => ScorerBackend::Rust,
+                "rust" => ScorerBackend::Rust,
+                other => return Err(Self::bad(format!("unknown scorer {other:?} (rust|xla)"))),
             };
         }
-        if comp.policy == PolicyKind::L2Norm {
-            comp.skip_layers = 2;
+        if let Some(x) = v.opt("skip_layers") {
+            p.skip_layers = Some(x.as_usize().map_err(|e| field(e, "skip_layers"))?);
         }
-        comp.validate()?;
+        if let Some(x) = v.opt("max_new") {
+            p.max_new = x.as_usize().map_err(|e| field(e, "max_new"))?;
+        }
+        if let Some(x) = v.opt("seed") {
+            p.seed = x.as_i64().map_err(|e| field(e, "seed"))? as u64;
+        }
+        if let Some(x) = v.opt("session_id") {
+            p.session = Some(x.as_str().map_err(|e| field(e, "session_id"))?.to_string());
+        }
+        let stream = match v.opt("stream") {
+            Some(x) => x.as_bool().map_err(|e| field(e, "stream"))?,
+            None => false,
+        };
         let id = match v.opt("id") {
-            Some(x) => x.as_i64()? as u64,
+            Some(x) => x.as_i64().map_err(|e| field(e, "id"))? as u64,
             None => self.next_id.fetch_add(1, Ordering::Relaxed),
         };
-        let req = Request {
-            id,
-            prompt: v.get("prompt")?.as_str()?.to_string(),
-            compression: comp,
-            max_new: v.opt("max_new").and_then(|x| x.as_usize().ok()).unwrap_or(72),
-            seed: v.opt("seed").and_then(|x| x.as_i64().ok()).unwrap_or(0) as u64,
+        let model = p.model.clone();
+        let request = p.into_request(id)?;
+        Ok(ClientLine::Generate { model, request, stream })
+    }
+
+    /// Render one event as an NDJSON line body.
+    pub fn render_event(ev: &Event) -> String {
+        let j = match ev {
+            Event::Started { id, prompt_tokens, reused_tokens } => obj(vec![
+                ("event", s("started")),
+                ("id", n(*id as f64)),
+                ("prompt_tokens", n(*prompt_tokens as f64)),
+                ("reused_tokens", n(*reused_tokens as f64)),
+            ]),
+            Event::Token { id, token, text_delta } => obj(vec![
+                ("event", s("token")),
+                ("id", n(*id as f64)),
+                ("token", n(*token as f64)),
+                ("text_delta", s(text_delta.clone())),
+            ]),
+            Event::Compression { id, layer_lens, evicted } => obj(vec![
+                ("event", s("compression")),
+                ("id", n(*id as f64)),
+                ("layer_lens", arr(layer_lens.iter().map(|&l| n(l as f64)).collect())),
+                ("evicted", n(*evicted as f64)),
+            ]),
+            Event::Done { id, usage, timings } => obj(vec![
+                ("event", s("done")),
+                ("id", n(*id as f64)),
+                ("prompt_tokens", n(usage.prompt_tokens as f64)),
+                ("new_tokens", n(usage.new_tokens as f64)),
+                ("reused_tokens", n(usage.reused_tokens as f64)),
+                ("cache_lens", arr(usage.cache_lens.iter().map(|&l| n(l as f64)).collect())),
+                ("compression_events", n(usage.compression_events as f64)),
+                ("queue_us", n(timings.queue_us as f64)),
+                ("prefill_us", n(timings.prefill_us as f64)),
+                ("decode_us", n(timings.decode_us as f64)),
+            ]),
+            Event::Error { id, error } => obj(vec![
+                ("event", s("error")),
+                ("id", n(*id as f64)),
+                ("error", error.to_json()),
+            ]),
         };
-        Ok((model, req))
+        j.to_string()
     }
 
+    /// Render the one-shot response line.
     pub fn render_response(resp: &Response) -> String {
-        obj(vec![
-            ("id", n(resp.id as f64)),
-            ("text", s(resp.text.clone())),
-            ("prompt_tokens", n(resp.prompt_tokens as f64)),
-            ("new_tokens", n(resp.tokens.len() as f64)),
-            (
-                "cache_lens",
-                arr(resp.cache_lens.iter().map(|&l| n(l as f64)).collect()),
-            ),
-            ("compression_events", n(resp.compression_events as f64)),
-            ("queue_us", n(resp.queue_us as f64)),
-            ("prefill_us", n(resp.prefill_us as f64)),
-            ("decode_us", n(resp.decode_us as f64)),
-            (
-                "error",
-                resp.error.clone().map(s).unwrap_or(Json::Null),
-            ),
-        ])
-        .to_string()
+        resp.to_json().to_string()
     }
 
-    fn handle_conn(&self, stream: TcpStream) -> Result<()> {
-        let peer = stream.peer_addr().ok();
-        let mut writer = stream.try_clone().context("clone stream")?;
+    /// Flip the cancel flag of a live request.  Returns whether the id was
+    /// known (an already-finished or never-seen id is `false`).
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.live.lock().unwrap().get(&id) {
+            Some(flag) => {
+                flag.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// How many requests are currently in flight (diagnostics / tests).
+    pub fn live_requests(&self) -> usize {
+        self.live.lock().unwrap().len()
+    }
+
+    fn forward_events(&self, id: u64, handle: GenHandle, writer: Arc<Mutex<TcpStream>>) {
+        for ev in handle.events.iter() {
+            let terminal = ev.is_terminal();
+            if write_line(&writer, &Self::render_event(&ev)).is_err() {
+                // Connection gone: dropping the handle aborts the slot.
+                break;
+            }
+            if terminal {
+                break;
+            }
+        }
+        self.live.lock().unwrap().remove(&id);
+    }
+
+    fn handle_conn(self: Arc<Self>, stream: TcpStream) -> Result<()> {
+        let writer = Arc::new(Mutex::new(stream.try_clone().context("clone stream")?));
         let reader = BufReader::new(stream);
         for line in reader.lines() {
             let line = line?;
             if line.trim().is_empty() {
                 continue;
             }
-            let reply = match self.parse_request(&line) {
-                Ok((model, req)) => match self.router.generate(&model, req) {
-                    Ok(resp) => Self::render_response(&resp),
-                    Err(e) => obj(vec![("error", s(format!("{e:#}")))]).to_string(),
-                },
-                Err(e) => obj(vec![("error", s(format!("bad request: {e:#}")))]).to_string(),
-            };
-            writer.write_all(reply.as_bytes())?;
-            writer.write_all(b"\n")?;
-            writer.flush()?;
+            match self.parse_line(&line) {
+                Ok(ClientLine::Cancel { id }) => {
+                    let found = self.cancel(id);
+                    let ack = obj(vec![
+                        ("event", s("cancel_ack")),
+                        ("id", n(id as f64)),
+                        ("found", Json::Bool(found)),
+                    ]);
+                    write_line(&writer, &ack.to_string())?;
+                }
+                Ok(ClientLine::Generate { model, request, stream: streaming }) => {
+                    let id = request.id;
+                    // Register under the live-map lock so a duplicate id
+                    // can never clobber another request's cancel flag (or
+                    // have its own entry removed by the first finisher).
+                    let submitted = {
+                        let mut live = self.live.lock().unwrap();
+                        if live.contains_key(&id) {
+                            Err(ApiError::BadParams {
+                                message: format!("request id {id} is already in flight"),
+                            })
+                        } else {
+                            self.router.submit(&model, request).map(|handle| {
+                                live.insert(id, handle.cancel_flag());
+                                handle
+                            })
+                        }
+                    };
+                    match submitted {
+                        Ok(handle) => {
+                            if streaming {
+                                // Forward events off-thread so this reader
+                                // keeps accepting cancel/request lines.
+                                let me = self.clone();
+                                let w = writer.clone();
+                                std::thread::spawn(move || me.forward_events(id, handle, w));
+                            } else {
+                                let resp = handle.wait();
+                                self.live.lock().unwrap().remove(&id);
+                                write_line(&writer, &Self::render_response(&resp))?;
+                            }
+                        }
+                        Err(e) => {
+                            let resp = Response::from_error(id, e);
+                            write_line(&writer, &Self::render_response(&resp))?;
+                        }
+                    }
+                }
+                Err(e) => {
+                    write_line(&writer, &obj(vec![("error", e.to_json())]).to_string())?;
+                }
+            }
         }
-        let _ = peer;
         Ok(())
+    }
+
+    /// Bind the listen socket; `port == 0` picks an ephemeral port.  The
+    /// actual port is returned (CI smoke tests bind ephemerally).
+    pub fn bind(port: u16) -> Result<(TcpListener, u16)> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+        let actual = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        Ok((listener, actual))
     }
 
     /// Serve until `stop` flips true (checked between accepts).
     pub fn serve(self: Arc<Self>, port: u16, stop: Arc<AtomicBool>) -> Result<()> {
-        let listener = TcpListener::bind(("127.0.0.1", port))
-            .with_context(|| format!("binding 127.0.0.1:{port}"))?;
-        listener.set_nonblocking(true)?;
-        eprintln!("lagkv server listening on 127.0.0.1:{port}");
+        let (listener, actual) = Self::bind(port)?;
+        eprintln!("lagkv server listening on 127.0.0.1:{actual}");
+        self.serve_listener(listener, stop)
+    }
+
+    /// Accept loop over an already-bound (nonblocking) listener.
+    pub fn serve_listener(
+        self: Arc<Self>,
+        listener: TcpListener,
+        stop: Arc<AtomicBool>,
+    ) -> Result<()> {
         loop {
             if stop.load(Ordering::Relaxed) {
                 return Ok(());
@@ -150,8 +349,15 @@ impl Server {
     }
 }
 
-/// Minimal blocking client for the line protocol (used by serve_demo and
-/// integration tests).
+fn write_line(writer: &Arc<Mutex<TcpStream>>, line: &str) -> std::io::Result<()> {
+    let mut w = writer.lock().unwrap();
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// Minimal blocking client for the line protocol (used by serve_demo,
+/// the CI smoke binary, and integration tests).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -164,13 +370,41 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
-    pub fn call(&mut self, request_json: &str) -> Result<Json> {
-        self.writer.write_all(request_json.as_bytes())?;
+    pub fn send_line(&mut self, json: &str) -> Result<()> {
+        self.writer.write_all(json.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read one JSON line (blocking).
+    pub fn read_json(&mut self) -> Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(&line)
+    }
+
+    /// One-shot call: send a request line, read the single response line.
+    pub fn call(&mut self, request_json: &str) -> Result<Json> {
+        self.send_line(request_json)?;
+        self.read_json()
+    }
+
+    /// Streaming call: send a request line, collect event lines until the
+    /// terminal `done`/`error` (or a top-level parse-error reply).
+    pub fn stream(&mut self, request_json: &str) -> Result<Vec<Json>> {
+        self.send_line(request_json)?;
+        let mut events = Vec::new();
+        loop {
+            let v = self.read_json()?;
+            let kind =
+                v.opt("event").and_then(|e| e.as_str().ok()).unwrap_or("").to_string();
+            let terminal = kind == "done" || kind == "error" || kind.is_empty();
+            events.push(v);
+            if terminal {
+                return Ok(events);
+            }
+        }
     }
 }
 
@@ -179,29 +413,77 @@ mod tests {
     use super::*;
 
     use crate::backend::EngineSpec;
+    use crate::coordinator::{Timings, Usage};
+
+    fn server() -> Server {
+        Server::new(Arc::new(Router::start(EngineSpec::cpu(), &[])))
+    }
+
+    fn parse_gen(srv: &Server, line: &str) -> (String, Request, bool) {
+        match srv.parse_line(line).unwrap() {
+            ClientLine::Generate { model, request, stream } => (model, request, stream),
+            ClientLine::Cancel { .. } => panic!("expected a generate line"),
+        }
+    }
 
     #[test]
     fn parse_request_defaults_and_overrides() {
-        let router = Arc::new(Router::start(EngineSpec::cpu(), &[]));
-        let srv = Server::new(router);
-        let (model, req) = srv
-            .parse_request(
-                r#"{"prompt": "hello", "policy": "h2o", "lag": 32, "max_new": 5}"#,
-            )
-            .unwrap();
+        let srv = server();
+        let (model, req, stream) = parse_gen(
+            &srv,
+            r#"{"prompt": "hello", "policy": "h2o", "lag": 32, "max_new": 5}"#,
+        );
         assert_eq!(model, "llama_like");
         assert_eq!(req.compression.policy, PolicyKind::H2O);
         assert_eq!(req.compression.lag, 32);
         assert_eq!(req.max_new, 5);
         assert_eq!(req.prompt, "hello");
+        assert!(req.session.is_none());
+        assert!(!stream);
     }
 
     #[test]
-    fn bad_request_is_error() {
-        let router = Arc::new(Router::start(EngineSpec::cpu(), &[]));
-        let srv = Server::new(router);
-        assert!(srv.parse_request("{}").is_err());
-        assert!(srv.parse_request("not json").is_err());
+    fn parse_stream_and_session_fields() {
+        let srv = server();
+        let (_, req, stream) = parse_gen(
+            &srv,
+            r#"{"prompt": "hi", "stream": true, "session_id": "chat-1"}"#,
+        );
+        assert!(stream);
+        assert_eq!(req.session.as_deref(), Some("chat-1"));
+    }
+
+    #[test]
+    fn bad_request_is_typed_error() {
+        let srv = server();
+        for line in ["{}", "not json", "[1,2]", r#"{"prompt": "x", "ratio": 0}"#] {
+            let err = srv.parse_line(line).unwrap_err();
+            assert_eq!(err.code(), "bad-params", "line {line:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_by_name() {
+        let srv = server();
+        let err = srv
+            .parse_line(r#"{"prompt": "x", "strem": true, "sessionid": "a"}"#)
+            .unwrap_err();
+        assert_eq!(err.code(), "bad-params");
+        let msg = err.message();
+        assert!(msg.contains("strem"), "message must name the typo: {msg}");
+        assert!(msg.contains("sessionid"), "message must name the typo: {msg}");
+    }
+
+    #[test]
+    fn cancel_line_parses_and_rejects_extras() {
+        let srv = server();
+        match srv.parse_line(r#"{"cancel": 12}"#).unwrap() {
+            ClientLine::Cancel { id } => assert_eq!(id, 12),
+            ClientLine::Generate { .. } => panic!("expected cancel"),
+        }
+        assert!(srv.parse_line(r#"{"cancel": 12, "model": "m"}"#).is_err());
+        // cancelling an unknown id is not found
+        assert!(!srv.cancel(12));
     }
 
     #[test]
@@ -211,6 +493,7 @@ mod tests {
             text: "42".into(),
             tokens: vec![9, 2],
             prompt_tokens: 10,
+            reused_tokens: 0,
             cache_lens: vec![12, 12],
             compression_events: 1,
             queue_us: 5,
@@ -222,5 +505,45 @@ mod tests {
         assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 3);
         assert_eq!(v.get("text").unwrap().as_str().unwrap(), "42");
         assert_eq!(v.get("cache_lens").unwrap().as_usize_vec().unwrap(), vec![12, 12]);
+        assert_eq!(*v.get("error").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn error_response_carries_code_and_message() {
+        let resp = Response::from_error(4, ApiError::QueueFull { model: "m".into() });
+        let v = Json::parse(&Server::render_response(&resp)).unwrap();
+        let e = v.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "queue-full");
+        assert!(!e.get("message").unwrap().as_str().unwrap().is_empty());
+    }
+
+    #[test]
+    fn events_render_as_tagged_lines() {
+        let done = Event::Done {
+            id: 7,
+            usage: Usage {
+                prompt_tokens: 3,
+                new_tokens: 2,
+                reused_tokens: 0,
+                cache_lens: vec![5],
+                compression_events: 1,
+            },
+            timings: Timings { queue_us: 1, prefill_us: 2, decode_us: 3 },
+        };
+        let v = Json::parse(&Server::render_event(&done)).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str().unwrap(), "done");
+        assert_eq!(v.get("new_tokens").unwrap().as_usize().unwrap(), 2);
+
+        let tok = Event::Token { id: 7, token: 1200, text_delta: " the".into() };
+        let v = Json::parse(&Server::render_event(&tok)).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str().unwrap(), "token");
+        assert_eq!(v.get("text_delta").unwrap().as_str().unwrap(), " the");
+
+        let err = Event::Error { id: 7, error: ApiError::Cancelled };
+        let v = Json::parse(&Server::render_event(&err)).unwrap();
+        assert_eq!(
+            v.get("error").unwrap().get("code").unwrap().as_str().unwrap(),
+            "cancelled"
+        );
     }
 }

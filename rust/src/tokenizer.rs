@@ -198,6 +198,30 @@ impl Tokenizer {
         parts.join(" ")
     }
 
+    /// Incremental decode: the suffix `id` appends to the decode of a
+    /// preceding stream whose last token's digit-ness is `prev_digit`
+    /// (`None` when nothing precedes).  Guarantees
+    /// `decode(prefix) + delta == decode(prefix ++ [id])`, which is what
+    /// makes streamed `text_delta`s concatenate to the one-shot text
+    /// without re-decoding the whole prefix per token.
+    pub fn decode_delta(&self, prev_digit: Option<bool>, id: i32) -> (String, bool) {
+        let (surf, is_digit) = if id < 0 || id as usize >= self.vocab.size() {
+            ("<unk>", false)
+        } else {
+            (self.vocab.surface(id), self.vocab.is_digit_token(id))
+        };
+        let mut out = String::with_capacity(surf.len() + 1);
+        match prev_digit {
+            // digit runs merge without a separator; the stream opener has
+            // no separator either
+            Some(true) if is_digit => {}
+            None => {}
+            _ => out.push(' '),
+        }
+        out.push_str(surf);
+        (out, is_digit)
+    }
+
     /// Concatenated digit content of a token stream (passkey scoring).
     pub fn decode_digits(&self, ids: &[i32]) -> String {
         let mut out = String::new();
@@ -335,6 +359,31 @@ mod tests {
                 if t.decode_digits(&ids) != run {
                     return Err(format!("roundtrip failed for {run}"));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_decode_delta_concatenates_to_decode() {
+        // The streaming contract: per-token deltas concatenate to exactly
+        // the batch decode, across digit runs, words, and out-of-range ids.
+        use crate::util::prop;
+        let t = Tokenizer::new(test_vocab(), 3).unwrap();
+        let size = t.vocab.size() as i32;
+        prop::check(120, |g| {
+            let n = g.usize(1, 40);
+            let ids: Vec<i32> =
+                (0..n).map(|_| g.usize(0, size as usize + 3) as i32 - 2).collect();
+            let mut prev = None;
+            let mut text = String::new();
+            for &id in &ids {
+                let (delta, is_digit) = t.decode_delta(prev, id);
+                text.push_str(&delta);
+                prev = Some(is_digit);
+            }
+            if text != t.decode(&ids) {
+                return Err(format!("delta concat {text:?} != decode of {ids:?}"));
             }
             Ok(())
         });

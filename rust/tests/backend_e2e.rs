@@ -1,19 +1,63 @@
 //! Hermetic end-to-end tests on the CPU reference backend: generation,
-//! recursive compression cadence, continuous batching, and the in-proc
-//! router all run under plain `cargo test` — no artifacts, no XLA, no
-//! network.  This is the standing quality gate the PJRT integration tests
+//! recursive compression cadence, continuous batching, the in-proc router
+//! (event streams, cancellation, bounded queue), and the TCP server
+//! (streaming NDJSON, multi-turn sessions) all run under plain
+//! `cargo test` — no artifacts, no XLA, no network beyond loopback.  This
+//! is the standing quality gate the PJRT integration tests
 //! (rust/tests/integration.rs) extend when artifacts exist.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use lagkv::backend::EngineSpec;
 use lagkv::config::{CompressionConfig, PolicyKind, ScorerBackend};
-use lagkv::coordinator::{Request, Router};
+use lagkv::coordinator::{Event, GenerateParams, Router, RouterConfig, SessionConfig};
 use lagkv::engine::Engine;
 use lagkv::kvcache::ratio;
+use lagkv::server::{Client, Server};
+use lagkv::util::json::Json;
 use lagkv::util::rng::Rng;
 use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
 
 fn engine() -> Engine {
     Engine::cpu_ref("llama_like").unwrap()
+}
+
+/// Boot the full TCP stack on an ephemeral port; returns (server, port,
+/// stop flag, accept-thread handle).
+fn boot_server() -> (
+    Arc<Server>,
+    u16,
+    Arc<AtomicBool>,
+    std::thread::JoinHandle<anyhow::Result<()>>,
+) {
+    let router = Arc::new(Router::start(EngineSpec::cpu(), &["llama_like".to_string()]));
+    let server = Arc::new(Server::new(router));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (listener, port) = Server::bind(0).unwrap();
+    let handle = {
+        let server = server.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || server.serve_listener(listener, stop))
+    };
+    (server, port, stop, handle)
+}
+
+/// A prompt whose greedy chain runs at least `min_tokens` before the toy
+/// LM head emits EOS (the chain is a pure function of (token, pos), so a
+/// scan is deterministic and policy-independent).
+fn long_chain_prompt(e: &Engine, min_tokens: usize) -> String {
+    let none = CompressionConfig { policy: PolicyKind::None, ..Default::default() };
+    for seed in 0..400u64 {
+        let mut rng = Rng::seed_from(seed);
+        let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 20, n_digits: 8, depth: None });
+        let out = e.generate(&item.prompt, &none, 600, 0).unwrap();
+        if out.tokens.len() >= min_tokens {
+            return item.prompt;
+        }
+    }
+    panic!("no prompt with a >={min_tokens}-token greedy chain in 400 candidates");
 }
 
 #[test]
@@ -184,19 +228,14 @@ fn router_round_trip_on_cpu_backend() {
         let resp = router
             .generate(
                 "llama_like",
-                Request {
-                    id,
-                    prompt: item.prompt.clone(),
-                    compression: CompressionConfig {
-                        policy,
-                        sink: 4,
-                        lag: 16,
-                        ratio: 0.5,
-                        ..Default::default()
-                    },
-                    max_new: 6,
-                    seed: 0,
-                },
+                GenerateParams::new(item.prompt.clone())
+                    .policy(policy)
+                    .sink(4)
+                    .lag(16)
+                    .ratio(0.5)
+                    .max_new(6)
+                    .into_request(id)
+                    .unwrap(),
             )
             .unwrap();
         assert_eq!(resp.id, id);
@@ -205,18 +244,12 @@ fn router_round_trip_on_cpu_backend() {
         assert!(resp.prompt_tokens > 0);
         assert!(!resp.cache_lens.is_empty());
     }
-    // unknown model is an error, not a hang
-    let bad = router.generate(
+    // unknown model is a typed error, not a hang
+    let bad = router.submit(
         "missing_model",
-        Request {
-            id: 9,
-            prompt: "x".into(),
-            compression: CompressionConfig::default(),
-            max_new: 1,
-            seed: 0,
-        },
+        GenerateParams::new("x").max_new(1).into_request(9).unwrap(),
     );
-    assert!(bad.is_err());
+    assert_eq!(bad.err().map(|e| e.code()), Some("unknown-model"));
     router.shutdown();
 }
 
@@ -228,17 +261,11 @@ fn unknown_variant_engine_answers_requests_with_errors() {
     let resp = router
         .generate(
             "not_a_model",
-            Request {
-                id: 5,
-                prompt: "hello there".into(),
-                compression: CompressionConfig::default(),
-                max_new: 2,
-                seed: 0,
-            },
+            GenerateParams::new("hello there").max_new(2).into_request(5).unwrap(),
         )
         .unwrap();
     assert_eq!(resp.id, 5);
-    assert!(resp.error.is_some());
+    assert_eq!(resp.error.as_ref().map(|e| e.code()), Some("engine-failure"));
     router.shutdown();
 }
 
@@ -248,4 +275,214 @@ fn harness_sim_table_renders() {
     let rendered = t.render();
     assert!(rendered.contains("lagkv"));
     assert!(rendered.contains("streaming"));
+}
+
+/// The acceptance scenario: a two-turn session over the TCP server reuses
+/// the compressed cache.  Turn 2 prefills only its own text, and both the
+/// decoded tokens and the Eq. 10 cache-length trajectory match a single
+/// one-shot generation over the concatenated conversation.
+#[test]
+fn tcp_session_matches_concatenated_one_shot() {
+    let (_server, port, stop, accept) = boot_server();
+    let mut client = Client::connect(port).unwrap();
+
+    let mut rng = Rng::seed_from(31);
+    let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None });
+    let turn1 = item.prompt;
+    let turn2 = "<q> the pass key <a>";
+    let mk = |prompt: &str, id: u64| {
+        GenerateParams::new(prompt)
+            .lag(16)
+            .ratio(0.25)
+            .max_new(8)
+            .session("chat-parity")
+            .request_line(Some(id), false)
+    };
+    let t1 = client.call(&mk(&turn1, 1)).unwrap();
+    let t2 = client.call(&mk(turn2, 2)).unwrap();
+    for t in [&t1, &t2] {
+        assert_eq!(*t.get("error").unwrap(), Json::Null, "turn failed: {}", t.to_string());
+    }
+
+    let e = engine();
+    let ids1 = e.tokenizer.encode(&turn1, true);
+    let ids2 = e.tokenizer.encode(turn2, false);
+    // Turn 2 prefills only the new text (the reattached history is
+    // accounted separately), and reuses the whole turn-1 conversation.
+    assert_eq!(t2.get("prompt_tokens").unwrap().as_usize().unwrap(), ids2.len());
+    assert_eq!(t1.get("prompt_tokens").unwrap().as_usize().unwrap(), ids1.len());
+    let toks1: Vec<i32> = t1
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect();
+    assert_eq!(
+        t2.get("reused_tokens").unwrap().as_usize().unwrap(),
+        ids1.len() + toks1.len() - 1,
+        "turn 2 must reuse every token turn 1 appended"
+    );
+
+    // The equivalent single prompt: turn-1 prompt ++ turn-1 reply ++ turn-2
+    // text, prefilled from scratch.
+    let mut concat = ids1.clone();
+    concat.extend_from_slice(&toks1);
+    concat.extend_from_slice(&ids2);
+    let cfg = GenerateParams::new("x").lag(16).ratio(0.25).compression();
+    let solo = e.generate_ids(&concat, &cfg, 8, 0).unwrap();
+
+    let toks2: Vec<i32> = t2
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect();
+    assert_eq!(toks2, solo.tokens, "turn-2 decode must equal the concatenated one-shot");
+
+    // Eq. 10 trajectory continues across the turn boundary: the session
+    // cache ends at exactly the closed-form length for the *whole*
+    // conversation (the last generated token is never appended).
+    let lens2 = t2.get("cache_lens").unwrap().as_usize_vec().unwrap();
+    assert_eq!(lens2, solo.cache_lens);
+    let total = concat.len() + solo.tokens.len() - 1;
+    let want = ratio::retained_len(total, cfg.sink, cfg.lag, cfg.keep_per_partition());
+    for (layer, &len) in lens2.iter().enumerate() {
+        assert_eq!(len, want, "layer {layer}: session cache off the Eq. 10 trajectory");
+    }
+    // and strictly fewer tokens were prefilled on turn 2 than a
+    // from-scratch turn would have needed
+    assert!(ids2.len() < concat.len());
+
+    stop.store(true, Ordering::Relaxed);
+    accept.join().unwrap().unwrap();
+}
+
+/// Streaming and one-shot answers over TCP agree: folded deltas equal the
+/// one-shot text, event counts match the summary counters.
+#[test]
+fn tcp_streaming_events_match_one_shot() {
+    let (_server, port, stop, accept) = boot_server();
+    let mut client = Client::connect(port).unwrap();
+    let mut rng = Rng::seed_from(8);
+    let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 100, n_digits: 8, depth: None });
+    let params = GenerateParams::new(item.prompt).lag(16).ratio(0.5).max_new(10);
+
+    let events = client.stream(&params.request_line(Some(1), true)).unwrap();
+    let one_shot = client.call(&params.request_line(Some(2), false)).unwrap();
+    assert_eq!(*one_shot.get("error").unwrap(), Json::Null);
+
+    let kind = |v: &Json| v.opt("event").and_then(|e| e.as_str().ok()).unwrap_or("").to_string();
+    assert_eq!(kind(&events[0]), "started");
+    assert_eq!(kind(events.last().unwrap()), "done");
+    let text: String = events
+        .iter()
+        .filter(|v| kind(v) == "token")
+        .map(|v| v.get("text_delta").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(text, one_shot.get("text").unwrap().as_str().unwrap());
+    let n_compress = events.iter().filter(|v| kind(v) == "compression").count();
+    assert_eq!(
+        n_compress,
+        one_shot.get("compression_events").unwrap().as_usize().unwrap(),
+        "one compression event line per driver event"
+    );
+    let done = events.last().unwrap();
+    assert_eq!(
+        done.get("cache_lens").unwrap().as_usize_vec().unwrap(),
+        one_shot.get("cache_lens").unwrap().as_usize_vec().unwrap()
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    accept.join().unwrap().unwrap();
+}
+
+/// Dropping the in-proc event handle aborts the slot mid-decode (the
+/// drop-based cancellation path).
+#[test]
+fn dropping_the_handle_aborts_the_slot() {
+    let e = engine();
+    let prompt = long_chain_prompt(&e, 64);
+    let router = Router::start(EngineSpec::cpu(), &["llama_like".to_string()]);
+    let handle = router
+        .submit(
+            "llama_like",
+            GenerateParams::new(prompt).max_new(600).into_request(10).unwrap(),
+        )
+        .unwrap();
+    let first = handle.events.recv().unwrap();
+    assert!(matches!(first, Event::Started { .. }), "got {first:?}");
+    drop(handle);
+
+    let stats = router.stats("llama_like").unwrap();
+    let mut aborted = false;
+    for _ in 0..500 {
+        if stats.cancelled.load(Ordering::Relaxed) == 1 {
+            aborted = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(aborted, "dropped handle must abort the slot");
+    assert_eq!(stats.completed.load(Ordering::Relaxed), 0);
+    router.shutdown();
+}
+
+/// Explicit cancellation folds to a typed `cancelled` error with fewer
+/// tokens than the budget.
+#[test]
+fn explicit_cancel_terminates_with_typed_error() {
+    let e = engine();
+    let prompt = long_chain_prompt(&e, 64);
+    let router = Router::start(EngineSpec::cpu(), &["llama_like".to_string()]);
+    let handle = router
+        .submit(
+            "llama_like",
+            GenerateParams::new(prompt).max_new(600).into_request(11).unwrap(),
+        )
+        .unwrap();
+    let first = handle.events.recv().unwrap();
+    assert!(matches!(first, Event::Started { .. }));
+    handle.cancel();
+    let resp = handle.wait();
+    assert_eq!(resp.error.as_ref().map(|er| er.code()), Some("cancelled"));
+    assert!(resp.tokens.len() < 600, "cancel must land mid-decode");
+    router.shutdown();
+}
+
+/// The bounded admission queue rejects overflow with a typed `queue-full`
+/// error while accepted requests still complete.
+#[test]
+fn queue_overflow_is_a_typed_error() {
+    let cfg = RouterConfig { queue_depth: 1, sessions: SessionConfig::default() };
+    let router = Router::start_with(EngineSpec::cpu(), &["llama_like".to_string()], cfg);
+    let mut rng = Rng::seed_from(3);
+    let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 100, n_digits: 8, depth: None });
+    let mut handles = Vec::new();
+    let mut rejected = 0usize;
+    for id in 0..10u64 {
+        let req = GenerateParams::new(item.prompt.clone())
+            .lag(16)
+            .max_new(12)
+            .into_request(id)
+            .unwrap();
+        match router.submit("llama_like", req) {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                assert_eq!(e.code(), "queue-full");
+                rejected += 1;
+            }
+        }
+    }
+    // 4 decode slots + a queue depth of 1 cannot absorb 10 instant submits.
+    assert!(rejected >= 1, "expected at least one queue-full rejection");
+    assert!(!handles.is_empty(), "the first submit always fits");
+    for h in handles {
+        let r = h.wait();
+        assert!(r.error.is_none(), "accepted request failed: {:?}", r.error);
+    }
+    router.shutdown();
 }

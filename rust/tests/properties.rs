@@ -2,20 +2,24 @@
 //!
 //! Taxonomy (see ROADMAP "Open items"):
 //! * **property** — Eq. 10 ledger reconciliation, sink immunity, per-head
-//!   shape contract, top-k tie/NaN behavior, under randomized configs;
+//!   shape contract, top-k tie/NaN behavior, stream/one-shot parity of the
+//!   serving API, under randomized configs;
 //! * **sim-regression** — the paper's headline ordering (LagKV retains
 //!   more needle tokens than recency eviction at equal compression) on the
 //!   model-free simulator.
 
+use lagkv::backend::EngineSpec;
 use lagkv::compress::driver::CompressionEvent;
 use lagkv::compress::maybe_compress;
 use lagkv::compress::policy::make_policy;
 use lagkv::compress::topk::{topk_indices, topk_indices_into};
 use lagkv::config::{CompressionConfig, PolicyKind};
+use lagkv::coordinator::{Event, GenerateParams, Response, Router};
 use lagkv::kvcache::{ratio, KvCache};
 use lagkv::sim::{self, SimSpec};
 use lagkv::util::prop;
 use lagkv::util::rng::Rng;
+use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
 
 fn fill_one(cache: &mut KvCache, rng: &mut Rng) {
     let w = cache.n_layers * cache.n_heads * cache.d_head;
@@ -217,6 +221,123 @@ fn prop_topk_tie_and_nan_contract() {
         }
         Ok(())
     });
+}
+
+/// Stream/one-shot parity across every policy: for a random (policy, L, r,
+/// prompt, budget), the live event stream and the folded one-shot response
+/// describe the same generation —
+/// * concatenated `Token` deltas equal the folded `Response.text`,
+/// * the `Token` ids equal `Response.tokens`,
+/// * the number of `Compression` events equals `compression_events`,
+/// * `Started`/`Done` bracket the stream and agree on the accounting.
+#[test]
+fn prop_stream_events_fold_to_one_shot_response() {
+    let router = Router::start(EngineSpec::cpu(), &["llama_like".to_string()]);
+    prop::check(14, |g| {
+        let policy = *g.pick(PolicyKind::all());
+        let lag = [8usize, 16, 32][g.usize(0, 2)];
+        let ratio = [0.5, 0.25, 0.125][g.usize(0, 2)];
+        let n_filler = g.usize(40, 150);
+        let max_new = g.usize(2, 16);
+        let mut rng = Rng::seed_from(g.case as u64 + 5);
+        let item =
+            gen_passkey(&mut rng, &PasskeySpec { n_filler, n_digits: 8, depth: None });
+        let params = GenerateParams::new(item.prompt)
+            .policy(policy)
+            .sink(4)
+            .lag(lag)
+            .ratio(ratio)
+            .max_new(max_new)
+            .seed(g.case as u64);
+
+        // streamed: collect the raw events
+        let handle = router
+            .submit(
+                "llama_like",
+                params.clone().into_request(1).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+        let events: Vec<Event> = handle.events.iter().collect();
+
+        // one-shot: the folding path callers use
+        let folded = router
+            .generate(
+                "llama_like",
+                params.into_request(2).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| format!("{e:#}"))?;
+        if let Some(err) = &folded.error {
+            return Err(format!("{}: one-shot failed: {err}", policy.name()));
+        }
+
+        match events.first() {
+            Some(Event::Started { prompt_tokens, .. }) => {
+                if *prompt_tokens != folded.prompt_tokens {
+                    return Err(format!(
+                        "Started.prompt_tokens {prompt_tokens} != {}",
+                        folded.prompt_tokens
+                    ));
+                }
+            }
+            other => return Err(format!("stream must open with Started, got {other:?}")),
+        }
+        match events.last() {
+            Some(Event::Done { usage, .. }) => {
+                if usage.cache_lens != folded.cache_lens {
+                    return Err("Done.cache_lens diverged from one-shot".into());
+                }
+                if usage.compression_events != folded.compression_events {
+                    return Err("Done.compression_events diverged".into());
+                }
+            }
+            other => return Err(format!("stream must close with Done, got {other:?}")),
+        }
+
+        let mut text = String::new();
+        let mut tokens = Vec::new();
+        let mut n_compress = 0usize;
+        for ev in &events {
+            match ev {
+                Event::Token { token, text_delta, .. } => {
+                    tokens.push(*token);
+                    text.push_str(text_delta);
+                }
+                Event::Compression { .. } => n_compress += 1,
+                _ => {}
+            }
+        }
+        if text != folded.text {
+            return Err(format!(
+                "{}: delta concat {text:?} != one-shot text {:?}",
+                policy.name(),
+                folded.text
+            ));
+        }
+        if tokens != folded.tokens {
+            return Err(format!("{}: token ids diverged", policy.name()));
+        }
+        if n_compress != folded.compression_events {
+            return Err(format!(
+                "{}: {n_compress} Compression events != {} compression_events",
+                policy.name(),
+                folded.compression_events
+            ));
+        }
+
+        // and the generic fold reproduces the one-shot response wholesale
+        let refolded = Response::from_events(events);
+        if refolded.text != folded.text
+            || refolded.tokens != folded.tokens
+            || refolded.prompt_tokens != folded.prompt_tokens
+            || refolded.cache_lens != folded.cache_lens
+            || refolded.compression_events != folded.compression_events
+            || refolded.error.is_some()
+        {
+            return Err("Response::from_events disagrees with Router::generate".into());
+        }
+        Ok(())
+    });
+    router.shutdown();
 }
 
 /// The paper's headline ordering as a standing regression: at equal

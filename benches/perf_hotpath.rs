@@ -3,6 +3,10 @@
 //!   * LagKV scoring kernel (pure-Rust) across partition sizes,
 //!   * top-k selection,
 //!   * KvCache append / compact / padded-export,
+//!   * pooled block-remap compaction vs the old flat rebuild (with
+//!     kvpool occupancy / high-water / fragmentation gauges),
+//!   * 2-turn session resume via `prefill_onto` (pool-ledger evidence
+//!     that a resume allocates only tail blocks),
 //!   * decode step (engine, literal path),
 //!   * prefill per bucket,
 //!   * end-to-end generation tokens/s,
@@ -21,7 +25,8 @@ use lagkv::config::{CompressionConfig, PolicyKind};
 use lagkv::coordinator::{Event, GenerateParams, Router};
 use lagkv::engine::{Engine, SlotState};
 use lagkv::kvcache::KvCache;
-use lagkv::metrics::Histogram;
+use lagkv::kvpool::BlockPool;
+use lagkv::metrics::{Histogram, PoolGauges};
 use lagkv::util::argmax;
 use lagkv::util::rng::Rng;
 use lagkv::util::time_it;
@@ -116,6 +121,123 @@ fn bench_kvcache() {
     row("all_padded export (400 rows -> 512)", mean, "");
 }
 
+/// The old flat per-head store (pre-kvpool): `compact_window` rebuilt the
+/// whole `(layer, head)` allocation on every event.  Kept here verbatim as
+/// the baseline the pooled block-remap must not regress against.  A
+/// sibling copy in rust/tests/properties.rs is the *semantic* reference —
+/// change neither without the other.
+struct FlatHead {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pos: Vec<i32>,
+    attn: Vec<f32>,
+}
+
+impl FlatHead {
+    fn compact_window(&mut self, d: usize, start: usize, l: usize, keep: &[usize]) {
+        let mut k = Vec::with_capacity(self.k.len() - (l - keep.len()) * d);
+        let mut v = Vec::with_capacity(k.capacity());
+        let mut pos = Vec::with_capacity(self.pos.len() - (l - keep.len()));
+        let mut attn = Vec::with_capacity(pos.capacity());
+        k.extend_from_slice(&self.k[..start * d]);
+        v.extend_from_slice(&self.v[..start * d]);
+        pos.extend_from_slice(&self.pos[..start]);
+        attn.extend_from_slice(&self.attn[..start]);
+        for &i in keep {
+            let r = start + i;
+            k.extend_from_slice(&self.k[r * d..(r + 1) * d]);
+            v.extend_from_slice(&self.v[r * d..(r + 1) * d]);
+            pos.push(self.pos[r]);
+            attn.push(self.attn[r]);
+        }
+        k.extend_from_slice(&self.k[(start + l) * d..]);
+        v.extend_from_slice(&self.v[(start + l) * d..]);
+        pos.extend_from_slice(&self.pos[start + l..]);
+        attn.extend_from_slice(&self.attn[start + l..]);
+        self.k = k;
+        self.v = v;
+        self.pos = pos;
+        self.attn = attn;
+    }
+}
+
+/// Decode-cadence compaction: the same chain of L=64, keep-16 windows
+/// (start marching like the driver's boundary) applied to the pooled
+/// cache (block-remap + freeze) and to the old flat rebuild.
+fn bench_compact_remap() {
+    let (nh, d) = (2usize, 32usize);
+    for &n in &[512usize, 2048] {
+        let mut rng = Rng::seed_from(6);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let keep: Vec<usize> = (0..16).map(|i| i * 4).collect();
+        let mut windows = Vec::new();
+        {
+            let mut start = 4usize;
+            let mut len = n;
+            while start + 64 <= len {
+                windows.push(start);
+                len -= 48;
+                start += 16;
+            }
+        }
+
+        let pool = BlockPool::unbounded(16);
+        let mut base = KvCache::new_in(pool.clone(), 1, nh, d);
+        for t in 0..n {
+            let mut rowbuf = Vec::with_capacity(nh * d);
+            for _ in 0..nh {
+                rowbuf.extend_from_slice(&rows[t * d..(t + 1) * d]);
+            }
+            base.append_token(&rowbuf, &rowbuf, t as i32).unwrap();
+        }
+        let keeps: Vec<Vec<usize>> = vec![keep.clone(); nh];
+        let (mean_pooled, _) = time_it(3, 20, || {
+            let mut c = base.clone();
+            for &s in &windows {
+                c.compact_layer(0, s, 64, &keeps).unwrap();
+            }
+            std::hint::black_box(c.len(0));
+        });
+        row(
+            &format!("compact chain n={n} (pooled block-remap)"),
+            mean_pooled,
+            &format!("{} windows", windows.len()),
+        );
+
+        let base_flat: Vec<FlatHead> = (0..nh)
+            .map(|_| FlatHead {
+                k: rows.clone(),
+                v: rows.clone(),
+                pos: (0..n as i32).collect(),
+                attn: vec![0.0; n],
+            })
+            .collect();
+        let (mean_flat, _) = time_it(3, 20, || {
+            let mut heads: Vec<FlatHead> = base_flat
+                .iter()
+                .map(|f| FlatHead {
+                    k: f.k.clone(),
+                    v: f.v.clone(),
+                    pos: f.pos.clone(),
+                    attn: f.attn.clone(),
+                })
+                .collect();
+            for &s in &windows {
+                for h in heads.iter_mut() {
+                    h.compact_window(d, s, 64, &keep);
+                }
+            }
+            std::hint::black_box(heads[0].pos.len());
+        });
+        row(
+            &format!("compact chain n={n} (flat rebuild baseline)"),
+            mean_flat,
+            &format!("{:.2}x the pooled remap", mean_flat / mean_pooled),
+        );
+        println!("{}", PoolGauges::from(&pool.stats()).render());
+    }
+}
+
 fn bench_engine(engine: &Engine) -> anyhow::Result<()> {
     let mut rng = Rng::seed_from(4);
     let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 260, n_digits: 32, depth: None });
@@ -169,6 +291,49 @@ fn bench_engine(engine: &Engine) -> anyhow::Result<()> {
         "e2e generation throughput",
         toks as f64 / dt
     );
+    Ok(())
+}
+
+/// A 2-turn session resume through `prefill_onto`: the resumed turn must
+/// allocate only its own tail blocks (zero full-cache deep copies; the
+/// pool ledger is the evidence — properties.rs asserts the same bound).
+fn bench_session_resume(engine: &Engine) -> anyhow::Result<()> {
+    let cfg = CompressionConfig {
+        policy: PolicyKind::LagKv,
+        sink: 4,
+        lag: 16,
+        ratio: 0.25,
+        ..Default::default()
+    };
+    let mut rng = Rng::seed_from(11);
+    let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 260, n_digits: 16, depth: None });
+    let ids = engine.tokenizer.encode(&item.prompt, true);
+    let (logits, mut cache) = engine.prefill(&ids)?;
+    let mut scorer = engine.make_scorer(&cfg, 0);
+    maybe_compress(&mut cache, &cfg, scorer.as_mut())?;
+    let history_blocks = cache.frozen_blocks();
+    let history_bytes = cache.exact_bytes();
+    let before = engine.pool().stats();
+
+    let first = argmax(&logits) as i32;
+    let mut feed = vec![first];
+    feed.extend(engine.tokenizer.encode("<q> the pass key <a>", false));
+    let t0 = Instant::now();
+    engine.prefill_onto(&mut cache, &cfg, scorer.as_mut(), &feed)?;
+    let dt_ns = t0.elapsed().as_nanos() as f64;
+    let after = engine.pool().stats();
+    row(
+        "session resume prefill_onto",
+        dt_ns,
+        &format!("{} new toks onto {} history rows", feed.len(), ids.len()),
+    );
+    println!(
+        "  resume allocated {} new blocks (history: {history_blocks} blocks, {history_bytes} B); \
+         high-water grew {} B",
+        after.resident_blocks.saturating_sub(before.resident_blocks),
+        after.high_water_bytes.saturating_sub(before.high_water_bytes),
+    );
+    println!("{}", PoolGauges::from(&after).render());
     Ok(())
 }
 
@@ -226,10 +391,12 @@ fn main() -> anyhow::Result<()> {
     bench_scores();
     bench_topk();
     bench_kvcache();
+    bench_compact_remap();
     match load_engine("llama_like") {
         Ok(engine) => {
             println!("-- engine benches ({}) --", engine.backend().platform());
             bench_engine(&engine)?;
+            bench_session_resume(&engine)?;
         }
         Err(e) => eprintln!("SKIP engine benches: {e:#}"),
     }

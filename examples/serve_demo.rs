@@ -5,8 +5,13 @@
 //! and streaming TTFT, then runs a two-turn session to show the compressed
 //! cache being reused across turns.
 //!
+//! Memory budgets: `--pool-mb N` caps each model's KV block pool (typed
+//! `pool-exhausted` rejections + LRU session shedding under pressure) and
+//! `--session-mb N` caps the session store's resident bytes.
+//!
 //! ```bash
 //! cargo run --release --example serve_demo -- --requests 24 --clients 6
+//! cargo run --release --example serve_demo -- --pool-mb 4 --session-mb 1
 //! ```
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -14,7 +19,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use lagkv::coordinator::{GenerateParams, Router, RouterConfig};
-use lagkv::metrics::{Histogram, Table};
+use lagkv::metrics::{Histogram, PoolGauges, Table};
 use lagkv::server::{Client, Server};
 use lagkv::util::cli::Args;
 use lagkv::util::json::Json;
@@ -30,7 +35,13 @@ fn main() -> anyhow::Result<()> {
 
     // Boot the stack on an ephemeral port.
     let models = vec!["llama_like".to_string(), "qwen_like".to_string()];
-    let router = Arc::new(Router::start_with(spec, &models, RouterConfig::default()));
+    let mut router_cfg = RouterConfig::default();
+    match args.usize_or("pool-mb", 0)? {
+        0 => {} // absent or explicit 0: uncapped, like --session-mb 0
+        mb => router_cfg.pool_max_bytes = Some(mb * 1024 * 1024),
+    }
+    router_cfg.sessions.max_bytes = args.usize_or("session-mb", 0)? * 1024 * 1024;
+    let router = Arc::new(Router::start_with(spec, &models, router_cfg));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));
     let (listener, port) = Server::bind(args.usize_or("port", 0)? as u16)?;
@@ -180,6 +191,14 @@ fn main() -> anyhow::Result<()> {
         t2.get("reused_tokens")?.as_usize()?,
         t2.get("cache_lens")?.to_string(),
     );
+
+    // KV pool occupancy per model (the session above stays resident).
+    println!();
+    for model in &models {
+        if let Some(pool) = server.router.pool(model) {
+            println!("{model}: {}", PoolGauges::from(&pool.stats()).render());
+        }
+    }
 
     stop.store(true, Ordering::Relaxed);
     Ok(())

@@ -1,7 +1,10 @@
 //! Hermetic server smoke check (CI job `server-smoke`): boots the TCP
 //! server on an ephemeral port over the CPU reference backend, runs one
-//! streaming request and one cancelled request, and asserts a clean
-//! shutdown.  Exits non-zero on any protocol violation.
+//! streaming request and one cancelled request, asserts a clean shutdown,
+//! then reboots with a tiny byte-budgeted KV pool and asserts the
+//! memory-pressure admission path end-to-end: LRU session shedding under
+//! pressure, the typed `pool-exhausted` wire rejection, and recovery
+//! afterwards.  Exits non-zero on any protocol violation.
 //!
 //! ```bash
 //! cargo run --release --example server_smoke
@@ -12,8 +15,9 @@ use std::sync::Arc;
 
 use lagkv::backend::EngineSpec;
 use lagkv::config::PolicyKind;
-use lagkv::coordinator::{GenerateParams, Router, RouterConfig};
+use lagkv::coordinator::{GenerateParams, Router, RouterConfig, SessionConfig};
 use lagkv::engine::Engine;
+use lagkv::kvpool::row_bytes;
 use lagkv::server::{Client, Server};
 use lagkv::util::json::Json;
 use lagkv::util::rng::Rng;
@@ -130,6 +134,108 @@ fn main() -> anyhow::Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
     assert_eq!(server.live_requests(), 0, "no request may survive shutdown");
+
+    // 5. Memory-pressure admission on a tiny byte-budgeted pool: a
+    //    session fills it, a moderate request recovers by shedding that
+    //    session, and an oversized request is a typed `pool-exhausted`
+    //    rejection on the wire.
+    let dims = &probe.dims;
+    let row = row_bytes(dims.n_layers, dims.n_kv_heads, dims.d_head);
+    let budget = 200 * row; // ~200 cache rows total
+    let tiny_cfg = RouterConfig {
+        queue_depth: 8,
+        sessions: SessionConfig::default(),
+        pool_max_bytes: Some(budget),
+    };
+    let router2 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, tiny_cfg));
+    let stats2 = router2.stats("llama_like").expect("model stats");
+    let server2 = Arc::new(Server::new(router2.clone()));
+    let stop2 = Arc::new(AtomicBool::new(false));
+    let (listener2, port2) = Server::bind(0)?;
+    let serve2 = {
+        let server2 = server2.clone();
+        let stop2 = stop2.clone();
+        std::thread::spawn(move || server2.serve_listener(listener2, stop2))
+    };
+    let mut client2 = Client::connect(port2)?;
+    let mut rng = Rng::seed_from(41);
+    let small_prompt = |rng: &mut Rng| {
+        gen_passkey(rng, &PasskeySpec { n_filler: 60, n_digits: 8, depth: None }).prompt
+    };
+
+    // A: a session turn that fits and stays resident in the store.
+    let a = client2.call(
+        &GenerateParams::new(small_prompt(&mut rng))
+            .lag(16)
+            .ratio(0.5)
+            .max_new(8)
+            .session("mem-1")
+            .request_line(Some(20), false),
+    )?;
+    assert_eq!(*a.get("error")?, Json::Null, "session turn must fit: {a:?}");
+    let pool2 = router2.pool("llama_like").expect("pool");
+    assert!(pool2.resident_bytes() > 0, "the detached session must stay resident");
+
+    // B: a request whose worst case exceeds the whole budget is a typed
+    //    rejection — and it must NOT shed the innocent stored session on
+    //    the way out (shedding cannot make an impossible request fit).
+    let d_resp = client2.call(
+        &GenerateParams::new(small_prompt(&mut rng))
+            .lag(16)
+            .ratio(0.5)
+            .max_new(600)
+            .request_line(Some(21), false),
+    )?;
+    let code = d_resp.get("error")?.get("code")?.as_str()?.to_string();
+    assert_eq!(code, "pool-exhausted", "oversized request: {d_resp:?}");
+    assert_eq!(stats2.pool_rejected.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        stats2.sessions_shed.load(Ordering::Relaxed),
+        0,
+        "an impossible request must not destroy stored sessions"
+    );
+    assert!(pool2.resident_bytes() > 0, "the session survives the rejection");
+
+    // C: a fresh request whose estimate only fits if the LRU session is
+    //    shed — recovery under pressure.
+    let b = client2.call(
+        &GenerateParams::new(small_prompt(&mut rng))
+            .lag(16)
+            .ratio(0.5)
+            .max_new(100)
+            .request_line(Some(22), false),
+    )?;
+    assert_eq!(*b.get("error")?, Json::Null, "request must recover by shedding: {b:?}");
+    assert!(
+        stats2.sessions_shed.load(Ordering::Relaxed) >= 1,
+        "the stored session must have been shed to admit the new work"
+    );
+
+    // D: after rejection and shedding the pool still serves right-sized
+    //    work, and the shed session resumes as a fresh conversation.
+    let c = client2.call(
+        &GenerateParams::new(small_prompt(&mut rng))
+            .lag(16)
+            .ratio(0.5)
+            .max_new(8)
+            .session("mem-1")
+            .request_line(Some(23), false),
+    )?;
+    assert_eq!(*c.get("error")?, Json::Null, "pool must recover: {c:?}");
+    assert_eq!(
+        c.get("reused_tokens")?.as_usize()?,
+        0,
+        "the shed session must restart from scratch"
+    );
+    println!(
+        "pool pressure ok: shed {} session(s), {} typed rejection(s)",
+        stats2.sessions_shed.load(Ordering::Relaxed),
+        stats2.pool_rejected.load(Ordering::Relaxed),
+    );
+
+    drop(client2);
+    stop2.store(true, Ordering::Relaxed);
+    serve2.join().expect("budgeted server thread")?;
     println!("SMOKE OK");
     Ok(())
 }

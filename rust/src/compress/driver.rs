@@ -31,6 +31,11 @@ pub struct CompressionEvent {
     pub l: usize,
     /// Rows kept per head.
     pub kept: usize,
+    /// Per-layer cache lengths captured immediately after this event —
+    /// the snapshot the serving `Event::Compression` line carries, so a
+    /// streamed Eq. 10 trajectory stays per-event exact even when several
+    /// events fire in one driver pass.
+    pub layer_lens: Vec<usize>,
 }
 
 /// Run as many compression rounds as are due on every eligible layer.
@@ -62,6 +67,12 @@ pub fn maybe_compress(
                 break;
             }
             let ev = if scorer.global_scope() {
+                // Global scope scores the whole evictable region, which may
+                // reach behind the paged (frozen) prefix; bring the layer
+                // back to contiguous storage first.  No-op unless an
+                // earlier turn ran a partition-scope policy on this cache —
+                // pure global-scope caches never freeze past the sink.
+                cache.thaw_layer(layer);
                 compress_global(cache, cfg, scorer, layer, start, keep)?
             } else {
                 compress_one(cache, cfg, scorer, layer, start, keep)?
@@ -107,7 +118,7 @@ fn compress_one(
         keeps.push(kept_idx);
     }
     cache.compact_layer(layer, start, l, &keeps)?;
-    Ok(CompressionEvent { layer, start, l, kept: keep })
+    Ok(CompressionEvent { layer, start, l, kept: keep, layer_lens: cache.lens() })
 }
 
 /// Global-scope eviction (original H2O): evict `L - keep` rows per event
@@ -159,7 +170,13 @@ fn compress_global(
     // fire at the same lengths, so Eq. 10 holds for every policy and the
     // comparisons stay apples-to-apples.
     cache.layers[layer].boundary = trigger_start + keep;
-    Ok(CompressionEvent { layer, start, l: window_len, kept: window_len - evict })
+    Ok(CompressionEvent {
+        layer,
+        start,
+        l: window_len,
+        kept: window_len - evict,
+        layer_lens: cache.lens(),
+    })
 }
 
 #[cfg(test)]
@@ -199,6 +216,25 @@ mod tests {
             assert_eq!(cache.len(0), want, "at Ls={ls}");
             assert_eq!(cache.len(1), want, "at Ls={ls}");
         }
+    }
+
+    #[test]
+    fn events_carry_per_event_length_snapshots() {
+        let cfg = mk_cfg(2, 8, 0.5, PolicyKind::LagKv);
+        let mut scorer = make_policy(cfg.policy, 0);
+        let mut cache = KvCache::new(2, 1, 2);
+        fill(&mut cache, 120, 9);
+        let events = maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+        assert!(events.len() >= 2, "bulk compression fires several events");
+        // lengths only shrink across a pass, per layer
+        for pair in events.windows(2) {
+            let (a, b) = (&pair[0], &pair[1]);
+            assert!(a.layer_lens.iter().zip(&b.layer_lens).all(|(x, y)| y <= x));
+        }
+        // the last snapshot is the final state; earlier ones are NOT just
+        // copies of it (each event captured its own moment)
+        assert_eq!(events.last().unwrap().layer_lens, cache.lens());
+        assert_ne!(events.first().unwrap().layer_lens, cache.lens());
     }
 
     #[test]
@@ -299,7 +335,7 @@ mod tests {
         let b = mk(false);
         assert_eq!(a.positions(0, 0), b.positions(0, 0));
         assert_eq!(a.positions(0, 1), b.positions(0, 1));
-        assert_eq!(a.layers[0].heads[0].k, b.layers[0].heads[0].k);
+        assert_eq!(a.head_k(0, 0), b.head_k(0, 0));
     }
 
     #[test]

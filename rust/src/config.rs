@@ -217,6 +217,13 @@ pub struct ServingConfig {
     pub session_capacity: usize,
     /// Session idle time-to-live, seconds.
     pub session_ttl_s: u64,
+    /// Byte budget for each model's KV block pool (`None` = unbudgeted).
+    /// CLI: `--pool-mb N` (mebibytes; 0 means uncapped, matching
+    /// `--session-mb`).
+    pub pool_max_bytes: Option<usize>,
+    /// Resident-byte cap for each model's session store (0 = uncapped).
+    /// CLI: `--session-mb N` (mebibytes).
+    pub session_max_bytes: usize,
     /// Port for the TCP front-end.
     pub port: u16,
 }
@@ -230,6 +237,8 @@ impl Default for ServingConfig {
             max_queue: 256,
             session_capacity: 64,
             session_ttl_s: 600,
+            pool_max_bytes: None,
+            session_max_bytes: 0,
             port: 7199,
         }
     }
@@ -242,6 +251,11 @@ impl ServingConfig {
         c.max_queue = args.usize_or("max-queue", c.max_queue)?;
         c.session_capacity = args.usize_or("sessions", c.session_capacity)?;
         c.session_ttl_s = args.u64_or("session-ttl", c.session_ttl_s)?;
+        match args.usize_or("pool-mb", 0)? {
+            0 => {} // absent or explicit 0: uncapped, like --session-mb 0
+            mb => c.pool_max_bytes = Some(mb * 1024 * 1024),
+        }
+        c.session_max_bytes = args.usize_or("session-mb", 0)? * 1024 * 1024;
         c.port = args.usize_or("port", c.port as usize)? as u16;
         Ok(c)
     }
@@ -310,6 +324,26 @@ mod tests {
         assert_eq!(c.policy, PolicyKind::H2O);
         assert_eq!(c.lag, 32);
         assert_eq!(c.ratio, 0.25);
+    }
+
+    #[test]
+    fn serving_memory_budget_flags() {
+        let args = Args::parse(
+            ["--pool-mb", "64", "--session-mb", "8"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = ServingConfig::from_args(&args).unwrap();
+        assert_eq!(c.pool_max_bytes, Some(64 * 1024 * 1024));
+        assert_eq!(c.session_max_bytes, 8 * 1024 * 1024);
+        let empty = Args::parse(std::iter::empty::<String>()).unwrap();
+        let d = ServingConfig::from_args(&empty).unwrap();
+        assert_eq!(d.pool_max_bytes, None, "unbudgeted by default");
+        assert_eq!(d.session_max_bytes, 0);
+        // an explicit 0 means uncapped (like --session-mb), never a
+        // zero-byte budget that would reject everything
+        let zero =
+            Args::parse(["--pool-mb", "0"].iter().map(|s| s.to_string())).unwrap();
+        assert_eq!(ServingConfig::from_args(&zero).unwrap().pool_max_bytes, None);
     }
 
     #[test]

@@ -35,13 +35,18 @@ use crate::util::argmax;
 use super::{ApiError, Event, SessionConfig, SessionStore, Timings, Usage, WorkItem};
 
 /// Liveness counters shared with the router (and tests): how many requests
-/// this coordinator finished, cancelled/aborted, or failed.
+/// this coordinator finished, cancelled/aborted, or failed, plus the
+/// memory-pressure admission counters (pool rejections, sessions shed).
 #[derive(Default)]
 pub struct CoordStats {
     pub completed: AtomicU64,
     pub cancelled: AtomicU64,
     pub failed: AtomicU64,
     pub sessions_resumed: AtomicU64,
+    /// Requests rejected with the typed `pool-exhausted` error.
+    pub pool_rejected: AtomicU64,
+    /// Detached sessions evicted to make room under the pool budget.
+    pub sessions_shed: AtomicU64,
 }
 
 pub struct Coordinator {
@@ -73,6 +78,12 @@ struct Pending {
     prev_digit: Option<bool>,
     /// How many generated tokens have been emitted as `Token` events.
     sent_tokens: usize,
+    /// Worst-case pool bytes this request may still occupy (its admission
+    /// estimate, plus any reattached history).  Admission counts these
+    /// reservations — not the slot's current resident bytes, which lag the
+    /// estimate — so concurrent slots cannot jointly oversubscribe the
+    /// budget.  Released implicitly when the slot's metadata is dropped.
+    reserved_bytes: usize,
 }
 
 impl Pending {
@@ -172,6 +183,7 @@ impl Coordinator {
             started: Instant::now(),
             prev_digit: None,
             sent_tokens: 0,
+            reserved_bytes: 0,
         };
         if pending.flagged() {
             // Cancelled while queued: never prefill.
@@ -183,6 +195,8 @@ impl Coordinator {
         let t0 = Instant::now();
         let mut scorer = self.engine.make_scorer(&req.compression, req.seed);
         let resumed = req.session.as_deref().and_then(|sid| self.sessions.take(sid));
+        // The taken entry's bytes are no longer sheddable while we hold it.
+        self.publish_sheddable();
         // (logits, cache, prefill-stage compression events)
         let prefill = match resumed {
             Some(entry) => {
@@ -205,12 +219,36 @@ impl Coordinator {
                         self.engine.tmax
                     );
                     self.sessions.put(sid, entry.cache, entry.pending, entry.turns);
+                    self.publish_sheddable();
                     pending.send(Event::Error {
                         id: pending.id,
                         error: ApiError::EngineFailure { message },
                     });
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
                     return;
+                }
+                // Memory-pressure admission: the reattached history is
+                // already resident, so budget only the new turn's rows —
+                // but reserve history + estimate so later admissions keep
+                // counting the history once it moves into the slot.
+                match self.ensure_pool_capacity(feed.len() + req.max_new, slots, meta) {
+                    Ok(reserved) => {
+                        pending.reserved_bytes = reserved + entry.cache.exact_bytes();
+                    }
+                    Err(detail) => {
+                        let sid = req.session.as_deref().unwrap_or("");
+                        self.sessions.put(sid, entry.cache, entry.pending, entry.turns);
+                        self.publish_sheddable();
+                        pending.send(Event::Error {
+                            id: pending.id,
+                            error: ApiError::PoolExhausted {
+                                model: self.engine.variant.clone(),
+                                detail,
+                            },
+                        });
+                        self.stats.pool_rejected.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
                 }
                 self.stats.sessions_resumed.fetch_add(1, Ordering::Relaxed);
                 let mut cache = entry.cache;
@@ -221,6 +259,20 @@ impl Coordinator {
             None => {
                 let ids = self.engine.tokenizer.encode(&req.prompt, true);
                 pending.prompt_tokens = ids.len();
+                match self.ensure_pool_capacity(ids.len() + req.max_new, slots, meta) {
+                    Ok(reserved) => pending.reserved_bytes = reserved,
+                    Err(detail) => {
+                        pending.send(Event::Error {
+                            id: pending.id,
+                            error: ApiError::PoolExhausted {
+                                model: self.engine.variant.clone(),
+                                detail,
+                            },
+                        });
+                        self.stats.pool_rejected.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                }
                 self.engine.prefill(&ids).and_then(|(logits, mut cache)| {
                     // prefill-stage recursive compression
                     let events = maybe_compress(&mut cache, &req.compression, scorer.as_mut())?;
@@ -274,10 +326,13 @@ impl Coordinator {
         let Some(seq) = slots[idx].seq_mut() else { return };
         let Some(p) = meta[idx].as_mut() else { return };
         for ev in std::mem::take(&mut seq.step_events) {
+            // Each event carries its own post-event length snapshot, so a
+            // burst of events in one pass streams the true per-event
+            // Eq. 10 trajectory (not N copies of the final lengths).
             p.send(Event::Compression {
                 id: p.id,
-                layer_lens: seq.cache.lens(),
                 evicted: ev.l - ev.kept,
+                layer_lens: ev.layer_lens,
             });
         }
         while p.sent_tokens < seq.generated.len() {
@@ -342,6 +397,77 @@ impl Coordinator {
     fn stash_session(&mut self, p: &Pending, seq: SeqState) {
         if let Some(sid) = &p.session {
             self.sessions.put(sid, seq.cache, seq.next_token, p.turns + 1);
+            self.publish_sheddable();
+        }
+    }
+
+    /// Keep the pool's sheddable-bytes signal (read by the router's cheap
+    /// pre-queue pressure check) in step with the session store.
+    fn publish_sheddable(&self) {
+        self.engine.pool().set_sheddable(self.sessions.total_bytes());
+    }
+
+    /// Memory-pressure admission for a byte-budgeted pool: estimate the
+    /// request's worst-case new rows (prompt + generation budget, before
+    /// compression), shed least-recently-used detached sessions until the
+    /// estimate fits, and return the byte reservation the caller records
+    /// on its [`Pending`].
+    ///
+    /// Occupancy is judged as `resident - in-flight materialized +
+    /// in-flight reservations`: running slots are charged their full
+    /// worst-case estimate rather than the rows they happen to hold right
+    /// now, so concurrently admitted requests can never jointly grow past
+    /// the budget.  A request that could not fit even after shedding
+    /// every session is rejected *without* shedding anything — an
+    /// impossible request must not destroy stored conversations.
+    /// The typed rejection detail is reported when even an
+    /// empty store leaves too little room.  Unbudgeted pools admit
+    /// everything (the default — zero overhead on that path).
+    fn ensure_pool_capacity(
+        &mut self,
+        new_rows: usize,
+        slots: &[SlotState],
+        meta: &[Option<Pending>],
+    ) -> Result<usize, String> {
+        let pool = self.engine.pool().clone();
+        let Some(budget) = pool.budget() else { return Ok(0) };
+        let (nl, nh, dh) = {
+            let d = &self.engine.dims;
+            (d.n_layers, d.n_kv_heads, d.d_head)
+        };
+        let needed = new_rows * crate::kvpool::row_bytes(nl, nh, dh);
+        let reserved: usize = meta.iter().flatten().map(|p| p.reserved_bytes).sum();
+        let materialized: usize =
+            slots.iter().filter_map(|s| s.seq()).map(|q| q.cache.exact_bytes()).sum();
+        loop {
+            let resident = pool.resident_bytes();
+            let effective = resident.saturating_sub(materialized) + reserved;
+            if effective + needed <= budget {
+                self.publish_sheddable();
+                return Ok(needed);
+            }
+            let sheddable = self.sessions.total_bytes();
+            if effective.saturating_sub(sheddable) + needed > budget {
+                self.publish_sheddable();
+                return Err(format!(
+                    "{needed} bytes needed for {new_rows} rows, {effective} effectively \
+                     occupied ({sheddable} sheddable) under a {budget}-byte budget"
+                ));
+            }
+            match self.sessions.shed_lru() {
+                Some(_) => {
+                    self.stats.sessions_shed.fetch_add(1, Ordering::Relaxed);
+                }
+                // Unreachable while total_bytes() > 0, but never loop on a
+                // store that cannot yield bytes.
+                None => {
+                    self.publish_sheddable();
+                    return Err(format!(
+                        "{needed} bytes needed for {new_rows} rows with nothing left \
+                         to shed under a {budget}-byte budget"
+                    ));
+                }
+            }
         }
     }
 }

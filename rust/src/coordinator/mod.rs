@@ -54,6 +54,9 @@ use crate::util::json::{arr, n, obj, s, Json};
 pub enum ApiError {
     /// The model's admission queue is at capacity; retry later.
     QueueFull { model: String },
+    /// The model's KV block pool cannot fit the request even after
+    /// shedding every detached session; retry later or shrink the request.
+    PoolExhausted { model: String, detail: String },
     /// No coordinator serves this model variant.
     UnknownModel { model: String, have: Vec<String> },
     /// Request parameters failed validation (bad values, unknown fields).
@@ -69,6 +72,7 @@ impl ApiError {
     pub fn code(&self) -> &'static str {
         match self {
             ApiError::QueueFull { .. } => "queue-full",
+            ApiError::PoolExhausted { .. } => "pool-exhausted",
             ApiError::UnknownModel { .. } => "unknown-model",
             ApiError::BadParams { .. } => "bad-params",
             ApiError::EngineFailure { .. } => "engine-failure",
@@ -81,6 +85,9 @@ impl ApiError {
         match self {
             ApiError::QueueFull { model } => {
                 format!("admission queue for {model} is full")
+            }
+            ApiError::PoolExhausted { model, detail } => {
+                format!("kv pool for {model} is exhausted: {detail}")
             }
             ApiError::UnknownModel { model, have } => {
                 format!("unknown model {model:?} (have {have:?})")
@@ -472,6 +479,7 @@ mod tests {
     fn api_error_codes_are_stable() {
         let errs = [
             ApiError::QueueFull { model: "m".into() },
+            ApiError::PoolExhausted { model: "m".into(), detail: "z".into() },
             ApiError::UnknownModel { model: "m".into(), have: vec![] },
             ApiError::BadParams { message: "x".into() },
             ApiError::EngineFailure { message: "y".into() },
@@ -480,7 +488,14 @@ mod tests {
         let codes: Vec<&str> = errs.iter().map(|e| e.code()).collect();
         assert_eq!(
             codes,
-            vec!["queue-full", "unknown-model", "bad-params", "engine-failure", "cancelled"]
+            vec![
+                "queue-full",
+                "pool-exhausted",
+                "unknown-model",
+                "bad-params",
+                "engine-failure",
+                "cancelled"
+            ]
         );
         for e in &errs {
             let j = e.to_json();

@@ -26,6 +26,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::backend::EngineSpec;
+use crate::kvpool::BlockPool;
 
 use super::{
     ApiError, CoordStats, Coordinator, Event, Request, Response, SessionConfig, WorkItem,
@@ -38,11 +39,21 @@ pub struct RouterConfig {
     /// [`ApiError::QueueFull`].
     pub queue_depth: usize,
     pub sessions: SessionConfig,
+    /// Byte budget for each model's KV block pool (`None` = unbudgeted).
+    /// Under a budget the coordinator sheds LRU sessions before admitting
+    /// work and rejects with [`ApiError::PoolExhausted`] when even an
+    /// empty store leaves no room; the router additionally refuses to
+    /// enqueue while the pool is under hard pressure.
+    pub pool_max_bytes: Option<usize>,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { queue_depth: 256, sessions: SessionConfig::default() }
+        RouterConfig {
+            queue_depth: 256,
+            sessions: SessionConfig::default(),
+            pool_max_bytes: None,
+        }
     }
 }
 
@@ -76,6 +87,7 @@ impl GenHandle {
 pub struct Router {
     senders: HashMap<String, SyncSender<WorkItem>>,
     stats: HashMap<String, Arc<CoordStats>>,
+    pools: HashMap<String, Arc<BlockPool>>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -92,17 +104,21 @@ impl Router {
     pub fn start_with(spec: EngineSpec, variants: &[String], cfg: RouterConfig) -> Router {
         let mut senders = HashMap::new();
         let mut stats = HashMap::new();
+        let mut pools = HashMap::new();
         let mut threads = Vec::new();
         for variant in variants {
             let (tx, rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
             senders.insert(variant.clone(), tx);
             let coord_stats = Arc::new(CoordStats::default());
             stats.insert(variant.clone(), coord_stats.clone());
+            let pool = BlockPool::new(BlockPool::DEFAULT_ROWS_PER_BLOCK, cfg.pool_max_bytes);
+            pools.insert(variant.clone(), pool.clone());
             let spec = spec.clone();
             let name = variant.clone();
             let sessions = cfg.sessions.clone();
             threads.push(std::thread::spawn(move || match spec.build(&name) {
-                Ok(engine) => {
+                Ok(mut engine) => {
+                    engine.set_pool(pool);
                     let mut coord = Coordinator::with_config(engine, sessions, coord_stats);
                     if let Err(e) = coord.run(rx) {
                         eprintln!("coordinator {name} died: {e:#}");
@@ -122,7 +138,7 @@ impl Router {
                 }
             }));
         }
-        Router { senders, stats, threads }
+        Router { senders, stats, pools, threads }
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -134,12 +150,37 @@ impl Router {
         self.stats.get(model).cloned()
     }
 
+    /// This model's KV block pool (occupancy gauges, admission state).
+    pub fn pool(&self, model: &str) -> Option<Arc<BlockPool>> {
+        self.pools.get(model).cloned()
+    }
+
     /// Submit a request; returns the live event stream.
     pub fn submit(&self, model: &str, request: Request) -> Result<GenHandle, ApiError> {
         let tx = self.senders.get(model).ok_or_else(|| ApiError::UnknownModel {
             model: model.to_string(),
             have: self.models(),
         })?;
+        // Memory-pressure admission, before the bounded queue accepts the
+        // work: refuse while the pool would stay over budget even if every
+        // detached session were shed (the coordinator handles the precise
+        // per-request estimate and the actual shedding).
+        if let Some(pool) = self.pools.get(model) {
+            if pool.hard_pressure() {
+                if let Some(stats) = self.stats.get(model) {
+                    stats.pool_rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                return Err(ApiError::PoolExhausted {
+                    model: model.to_string(),
+                    detail: format!(
+                        "{} bytes resident exceed the {}-byte budget even if every \
+                         detached session were shed",
+                        pool.resident_bytes(),
+                        pool.budget().unwrap_or(0)
+                    ),
+                });
+            }
+        }
         let (etx, erx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let id = request.id;

@@ -9,10 +9,16 @@
 //! compressible, so a turn can resume under any policy and the Eq. 10
 //! length trajectory simply continues from where turn N left off.
 //!
-//! The store is bounded two ways: a capacity cap (LRU eviction once full)
-//! and a TTL (entries expire `ttl` after their last use).  Both bounds are
-//! enforced on every mutation, so the store can never grow past
-//! `capacity` entries regardless of traffic shape.
+//! A detached cache's frozen prefix lives in refcounted pool blocks
+//! (see [`crate::kvpool`]): detach and re-attach move the cache without
+//! copying, and any clone shares the blocks copy-on-write.  The store's
+//! resident bytes are therefore exact, which makes them enforceable.
+//!
+//! The store is bounded three ways: a capacity cap (LRU eviction once
+//! full), a TTL (entries expire `ttl` after their last use), and a
+//! resident-byte budget (`max_bytes`; LRU eviction until under).  All
+//! bounds are enforced on every mutation, and the coordinator can also
+//! [`SessionStore::shed_lru`] explicitly under pool pressure.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -21,15 +27,20 @@ use crate::kvcache::KvCache;
 
 /// Store bounds.  `capacity == 0` disables session persistence entirely
 /// (requests still run; their caches are simply dropped at the end).
+/// `max_bytes == 0` leaves the byte budget uncapped.
 #[derive(Debug, Clone)]
 pub struct SessionConfig {
     pub capacity: usize,
     pub ttl: Duration,
+    /// Total resident-byte cap across every stored cache (exact pool
+    /// accounting).  Enforced on every `put` by LRU eviction; the entry
+    /// `capacity` stays as a secondary limit.
+    pub max_bytes: usize,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        SessionConfig { capacity: 64, ttl: Duration::from_secs(600) }
+        SessionConfig { capacity: 64, ttl: Duration::from_secs(600), max_bytes: 0 }
     }
 }
 
@@ -67,6 +78,12 @@ impl SessionStore {
         self.map.values().map(|e| e.cache.total_rows()).sum()
     }
 
+    /// Exact resident bytes held across all sessions (frozen pool blocks
+    /// plus loose tails, including the pos/attn side arrays).
+    pub fn total_bytes(&self) -> usize {
+        self.map.values().map(|e| e.cache.exact_bytes()).sum()
+    }
+
     /// Detach a session's cache for reattachment.  Removes the entry; the
     /// caller owns the cache until it `put`s an updated one back.
     pub fn take(&mut self, id: &str) -> Option<SessionEntry> {
@@ -74,11 +91,25 @@ impl SessionStore {
         self.map.remove(id)
     }
 
+    /// Evict the least-recently-used session (memory-pressure shedding).
+    /// Returns the shed id and the bytes it freed.
+    pub fn shed_lru(&mut self) -> Option<(String, usize)> {
+        let key = self.lru_key()?;
+        let entry = self.map.remove(&key)?;
+        Some((key, entry.cache.exact_bytes()))
+    }
+
     /// Attach (or re-attach) a finished turn's cache under `id`.  Enforces
-    /// the TTL and the capacity cap (evicting the least-recently-used
-    /// entry when full).
+    /// the TTL, the capacity cap, and the byte budget (evicting least-
+    /// recently-used entries while over either limit; an entry that alone
+    /// exceeds the byte budget is dropped outright).
     pub fn put(&mut self, id: &str, cache: KvCache, pending: i32, turns: u32) {
         if self.cfg.capacity == 0 {
+            return;
+        }
+        // A cache that alone busts the byte budget is dropped outright —
+        // never at the expense of the innocent sessions already stored.
+        if self.cfg.max_bytes > 0 && cache.exact_bytes() > self.cfg.max_bytes {
             return;
         }
         self.purge_expired();
@@ -91,6 +122,15 @@ impl SessionStore {
         }
         let entry = SessionEntry { cache, pending, turns, last_used: Instant::now() };
         self.map.insert(id.to_string(), entry);
+        if self.cfg.max_bytes > 0 {
+            while self.total_bytes() > self.cfg.max_bytes && !self.map.is_empty() {
+                if let Some(key) = self.lru_key() {
+                    self.map.remove(&key);
+                } else {
+                    break;
+                }
+            }
+        }
     }
 
     fn lru_key(&self) -> Option<String> {
@@ -116,8 +156,21 @@ mod tests {
         c
     }
 
+    /// Bytes `cache_with_rows(n)` occupies: one (layer, head), d = 2.
+    fn row_cost() -> usize {
+        crate::kvpool::row_bytes(1, 1, 2)
+    }
+
     fn store(capacity: usize, ttl: Duration) -> SessionStore {
-        SessionStore::new(SessionConfig { capacity, ttl })
+        SessionStore::new(SessionConfig { capacity, ttl, max_bytes: 0 })
+    }
+
+    fn byte_store(capacity: usize, max_bytes: usize) -> SessionStore {
+        SessionStore::new(SessionConfig {
+            capacity,
+            ttl: Duration::from_secs(60),
+            max_bytes,
+        })
     }
 
     #[test]
@@ -126,12 +179,14 @@ mod tests {
         st.put("a", cache_with_rows(7), 42, 1);
         assert_eq!(st.len(), 1);
         assert_eq!(st.total_rows(), 7);
+        assert_eq!(st.total_bytes(), 7 * row_cost());
         let e = st.take("a").unwrap();
         assert_eq!(e.pending, 42);
         assert_eq!(e.turns, 1);
         assert_eq!(e.cache.appended, 7);
         assert!(st.is_empty(), "take removes the entry");
         assert!(st.take("a").is_none());
+        assert_eq!(st.total_bytes(), 0);
     }
 
     #[test]
@@ -177,5 +232,71 @@ mod tests {
         assert_eq!(st.len(), 2);
         assert!(st.take("b").is_some(), "re-putting a live key keeps the other");
         assert_eq!(st.take("a").unwrap().cache.appended, 2);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_until_under() {
+        // budget = 10 rows worth; three 4-row sessions exceed it by one.
+        let mut st = byte_store(16, 10 * row_cost());
+        st.put("a", cache_with_rows(4), 0, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        st.put("b", cache_with_rows(4), 0, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(st.len(), 2, "8 rows fit a 10-row budget");
+        st.put("c", cache_with_rows(4), 0, 1);
+        assert_eq!(st.len(), 2, "the LRU entry pays for the newcomer");
+        assert!(st.take("a").is_none(), "oldest entry shed for bytes");
+        assert!(st.take("b").is_some());
+        assert!(st.take("c").is_some());
+    }
+
+    #[test]
+    fn oversized_entry_is_dropped_outright() {
+        let mut st = byte_store(16, 3 * row_cost());
+        st.put("small", cache_with_rows(2), 0, 1);
+        st.put("big", cache_with_rows(10), 0, 1);
+        assert_eq!(st.len(), 1, "an entry that alone busts the budget is not kept");
+        assert_eq!(st.total_bytes(), 2 * row_cost());
+        assert!(
+            st.take("small").is_some(),
+            "stored sessions must survive an oversized put"
+        );
+        assert!(st.take("big").is_none());
+    }
+
+    #[test]
+    fn entry_and_byte_caps_interact() {
+        // capacity 2 (secondary limit) with a byte budget of 6 rows.
+        let mut st = byte_store(2, 6 * row_cost());
+        st.put("a", cache_with_rows(2), 0, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        st.put("b", cache_with_rows(2), 0, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        // entry cap evicts "a" even though 6 rows would fit the bytes
+        st.put("c", cache_with_rows(2), 0, 1);
+        assert_eq!(st.len(), 2);
+        assert!(st.take("a").is_none(), "entry cap still enforced");
+        // byte cap evicts even under the entry cap: a 5-row entry next to
+        // a 2-row one busts 6 rows, so the LRU ("b") goes.
+        std::thread::sleep(Duration::from_millis(2));
+        st.put("d", cache_with_rows(5), 0, 1);
+        assert_eq!(st.len(), 1, "byte budget evicted below the entry cap");
+        assert!(st.take("b").is_none());
+        assert!(st.take("c").is_none(), "both older entries shed to fit 5 rows");
+        assert!(st.take("d").is_some());
+    }
+
+    #[test]
+    fn shed_lru_reports_freed_bytes() {
+        let mut st = store(4, Duration::from_secs(60));
+        assert!(st.shed_lru().is_none(), "empty store has nothing to shed");
+        st.put("a", cache_with_rows(3), 0, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        st.put("b", cache_with_rows(5), 0, 1);
+        let (id, bytes) = st.shed_lru().unwrap();
+        assert_eq!(id, "a");
+        assert_eq!(bytes, 3 * row_cost());
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.total_bytes(), 5 * row_cost());
     }
 }

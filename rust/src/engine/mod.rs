@@ -19,6 +19,7 @@
 pub mod slot;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -26,6 +27,7 @@ use crate::backend::{DecodeBatch, ExecBackend};
 use crate::compress::{maybe_compress, policy::make_policy, Scorer};
 use crate::config::{CompressionConfig, ModelDims};
 use crate::kvcache::KvCache;
+use crate::kvpool::BlockPool;
 use crate::tokenizer::Tokenizer;
 use crate::util::argmax as argmax_slice;
 
@@ -51,6 +53,9 @@ pub struct Engine {
     pub tokenizer: Tokenizer,
     pub variant: String,
     pub tmax: usize,
+    /// The KV block pool every sequence this engine prefills draws from —
+    /// one pool per engine, shared with the coordinator's admission path.
+    pool: Arc<BlockPool>,
 }
 
 impl Engine {
@@ -66,7 +71,26 @@ impl Engine {
             );
         }
         let tmax = backend.tmax();
-        Ok(Engine { backend, dims, tokenizer, variant: variant.to_string(), tmax })
+        Ok(Engine {
+            backend,
+            dims,
+            tokenizer,
+            variant: variant.to_string(),
+            tmax,
+            pool: BlockPool::unbounded(BlockPool::DEFAULT_ROWS_PER_BLOCK),
+        })
+    }
+
+    /// Swap in a shared (possibly byte-budgeted) KV block pool.  Called by
+    /// the router before any request runs; caches created earlier keep
+    /// their original pool.
+    pub fn set_pool(&mut self, pool: Arc<BlockPool>) {
+        self.pool = pool;
+    }
+
+    /// The engine's KV block pool (admission checks, stats, benches).
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
     }
 
     /// Hermetic default: the pure-Rust synthetic reference backend.
@@ -133,7 +157,12 @@ impl Engine {
         let mut tokens = vec![0i32; bucket];
         tokens[..ids.len()].copy_from_slice(ids);
         let out = self.backend.prefill(&tokens, ids.len())?;
-        let mut cache = KvCache::new(self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
+        let mut cache = KvCache::new_in(
+            Arc::clone(&self.pool),
+            self.dims.n_layers,
+            self.dims.n_kv_heads,
+            self.dims.d_head,
+        );
         cache.ingest_prefill(&out.k, &out.v, &out.attn_sums, bucket, ids.len())?;
         Ok((out.logits, cache))
     }

@@ -1,5 +1,6 @@
 //! KV-cache manager: per-sequence, per-layer, per-head compacted storage
-//! with the paper's sink / compressed / tail layout.
+//! with the paper's sink / compressed / tail layout, backed by the paged
+//! block pool ([`crate::kvpool`]).
 //!
 //! Row order within each (layer, head):
 //!
@@ -20,60 +21,226 @@
 //!   shape contract of the decode executable.  Lengths may differ across
 //!   layers (the recursive-L2 variant skips layers).
 //!
+//! ## Physical layout: frozen blocks + loose tail
+//!
+//! Each head splits its rows at `frozen_rows` into two regions:
+//!
+//! * rows `[0, frozen_rows)` live in immutable, refcounted, pool-owned
+//!   blocks (`Arc<Block>`) — they were below a past compaction's window
+//!   start, so the driver will never score or move them again.  Cloning a
+//!   cache (session detach, CoW re-attachment) shares these blocks by
+//!   refcount instead of copying;
+//! * rows `[frozen_rows, len)` stay in contiguous `Vec`s so the scorer's
+//!   [`KvCache::window`] can hand out plain slices.
+//!
+//! `compact_layer` first freezes whole blocks below the window start
+//! (each row is copied into a block at most once, ever), then rebuilds only
+//! the loose region — O(tail) instead of the old full-store O(len) rebuild.
+//! The driver's window start is monotone per layer for partition-scope
+//! policies, which is what keeps every scoring window inside the loose
+//! region; global-scope policies (original H2O) call
+//! [`KvCache::thaw_layer`] first (see compress/driver.rs).
+//!
 //! The cache also carries per-row original positions (debug/analysis) and
 //! per-row accumulated attention mass (the H2O baseline's statistic).
+//! Attention mass is only accumulated onto loose rows: frozen rows are
+//! final and no scorer reads their mass again.
 
 pub mod ratio;
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
-/// Storage for one (layer, head).
+use crate::kvpool::{row_bytes, Block, BlockPool, LooseGauge};
+
+/// Storage for one (layer, head): frozen pool blocks plus the loose tail.
 #[derive(Debug, Clone, Default)]
 pub struct HeadStore {
-    /// Row-major keys, `len * d_head`.
-    pub k: Vec<f32>,
-    /// Row-major values, `len * d_head`.
-    pub v: Vec<f32>,
-    /// Original absolute position of each row.
-    pub pos: Vec<i32>,
-    /// Accumulated attention mass per row (H2O).
-    pub attn: Vec<f32>,
+    /// Immutable full blocks covering rows `[0, frozen_rows)`.
+    frozen: Vec<Arc<Block>>,
+    frozen_rows: usize,
+    /// Live accumulated attention mass for the frozen rows, parallel to
+    /// the block order.  Kept *outside* the immutable (possibly shared)
+    /// blocks so H2O mass keeps accumulating after a freeze and a later
+    /// thaw — e.g. a session turn that switches to a global-scope policy —
+    /// scores on current statistics, not a freeze-time snapshot.  Owned
+    /// per cache (a clone accumulates independently), so CoW stays sound.
+    frozen_attn: Vec<f32>,
+    /// Loose region, rows `[frozen_rows, len)`: row-major keys `n * d`.
+    k: Vec<f32>,
+    /// Loose row-major values, `n * d`.
+    v: Vec<f32>,
+    /// Loose original absolute positions.
+    pos: Vec<i32>,
+    /// Loose accumulated attention mass per row (H2O).
+    attn: Vec<f32>,
 }
 
 impl HeadStore {
     fn len(&self, d: usize) -> usize {
         debug_assert_eq!(self.k.len() % d, 0);
-        self.k.len() / d
+        self.frozen_rows + self.k.len() / d
     }
 
-    /// Keep only `keep` (ascending row indices) within `[start, start+l)`,
-    /// leaving rows outside the window untouched.
+    /// Bytes resident outside pool blocks: the loose region plus the live
+    /// frozen-row attention mass.
+    fn loose_bytes(&self) -> usize {
+        (self.k.len() + self.v.len() + self.attn.len() + self.frozen_attn.len())
+            * std::mem::size_of::<f32>()
+            + self.pos.len() * std::mem::size_of::<i32>()
+    }
+
+    /// Freeze whole blocks out of the loose prefix until `frozen_rows`
+    /// would pass `upto` (absolute rows, block-aligned by the caller).
+    /// Best-effort: freezing is an optimization (paging + CoW sharing),
+    /// never a correctness requirement, so budget exhaustion just leaves
+    /// the remaining rows loose for admission control to deal with.
+    fn freeze_prefix(&mut self, d: usize, pool: &Arc<BlockPool>, upto: usize) {
+        let rows = pool.rows_per_block();
+        // Loose bytes each freeze drains (K, V, positions; the attention
+        // mass migrates to `frozen_attn` and stays loose).  The pool's
+        // loose gauge is only re-synced after the caller finishes, so each
+        // successive block's budget check must also credit everything this
+        // call already drained — otherwise drained-but-still-gauged bytes
+        // double-count and freezing stalls exactly under budget pressure.
+        let replaced =
+            rows * (2 * d * std::mem::size_of::<f32>() + std::mem::size_of::<i32>());
+        let mut drained = 0usize;
+        while self.frozen_rows + rows <= upto {
+            let w = rows * d;
+            match BlockPool::alloc_block(
+                pool,
+                d,
+                &self.k[..w],
+                &self.v[..w],
+                &self.pos[..rows],
+                &self.attn[..rows],
+                drained + replaced,
+            ) {
+                Ok(block) => {
+                    self.frozen.push(block);
+                    self.frozen_attn.extend_from_slice(&self.attn[..rows]);
+                    self.k.drain(..w);
+                    self.v.drain(..w);
+                    self.pos.drain(..rows);
+                    self.attn.drain(..rows);
+                    self.frozen_rows += rows;
+                    drained += replaced;
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Move every frozen block back into the loose region (global-scope
+    /// scoring, or a compaction window reaching behind the frozen line).
+    fn thaw(&mut self, d: usize) {
+        if self.frozen.is_empty() {
+            return;
+        }
+        let mut k = Vec::with_capacity(self.frozen_rows * d + self.k.len());
+        let mut v = Vec::with_capacity(k.capacity());
+        let mut pos = Vec::with_capacity(self.frozen_rows + self.pos.len());
+        let mut attn = Vec::with_capacity(pos.capacity());
+        for b in &self.frozen {
+            k.extend_from_slice(b.k());
+            v.extend_from_slice(b.v());
+            pos.extend_from_slice(b.pos());
+        }
+        // Live mass, not the blocks' freeze-time snapshot.
+        attn.extend_from_slice(&self.frozen_attn);
+        k.extend_from_slice(&self.k);
+        v.extend_from_slice(&self.v);
+        pos.extend_from_slice(&self.pos);
+        attn.extend_from_slice(&self.attn);
+        self.k = k;
+        self.v = v;
+        self.pos = pos;
+        self.attn = attn;
+        self.frozen.clear();
+        self.frozen_attn.clear();
+        self.frozen_rows = 0;
+    }
+
+    /// Keep only `keep` (ascending indices into the window) within the
+    /// absolute row window `[start, start+l)`, leaving rows outside it
+    /// untouched.  The window must lie in the loose region; only the loose
+    /// region is rebuilt (the frozen prefix is below `start` and is not
+    /// touched at all — the block-remap property).
     fn compact_window(&mut self, d: usize, start: usize, l: usize, keep: &[usize]) {
+        debug_assert!(start >= self.frozen_rows);
         debug_assert!(keep.windows(2).all(|w| w[0] < w[1]));
         debug_assert!(keep.iter().all(|&i| i < l));
+        let s = start - self.frozen_rows;
         let mut k = Vec::with_capacity(self.k.len() - (l - keep.len()) * d);
         let mut v = Vec::with_capacity(k.capacity());
         let mut pos = Vec::with_capacity(self.pos.len() - (l - keep.len()));
         let mut attn = Vec::with_capacity(pos.capacity());
-        k.extend_from_slice(&self.k[..start * d]);
-        v.extend_from_slice(&self.v[..start * d]);
-        pos.extend_from_slice(&self.pos[..start]);
-        attn.extend_from_slice(&self.attn[..start]);
+        k.extend_from_slice(&self.k[..s * d]);
+        v.extend_from_slice(&self.v[..s * d]);
+        pos.extend_from_slice(&self.pos[..s]);
+        attn.extend_from_slice(&self.attn[..s]);
         for &i in keep {
-            let r = start + i;
+            let r = s + i;
             k.extend_from_slice(&self.k[r * d..(r + 1) * d]);
             v.extend_from_slice(&self.v[r * d..(r + 1) * d]);
             pos.push(self.pos[r]);
             attn.push(self.attn[r]);
         }
-        k.extend_from_slice(&self.k[(start + l) * d..]);
-        v.extend_from_slice(&self.v[(start + l) * d..]);
-        pos.extend_from_slice(&self.pos[start + l..]);
-        attn.extend_from_slice(&self.attn[start + l..]);
+        k.extend_from_slice(&self.k[(s + l) * d..]);
+        v.extend_from_slice(&self.v[(s + l) * d..]);
+        pos.extend_from_slice(&self.pos[s + l..]);
+        attn.extend_from_slice(&self.attn[s + l..]);
         self.k = k;
         self.v = v;
         self.pos = pos;
         self.attn = attn;
+    }
+
+    /// Copy the first `n_rows` rows of K and V into row-major `dst`
+    /// buffers (padded-export gather across frozen blocks + loose tail).
+    fn copy_rows(&self, d: usize, n_rows: usize, dst_k: &mut [f32], dst_v: &mut [f32]) {
+        let mut row = 0usize;
+        for b in &self.frozen {
+            if row == n_rows {
+                return;
+            }
+            let take = b.rows().min(n_rows - row);
+            dst_k[row * d..(row + take) * d].copy_from_slice(&b.k()[..take * d]);
+            dst_v[row * d..(row + take) * d].copy_from_slice(&b.v()[..take * d]);
+            row += take;
+        }
+        if row < n_rows {
+            let take = n_rows - row;
+            dst_k[row * d..(row + take) * d].copy_from_slice(&self.k[..take * d]);
+            dst_v[row * d..(row + take) * d].copy_from_slice(&self.v[..take * d]);
+        }
+    }
+
+    fn gather_k(&self, d: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.frozen_rows * d + self.k.len());
+        for b in &self.frozen {
+            out.extend_from_slice(b.k());
+        }
+        out.extend_from_slice(&self.k);
+        out
+    }
+
+    fn gather_v(&self, d: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.frozen_rows * d + self.v.len());
+        for b in &self.frozen {
+            out.extend_from_slice(b.v());
+        }
+        out.extend_from_slice(&self.v);
+        out
+    }
+
+    fn gather_attn(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.frozen_rows + self.attn.len());
+        out.extend_from_slice(&self.frozen_attn);
+        out.extend_from_slice(&self.attn);
+        out
     }
 }
 
@@ -94,10 +261,25 @@ pub struct KvCache {
     pub layers: Vec<LayerCache>,
     /// Total tokens ever appended (= next absolute position).
     pub appended: usize,
+    /// Registers the loose-region bytes with the owning pool (cloning a
+    /// cache registers the clone's own copy; dropping deregisters).
+    gauge: LooseGauge,
 }
 
 impl KvCache {
+    /// A cache on a private, unbudgeted pool (tests, standalone tools).
     pub fn new(n_layers: usize, n_heads: usize, d_head: usize) -> Self {
+        KvCache::new_in(
+            BlockPool::unbounded(BlockPool::DEFAULT_ROWS_PER_BLOCK),
+            n_layers,
+            n_heads,
+            d_head,
+        )
+    }
+
+    /// A cache drawing its blocks from `pool` (the engine's shared pool on
+    /// the serving path — one pool per engine, slots draw from it).
+    pub fn new_in(pool: Arc<BlockPool>, n_layers: usize, n_heads: usize, d_head: usize) -> Self {
         KvCache {
             n_layers,
             n_heads,
@@ -109,7 +291,13 @@ impl KvCache {
                 })
                 .collect(),
             appended: 0,
+            gauge: LooseGauge::new(pool),
         }
+    }
+
+    /// The pool this cache allocates from.
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        self.gauge.pool()
     }
 
     /// Current row count of `layer` (uniform across its heads).
@@ -131,10 +319,40 @@ impl KvCache {
         self.lens().into_iter().sum()
     }
 
-    /// Approximate resident bytes of the K/V payload (positions and
-    /// attention mass excluded): rows * heads * d_head * 2 tensors * f32.
+    /// Exact resident bytes of this cache: frozen pool blocks plus the
+    /// loose regions, counting K, V, *and* the position/attention side
+    /// arrays (which the old estimate ignored).
+    pub fn exact_bytes(&self) -> usize {
+        let mut blocks = 0usize;
+        let mut loose = 0usize;
+        for layer in &self.layers {
+            for head in &layer.heads {
+                blocks += head.frozen.iter().map(|b| b.payload_bytes()).sum::<usize>();
+                loose += head.loose_bytes();
+            }
+        }
+        debug_assert_eq!(loose, self.gauge.bytes(), "loose-byte gauge out of sync");
+        blocks + loose
+    }
+
+    /// Checked alias of [`KvCache::exact_bytes`].  (Historically a K/V-only
+    /// estimate that undercounted the `pos`/`attn` side arrays; kept under
+    /// the old name so accounting call sites read the exact number.)
     pub fn approx_bytes(&self) -> usize {
-        self.total_rows() * self.n_heads * self.d_head * 2 * std::mem::size_of::<f32>()
+        self.exact_bytes()
+    }
+
+    /// Pool blocks this cache references, summed over heads.  A block
+    /// shared with a clone counts once *per referencing cache* here; the
+    /// pool's `resident_blocks` counts it once globally.
+    pub fn frozen_blocks(&self) -> usize {
+        self.layers.iter().flat_map(|l| l.heads.iter()).map(|h| h.frozen.len()).sum()
+    }
+
+    /// Rows of `layer` frozen into pool blocks (uniform across heads on
+    /// every path the driver takes).
+    pub fn frozen_rows(&self, layer: usize) -> usize {
+        self.layers[layer].heads[0].frozen_rows
     }
 
     pub fn is_empty(&self) -> bool {
@@ -146,19 +364,40 @@ impl KvCache {
         self.len(layer) - self.layers[layer].boundary
     }
 
+    /// Full re-scan of the loose regions (compaction / thaw paths, which
+    /// change sizes irregularly).  Appends use the O(1) delta instead.
+    fn sync_gauge(&mut self) {
+        let loose: usize = self
+            .layers
+            .iter()
+            .flat_map(|l| l.heads.iter())
+            .map(|h| h.loose_bytes())
+            .sum();
+        self.gauge.set(loose);
+    }
+
+    /// O(1) gauge update for the per-token hot path: `n_rows` loose rows
+    /// were just appended to every head of every layer.
+    fn grow_gauge(&mut self, n_rows: usize) {
+        let delta = n_rows * row_bytes(self.n_layers, self.n_heads, self.d_head);
+        let bytes = self.gauge.bytes() + delta;
+        self.gauge.set(bytes);
+    }
+
     /// Append one token's K/V for every layer/head.
     ///
     /// `k_new`/`v_new` layout: `[n_layers, n_heads, d_head]` row-major —
     /// exactly the decode executable's `k_new` output.
     pub fn append_token(&mut self, k_new: &[f32], v_new: &[f32], position: i32) -> Result<()> {
         let d = self.d_head;
-        let expect = self.n_layers * self.n_heads * d;
+        let nh = self.n_heads;
+        let expect = self.n_layers * nh * d;
         if k_new.len() != expect || v_new.len() != expect {
             bail!("append_token: expected {expect} floats, got {}", k_new.len());
         }
         for (li, layer) in self.layers.iter_mut().enumerate() {
             for (hi, head) in layer.heads.iter_mut().enumerate() {
-                let off = (li * self.n_heads + hi) * d;
+                let off = (li * nh + hi) * d;
                 head.k.extend_from_slice(&k_new[off..off + d]);
                 head.v.extend_from_slice(&v_new[off..off + d]);
                 head.pos.push(position);
@@ -166,6 +405,7 @@ impl KvCache {
             }
         }
         self.appended += 1;
+        self.grow_gauge(1);
         Ok(())
     }
 
@@ -181,7 +421,8 @@ impl KvCache {
         true_len: usize,
     ) -> Result<()> {
         let d = self.d_head;
-        if k.len() != self.n_layers * self.n_heads * t_bucket * d {
+        let nh = self.n_heads;
+        if k.len() != self.n_layers * nh * t_bucket * d {
             bail!(
                 "ingest_prefill: bad k len {} for bucket {t_bucket}",
                 k.len()
@@ -190,32 +431,44 @@ impl KvCache {
         if true_len > t_bucket {
             bail!("true_len {true_len} > bucket {t_bucket}");
         }
+        let base_pos = self.appended as i32;
         for (li, layer) in self.layers.iter_mut().enumerate() {
             for (hi, head) in layer.heads.iter_mut().enumerate() {
-                let base = (li * self.n_heads + hi) * t_bucket;
+                let base = (li * nh + hi) * t_bucket;
                 let row0 = base * d;
                 head.k.extend_from_slice(&k[row0..row0 + true_len * d]);
                 head.v.extend_from_slice(&v[row0..row0 + true_len * d]);
-                head.pos.extend((0..true_len as i32).map(|p| self.appended as i32 + p));
+                head.pos.extend((0..true_len as i32).map(|p| base_pos + p));
                 head.attn.extend_from_slice(&attn_sums[base..base + true_len]);
             }
         }
         self.appended += true_len;
+        self.grow_gauge(true_len);
         Ok(())
     }
 
     /// Add one decode step's attention row (`[n_layers, n_heads, t_max]`,
     /// aligned with current row order) to the accumulated H2O statistic.
+    /// Frozen rows accumulate into the per-cache `frozen_attn` side array
+    /// (the blocks themselves are immutable and possibly shared), so a
+    /// later thaw — e.g. a turn that switches to a global-scope policy —
+    /// scores on up-to-date mass.
     pub fn accumulate_attention(&mut self, attn_row: &[f32], t_max: usize) -> Result<()> {
         if attn_row.len() != self.n_layers * self.n_heads * t_max {
             bail!("accumulate_attention: bad len {}", attn_row.len());
         }
+        let d = self.d_head;
+        let nh = self.n_heads;
         for (li, layer) in self.layers.iter_mut().enumerate() {
             for (hi, head) in layer.heads.iter_mut().enumerate() {
-                let base = (li * self.n_heads + hi) * t_max;
-                let n = head.attn.len().min(t_max);
-                for r in 0..n {
-                    head.attn[r] += attn_row[base + r];
+                let base = (li * nh + hi) * t_max;
+                let n = head.len(d).min(t_max);
+                let frozen = head.frozen_rows;
+                for r in 0..frozen.min(n) {
+                    head.frozen_attn[r] += attn_row[base + r];
+                }
+                for r in frozen..n {
+                    head.attn[r - frozen] += attn_row[base + r];
                 }
             }
         }
@@ -225,6 +478,12 @@ impl KvCache {
     /// Apply a per-head keep-set to the window `[start, start+l)` of
     /// `layer`.  `keeps[h]` must be ascending indices into the window and
     /// all heads must keep the same count (shape contract).
+    ///
+    /// Rows below the window start that fill whole blocks are frozen into
+    /// the pool first (they are final — the driver's start is monotone per
+    /// layer), so the rebuild only touches the loose tail.  A caller whose
+    /// window reaches behind the frozen line (arbitrary direct use; the
+    /// driver never does this) gets the layer thawed transparently.
     pub fn compact_layer(
         &mut self,
         layer: usize,
@@ -244,11 +503,36 @@ impl KvCache {
         if start + l > len {
             bail!("compact_layer: window [{start}, {}) out of bounds {len}", start + l);
         }
-        for (hi, head) in self.layers[layer].heads.iter_mut().enumerate() {
+        if self.layers[layer].heads.iter().any(|h| start < h.frozen_rows) {
+            self.thaw_layer(layer);
+        }
+        let pool = Arc::clone(self.gauge.pool());
+        let rpb = pool.rows_per_block();
+        let freeze_upto = (start / rpb) * rpb;
+        for hi in 0..self.n_heads {
+            let head = &mut self.layers[layer].heads[hi];
+            head.freeze_prefix(d, &pool, freeze_upto);
             head.compact_window(d, start, l, &keeps[hi]);
+            // Re-sync after every head so the next head's freeze budget
+            // checks never double-count bytes this head just drained or
+            // evicted (compaction is off the per-token hot path).
+            self.sync_gauge();
         }
         self.layers[layer].boundary = start + kept;
         Ok(())
+    }
+
+    /// Move every frozen block of `layer` back into contiguous loose
+    /// storage.  Needed by global-scope policies (original H2O), whose
+    /// scoring window spans the whole evictable region; a no-op for caches
+    /// that never froze (every pure-H2O cache, since their compaction
+    /// start stays at the sink).
+    pub fn thaw_layer(&mut self, layer: usize) {
+        let d = self.d_head;
+        for head in self.layers[layer].heads.iter_mut() {
+            head.thaw(d);
+        }
+        self.sync_gauge();
     }
 
     /// Flat padded export of one layer for upload: `([n_heads, t_max, d],
@@ -260,8 +544,7 @@ impl KvCache {
         let mut v = vec![0.0f32; self.n_heads * t_max * d];
         for (hi, head) in self.layers[layer].heads.iter().enumerate() {
             let dst = hi * t_max * d;
-            k[dst..dst + len * d].copy_from_slice(&head.k[..len * d]);
-            v[dst..dst + len * d].copy_from_slice(&head.v[..len * d]);
+            head.copy_rows(d, len, &mut k[dst..dst + len * d], &mut v[dst..dst + len * d]);
         }
         (k, v)
     }
@@ -280,20 +563,64 @@ impl KvCache {
     }
 
     /// Borrow the row range `[start, start+l)` of one head as K/V slices.
+    ///
+    /// The range must lie in the loose region (`start >= frozen_rows`).
+    /// The compression driver guarantees this: partition-scope window
+    /// starts are monotone per layer and freezing never passes the last
+    /// start; global-scope scoring thaws the layer first.
     pub fn window(&self, layer: usize, head: usize, start: usize, l: usize) -> Window<'_> {
         let d = self.d_head;
         let h = &self.layers[layer].heads[head];
+        assert!(
+            start >= h.frozen_rows,
+            "window [{start}, {}) reaches behind the frozen boundary ({} rows): \
+             thaw_layer first or keep window starts monotone",
+            start + l,
+            h.frozen_rows
+        );
+        let s = start - h.frozen_rows;
         Window {
-            k: &h.k[start * d..(start + l) * d],
-            v: &h.v[start * d..(start + l) * d],
-            attn: &h.attn[start..start + l],
-            pos: &h.pos[start..start + l],
+            k: &h.k[s * d..(s + l) * d],
+            v: &h.v[s * d..(s + l) * d],
+            attn: &h.attn[s..s + l],
+            pos: &h.pos[s..s + l],
         }
     }
 
-    /// Retained original positions of one head (analysis / tests).
-    pub fn positions(&self, layer: usize, head: usize) -> &[i32] {
-        &self.layers[layer].heads[head].pos
+    /// Retained original positions of one head (analysis / tests),
+    /// gathered across frozen blocks and the loose tail.
+    pub fn positions(&self, layer: usize, head: usize) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.positions_into(layer, head, &mut out);
+        out
+    }
+
+    /// Gather retained positions into `out` (cleared first) — the
+    /// allocation-free variant of [`KvCache::positions`] for per-step hot
+    /// loops that can reuse a scratch buffer.
+    pub fn positions_into(&self, layer: usize, head: usize, out: &mut Vec<i32>) {
+        let h = &self.layers[layer].heads[head];
+        out.clear();
+        out.reserve(h.frozen_rows + h.pos.len());
+        for b in &h.frozen {
+            out.extend_from_slice(b.pos());
+        }
+        out.extend_from_slice(&h.pos);
+    }
+
+    /// All keys of one head, gathered contiguously (tests / analysis).
+    pub fn head_k(&self, layer: usize, head: usize) -> Vec<f32> {
+        self.layers[layer].heads[head].gather_k(self.d_head)
+    }
+
+    /// All values of one head, gathered contiguously (tests / analysis).
+    pub fn head_v(&self, layer: usize, head: usize) -> Vec<f32> {
+        self.layers[layer].heads[head].gather_v(self.d_head)
+    }
+
+    /// Accumulated attention mass of one head, gathered contiguously.
+    pub fn head_attn(&self, layer: usize, head: usize) -> Vec<f32> {
+        self.layers[layer].heads[head].gather_attn()
     }
 }
 
@@ -332,19 +659,20 @@ mod tests {
     #[test]
     fn compact_keeps_selected_rows() {
         let mut c = filled(1, 2, 4, 8);
-        let before_h0: Vec<f32> = c.layers[0].heads[0].k.clone();
+        let before_h0 = c.head_k(0, 0);
         // window rows 2..6, head0 keeps {1,3} (abs 3,5), head1 keeps {0,2} (abs 2,4)
         c.compact_layer(0, 2, 4, &[vec![1, 3], vec![0, 2]]).unwrap();
         assert_eq!(c.len(0), 6);
         assert_eq!(c.layers[0].boundary, 4);
         let d = 4;
+        let after_h0 = c.head_k(0, 0);
         // head0 row2 should be old row 3
-        assert_eq!(&c.layers[0].heads[0].k[2 * d..3 * d], &before_h0[3 * d..4 * d]);
-        assert_eq!(&c.layers[0].heads[0].k[3 * d..4 * d], &before_h0[5 * d..6 * d]);
+        assert_eq!(&after_h0[2 * d..3 * d], &before_h0[3 * d..4 * d]);
+        assert_eq!(&after_h0[3 * d..4 * d], &before_h0[5 * d..6 * d]);
         // trailing rows shift down
-        assert_eq!(&c.layers[0].heads[0].k[4 * d..5 * d], &before_h0[6 * d..7 * d]);
-        assert_eq!(c.positions(0, 0), &[0, 1, 3, 5, 6, 7]);
-        assert_eq!(c.positions(0, 1), &[0, 1, 2, 4, 6, 7]);
+        assert_eq!(&after_h0[4 * d..5 * d], &before_h0[6 * d..7 * d]);
+        assert_eq!(c.positions(0, 0), vec![0, 1, 3, 5, 6, 7]);
+        assert_eq!(c.positions(0, 1), vec![0, 1, 2, 4, 6, 7]);
     }
 
     #[test]
@@ -383,8 +711,8 @@ mod tests {
         assert_eq!(c.appended, 4);
         // layer1/head1 row0 == k[(1*2+1)*6*3 ..]
         let off = (1 * nh + 1) * t_bucket * d;
-        assert_eq!(&c.layers[1].heads[1].k[..d], &k[off..off + d]);
-        assert_eq!(c.layers[1].heads[1].attn, attn[(1 * nh + 1) * t_bucket..][..4]);
+        assert_eq!(&c.head_k(1, 1)[..d], &k[off..off + d]);
+        assert_eq!(c.head_attn(1, 1), attn[(1 * nh + 1) * t_bucket..][..4]);
     }
 
     #[test]
@@ -396,7 +724,116 @@ mod tests {
         row[2] = 0.25;
         c.accumulate_attention(&row, t_max).unwrap();
         c.accumulate_attention(&row, t_max).unwrap();
-        assert_eq!(c.layers[0].heads[0].attn, vec![1.0, 0.0, 0.5]);
+        assert_eq!(c.head_attn(0, 0), vec![1.0, 0.0, 0.5]);
+    }
+
+    /// Compacting with a window start past whole blocks freezes them into
+    /// the pool; reads (padded export, gathers, windows) are unchanged.
+    #[test]
+    fn compact_freezes_prefix_blocks() {
+        let pool = BlockPool::unbounded(4);
+        let mut c = KvCache::new_in(pool.clone(), 1, 1, 2);
+        let mut rng = Rng::seed_from(9);
+        for t in 0..20 {
+            let k: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+            c.append_token(&k, &k, t).unwrap();
+        }
+        let before_k = c.head_k(0, 0);
+        let before_pos = c.positions(0, 0);
+        // window [10, 14), keep 2 -> start 10 freezes rows [0, 8) as 2 blocks
+        c.compact_layer(0, 10, 4, &[vec![0, 2]]).unwrap();
+        assert_eq!(c.frozen_rows(0), 8);
+        assert_eq!(c.frozen_blocks(), 2);
+        assert_eq!(pool.stats().resident_blocks, 2);
+        assert_eq!(c.len(0), 18);
+        // prefix [0, 10) survived the remap bit-for-bit
+        assert_eq!(&c.head_k(0, 0)[..10 * 2], &before_k[..10 * 2]);
+        assert_eq!(&c.positions(0, 0)[..10], &before_pos[..10]);
+        // a window at the new boundary still reads loose slices
+        let w = c.window(0, 0, 12, 4);
+        assert_eq!(w.pos.len(), 4);
+        // exact bytes = 2 blocks + loose remainder + the live frozen-row
+        // attention mass kept outside the blocks
+        let rpb_bytes = crate::kvpool::block_bytes(4, 2);
+        assert_eq!(
+            c.exact_bytes(),
+            2 * rpb_bytes
+                + (18 - 8) * crate::kvpool::block_bytes(1, 2)
+                + 8 * std::mem::size_of::<f32>()
+        );
+        // thaw restores one contiguous region and frees the blocks
+        c.thaw_layer(0);
+        assert_eq!(c.frozen_blocks(), 0);
+        assert_eq!(pool.stats().resident_blocks, 0);
+        assert!(pool.stats().free_blocks >= 2, "thawed blocks recycle to the free list");
+        assert_eq!(c.len(0), 18);
+    }
+
+    /// H2O mass keeps accumulating on frozen rows (via the per-cache side
+    /// array), and a thaw restores the live values — not the freeze-time
+    /// snapshot stored in the immutable blocks.
+    #[test]
+    fn frozen_rows_keep_accumulating_attention() {
+        let pool = BlockPool::unbounded(4);
+        let mut c = KvCache::new_in(pool, 1, 1, 2);
+        for t in 0..12 {
+            c.append_token(&[1.0, 1.0], &[1.0, 1.0], t).unwrap();
+        }
+        c.compact_layer(0, 8, 2, &[vec![0]]).unwrap(); // freezes rows [0, 8)
+        assert_eq!(c.frozen_rows(0), 8);
+        let t_max = 16;
+        let mut row = vec![0.0f32; t_max];
+        row[2] = 1.0; // a frozen row
+        row[9] = 0.5; // a loose row
+        c.accumulate_attention(&row, t_max).unwrap();
+        c.accumulate_attention(&row, t_max).unwrap();
+        let attn = c.head_attn(0, 0);
+        assert_eq!(attn[2], 2.0, "frozen rows keep accumulating mass");
+        assert_eq!(attn[9], 1.0);
+        c.thaw_layer(0);
+        assert_eq!(c.head_attn(0, 0)[2], 2.0, "thaw restores live mass, not the snapshot");
+        assert_eq!(c.head_attn(0, 0)[9], 1.0);
+    }
+
+    /// Cloning shares frozen blocks (refcount, not copy) and mutating the
+    /// original never changes what the clone reads.
+    #[test]
+    fn clone_shares_frozen_blocks_cow() {
+        let pool = BlockPool::unbounded(4);
+        let mut c = KvCache::new_in(pool.clone(), 1, 1, 2);
+        let mut rng = Rng::seed_from(10);
+        for t in 0..16 {
+            let k: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+            c.append_token(&k, &k, t).unwrap();
+        }
+        c.compact_layer(0, 8, 4, &[vec![1, 2]]).unwrap(); // freezes rows [0, 8)
+        assert_eq!(c.frozen_blocks(), 2);
+        let snap_k = c.head_k(0, 0);
+        let snap_pos = c.positions(0, 0);
+        let clone = c.clone();
+        assert_eq!(pool.stats().resident_blocks, 2, "clone shares, never copies, blocks");
+        // mutate the original past another compaction
+        for t in 16..32 {
+            let k: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+            c.append_token(&k, &k, t).unwrap();
+        }
+        c.compact_layer(0, 14, 8, &[vec![0, 5]]).unwrap();
+        assert_eq!(clone.head_k(0, 0), snap_k, "shared blocks must never be mutated");
+        assert_eq!(clone.positions(0, 0), snap_pos);
+        drop(c);
+        assert_eq!(clone.head_k(0, 0), snap_k, "clone owns its share of the blocks");
+        drop(clone);
+        assert_eq!(pool.stats().resident_blocks, 0, "all blocks recycled");
+    }
+
+    #[test]
+    fn exact_bytes_counts_side_arrays() {
+        let c = filled(2, 3, 4, 10);
+        // 10 rows x 2 layers x 3 heads x (2*4 floats + pos + attn)
+        let want = 10 * crate::kvpool::row_bytes(2, 3, 4);
+        assert_eq!(c.exact_bytes(), want);
+        assert_eq!(c.approx_bytes(), want, "approx_bytes is the checked exact alias");
+        assert_eq!(c.pool().stats().loose_bytes, want);
     }
 
     #[test]
@@ -413,20 +850,21 @@ mod tests {
                 let k: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
                 c.append_token(&k, &k, t as i32).unwrap();
             }
-            let before = c.layers[0].heads[0].k.clone();
+            let before = c.head_k(0, 0);
             let mut keep: Vec<usize> = (0..l).collect();
             let mut r2 = Rng::seed_from(g.case as u64 + 999);
             r2.shuffle(&mut keep);
             keep.truncate(kept);
             keep.sort_unstable();
             c.compact_layer(0, start, l, &[keep.clone()]).unwrap();
+            let after = c.head_k(0, 0);
             // prefix untouched
-            if c.layers[0].heads[0].k[..start * d] != before[..start * d] {
+            if after[..start * d] != before[..start * d] {
                 return Err("prefix changed".into());
             }
             // suffix shifted but identical content
             let suffix_rows = n - start - l;
-            let got = &c.layers[0].heads[0].k[(start + kept) * d..];
+            let got = &after[(start + kept) * d..];
             let want = &before[(start + l) * d..];
             if got != want || got.len() != suffix_rows * d {
                 return Err("suffix mismatch".into());

@@ -1,0 +1,124 @@
+//! Fixed-size KV blocks: the unit the pool hands out and recycles.
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::BlockPool;
+
+/// The raw buffers behind one block: `rows × d_head` keys and values plus
+/// the per-row position and attention-mass side arrays.  Lives either
+/// inside a live [`Block`] or parked in the pool's free list.
+#[derive(Default)]
+pub struct BlockBufs {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub pos: Vec<i32>,
+    pub attn: Vec<f32>,
+}
+
+impl BlockBufs {
+    pub(super) fn with_capacity(rows: usize, d: usize) -> BlockBufs {
+        BlockBufs {
+            k: Vec::with_capacity(rows * d),
+            v: Vec::with_capacity(rows * d),
+            pos: Vec::with_capacity(rows),
+            attn: Vec::with_capacity(rows),
+        }
+    }
+
+    pub(super) fn clear(&mut self) {
+        self.k.clear();
+        self.v.clear();
+        self.pos.clear();
+        self.attn.clear();
+    }
+}
+
+/// Payload bytes of one full block of `rows` rows at head width `d`:
+/// K + V (`f32`) plus the position (`i32`) and attention (`f32`) arrays.
+pub fn block_bytes(rows: usize, d: usize) -> usize {
+    rows * (2 * d * std::mem::size_of::<f32>())
+        + rows * (std::mem::size_of::<i32>() + std::mem::size_of::<f32>())
+}
+
+/// One immutable, refcounted block of KV rows.
+///
+/// Blocks are always created *full* (exactly `rows_per_block` rows) and
+/// never mutated afterwards — that immutability is what makes sharing a
+/// frozen prefix between a live cache and a detached session copy-on-write
+/// safe by construction.  Dropping the last reference returns the buffers
+/// to the owning pool's free list.
+pub struct Block {
+    /// `Some` until drop hands the buffers back to the pool.
+    bufs: Option<BlockBufs>,
+    rows: usize,
+    d: usize,
+    pool: Arc<BlockPool>,
+}
+
+impl Block {
+    pub(super) fn new(bufs: BlockBufs, rows: usize, d: usize, pool: Arc<BlockPool>) -> Block {
+        debug_assert_eq!(bufs.k.len(), rows * d);
+        debug_assert_eq!(bufs.v.len(), rows * d);
+        debug_assert_eq!(bufs.pos.len(), rows);
+        debug_assert_eq!(bufs.attn.len(), rows);
+        Block { bufs: Some(bufs), rows, d, pool }
+    }
+
+    fn bufs(&self) -> &BlockBufs {
+        self.bufs.as_ref().expect("block buffers live until drop")
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Row-major keys, `rows * d`.
+    pub fn k(&self) -> &[f32] {
+        &self.bufs().k
+    }
+
+    /// Row-major values, `rows * d`.
+    pub fn v(&self) -> &[f32] {
+        &self.bufs().v
+    }
+
+    /// Original absolute position of each row.
+    pub fn pos(&self) -> &[i32] {
+        &self.bufs().pos
+    }
+
+    /// Attention mass per row as it stood at freeze time.  A snapshot
+    /// only: the cache keeps the *live* mass for frozen rows in its own
+    /// side array (`HeadStore::frozen_attn`), since blocks are immutable
+    /// and possibly shared.
+    pub fn attn(&self) -> &[f32] {
+        &self.bufs().attn
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        block_bytes(self.rows, self.d)
+    }
+}
+
+impl Drop for Block {
+    fn drop(&mut self) {
+        if let Some(bufs) = self.bufs.take() {
+            self.pool.release(self.rows, self.d, bufs);
+        }
+    }
+}
+
+impl fmt::Debug for Block {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Block")
+            .field("rows", &self.rows)
+            .field("d", &self.d)
+            .field("bytes", &self.payload_bytes())
+            .finish()
+    }
+}

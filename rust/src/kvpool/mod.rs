@@ -1,0 +1,415 @@
+//! Paged KV memory pool: a slab-backed block allocator with exact byte
+//! accounting and memory-pressure signals for the serving stack.
+//!
+//! The paper's recursive lag-compression exists to *bound* KV memory; this
+//! module is where that bound becomes operational.  LagKV's fixed-size
+//! partition windows (score the oldest `L` tail rows, keep `floor(r*L)`)
+//! are unusually friendly to fixed-size block allocation, so the cache
+//! manager splits every `(layer, head)` store into two regions:
+//!
+//! * a **frozen prefix** of immutable, refcounted, pool-owned [`Block`]s —
+//!   sink rows and past compression survivors, final by the driver's
+//!   contract.  Freezing happens at compaction time, one full block at a
+//!   time, so each row is copied at most once ever (the old flat `Vec`
+//!   rebuild re-copied the whole prefix on every compaction);
+//! * a **loose tail** of contiguous `Vec`s — the uncompressed rows the
+//!   scorer still reads as slices.  Its bytes are registered with the pool
+//!   through a [`LooseGauge`] so `PoolStats::resident_bytes()` is exact.
+//!
+//! Sharing a frozen block is a refcount bump, which is what makes a
+//! detached session's cache copy-on-write: a resumed turn re-attaches the
+//! history blocks and allocates only its own tail.  Blocks are immutable
+//! from birth, so shared data can never be written through either owner.
+//!
+//! Budgeted pools (`BlockPool::new(rows, Some(bytes))`) enforce the budget
+//! at block allocation and expose [`BlockPool::resident_bytes`] /
+//! [`BlockPool::hard_pressure`] for the coordinator's admission path, which
+//! sheds least-recently-used sessions under pressure and rejects with the
+//! typed `pool-exhausted` error when even an empty store leaves no room.
+//! Freezing itself degrades gracefully under a full budget (rows simply
+//! stay loose): decode never fails mid-request on a pool limit.
+
+pub mod block;
+pub mod stats;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use block::{block_bytes, Block, BlockBufs};
+pub use stats::{PoolExhausted, PoolStats};
+
+/// Payload bytes of one cache row across every `(layer, head)`: K + V at
+/// `d_head` floats each, plus the position and attention side entries.
+/// The admission path multiplies this by a row estimate to budget work.
+pub fn row_bytes(n_layers: usize, n_heads: usize, d_head: usize) -> usize {
+    n_layers * n_heads * block_bytes(1, d_head)
+}
+
+#[derive(Default)]
+struct PoolInner {
+    /// Recycled buffers keyed by head width `d` (one pool may serve test
+    /// caches of several widths; a serving engine uses exactly one).
+    free: HashMap<usize, Vec<BlockBufs>>,
+    block_bytes: usize,
+    loose_bytes: usize,
+    free_bytes: usize,
+    high_water: usize,
+    resident_blocks: usize,
+    free_blocks: usize,
+}
+
+impl PoolInner {
+    fn bump_high_water(&mut self) {
+        let resident = self.block_bytes + self.loose_bytes;
+        if resident > self.high_water {
+            self.high_water = resident;
+        }
+    }
+}
+
+/// The allocator.  Shared (`Arc`) between an engine, its caches, and the
+/// router's admission check; internally a mutex-guarded ledger plus free
+/// list — allocation is off the per-token hot path (one block per
+/// `rows_per_block` frozen rows).
+pub struct BlockPool {
+    rows_per_block: usize,
+    max_bytes: Option<usize>,
+    /// Bytes the coordinator could reclaim by shedding every detached
+    /// session (published by the session store's owner; used by the
+    /// router's cheap pre-queue pressure check).
+    sheddable: AtomicUsize,
+    inner: Mutex<PoolInner>,
+}
+
+impl BlockPool {
+    /// Default block height: 16 rows, so the default lag window `L = 64`
+    /// freezes as exactly four blocks.
+    pub const DEFAULT_ROWS_PER_BLOCK: usize = 16;
+
+    pub fn new(rows_per_block: usize, max_bytes: Option<usize>) -> Arc<BlockPool> {
+        assert!(rows_per_block > 0, "rows_per_block must be positive");
+        Arc::new(BlockPool {
+            rows_per_block,
+            max_bytes,
+            sheddable: AtomicUsize::new(0),
+            inner: Mutex::new(PoolInner::default()),
+        })
+    }
+
+    /// A pool with no byte budget (the default for standalone caches and
+    /// unconfigured engines: accounting without enforcement).
+    pub fn unbounded(rows_per_block: usize) -> Arc<BlockPool> {
+        BlockPool::new(rows_per_block, None)
+    }
+
+    pub fn rows_per_block(&self) -> usize {
+        self.rows_per_block
+    }
+
+    pub fn budget(&self) -> Option<usize> {
+        self.max_bytes
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().unwrap();
+        PoolStats {
+            block_bytes: inner.block_bytes,
+            loose_bytes: inner.loose_bytes,
+            free_bytes: inner.free_bytes,
+            high_water_bytes: inner.high_water,
+            resident_blocks: inner.resident_blocks,
+            free_blocks: inner.free_blocks,
+            budget: self.max_bytes,
+        }
+    }
+
+    /// Live data bytes right now (blocks + registered loose regions).
+    pub fn resident_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.block_bytes + inner.loose_bytes
+    }
+
+    /// Allocate one full block holding exactly `rows_per_block` rows,
+    /// copied from the given contiguous sources.  Reuses a free-list
+    /// buffer when one of the right width exists; enforces the byte
+    /// budget; returns the typed [`PoolExhausted`] on overflow.
+    ///
+    /// `loose_credit` is the count of already-resident loose bytes this
+    /// block is about to replace: freezing converts loose rows into block
+    /// rows (the caller drains them right after), so the budget check
+    /// discounts the credit to keep a net-zero operation admissible even
+    /// at a full budget.  Pass 0 for a plain allocation.
+    ///
+    /// An associated function (not a method) because the block must hold
+    /// an owning handle back to its pool for free-list recycling on drop.
+    pub fn alloc_block(
+        pool: &Arc<BlockPool>,
+        d: usize,
+        k: &[f32],
+        v: &[f32],
+        pos: &[i32],
+        attn: &[f32],
+        loose_credit: usize,
+    ) -> Result<Arc<Block>, PoolExhausted> {
+        let this: &BlockPool = pool;
+        let rows = this.rows_per_block;
+        assert_eq!(k.len(), rows * d, "alloc_block: k must hold {rows} rows of width {d}");
+        assert_eq!(v.len(), rows * d, "alloc_block: v must hold {rows} rows of width {d}");
+        assert_eq!(pos.len(), rows, "alloc_block: pos must hold {rows} rows");
+        assert_eq!(attn.len(), rows, "alloc_block: attn must hold {rows} rows");
+        let bytes = block_bytes(rows, d);
+        let mut bufs = {
+            let mut inner = this.inner.lock().unwrap();
+            if let Some(budget) = this.max_bytes {
+                let resident = inner.block_bytes + inner.loose_bytes;
+                if resident + bytes > budget.saturating_add(loose_credit) {
+                    return Err(PoolExhausted { needed: bytes, resident, budget });
+                }
+            }
+            let bufs = match inner.free.get_mut(&d).and_then(|fl| fl.pop()) {
+                Some(b) => {
+                    inner.free_blocks -= 1;
+                    inner.free_bytes -= bytes;
+                    b
+                }
+                None => BlockBufs::with_capacity(rows, d),
+            };
+            inner.block_bytes += bytes;
+            inner.resident_blocks += 1;
+            inner.bump_high_water();
+            bufs
+        };
+        bufs.clear();
+        bufs.k.extend_from_slice(k);
+        bufs.v.extend_from_slice(v);
+        bufs.pos.extend_from_slice(pos);
+        bufs.attn.extend_from_slice(attn);
+        Ok(Arc::new(Block::new(bufs, rows, d, Arc::clone(pool))))
+    }
+
+    /// Return a dropped block's buffers to the free list (called from
+    /// `Block::drop`).
+    pub(crate) fn release(&self, rows: usize, d: usize, bufs: BlockBufs) {
+        let bytes = block_bytes(rows, d);
+        let mut inner = self.inner.lock().unwrap();
+        inner.block_bytes -= bytes;
+        inner.resident_blocks -= 1;
+        inner.free_bytes += bytes;
+        inner.free_blocks += 1;
+        inner.free.entry(d).or_default().push(bufs);
+    }
+
+    pub(crate) fn adjust_loose(&self, old: usize, new: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.loose_bytes = inner.loose_bytes.saturating_sub(old) + new;
+        inner.bump_high_water();
+    }
+
+    /// Publish how many resident bytes belong to detached sessions (the
+    /// coordinator owns that number; the router only reads it).
+    pub fn set_sheddable(&self, bytes: usize) {
+        self.sheddable.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn sheddable_bytes(&self) -> usize {
+        self.sheddable.load(Ordering::Relaxed)
+    }
+
+    /// True when a budget is set and the pool would stay at or over it
+    /// even if every detached session were shed — the router's cheap
+    /// reject-before-enqueue signal.  Unbudgeted pools are never under
+    /// pressure.
+    pub fn hard_pressure(&self) -> bool {
+        match self.max_bytes {
+            None => false,
+            Some(budget) => {
+                self.resident_bytes().saturating_sub(self.sheddable_bytes()) >= budget
+            }
+        }
+    }
+}
+
+impl fmt::Debug for BlockPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        f.debug_struct("BlockPool")
+            .field("rows_per_block", &self.rows_per_block)
+            .field("budget", &self.max_bytes)
+            .field("resident_bytes", &s.resident_bytes())
+            .field("resident_blocks", &s.resident_blocks)
+            .field("free_blocks", &s.free_blocks)
+            .finish()
+    }
+}
+
+/// RAII registration of a cache's loose (non-block) bytes with its pool.
+/// Cloning registers the same byte count again (the clone owns its own
+/// copy of the loose region); dropping deregisters.  This is what keeps
+/// `PoolStats::loose_bytes` exact without the pool knowing about caches.
+pub struct LooseGauge {
+    pool: Arc<BlockPool>,
+    bytes: usize,
+}
+
+impl LooseGauge {
+    pub fn new(pool: Arc<BlockPool>) -> LooseGauge {
+        LooseGauge { pool, bytes: 0 }
+    }
+
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn set(&mut self, bytes: usize) {
+        if bytes != self.bytes {
+            self.pool.adjust_loose(self.bytes, bytes);
+            self.bytes = bytes;
+        }
+    }
+}
+
+impl Clone for LooseGauge {
+    fn clone(&self) -> LooseGauge {
+        self.pool.adjust_loose(0, self.bytes);
+        LooseGauge { pool: Arc::clone(&self.pool), bytes: self.bytes }
+    }
+}
+
+impl Drop for LooseGauge {
+    fn drop(&mut self) {
+        self.pool.adjust_loose(self.bytes, 0);
+    }
+}
+
+impl fmt::Debug for LooseGauge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LooseGauge").field("bytes", &self.bytes).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(rows: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>) {
+        let k: Vec<f32> = (0..rows * d).map(|i| i as f32).collect();
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        let pos: Vec<i32> = (0..rows as i32).collect();
+        let attn = vec![0.5f32; rows];
+        (k, v, pos, attn)
+    }
+
+    #[test]
+    fn alloc_accounts_and_drop_recycles() {
+        let pool = BlockPool::unbounded(4);
+        let d = 3;
+        let (k, v, pos, attn) = filled(4, d);
+        let bytes = block_bytes(4, d);
+        let b1 = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap();
+        let b2 = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.resident_blocks, 2);
+        assert_eq!(s.block_bytes, 2 * bytes);
+        assert_eq!(s.high_water_bytes, 2 * bytes);
+        assert_eq!(b1.k(), &k[..]);
+        assert_eq!(b1.pos(), &pos[..]);
+        drop(b1);
+        drop(b2);
+        let s = pool.stats();
+        assert_eq!(s.resident_blocks, 0);
+        assert_eq!(s.block_bytes, 0);
+        assert_eq!(s.free_blocks, 2, "buffers return to the free list");
+        assert_eq!(s.free_bytes, 2 * bytes);
+        assert!(s.fragmentation() > 0.99);
+        assert_eq!(s.high_water_bytes, 2 * bytes, "high water is sticky");
+        // the next alloc reuses a recycled buffer
+        let _b3 = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap();
+        assert_eq!(pool.stats().free_blocks, 1);
+    }
+
+    #[test]
+    fn shared_block_counts_once_and_frees_last() {
+        let pool = BlockPool::unbounded(2);
+        let (k, v, pos, attn) = filled(2, 2);
+        let a = BlockPool::alloc_block(&pool, 2, &k, &v, &pos, &attn, 0).unwrap();
+        let b = Arc::clone(&a); // copy-on-write share
+        assert_eq!(pool.stats().resident_blocks, 1, "sharing is a refcount bump");
+        drop(a);
+        assert_eq!(pool.stats().resident_blocks, 1);
+        assert_eq!(b.k(), &k[..]);
+        drop(b);
+        assert_eq!(pool.stats().resident_blocks, 0);
+    }
+
+    #[test]
+    fn budget_rejects_with_typed_error() {
+        let d = 2;
+        let bytes = block_bytes(2, d);
+        let pool = BlockPool::new(2, Some(bytes + bytes / 2));
+        let (k, v, pos, attn) = filled(2, d);
+        let held = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap();
+        let err = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap_err();
+        assert_eq!(err, PoolExhausted { needed: bytes, resident: bytes, budget: bytes + bytes / 2 });
+        drop(held);
+        assert!(BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).is_ok(), "frees make room again");
+    }
+
+    #[test]
+    fn freeze_credit_keeps_net_zero_alloc_admissible_at_full_budget() {
+        let d = 2;
+        let bytes = block_bytes(2, d);
+        let pool = BlockPool::new(2, Some(bytes));
+        // a cache's loose rows fill the whole budget...
+        pool.adjust_loose(0, bytes);
+        let (k, v, pos, attn) = filled(2, d);
+        // ...freezing them is net-zero, so the credited alloc is admitted
+        let b = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, bytes).unwrap();
+        pool.adjust_loose(bytes, 0); // the cache drains the frozen loose rows
+        assert_eq!(pool.resident_bytes(), bytes);
+        // an uncredited alloc at the full budget is still rejected
+        assert!(BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).is_err());
+        drop(b);
+    }
+
+    #[test]
+    fn loose_gauge_registers_clones_and_drops() {
+        let pool = BlockPool::unbounded(4);
+        let mut g = LooseGauge::new(pool.clone());
+        g.set(100);
+        assert_eq!(pool.stats().loose_bytes, 100);
+        let g2 = g.clone();
+        assert_eq!(pool.stats().loose_bytes, 200, "a clone owns its own loose copy");
+        g.set(40);
+        assert_eq!(pool.stats().loose_bytes, 140);
+        drop(g2);
+        assert_eq!(pool.stats().loose_bytes, 40);
+        drop(g);
+        assert_eq!(pool.stats().loose_bytes, 0);
+        assert_eq!(pool.stats().high_water_bytes, 200);
+    }
+
+    #[test]
+    fn pressure_signals() {
+        let pool = BlockPool::new(2, Some(1000));
+        assert!(!pool.hard_pressure());
+        pool.adjust_loose(0, 1000);
+        assert!(pool.hard_pressure(), "at budget with nothing sheddable");
+        pool.set_sheddable(600);
+        assert!(!pool.hard_pressure(), "shedding could relieve the pressure");
+        let unbounded = BlockPool::unbounded(2);
+        unbounded.adjust_loose(0, 1 << 30);
+        assert!(!unbounded.hard_pressure(), "no budget, no pressure");
+    }
+
+    #[test]
+    fn row_bytes_counts_side_arrays() {
+        // 2 layers x 2 heads x (2*8 floats + pos + attn) = 4 * (64 + 8)
+        assert_eq!(row_bytes(2, 2, 8), 4 * (64 + 8));
+    }
+}

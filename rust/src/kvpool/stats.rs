@@ -1,0 +1,116 @@
+//! Pool accounting: exact byte ledgers and the typed exhaustion error.
+
+use std::fmt;
+
+/// Point-in-time snapshot of a [`BlockPool`]'s byte ledger.  Every number
+/// is exact (maintained transactionally under the pool lock), so serving
+/// layers can budget admission on it instead of estimating.
+///
+/// [`BlockPool`]: super::BlockPool
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolStats {
+    /// Payload bytes held in live (referenced) blocks.
+    pub block_bytes: usize,
+    /// Bytes in the contiguous per-head tail regions registered by caches
+    /// via [`LooseGauge`] (rows not yet frozen into blocks).
+    ///
+    /// [`LooseGauge`]: super::LooseGauge
+    pub loose_bytes: usize,
+    /// Bytes parked in the free list: recycled block buffers awaiting
+    /// reuse.  Not resident data, but still allocated from the OS.
+    pub free_bytes: usize,
+    /// Highest `resident_bytes()` ever observed.
+    pub high_water_bytes: usize,
+    /// Count of live blocks (each counted once however many caches share
+    /// it — this is true resident memory, not the sum of references).
+    pub resident_blocks: usize,
+    /// Count of recycled buffers in the free list.
+    pub free_blocks: usize,
+    /// The byte budget, when the pool is budgeted.
+    pub budget: Option<usize>,
+}
+
+impl PoolStats {
+    /// Live data bytes: blocks plus registered loose regions.
+    pub fn resident_bytes(&self) -> usize {
+        self.block_bytes + self.loose_bytes
+    }
+
+    /// Fraction of the pool's total allocation sitting idle in the free
+    /// list (0.0 = every allocated byte serves live data).
+    pub fn fragmentation(&self) -> f64 {
+        let total = self.resident_bytes() + self.free_bytes;
+        if total == 0 {
+            0.0
+        } else {
+            self.free_bytes as f64 / total as f64
+        }
+    }
+}
+
+/// Typed allocation failure: the pool's byte budget cannot fit another
+/// block.  Carried through `anyhow` by the blanket `std::error::Error`
+/// conversion; the serving layer maps admission-time exhaustion to the
+/// wire error code `pool-exhausted`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// Bytes the failed allocation needed.
+    pub needed: usize,
+    /// Resident bytes at the time of the failure.
+    pub resident: usize,
+    /// The pool's configured budget.
+    pub budget: usize,
+}
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "pool-exhausted: {} more bytes needed with {} resident of a {}-byte budget",
+            self.needed, self.resident, self.budget
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resident_and_fragmentation() {
+        let s = PoolStats {
+            block_bytes: 600,
+            loose_bytes: 200,
+            free_bytes: 200,
+            high_water_bytes: 1000,
+            resident_blocks: 3,
+            free_blocks: 1,
+            budget: Some(2000),
+        };
+        assert_eq!(s.resident_bytes(), 800);
+        assert!((s.fragmentation() - 0.2).abs() < 1e-12);
+        let empty = PoolStats {
+            block_bytes: 0,
+            loose_bytes: 0,
+            free_bytes: 0,
+            high_water_bytes: 0,
+            resident_blocks: 0,
+            free_blocks: 0,
+            budget: None,
+        };
+        assert_eq!(empty.fragmentation(), 0.0);
+    }
+
+    #[test]
+    fn exhausted_error_is_typed_and_prefixed() {
+        let e = PoolExhausted { needed: 64, resident: 960, budget: 1024 };
+        let msg = e.to_string();
+        assert!(msg.starts_with("pool-exhausted:"), "stable prefix: {msg}");
+        assert!(msg.contains("64") && msg.contains("960") && msg.contains("1024"));
+        // converts into anyhow::Error via the std::error::Error blanket impl
+        let any: anyhow::Error = e.into();
+        assert!(format!("{any:#}").contains("pool-exhausted"));
+    }
+}

@@ -37,6 +37,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod harness;
 pub mod kvcache;
+pub mod kvpool;
 pub mod metrics;
 #[cfg(feature = "xla")]
 pub mod runtime;

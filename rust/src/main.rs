@@ -59,12 +59,14 @@ USAGE:
                  [--stream] [--session ID]
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
               [--max-queue 256] [--sessions 64] [--session-ttl 600]
+              [--pool-mb N] [--session-mb N]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
 
 BACKENDS: cpu (default, hermetic) | xla (--features xla + make artifacts)
 POLICIES: lagkv localkv l2norm h2o streaming random none
-WIRE PROTOCOL: see DESIGN.md (NDJSON events, {"cancel": id}, session_id)
+WIRE PROTOCOL: see DESIGN.md (NDJSON events, {"cancel": id}, session_id;
+  byte-budgeted pools reject with the typed "pool-exhausted" error)
 "#;
 
 fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
@@ -166,7 +168,9 @@ fn serve(args: &Args) -> Result<()> {
         sessions: SessionConfig {
             capacity: serving.session_capacity,
             ttl: Duration::from_secs(serving.session_ttl_s),
+            max_bytes: serving.session_max_bytes,
         },
+        pool_max_bytes: serving.pool_max_bytes,
     };
     let router = Arc::new(Router::start_with(EngineSpec::from_args(args)?, &models, router_cfg));
     let server = Arc::new(Server::new(router));

@@ -6,5 +6,5 @@ pub mod stats;
 pub mod table;
 
 pub use score::{coverage_score, exact_match, f1_token_score, partial_match_digits};
-pub use stats::{Histogram, ThroughputMeter};
+pub use stats::{Histogram, PoolGauges, ThroughputMeter};
 pub use table::Table;

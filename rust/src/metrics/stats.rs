@@ -1,6 +1,61 @@
-//! Latency histograms and throughput meters for the serving path.
+//! Latency histograms, throughput meters, and KV-pool occupancy gauges
+//! for the serving path.
 
 use std::time::{Duration, Instant};
+
+use crate::kvpool::PoolStats;
+
+/// Point-in-time KV block-pool gauges, shaped for dashboards and bench
+/// output.  Built from the pool's exact ledger ([`PoolStats`]) so the
+/// metrics layer never re-derives accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolGauges {
+    /// Live data bytes (blocks + loose regions).
+    pub resident_bytes: usize,
+    /// Recycled block bytes parked in the free list.
+    pub free_bytes: usize,
+    /// Highest resident_bytes ever observed.
+    pub high_water_bytes: usize,
+    /// Live blocks (each counted once however many caches share it).
+    pub resident_blocks: usize,
+    /// Idle fraction of the pool's total allocation, in percent.
+    pub fragmentation_pct: f64,
+    /// The configured byte budget, when one is set.
+    pub budget_bytes: Option<usize>,
+}
+
+impl From<&PoolStats> for PoolGauges {
+    fn from(s: &PoolStats) -> PoolGauges {
+        PoolGauges {
+            resident_bytes: s.resident_bytes(),
+            free_bytes: s.free_bytes,
+            high_water_bytes: s.high_water_bytes,
+            resident_blocks: s.resident_blocks,
+            fragmentation_pct: s.fragmentation() * 100.0,
+            budget_bytes: s.budget,
+        }
+    }
+}
+
+impl PoolGauges {
+    /// One-line rendering for bench output and logs.
+    pub fn render(&self) -> String {
+        let budget = match self.budget_bytes {
+            Some(b) => format!("{:.1}", b as f64 / 1024.0),
+            None => "inf".to_string(),
+        };
+        format!(
+            "pool: resident {:.1} KiB ({} blocks) / budget {} KiB, \
+             high-water {:.1} KiB, free {:.1} KiB, fragmentation {:.1}%",
+            self.resident_bytes as f64 / 1024.0,
+            self.resident_blocks,
+            budget,
+            self.high_water_bytes as f64 / 1024.0,
+            self.free_bytes as f64 / 1024.0,
+            self.fragmentation_pct,
+        )
+    }
+}
 
 /// Streaming latency recorder with exact quantiles over a bounded sample
 /// buffer (fine for benchmark-scale request counts).
@@ -134,6 +189,29 @@ mod tests {
         let mut h = Histogram::new();
         assert_eq!(h.mean_ms(), 0.0);
         assert_eq!(h.p95_ms(), 0.0);
+    }
+
+    #[test]
+    fn pool_gauges_mirror_pool_stats() {
+        let s = PoolStats {
+            block_bytes: 3072,
+            loose_bytes: 1024,
+            free_bytes: 1024,
+            high_water_bytes: 5120,
+            resident_blocks: 3,
+            free_blocks: 1,
+            budget: Some(8192),
+        };
+        let g = PoolGauges::from(&s);
+        assert_eq!(g.resident_bytes, 4096);
+        assert_eq!(g.resident_blocks, 3);
+        assert!((g.fragmentation_pct - 20.0).abs() < 1e-9);
+        let line = g.render();
+        assert!(line.contains("4.0 KiB"), "rendered: {line}");
+        assert!(line.contains("3 blocks"), "rendered: {line}");
+        assert!(line.contains("fragmentation 20.0%"), "rendered: {line}");
+        let unbudgeted = PoolGauges::from(&PoolStats { budget: None, ..s });
+        assert!(unbudgeted.render().contains("budget inf"));
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //! * Unknown request fields are a hard `bad-params` error listing the
 //!   offending keys — a typo in `stream` or `session_id` must never
 //!   silently fall back to one-shot, session-less behaviour.
+//! * When the server runs with a KV pool byte budget (`--pool-mb`), a
+//!   request that cannot fit even after LRU session shedding is answered
+//!   with the typed `pool-exhausted` error (same `{"code", "message"}`
+//!   shape) instead of being queued — memory backpressure is explicit on
+//!   the wire.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -515,6 +520,18 @@ mod tests {
         let e = v.get("error").unwrap();
         assert_eq!(e.get("code").unwrap().as_str().unwrap(), "queue-full");
         assert!(!e.get("message").unwrap().as_str().unwrap().is_empty());
+    }
+
+    #[test]
+    fn pool_exhausted_renders_typed_wire_error() {
+        let resp = Response::from_error(
+            5,
+            ApiError::PoolExhausted { model: "m".into(), detail: "need 64 bytes".into() },
+        );
+        let v = Json::parse(&Server::render_response(&resp)).unwrap();
+        let e = v.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "pool-exhausted");
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("need 64 bytes"));
     }
 
     #[test]

@@ -159,13 +159,16 @@ fn synth_attention(cache: &mut KvCache, t: usize, n0: usize, nl: usize) {
             row[base + r] /= total;
         }
     }
-    // align to current (compacted) row order via positions
+    // align to current (compacted) row order via positions (scratch
+    // reused across heads: this runs once per simulated token)
     let mut aligned = vec![0.0f32; nlh * cache.max_len().max(1)];
     let t_cache = cache.max_len();
+    let mut pos = Vec::new();
     for layer in 0..cache.n_layers {
         for head in 0..cache.n_heads {
             let lh = layer * cache.n_heads + head;
-            for (r, &p) in cache.positions(layer, head).iter().enumerate() {
+            cache.positions_into(layer, head, &mut pos);
+            for (r, &p) in pos.iter().enumerate() {
                 aligned[lh * t_cache + r] = row[lh * t_max + (p as usize).min(t_max - 1)];
             }
         }

@@ -453,11 +453,84 @@ fn explicit_cancel_terminates_with_typed_error() {
     router.shutdown();
 }
 
+/// Memory-pressure admission on a byte-budgeted pool: a resident session
+/// is shed (LRU) to admit new work, an oversized request is a typed
+/// `pool-exhausted` error, and the pool keeps serving afterwards.
+#[test]
+fn pool_pressure_sheds_sessions_and_rejects_typed() {
+    let e = engine();
+    let row = lagkv::kvpool::row_bytes(e.dims.n_layers, e.dims.n_kv_heads, e.dims.d_head);
+    let cfg = RouterConfig {
+        queue_depth: 8,
+        sessions: SessionConfig::default(),
+        pool_max_bytes: Some(200 * row),
+    };
+    let router = Router::start_with(EngineSpec::cpu(), &["llama_like".to_string()], cfg);
+    let stats = router.stats("llama_like").unwrap();
+    let mut rng = Rng::seed_from(19);
+    let mut prompt =
+        || gen_passkey(&mut rng, &PasskeySpec { n_filler: 60, n_digits: 8, depth: None }).prompt;
+
+    // a session turn fits and stays resident
+    let a = router
+        .generate(
+            "llama_like",
+            GenerateParams::new(prompt())
+                .lag(16)
+                .ratio(0.5)
+                .max_new(8)
+                .session("mem")
+                .into_request(1)
+                .unwrap(),
+        )
+        .unwrap();
+    assert!(a.error.is_none(), "session turn must fit: {:?}", a.error);
+    let pool = router.pool("llama_like").unwrap();
+    assert!(pool.resident_bytes() > 0, "detached session stays resident");
+
+    // an oversized request is the typed rejection — and it must not shed
+    // the stored session (shedding cannot make an impossible request fit)
+    let d = router
+        .generate(
+            "llama_like",
+            GenerateParams::new(prompt()).lag(16).ratio(0.5).max_new(600).into_request(2).unwrap(),
+        )
+        .unwrap();
+    assert_eq!(d.error.as_ref().map(|er| er.code()), Some("pool-exhausted"));
+    assert_eq!(stats.pool_rejected.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        stats.sessions_shed.load(Ordering::Relaxed),
+        0,
+        "an impossible request must not destroy stored sessions"
+    );
+    assert!(pool.resident_bytes() > 0, "the session survives the rejection");
+
+    // a fresh request that only fits once the LRU session is shed
+    let b = router
+        .generate(
+            "llama_like",
+            GenerateParams::new(prompt()).lag(16).ratio(0.5).max_new(100).into_request(3).unwrap(),
+        )
+        .unwrap();
+    assert!(b.error.is_none(), "must recover by shedding: {:?}", b.error);
+    assert!(stats.sessions_shed.load(Ordering::Relaxed) >= 1, "LRU session shed");
+
+    // and the pool still serves right-sized work afterwards
+    let c = router
+        .generate(
+            "llama_like",
+            GenerateParams::new(prompt()).lag(16).ratio(0.5).max_new(8).into_request(4).unwrap(),
+        )
+        .unwrap();
+    assert!(c.error.is_none(), "pool must recover: {:?}", c.error);
+    router.shutdown();
+}
+
 /// The bounded admission queue rejects overflow with a typed `queue-full`
 /// error while accepted requests still complete.
 #[test]
 fn queue_overflow_is_a_typed_error() {
-    let cfg = RouterConfig { queue_depth: 1, sessions: SessionConfig::default() };
+    let cfg = RouterConfig { queue_depth: 1, ..RouterConfig::default() };
     let router = Router::start_with(EngineSpec::cpu(), &["llama_like".to_string()], cfg);
     let mut rng = Rng::seed_from(3);
     let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 100, n_digits: 8, depth: None });

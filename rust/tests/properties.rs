@@ -15,8 +15,11 @@ use lagkv::compress::policy::make_policy;
 use lagkv::compress::topk::{topk_indices, topk_indices_into};
 use lagkv::config::{CompressionConfig, PolicyKind};
 use lagkv::coordinator::{Event, GenerateParams, Response, Router};
+use lagkv::engine::Engine;
 use lagkv::kvcache::{ratio, KvCache};
+use lagkv::kvpool::BlockPool;
 use lagkv::sim::{self, SimSpec};
+use lagkv::util::argmax;
 use lagkv::util::prop;
 use lagkv::util::rng::Rng;
 use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
@@ -338,6 +341,299 @@ fn prop_stream_events_fold_to_one_shot_response() {
         Ok(())
     });
     router.shutdown();
+}
+
+/// Allocator invariants under arbitrary append / compress / detach-clone /
+/// drop interleavings on one shared pool: when every cache is gone the
+/// refcount ledger reconciles to zero (no block leaks, no stray loose
+/// bytes) and every block that ever froze was recycled through the free
+/// list rather than returned to the OS.
+#[test]
+fn prop_pool_ledger_reconciles_after_interleavings() {
+    prop::check(25, |g| {
+        let pool = BlockPool::unbounded(4);
+        let d = g.usize(1, 3);
+        let nh = g.usize(1, 2);
+        let cfg = CompressionConfig {
+            policy: PolicyKind::LagKv,
+            sink: g.usize(0, 4),
+            lag: [4usize, 8, 12][g.usize(0, 2)],
+            ratio: 0.5,
+            ..Default::default()
+        };
+        let mut scorer = make_policy(cfg.policy, g.case as u64);
+        let mut rng = Rng::seed_from(g.case as u64 + 31);
+        let mut caches = vec![KvCache::new_in(pool.clone(), 1, nh, d)];
+        let mut froze_any = false;
+        for _ in 0..g.usize(20, 140) {
+            match g.usize(0, 9) {
+                0..=6 => {
+                    let i = g.usize(0, caches.len() - 1);
+                    let w = nh * d;
+                    let t = caches[i].appended as i32;
+                    let k: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+                    caches[i].append_token(&k, &k, t).unwrap();
+                    maybe_compress(&mut caches[i], &cfg, scorer.as_mut())
+                        .map_err(|e| format!("driver: {e:#}"))?;
+                    froze_any |= caches[i].frozen_blocks() > 0;
+                }
+                7..=8 => {
+                    // detach-style clone: shares frozen blocks CoW
+                    if caches.len() < 4 {
+                        let i = g.usize(0, caches.len() - 1);
+                        let c = caches[i].clone();
+                        caches.push(c);
+                    }
+                }
+                _ => {
+                    if caches.len() > 1 {
+                        let i = g.usize(0, caches.len() - 1);
+                        caches.swap_remove(i);
+                    }
+                }
+            }
+        }
+        // with a single never-cloned cache the pool count is exactly its
+        // reference count; with clones it can only be smaller (sharing)
+        let refs: usize = caches.iter().map(|c| c.frozen_blocks()).sum();
+        let live = pool.stats();
+        if live.resident_blocks > refs {
+            return Err(format!(
+                "pool holds {} blocks but caches reference only {refs}",
+                live.resident_blocks
+            ));
+        }
+        caches.clear();
+        let s = pool.stats();
+        if s.resident_blocks != 0 {
+            return Err(format!("{} blocks leaked", s.resident_blocks));
+        }
+        if s.resident_bytes() != 0 {
+            return Err(format!("{} resident bytes leaked", s.resident_bytes()));
+        }
+        if froze_any && s.free_blocks == 0 {
+            return Err("frozen blocks were not recycled to the free list".into());
+        }
+        Ok(())
+    });
+}
+
+/// The old flat per-head rebuild, kept as the semantic reference: the
+/// pooled block-remap (freeze + loose rebuild + thaw-on-demand) must match
+/// it bit-for-bit under random append/compact interleavings, including
+/// windows that reach behind the frozen boundary.
+///
+/// A sibling copy lives in benches/perf_hotpath.rs as the *timing*
+/// baseline; both are deliberately verbatim transcriptions of the
+/// pre-kvpool `compact_window` — change neither without the other.
+struct FlatHead {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pos: Vec<i32>,
+    attn: Vec<f32>,
+}
+
+impl FlatHead {
+    fn compact_window(&mut self, d: usize, start: usize, l: usize, keep: &[usize]) {
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        let mut pos = Vec::new();
+        let mut attn = Vec::new();
+        k.extend_from_slice(&self.k[..start * d]);
+        v.extend_from_slice(&self.v[..start * d]);
+        pos.extend_from_slice(&self.pos[..start]);
+        attn.extend_from_slice(&self.attn[..start]);
+        for &i in keep {
+            let r = start + i;
+            k.extend_from_slice(&self.k[r * d..(r + 1) * d]);
+            v.extend_from_slice(&self.v[r * d..(r + 1) * d]);
+            pos.push(self.pos[r]);
+            attn.push(self.attn[r]);
+        }
+        k.extend_from_slice(&self.k[(start + l) * d..]);
+        v.extend_from_slice(&self.v[(start + l) * d..]);
+        pos.extend_from_slice(&self.pos[start + l..]);
+        attn.extend_from_slice(&self.attn[start + l..]);
+        self.k = k;
+        self.v = v;
+        self.pos = pos;
+        self.attn = attn;
+    }
+}
+
+#[test]
+fn prop_pooled_compact_matches_flat_rebuild_bit_for_bit() {
+    prop::check(40, |g| {
+        let d = g.usize(1, 4);
+        let nh = g.usize(1, 3);
+        let pool = BlockPool::unbounded(g.usize(2, 6));
+        let mut cache = KvCache::new_in(pool, 1, nh, d);
+        let mut flat: Vec<FlatHead> = (0..nh)
+            .map(|_| FlatHead { k: vec![], v: vec![], pos: vec![], attn: vec![] })
+            .collect();
+        let mut rng = Rng::seed_from(g.case as u64 + 101);
+        for _ in 0..g.usize(10, 80) {
+            let len = cache.len(0);
+            if len < 4 || g.bool() {
+                let w = nh * d;
+                let t = cache.appended as i32;
+                let k: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+                let v: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+                cache.append_token(&k, &v, t).unwrap();
+                for (h, fh) in flat.iter_mut().enumerate() {
+                    let off = h * d;
+                    fh.k.extend_from_slice(&k[off..off + d]);
+                    fh.v.extend_from_slice(&v[off..off + d]);
+                    fh.pos.push(t);
+                    fh.attn.push(0.0);
+                }
+            } else {
+                let l = g.usize(1, (len - 1).min(8));
+                let start = g.usize(0, len - l);
+                let kept = g.usize(1, l);
+                let keeps: Vec<Vec<usize>> = (0..nh)
+                    .map(|_| {
+                        let mut ks = rng.choose_distinct(l, kept);
+                        ks.sort_unstable();
+                        ks
+                    })
+                    .collect();
+                cache
+                    .compact_layer(0, start, l, &keeps)
+                    .map_err(|e| format!("compact: {e:#}"))?;
+                for (h, fh) in flat.iter_mut().enumerate() {
+                    fh.compact_window(d, start, l, &keeps[h]);
+                }
+            }
+        }
+        for (h, fh) in flat.iter().enumerate() {
+            if cache.head_k(0, h) != fh.k {
+                return Err(format!("head {h}: keys diverged from the flat reference"));
+            }
+            if cache.head_v(0, h) != fh.v {
+                return Err(format!("head {h}: values diverged"));
+            }
+            if cache.positions(0, h) != fh.pos {
+                return Err(format!("head {h}: positions diverged"));
+            }
+            if cache.head_attn(0, h) != fh.attn {
+                return Err(format!("head {h}: attention mass diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Copy-on-write: a detached clone's contents survive arbitrary further
+/// mutation of the original — shared frozen blocks are never written.
+#[test]
+fn prop_cow_snapshots_survive_original_mutation() {
+    prop::check(15, |g| {
+        let pool = BlockPool::unbounded(4);
+        let cfg = CompressionConfig {
+            policy: PolicyKind::LagKv,
+            sink: g.usize(0, 3),
+            lag: [4usize, 8][g.usize(0, 1)],
+            ratio: 0.5,
+            ..Default::default()
+        };
+        let mut scorer = make_policy(cfg.policy, g.case as u64);
+        let mut rng = Rng::seed_from(g.case as u64 + 57);
+        let mut cache = KvCache::new_in(pool.clone(), 1, 2, 3);
+        let mut feed = |cache: &mut KvCache, rng: &mut Rng, n: usize| -> Result<(), String> {
+            for _ in 0..n {
+                let t = cache.appended as i32;
+                let k: Vec<f32> = (0..2 * 3).map(|_| rng.normal()).collect();
+                cache.append_token(&k, &k, t).unwrap();
+                maybe_compress(cache, &cfg, scorer.as_mut())
+                    .map_err(|e| format!("driver: {e:#}"))?;
+            }
+            Ok(())
+        };
+        feed(&mut cache, &mut rng, g.usize(30, 80))?;
+        let snap_k = cache.head_k(0, 0);
+        let snap_v = cache.head_v(0, 1);
+        let snap_pos = cache.positions(0, 0);
+        let shared_blocks = cache.frozen_blocks();
+        let clone = cache.clone();
+        if pool.stats().resident_blocks != shared_blocks {
+            return Err(format!(
+                "clone duplicated blocks: pool {} vs {shared_blocks} shared",
+                pool.stats().resident_blocks
+            ));
+        }
+        feed(&mut cache, &mut rng, g.usize(10, 60))?;
+        if clone.head_k(0, 0) != snap_k {
+            return Err("clone keys changed under original mutation".into());
+        }
+        if clone.head_v(0, 1) != snap_v {
+            return Err("clone values changed under original mutation".into());
+        }
+        if clone.positions(0, 0) != snap_pos {
+            return Err("clone positions changed under original mutation".into());
+        }
+        drop(cache);
+        if clone.head_k(0, 0) != snap_k {
+            return Err("clone lost shared blocks when the original dropped".into());
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance bound for CoW sessions: a 2-turn resume through
+/// `prefill_onto` allocates only tail/new-turn blocks and never deep-copies
+/// the reattached history (pool high-water would betray a copy).
+#[test]
+fn session_resume_allocates_only_tail_blocks() {
+    let engine = Engine::cpu_ref("llama_like").unwrap();
+    let pool = engine.pool().clone();
+    let cfg = CompressionConfig {
+        policy: PolicyKind::LagKv,
+        sink: 4,
+        lag: 16,
+        ratio: 0.25,
+        ..Default::default()
+    };
+    let mut rng = Rng::seed_from(23);
+    let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 280, n_digits: 16, depth: None });
+    let ids = engine.tokenizer.encode(&item.prompt, true);
+    let (logits, mut cache) = engine.prefill(&ids).unwrap();
+    let mut scorer = engine.make_scorer(&cfg, 0);
+    maybe_compress(&mut cache, &cfg, scorer.as_mut()).unwrap();
+    assert!(cache.frozen_blocks() > 0, "turn 1 must have paged its prefix");
+    let history_blocks = cache.frozen_blocks();
+    let history_bytes = cache.exact_bytes();
+    let before = pool.stats();
+
+    // turn 2: the pending token plus the new turn's text, decode path
+    let first = argmax(&logits) as i32;
+    let mut feed = vec![first];
+    feed.extend(engine.tokenizer.encode("<q> the pass key <a>", false));
+    engine.prefill_onto(&mut cache, &cfg, scorer.as_mut(), &feed).unwrap();
+    let after = pool.stats();
+
+    // every new pool block is the resumed cache's own tail growth
+    let grown = after.resident_blocks - before.resident_blocks;
+    assert_eq!(
+        grown,
+        cache.frozen_blocks() - history_blocks,
+        "resume allocated blocks that are not its own tail"
+    );
+    // the tail growth is bounded by the new tokens plus one lag window of
+    // slack per layer — nowhere near a history copy
+    let rpb = pool.rows_per_block();
+    let row_cap = feed.len() + 2 * cfg.lag + rpb;
+    assert!(
+        grown * rpb <= cache.n_layers * cache.n_heads * row_cap,
+        "{grown} new blocks is more than the new turn could need"
+    );
+    // and the high-water mark moved by much less than a full history copy
+    let hw_growth = after.high_water_bytes - before.high_water_bytes;
+    assert!(
+        hw_growth < history_bytes / 2,
+        "high-water grew {hw_growth} B against a {history_bytes} B history: \
+         something deep-copied the cache on resume"
+    );
 }
 
 /// The paper's headline ordering as a standing regression: at equal

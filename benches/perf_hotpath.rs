@@ -7,6 +7,9 @@
 //!     kvpool occupancy / high-water / fragmentation gauges),
 //!   * 2-turn session resume via `prefill_onto` (pool-ledger evidence
 //!     that a resume allocates only tail blocks),
+//!   * prefix-hit prefill on a shared-prefix workload (radix prefix
+//!     cache: zero deep row copies asserted via the pool ledger, fewer
+//!     backend prefill tokens than cold, hit/miss/reuse gauges),
 //!   * decode step (engine, literal path),
 //!   * prefill per bucket,
 //!   * end-to-end generation tokens/s,
@@ -25,7 +28,7 @@ use lagkv::config::{CompressionConfig, PolicyKind};
 use lagkv::coordinator::{Event, GenerateParams, Router};
 use lagkv::engine::{Engine, SlotState};
 use lagkv::kvcache::KvCache;
-use lagkv::kvpool::BlockPool;
+use lagkv::kvpool::{BlockPool, PrefixConfig};
 use lagkv::metrics::{Histogram, PoolGauges};
 use lagkv::util::argmax;
 use lagkv::util::rng::Rng;
@@ -337,6 +340,81 @@ fn bench_session_resume(engine: &Engine) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Prefix-hit prefill on a shared-prefix workload (the radix prefix
+/// cache's acceptance bound): the second request attaches the shared
+/// prefix CoW — zero deep row copies, asserted via the pool ledger — and
+/// runs materially fewer backend prefill tokens than a cold prefill.
+fn bench_prefix_cache() -> anyhow::Result<()> {
+    let mut engine = load_engine("llama_like")?;
+    let prefix = engine.enable_prefix_cache(PrefixConfig { stride: 64, ..Default::default() });
+    let cfg = CompressionConfig {
+        policy: PolicyKind::LagKv,
+        sink: 4,
+        lag: 16,
+        ratio: 0.25,
+        ..Default::default()
+    };
+    let mut rng = Rng::seed_from(13);
+    let sys =
+        gen_passkey(&mut rng, &PasskeySpec { n_filler: 260, n_digits: 16, depth: None }).prompt;
+    let ids_sys = engine.tokenizer.encode(&sys, true);
+    let tail1 = engine.tokenizer.encode("<q> the pass key <a>", false);
+    let tail2 = engine.tokenizer.encode("<q> remember the words <a>", false);
+    let ids1: Vec<i32> = ids_sys.iter().chain(tail1.iter()).copied().collect();
+    let ids2: Vec<i32> = ids_sys.iter().chain(tail2.iter()).copied().collect();
+
+    let mut scorer = engine.make_scorer(&cfg, 0);
+    let t0 = Instant::now();
+    let cold = engine.prefill_cached(&ids1, &cfg, scorer.as_mut(), 0)?;
+    let cold_ns = t0.elapsed().as_nanos() as f64;
+    assert_eq!(cold.reused_tokens, 0, "first request must be cold");
+    row(
+        "prefix-cache cold prefill (seeds tree)",
+        cold_ns,
+        &format!("{} backend tokens", ids1.len()),
+    );
+
+    let before = engine.pool().stats();
+    let t1 = Instant::now();
+    let warm = engine.prefill_cached(&ids2, &cfg, scorer.as_mut(), 0)?;
+    let warm_ns = t1.elapsed().as_nanos() as f64;
+    let after = engine.pool().stats();
+    assert!(warm.reused_tokens > 0, "shared-prefix request must hit the cache");
+    let backend_tokens = ids2.len() - warm.reused_tokens;
+    assert!(
+        backend_tokens * 2 < ids2.len(),
+        "a prefix hit must run materially fewer backend prefill tokens \
+         ({backend_tokens} of {})",
+        ids2.len()
+    );
+    // Pool-ledger evidence of zero deep row copies: attaching the shared
+    // prefix duplicates no blocks, so any block growth is bounded by the
+    // warm request's own suffix + one freeze of slack per (layer, head).
+    let grown = after.resident_blocks.saturating_sub(before.resident_blocks);
+    let rpb = engine.pool().rows_per_block();
+    let suffix_cap = backend_tokens + 2 * cfg.lag + rpb;
+    assert!(
+        grown * rpb <= warm.cache.n_layers * warm.cache.n_heads * suffix_cap,
+        "{grown} new blocks is more than the suffix could need: a deep copy happened"
+    );
+    row(
+        "prefix-cache warm prefill (shared prefix)",
+        warm_ns,
+        &format!(
+            "{} of {} tokens reused, {backend_tokens} backend tokens, \
+             {grown} new blocks, {:.2}x cold",
+            warm.reused_tokens,
+            ids2.len(),
+            cold_ns / warm_ns,
+        ),
+    );
+    println!(
+        "{}",
+        PoolGauges::from(&after).with_prefix(&prefix.stats()).render()
+    );
+    Ok(())
+}
+
 /// Streaming latencies only the event API can expose: time-to-first-token
 /// (queue + prefill + first decode) and the inter-token gap, measured off
 /// the live `Router::submit` stream.
@@ -399,6 +477,10 @@ fn main() -> anyhow::Result<()> {
             bench_session_resume(&engine)?;
         }
         Err(e) => eprintln!("SKIP engine benches: {e:#}"),
+    }
+    match bench_prefix_cache() {
+        Ok(()) => {}
+        Err(e) => eprintln!("SKIP prefix-cache bench: {e:#}"),
     }
     match bench_streaming() {
         Ok(()) => {}

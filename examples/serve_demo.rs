@@ -6,12 +6,15 @@
 //! cache being reused across turns.
 //!
 //! Memory budgets: `--pool-mb N` caps each model's KV block pool (typed
-//! `pool-exhausted` rejections + LRU session shedding under pressure) and
+//! `pool-exhausted` rejections + three-tier shedding under pressure) and
 //! `--session-mb N` caps the session store's resident bytes.
+//! `--prefix-cache` shares identical prompt prefixes across sequences CoW
+//! (per-model hit/miss/reuse gauges are printed at the end).
 //!
 //! ```bash
 //! cargo run --release --example serve_demo -- --requests 24 --clients 6
 //! cargo run --release --example serve_demo -- --pool-mb 4 --session-mb 1
+//! cargo run --release --example serve_demo -- --prefix-cache
 //! ```
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -41,6 +44,9 @@ fn main() -> anyhow::Result<()> {
         mb => router_cfg.pool_max_bytes = Some(mb * 1024 * 1024),
     }
     router_cfg.sessions.max_bytes = args.usize_or("session-mb", 0)? * 1024 * 1024;
+    if args.has("prefix-cache") {
+        router_cfg.prefix_cache = Some(lagkv::kvpool::PrefixConfig::default());
+    }
     let router = Arc::new(Router::start_with(spec, &models, router_cfg));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));
@@ -192,11 +198,16 @@ fn main() -> anyhow::Result<()> {
         t2.get("cache_lens")?.to_string(),
     );
 
-    // KV pool occupancy per model (the session above stays resident).
+    // KV pool occupancy per model (the session above stays resident),
+    // plus prefix-cache hit/miss/reuse gauges when one is enabled.
     println!();
     for model in &models {
         if let Some(pool) = server.router.pool(model) {
-            println!("{model}: {}", PoolGauges::from(&pool.stats()).render());
+            let mut gauges = PoolGauges::from(&pool.stats());
+            if let Some(prefix) = server.router.prefix_cache(model) {
+                gauges = gauges.with_prefix(&prefix.stats());
+            }
+            println!("{model}: {}", gauges.render());
         }
     }
 

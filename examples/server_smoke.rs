@@ -4,7 +4,11 @@
 //! then reboots with a tiny byte-budgeted KV pool and asserts the
 //! memory-pressure admission path end-to-end: LRU session shedding under
 //! pressure, the typed `pool-exhausted` wire rejection, and recovery
-//! afterwards.  Exits non-zero on any protocol violation.
+//! afterwards.  A final reboot with `--prefix-cache` semantics drives the
+//! shared-system-prompt scenario: two clients whose prompts share a long
+//! prefix, the second attaching the radix prefix cache CoW
+//! (`reused_tokens > 0` on the wire), then prefix-snapshot shedding under
+//! pool pressure and recovery.  Exits non-zero on any protocol violation.
 //!
 //! ```bash
 //! cargo run --release --example server_smoke
@@ -146,6 +150,7 @@ fn main() -> anyhow::Result<()> {
         queue_depth: 8,
         sessions: SessionConfig::default(),
         pool_max_bytes: Some(budget),
+        prefix_cache: None,
     };
     let router2 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, tiny_cfg));
     let stats2 = router2.stats("llama_like").expect("model stats");
@@ -236,6 +241,74 @@ fn main() -> anyhow::Result<()> {
     drop(client2);
     stop2.store(true, Ordering::Relaxed);
     serve2.join().expect("budgeted server thread")?;
+
+    // 6. Radix prefix cache over a budgeted pool: two clients share a long
+    //    system prompt; the second must hit the prefix cache (CoW attach,
+    //    `reused_tokens > 0` on the wire), then pool pressure sheds prefix
+    //    snapshots (the cheapest tier) and the cache recovers.
+    let prefix_budget = 1200 * row;
+    let prefix_cfg = RouterConfig {
+        queue_depth: 8,
+        sessions: SessionConfig::default(),
+        pool_max_bytes: Some(prefix_budget),
+        prefix_cache: Some(lagkv::kvpool::PrefixConfig { stride: 24, ..Default::default() }),
+    };
+    let router3 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, prefix_cfg));
+    let prefix3 = router3.prefix_cache("llama_like").expect("prefix cache");
+    let server3 = Arc::new(Server::new(router3));
+    let stop3 = Arc::new(AtomicBool::new(false));
+    let (listener3, port3) = Server::bind(0)?;
+    let serve3 = {
+        let server3 = server3.clone();
+        let stop3 = stop3.clone();
+        std::thread::spawn(move || server3.serve_listener(listener3, stop3))
+    };
+    let mut rng3 = Rng::seed_from(77);
+    let sys = gen_passkey(&mut rng3, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None })
+        .prompt;
+    let turn = |q: &str, id: u64, max_new: usize| {
+        GenerateParams::new(format!("{sys} {q}"))
+            .lag(16)
+            .ratio(0.5)
+            .max_new(max_new)
+            .request_line(Some(id), false)
+    };
+
+    // client A warms the tree with the shared prefix
+    let mut client_a = Client::connect(port3)?;
+    let a1 = client_a.call(&turn("<q> the pass key <a>", 30, 8))?;
+    assert_eq!(*a1.get("error")?, Json::Null, "warming request failed: {a1:?}");
+    assert_eq!(a1.get("reused_tokens")?.as_usize()?, 0, "a cold tree cannot hit");
+
+    // client B shares the system prompt and must attach the prefix CoW
+    let mut client_b = Client::connect(port3)?;
+    let b1 = client_b.call(&turn("<q> remember the words <a>", 31, 8))?;
+    assert_eq!(*b1.get("error")?, Json::Null, "shared-prefix request failed: {b1:?}");
+    let reused = b1.get("reused_tokens")?.as_usize()?;
+    assert!(reused > 0, "second client must hit the prefix cache: {b1:?}");
+    assert!(prefix3.stats().hits >= 1, "hit gauge must record the attach");
+    println!("prefix cache ok: second client reused {reused} prompt tokens");
+
+    // pool pressure: a huge generation budget forces prefix-snapshot
+    // shedding (tier 1) before admission — and the request still runs
+    let big = client_b.call(&turn("<q> the pass key <a>", 32, 999))?;
+    assert_eq!(*big.get("error")?, Json::Null, "shedding must admit it: {big:?}");
+    assert!(prefix3.stats().shed >= 1, "pressure must shed prefix snapshots first");
+
+    // recovery: the tree repopulates from fresh traffic
+    let a2 = client_a.call(&turn("<q> the pass key <a>", 33, 8))?;
+    assert_eq!(*a2.get("error")?, Json::Null, "post-shed request failed: {a2:?}");
+    assert!(prefix3.stats().entries >= 1, "tree must repopulate after shedding");
+    println!(
+        "prefix pressure ok: shed {} snapshot(s), {} entries resident",
+        prefix3.stats().shed,
+        prefix3.stats().entries,
+    );
+
+    drop(client_a);
+    drop(client_b);
+    stop3.store(true, Ordering::Relaxed);
+    serve3.join().expect("prefix server thread")?;
     println!("SMOKE OK");
     Ok(())
 }

@@ -119,7 +119,7 @@ impl PolicyKind {
 }
 
 /// Scorer backend for the score-computing policies.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ScorerBackend {
     /// Pure-Rust scorer (default; zero transfer overhead).
     Rust,
@@ -224,6 +224,9 @@ pub struct ServingConfig {
     /// Resident-byte cap for each model's session store (0 = uncapped).
     /// CLI: `--session-mb N` (mebibytes).
     pub session_max_bytes: usize,
+    /// Enable the radix prefix cache (share identical prompt-prefix KV
+    /// across sequences, CoW).  CLI: `--prefix-cache`.
+    pub prefix_cache: bool,
     /// Port for the TCP front-end.
     pub port: u16,
 }
@@ -239,6 +242,7 @@ impl Default for ServingConfig {
             session_ttl_s: 600,
             pool_max_bytes: None,
             session_max_bytes: 0,
+            prefix_cache: false,
             port: 7199,
         }
     }
@@ -256,6 +260,7 @@ impl ServingConfig {
             mb => c.pool_max_bytes = Some(mb * 1024 * 1024),
         }
         c.session_max_bytes = args.usize_or("session-mb", 0)? * 1024 * 1024;
+        c.prefix_cache = args.has("prefix-cache");
         c.port = args.usize_or("port", c.port as usize)? as u16;
         Ok(c)
     }
@@ -344,6 +349,14 @@ mod tests {
         let zero =
             Args::parse(["--pool-mb", "0"].iter().map(|s| s.to_string())).unwrap();
         assert_eq!(ServingConfig::from_args(&zero).unwrap().pool_max_bytes, None);
+    }
+
+    #[test]
+    fn prefix_cache_flag() {
+        let empty = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert!(!ServingConfig::from_args(&empty).unwrap().prefix_cache, "off by default");
+        let on = Args::parse(["--prefix-cache"].iter().map(|s| s.to_string())).unwrap();
+        assert!(ServingConfig::from_args(&on).unwrap().prefix_cache);
     }
 
     #[test]

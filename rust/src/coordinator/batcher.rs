@@ -19,15 +19,23 @@
 //! compressed cache (prefilling only the new text via the decode path) and
 //! detaches its cache back into the [`SessionStore`] when it finishes or
 //! is cancelled, so the next turn continues the Eq. 10 trajectory.
+//!
+//! Prefix reuse: fresh requests prefill through the engine's radix prefix
+//! cache (`kvpool::radix`) when one is enabled — the longest stored prompt
+//! prefix attaches CoW and only the suffix runs on the backend — and a
+//! completed request's compression-final cache is keyed back into the tree.
+//! Admission charges every in-flight request an RAII byte [`Reservation`]
+//! and reclaims memory in three tiers under a pool budget: prefix-cache
+//! snapshots first, detached sessions second, typed rejection last.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::compress::maybe_compress;
+use crate::config::CompressionConfig;
 use crate::engine::{Engine, SeqState, SlotState};
 use crate::tokenizer::EOS;
 use crate::util::argmax;
@@ -47,6 +55,43 @@ pub struct CoordStats {
     pub pool_rejected: AtomicU64,
     /// Detached sessions evicted to make room under the pool budget.
     pub sessions_shed: AtomicU64,
+    /// Prefix-cache snapshots evicted to make room under the pool budget
+    /// (the cheapest sheddable class — always drained before sessions).
+    pub prefix_shed: AtomicU64,
+}
+
+/// RAII share of the coordinator's in-flight byte reservations.  Admission
+/// charges every running request its worst-case pool footprint through one
+/// shared counter; dropping the reservation — on *any* exit path: `Done`,
+/// explicit cancel, handle-drop abort, engine error, even a pool rejection
+/// mid-admission — returns the bytes, so a leaked reservation can never
+/// permanently inflate the occupancy estimate and starve admission.
+struct Reservation {
+    bytes: usize,
+    total: Arc<AtomicUsize>,
+}
+
+impl Reservation {
+    /// Reserve additional bytes (a session resume adds its reattached
+    /// history so later admissions keep counting it while it runs).
+    fn add(&mut self, extra: usize) {
+        self.bytes += extra;
+        self.total.fetch_add(extra, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        self.total.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+/// What `reap_slot` needs to key a finished request's compression-final
+/// cache back into the radix prefix tree.
+struct PrefixInsert {
+    compression: CompressionConfig,
+    seed: u64,
+    prompt_ids: Vec<i32>,
 }
 
 pub struct Coordinator {
@@ -56,6 +101,8 @@ pub struct Coordinator {
     pub admission_interval: usize,
     sessions: SessionStore,
     stats: Arc<CoordStats>,
+    /// Sum of live [`Reservation`]s (in-flight worst-case bytes).
+    reserved: Arc<AtomicUsize>,
 }
 
 struct Pending {
@@ -82,8 +129,12 @@ struct Pending {
     /// estimate, plus any reattached history).  Admission counts these
     /// reservations — not the slot's current resident bytes, which lag the
     /// estimate — so concurrent slots cannot jointly oversubscribe the
-    /// budget.  Released implicitly when the slot's metadata is dropped.
-    reserved_bytes: usize,
+    /// budget.  RAII: dropping this metadata on any exit path releases it.
+    reservation: Option<Reservation>,
+    /// Set for fresh requests under a cacheable policy: reap keys the
+    /// finished cache back into the radix prefix tree under prompt ids +
+    /// appended generation.
+    prefix_insert: Option<PrefixInsert>,
 }
 
 impl Pending {
@@ -104,11 +155,16 @@ impl Coordinator {
     }
 
     pub fn with_config(engine: Engine, sessions: SessionConfig, stats: Arc<CoordStats>) -> Self {
+        let mut sessions = SessionStore::new(sessions);
+        // The store republishes the pool's sheddable-bytes gauge on every
+        // mutation from here on (take, put, byte-cap eviction, shedding).
+        sessions.bind_pool(Arc::clone(engine.pool()));
         Coordinator {
             engine,
             admission_interval: 8,
-            sessions: SessionStore::new(sessions),
+            sessions,
             stats,
+            reserved: Arc::new(AtomicUsize::new(0)),
         }
     }
 
@@ -183,7 +239,8 @@ impl Coordinator {
             started: Instant::now(),
             prev_digit: None,
             sent_tokens: 0,
-            reserved_bytes: 0,
+            reservation: None,
+            prefix_insert: None,
         };
         if pending.flagged() {
             // Cancelled while queued: never prefill.
@@ -194,9 +251,9 @@ impl Coordinator {
 
         let t0 = Instant::now();
         let mut scorer = self.engine.make_scorer(&req.compression, req.seed);
+        // take() republishes the sheddable gauge: the entry's bytes stop
+        // being sheddable the moment we hold it.
         let resumed = req.session.as_deref().and_then(|sid| self.sessions.take(sid));
-        // The taken entry's bytes are no longer sheddable while we hold it.
-        self.publish_sheddable();
         // (logits, cache, prefill-stage compression events)
         let prefill = match resumed {
             Some(entry) => {
@@ -219,7 +276,6 @@ impl Coordinator {
                         self.engine.tmax
                     );
                     self.sessions.put(sid, entry.cache, entry.pending, entry.turns);
-                    self.publish_sheddable();
                     pending.send(Event::Error {
                         id: pending.id,
                         error: ApiError::EngineFailure { message },
@@ -231,14 +287,14 @@ impl Coordinator {
                 // already resident, so budget only the new turn's rows —
                 // but reserve history + estimate so later admissions keep
                 // counting the history once it moves into the slot.
-                match self.ensure_pool_capacity(feed.len() + req.max_new, slots, meta) {
-                    Ok(reserved) => {
-                        pending.reserved_bytes = reserved + entry.cache.exact_bytes();
+                match self.ensure_pool_capacity(feed.len() + req.max_new, slots) {
+                    Ok(mut reservation) => {
+                        reservation.add(entry.cache.exact_bytes());
+                        pending.reservation = Some(reservation);
                     }
                     Err(detail) => {
                         let sid = req.session.as_deref().unwrap_or("");
                         self.sessions.put(sid, entry.cache, entry.pending, entry.turns);
-                        self.publish_sheddable();
                         pending.send(Event::Error {
                             id: pending.id,
                             error: ApiError::PoolExhausted {
@@ -259,8 +315,26 @@ impl Coordinator {
             None => {
                 let ids = self.engine.tokenizer.encode(&req.prompt, true);
                 pending.prompt_tokens = ids.len();
-                match self.ensure_pool_capacity(ids.len() + req.max_new, slots, meta) {
-                    Ok(reserved) => pending.reserved_bytes = reserved,
+                let max_prompt = self.engine.max_prompt_tokens();
+                if ids.len() > max_prompt {
+                    // A client-sized problem, not an engine failure: the
+                    // typed bad-params error reaches the wire as
+                    // {"code": "bad-params"}.
+                    pending.send(Event::Error {
+                        id: pending.id,
+                        error: ApiError::BadParams {
+                            message: format!(
+                                "prompt of {} tokens exceeds the largest prefill \
+                                 bucket ({max_prompt})",
+                                ids.len()
+                            ),
+                        },
+                    });
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                match self.ensure_pool_capacity(ids.len() + req.max_new, slots) {
+                    Ok(reservation) => pending.reservation = Some(reservation),
                     Err(detail) => {
                         pending.send(Event::Error {
                             id: pending.id,
@@ -273,11 +347,28 @@ impl Coordinator {
                         return;
                     }
                 }
-                self.engine.prefill(&ids).and_then(|(logits, mut cache)| {
-                    // prefill-stage recursive compression
-                    let events = maybe_compress(&mut cache, &req.compression, scorer.as_mut())?;
-                    Ok((logits, cache, events))
-                })
+                if self
+                    .engine
+                    .prefix_cache()
+                    .map(|p| p.cacheable(&req.compression))
+                    .unwrap_or(false)
+                {
+                    pending.prefix_insert = Some(PrefixInsert {
+                        compression: req.compression.clone(),
+                        seed: req.seed,
+                        prompt_ids: ids.clone(),
+                    });
+                }
+                // Prefill through the radix prefix cache: attach the
+                // longest stored prompt prefix CoW and run the backend
+                // only over the unmatched suffix (cold path when the tree
+                // is disabled or misses).
+                self.engine
+                    .prefill_cached(&ids, &req.compression, scorer.as_mut(), req.seed)
+                    .map(|outcome| {
+                        pending.reused_tokens = outcome.reused_tokens;
+                        (outcome.logits, outcome.cache, outcome.events)
+                    })
             }
         };
 
@@ -369,6 +460,19 @@ impl Coordinator {
             prefill_us: p.prefill_us,
             decode_us: p.started.elapsed().as_micros() as u64,
         };
+        // A completed request's compression-final cache goes back into the
+        // radix prefix tree keyed by its full appended token stream (the
+        // prompt plus every generated token decode actually consumed), so
+        // a later request extending this conversation-shaped prefix
+        // attaches it CoW.  Inserted before the terminal event so a client
+        // that saw `Done` can rely on the snapshot existing.
+        if let (Some(pi), Some(prefix)) = (&p.prefix_insert, self.engine.prefix_cache()) {
+            if !seq.generated.is_empty() {
+                let mut key = pi.prompt_ids.clone();
+                key.extend_from_slice(&seq.generated[..seq.generated.len() - 1]);
+                prefix.insert(&pi.compression, pi.seed, &key, &seq.cache);
+            }
+        }
         p.send(Event::Done { id: p.id, usage, timings });
         self.stats.completed.fetch_add(1, Ordering::Relaxed);
         self.stash_session(&p, seq);
@@ -396,64 +500,81 @@ impl Coordinator {
 
     fn stash_session(&mut self, p: &Pending, seq: SeqState) {
         if let Some(sid) = &p.session {
+            // put() republishes the pool's sheddable gauge itself.
             self.sessions.put(sid, seq.cache, seq.next_token, p.turns + 1);
-            self.publish_sheddable();
         }
     }
 
-    /// Keep the pool's sheddable-bytes signal (read by the router's cheap
-    /// pre-queue pressure check) in step with the session store.
-    fn publish_sheddable(&self) {
-        self.engine.pool().set_sheddable(self.sessions.total_bytes());
+    /// Record `bytes` against the shared in-flight total and hand back the
+    /// RAII share that returns them on drop.
+    fn reserve(&self, bytes: usize) -> Reservation {
+        self.reserved.fetch_add(bytes, Ordering::Relaxed);
+        Reservation { bytes, total: Arc::clone(&self.reserved) }
     }
 
     /// Memory-pressure admission for a byte-budgeted pool: estimate the
     /// request's worst-case new rows (prompt + generation budget, before
-    /// compression), shed least-recently-used detached sessions until the
-    /// estimate fits, and return the byte reservation the caller records
-    /// on its [`Pending`].
+    /// compression), reclaim sheddable bytes until the estimate fits, and
+    /// return the RAII byte reservation the caller stores on its
+    /// [`Pending`] (released on every exit path by drop).
+    ///
+    /// Shedding follows the three-tier order: **prefix-cache snapshots**
+    /// first (pure optimization — losing one costs a future prefill, never
+    /// data), then **detached sessions** (losing one costs a stored
+    /// conversation), then the typed rejection.
     ///
     /// Occupancy is judged as `resident - in-flight materialized +
     /// in-flight reservations`: running slots are charged their full
     /// worst-case estimate rather than the rows they happen to hold right
     /// now, so concurrently admitted requests can never jointly grow past
     /// the budget.  A request that could not fit even after shedding
-    /// every session is rejected *without* shedding anything — an
-    /// impossible request must not destroy stored conversations.
-    /// The typed rejection detail is reported when even an
-    /// empty store leaves too little room.  Unbudgeted pools admit
-    /// everything (the default — zero overhead on that path).
+    /// everything sheddable is rejected *without* shedding anything.
+    /// That guard is best-effort, not exact: sheddable gauges count
+    /// CoW-shared frozen blocks once per referencing cache (the session
+    /// store's long-standing convention), so when snapshots overlap live
+    /// slots or each other the guard can overestimate what shedding frees
+    /// and a borderline request may still drain the tiers before its
+    /// rejection — bounded waste, never an unsafe admission.  Unbudgeted
+    /// pools admit everything (the default — zero overhead on that path).
     fn ensure_pool_capacity(
         &mut self,
         new_rows: usize,
         slots: &[SlotState],
-        meta: &[Option<Pending>],
-    ) -> Result<usize, String> {
+    ) -> Result<Reservation, String> {
         let pool = self.engine.pool().clone();
-        let Some(budget) = pool.budget() else { return Ok(0) };
+        let Some(budget) = pool.budget() else { return Ok(self.reserve(0)) };
         let (nl, nh, dh) = {
             let d = &self.engine.dims;
             (d.n_layers, d.n_kv_heads, d.d_head)
         };
         let needed = new_rows * crate::kvpool::row_bytes(nl, nh, dh);
-        let reserved: usize = meta.iter().flatten().map(|p| p.reserved_bytes).sum();
         let materialized: usize =
             slots.iter().filter_map(|s| s.seq()).map(|q| q.cache.exact_bytes()).sum();
         loop {
             let resident = pool.resident_bytes();
+            let reserved = self.reserved.load(Ordering::Relaxed);
             let effective = resident.saturating_sub(materialized) + reserved;
             if effective + needed <= budget {
-                self.publish_sheddable();
-                return Ok(needed);
+                return Ok(self.reserve(needed));
             }
-            let sheddable = self.sessions.total_bytes();
+            let prefix_bytes =
+                self.engine.prefix_cache().map(|p| p.total_bytes()).unwrap_or(0);
+            let sheddable = prefix_bytes + self.sessions.total_bytes();
             if effective.saturating_sub(sheddable) + needed > budget {
-                self.publish_sheddable();
                 return Err(format!(
                     "{needed} bytes needed for {new_rows} rows, {effective} effectively \
                      occupied ({sheddable} sheddable) under a {budget}-byte budget"
                 ));
             }
+            // Tier 1: prefix-cache snapshots are the cheapest reclaim.
+            if prefix_bytes > 0 {
+                let shed = self.engine.prefix_cache().and_then(|p| p.shed_lru());
+                if shed.is_some() {
+                    self.stats.prefix_shed.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            }
+            // Tier 2: detached sessions.
             match self.sessions.shed_lru() {
                 Some(_) => {
                     self.stats.sessions_shed.fetch_add(1, Ordering::Relaxed);
@@ -461,7 +582,6 @@ impl Coordinator {
                 // Unreachable while total_bytes() > 0, but never loop on a
                 // store that cannot yield bytes.
                 None => {
-                    self.publish_sheddable();
                     return Err(format!(
                         "{needed} bytes needed for {new_rows} rows with nothing left \
                          to shed under a {budget}-byte budget"

@@ -121,7 +121,10 @@ pub struct Usage {
     /// reported via `reused_tokens` instead.
     pub prompt_tokens: usize,
     pub new_tokens: usize,
-    /// History tokens reattached from the session store (0 when fresh).
+    /// Tokens served from already-compressed KV instead of the backend:
+    /// session history reattached from the session store, or (on a fresh
+    /// request) a prompt prefix attached CoW from the radix prefix cache.
+    /// 0 when nothing was reused.
     pub reused_tokens: usize,
     /// Final per-layer cache lengths (the Eq. 10 trajectory evidence).
     pub cache_lens: Vec<usize>,

@@ -26,7 +26,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::backend::EngineSpec;
-use crate::kvpool::BlockPool;
+use crate::kvpool::{BlockPool, PrefixCache, PrefixConfig};
 
 use super::{
     ApiError, CoordStats, Coordinator, Event, Request, Response, SessionConfig, WorkItem,
@@ -40,11 +40,17 @@ pub struct RouterConfig {
     pub queue_depth: usize,
     pub sessions: SessionConfig,
     /// Byte budget for each model's KV block pool (`None` = unbudgeted).
-    /// Under a budget the coordinator sheds LRU sessions before admitting
-    /// work and rejects with [`ApiError::PoolExhausted`] when even an
-    /// empty store leaves no room; the router additionally refuses to
-    /// enqueue while the pool is under hard pressure.
+    /// Under a budget the coordinator reclaims sheddable bytes before
+    /// admitting work — prefix-cache snapshots first, then LRU sessions —
+    /// and rejects with [`ApiError::PoolExhausted`] when even that leaves
+    /// no room; the router additionally refuses to enqueue while the pool
+    /// is under hard pressure.
     pub pool_max_bytes: Option<usize>,
+    /// Radix prefix cache over each model's block pool (`None` = off;
+    /// `--prefix-cache` enables the defaults): identical prompt prefixes
+    /// are shared CoW across sequences, so a warm prefix costs zero deep
+    /// copies and only the unmatched suffix runs on the backend.
+    pub prefix_cache: Option<PrefixConfig>,
 }
 
 impl Default for RouterConfig {
@@ -53,6 +59,7 @@ impl Default for RouterConfig {
             queue_depth: 256,
             sessions: SessionConfig::default(),
             pool_max_bytes: None,
+            prefix_cache: None,
         }
     }
 }
@@ -88,6 +95,7 @@ pub struct Router {
     senders: HashMap<String, SyncSender<WorkItem>>,
     stats: HashMap<String, Arc<CoordStats>>,
     pools: HashMap<String, Arc<BlockPool>>,
+    prefixes: HashMap<String, Arc<PrefixCache>>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -105,6 +113,7 @@ impl Router {
         let mut senders = HashMap::new();
         let mut stats = HashMap::new();
         let mut pools = HashMap::new();
+        let mut prefixes = HashMap::new();
         let mut threads = Vec::new();
         for variant in variants {
             let (tx, rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
@@ -113,12 +122,24 @@ impl Router {
             stats.insert(variant.clone(), coord_stats.clone());
             let pool = BlockPool::new(BlockPool::DEFAULT_ROWS_PER_BLOCK, cfg.pool_max_bytes);
             pools.insert(variant.clone(), pool.clone());
+            // Constructed here (not inside the engine) so gauges stay
+            // readable from outside the coordinator thread.
+            let prefix = cfg
+                .prefix_cache
+                .clone()
+                .map(|pc| PrefixCache::new(pc, pool.clone()));
+            if let Some(pc) = &prefix {
+                prefixes.insert(variant.clone(), Arc::clone(pc));
+            }
             let spec = spec.clone();
             let name = variant.clone();
             let sessions = cfg.sessions.clone();
             threads.push(std::thread::spawn(move || match spec.build(&name) {
                 Ok(mut engine) => {
                     engine.set_pool(pool);
+                    if let Some(pc) = prefix {
+                        engine.set_prefix_cache(pc);
+                    }
                     let mut coord = Coordinator::with_config(engine, sessions, coord_stats);
                     if let Err(e) = coord.run(rx) {
                         eprintln!("coordinator {name} died: {e:#}");
@@ -138,7 +159,7 @@ impl Router {
                 }
             }));
         }
-        Router { senders, stats, pools, threads }
+        Router { senders, stats, pools, prefixes, threads }
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -155,6 +176,12 @@ impl Router {
         self.pools.get(model).cloned()
     }
 
+    /// This model's radix prefix cache (hit/miss/shared-byte gauges), when
+    /// the router was started with one.
+    pub fn prefix_cache(&self, model: &str) -> Option<Arc<PrefixCache>> {
+        self.prefixes.get(model).cloned()
+    }
+
     /// Submit a request; returns the live event stream.
     pub fn submit(&self, model: &str, request: Request) -> Result<GenHandle, ApiError> {
         let tx = self.senders.get(model).ok_or_else(|| ApiError::UnknownModel {
@@ -163,7 +190,8 @@ impl Router {
         })?;
         // Memory-pressure admission, before the bounded queue accepts the
         // work: refuse while the pool would stay over budget even if every
-        // detached session were shed (the coordinator handles the precise
+        // sheddable byte — prefix-cache snapshots first, then detached
+        // sessions — were reclaimed (the coordinator handles the precise
         // per-request estimate and the actual shedding).
         if let Some(pool) = self.pools.get(model) {
             if pool.hard_pressure() {
@@ -174,7 +202,7 @@ impl Router {
                     model: model.to_string(),
                     detail: format!(
                         "{} bytes resident exceed the {}-byte budget even if every \
-                         detached session were shed",
+                         prefix snapshot and detached session were shed",
                         pool.resident_bytes(),
                         pool.budget().unwrap_or(0)
                     ),

@@ -21,9 +21,11 @@
 //! [`SessionStore::shed_lru`] explicitly under pool pressure.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::kvcache::KvCache;
+use crate::kvpool::BlockPool;
 
 /// Store bounds.  `capacity == 0` disables session persistence entirely
 /// (requests still run; their caches are simply dropped at the end).
@@ -58,11 +60,29 @@ pub struct SessionEntry {
 pub struct SessionStore {
     cfg: SessionConfig,
     map: HashMap<String, SessionEntry>,
+    /// When bound, the store publishes its resident bytes to this pool's
+    /// sheddable-bytes gauge after *every* mutation — take, put (including
+    /// its byte-cap and TTL evictions), and explicit shedding — so the
+    /// router's `hard_pressure` pre-queue check never judges admission on
+    /// stale sheddable bytes.
+    pool: Option<Arc<BlockPool>>,
 }
 
 impl SessionStore {
     pub fn new(cfg: SessionConfig) -> SessionStore {
-        SessionStore { cfg, map: HashMap::new() }
+        SessionStore { cfg, map: HashMap::new(), pool: None }
+    }
+
+    /// Bind the pool whose sheddable gauge mirrors this store.
+    pub fn bind_pool(&mut self, pool: Arc<BlockPool>) {
+        self.pool = Some(pool);
+        self.publish();
+    }
+
+    fn publish(&self) {
+        if let Some(pool) = &self.pool {
+            pool.set_sheddable(self.total_bytes());
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -88,7 +108,9 @@ impl SessionStore {
     /// caller owns the cache until it `put`s an updated one back.
     pub fn take(&mut self, id: &str) -> Option<SessionEntry> {
         self.purge_expired();
-        self.map.remove(id)
+        let entry = self.map.remove(id);
+        self.publish();
+        entry
     }
 
     /// Evict the least-recently-used session (memory-pressure shedding).
@@ -96,7 +118,10 @@ impl SessionStore {
     pub fn shed_lru(&mut self) -> Option<(String, usize)> {
         let key = self.lru_key()?;
         let entry = self.map.remove(&key)?;
-        Some((key, entry.cache.exact_bytes()))
+        let bytes = entry.cache.exact_bytes();
+        drop(entry);
+        self.publish();
+        Some((key, bytes))
     }
 
     /// Attach (or re-attach) a finished turn's cache under `id`.  Enforces
@@ -131,6 +156,7 @@ impl SessionStore {
                 }
             }
         }
+        self.publish();
     }
 
     fn lru_key(&self) -> Option<String> {
@@ -284,6 +310,29 @@ mod tests {
         assert!(st.take("b").is_none());
         assert!(st.take("c").is_none(), "both older entries shed to fit 5 rows");
         assert!(st.take("d").is_some());
+    }
+
+    #[test]
+    fn bound_pool_gauge_tracks_every_mutation() {
+        let pool = BlockPool::unbounded(4);
+        // byte cap of 6 rows so put-time eviction fires too
+        let mut st = byte_store(16, 6 * row_cost());
+        st.bind_pool(pool.clone());
+        assert_eq!(pool.sheddable_bytes(), 0);
+        st.put("a", cache_with_rows(4), 0, 1);
+        assert_eq!(pool.sheddable_bytes(), 4 * row_cost(), "put publishes");
+        std::thread::sleep(Duration::from_millis(2));
+        st.put("b", cache_with_rows(4), 0, 1);
+        assert_eq!(
+            pool.sheddable_bytes(),
+            4 * row_cost(),
+            "byte-cap eviction inside put republishes (a was evicted)"
+        );
+        let e = st.take("b").unwrap();
+        assert_eq!(pool.sheddable_bytes(), 0, "take publishes the detached bytes");
+        st.put("b", e.cache, e.pending, e.turns);
+        st.shed_lru().unwrap();
+        assert_eq!(pool.sheddable_bytes(), 0, "shed_lru republishes immediately");
     }
 
     #[test]

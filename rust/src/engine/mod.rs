@@ -24,10 +24,11 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend::{DecodeBatch, ExecBackend};
+use crate::compress::driver::CompressionEvent;
 use crate::compress::{maybe_compress, policy::make_policy, Scorer};
 use crate::config::{CompressionConfig, ModelDims};
 use crate::kvcache::KvCache;
-use crate::kvpool::BlockPool;
+use crate::kvpool::{BlockPool, PrefixCache, PrefixConfig};
 use crate::tokenizer::Tokenizer;
 use crate::util::argmax as argmax_slice;
 
@@ -37,6 +38,9 @@ pub use slot::{SeqState, SlotState};
 #[derive(Debug, Clone)]
 pub struct GenOutput {
     pub prompt_tokens: usize,
+    /// Prompt tokens served from the engine's prefix cache (0 when the
+    /// cache is disabled or missed).
+    pub reused_tokens: usize,
     pub tokens: Vec<i32>,
     pub text: String,
     /// Final per-layer cache lengths (compression evidence).
@@ -45,6 +49,19 @@ pub struct GenOutput {
     pub compression_events: usize,
     pub prefill_us: u64,
     pub decode_us: u64,
+}
+
+/// Result of [`Engine::prefill_cached`]: prefill plus the prefill-stage
+/// recursive compression, with prefix-cache attribution.
+pub struct PrefillOutcome {
+    /// Next-token logits of the last prompt token.
+    pub logits: Vec<f32>,
+    pub cache: KvCache,
+    /// Compression events fired during the prefill stage.
+    pub events: Vec<CompressionEvent>,
+    /// Prompt tokens attached from a radix prefix-cache snapshot instead
+    /// of being run through the backend (0 on a cold prefill).
+    pub reused_tokens: usize,
 }
 
 pub struct Engine {
@@ -56,6 +73,8 @@ pub struct Engine {
     /// The KV block pool every sequence this engine prefills draws from —
     /// one pool per engine, shared with the coordinator's admission path.
     pool: Arc<BlockPool>,
+    /// Radix prefix cache over the pool's frozen blocks (None = disabled).
+    prefix: Option<Arc<PrefixCache>>,
 }
 
 impl Engine {
@@ -78,6 +97,7 @@ impl Engine {
             variant: variant.to_string(),
             tmax,
             pool: BlockPool::unbounded(BlockPool::DEFAULT_ROWS_PER_BLOCK),
+            prefix: None,
         })
     }
 
@@ -91,6 +111,26 @@ impl Engine {
     /// The engine's KV block pool (admission checks, stats, benches).
     pub fn pool(&self) -> &Arc<BlockPool> {
         &self.pool
+    }
+
+    /// Attach an already-constructed radix prefix cache (the router builds
+    /// one per model so it can read gauges from outside the coordinator
+    /// thread).  Must be bound to this engine's pool.
+    pub fn set_prefix_cache(&mut self, prefix: Arc<PrefixCache>) {
+        self.prefix = Some(prefix);
+    }
+
+    /// Construct and attach a prefix cache on this engine's pool
+    /// (single-engine callers: benches, tests, `Engine::generate`).
+    pub fn enable_prefix_cache(&mut self, cfg: PrefixConfig) -> Arc<PrefixCache> {
+        let prefix = PrefixCache::new(cfg, Arc::clone(&self.pool));
+        self.prefix = Some(Arc::clone(&prefix));
+        prefix
+    }
+
+    /// The engine's radix prefix cache, when one is enabled.
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.prefix.as_ref()
     }
 
     /// Hermetic default: the pure-Rust synthetic reference backend.
@@ -142,6 +182,13 @@ impl Engine {
             .ok_or_else(|| anyhow!("prompt of {n} tokens exceeds largest prefill bucket"))
     }
 
+    /// Largest prompt any prefill bucket can hold.  The serving layer
+    /// checks this *before* admission so an oversized prompt is a typed
+    /// `bad-params` client error, never a stringly engine failure.
+    pub fn max_prompt_tokens(&self) -> usize {
+        self.backend.prefill_buckets().iter().copied().max().unwrap_or(0)
+    }
+
     /// Build the per-sequence scorer for a compression config: the
     /// backend's accelerated scorer when it offers one, else the pure-Rust
     /// policy implementation.
@@ -165,6 +212,87 @@ impl Engine {
         );
         cache.ingest_prefill(&out.k, &out.v, &out.attn_sums, bucket, ids.len())?;
         Ok((out.logits, cache))
+    }
+
+    /// Prefill plus the prefill-stage recursive compression, through the
+    /// radix prefix cache when one is enabled:
+    ///
+    /// 1. **walk** — attach the deepest snapshot whose key is a proper
+    ///    prefix of `ids` (CoW: zero deep copies of the shared prefix) and
+    ///    run only the unmatched suffix through the b=1 decode path
+    ///    ([`Engine::prefill_onto`] — the same trajectory a cold prefill
+    ///    would take, by driver order-insensitivity);
+    /// 2. **miss** — run the bucketed backend prefill, but ingest the
+    ///    output in `stride`-token segments, compressing between segments
+    ///    and inserting a snapshot at each boundary so future requests can
+    ///    attach at *shared-prefix* depths;
+    /// 3. either way, the compression-final full-prompt state is inserted
+    ///    back into the tree.
+    ///
+    /// With the cache disabled (or an attention-fed policy, which is
+    /// path-dependent and uncacheable) this is exactly the classic
+    /// prefill-then-compress path, byte for byte.
+    pub fn prefill_cached(
+        &self,
+        ids: &[i32],
+        cfg: &CompressionConfig,
+        scorer: &mut dyn Scorer,
+        seed: u64,
+    ) -> Result<PrefillOutcome> {
+        let prefix = match self.prefix.as_ref().filter(|p| p.cacheable(cfg)) {
+            Some(p) => p,
+            None => {
+                let (logits, mut cache) = self.prefill(ids)?;
+                let events = maybe_compress(&mut cache, cfg, scorer)?;
+                return Ok(PrefillOutcome { logits, cache, events, reused_tokens: 0 });
+            }
+        };
+
+        // Walk: attach the longest stored proper prefix and decode-prefill
+        // only the suffix.  The capacity guard runs *before* the lookup —
+        // a snapshot's `appended` equals its key depth, so the attached
+        // total is always `ids.len()` regardless of the matched depth —
+        // which keeps the tree's hit gauges and LRU recency in step with
+        // attaches that actually happen.  A backend error mid-suffix still
+        // falls back to a cold prefill.
+        if self.backend.decode_buckets().contains(&1) && ids.len() + 1 < self.tmax {
+            if let Some((mut cache, depth)) = prefix.lookup(cfg, seed, ids) {
+                debug_assert_eq!(cache.appended, depth, "snapshot depth != key length");
+                if let Ok((logits, events)) =
+                    self.prefill_onto(&mut cache, cfg, scorer, &ids[depth..])
+                {
+                    prefix.insert(cfg, seed, ids, &cache);
+                    return Ok(PrefillOutcome { logits, cache, events, reused_tokens: depth });
+                }
+            }
+        }
+
+        // Miss: bucketed prefill with segmented ingest + snapshots.
+        let bucket = self.pick_prefill_bucket(ids.len())?;
+        let mut tokens = vec![0i32; bucket];
+        tokens[..ids.len()].copy_from_slice(ids);
+        let out = self.backend.prefill(&tokens, ids.len())?;
+        let mut cache = KvCache::new_in(
+            Arc::clone(&self.pool),
+            self.dims.n_layers,
+            self.dims.n_kv_heads,
+            self.dims.d_head,
+        );
+        let mut events = Vec::new();
+        let stride = prefix.config().stride.max(1);
+        loop {
+            let from = cache.appended;
+            let to = (from + stride).min(ids.len());
+            cache.ingest_prefill_segment(&out.k, &out.v, &out.attn_sums, bucket, from, to)?;
+            events.extend(maybe_compress(&mut cache, cfg, scorer)?);
+            if to < ids.len() {
+                prefix.insert(cfg, seed, &ids[..to], &cache);
+            } else {
+                break;
+            }
+        }
+        prefix.insert(cfg, seed, ids, &cache);
+        Ok(PrefillOutcome { logits: out.logits, cache, events, reused_tokens: 0 })
     }
 
     /// One batched decode step over `slots` (entries may be idle).
@@ -327,17 +455,18 @@ impl Engine {
         seed: u64,
     ) -> Result<GenOutput> {
         let t0 = std::time::Instant::now();
-        let (logits, cache) = self.prefill(ids)?;
+        let mut scorer = self.make_scorer(cfg, seed);
+        // prefill + prefill-stage recursive compression (through the radix
+        // prefix cache when the engine has one enabled)
+        let outcome = self.prefill_cached(ids, cfg, scorer.as_mut(), seed)?;
         let prefill_us = t0.elapsed().as_micros() as u64;
 
-        let scorer = self.make_scorer(cfg, seed);
-        let first = argmax_slice(&logits) as i32;
-        let mut slot = SlotState::occupied(cache, cfg.clone(), scorer, first, max_new);
-        // prefill-stage recursive compression
+        let first = argmax_slice(&outcome.logits) as i32;
+        let reused_tokens = outcome.reused_tokens;
+        let mut slot = SlotState::occupied(outcome.cache, cfg.clone(), scorer, first, max_new);
         {
             let seq = slot.active_mut().unwrap();
-            let events = maybe_compress(&mut seq.cache, cfg, seq.scorer.as_mut())?;
-            seq.compression_events += events.len();
+            seq.compression_events += outcome.events.len();
             seq.push_generated(first, self.tmax);
         }
 
@@ -351,6 +480,7 @@ impl Engine {
         let text = self.tokenizer.decode(&seq.generated_without_eos());
         Ok(GenOutput {
             prompt_tokens: ids.len(),
+            reused_tokens,
             tokens: seq.generated.clone(),
             text,
             cache_lens: seq.cache.lens(),

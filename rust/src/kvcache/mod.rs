@@ -420,6 +420,24 @@ impl KvCache {
         t_bucket: usize,
         true_len: usize,
     ) -> Result<()> {
+        self.ingest_prefill_segment(k, v, attn_sums, t_bucket, 0, true_len)
+    }
+
+    /// Ingest rows `[from, to)` of a prefill output (same layouts as
+    /// [`KvCache::ingest_prefill`]).  `from` must equal the rows already
+    /// ingested from this output, so a segmented ingest — interleaving
+    /// compression (and prefix-cache snapshots) between segments — appends
+    /// each row at the same absolute position a whole-output ingest would
+    /// have; the driver's order-insensitivity makes the final states equal.
+    pub fn ingest_prefill_segment(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        attn_sums: &[f32],
+        t_bucket: usize,
+        from: usize,
+        to: usize,
+    ) -> Result<()> {
         let d = self.d_head;
         let nh = self.n_heads;
         if k.len() != self.n_layers * nh * t_bucket * d {
@@ -428,22 +446,23 @@ impl KvCache {
                 k.len()
             );
         }
-        if true_len > t_bucket {
-            bail!("true_len {true_len} > bucket {t_bucket}");
+        if from > to || to > t_bucket {
+            bail!("ingest_prefill: bad row segment [{from}, {to}) for bucket {t_bucket}");
         }
-        let base_pos = self.appended as i32;
+        let rows = to - from;
+        let base_pos = self.appended as i32 - from as i32;
         for (li, layer) in self.layers.iter_mut().enumerate() {
             for (hi, head) in layer.heads.iter_mut().enumerate() {
                 let base = (li * nh + hi) * t_bucket;
-                let row0 = base * d;
-                head.k.extend_from_slice(&k[row0..row0 + true_len * d]);
-                head.v.extend_from_slice(&v[row0..row0 + true_len * d]);
-                head.pos.extend((0..true_len as i32).map(|p| base_pos + p));
-                head.attn.extend_from_slice(&attn_sums[base..base + true_len]);
+                let row0 = (base + from) * d;
+                head.k.extend_from_slice(&k[row0..row0 + rows * d]);
+                head.v.extend_from_slice(&v[row0..row0 + rows * d]);
+                head.pos.extend((from as i32..to as i32).map(|p| base_pos + p));
+                head.attn.extend_from_slice(&attn_sums[base + from..base + to]);
             }
         }
-        self.appended += true_len;
-        self.grow_gauge(true_len);
+        self.appended += rows;
+        self.grow_gauge(rows);
         Ok(())
     }
 
@@ -713,6 +732,36 @@ mod tests {
         let off = (1 * nh + 1) * t_bucket * d;
         assert_eq!(&c.head_k(1, 1)[..d], &k[off..off + d]);
         assert_eq!(c.head_attn(1, 1), attn[(1 * nh + 1) * t_bucket..][..4]);
+    }
+
+    #[test]
+    fn segmented_ingest_matches_whole_ingest() {
+        let (nl, nh, d) = (2, 2, 3);
+        let t_bucket = 10;
+        let true_len = 9;
+        let mut rng = Rng::seed_from(17);
+        let k: Vec<f32> = (0..nl * nh * t_bucket * d).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..nl * nh * t_bucket * d).map(|_| rng.normal()).collect();
+        let attn: Vec<f32> = (0..nl * nh * t_bucket).map(|_| rng.normal()).collect();
+        let mut whole = KvCache::new(nl, nh, d);
+        whole.ingest_prefill(&k, &v, &attn, t_bucket, true_len).unwrap();
+        let mut seg = KvCache::new(nl, nh, d);
+        for w in [(0usize, 4usize), (4, 7), (7, 9)] {
+            seg.ingest_prefill_segment(&k, &v, &attn, t_bucket, w.0, w.1).unwrap();
+        }
+        assert_eq!(seg.appended, whole.appended);
+        for l in 0..nl {
+            for h in 0..nh {
+                assert_eq!(seg.head_k(l, h), whole.head_k(l, h), "layer {l} head {h}");
+                assert_eq!(seg.head_v(l, h), whole.head_v(l, h));
+                assert_eq!(seg.positions(l, h), whole.positions(l, h));
+                assert_eq!(seg.head_attn(l, h), whole.head_attn(l, h));
+            }
+        }
+        assert_eq!(seg.exact_bytes(), whole.exact_bytes());
+        // bad segments are typed errors
+        assert!(seg.ingest_prefill_segment(&k, &v, &attn, t_bucket, 5, 3).is_err());
+        assert!(seg.ingest_prefill_segment(&k, &v, &attn, t_bucket, 9, 11).is_err());
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! stay loose): decode never fails mid-request on a pool limit.
 
 pub mod block;
+pub mod radix;
 pub mod stats;
 
 use std::collections::HashMap;
@@ -38,6 +39,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 pub use block::{block_bytes, Block, BlockBufs};
+pub use radix::{PrefixCache, PrefixConfig, PrefixStats};
 pub use stats::{PoolExhausted, PoolStats};
 
 /// Payload bytes of one cache row across every `(layer, head)`: K + V at
@@ -77,9 +79,12 @@ pub struct BlockPool {
     rows_per_block: usize,
     max_bytes: Option<usize>,
     /// Bytes the coordinator could reclaim by shedding every detached
-    /// session (published by the session store's owner; used by the
-    /// router's cheap pre-queue pressure check).
+    /// session (published by the session store on every mutation; used by
+    /// the router's cheap pre-queue pressure check).
     sheddable: AtomicUsize,
+    /// Bytes reclaimable by shedding every prefix-cache snapshot (the
+    /// cheapest sheddable class; published by [`radix::PrefixCache`]).
+    prefix_sheddable: AtomicUsize,
     inner: Mutex<PoolInner>,
 }
 
@@ -94,6 +99,7 @@ impl BlockPool {
             rows_per_block,
             max_bytes,
             sheddable: AtomicUsize::new(0),
+            prefix_sheddable: AtomicUsize::new(0),
             inner: Mutex::new(PoolInner::default()),
         })
     }
@@ -208,17 +214,26 @@ impl BlockPool {
     }
 
     /// Publish how many resident bytes belong to detached sessions (the
-    /// coordinator owns that number; the router only reads it).
+    /// session store owns that number; the router only reads it).
     pub fn set_sheddable(&self, bytes: usize) {
         self.sheddable.store(bytes, Ordering::Relaxed);
     }
 
+    /// Publish how many resident bytes belong to prefix-cache snapshots
+    /// (owned by [`radix::PrefixCache`]; shed before sessions).
+    pub fn set_prefix_sheddable(&self, bytes: usize) {
+        self.prefix_sheddable.store(bytes, Ordering::Relaxed);
+    }
+
+    /// Total reclaimable bytes across both sheddable classes: prefix-cache
+    /// snapshots (shed first) plus detached sessions.
     pub fn sheddable_bytes(&self) -> usize {
-        self.sheddable.load(Ordering::Relaxed)
+        self.sheddable.load(Ordering::Relaxed) + self.prefix_sheddable.load(Ordering::Relaxed)
     }
 
     /// True when a budget is set and the pool would stay at or over it
-    /// even if every detached session were shed — the router's cheap
+    /// even if every sheddable byte — prefix-cache snapshots and detached
+    /// sessions, in that order — were reclaimed: the router's cheap
     /// reject-before-enqueue signal.  Unbudgeted pools are never under
     /// pressure.
     pub fn hard_pressure(&self) -> bool {
@@ -355,9 +370,15 @@ mod tests {
         let (k, v, pos, attn) = filled(2, d);
         let held = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap();
         let err = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap_err();
-        assert_eq!(err, PoolExhausted { needed: bytes, resident: bytes, budget: bytes + bytes / 2 });
+        assert_eq!(
+            err,
+            PoolExhausted { needed: bytes, resident: bytes, budget: bytes + bytes / 2 }
+        );
         drop(held);
-        assert!(BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).is_ok(), "frees make room again");
+        assert!(
+            BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).is_ok(),
+            "frees make room again"
+        );
     }
 
     #[test]
@@ -402,6 +423,16 @@ mod tests {
         assert!(pool.hard_pressure(), "at budget with nothing sheddable");
         pool.set_sheddable(600);
         assert!(!pool.hard_pressure(), "shedding could relieve the pressure");
+        // grow well past the budget: one class alone no longer covers the
+        // overrun, but the two sheddable classes together do
+        pool.adjust_loose(1000, 1800);
+        pool.set_sheddable(300);
+        assert!(pool.hard_pressure(), "sessions alone no longer cover the overrun");
+        pool.set_prefix_sheddable(600);
+        assert_eq!(pool.sheddable_bytes(), 900);
+        assert!(!pool.hard_pressure(), "prefix snapshots + sessions relieve the pressure");
+        pool.set_prefix_sheddable(0);
+        pool.set_sheddable(0);
         let unbounded = BlockPool::unbounded(2);
         unbounded.adjust_loose(0, 1 << 30);
         assert!(!unbounded.hard_pressure(), "no budget, no pressure");

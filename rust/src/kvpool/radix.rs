@@ -1,0 +1,618 @@
+//! Radix-tree prefix cache: share identical prompt-prefix KV across
+//! *sequences*, not just across turns of one session.
+//!
+//! LagKV's compression is attention-free and deterministic in the token
+//! prefix (PAPER.md Eqs. 8–10): two requests that share a prompt prefix
+//! produce bit-identical compressed KV for it, so the frozen pool blocks a
+//! finished (or mid-prefill) cache holds are shareable by refcount.  The
+//! tree is keyed on token ids; every stored node carries a *snapshot* — a
+//! [`KvCache`] clone whose frozen prefix is shared CoW with whoever
+//! produced it — that is exactly the compression state after its key's
+//! tokens.  A lookup walks the tree and returns a clone of the deepest
+//! snapshot whose key is a **proper** prefix of the query (at least one
+//! suffix token must remain: the engine still needs last-token logits),
+//! so the engine runs the backend only over the unmatched suffix.
+//!
+//! Three invariants make this sound:
+//!
+//! * **determinism** — every cacheable scorer is a pure function of the
+//!   window contents (the Random policy is re-seeded per `(layer, head,
+//!   start position)`), so replaying a suffix on an attached snapshot
+//!   lands in the same state a cold prefill would;
+//! * **monotone freezing** — `compact_layer`'s window start only advances,
+//!   so a shared frozen prefix is only ever *extended*, never rewritten;
+//!   blocks are immutable from birth (see [`crate::kvpool`]);
+//! * **attention-freeness** — H2O's accumulated-attention statistic is
+//!   path-dependent (prefill column sums vs per-step decode rows), so
+//!   `needs_attention` policies bypass the tree entirely.  This is the
+//!   paper's integration argument made concrete: attention-free scoring
+//!   is what lets compression compose with prefix caching at all.
+//!
+//! Entries are the *cheapest* sheddable class: the coordinator evicts tree
+//! leaves before detached sessions under pool pressure (three-tier order:
+//! prefix entries, then sessions, then typed rejection), and the tree
+//! publishes its resident bytes to the pool's prefix-sheddable gauge so
+//! the router's `hard_pressure` pre-queue check never rejects on bytes a
+//! shed could reclaim.
+//!
+//! Byte accounting note: an entry's `bytes` is its cache's
+//! [`KvCache::exact_bytes`], which counts shared frozen blocks once *per
+//! referencing cache* — the same convention the session store uses.  The
+//! pool's `resident_blocks` stays the deduplicated truth.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{CompressionConfig, PolicyKind, ScorerBackend};
+use crate::kvcache::KvCache;
+
+use super::BlockPool;
+
+/// Prefix-cache knobs (`--prefix-cache` enables the defaults).
+#[derive(Debug, Clone)]
+pub struct PrefixConfig {
+    /// Max stored snapshots (LRU eviction beyond; 0 disables the cache).
+    pub max_entries: usize,
+    /// Resident-byte cap across entries (0 = uncapped; pool pressure still
+    /// sheds entries LRU-first regardless).
+    pub max_bytes: usize,
+    /// Snapshot cadence during cold prefill, in tokens: a snapshot is
+    /// inserted every `stride` prompt tokens so later requests can attach
+    /// at *shared-prefix* depths, not only at whole stored prompts.
+    pub stride: usize,
+}
+
+impl Default for PrefixConfig {
+    fn default() -> Self {
+        PrefixConfig { max_entries: 128, max_bytes: 0, stride: 64 }
+    }
+}
+
+/// Point-in-time prefix-cache gauges (see `metrics::PoolGauges`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefixStats {
+    /// Stored snapshots right now.
+    pub entries: usize,
+    /// Sum of entry byte costs (per-cache accounting; see module docs).
+    pub resident_bytes: usize,
+    /// Lookups that attached a snapshot.
+    pub hits: u64,
+    /// Cacheable lookups that found no usable prefix.
+    pub misses: u64,
+    /// Snapshots ever inserted (including refreshed keys).
+    pub inserts: u64,
+    /// Entries evicted (caps or memory-pressure shedding).
+    pub shed: u64,
+    /// Cumulative bytes served from attached snapshots.
+    pub reused_bytes: u64,
+    /// Cumulative prompt tokens served from attached snapshots.
+    pub reused_tokens: u64,
+}
+
+/// Compression knobs that must agree for two caches to be bit-compatible.
+/// Seed participates only for the seeded policy (Random); deterministic
+/// policies share one tree across seeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Fingerprint {
+    policy: PolicyKind,
+    sink: usize,
+    lag: usize,
+    ratio_bits: u64,
+    skip_layers: usize,
+    scorer: ScorerBackend,
+    seed: u64,
+}
+
+struct Entry {
+    cache: KvCache,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Edge {
+    label: Vec<i32>,
+    node: Node,
+}
+
+#[derive(Default)]
+struct Node {
+    entry: Option<Entry>,
+    children: Vec<Edge>,
+}
+
+#[derive(Default)]
+struct Counters {
+    hits: u64,
+    misses: u64,
+    inserts: u64,
+    shed: u64,
+    reused_bytes: u64,
+    reused_tokens: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    trees: HashMap<Fingerprint, Node>,
+    /// Logical clock for LRU ordering (monotone, no wall time).
+    tick: u64,
+    entries: usize,
+    bytes: usize,
+    c: Counters,
+}
+
+/// The per-engine prefix cache.  Interior mutex: one engine lives on one
+/// coordinator thread, so contention is nil; the router only reads stats.
+pub struct PrefixCache {
+    cfg: PrefixConfig,
+    pool: Arc<BlockPool>,
+    inner: Mutex<Inner>,
+}
+
+fn common_len(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+/// Returns the entry previously stored at exactly this key, if any.
+fn insert_rec(node: &mut Node, rest: &[i32], entry: Entry) -> Option<Entry> {
+    if rest.is_empty() {
+        return node.entry.replace(entry);
+    }
+    let pos = node.children.iter().position(|e| e.label.first() == rest.first());
+    match pos {
+        None => {
+            node.children.push(Edge {
+                label: rest.to_vec(),
+                node: Node { entry: Some(entry), children: Vec::new() },
+            });
+            None
+        }
+        Some(i) => {
+            let common = common_len(&node.children[i].label, rest);
+            if common == node.children[i].label.len() {
+                insert_rec(&mut node.children[i].node, &rest[common..], entry)
+            } else {
+                // Split the edge at the divergence point.
+                let edge = &mut node.children[i];
+                let tail_label = edge.label.split_off(common);
+                let old_node = std::mem::take(&mut edge.node);
+                edge.node = Node {
+                    entry: None,
+                    children: vec![Edge { label: tail_label, node: old_node }],
+                };
+                insert_rec(&mut edge.node, &rest[common..], entry)
+            }
+        }
+    }
+}
+
+/// Deepest entry whose key is a prefix of the query, no deeper than
+/// `limit` tokens.  Entries below a node sit at `depth + label` or more,
+/// so subtrees past the limit are pruned wholesale.
+fn best_depth(node: &Node, rest: &[i32], depth: usize, limit: usize) -> Option<usize> {
+    let mut best = if node.entry.is_some() && depth >= 1 && depth <= limit {
+        Some(depth)
+    } else {
+        None
+    };
+    if let Some(edge) = node.children.iter().find(|e| e.label.first() == rest.first()) {
+        let l = edge.label.len();
+        if l <= rest.len() && edge.label[..] == rest[..l] && depth + l <= limit {
+            if let Some(d) = best_depth(&edge.node, &rest[l..], depth + l, limit) {
+                best = Some(d);
+            }
+        }
+    }
+    best
+}
+
+fn entry_at_mut<'a>(node: &'a mut Node, rest: &[i32], depth_left: usize) -> Option<&'a mut Entry> {
+    if depth_left == 0 {
+        return node.entry.as_mut();
+    }
+    let i = node.children.iter().position(|e| e.label.first() == rest.first())?;
+    let l = node.children[i].label.len();
+    if l > depth_left {
+        return None;
+    }
+    entry_at_mut(&mut node.children[i].node, &rest[l..], depth_left - l)
+}
+
+fn remove_rec(node: &mut Node, rest: &[i32]) -> Option<Entry> {
+    if rest.is_empty() {
+        return node.entry.take();
+    }
+    let i = node.children.iter().position(|e| e.label.first() == rest.first())?;
+    let l = node.children[i].label.len();
+    if l > rest.len() || node.children[i].label[..] != rest[..l] {
+        return None;
+    }
+    let removed = remove_rec(&mut node.children[i].node, &rest[l..])?;
+    // Prune an emptied child; merge a single-child pass-through node back
+    // into its edge so the tree stays a proper radix tree.
+    let child = &mut node.children[i];
+    if child.node.entry.is_none() {
+        match child.node.children.len() {
+            0 => {
+                node.children.swap_remove(i);
+            }
+            1 => {
+                let g = child.node.children.pop().expect("one child");
+                child.label.extend_from_slice(&g.label);
+                child.node = g.node;
+            }
+            _ => {}
+        }
+    }
+    Some(removed)
+}
+
+fn lru_scan(node: &Node, path: &mut Vec<i32>, best: &mut Option<(u64, Vec<i32>)>) {
+    if let Some(e) = &node.entry {
+        let older = match best {
+            Some((t, _)) => e.last_used < *t,
+            None => true,
+        };
+        if older {
+            *best = Some((e.last_used, path.clone()));
+        }
+    }
+    for edge in &node.children {
+        let n = path.len();
+        path.extend_from_slice(&edge.label);
+        lru_scan(&edge.node, path, best);
+        path.truncate(n);
+    }
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixConfig, pool: Arc<BlockPool>) -> Arc<PrefixCache> {
+        Arc::new(PrefixCache { cfg, pool, inner: Mutex::new(Inner::default()) })
+    }
+
+    pub fn config(&self) -> &PrefixConfig {
+        &self.cfg
+    }
+
+    /// Whether this compression config may use the tree at all.
+    /// Attention-fed policies are path-dependent and always bypass.
+    pub fn cacheable(&self, cfg: &CompressionConfig) -> bool {
+        self.cfg.max_entries > 0 && !cfg.policy.needs_attention()
+    }
+
+    fn fingerprint(&self, cfg: &CompressionConfig, seed: u64) -> Option<Fingerprint> {
+        if !self.cacheable(cfg) {
+            return None;
+        }
+        Some(Fingerprint {
+            policy: cfg.policy,
+            sink: cfg.sink,
+            lag: cfg.lag,
+            ratio_bits: cfg.ratio.to_bits(),
+            skip_layers: cfg.skip_layers,
+            scorer: cfg.scorer,
+            seed: if cfg.policy == PolicyKind::Random { seed } else { 0 },
+        })
+    }
+
+    /// Attach the deepest stored snapshot whose key is a proper prefix of
+    /// `ids`.  Returns the cloned cache (CoW: frozen blocks shared by
+    /// refcount) and the matched depth; the caller prefills `ids[depth..]`.
+    pub fn lookup(
+        &self,
+        cfg: &CompressionConfig,
+        seed: u64,
+        ids: &[i32],
+    ) -> Option<(KvCache, usize)> {
+        let fp = self.fingerprint(cfg, seed)?;
+        let limit = ids.len().checked_sub(1)?;
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let depth = inner.trees.get(&fp).and_then(|root| best_depth(root, ids, 0, limit));
+        let Some(depth) = depth else {
+            inner.c.misses += 1;
+            return None;
+        };
+        let (cache, bytes) = {
+            let entry = inner
+                .trees
+                .get_mut(&fp)
+                .and_then(|root| entry_at_mut(root, ids, depth))
+                .expect("entry at matched depth");
+            entry.last_used = tick;
+            (entry.cache.clone(), entry.bytes)
+        };
+        inner.c.hits += 1;
+        inner.c.reused_bytes += bytes as u64;
+        inner.c.reused_tokens += depth as u64;
+        Some((cache, depth))
+    }
+
+    /// Store (or refresh) the snapshot for exactly `ids`.  The cache is
+    /// cloned — frozen blocks shared, loose tail copied — so the caller
+    /// keeps using its own.  No-ops for uncacheable configs, empty keys,
+    /// and single entries that alone bust the byte cap.
+    pub fn insert(&self, cfg: &CompressionConfig, seed: u64, ids: &[i32], cache: &KvCache) {
+        let Some(fp) = self.fingerprint(cfg, seed) else { return };
+        if ids.is_empty() {
+            return;
+        }
+        let bytes = cache.exact_bytes();
+        if self.cfg.max_bytes > 0 && bytes > self.cfg.max_bytes {
+            return;
+        }
+        let snapshot = cache.clone();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let entry = Entry { cache: snapshot, bytes, last_used: inner.tick };
+        let replaced = insert_rec(inner.trees.entry(fp).or_default(), ids, entry);
+        match replaced {
+            Some(old) => inner.bytes = inner.bytes - old.bytes + bytes,
+            None => {
+                inner.entries += 1;
+                inner.bytes += bytes;
+            }
+        }
+        inner.c.inserts += 1;
+        while inner.entries > self.cfg.max_entries
+            || (self.cfg.max_bytes > 0 && inner.bytes > self.cfg.max_bytes)
+        {
+            if Self::shed_lru_locked(&mut inner).is_none() {
+                break;
+            }
+        }
+        self.publish(&inner);
+    }
+
+    /// Evict the least-recently-used snapshot (memory-pressure shedding).
+    /// Returns the bytes it freed.
+    pub fn shed_lru(&self) -> Option<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let freed = Self::shed_lru_locked(&mut inner);
+        self.publish(&inner);
+        freed
+    }
+
+    fn shed_lru_locked(inner: &mut Inner) -> Option<usize> {
+        let mut best: Option<(u64, Fingerprint, Vec<i32>)> = None;
+        for (fp, root) in &inner.trees {
+            let mut path = Vec::new();
+            let mut b = None;
+            lru_scan(root, &mut path, &mut b);
+            if let Some((t, p)) = b {
+                let older = match &best {
+                    Some((bt, _, _)) => t < *bt,
+                    None => true,
+                };
+                if older {
+                    best = Some((t, *fp, p));
+                }
+            }
+        }
+        let (_, fp, path) = best?;
+        let removed = remove_rec(inner.trees.get_mut(&fp)?, &path)?;
+        let empty = inner
+            .trees
+            .get(&fp)
+            .map(|r| r.entry.is_none() && r.children.is_empty())
+            .unwrap_or(false);
+        if empty {
+            inner.trees.remove(&fp);
+        }
+        inner.entries -= 1;
+        inner.bytes -= removed.bytes;
+        inner.c.shed += 1;
+        Some(removed.bytes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sum of entry byte costs (the sheddable-class gauge).
+    pub fn total_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let inner = self.inner.lock().unwrap();
+        PrefixStats {
+            entries: inner.entries,
+            resident_bytes: inner.bytes,
+            hits: inner.c.hits,
+            misses: inner.c.misses,
+            inserts: inner.c.inserts,
+            shed: inner.c.shed,
+            reused_bytes: inner.c.reused_bytes,
+            reused_tokens: inner.c.reused_tokens,
+        }
+    }
+
+    /// Keep the pool's prefix-sheddable gauge (read by the router's cheap
+    /// pre-queue pressure check) in step with the tree on every mutation.
+    fn publish(&self, inner: &Inner) {
+        self.pool.set_prefix_sheddable(inner.bytes);
+    }
+}
+
+impl Drop for PrefixCache {
+    fn drop(&mut self) {
+        self.pool.set_prefix_sheddable(0);
+    }
+}
+
+impl std::fmt::Debug for PrefixCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("PrefixCache")
+            .field("entries", &s.entries)
+            .field("resident_bytes", &s.resident_bytes)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache_with_rows(pool: &Arc<BlockPool>, n: usize) -> KvCache {
+        let mut c = KvCache::new_in(Arc::clone(pool), 1, 1, 2);
+        for t in 0..n {
+            c.append_token(&[t as f32, 0.0], &[0.0, t as f32], t as i32).unwrap();
+        }
+        c
+    }
+
+    fn lag_cfg() -> CompressionConfig {
+        CompressionConfig::default()
+    }
+
+    fn pc(max_entries: usize, max_bytes: usize) -> (Arc<BlockPool>, Arc<PrefixCache>) {
+        let pool = BlockPool::unbounded(4);
+        let cache =
+            PrefixCache::new(PrefixConfig { max_entries, max_bytes, stride: 8 }, pool.clone());
+        (pool, cache)
+    }
+
+    #[test]
+    fn longest_proper_prefix_wins() {
+        let (pool, pc) = pc(16, 0);
+        let cfg = lag_cfg();
+        pc.insert(&cfg, 0, &[1, 2], &cache_with_rows(&pool, 2));
+        pc.insert(&cfg, 0, &[1, 2, 3, 4], &cache_with_rows(&pool, 4));
+        pc.insert(&cfg, 0, &[1, 2, 9], &cache_with_rows(&pool, 3));
+        // deepest stored prefix of [1,2,3,4,5] is [1,2,3,4]
+        let (cache, depth) = pc.lookup(&cfg, 0, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(depth, 4);
+        assert_eq!(cache.appended, 4);
+        // an exact key never matches itself whole: one suffix token must
+        // remain, so [1,2,3,4] falls back to the [1,2] snapshot
+        let (_, depth) = pc.lookup(&cfg, 0, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(depth, 2);
+        // diverging path uses the shared prefix only
+        let (_, depth) = pc.lookup(&cfg, 0, &[1, 2, 9, 9]).unwrap();
+        assert_eq!(depth, 3);
+        assert!(pc.lookup(&cfg, 0, &[7, 7]).is_none(), "disjoint key misses");
+        let s = pc.stats();
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.reused_tokens, 4 + 2 + 3);
+    }
+
+    #[test]
+    fn edge_split_keeps_all_entries_reachable() {
+        let (pool, pc) = pc(16, 0);
+        let cfg = lag_cfg();
+        // insert a long run first, then force a split inside its edge
+        pc.insert(&cfg, 0, &[5, 6, 7, 8, 9], &cache_with_rows(&pool, 5));
+        pc.insert(&cfg, 0, &[5, 6, 1], &cache_with_rows(&pool, 3));
+        pc.insert(&cfg, 0, &[5, 6], &cache_with_rows(&pool, 2));
+        assert_eq!(pc.len(), 3);
+        let (_, d) = pc.lookup(&cfg, 0, &[5, 6, 7, 8, 9, 9]).unwrap();
+        assert_eq!(d, 5);
+        let (_, d) = pc.lookup(&cfg, 0, &[5, 6, 1, 1]).unwrap();
+        assert_eq!(d, 3);
+        let (_, d) = pc.lookup(&cfg, 0, &[5, 6, 2]).unwrap();
+        assert_eq!(d, 2, "split point snapshot serves the diverging branch");
+    }
+
+    #[test]
+    fn lru_caps_and_shed_reconcile_bytes() {
+        let (pool, pc) = pc(2, 0);
+        let cfg = lag_cfg();
+        pc.insert(&cfg, 0, &[1], &cache_with_rows(&pool, 1));
+        pc.insert(&cfg, 0, &[2], &cache_with_rows(&pool, 1));
+        // refresh [1] so [2] is the LRU victim of the cap
+        assert!(pc.lookup(&cfg, 0, &[1, 9]).is_some());
+        pc.insert(&cfg, 0, &[3], &cache_with_rows(&pool, 1));
+        assert_eq!(pc.len(), 2);
+        assert!(pc.lookup(&cfg, 0, &[2, 9]).is_none(), "LRU entry evicted");
+        assert!(pc.lookup(&cfg, 0, &[3, 9]).is_some());
+        let before = pc.total_bytes();
+        let freed = pc.shed_lru().unwrap();
+        assert_eq!(pc.total_bytes() + freed, before);
+        assert_eq!(pc.len(), 1);
+        pc.shed_lru().unwrap();
+        assert!(pc.shed_lru().is_none(), "empty tree has nothing to shed");
+        assert_eq!(pc.total_bytes(), 0);
+        assert_eq!(pool.sheddable_bytes(), 0, "gauge published on every mutation");
+    }
+
+    #[test]
+    fn byte_cap_evicts_and_oversized_entry_is_skipped() {
+        let pool = BlockPool::unbounded(4);
+        let one = cache_with_rows(&pool, 2).exact_bytes();
+        let pc = PrefixCache::new(
+            PrefixConfig { max_entries: 16, max_bytes: 2 * one, stride: 8 },
+            pool.clone(),
+        );
+        let cfg = lag_cfg();
+        pc.insert(&cfg, 0, &[1], &cache_with_rows(&pool, 2));
+        pc.insert(&cfg, 0, &[2], &cache_with_rows(&pool, 2));
+        assert_eq!(pc.len(), 2);
+        pc.insert(&cfg, 0, &[3], &cache_with_rows(&pool, 2));
+        assert_eq!(pc.len(), 2, "byte cap sheds the LRU entry");
+        assert!(pc.total_bytes() <= 2 * one);
+        pc.insert(&cfg, 0, &[4], &cache_with_rows(&pool, 20));
+        assert!(
+            pc.lookup(&cfg, 0, &[4, 9]).is_none(),
+            "an entry that alone busts the cap is never stored"
+        );
+    }
+
+    #[test]
+    fn fingerprint_separates_configs_and_h2o_bypasses() {
+        let (pool, pc) = pc(16, 0);
+        let a = lag_cfg();
+        let b = CompressionConfig { lag: 32, ..lag_cfg() };
+        pc.insert(&a, 0, &[1, 2, 3], &cache_with_rows(&pool, 3));
+        assert!(pc.lookup(&b, 0, &[1, 2, 3, 4]).is_none(), "different lag never matches");
+        assert!(pc.lookup(&a, 0, &[1, 2, 3, 4]).is_some());
+        // seeded policy: seed is part of the key
+        let r = CompressionConfig { policy: PolicyKind::Random, ..lag_cfg() };
+        pc.insert(&r, 7, &[1, 2, 3], &cache_with_rows(&pool, 3));
+        assert!(pc.lookup(&r, 8, &[1, 2, 3, 4]).is_none(), "other seed never matches");
+        assert!(pc.lookup(&r, 7, &[1, 2, 3, 4]).is_some());
+        // attention-fed policies bypass entirely (path-dependent statistic)
+        let h = CompressionConfig { policy: PolicyKind::H2O, ..lag_cfg() };
+        assert!(!pc.cacheable(&h));
+        pc.insert(&h, 0, &[9, 9, 9], &cache_with_rows(&pool, 3));
+        assert!(pc.lookup(&h, 0, &[9, 9, 9, 9]).is_none());
+        let misses_before = pc.stats().misses;
+        let _ = pc.lookup(&h, 0, &[9, 9, 9, 9]);
+        assert_eq!(pc.stats().misses, misses_before, "bypass is not a miss");
+    }
+
+    #[test]
+    fn snapshots_share_blocks_and_publish_sheddable() {
+        let pool = BlockPool::unbounded(4);
+        let pc = PrefixCache::new(PrefixConfig::default(), pool.clone());
+        let cfg = lag_cfg();
+        let mut c = cache_with_rows(&pool, 16);
+        // freeze rows [0, 8) so the snapshot has blocks to share
+        c.compact_layer(0, 8, 4, &[vec![0, 1]]).unwrap();
+        assert!(c.frozen_blocks() > 0);
+        let blocks_before = pool.stats().resident_blocks;
+        pc.insert(&cfg, 0, &[1, 2, 3, 4], &c);
+        assert_eq!(
+            pool.stats().resident_blocks,
+            blocks_before,
+            "a snapshot shares frozen blocks, never copies them"
+        );
+        assert_eq!(pool.sheddable_bytes(), pc.total_bytes());
+        let (attached, depth) = pc.lookup(&cfg, 0, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(depth, 4);
+        assert_eq!(pool.stats().resident_blocks, blocks_before, "attach is CoW too");
+        assert_eq!(attached.head_k(0, 0), c.head_k(0, 0));
+        drop(attached);
+        drop(c);
+        pc.shed_lru().unwrap();
+        assert_eq!(pool.stats().resident_blocks, 0, "all blocks recycled");
+    }
+}

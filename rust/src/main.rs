@@ -59,14 +59,15 @@ USAGE:
                  [--stream] [--session ID]
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
               [--max-queue 256] [--sessions 64] [--session-ttl 600]
-              [--pool-mb N] [--session-mb N]
+              [--pool-mb N] [--session-mb N] [--prefix-cache]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
 
 BACKENDS: cpu (default, hermetic) | xla (--features xla + make artifacts)
 POLICIES: lagkv localkv l2norm h2o streaming random none
 WIRE PROTOCOL: see DESIGN.md (NDJSON events, {"cancel": id}, session_id;
-  byte-budgeted pools reject with the typed "pool-exhausted" error)
+  byte-budgeted pools reject with the typed "pool-exhausted" error;
+  --prefix-cache shares identical prompt prefixes across sequences CoW)
 "#;
 
 fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
@@ -171,6 +172,7 @@ fn serve(args: &Args) -> Result<()> {
             max_bytes: serving.session_max_bytes,
         },
         pool_max_bytes: serving.pool_max_bytes,
+        prefix_cache: serving.prefix_cache.then(lagkv::kvpool::PrefixConfig::default),
     };
     let router = Arc::new(Router::start_with(EngineSpec::from_args(args)?, &models, router_cfg));
     let server = Arc::new(Server::new(router));

@@ -3,7 +3,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::kvpool::PoolStats;
+use crate::kvpool::{PoolStats, PrefixStats};
 
 /// Point-in-time KV block-pool gauges, shaped for dashboards and bench
 /// output.  Built from the pool's exact ledger ([`PoolStats`]) so the
@@ -22,6 +22,9 @@ pub struct PoolGauges {
     pub fragmentation_pct: f64,
     /// The configured byte budget, when one is set.
     pub budget_bytes: Option<usize>,
+    /// Prefix-cache gauges, when the deployment runs one ([`PrefixStats`]
+    /// carried verbatim — the tree's ledger is already the gauge shape).
+    pub prefix: Option<PrefixStats>,
 }
 
 impl From<&PoolStats> for PoolGauges {
@@ -33,18 +36,26 @@ impl From<&PoolStats> for PoolGauges {
             resident_blocks: s.resident_blocks,
             fragmentation_pct: s.fragmentation() * 100.0,
             budget_bytes: s.budget,
+            prefix: None,
         }
     }
 }
 
 impl PoolGauges {
-    /// One-line rendering for bench output and logs.
+    /// Attach prefix-cache gauges (rendered as a second line).
+    pub fn with_prefix(mut self, s: &PrefixStats) -> PoolGauges {
+        self.prefix = Some(*s);
+        self
+    }
+
+    /// One-line rendering for bench output and logs (two lines when
+    /// prefix-cache gauges are attached).
     pub fn render(&self) -> String {
         let budget = match self.budget_bytes {
             Some(b) => format!("{:.1}", b as f64 / 1024.0),
             None => "inf".to_string(),
         };
-        format!(
+        let mut out = format!(
             "pool: resident {:.1} KiB ({} blocks) / budget {} KiB, \
              high-water {:.1} KiB, free {:.1} KiB, fragmentation {:.1}%",
             self.resident_bytes as f64 / 1024.0,
@@ -53,7 +64,21 @@ impl PoolGauges {
             self.high_water_bytes as f64 / 1024.0,
             self.free_bytes as f64 / 1024.0,
             self.fragmentation_pct,
-        )
+        );
+        if let Some(p) = &self.prefix {
+            out.push_str(&format!(
+                "\nprefix: {} entries {:.1} KiB, hits {} / misses {}, \
+                 reused {:.1} KiB ({} tokens), shed {}",
+                p.entries,
+                p.resident_bytes as f64 / 1024.0,
+                p.hits,
+                p.misses,
+                p.reused_bytes as f64 / 1024.0,
+                p.reused_tokens,
+                p.shed,
+            ));
+        }
+        out
     }
 }
 
@@ -212,6 +237,35 @@ mod tests {
         assert!(line.contains("fragmentation 20.0%"), "rendered: {line}");
         let unbudgeted = PoolGauges::from(&PoolStats { budget: None, ..s });
         assert!(unbudgeted.render().contains("budget inf"));
+        assert!(!unbudgeted.render().contains("prefix:"), "no prefix line unless attached");
+    }
+
+    #[test]
+    fn prefix_gauges_render_as_second_line() {
+        let s = PoolStats {
+            block_bytes: 2048,
+            loose_bytes: 0,
+            free_bytes: 0,
+            high_water_bytes: 2048,
+            resident_blocks: 2,
+            free_blocks: 0,
+            budget: None,
+        };
+        let p = PrefixStats {
+            entries: 3,
+            resident_bytes: 1024,
+            hits: 5,
+            misses: 2,
+            inserts: 7,
+            shed: 1,
+            reused_bytes: 4096,
+            reused_tokens: 96,
+        };
+        let g = PoolGauges::from(&s).with_prefix(&p);
+        let line = g.render();
+        assert!(line.contains("prefix: 3 entries 1.0 KiB"), "rendered: {line}");
+        assert!(line.contains("hits 5 / misses 2"), "rendered: {line}");
+        assert!(line.contains("reused 4.0 KiB (96 tokens), shed 1"), "rendered: {line}");
     }
 
     #[test]

@@ -464,6 +464,7 @@ fn pool_pressure_sheds_sessions_and_rejects_typed() {
         queue_depth: 8,
         sessions: SessionConfig::default(),
         pool_max_bytes: Some(200 * row),
+        prefix_cache: None,
     };
     let router = Router::start_with(EngineSpec::cpu(), &["llama_like".to_string()], cfg);
     let stats = router.stats("llama_like").unwrap();
@@ -524,6 +525,125 @@ fn pool_pressure_sheds_sessions_and_rejects_typed() {
         .unwrap();
     assert!(c.error.is_none(), "pool must recover: {:?}", c.error);
     router.shutdown();
+}
+
+/// Satellite-1 regression (coordinator byte reservations): cancelling a
+/// request that reserved most of a budgeted pool must release its
+/// reservation on the abort path, or every later right-sized request is
+/// starved with `pool-exhausted` forever.
+#[test]
+fn cancel_under_budget_releases_the_reservation() {
+    let e = engine();
+    let prompt = long_chain_prompt(&e, 64);
+    let row = lagkv::kvpool::row_bytes(e.dims.n_layers, e.dims.n_kv_heads, e.dims.d_head);
+    let cfg = RouterConfig {
+        queue_depth: 8,
+        sessions: SessionConfig::default(),
+        pool_max_bytes: Some(900 * row),
+        prefix_cache: None,
+    };
+    let router = Router::start_with(EngineSpec::cpu(), &["llama_like".to_string()], cfg);
+    let stats = router.stats("llama_like").unwrap();
+
+    // A reserves ~(prompt + 700) rows of the 900-row budget...
+    let a = router
+        .submit(
+            "llama_like",
+            GenerateParams::new(prompt.clone()).max_new(700).into_request(1).unwrap(),
+        )
+        .unwrap();
+    let first = a.events.recv().unwrap();
+    assert!(matches!(first, Event::Started { .. }), "got {first:?}");
+    // ...and is cancelled mid-decode (the abort exit path).
+    a.cancel();
+    let resp = a.wait();
+    assert_eq!(resp.error.as_ref().map(|er| er.code()), Some("cancelled"));
+
+    // B needs most of the budget too: it only fits if A's reservation was
+    // released on the cancel path.
+    let b = router
+        .generate(
+            "llama_like",
+            GenerateParams::new(prompt.clone()).max_new(700).into_request(2).unwrap(),
+        )
+        .unwrap();
+    assert!(
+        b.error.is_none(),
+        "a leaked reservation starved admission: {:?}",
+        b.error
+    );
+    assert_eq!(stats.pool_rejected.load(Ordering::Relaxed), 0);
+    router.shutdown();
+}
+
+/// Satellite-3 regression: a prompt exceeding the largest prefill bucket
+/// is a typed `bad-params` client error on the wire — never a stringly
+/// `engine-failure`.
+#[test]
+fn overlong_prompt_is_typed_bad_params_on_the_wire() {
+    let (_server, port, stop, accept) = boot_server();
+    let mut client = Client::connect(port).unwrap();
+    let prompt = "the of and to in is it on as with ".repeat(80); // >> 640 tokens
+    let resp = client
+        .call(&GenerateParams::new(prompt).max_new(4).request_line(Some(1), false))
+        .unwrap();
+    let err = resp.get("error").unwrap();
+    assert_eq!(
+        err.get("code").unwrap().as_str().unwrap(),
+        "bad-params",
+        "wire payload: {resp:?}"
+    );
+    let msg = err.get("message").unwrap().as_str().unwrap();
+    assert!(msg.contains("prefill bucket"), "message must name the bound: {msg}");
+    stop.store(true, Ordering::Relaxed);
+    accept.join().unwrap().unwrap();
+}
+
+/// Tentpole e2e: with the radix prefix cache enabled, a second sequence
+/// sharing a long prompt prefix attaches it CoW (`reused_tokens > 0`) and
+/// decodes bit-identically to the same request on a cache-less router.
+#[test]
+fn router_prefix_cache_reuses_shared_prompt_prefix() {
+    use lagkv::kvpool::PrefixConfig;
+
+    let warm_cfg = RouterConfig {
+        prefix_cache: Some(PrefixConfig { stride: 24, ..Default::default() }),
+        ..RouterConfig::default()
+    };
+    let warm = Router::start_with(EngineSpec::cpu(), &["llama_like".to_string()], warm_cfg);
+    let cold = Router::start(EngineSpec::cpu(), &["llama_like".to_string()]);
+
+    let mut rng = Rng::seed_from(51);
+    let sys = gen_passkey(&mut rng, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None })
+        .prompt;
+    let mk = |q: &str, id: u64| {
+        GenerateParams::new(format!("{sys} {q}"))
+            .lag(16)
+            .ratio(0.5)
+            .max_new(8)
+            .into_request(id)
+            .unwrap()
+    };
+    let w1 = warm.generate("llama_like", mk("<q> the pass key <a>", 1)).unwrap();
+    assert!(w1.error.is_none(), "{:?}", w1.error);
+    assert_eq!(w1.reused_tokens, 0, "nothing to reuse on a cold tree");
+    let w2 = warm.generate("llama_like", mk("<q> remember the words <a>", 2)).unwrap();
+    assert!(w2.error.is_none(), "{:?}", w2.error);
+    assert!(w2.reused_tokens > 0, "shared prefix must hit the cache");
+
+    let c2 = cold.generate("llama_like", mk("<q> remember the words <a>", 3)).unwrap();
+    assert!(c2.error.is_none(), "{:?}", c2.error);
+    assert_eq!(w2.tokens, c2.tokens, "prefix-hit decode must equal cold decode");
+    assert_eq!(w2.text, c2.text);
+    assert_eq!(w2.cache_lens, c2.cache_lens, "Eq. 10 trajectory must be unchanged");
+    assert_eq!(c2.reused_tokens, 0);
+
+    let prefix = warm.prefix_cache("llama_like").unwrap();
+    let s = prefix.stats();
+    assert!(s.hits >= 1, "hit gauge: {s:?}");
+    assert!(s.entries >= 2, "snapshots + finals stored: {s:?}");
+    warm.shutdown();
+    cold.shutdown();
 }
 
 /// The bounded admission queue rejects overflow with a typed `queue-full`

@@ -17,7 +17,7 @@ use lagkv::config::{CompressionConfig, PolicyKind};
 use lagkv::coordinator::{Event, GenerateParams, Response, Router};
 use lagkv::engine::Engine;
 use lagkv::kvcache::{ratio, KvCache};
-use lagkv::kvpool::BlockPool;
+use lagkv::kvpool::{BlockPool, PrefixCache, PrefixConfig};
 use lagkv::sim::{self, SimSpec};
 use lagkv::util::argmax;
 use lagkv::util::prop;
@@ -634,6 +634,143 @@ fn session_resume_allocates_only_tail_blocks() {
         "high-water grew {hw_growth} B against a {history_bytes} B history: \
          something deep-copied the cache on resume"
     );
+}
+
+/// Prefix-cache parity across EVERY policy: generation through a warm
+/// radix prefix cache — both the segmented cold path that seeds it and a
+/// genuine prefix hit — must decode bit-identically to a cache-less
+/// engine.  Attention-fed policies (H2O) are path-dependent, so for them
+/// the contract is a verified *bypass* (the tree never engages), which
+/// makes the parity trivial — exactly the paper's attention-free
+/// integration argument.
+#[test]
+fn prefix_hit_decode_matches_cold_prefill_for_every_policy() {
+    let mut rng = Rng::seed_from(61);
+    let sys = gen_passkey(&mut rng, &PasskeySpec { n_filler: 60, n_digits: 16, depth: None })
+        .prompt;
+    for &policy in PolicyKind::all() {
+        let mut warm = Engine::cpu_ref("llama_like").unwrap();
+        let prefix =
+            warm.enable_prefix_cache(PrefixConfig { stride: 16, ..Default::default() });
+        let cold = Engine::cpu_ref("llama_like").unwrap();
+        let cfg = CompressionConfig {
+            policy,
+            sink: 4,
+            lag: 8,
+            ratio: 0.5,
+            skip_layers: if policy == PolicyKind::L2Norm { 1 } else { 0 },
+            ..Default::default()
+        };
+        let ids_sys = warm.tokenizer.encode(&sys, true);
+        let tail1 = warm.tokenizer.encode("<q> the pass key <a>", false);
+        let tail2 = warm.tokenizer.encode("<q> remember the words <a>", false);
+        let ids1: Vec<i32> = ids_sys.iter().chain(tail1.iter()).copied().collect();
+        let ids2: Vec<i32> = ids_sys.iter().chain(tail2.iter()).copied().collect();
+
+        // seeding request: segmented-ingest cold path == classic cold path
+        let w1 = warm.generate_ids(&ids1, &cfg, 6, 3).unwrap();
+        let c1 = cold.generate_ids(&ids1, &cfg, 6, 3).unwrap();
+        assert_eq!(w1.tokens, c1.tokens, "{}: segmented prefill diverged", policy.name());
+        assert_eq!(w1.cache_lens, c1.cache_lens, "{}", policy.name());
+
+        // shared-prefix request: hit path == cold path, bit for bit
+        let w2 = warm.generate_ids(&ids2, &cfg, 6, 3).unwrap();
+        let c2 = cold.generate_ids(&ids2, &cfg, 6, 3).unwrap();
+        assert_eq!(w2.tokens, c2.tokens, "{}: prefix-hit decode diverged", policy.name());
+        assert_eq!(w2.text, c2.text, "{}", policy.name());
+        assert_eq!(w2.cache_lens, c2.cache_lens, "{}", policy.name());
+
+        let s = prefix.stats();
+        if policy.needs_attention() {
+            assert_eq!(s.entries, 0, "{}: path-dependent policy must bypass", policy.name());
+            assert_eq!(w2.reused_tokens, 0, "{}", policy.name());
+        } else {
+            assert!(s.hits >= 1, "{}: shared prefix must hit ({s:?})", policy.name());
+            assert!(w2.reused_tokens > 0, "{}", policy.name());
+        }
+    }
+}
+
+/// Prefix-tree ledger under randomized insert / hit / evict churn on one
+/// shared pool: the tree's byte counter always equals the sum of its
+/// entries, caps hold, and when the tree and every attached clone are
+/// gone the pool ledger reconciles to zero — no block leak, no
+/// double-free, recycled buffers bounded by the high-water mark.
+#[test]
+fn prop_prefix_tree_ledger_reconciles_under_churn() {
+    prop::check(20, |g| {
+        let pool = BlockPool::unbounded(4);
+        let max_entries = g.usize(1, 6);
+        let prefix = PrefixCache::new(
+            PrefixConfig { max_entries, max_bytes: 0, stride: 8 },
+            pool.clone(),
+        );
+        let cfg = CompressionConfig {
+            policy: PolicyKind::LagKv,
+            sink: 2,
+            lag: 4,
+            ratio: 0.5,
+            ..Default::default()
+        };
+        let mut scorer = make_policy(cfg.policy, g.case as u64);
+        let mut rng = Rng::seed_from(g.case as u64 + 11);
+        // a small token alphabet forces shared prefixes and edge splits
+        let mut attached: Vec<KvCache> = Vec::new();
+        for _ in 0..g.usize(15, 60) {
+            let key: Vec<i32> = (0..g.usize(1, 12)).map(|_| g.usize(0, 3) as i32).collect();
+            match g.usize(0, 5) {
+                0..=2 => {
+                    // build a cache shaped like the key and insert it
+                    let mut c = KvCache::new_in(pool.clone(), 1, 1, 2);
+                    for t in 0..key.len() + g.usize(0, 20) {
+                        let k: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+                        c.append_token(&k, &k, t as i32).unwrap();
+                        maybe_compress(&mut c, &cfg, scorer.as_mut())
+                            .map_err(|e| format!("driver: {e:#}"))?;
+                    }
+                    prefix.insert(&cfg, 0, &key, &c);
+                }
+                3..=4 => {
+                    if let Some((cache, depth)) = prefix.lookup(&cfg, 0, &key) {
+                        if depth >= key.len() {
+                            return Err(format!(
+                                "matched depth {depth} is not a proper prefix of {key:?}"
+                            ));
+                        }
+                        if attached.len() < 4 && g.bool() {
+                            attached.push(cache);
+                        }
+                    }
+                }
+                _ => {
+                    let _ = prefix.shed_lru();
+                }
+            }
+            let s = prefix.stats();
+            if s.entries > max_entries {
+                return Err(format!("{} entries exceed cap {max_entries}", s.entries));
+            }
+            if s.entries == 0 && s.resident_bytes != 0 {
+                return Err("empty tree holds bytes".into());
+            }
+            if pool.sheddable_bytes() != s.resident_bytes {
+                return Err("prefix sheddable gauge out of step with the tree".into());
+            }
+        }
+        attached.clear();
+        drop(prefix);
+        let s = pool.stats();
+        if s.resident_blocks != 0 {
+            return Err(format!("{} blocks leaked", s.resident_blocks));
+        }
+        if s.resident_bytes() != 0 {
+            return Err(format!("{} resident bytes leaked", s.resident_bytes()));
+        }
+        if s.free_bytes > s.high_water_bytes {
+            return Err("free list grew past the high-water mark".into());
+        }
+        Ok(())
+    });
 }
 
 /// The paper's headline ordering as a standing regression: at equal

@@ -1,9 +1,12 @@
 //! End-to-end serving driver (DESIGN.md §4 row E2E): boots the full stack —
 //! router, per-model coordinator threads with continuous batching, TCP
 //! server — fires a mixed batch of concurrent clients at it (one-shot and
-//! streaming traffic interleaved), reports latency percentiles, throughput,
-//! and streaming TTFT, then runs a two-turn session to show the compressed
-//! cache being reused across turns.
+//! streaming traffic interleaved, all through the typed `lagkv::client`
+//! SDK), reports latency percentiles, throughput, and streaming TTFT, runs
+//! a two-turn session to show the compressed cache being reused across
+//! turns, then walks the ops control plane: `stats` for the wire-level
+//! pool/prefix/coordinator gauges and `drain` for the typed admission
+//! shutdown.
 //!
 //! Memory budgets: `--pool-mb N` caps each model's KV block pool (typed
 //! `pool-exhausted` rejections + three-tier shedding under pressure) and
@@ -21,11 +24,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use lagkv::coordinator::{GenerateParams, Router, RouterConfig};
+use lagkv::client::{Client, StreamItem};
+use lagkv::coordinator::{Event, GenerateParams, Router, RouterConfig};
 use lagkv::metrics::{Histogram, PoolGauges, Table};
-use lagkv::server::{Client, Server};
+use lagkv::server::Server;
 use lagkv::util::cli::Args;
-use lagkv::util::json::Json;
 use lagkv::util::rng::Rng;
 use lagkv::workloads::longbench;
 use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
@@ -64,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     // Build a mixed workload: passkey + longbench families, two models,
     // compressed and baseline traffic, every third request streaming.
     let mut rng = Rng::seed_from(5);
-    let mut requests: Vec<(String, bool)> = Vec::new(); // (wire line, stream?)
+    let mut requests: Vec<(u64, GenerateParams, bool)> = Vec::new();
     for i in 0..n_requests {
         let model = if i % 2 == 0 { "llama_like" } else { "qwen_like" };
         let item = if i % 3 == 0 {
@@ -81,11 +84,10 @@ fn main() -> anyhow::Result<()> {
             .lag(32)
             .ratio(0.5)
             .max_new(40);
-        let streaming = i % 3 == 0;
-        requests.push((params.request_line(Some(i as u64), streaming), streaming));
+        requests.push((i as u64, params, i % 3 == 0));
     }
 
-    // Fan out over client threads.
+    // Fan out over client threads, all traffic through the typed SDK.
     let started = Instant::now();
     let chunk = requests.len().div_ceil(n_clients);
     let mut handles = Vec::new();
@@ -98,35 +100,32 @@ fn main() -> anyhow::Result<()> {
                 let mut ttft = Histogram::new();
                 let mut tokens = 0u64;
                 let mut errors = 0usize;
-                for (line, streaming) in &batch {
+                for (id, params, streaming) in batch {
                     let t0 = Instant::now();
-                    if *streaming {
-                        let events = client.stream(line)?;
+                    if streaming {
+                        let mut stream = client.generate_stream(id, params)?;
                         let mut saw_token = false;
-                        for ev in &events {
-                            let kind = ev
-                                .opt("event")
-                                .and_then(|e| e.as_str().ok())
-                                .unwrap_or("");
-                            match kind {
-                                "token" if !saw_token => {
-                                    saw_token = true;
-                                    ttft.record(t0.elapsed());
+                        while let Some(item) = stream.next()? {
+                            match item {
+                                StreamItem::Event(Event::Token { .. }) => {
+                                    if !saw_token {
+                                        saw_token = true;
+                                        ttft.record(t0.elapsed());
+                                    }
                                     tokens += 1;
                                 }
-                                "token" => tokens += 1,
-                                "error" => errors += 1,
+                                StreamItem::Event(Event::Error { .. }) => errors += 1,
                                 _ => {}
                             }
                         }
                         lat.record(t0.elapsed());
                     } else {
-                        let resp = client.call(line)?;
+                        let resp = client.generate(Some(id), params)?;
                         lat.record(t0.elapsed());
-                        if resp.opt("error").map(|e| *e != Json::Null).unwrap_or(false) {
+                        if resp.error.is_some() {
                             errors += 1;
                         } else {
-                            tokens += resp.get("new_tokens")?.as_usize()? as u64;
+                            tokens += resp.tokens.len() as u64;
                         }
                     }
                 }
@@ -169,47 +168,65 @@ fn main() -> anyhow::Result<()> {
     let mut client = Client::connect(port)?;
     let mut rng = Rng::seed_from(9);
     let turn1 = gen_passkey(&mut rng, &PasskeySpec { n_filler: 150, n_digits: 16, depth: None });
-    let t1 = client.call(
-        &GenerateParams::new(turn1.prompt)
-            .lag(16)
-            .ratio(0.25)
-            .max_new(12)
-            .session("demo-chat")
-            .request_line(Some(9001), false),
+    let t1 = client.generate(
+        Some(9001),
+        GenerateParams::new(turn1.prompt).lag(16).ratio(0.25).max_new(12).session("demo-chat"),
     )?;
-    let t2 = client.call(
-        &GenerateParams::new("<q> the pass key <a>")
+    let t2 = client.generate(
+        Some(9002),
+        GenerateParams::new("<q> the pass key <a>")
             .lag(16)
             .ratio(0.25)
             .max_new(12)
-            .session("demo-chat")
-            .request_line(Some(9002), false),
+            .session("demo-chat"),
     )?;
     println!("\nsession demo (id \"demo-chat\"):");
+    println!("  turn 1: prompt_tokens={} cache_lens={:?}", t1.prompt_tokens, t1.cache_lens);
     println!(
-        "  turn 1: prompt_tokens={} cache_lens={}",
-        t1.get("prompt_tokens")?.as_usize()?,
-        t1.get("cache_lens")?.to_string(),
-    );
-    println!(
-        "  turn 2: prompt_tokens={} reused_tokens={} cache_lens={}",
-        t2.get("prompt_tokens")?.as_usize()?,
-        t2.get("reused_tokens")?.as_usize()?,
-        t2.get("cache_lens")?.to_string(),
+        "  turn 2: prompt_tokens={} reused_tokens={} cache_lens={:?}",
+        t2.prompt_tokens, t2.reused_tokens, t2.cache_lens,
     );
 
-    // KV pool occupancy per model (the session above stays resident),
-    // plus prefix-cache hit/miss/reuse gauges when one is enabled.
+    // Ops control plane: the same pool/prefix gauges the in-proc accessors
+    // expose, but read over the wire — the session above shows up in the
+    // per-model session gauges, and the stored entry is listable.
+    let stats = client.stats()?;
     println!();
-    for model in &models {
-        if let Some(pool) = server.router.pool(model) {
-            let mut gauges = PoolGauges::from(&pool.stats());
-            if let Some(prefix) = server.router.prefix_cache(model) {
-                gauges = gauges.with_prefix(&prefix.stats());
-            }
-            println!("{model}: {}", gauges.render());
+    for m in &stats.models {
+        let mut gauges = PoolGauges::from(&m.pool);
+        if let Some(p) = &m.prefix {
+            gauges = gauges.with_prefix(p);
+        }
+        println!("{}: {}", m.model, gauges.render());
+        println!(
+            "  coord: completed {} queued {}/{} | sessions {} ({:.1} KiB)",
+            m.coord.completed,
+            m.coord.queued,
+            m.queue_capacity,
+            m.sessions.entries,
+            m.sessions.bytes as f64 / 1024.0,
+        );
+    }
+    let listed = client.sessions(None)?;
+    for m in &listed.models {
+        for ss in &m.sessions {
+            println!(
+                "session {}/{}: turns={} rows={} bytes={}",
+                m.model, ss.id, ss.turns, ss.rows, ss.bytes
+            );
         }
     }
+
+    // Drain: admission closes with a typed rejection; in-flight work (none
+    // left here) finishes before the operator stops the accept loop.
+    let drained = client.drain()?;
+    let rejected = client.generate(Some(9003), GenerateParams::new("post-drain probe"))?;
+    println!(
+        "\ndrain: draining={} in_flight={} | post-drain submit -> {}",
+        drained.draining,
+        drained.in_flight,
+        rejected.error.map(|e| e.code()).unwrap_or("accepted?!"),
+    );
 
     stop.store(true, Ordering::Relaxed);
     Ok(())

@@ -1,14 +1,19 @@
 //! Hermetic server smoke check (CI job `server-smoke`): boots the TCP
-//! server on an ephemeral port over the CPU reference backend, runs one
-//! streaming request and one cancelled request, asserts a clean shutdown,
-//! then reboots with a tiny byte-budgeted KV pool and asserts the
-//! memory-pressure admission path end-to-end: LRU session shedding under
-//! pressure, the typed `pool-exhausted` wire rejection, and recovery
-//! afterwards.  A final reboot with `--prefix-cache` semantics drives the
-//! shared-system-prompt scenario: two clients whose prompts share a long
-//! prefix, the second attaching the radix prefix cache CoW
-//! (`reused_tokens > 0` on the wire), then prefix-snapshot shedding under
-//! pool pressure and recovery.  Exits non-zero on any protocol violation.
+//! server on an ephemeral port over the CPU reference backend and drives
+//! it entirely through the typed `lagkv::client` SDK — zero hand-rolled
+//! JSON.  Covered end-to-end:
+//!
+//! * the ops control plane: `info` (engine facts) before any traffic,
+//!   `stats` (pool/prefix/coordinator gauges) after it, `sessions`
+//!   list/delete, and `drain` → typed `draining` rejection → clean
+//!   shutdown;
+//! * one streaming request (typed events) and one cancel mid-decode;
+//! * memory-pressure admission on a tiny byte-budgeted pool: LRU session
+//!   shedding, the typed `pool-exhausted` rejection, recovery;
+//! * the radix prefix cache: CoW prefix reuse across clients
+//!   (`reused_tokens > 0`), prefix-snapshot shedding under pressure.
+//!
+//! Exits non-zero on any protocol violation.
 //!
 //! ```bash
 //! cargo run --release --example server_smoke
@@ -18,18 +23,14 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use lagkv::backend::EngineSpec;
+use lagkv::client::{Client, StreamItem};
 use lagkv::config::PolicyKind;
-use lagkv::coordinator::{GenerateParams, Router, RouterConfig, SessionConfig};
+use lagkv::coordinator::{Event, GenerateParams, Router, RouterConfig, SessionConfig};
 use lagkv::engine::Engine;
 use lagkv::kvpool::row_bytes;
-use lagkv::server::{Client, Server};
-use lagkv::util::json::Json;
+use lagkv::server::Server;
 use lagkv::util::rng::Rng;
 use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
-
-fn kind(ev: &Json) -> String {
-    ev.opt("event").and_then(|e| e.as_str().ok()).unwrap_or("").to_string()
-}
 
 /// A prompt whose greedy chain runs long enough that a cancel sent after
 /// the first token always lands mid-decode (the toy LM head ends most
@@ -64,67 +65,100 @@ fn main() -> anyhow::Result<()> {
         std::thread::spawn(move || server.serve_listener(listener, stop))
     };
 
-    // 1. One streaming request: started -> token+ -> done, deltas nonempty.
+    // 0. Control plane before any traffic: `info` reports the engine facts
+    //    a client sizes itself from.
     let mut client = Client::connect(port)?;
-    let line = GenerateParams::new("the pass key is 12345678 . remember it <q> pass key <a>")
+    let info = client.info()?;
+    assert_eq!(info.version, 1, "this build speaks wire protocol v1");
+    assert_eq!(info.models.len(), 1, "one model served: {info:?}");
+    let mi = &info.models[0];
+    assert_eq!(mi.model, "llama_like");
+    assert!(!mi.prefill_buckets.is_empty(), "prefill buckets must be exported");
+    assert!(mi.decode_buckets.contains(&1), "b=1 decode is the session path");
+    assert_eq!(mi.max_prompt_tokens, *mi.prefill_buckets.iter().max().unwrap());
+    assert!(mi.pool_budget_bytes.is_none(), "unbudgeted deployment");
+    assert!(info.policies.contains(&"lagkv".to_string()));
+    assert!(info.policies.contains(&"none".to_string()));
+    println!(
+        "info ok: prefill {:?}, decode {:?}, {} policies",
+        mi.prefill_buckets,
+        mi.decode_buckets,
+        info.policies.len()
+    );
+
+    // 1. One streaming request: started -> token+ -> done, typed events.
+    let params = GenerateParams::new("the pass key is 12345678 . remember it <q> pass key <a>")
         .lag(16)
         .ratio(0.5)
-        .max_new(12)
-        .request_line(Some(1), true);
-    let events = client.stream(&line)?;
+        .max_new(12);
+    let mut stream = client.generate_stream(1, params)?;
+    let mut events = Vec::new();
+    while let Some(item) = stream.next()? {
+        if let StreamItem::Event(ev) = item {
+            events.push(ev);
+        }
+    }
     assert!(events.len() >= 3, "expected started/token/done, got {} events", events.len());
-    assert_eq!(kind(&events[0]), "started", "first event: {:?}", events[0]);
-    assert_eq!(kind(events.last().unwrap()), "done");
-    let n_tokens = events.iter().filter(|e| kind(e) == "token").count();
+    assert!(matches!(events[0], Event::Started { .. }), "first event: {:?}", events[0]);
+    let n_tokens = events.iter().filter(|e| matches!(e, Event::Token { .. })).count();
     assert!(n_tokens >= 1, "stream produced no tokens");
-    let done = events.last().unwrap();
-    assert_eq!(done.get("new_tokens")?.as_usize()?, n_tokens, "done must count the tokens");
+    match events.last().unwrap() {
+        Event::Done { usage, .. } => {
+            assert_eq!(usage.new_tokens, n_tokens, "done must count the tokens")
+        }
+        other => panic!("stream must end with done, got {other:?}"),
+    }
     println!("streaming ok: {n_tokens} tokens");
 
     // 2. Cancel an unknown id: acked, not found.
-    client.send_line(r#"{"cancel": 777}"#)?;
-    let ack = client.read_json()?;
-    assert_eq!(kind(&ack), "cancel_ack");
-    assert!(!ack.get("found")?.as_bool()?, "unknown id must not be found");
+    assert!(!client.cancel(777)?, "unknown id must not be found");
 
     // 3. A long streaming request cancelled mid-decode: read one token,
-    //    send {"cancel"}, then the stream must terminate with code
-    //    "cancelled" before the generation budget is spent.
-    let line = GenerateParams::new(prompt)
-        .lag(16)
-        .ratio(0.5)
-        .max_new(600)
-        .request_line(Some(2), true);
-    client.send_line(&line)?;
+    //    cancel through the stream handle, then the stream must terminate
+    //    with code "cancelled" before the generation budget is spent.
+    let params = GenerateParams::new(prompt).lag(16).ratio(0.5).max_new(600);
+    let mut stream = client.generate_stream(2, params)?;
     let mut seen_tokens = 0usize;
     let mut cancelled = false;
     let mut sent_cancel = false;
-    loop {
-        let ev = client.read_json()?;
-        match kind(&ev).as_str() {
-            "token" => {
+    while let Some(item) = stream.next()? {
+        match item {
+            StreamItem::Event(Event::Token { .. }) => {
                 seen_tokens += 1;
                 if !sent_cancel {
                     sent_cancel = true;
-                    client.send_line(r#"{"cancel": 2}"#)?;
+                    stream.cancel()?;
                 }
             }
-            "cancel_ack" => {
-                assert!(ev.get("found")?.as_bool()?, "live id must be found");
+            StreamItem::CancelAck(ack) => {
+                assert!(ack.found, "live id must be found");
             }
-            "error" => {
-                let code = ev.get("error")?.get("code")?.as_str()?.to_string();
-                assert_eq!(code, "cancelled", "terminal error: {ev:?}");
+            StreamItem::Event(Event::Error { error, .. }) => {
+                assert_eq!(error.code(), "cancelled", "terminal error: {error}");
                 cancelled = true;
-                break;
             }
-            "done" => panic!("request completed before the cancel landed"),
+            StreamItem::Event(Event::Done { .. }) => {
+                panic!("request completed before the cancel landed")
+            }
             _ => {}
         }
     }
     assert!(cancelled);
     assert!(seen_tokens < 600, "cancel must abort mid-decode ({seen_tokens} tokens seen)");
     println!("cancellation ok: aborted after {seen_tokens} tokens");
+
+    // 3b. `stats` after traffic: the coordinator counters and the exact
+    //     pool ledger are visible over the wire.
+    let stats = client.stats()?;
+    assert!(!stats.draining);
+    assert_eq!(stats.models.len(), 1);
+    let ms = &stats.models[0];
+    assert!(ms.coord.completed >= 1, "completed counter: {:?}", ms.coord);
+    assert_eq!(ms.coord.cancelled, 1, "one cancel: {:?}", ms.coord);
+    assert_eq!(ms.coord.queued, 0, "queue drained: {:?}", ms.coord);
+    assert!(ms.pool.high_water_bytes > 0, "traffic must move the pool ledger");
+    assert!(ms.prefix.is_none(), "no prefix cache configured");
+    println!("stats ok: completed {} cancelled {}", ms.coord.completed, ms.coord.cancelled);
 
     // 4. Clean shutdown.  The forwarder thread deregisters its request
     //    right after writing the terminal line; give it a moment.
@@ -167,32 +201,39 @@ fn main() -> anyhow::Result<()> {
     let small_prompt = |rng: &mut Rng| {
         gen_passkey(rng, &PasskeySpec { n_filler: 60, n_digits: 8, depth: None }).prompt
     };
+    let small = |rng: &mut Rng, max_new: usize| {
+        GenerateParams::new(small_prompt(rng)).lag(16).ratio(0.5).max_new(max_new)
+    };
 
     // A: a session turn that fits and stays resident in the store.
-    let a = client2.call(
-        &GenerateParams::new(small_prompt(&mut rng))
-            .lag(16)
-            .ratio(0.5)
-            .max_new(8)
-            .session("mem-1")
-            .request_line(Some(20), false),
-    )?;
-    assert_eq!(*a.get("error")?, Json::Null, "session turn must fit: {a:?}");
+    let a = client2.generate(Some(20), small(&mut rng, 8).session("mem-1"))?;
+    assert!(a.error.is_none(), "session turn must fit: {a:?}");
     let pool2 = router2.pool("llama_like").expect("pool");
     assert!(pool2.resident_bytes() > 0, "the detached session must stay resident");
+
+    // A': the stored session is listable over the wire.  (The store entry
+    // lands right after the terminal event is written, so poll briefly.)
+    let mut listed = client2.sessions(Some("llama_like"))?;
+    for _ in 0..100 {
+        if !listed.models[0].sessions.is_empty() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        listed = client2.sessions(Some("llama_like"))?;
+    }
+    assert_eq!(listed.models.len(), 1);
+    let entry = &listed.models[0].sessions;
+    assert_eq!(entry.len(), 1, "one stored session: {listed:?}");
+    assert_eq!(entry[0].id, "mem-1");
+    assert_eq!(entry[0].turns, 1);
+    assert!(entry[0].bytes > 0 && entry[0].rows > 0);
 
     // B: a request whose worst case exceeds the whole budget is a typed
     //    rejection — and it must NOT shed the innocent stored session on
     //    the way out (shedding cannot make an impossible request fit).
-    let d_resp = client2.call(
-        &GenerateParams::new(small_prompt(&mut rng))
-            .lag(16)
-            .ratio(0.5)
-            .max_new(600)
-            .request_line(Some(21), false),
-    )?;
-    let code = d_resp.get("error")?.get("code")?.as_str()?.to_string();
-    assert_eq!(code, "pool-exhausted", "oversized request: {d_resp:?}");
+    let d_resp = client2.generate(Some(21), small(&mut rng, 600))?;
+    let code = d_resp.error.as_ref().map(|e| e.code());
+    assert_eq!(code, Some("pool-exhausted"), "oversized request: {d_resp:?}");
     assert_eq!(stats2.pool_rejected.load(Ordering::Relaxed), 1);
     assert_eq!(
         stats2.sessions_shed.load(Ordering::Relaxed),
@@ -203,14 +244,8 @@ fn main() -> anyhow::Result<()> {
 
     // C: a fresh request whose estimate only fits if the LRU session is
     //    shed — recovery under pressure.
-    let b = client2.call(
-        &GenerateParams::new(small_prompt(&mut rng))
-            .lag(16)
-            .ratio(0.5)
-            .max_new(100)
-            .request_line(Some(22), false),
-    )?;
-    assert_eq!(*b.get("error")?, Json::Null, "request must recover by shedding: {b:?}");
+    let b = client2.generate(Some(22), small(&mut rng, 100))?;
+    assert!(b.error.is_none(), "request must recover by shedding: {b:?}");
     assert!(
         stats2.sessions_shed.load(Ordering::Relaxed) >= 1,
         "the stored session must have been shed to admit the new work"
@@ -218,20 +253,22 @@ fn main() -> anyhow::Result<()> {
 
     // D: after rejection and shedding the pool still serves right-sized
     //    work, and the shed session resumes as a fresh conversation.
-    let c = client2.call(
-        &GenerateParams::new(small_prompt(&mut rng))
-            .lag(16)
-            .ratio(0.5)
-            .max_new(8)
-            .session("mem-1")
-            .request_line(Some(23), false),
-    )?;
-    assert_eq!(*c.get("error")?, Json::Null, "pool must recover: {c:?}");
-    assert_eq!(
-        c.get("reused_tokens")?.as_usize()?,
-        0,
-        "the shed session must restart from scratch"
-    );
+    let c = client2.generate(Some(23), small(&mut rng, 8).session("mem-1"))?;
+    assert!(c.error.is_none(), "pool must recover: {c:?}");
+    assert_eq!(c.reused_tokens, 0, "the shed session must restart from scratch");
+
+    // D': the control plane deletes the re-stored session outright (poll:
+    // the entry lands just after the turn's terminal event).
+    let mut deleted = client2.delete_session(None, "mem-1")?;
+    for _ in 0..100 {
+        if deleted == 1 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        deleted = client2.delete_session(None, "mem-1")?;
+    }
+    assert_eq!(deleted, 1, "one entry deleted");
+    assert!(client2.sessions(None)?.models[0].sessions.is_empty());
     println!(
         "pool pressure ok: shed {} session(s), {} typed rejection(s)",
         stats2.sessions_shed.load(Ordering::Relaxed),
@@ -245,7 +282,10 @@ fn main() -> anyhow::Result<()> {
     // 6. Radix prefix cache over a budgeted pool: two clients share a long
     //    system prompt; the second must hit the prefix cache (CoW attach,
     //    `reused_tokens > 0` on the wire), then pool pressure sheds prefix
-    //    snapshots (the cheapest tier) and the cache recovers.
+    //    snapshots (the cheapest tier) and the cache recovers.  The prefix
+    //    gauges are asserted over the wire through the `stats` op, and the
+    //    run ends with the drain handshake: `drain` -> typed `draining`
+    //    rejection -> clean shutdown.
     let prefix_budget = 1200 * row;
     let prefix_cfg = RouterConfig {
         queue_depth: 8,
@@ -254,7 +294,6 @@ fn main() -> anyhow::Result<()> {
         prefix_cache: Some(lagkv::kvpool::PrefixConfig { stride: 24, ..Default::default() }),
     };
     let router3 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, prefix_cfg));
-    let prefix3 = router3.prefix_cache("llama_like").expect("prefix cache");
     let server3 = Arc::new(Server::new(router3));
     let stop3 = Arc::new(AtomicBool::new(false));
     let (listener3, port3) = Server::bind(0)?;
@@ -266,44 +305,56 @@ fn main() -> anyhow::Result<()> {
     let mut rng3 = Rng::seed_from(77);
     let sys = gen_passkey(&mut rng3, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None })
         .prompt;
-    let turn = |q: &str, id: u64, max_new: usize| {
-        GenerateParams::new(format!("{sys} {q}"))
-            .lag(16)
-            .ratio(0.5)
-            .max_new(max_new)
-            .request_line(Some(id), false)
+    let turn = |q: &str, max_new: usize| {
+        GenerateParams::new(format!("{sys} {q}")).lag(16).ratio(0.5).max_new(max_new)
     };
 
     // client A warms the tree with the shared prefix
     let mut client_a = Client::connect(port3)?;
-    let a1 = client_a.call(&turn("<q> the pass key <a>", 30, 8))?;
-    assert_eq!(*a1.get("error")?, Json::Null, "warming request failed: {a1:?}");
-    assert_eq!(a1.get("reused_tokens")?.as_usize()?, 0, "a cold tree cannot hit");
+    let a1 = client_a.generate(Some(30), turn("<q> the pass key <a>", 8))?;
+    assert!(a1.error.is_none(), "warming request failed: {a1:?}");
+    assert_eq!(a1.reused_tokens, 0, "a cold tree cannot hit");
 
     // client B shares the system prompt and must attach the prefix CoW
     let mut client_b = Client::connect(port3)?;
-    let b1 = client_b.call(&turn("<q> remember the words <a>", 31, 8))?;
-    assert_eq!(*b1.get("error")?, Json::Null, "shared-prefix request failed: {b1:?}");
-    let reused = b1.get("reused_tokens")?.as_usize()?;
-    assert!(reused > 0, "second client must hit the prefix cache: {b1:?}");
-    assert!(prefix3.stats().hits >= 1, "hit gauge must record the attach");
-    println!("prefix cache ok: second client reused {reused} prompt tokens");
+    let b1 = client_b.generate(Some(31), turn("<q> remember the words <a>", 8))?;
+    assert!(b1.error.is_none(), "shared-prefix request failed: {b1:?}");
+    assert!(b1.reused_tokens > 0, "second client must hit the prefix cache: {b1:?}");
+    let wire = client_b.stats()?;
+    let prefix_gauges = wire.models[0].prefix.expect("prefix gauges on the wire");
+    assert!(prefix_gauges.hits >= 1, "hit gauge must record the attach: {prefix_gauges:?}");
+    assert!(prefix_gauges.entries >= 1);
+    println!("prefix cache ok: second client reused {} prompt tokens", b1.reused_tokens);
 
     // pool pressure: a huge generation budget forces prefix-snapshot
     // shedding (tier 1) before admission — and the request still runs
-    let big = client_b.call(&turn("<q> the pass key <a>", 32, 999))?;
-    assert_eq!(*big.get("error")?, Json::Null, "shedding must admit it: {big:?}");
-    assert!(prefix3.stats().shed >= 1, "pressure must shed prefix snapshots first");
+    let big = client_b.generate(Some(32), turn("<q> the pass key <a>", 999))?;
+    assert!(big.error.is_none(), "shedding must admit it: {big:?}");
+    let shed = client_b.stats()?.models[0].prefix.expect("gauges").shed;
+    assert!(shed >= 1, "pressure must shed prefix snapshots first");
 
     // recovery: the tree repopulates from fresh traffic
-    let a2 = client_a.call(&turn("<q> the pass key <a>", 33, 8))?;
-    assert_eq!(*a2.get("error")?, Json::Null, "post-shed request failed: {a2:?}");
-    assert!(prefix3.stats().entries >= 1, "tree must repopulate after shedding");
+    let a2 = client_a.generate(Some(33), turn("<q> the pass key <a>", 8))?;
+    assert!(a2.error.is_none(), "post-shed request failed: {a2:?}");
+    let after = client_b.stats()?.models[0].prefix.expect("gauges");
+    assert!(after.entries >= 1, "tree must repopulate after shedding");
     println!(
         "prefix pressure ok: shed {} snapshot(s), {} entries resident",
-        prefix3.stats().shed,
-        prefix3.stats().entries,
+        after.shed, after.entries,
     );
+
+    // 7. Drain handshake: admission closes with a typed rejection while
+    //    the connection stays serviceable, then the shutdown is clean.
+    let drained = client_b.drain()?;
+    assert!(drained.draining);
+    let rejected = client_b.generate(Some(34), turn("<q> the pass key <a>", 4))?;
+    assert_eq!(
+        rejected.error.as_ref().map(|e| e.code()),
+        Some("draining"),
+        "post-drain submit must be the typed rejection: {rejected:?}"
+    );
+    assert!(client_b.stats()?.draining, "stats must report the drain");
+    println!("drain ok: typed rejection after admission closed");
 
     drop(client_a);
     drop(client_b);

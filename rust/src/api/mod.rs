@@ -1,0 +1,1244 @@
+//! Versioned wire protocol `v1` — the single source of truth for every
+//! byte that crosses the TCP boundary.
+//!
+//! One JSON object per line, both directions.  A request line is a
+//! versioned envelope:
+//!
+//! ```json
+//! {"v": 1, "op": "generate", "prompt": "...", "stream": true}
+//! {"v": 1, "op": "cancel", "id": 7}
+//! {"v": 1, "op": "stats"}
+//! {"v": 1, "op": "sessions", "delete": "chat-42"}
+//! {"v": 1, "op": "info"}
+//! {"v": 1, "op": "drain"}
+//! ```
+//!
+//! * **Versioning** — `"v"` names the protocol revision.  Anything other
+//!   than `1` is a typed `bad-params` rejection, so a future `v2` can
+//!   change shapes without silently corrupting old clients.
+//! * **Compat shim** — a line with no `"v"` field is the pre-versioning
+//!   dialect: `{"cancel": id}` maps onto `v1/cancel` and any other object
+//!   maps onto `v1/generate` with the same field set.  Old clients keep
+//!   working verbatim; new fields only exist inside the envelope.
+//! * **Unknown fields are a hard error** naming every unrecognized key —
+//!   a typo in `stream` or `session_id` must never silently change
+//!   behaviour.
+//! * **Typed both ways** — every request, response, and event shape here
+//!   owns its `to_json`/`from_json` pair and round-trips exactly (pinned
+//!   by unit tests here and property tests in rust/tests/properties.rs).
+//!   The blocking client SDK ([`crate::client`]) is built entirely on
+//!   these types; no caller hand-rolls JSON.
+//!
+//! Response shapes (server → client) are documented in DESIGN.md §9:
+//! one-shot [`crate::coordinator::Response`] lines, NDJSON
+//! [`crate::coordinator::Event`] streams, `cancel_ack` lines, and the
+//! control-plane payloads ([`StatsResponse`], [`SessionsResponse`],
+//! [`InfoResponse`], [`DrainResponse`]).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{PolicyKind, ScorerBackend};
+use crate::coordinator::{
+    ApiError, CoordStats, Event, GenerateParams, Response, SessionSummary, Timings, Usage,
+};
+use crate::kvpool::{PoolStats, PrefixStats};
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// The protocol revision this build speaks.
+pub const VERSION: i64 = 1;
+
+/// Envelope fields shared by every v1 request line.
+const ENVELOPE_FIELDS: &[&str] = &["v", "op"];
+
+/// `generate` request fields (identical between v1 and the legacy shim).
+pub const GENERATE_FIELDS: &[&str] = &[
+    "id",
+    "model",
+    "prompt",
+    "policy",
+    "sink",
+    "lag",
+    "ratio",
+    "scorer",
+    "skip_layers",
+    "max_new",
+    "seed",
+    "stream",
+    "session_id",
+];
+
+fn bad(message: impl Into<String>) -> ApiError {
+    ApiError::BadParams { message: message.into() }
+}
+
+fn field_err(e: anyhow::Error, name: &str) -> ApiError {
+    bad(format!("field {name:?}: {e:#}"))
+}
+
+/// Reject any key outside `known` (with `allow_envelope`, the `v`/`op`
+/// envelope fields are also tolerated — the legacy dialect has none).
+fn reject_unknown(
+    m: &BTreeMap<String, Json>,
+    known: &[&str],
+    allow_envelope: bool,
+) -> Result<(), ApiError> {
+    let unknown: Vec<&str> = m
+        .keys()
+        .map(|k| k.as_str())
+        .filter(|k| !known.contains(k) && !(allow_envelope && ENVELOPE_FIELDS.contains(k)))
+        .collect();
+    if unknown.is_empty() {
+        Ok(())
+    } else {
+        Err(bad(format!("unrecognized fields {unknown:?} (known: {known:?})")))
+    }
+}
+
+fn opt_string(v: &Json, name: &str) -> Result<Option<String>, ApiError> {
+    match v.opt(name) {
+        None => Ok(None),
+        Some(x) => Ok(Some(x.as_str().map_err(|e| field_err(e, name))?.to_string())),
+    }
+}
+
+fn envelope(op: &str) -> Vec<(&'static str, Json)> {
+    vec![("v", n(VERSION as f64)), ("op", s(op.to_string()))]
+}
+
+fn u64_field(v: &Json, name: &str) -> Result<u64> {
+    Ok(v.get(name)?.as_i64()? as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// One parsed client line, any protocol revision (the legacy shim maps the
+/// pre-versioning dialect onto these same ops).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiRequest {
+    Generate(GenerateRequest),
+    Cancel(CancelRequest),
+    Stats(StatsRequest),
+    Sessions(SessionsRequest),
+    Info(InfoRequest),
+    Drain(DrainRequest),
+}
+
+impl ApiRequest {
+    /// The v1 wire form of this request (always the envelope dialect; the
+    /// shim exists for old *clients*, new writers never emit legacy lines).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ApiRequest::Generate(r) => r.to_json(),
+            ApiRequest::Cancel(r) => r.to_json(),
+            ApiRequest::Stats(r) => r.to_json(),
+            ApiRequest::Sessions(r) => r.to_json(),
+            ApiRequest::Info(r) => r.to_json(),
+            ApiRequest::Drain(r) => r.to_json(),
+        }
+    }
+}
+
+/// Parse one request line: the v1 envelope, or the legacy bare dialect via
+/// the compat shim.  Every failure is a typed `bad-params`.
+pub fn parse_line(line: &str) -> Result<ApiRequest, ApiError> {
+    let v = Json::parse(line).map_err(|e| bad(format!("invalid JSON: {e:#}")))?;
+    let m = v.as_obj().map_err(|_| bad("request must be a JSON object"))?;
+    if m.contains_key("v") {
+        let ver = v
+            .get("v")
+            .and_then(|x| x.as_i64())
+            .map_err(|e| field_err(e, "v"))?;
+        if ver != VERSION {
+            return Err(bad(format!(
+                "unsupported protocol version {ver} (supported: {VERSION})"
+            )));
+        }
+        let op = v
+            .get("op")
+            .and_then(|x| x.as_str())
+            .map_err(|e| field_err(e, "op"))?;
+        match op {
+            "generate" => Ok(ApiRequest::Generate(GenerateRequest::from_fields(&v, true)?)),
+            "cancel" => Ok(ApiRequest::Cancel(CancelRequest::from_fields(&v)?)),
+            "stats" => {
+                reject_unknown(m, &[], true)?;
+                Ok(ApiRequest::Stats(StatsRequest))
+            }
+            "sessions" => Ok(ApiRequest::Sessions(SessionsRequest::from_fields(&v)?)),
+            "info" => {
+                reject_unknown(m, &[], true)?;
+                Ok(ApiRequest::Info(InfoRequest))
+            }
+            "drain" => {
+                reject_unknown(m, &[], true)?;
+                Ok(ApiRequest::Drain(DrainRequest))
+            }
+            other => Err(bad(format!(
+                "unknown op {other:?} (generate|cancel|stats|sessions|info|drain)"
+            ))),
+        }
+    } else if m.contains_key("cancel") {
+        // Legacy cancel: {"cancel": id}, nothing else.
+        let extra: Vec<&str> =
+            m.keys().filter(|k| k.as_str() != "cancel").map(|k| k.as_str()).collect();
+        if !extra.is_empty() {
+            return Err(bad(format!("cancel line has extra fields: {extra:?}")));
+        }
+        let id = v
+            .get("cancel")
+            .and_then(|x| x.as_i64())
+            .map_err(|e| bad(format!("bad cancel id: {e:#}")))?;
+        if id < 0 {
+            // Same validation as the v1 cancel op: the shim maps onto
+            // identical semantics, never a wrapped huge id.
+            return Err(bad("cancel id must be non-negative"));
+        }
+        Ok(ApiRequest::Cancel(CancelRequest { id: id as u64 }))
+    } else {
+        // Legacy generate: the bare pre-versioning request line.
+        Ok(ApiRequest::Generate(GenerateRequest::from_fields(&v, false)?))
+    }
+}
+
+/// `{"v":1,"op":"generate", ...}` — a [`GenerateParams`] bundle plus the
+/// wire-only knobs (request id, streaming).  Fields at their defaults are
+/// omitted on write and filled back in on parse, so the round-trip is
+/// exact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateRequest {
+    /// Client-chosen request id (the server assigns one when absent).
+    pub id: Option<u64>,
+    /// NDJSON event stream instead of the one-line folded response.
+    pub stream: bool,
+    pub params: GenerateParams,
+}
+
+impl GenerateRequest {
+    pub fn new(params: GenerateParams) -> GenerateRequest {
+        GenerateRequest { id: None, stream: false, params }
+    }
+
+    fn field_pairs(&self) -> Vec<(&'static str, Json)> {
+        let p = &self.params;
+        let mut pairs: Vec<(&'static str, Json)> = Vec::new();
+        if let Some(id) = self.id {
+            pairs.push(("id", n(id as f64)));
+        }
+        pairs.push(("model", s(p.model.clone())));
+        pairs.push(("prompt", s(p.prompt.clone())));
+        pairs.push(("policy", s(p.policy.name())));
+        pairs.push(("sink", n(p.sink as f64)));
+        pairs.push(("lag", n(p.lag as f64)));
+        pairs.push(("ratio", n(p.ratio)));
+        if p.scorer == ScorerBackend::Xla {
+            pairs.push(("scorer", s("xla")));
+        }
+        if let Some(skip) = p.skip_layers {
+            pairs.push(("skip_layers", n(skip as f64)));
+        }
+        pairs.push(("max_new", n(p.max_new as f64)));
+        pairs.push(("seed", n(p.seed as f64)));
+        if let Some(sid) = &p.session {
+            pairs.push(("session_id", s(sid.clone())));
+        }
+        if self.stream {
+            pairs.push(("stream", Json::Bool(true)));
+        }
+        pairs
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("generate");
+        pairs.extend(self.field_pairs());
+        obj(pairs)
+    }
+
+    /// The pre-versioning dialect (no envelope) — only for exercising the
+    /// compat shim in tests; new writers always emit [`Self::to_json`].
+    pub fn to_legacy_json(&self) -> Json {
+        obj(self.field_pairs())
+    }
+
+    /// Shared field parser for the v1 (`envelope == true`) and legacy
+    /// paths.  Absent fields take [`GenerateParams`] defaults; unknown
+    /// fields and invalid parameter values are typed `bad-params` errors.
+    fn from_fields(v: &Json, envelope: bool) -> Result<GenerateRequest, ApiError> {
+        let m = v.as_obj().map_err(|_| bad("request must be a JSON object"))?;
+        reject_unknown(m, GENERATE_FIELDS, envelope)?;
+        let mut p = GenerateParams::default();
+        if let Some(x) = v.opt("model") {
+            p.model = x.as_str().map_err(|e| field_err(e, "model"))?.to_string();
+        }
+        if let Some(x) = v.opt("prompt") {
+            p.prompt = x.as_str().map_err(|e| field_err(e, "prompt"))?.to_string();
+        }
+        if let Some(x) = v.opt("policy") {
+            let name = x.as_str().map_err(|e| field_err(e, "policy"))?;
+            p.policy = PolicyKind::parse(name).map_err(|e| field_err(e, "policy"))?;
+        }
+        if let Some(x) = v.opt("sink") {
+            p.sink = x.as_usize().map_err(|e| field_err(e, "sink"))?;
+        }
+        if let Some(x) = v.opt("lag") {
+            p.lag = x.as_usize().map_err(|e| field_err(e, "lag"))?;
+        }
+        if let Some(x) = v.opt("ratio") {
+            p.ratio = x.as_f64().map_err(|e| field_err(e, "ratio"))?;
+        }
+        if let Some(x) = v.opt("scorer") {
+            p.scorer = match x.as_str().map_err(|e| field_err(e, "scorer"))? {
+                "xla" => ScorerBackend::Xla,
+                "rust" => ScorerBackend::Rust,
+                other => return Err(bad(format!("unknown scorer {other:?} (rust|xla)"))),
+            };
+        }
+        if let Some(x) = v.opt("skip_layers") {
+            p.skip_layers = Some(x.as_usize().map_err(|e| field_err(e, "skip_layers"))?);
+        }
+        if let Some(x) = v.opt("max_new") {
+            p.max_new = x.as_usize().map_err(|e| field_err(e, "max_new"))?;
+        }
+        if let Some(x) = v.opt("seed") {
+            p.seed = x.as_i64().map_err(|e| field_err(e, "seed"))? as u64;
+        }
+        if let Some(x) = v.opt("session_id") {
+            p.session = Some(x.as_str().map_err(|e| field_err(e, "session_id"))?.to_string());
+        }
+        let stream = match v.opt("stream") {
+            Some(x) => x.as_bool().map_err(|e| field_err(e, "stream"))?,
+            None => false,
+        };
+        let id = v
+            .opt("id")
+            .map(|x| x.as_i64().map_err(|e| field_err(e, "id")))
+            .transpose()?
+            .map(|i| i as u64);
+        p.validate()?;
+        Ok(GenerateRequest { id, stream, params: p })
+    }
+}
+
+/// `{"v":1,"op":"cancel","id":N}` (legacy shim: `{"cancel":N}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CancelRequest {
+    pub id: u64,
+}
+
+impl CancelRequest {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("cancel");
+        pairs.push(("id", n(self.id as f64)));
+        obj(pairs)
+    }
+
+    fn from_fields(v: &Json) -> Result<CancelRequest, ApiError> {
+        reject_unknown(v.as_obj().map_err(|_| bad("not an object"))?, &["id"], true)?;
+        let id = v
+            .get("id")
+            .and_then(|x| x.as_i64())
+            .map_err(|e| field_err(e, "id"))?;
+        if id < 0 {
+            return Err(bad("cancel id must be non-negative"));
+        }
+        Ok(CancelRequest { id: id as u64 })
+    }
+}
+
+/// `{"v":1,"op":"stats"}` — one snapshot of every model's gauges.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsRequest;
+
+impl StatsRequest {
+    pub fn to_json(&self) -> Json {
+        obj(envelope("stats"))
+    }
+}
+
+/// `{"v":1,"op":"sessions"}` — list the session stores; with `"model"`
+/// restrict to one model, with `"delete"` drop the named session instead.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SessionsRequest {
+    pub model: Option<String>,
+    pub delete: Option<String>,
+}
+
+impl SessionsRequest {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("sessions");
+        if let Some(m) = &self.model {
+            pairs.push(("model", s(m.clone())));
+        }
+        if let Some(d) = &self.delete {
+            pairs.push(("delete", s(d.clone())));
+        }
+        obj(pairs)
+    }
+
+    fn from_fields(v: &Json) -> Result<SessionsRequest, ApiError> {
+        reject_unknown(
+            v.as_obj().map_err(|_| bad("not an object"))?,
+            &["model", "delete"],
+            true,
+        )?;
+        Ok(SessionsRequest { model: opt_string(v, "model")?, delete: opt_string(v, "delete")? })
+    }
+}
+
+/// `{"v":1,"op":"info"}` — deployment facts clients self-configure from.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InfoRequest;
+
+impl InfoRequest {
+    pub fn to_json(&self) -> Json {
+        obj(envelope("info"))
+    }
+}
+
+/// `{"v":1,"op":"drain"}` — close admission; in-flight work finishes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DrainRequest;
+
+impl DrainRequest {
+    pub fn to_json(&self) -> Json {
+        obj(envelope("drain"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generation responses: one-shot lines and NDJSON event streams
+// ---------------------------------------------------------------------------
+
+/// Render one [`Event`] as an NDJSON line body.
+pub fn event_to_json(ev: &Event) -> Json {
+    match ev {
+        Event::Started { id, prompt_tokens, reused_tokens } => obj(vec![
+            ("event", s("started")),
+            ("id", n(*id as f64)),
+            ("prompt_tokens", n(*prompt_tokens as f64)),
+            ("reused_tokens", n(*reused_tokens as f64)),
+        ]),
+        Event::Token { id, token, text_delta } => obj(vec![
+            ("event", s("token")),
+            ("id", n(*id as f64)),
+            ("token", n(*token as f64)),
+            ("text_delta", s(text_delta.clone())),
+        ]),
+        Event::Compression { id, layer_lens, evicted } => obj(vec![
+            ("event", s("compression")),
+            ("id", n(*id as f64)),
+            ("layer_lens", arr(layer_lens.iter().map(|&l| n(l as f64)).collect())),
+            ("evicted", n(*evicted as f64)),
+        ]),
+        Event::Done { id, usage, timings } => obj(vec![
+            ("event", s("done")),
+            ("id", n(*id as f64)),
+            ("prompt_tokens", n(usage.prompt_tokens as f64)),
+            ("new_tokens", n(usage.new_tokens as f64)),
+            ("reused_tokens", n(usage.reused_tokens as f64)),
+            ("cache_lens", arr(usage.cache_lens.iter().map(|&l| n(l as f64)).collect())),
+            ("compression_events", n(usage.compression_events as f64)),
+            ("queue_us", n(timings.queue_us as f64)),
+            ("prefill_us", n(timings.prefill_us as f64)),
+            ("decode_us", n(timings.decode_us as f64)),
+        ]),
+        Event::Error { id, error } => obj(vec![
+            ("event", s("error")),
+            ("id", n(*id as f64)),
+            ("error", error.to_json()),
+        ]),
+    }
+}
+
+/// One NDJSON event line (the exact bytes the server writes).
+pub fn event_line(ev: &Event) -> String {
+    event_to_json(ev).to_string()
+}
+
+/// Parse an NDJSON event line back into the typed [`Event`].
+pub fn event_from_json(v: &Json) -> Result<Event> {
+    let kind = v.get("event")?.as_str()?;
+    let id = v.get("id")?.as_i64()? as u64;
+    Ok(match kind {
+        "started" => Event::Started {
+            id,
+            prompt_tokens: v.get("prompt_tokens")?.as_usize()?,
+            reused_tokens: v.get("reused_tokens")?.as_usize()?,
+        },
+        "token" => Event::Token {
+            id,
+            token: v.get("token")?.as_i64()? as i32,
+            text_delta: v.get("text_delta")?.as_str()?.to_string(),
+        },
+        "compression" => Event::Compression {
+            id,
+            layer_lens: v.get("layer_lens")?.as_usize_vec()?,
+            evicted: v.get("evicted")?.as_usize()?,
+        },
+        "done" => Event::Done {
+            id,
+            usage: Usage {
+                prompt_tokens: v.get("prompt_tokens")?.as_usize()?,
+                new_tokens: v.get("new_tokens")?.as_usize()?,
+                reused_tokens: v.get("reused_tokens")?.as_usize()?,
+                cache_lens: v.get("cache_lens")?.as_usize_vec()?,
+                compression_events: v.get("compression_events")?.as_usize()?,
+            },
+            timings: Timings {
+                queue_us: u64_field(v, "queue_us")?,
+                prefill_us: u64_field(v, "prefill_us")?,
+                decode_us: u64_field(v, "decode_us")?,
+            },
+        },
+        "error" => Event::Error { id, error: ApiError::from_json(v.get("error")?)? },
+        other => anyhow::bail!("unknown event kind {other:?}"),
+    })
+}
+
+/// Render the one-shot (non-streaming) response line.
+pub fn response_to_json(r: &Response) -> Json {
+    obj(vec![
+        ("id", n(r.id as f64)),
+        ("text", s(r.text.clone())),
+        ("tokens", arr(r.tokens.iter().map(|&t| n(t as f64)).collect())),
+        ("prompt_tokens", n(r.prompt_tokens as f64)),
+        ("reused_tokens", n(r.reused_tokens as f64)),
+        ("new_tokens", n(r.tokens.len() as f64)),
+        ("cache_lens", arr(r.cache_lens.iter().map(|&l| n(l as f64)).collect())),
+        ("compression_events", n(r.compression_events as f64)),
+        ("queue_us", n(r.queue_us as f64)),
+        ("prefill_us", n(r.prefill_us as f64)),
+        ("decode_us", n(r.decode_us as f64)),
+        ("error", r.error.as_ref().map(|e| e.to_json()).unwrap_or(Json::Null)),
+    ])
+}
+
+/// One one-shot response line (the exact bytes the server writes).
+pub fn response_line(r: &Response) -> String {
+    response_to_json(r).to_string()
+}
+
+/// Parse a one-shot response line back into the typed [`Response`].
+/// (`new_tokens` is derived from `tokens` and accepted but not stored.)
+pub fn response_from_json(v: &Json) -> Result<Response> {
+    let error = match v.get("error")? {
+        Json::Null => None,
+        e => Some(ApiError::from_json(e)?),
+    };
+    let tokens = v
+        .get("tokens")?
+        .as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_i64()? as i32))
+        .collect::<Result<Vec<i32>>>()?;
+    Ok(Response {
+        id: v.get("id")?.as_i64()? as u64,
+        text: v.get("text")?.as_str()?.to_string(),
+        tokens,
+        prompt_tokens: v.get("prompt_tokens")?.as_usize()?,
+        reused_tokens: v.get("reused_tokens")?.as_usize()?,
+        cache_lens: v.get("cache_lens")?.as_usize_vec()?,
+        compression_events: v.get("compression_events")?.as_usize()?,
+        queue_us: u64_field(v, "queue_us")?,
+        prefill_us: u64_field(v, "prefill_us")?,
+        decode_us: u64_field(v, "decode_us")?,
+        error,
+    })
+}
+
+/// `{"event":"cancel_ack","id":N,"found":bool}` — the reply to a cancel op
+/// (identical between v1 and the legacy dialect; it may arrive interleaved
+/// with stream events on the connection that issued the cancel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CancelAck {
+    pub id: u64,
+    pub found: bool,
+}
+
+impl CancelAck {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("event", s("cancel_ack")),
+            ("id", n(self.id as f64)),
+            ("found", Json::Bool(self.found)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CancelAck> {
+        if v.get("event")?.as_str()? != "cancel_ack" {
+            anyhow::bail!("not a cancel_ack line: {v:?}");
+        }
+        Ok(CancelAck { id: v.get("id")?.as_i64()? as u64, found: v.get("found")?.as_bool()? })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control plane: stats / sessions / info / drain responses
+// ---------------------------------------------------------------------------
+
+fn pool_stats_to_json(p: &PoolStats) -> Json {
+    obj(vec![
+        ("block_bytes", n(p.block_bytes as f64)),
+        ("loose_bytes", n(p.loose_bytes as f64)),
+        ("free_bytes", n(p.free_bytes as f64)),
+        ("high_water_bytes", n(p.high_water_bytes as f64)),
+        ("resident_blocks", n(p.resident_blocks as f64)),
+        ("free_blocks", n(p.free_blocks as f64)),
+        // Derived, for dashboards; ignored on parse.
+        ("resident_bytes", n(p.resident_bytes() as f64)),
+        ("budget", p.budget.map(|b| n(b as f64)).unwrap_or(Json::Null)),
+    ])
+}
+
+fn pool_stats_from_json(v: &Json) -> Result<PoolStats> {
+    Ok(PoolStats {
+        block_bytes: v.get("block_bytes")?.as_usize()?,
+        loose_bytes: v.get("loose_bytes")?.as_usize()?,
+        free_bytes: v.get("free_bytes")?.as_usize()?,
+        high_water_bytes: v.get("high_water_bytes")?.as_usize()?,
+        resident_blocks: v.get("resident_blocks")?.as_usize()?,
+        free_blocks: v.get("free_blocks")?.as_usize()?,
+        budget: match v.get("budget")? {
+            Json::Null => None,
+            b => Some(b.as_usize()?),
+        },
+    })
+}
+
+fn prefix_stats_to_json(p: &PrefixStats) -> Json {
+    obj(vec![
+        ("entries", n(p.entries as f64)),
+        ("resident_bytes", n(p.resident_bytes as f64)),
+        ("hits", n(p.hits as f64)),
+        ("misses", n(p.misses as f64)),
+        ("inserts", n(p.inserts as f64)),
+        ("shed", n(p.shed as f64)),
+        ("reused_bytes", n(p.reused_bytes as f64)),
+        ("reused_tokens", n(p.reused_tokens as f64)),
+    ])
+}
+
+fn prefix_stats_from_json(v: &Json) -> Result<PrefixStats> {
+    Ok(PrefixStats {
+        entries: v.get("entries")?.as_usize()?,
+        resident_bytes: v.get("resident_bytes")?.as_usize()?,
+        hits: u64_field(v, "hits")?,
+        misses: u64_field(v, "misses")?,
+        inserts: u64_field(v, "inserts")?,
+        shed: u64_field(v, "shed")?,
+        reused_bytes: u64_field(v, "reused_bytes")?,
+        reused_tokens: u64_field(v, "reused_tokens")?,
+    })
+}
+
+/// Snapshot of one coordinator's liveness counters
+/// ([`CoordStats`], atomics flattened for the wire).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoordCounters {
+    pub completed: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    pub sessions_resumed: u64,
+    pub pool_rejected: u64,
+    pub sessions_shed: u64,
+    pub prefix_shed: u64,
+    /// Requests waiting in the admission queue right now.
+    pub queued: u64,
+}
+
+impl CoordCounters {
+    pub fn snapshot(stats: &CoordStats) -> CoordCounters {
+        use std::sync::atomic::Ordering::Relaxed;
+        CoordCounters {
+            completed: stats.completed.load(Relaxed),
+            cancelled: stats.cancelled.load(Relaxed),
+            failed: stats.failed.load(Relaxed),
+            sessions_resumed: stats.sessions_resumed.load(Relaxed),
+            pool_rejected: stats.pool_rejected.load(Relaxed),
+            sessions_shed: stats.sessions_shed.load(Relaxed),
+            prefix_shed: stats.prefix_shed.load(Relaxed),
+            queued: stats.queued.load(Relaxed),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        obj(vec![
+            ("completed", n(self.completed as f64)),
+            ("cancelled", n(self.cancelled as f64)),
+            ("failed", n(self.failed as f64)),
+            ("sessions_resumed", n(self.sessions_resumed as f64)),
+            ("pool_rejected", n(self.pool_rejected as f64)),
+            ("sessions_shed", n(self.sessions_shed as f64)),
+            ("prefix_shed", n(self.prefix_shed as f64)),
+            ("queued", n(self.queued as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<CoordCounters> {
+        Ok(CoordCounters {
+            completed: u64_field(v, "completed")?,
+            cancelled: u64_field(v, "cancelled")?,
+            failed: u64_field(v, "failed")?,
+            sessions_resumed: u64_field(v, "sessions_resumed")?,
+            pool_rejected: u64_field(v, "pool_rejected")?,
+            sessions_shed: u64_field(v, "sessions_shed")?,
+            prefix_shed: u64_field(v, "prefix_shed")?,
+            queued: u64_field(v, "queued")?,
+        })
+    }
+}
+
+/// Session-store occupancy of one model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionGauges {
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+/// One model's full gauge set in a [`StatsResponse`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelStats {
+    pub model: String,
+    /// The KV block pool's exact byte ledger.
+    pub pool: PoolStats,
+    /// Radix prefix-cache gauges, when the deployment runs one.
+    pub prefix: Option<PrefixStats>,
+    pub coord: CoordCounters,
+    pub sessions: SessionGauges,
+    /// Configured admission-queue capacity (current depth: `coord.queued`).
+    pub queue_capacity: usize,
+}
+
+impl ModelStats {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(self.model.clone())),
+            ("pool", pool_stats_to_json(&self.pool)),
+            ("prefix", self.prefix.as_ref().map(prefix_stats_to_json).unwrap_or(Json::Null)),
+            ("coord", self.coord.to_json()),
+            (
+                "sessions",
+                obj(vec![
+                    ("entries", n(self.sessions.entries as f64)),
+                    ("bytes", n(self.sessions.bytes as f64)),
+                ]),
+            ),
+            ("queue_capacity", n(self.queue_capacity as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ModelStats> {
+        let sg = v.get("sessions")?;
+        Ok(ModelStats {
+            model: v.get("model")?.as_str()?.to_string(),
+            pool: pool_stats_from_json(v.get("pool")?)?,
+            prefix: match v.get("prefix")? {
+                Json::Null => None,
+                p => Some(prefix_stats_from_json(p)?),
+            },
+            coord: CoordCounters::from_json(v.get("coord")?)?,
+            sessions: SessionGauges {
+                entries: sg.get("entries")?.as_usize()?,
+                bytes: sg.get("bytes")?.as_usize()?,
+            },
+            queue_capacity: v.get("queue_capacity")?.as_usize()?,
+        })
+    }
+}
+
+/// Reply to `{"v":1,"op":"stats"}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsResponse {
+    pub draining: bool,
+    /// Sorted by model name, one entry per served variant.
+    pub models: Vec<ModelStats>,
+}
+
+impl StatsResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("stats");
+        pairs.push(("draining", Json::Bool(self.draining)));
+        pairs.push(("models", arr(self.models.iter().map(|m| m.to_json()).collect())));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<StatsResponse> {
+        Ok(StatsResponse {
+            draining: v.get("draining")?.as_bool()?,
+            models: v
+                .get("models")?
+                .as_arr()?
+                .iter()
+                .map(ModelStats::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+fn session_summary_to_json(ss: &SessionSummary) -> Json {
+    obj(vec![
+        ("id", s(ss.id.clone())),
+        ("turns", n(ss.turns as f64)),
+        ("rows", n(ss.rows as f64)),
+        ("bytes", n(ss.bytes as f64)),
+    ])
+}
+
+fn session_summary_from_json(v: &Json) -> Result<SessionSummary> {
+    Ok(SessionSummary {
+        id: v.get("id")?.as_str()?.to_string(),
+        turns: v.get("turns")?.as_i64()? as u32,
+        rows: v.get("rows")?.as_usize()?,
+        bytes: v.get("bytes")?.as_usize()?,
+    })
+}
+
+/// One model's stored sessions in a [`SessionsResponse`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSessions {
+    pub model: String,
+    pub sessions: Vec<SessionSummary>,
+}
+
+/// Reply to `{"v":1,"op":"sessions"}`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionsResponse {
+    pub models: Vec<ModelSessions>,
+    /// Entries dropped by this request's `"delete"` (0 without one).
+    pub deleted: u64,
+}
+
+impl SessionsResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("sessions");
+        pairs.push(("deleted", n(self.deleted as f64)));
+        pairs.push((
+            "models",
+            arr(self
+                .models
+                .iter()
+                .map(|m| {
+                    obj(vec![
+                        ("model", s(m.model.clone())),
+                        (
+                            "sessions",
+                            arr(m.sessions.iter().map(session_summary_to_json).collect()),
+                        ),
+                    ])
+                })
+                .collect()),
+        ));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SessionsResponse> {
+        let mut models = Vec::new();
+        for m in v.get("models")?.as_arr()? {
+            models.push(ModelSessions {
+                model: m.get("model")?.as_str()?.to_string(),
+                sessions: m
+                    .get("sessions")?
+                    .as_arr()?
+                    .iter()
+                    .map(session_summary_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+        Ok(SessionsResponse { models, deleted: u64_field(v, "deleted")? })
+    }
+}
+
+/// Engine facts for one model, published by its coordinator thread once
+/// the engine loads (clients size prompts/batches from these).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub model: String,
+    /// Ascending prefill token buckets the backend exports.
+    pub prefill_buckets: Vec<usize>,
+    /// Ascending decode batch buckets.
+    pub decode_buckets: Vec<usize>,
+    /// Largest prompt any prefill bucket holds (`bad-params` beyond it).
+    pub max_prompt_tokens: usize,
+    /// Decode capacity: max cache rows per (layer, head).
+    pub tmax: usize,
+    /// The KV pool's byte budget, when one is configured.
+    pub pool_budget_bytes: Option<usize>,
+}
+
+impl ModelInfo {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(self.model.clone())),
+            (
+                "prefill_buckets",
+                arr(self.prefill_buckets.iter().map(|&b| n(b as f64)).collect()),
+            ),
+            (
+                "decode_buckets",
+                arr(self.decode_buckets.iter().map(|&b| n(b as f64)).collect()),
+            ),
+            ("max_prompt_tokens", n(self.max_prompt_tokens as f64)),
+            ("tmax", n(self.tmax as f64)),
+            (
+                "pool_budget_bytes",
+                self.pool_budget_bytes.map(|b| n(b as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ModelInfo> {
+        Ok(ModelInfo {
+            model: v.get("model")?.as_str()?.to_string(),
+            prefill_buckets: v.get("prefill_buckets")?.as_usize_vec()?,
+            decode_buckets: v.get("decode_buckets")?.as_usize_vec()?,
+            max_prompt_tokens: v.get("max_prompt_tokens")?.as_usize()?,
+            tmax: v.get("tmax")?.as_usize()?,
+            pool_budget_bytes: match v.get("pool_budget_bytes")? {
+                Json::Null => None,
+                b => Some(b.as_usize()?),
+            },
+        })
+    }
+}
+
+/// Reply to `{"v":1,"op":"info"}`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InfoResponse {
+    /// Protocol revision the server speaks (this build: 1).
+    pub version: i64,
+    /// Sorted by model name; a variant whose engine failed to load is
+    /// absent (its requests answer `engine-failure`).
+    pub models: Vec<ModelInfo>,
+    /// Every [`PolicyKind`] name this build accepts.
+    pub policies: Vec<String>,
+    /// Configured admission-queue depth per model.
+    pub queue_depth: usize,
+    /// Session-store entry cap per model (0 disables persistence).
+    pub session_capacity: usize,
+    /// Whether the radix prefix cache is enabled.
+    pub prefix_cache: bool,
+}
+
+impl InfoResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("info");
+        pairs.push(("version", n(self.version as f64)));
+        pairs.push(("models", arr(self.models.iter().map(|m| m.to_json()).collect())));
+        pairs.push(("policies", arr(self.policies.iter().map(|p| s(p.clone())).collect())));
+        pairs.push(("queue_depth", n(self.queue_depth as f64)));
+        pairs.push(("session_capacity", n(self.session_capacity as f64)));
+        pairs.push(("prefix_cache", Json::Bool(self.prefix_cache)));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<InfoResponse> {
+        Ok(InfoResponse {
+            version: v.get("version")?.as_i64()?,
+            models: v
+                .get("models")?
+                .as_arr()?
+                .iter()
+                .map(ModelInfo::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            policies: v.get("policies")?.as_str_vec()?,
+            queue_depth: v.get("queue_depth")?.as_usize()?,
+            session_capacity: v.get("session_capacity")?.as_usize()?,
+            prefix_cache: v.get("prefix_cache")?.as_bool()?,
+        })
+    }
+}
+
+/// Reply to `{"v":1,"op":"drain"}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainResponse {
+    /// Always true after the op (draining is irreversible).
+    pub draining: bool,
+    /// Requests still running or streaming at the time of the reply.
+    pub in_flight: usize,
+}
+
+impl DrainResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("drain");
+        pairs.push(("draining", Json::Bool(self.draining)));
+        pairs.push(("in_flight", n(self.in_flight as f64)));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<DrainResponse> {
+        Ok(DrainResponse {
+            draining: v.get("draining")?.as_bool()?,
+            in_flight: v.get("in_flight")?.as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_gen(line: &str) -> GenerateRequest {
+        match parse_line(line).unwrap() {
+            ApiRequest::Generate(g) => g,
+            other => panic!("expected a generate request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v1_generate_round_trips_and_fills_defaults() {
+        let req = GenerateRequest {
+            id: Some(7),
+            stream: true,
+            params: GenerateParams::new("the falcon")
+                .model("qwen_like")
+                .policy(PolicyKind::H2O)
+                .lag(32)
+                .session("chat-1"),
+        };
+        let line = req.to_json().to_string();
+        assert!(line.contains("\"v\":1"), "line must carry the envelope: {line}");
+        assert!(line.contains("\"op\":\"generate\""));
+        let back = parse_gen(&line);
+        assert_eq!(back, req);
+        // defaults fill in when omitted
+        let minimal = parse_gen(r#"{"v":1,"op":"generate","prompt":"hi"}"#);
+        assert_eq!(minimal.params.lag, GenerateParams::default().lag);
+        assert!(!minimal.stream);
+        assert_eq!(minimal.id, None);
+    }
+
+    #[test]
+    fn legacy_shim_maps_bare_lines_onto_v1_ops() {
+        let req = GenerateRequest {
+            id: Some(3),
+            stream: false,
+            params: GenerateParams::new("hello").lag(16).ratio(0.25),
+        };
+        let legacy = req.to_legacy_json().to_string();
+        assert!(!legacy.contains("\"v\""), "legacy dialect has no envelope: {legacy}");
+        assert_eq!(parse_gen(&legacy), req, "shim must map onto the same request");
+        // and the two dialects parse identically
+        assert_eq!(parse_gen(&legacy), parse_gen(&req.to_json().to_string()));
+        // legacy cancel
+        match parse_line(r#"{"cancel": 12}"#).unwrap() {
+            ApiRequest::Cancel(c) => assert_eq!(c.id, 12),
+            other => panic!("expected cancel, got {other:?}"),
+        }
+        assert!(parse_line(r#"{"cancel": 12, "model": "m"}"#).is_err());
+        // negative ids are rejected identically by both dialects
+        assert_eq!(parse_line(r#"{"cancel": -1}"#).unwrap_err().code(), "bad-params");
+        assert_eq!(
+            parse_line(r#"{"v":1,"op":"cancel","id":-1}"#).unwrap_err().code(),
+            "bad-params"
+        );
+    }
+
+    #[test]
+    fn unknown_fields_and_bad_versions_are_typed_errors() {
+        for line in [
+            r#"{"v":1,"op":"generate","prompt":"x","strem":true}"#,
+            r#"{"prompt":"x","sessionid":"a"}"#,
+        ] {
+            let err = parse_line(line).unwrap_err();
+            assert_eq!(err.code(), "bad-params", "line {line:?}");
+        }
+        let msg = parse_line(r#"{"prompt":"x","strem":true,"sessionid":"a"}"#)
+            .unwrap_err()
+            .message();
+        assert!(msg.contains("strem"), "must name the typo: {msg}");
+        assert!(msg.contains("sessionid"), "must name the typo: {msg}");
+        let err = parse_line(r#"{"v":2,"op":"generate","prompt":"x"}"#).unwrap_err();
+        assert!(err.message().contains("version"), "got: {}", err.message());
+        let err = parse_line(r#"{"v":1,"op":"frobnicate"}"#).unwrap_err();
+        assert!(err.message().contains("frobnicate"));
+        // invalid params are caught at parse time, v1 and legacy alike
+        for line in ["{}", "not json", "[1,2]", r#"{"prompt":"x","ratio":0}"#] {
+            assert_eq!(parse_line(line).unwrap_err().code(), "bad-params", "{line:?}");
+        }
+    }
+
+    #[test]
+    fn control_plane_requests_round_trip() {
+        for req in [
+            ApiRequest::Cancel(CancelRequest { id: 9 }),
+            ApiRequest::Stats(StatsRequest),
+            ApiRequest::Sessions(SessionsRequest {
+                model: Some("llama_like".into()),
+                delete: Some("chat-1".into()),
+            }),
+            ApiRequest::Sessions(SessionsRequest::default()),
+            ApiRequest::Info(InfoRequest),
+            ApiRequest::Drain(DrainRequest),
+        ] {
+            let line = req.to_json().to_string();
+            assert_eq!(parse_line(&line).unwrap(), req, "round-trip of {line}");
+        }
+        assert_eq!(
+            parse_line(r#"{"v":1,"op":"stats","extra":1}"#).unwrap_err().code(),
+            "bad-params"
+        );
+    }
+
+    #[test]
+    fn events_round_trip_through_json() {
+        let events = vec![
+            Event::Started { id: 7, prompt_tokens: 151, reused_tokens: 12 },
+            Event::Token { id: 7, token: 1200, text_delta: " the".into() },
+            Event::Compression { id: 7, layer_lens: vec![56, 58], evicted: 12 },
+            Event::Done {
+                id: 7,
+                usage: Usage {
+                    prompt_tokens: 151,
+                    new_tokens: 2,
+                    reused_tokens: 12,
+                    cache_lens: vec![83, 83],
+                    compression_events: 8,
+                },
+                timings: Timings { queue_us: 12, prefill_us: 950, decode_us: 310 },
+            },
+            Event::Error { id: 7, error: ApiError::Cancelled },
+            Event::Error {
+                id: 8,
+                error: ApiError::PoolExhausted { model: "m".into(), detail: "need 64".into() },
+            },
+        ];
+        for ev in &events {
+            let line = event_line(ev);
+            let back = event_from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(&back, ev, "round-trip of {line}");
+        }
+        assert!(event_from_json(&Json::parse(r#"{"event":"nope","id":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn responses_round_trip_through_json() {
+        let ok = Response {
+            id: 3,
+            text: "42".into(),
+            tokens: vec![9, 2],
+            prompt_tokens: 10,
+            reused_tokens: 4,
+            cache_lens: vec![12, 12],
+            compression_events: 1,
+            queue_us: 5,
+            prefill_us: 6,
+            decode_us: 7,
+            error: None,
+        };
+        let back = response_from_json(&Json::parse(&response_line(&ok)).unwrap()).unwrap();
+        assert_eq!(back, ok);
+        let v = Json::parse(&response_line(&ok)).unwrap();
+        assert_eq!(v.get("new_tokens").unwrap().as_usize().unwrap(), 2);
+
+        let err = Response::from_error(4, ApiError::QueueFull { model: "m".into() });
+        let v = Json::parse(&response_line(&err)).unwrap();
+        let code = v.get("error").unwrap().get("code").unwrap();
+        assert_eq!(code.as_str().unwrap(), "queue-full");
+        assert_eq!(response_from_json(&v).unwrap(), err);
+    }
+
+    #[test]
+    fn cancel_ack_round_trips() {
+        let ack = CancelAck { id: 12, found: true };
+        let v = Json::parse(&ack.to_json().to_string()).unwrap();
+        assert_eq!(CancelAck::from_json(&v).unwrap(), ack);
+        assert!(CancelAck::from_json(&Json::parse(r#"{"event":"token"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn control_plane_responses_round_trip() {
+        let stats = StatsResponse {
+            draining: false,
+            models: vec![ModelStats {
+                model: "llama_like".into(),
+                pool: PoolStats {
+                    block_bytes: 3072,
+                    loose_bytes: 1024,
+                    free_bytes: 512,
+                    high_water_bytes: 5120,
+                    resident_blocks: 3,
+                    free_blocks: 1,
+                    budget: Some(8192),
+                },
+                prefix: Some(PrefixStats {
+                    entries: 3,
+                    resident_bytes: 1024,
+                    hits: 5,
+                    misses: 2,
+                    inserts: 7,
+                    shed: 1,
+                    reused_bytes: 4096,
+                    reused_tokens: 96,
+                }),
+                coord: CoordCounters { completed: 9, queued: 2, ..Default::default() },
+                sessions: SessionGauges { entries: 1, bytes: 2048 },
+                queue_capacity: 256,
+            }],
+        };
+        let v = Json::parse(&stats.to_json().to_string()).unwrap();
+        assert_eq!(StatsResponse::from_json(&v).unwrap(), stats);
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "stats");
+
+        let unbudgeted = StatsResponse {
+            draining: true,
+            models: vec![ModelStats {
+                model: "m".into(),
+                pool: PoolStats {
+                    block_bytes: 0,
+                    loose_bytes: 0,
+                    free_bytes: 0,
+                    high_water_bytes: 0,
+                    resident_blocks: 0,
+                    free_blocks: 0,
+                    budget: None,
+                },
+                prefix: None,
+                coord: CoordCounters::default(),
+                sessions: SessionGauges::default(),
+                queue_capacity: 8,
+            }],
+        };
+        let v = Json::parse(&unbudgeted.to_json().to_string()).unwrap();
+        assert_eq!(StatsResponse::from_json(&v).unwrap(), unbudgeted);
+
+        let sessions = SessionsResponse {
+            deleted: 1,
+            models: vec![ModelSessions {
+                model: "llama_like".into(),
+                sessions: vec![SessionSummary {
+                    id: "chat-1".into(),
+                    turns: 2,
+                    rows: 164,
+                    bytes: 11808,
+                }],
+            }],
+        };
+        let v = Json::parse(&sessions.to_json().to_string()).unwrap();
+        assert_eq!(SessionsResponse::from_json(&v).unwrap(), sessions);
+
+        let info = InfoResponse {
+            version: VERSION,
+            models: vec![ModelInfo {
+                model: "llama_like".into(),
+                prefill_buckets: vec![128, 256, 512],
+                decode_buckets: vec![1, 4],
+                max_prompt_tokens: 512,
+                tmax: 640,
+                pool_budget_bytes: None,
+            }],
+            policies: PolicyKind::all().iter().map(|p| p.name().to_string()).collect(),
+            queue_depth: 256,
+            session_capacity: 64,
+            prefix_cache: true,
+        };
+        let v = Json::parse(&info.to_json().to_string()).unwrap();
+        assert_eq!(InfoResponse::from_json(&v).unwrap(), info);
+
+        let drain = DrainResponse { draining: true, in_flight: 3 };
+        let v = Json::parse(&drain.to_json().to_string()).unwrap();
+        assert_eq!(DrainResponse::from_json(&v).unwrap(), drain);
+    }
+}

@@ -1,0 +1,271 @@
+//! Typed blocking client SDK for the `v1` wire protocol.
+//!
+//! Every caller that talks to a lagkv server — `serve_demo`, the CI smoke
+//! binary, the TCP e2e tests, `lagkv ops` — goes through this module; no
+//! caller hand-rolls JSON.  The SDK is a thin blocking veneer over
+//! [`crate::api`]: requests are typed structs serialized by their own
+//! `to_json`, replies are parsed back into the coordinator's typed shapes.
+//!
+//! ```no_run
+//! use lagkv::client::{Client, StreamItem};
+//! use lagkv::coordinator::GenerateParams;
+//!
+//! let mut client = Client::connect(7199).unwrap();
+//! // one-shot: folded Response
+//! let resp = client.generate(None, GenerateParams::new("the pass key <a>")).unwrap();
+//! println!("{}", resp.text);
+//! // streaming: typed events, cancellable mid-decode
+//! let mut stream = client.generate_stream(7, GenerateParams::new("...")).unwrap();
+//! while let Some(item) = stream.next().unwrap() {
+//!     if let StreamItem::Event(ev) = item {
+//!         println!("{ev:?}");
+//!     }
+//! }
+//! // ops: the control plane
+//! let stats = client.stats().unwrap();
+//! let drained = client.drain().unwrap();
+//! println!("{} models, draining={}", stats.models.len(), drained.draining);
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::{
+    self, CancelAck, CancelRequest, DrainRequest, DrainResponse, GenerateRequest, InfoRequest,
+    InfoResponse, SessionsRequest, SessionsResponse, StatsRequest, StatsResponse,
+};
+use crate::coordinator::{ApiError, Event, GenerateParams, Response};
+use crate::util::json::Json;
+
+/// A blocking connection to one lagkv server.
+///
+/// One request/stream at a time per connection: while a
+/// [`GenStream`] is live, drive it to its terminal event (its borrow of
+/// the client enforces this) before issuing the next call.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// One line read off a live stream: a typed [`Event`], or the ack of a
+/// cancel issued on this connection (acks interleave with events).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamItem {
+    Event(Event),
+    CancelAck(CancelAck),
+}
+
+impl Client {
+    pub fn connect(port: u16) -> Result<Client> {
+        let stream = TcpStream::connect(("127.0.0.1", port))
+            .with_context(|| format!("connecting to 127.0.0.1:{port}"))?;
+        let writer = stream.try_clone().context("cloning client stream")?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Write one raw line.  Escape hatch for protocol tests (malformed
+    /// lines, the legacy compat shim); SDK methods never go through this.
+    pub fn send_raw(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn send_json(&mut self, v: &Json) -> Result<()> {
+        self.send_raw(&v.to_string())
+    }
+
+    /// Read one JSON line (blocking).  A closed connection is an error.
+    pub fn read_json(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Json::parse(&line)
+    }
+
+    /// Raw request/one-reply exchange.  Escape hatch for protocol tests
+    /// (e.g. asserting the legacy compat shim end-to-end).
+    pub fn raw_call(&mut self, line: &str) -> Result<Json> {
+        self.send_raw(line)?;
+        self.read_json()
+    }
+
+    /// One-shot generation: returns the folded [`Response`] (its `error`
+    /// field carries any typed rejection — queue-full, draining, ...).
+    pub fn generate(&mut self, id: Option<u64>, params: GenerateParams) -> Result<Response> {
+        let req = GenerateRequest { id, stream: false, params };
+        self.send_json(&req.to_json())?;
+        let v = self.read_json()?;
+        parse_oneshot(&v)
+    }
+
+    /// Streaming generation: returns a handle yielding typed [`Event`]s
+    /// until the terminal `Done`/`Error` (a rejected submit yields one
+    /// terminal `Error` event).
+    pub fn generate_stream(&mut self, id: u64, params: GenerateParams) -> Result<GenStream<'_>> {
+        let req = GenerateRequest { id: Some(id), stream: true, params };
+        self.send_json(&req.to_json())?;
+        Ok(GenStream { client: self, done: false, id, pending_acks: 0 })
+    }
+
+    /// Cancel a request by id (possibly one submitted on another
+    /// connection).  Returns whether the id was live.  Only valid while no
+    /// stream is in flight here — mid-stream, use [`GenStream::cancel`].
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        self.send_json(&CancelRequest { id }.to_json())?;
+        let v = self.read_json()?;
+        Ok(CancelAck::from_json(&v)?.found)
+    }
+
+    /// Control plane: every model's pool/prefix/coordinator/queue gauges.
+    pub fn stats(&mut self) -> Result<StatsResponse> {
+        let v = self.op_call(&StatsRequest.to_json())?;
+        StatsResponse::from_json(&v)
+    }
+
+    /// Control plane: deployment facts (models, buckets, policies, caps).
+    pub fn info(&mut self) -> Result<InfoResponse> {
+        let v = self.op_call(&InfoRequest.to_json())?;
+        InfoResponse::from_json(&v)
+    }
+
+    /// Control plane: list stored sessions (all models, or one).
+    pub fn sessions(&mut self, model: Option<&str>) -> Result<SessionsResponse> {
+        let req = SessionsRequest { model: model.map(str::to_string), delete: None };
+        let v = self.op_call(&req.to_json())?;
+        SessionsResponse::from_json(&v)
+    }
+
+    /// Control plane: drop a stored session by id.  Returns how many
+    /// entries were deleted (across models, unless one is named).
+    pub fn delete_session(&mut self, model: Option<&str>, id: &str) -> Result<u64> {
+        let req = SessionsRequest {
+            model: model.map(str::to_string),
+            delete: Some(id.to_string()),
+        };
+        let v = self.op_call(&req.to_json())?;
+        Ok(SessionsResponse::from_json(&v)?.deleted)
+    }
+
+    /// Control plane: close admission (typed `draining` rejections from
+    /// here on) while in-flight work finishes.  Irreversible.
+    pub fn drain(&mut self) -> Result<DrainResponse> {
+        let v = self.op_call(&DrainRequest.to_json())?;
+        DrainResponse::from_json(&v)
+    }
+
+    /// Send a control-plane op and read its reply, surfacing a server-side
+    /// rejection (`{"error": ...}` line) as a typed failure.
+    fn op_call(&mut self, req: &Json) -> Result<Json> {
+        self.send_json(req)?;
+        let v = self.read_json()?;
+        if v.opt("op").is_none() {
+            if let Some(e) = v.opt("error") {
+                bail!("server rejected the op: {}", ApiError::from_json(e)?);
+            }
+        }
+        Ok(v)
+    }
+}
+
+/// Parse a one-shot reply line: the full response shape, or the server's
+/// bare `{"error": ...}` rejection of an unparseable line.
+fn parse_oneshot(v: &Json) -> Result<Response> {
+    if v.opt("id").is_none() {
+        if let Some(e) = v.opt("error") {
+            return Ok(Response::from_error(0, ApiError::from_json(e)?));
+        }
+    }
+    api::response_from_json(v)
+}
+
+/// A live NDJSON event stream.  Borrows the client exclusively until the
+/// terminal event, so request/reply framing can never interleave.
+pub struct GenStream<'a> {
+    client: &'a mut Client,
+    done: bool,
+    id: u64,
+    /// Cancels sent whose acks have not been read yet.  The ack and the
+    /// terminal `cancelled` event race on the server's writer lock, so the
+    /// terminal path drains outstanding acks — a stale ack left in the
+    /// socket would corrupt the next call's framing.
+    pending_acks: usize,
+}
+
+impl GenStream<'_> {
+    /// The request id this stream was submitted under.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the server to abort this generation; the stream then terminates
+    /// with a `cancelled` error event (plus an interleaved
+    /// [`StreamItem::CancelAck`]).
+    pub fn cancel(&mut self) -> Result<()> {
+        self.pending_acks += 1;
+        self.client.send_json(&CancelRequest { id: self.id }.to_json())
+    }
+
+    /// Read acks still owed after the terminal event, so the connection is
+    /// left exactly line-aligned for the next call.
+    fn drain_acks(&mut self) -> Result<()> {
+        while self.pending_acks > 0 {
+            let v = self.client.read_json()?;
+            CancelAck::from_json(&v).context("draining post-terminal cancel acks")?;
+            self.pending_acks -= 1;
+        }
+        Ok(())
+    }
+
+    /// Next line: `None` after the terminal event.
+    pub fn next(&mut self) -> Result<Option<StreamItem>> {
+        if self.done {
+            return Ok(None);
+        }
+        let v = self.client.read_json()?;
+        match v.opt("event").and_then(|e| e.as_str().ok()) {
+            Some("cancel_ack") => {
+                self.pending_acks = self.pending_acks.saturating_sub(1);
+                Ok(Some(StreamItem::CancelAck(CancelAck::from_json(&v)?)))
+            }
+            Some(_) => {
+                let ev = api::event_from_json(&v)?;
+                if ev.is_terminal() {
+                    self.done = true;
+                    self.drain_acks()?;
+                }
+                Ok(Some(StreamItem::Event(ev)))
+            }
+            None => {
+                // A rejected submit answers with a one-shot response line
+                // (typed error); a malformed line with {"error": ...}.
+                // Either way the stream is over — surface it as the
+                // terminal error event.
+                self.done = true;
+                self.drain_acks()?;
+                let resp = parse_oneshot(&v)?;
+                let error = resp.error.unwrap_or_else(|| ApiError::EngineFailure {
+                    message: "stream reply carried no event and no error".to_string(),
+                });
+                Ok(Some(StreamItem::Event(Event::Error { id: resp.id, error })))
+            }
+        }
+    }
+
+    /// Drain the stream and fold its events into a [`Response`]
+    /// (stream/one-shot parity is pinned by tests on this path).
+    pub fn wait(mut self) -> Result<Response> {
+        let mut events = Vec::new();
+        while let Some(item) = self.next()? {
+            if let StreamItem::Event(ev) = item {
+                events.push(ev);
+            }
+        }
+        Ok(Response::from_events(events))
+    }
+}

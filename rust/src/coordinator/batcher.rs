@@ -30,7 +30,7 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -58,6 +58,10 @@ pub struct CoordStats {
     /// Prefix-cache snapshots evicted to make room under the pool budget
     /// (the cheapest sheddable class — always drained before sessions).
     pub prefix_shed: AtomicU64,
+    /// Requests sitting in the admission queue right now (incremented by
+    /// the router on enqueue, decremented here on dequeue) — the control
+    /// plane's queue-depth gauge.
+    pub queued: AtomicU64,
 }
 
 /// RAII share of the coordinator's in-flight byte reservations.  Admission
@@ -99,7 +103,11 @@ pub struct Coordinator {
     /// Max decode steps a batch runs before re-checking the queue (keeps
     /// admission latency bounded even under long generations).
     pub admission_interval: usize,
-    sessions: SessionStore,
+    /// Shared with the router so the control plane (`sessions` op) can
+    /// list and delete entries from outside this coordinator's thread.
+    /// Lock discipline: never held across an engine call — every access
+    /// here is a short take/put/measure critical section.
+    sessions: Arc<Mutex<SessionStore>>,
     stats: Arc<CoordStats>,
     /// Sum of live [`Reservation`]s (in-flight worst-case bytes).
     reserved: Arc<AtomicUsize>,
@@ -155,10 +163,20 @@ impl Coordinator {
     }
 
     pub fn with_config(engine: Engine, sessions: SessionConfig, stats: Arc<CoordStats>) -> Self {
-        let mut sessions = SessionStore::new(sessions);
+        let store = Arc::new(Mutex::new(SessionStore::new(sessions)));
+        Coordinator::with_store(engine, store, stats)
+    }
+
+    /// Construct around a router-owned session store (shared so the
+    /// control plane can list/delete sessions from outside this thread).
+    pub fn with_store(
+        engine: Engine,
+        sessions: Arc<Mutex<SessionStore>>,
+        stats: Arc<CoordStats>,
+    ) -> Self {
         // The store republishes the pool's sheddable-bytes gauge on every
         // mutation from here on (take, put, byte-cap eviction, shedding).
-        sessions.bind_pool(Arc::clone(engine.pool()));
+        sessions.lock().unwrap().bind_pool(Arc::clone(engine.pool()));
         Coordinator {
             engine,
             admission_interval: 8,
@@ -223,6 +241,12 @@ impl Coordinator {
     }
 
     fn admit(&mut self, item: WorkItem, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
+        // Dequeue gauge (saturating: a directly-fed coordinator, e.g. in a
+        // unit test, never enqueued through the router's increment).
+        let _ = self
+            .stats
+            .queued
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| Some(q.saturating_sub(1)));
         let idx = slots.iter().position(|s| !s.occupied_any()).expect("free slot");
         let req = item.request;
         let mut pending = Pending {
@@ -253,7 +277,8 @@ impl Coordinator {
         let mut scorer = self.engine.make_scorer(&req.compression, req.seed);
         // take() republishes the sheddable gauge: the entry's bytes stop
         // being sheddable the moment we hold it.
-        let resumed = req.session.as_deref().and_then(|sid| self.sessions.take(sid));
+        let resumed =
+            req.session.as_deref().and_then(|sid| self.sessions.lock().unwrap().take(sid));
         // (logits, cache, prefill-stage compression events)
         let prefill = match resumed {
             Some(entry) => {
@@ -275,7 +300,12 @@ impl Coordinator {
                         feed.len(),
                         self.engine.tmax
                     );
-                    self.sessions.put(sid, entry.cache, entry.pending, entry.turns);
+                    self.sessions.lock().unwrap().put(
+                        sid,
+                        entry.cache,
+                        entry.pending,
+                        entry.turns,
+                    );
                     pending.send(Event::Error {
                         id: pending.id,
                         error: ApiError::EngineFailure { message },
@@ -294,7 +324,12 @@ impl Coordinator {
                     }
                     Err(detail) => {
                         let sid = req.session.as_deref().unwrap_or("");
-                        self.sessions.put(sid, entry.cache, entry.pending, entry.turns);
+                        self.sessions.lock().unwrap().put(
+                            sid,
+                            entry.cache,
+                            entry.pending,
+                            entry.turns,
+                        );
                         pending.send(Event::Error {
                             id: pending.id,
                             error: ApiError::PoolExhausted {
@@ -501,7 +536,7 @@ impl Coordinator {
     fn stash_session(&mut self, p: &Pending, seq: SeqState) {
         if let Some(sid) = &p.session {
             // put() republishes the pool's sheddable gauge itself.
-            self.sessions.put(sid, seq.cache, seq.next_token, p.turns + 1);
+            self.sessions.lock().unwrap().put(sid, seq.cache, seq.next_token, p.turns + 1);
         }
     }
 
@@ -559,7 +594,7 @@ impl Coordinator {
             }
             let prefix_bytes =
                 self.engine.prefix_cache().map(|p| p.total_bytes()).unwrap_or(0);
-            let sheddable = prefix_bytes + self.sessions.total_bytes();
+            let sheddable = prefix_bytes + self.sessions.lock().unwrap().total_bytes();
             if effective.saturating_sub(sheddable) + needed > budget {
                 return Err(format!(
                     "{needed} bytes needed for {new_rows} rows, {effective} effectively \
@@ -575,7 +610,7 @@ impl Coordinator {
                 }
             }
             // Tier 2: detached sessions.
-            match self.sessions.shed_lru() {
+            match self.sessions.lock().unwrap().shed_lru() {
                 Some(_) => {
                     self.stats.sessions_shed.fetch_add(1, Ordering::Relaxed);
                 }

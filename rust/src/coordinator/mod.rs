@@ -46,7 +46,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::{mpsc, Arc};
 
 use crate::config::{CompressionConfig, PolicyKind, ScorerBackend};
-use crate::util::json::{arr, n, obj, s, Json};
+use crate::util::json::{arr, obj, s, Json};
 
 /// Structured serving-API error.  Replaces the stringly `Response.error`;
 /// every variant has a stable wire `code()` the server emits verbatim.
@@ -65,6 +65,9 @@ pub enum ApiError {
     EngineFailure { message: String },
     /// The request was cancelled (explicitly, or by dropping its handle).
     Cancelled,
+    /// The deployment is draining: admission is closed, in-flight work is
+    /// finishing, and a shutdown follows.  Retry against another replica.
+    Draining { model: String },
 }
 
 impl ApiError {
@@ -77,6 +80,7 @@ impl ApiError {
             ApiError::BadParams { .. } => "bad-params",
             ApiError::EngineFailure { .. } => "engine-failure",
             ApiError::Cancelled => "cancelled",
+            ApiError::Draining { .. } => "draining",
         }
     }
 
@@ -95,12 +99,57 @@ impl ApiError {
             ApiError::BadParams { message } => message.clone(),
             ApiError::EngineFailure { message } => message.clone(),
             ApiError::Cancelled => "request cancelled".to_string(),
+            ApiError::Draining { model } => {
+                format!("{model} is draining: admission closed, retry elsewhere")
+            }
         }
     }
 
-    /// Wire rendering: `{"code": ..., "message": ...}`.
+    /// Wire rendering: `{"code": ..., "message": ...}` plus the variant's
+    /// structured payload fields (`model`, `detail`, `have`), so a typed
+    /// client reconstructs the exact variant instead of scraping the
+    /// human-readable message.  Legacy consumers keep reading only
+    /// `code`/`message` — the extra fields are additive.
     pub fn to_json(&self) -> Json {
-        obj(vec![("code", s(self.code())), ("message", s(self.message()))])
+        let mut pairs = vec![("code", s(self.code())), ("message", s(self.message()))];
+        match self {
+            ApiError::QueueFull { model } | ApiError::Draining { model } => {
+                pairs.push(("model", s(model.clone())));
+            }
+            ApiError::PoolExhausted { model, detail } => {
+                pairs.push(("model", s(model.clone())));
+                pairs.push(("detail", s(detail.clone())));
+            }
+            ApiError::UnknownModel { model, have } => {
+                pairs.push(("model", s(model.clone())));
+                pairs.push(("have", arr(have.iter().map(|m| s(m.clone())).collect())));
+            }
+            ApiError::BadParams { .. } | ApiError::EngineFailure { .. } | ApiError::Cancelled => {}
+        }
+        obj(pairs)
+    }
+
+    /// Parse the wire form back into the exact variant (client SDK side).
+    pub fn from_json(v: &Json) -> anyhow::Result<ApiError> {
+        let code = v.get("code")?.as_str()?;
+        let model = || -> anyhow::Result<String> { Ok(v.get("model")?.as_str()?.to_string()) };
+        let message = || -> anyhow::Result<String> { Ok(v.get("message")?.as_str()?.to_string()) };
+        Ok(match code {
+            "queue-full" => ApiError::QueueFull { model: model()? },
+            "pool-exhausted" => ApiError::PoolExhausted {
+                model: model()?,
+                detail: v.get("detail")?.as_str()?.to_string(),
+            },
+            "unknown-model" => ApiError::UnknownModel {
+                model: model()?,
+                have: v.get("have")?.as_str_vec()?,
+            },
+            "bad-params" => ApiError::BadParams { message: message()? },
+            "engine-failure" => ApiError::EngineFailure { message: message()? },
+            "cancelled" => ApiError::Cancelled,
+            "draining" => ApiError::Draining { model: model()? },
+            other => anyhow::bail!("unknown error code {other:?}"),
+        })
     }
 }
 
@@ -179,8 +228,9 @@ impl Event {
 /// Everything a caller can set on a generation, with defaults matching
 /// [`CompressionConfig::default`].  This is the one way the server parser,
 /// the examples, the benches, and the harness construct requests — nothing
-/// hand-mutates a `CompressionConfig` anymore.
-#[derive(Debug, Clone)]
+/// hand-mutates a `CompressionConfig` anymore.  Its wire form is
+/// [`crate::api::GenerateRequest`].
+#[derive(Debug, Clone, PartialEq)]
 pub struct GenerateParams {
     pub model: String,
     pub prompt: String,
@@ -312,36 +362,6 @@ impl GenerateParams {
         })
     }
 
-    /// The TCP wire form of this request (see DESIGN.md): one JSON line.
-    /// Fields at their defaults are omitted, matching the parser's
-    /// fill-in-defaults behaviour.
-    pub fn request_line(&self, id: Option<u64>, stream: bool) -> String {
-        let mut pairs: Vec<(&str, Json)> = Vec::new();
-        if let Some(id) = id {
-            pairs.push(("id", n(id as f64)));
-        }
-        pairs.push(("model", s(self.model.clone())));
-        pairs.push(("prompt", s(self.prompt.clone())));
-        pairs.push(("policy", s(self.policy.name())));
-        pairs.push(("sink", n(self.sink as f64)));
-        pairs.push(("lag", n(self.lag as f64)));
-        pairs.push(("ratio", n(self.ratio)));
-        if self.scorer == ScorerBackend::Xla {
-            pairs.push(("scorer", s("xla")));
-        }
-        if let Some(skip) = self.skip_layers {
-            pairs.push(("skip_layers", n(skip as f64)));
-        }
-        pairs.push(("max_new", n(self.max_new as f64)));
-        pairs.push(("seed", n(self.seed as f64)));
-        if let Some(sid) = &self.session {
-            pairs.push(("session_id", s(sid.clone())));
-        }
-        if stream {
-            pairs.push(("stream", Json::Bool(true)));
-        }
-        obj(pairs).to_string()
-    }
 }
 
 /// A generation request as queued at a coordinator.
@@ -358,8 +378,9 @@ pub struct Request {
     pub session: Option<String>,
 }
 
-/// A finished generation, as folded from an event stream.
-#[derive(Debug, Clone)]
+/// A finished generation, as folded from an event stream.  Its wire form
+/// lives in [`crate::api`] (`response_to_json` / `response_from_json`).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub id: u64,
     pub text: String,
@@ -441,24 +462,6 @@ impl Response {
         }
         r
     }
-
-    /// Render as one JSON wire line (the non-streaming response shape).
-    pub fn to_json(&self) -> Json {
-        obj(vec![
-            ("id", n(self.id as f64)),
-            ("text", s(self.text.clone())),
-            ("tokens", arr(self.tokens.iter().map(|&t| n(t as f64)).collect())),
-            ("prompt_tokens", n(self.prompt_tokens as f64)),
-            ("reused_tokens", n(self.reused_tokens as f64)),
-            ("new_tokens", n(self.tokens.len() as f64)),
-            ("cache_lens", arr(self.cache_lens.iter().map(|&l| n(l as f64)).collect())),
-            ("compression_events", n(self.compression_events as f64)),
-            ("queue_us", n(self.queue_us as f64)),
-            ("prefill_us", n(self.prefill_us as f64)),
-            ("decode_us", n(self.decode_us as f64)),
-            ("error", self.error.as_ref().map(|e| e.to_json()).unwrap_or(Json::Null)),
-        ])
-    }
 }
 
 /// A queued unit: request, its live event channel, its cancel flag, and
@@ -472,7 +475,7 @@ pub struct WorkItem {
 
 pub use batcher::{CoordStats, Coordinator};
 pub use router::{GenHandle, Router, RouterConfig};
-pub use session::{SessionConfig, SessionStore};
+pub use session::{SessionConfig, SessionStore, SessionSummary};
 
 #[cfg(test)]
 mod tests {
@@ -483,10 +486,11 @@ mod tests {
         let errs = [
             ApiError::QueueFull { model: "m".into() },
             ApiError::PoolExhausted { model: "m".into(), detail: "z".into() },
-            ApiError::UnknownModel { model: "m".into(), have: vec![] },
+            ApiError::UnknownModel { model: "m".into(), have: vec!["a".into()] },
             ApiError::BadParams { message: "x".into() },
             ApiError::EngineFailure { message: "y".into() },
             ApiError::Cancelled,
+            ApiError::Draining { model: "m".into() },
         ];
         let codes: Vec<&str> = errs.iter().map(|e| e.code()).collect();
         assert_eq!(
@@ -497,14 +501,18 @@ mod tests {
                 "unknown-model",
                 "bad-params",
                 "engine-failure",
-                "cancelled"
+                "cancelled",
+                "draining"
             ]
         );
         for e in &errs {
             let j = e.to_json();
             assert_eq!(j.get("code").unwrap().as_str().unwrap(), e.code());
             assert!(!e.message().is_empty());
+            // the structured payload round-trips to the exact variant
+            assert_eq!(&ApiError::from_json(&j).unwrap(), e);
         }
+        assert!(ApiError::from_json(&Json::parse(r#"{"code":"nope"}"#).unwrap()).is_err());
     }
 
     #[test]
@@ -529,20 +537,6 @@ mod tests {
         assert_eq!(empty.validate().unwrap_err().code(), "bad-params");
         // empty prompt is fine on a session resume
         assert!(GenerateParams::new("").session("s1").validate().is_ok());
-    }
-
-    #[test]
-    fn request_line_round_trips_through_json() {
-        let p = GenerateParams::new("the falcon")
-            .model("qwen_like")
-            .policy(PolicyKind::H2O)
-            .session("chat-1");
-        let v = Json::parse(&p.request_line(Some(3), true)).unwrap();
-        assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 3);
-        assert_eq!(v.get("model").unwrap().as_str().unwrap(), "qwen_like");
-        assert_eq!(v.get("policy").unwrap().as_str().unwrap(), "h2o");
-        assert_eq!(v.get("session_id").unwrap().as_str().unwrap(), "chat-1");
-        assert!(v.get("stream").unwrap().as_bool().unwrap());
     }
 
     #[test]

@@ -19,18 +19,29 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::api::ModelInfo;
 use crate::backend::EngineSpec;
 use crate::kvpool::{BlockPool, PrefixCache, PrefixConfig};
 
 use super::{
-    ApiError, CoordStats, Coordinator, Event, Request, Response, SessionConfig, WorkItem,
+    ApiError, CoordStats, Coordinator, Event, Request, Response, SessionConfig, SessionStore,
+    WorkItem,
 };
+
+/// A session store shared between one coordinator thread and the control
+/// plane (`sessions` op).
+pub type SharedSessionStore = Arc<Mutex<SessionStore>>;
+
+/// Engine facts published by a coordinator thread once its engine load
+/// settles: `None` = still loading, `Some(None)` = load failed,
+/// `Some(Some(info))` = loaded.
+type InfoSlot = Arc<Mutex<Option<Option<ModelInfo>>>>;
 
 /// Per-coordinator serving knobs.
 #[derive(Debug, Clone)]
@@ -96,6 +107,17 @@ pub struct Router {
     stats: HashMap<String, Arc<CoordStats>>,
     pools: HashMap<String, Arc<BlockPool>>,
     prefixes: HashMap<String, Arc<PrefixCache>>,
+    /// Per-model session stores, shared with the coordinator threads so
+    /// the control plane (`sessions` op) can list/delete entries.
+    sessions: HashMap<String, SharedSessionStore>,
+    /// Engine facts published by each coordinator thread once its engine
+    /// loads (`None` until then, or forever if the load failed) — the
+    /// control plane's `info` op reads these.
+    infos: HashMap<String, InfoSlot>,
+    cfg: RouterConfig,
+    /// Once set, admission is closed: every submit is a typed `draining`
+    /// rejection while in-flight work runs to completion.
+    draining: AtomicBool,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -114,6 +136,8 @@ impl Router {
         let mut stats = HashMap::new();
         let mut pools = HashMap::new();
         let mut prefixes = HashMap::new();
+        let mut sessions = HashMap::new();
+        let mut infos = HashMap::new();
         let mut threads = Vec::new();
         for variant in variants {
             let (tx, rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
@@ -131,26 +155,48 @@ impl Router {
             if let Some(pc) = &prefix {
                 prefixes.insert(variant.clone(), Arc::clone(pc));
             }
+            let store = Arc::new(Mutex::new(SessionStore::new(cfg.sessions.clone())));
+            sessions.insert(variant.clone(), Arc::clone(&store));
+            let info_slot: InfoSlot = Arc::new(Mutex::new(None));
+            infos.insert(variant.clone(), Arc::clone(&info_slot));
             let spec = spec.clone();
             let name = variant.clone();
-            let sessions = cfg.sessions.clone();
             threads.push(std::thread::spawn(move || match spec.build(&name) {
                 Ok(mut engine) => {
                     engine.set_pool(pool);
                     if let Some(pc) = prefix {
                         engine.set_prefix_cache(pc);
                     }
-                    let mut coord = Coordinator::with_config(engine, sessions, coord_stats);
+                    // Publish the engine facts the `info` op self-configures
+                    // clients from, before the first request is served.
+                    *info_slot.lock().unwrap() = Some(Some(ModelInfo {
+                        model: name.clone(),
+                        prefill_buckets: engine.backend().prefill_buckets().to_vec(),
+                        decode_buckets: engine.decode_buckets().to_vec(),
+                        max_prompt_tokens: engine.max_prompt_tokens(),
+                        tmax: engine.tmax,
+                        pool_budget_bytes: engine.pool().budget(),
+                    }));
+                    let mut coord = Coordinator::with_store(engine, store, coord_stats);
                     if let Err(e) = coord.run(rx) {
                         eprintln!("coordinator {name} died: {e:#}");
                     }
                 }
                 Err(e) => {
+                    // Tombstone: the `info` op's settle-wait must be able
+                    // to tell "load failed" from "still loading", or every
+                    // info call would stall its full deadline.
+                    *info_slot.lock().unwrap() = Some(None);
                     let error = ApiError::EngineFailure {
                         message: format!("engine {name} failed to load: {e:#}"),
                     };
                     eprintln!("{error}");
                     while let Ok(item) = rx.recv() {
+                        let _ = coord_stats
+                            .queued
+                            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| {
+                                Some(q.saturating_sub(1))
+                            });
                         let _ = item.events.send(Event::Error {
                             id: item.request.id,
                             error: error.clone(),
@@ -159,7 +205,17 @@ impl Router {
                 }
             }));
         }
-        Router { senders, stats, pools, prefixes, threads }
+        Router {
+            senders,
+            stats,
+            pools,
+            prefixes,
+            sessions,
+            infos,
+            cfg,
+            draining: AtomicBool::new(false),
+            threads,
+        }
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -182,12 +238,49 @@ impl Router {
         self.prefixes.get(model).cloned()
     }
 
+    /// This model's session store (the control plane's `sessions` op
+    /// lists/deletes entries through it; the coordinator thread shares it).
+    pub fn session_store(&self, model: &str) -> Option<SharedSessionStore> {
+        self.sessions.get(model).cloned()
+    }
+
+    /// Engine facts for this model, once its coordinator thread has loaded
+    /// the engine (`None` while loading, or forever if the load failed).
+    pub fn model_info(&self, model: &str) -> Option<ModelInfo> {
+        self.infos.get(model).and_then(|slot| slot.lock().unwrap().clone().flatten())
+    }
+
+    /// Whether this model's engine load has settled (loaded *or* failed) —
+    /// the `info` op waits on this, never on a failed load.
+    pub fn model_settled(&self, model: &str) -> bool {
+        self.infos.get(model).map(|slot| slot.lock().unwrap().is_some()).unwrap_or(true)
+    }
+
+    /// The serving knobs this router was started with.
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    /// Close admission: every subsequent submit is a typed `draining`
+    /// rejection while in-flight and already-queued work runs to
+    /// completion.  Irreversible — draining precedes a shutdown.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
     /// Submit a request; returns the live event stream.
     pub fn submit(&self, model: &str, request: Request) -> Result<GenHandle, ApiError> {
         let tx = self.senders.get(model).ok_or_else(|| ApiError::UnknownModel {
             model: model.to_string(),
             have: self.models(),
         })?;
+        if self.is_draining() {
+            return Err(ApiError::Draining { model: model.to_string() });
+        }
         // Memory-pressure admission, before the bounded queue accepts the
         // work: refuse while the pool would stay over budget even if every
         // sheddable byte — prefix-cache snapshots first, then detached
@@ -218,14 +311,29 @@ impl Router {
             cancel: cancel.clone(),
             enqueued: Instant::now(),
         };
+        // Queue-depth gauge: incremented BEFORE the send so the
+        // coordinator's dequeue decrement (saturating) can never observe
+        // the item ahead of the increment and leave a phantom count;
+        // failed sends take their increment back.
+        let stats = self.stats.get(model);
+        if let Some(stats) = stats {
+            stats.queued.fetch_add(1, Ordering::Relaxed);
+        }
         match tx.try_send(item) {
             Ok(()) => Ok(GenHandle { id, events: erx, cancel }),
-            Err(TrySendError::Full(_)) => {
-                Err(ApiError::QueueFull { model: model.to_string() })
+            Err(e) => {
+                if let Some(stats) = stats {
+                    stats.queued.fetch_sub(1, Ordering::Relaxed);
+                }
+                match e {
+                    TrySendError::Full(_) => {
+                        Err(ApiError::QueueFull { model: model.to_string() })
+                    }
+                    TrySendError::Disconnected(_) => Err(ApiError::EngineFailure {
+                        message: format!("coordinator for {model} is gone"),
+                    }),
+                }
             }
-            Err(TrySendError::Disconnected(_)) => Err(ApiError::EngineFailure {
-                message: format!("coordinator for {model} is gone"),
-            }),
         }
     }
 

@@ -57,6 +57,19 @@ pub struct SessionEntry {
     last_used: Instant,
 }
 
+/// Accounting view of one stored session, as reported by the control
+/// plane's `sessions` op (see [`crate::api`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionSummary {
+    pub id: String,
+    /// Conversation turns completed so far.
+    pub turns: u32,
+    /// Retained KV rows summed over layers.
+    pub rows: usize,
+    /// Exact resident bytes (frozen pool blocks + loose tails).
+    pub bytes: usize,
+}
+
 pub struct SessionStore {
     cfg: SessionConfig,
     map: HashMap<String, SessionEntry>,
@@ -111,6 +124,33 @@ impl SessionStore {
         let entry = self.map.remove(id);
         self.publish();
         entry
+    }
+
+    /// Drop a stored session outright (the control plane's
+    /// `sessions`+`delete` op).  Returns whether the id was resident.
+    pub fn remove(&mut self, id: &str) -> bool {
+        let removed = self.map.remove(id).is_some();
+        if removed {
+            self.publish();
+        }
+        removed
+    }
+
+    /// Accounting snapshot of every stored session, sorted by id (the
+    /// control plane's `sessions` listing).
+    pub fn summaries(&self) -> Vec<SessionSummary> {
+        let mut out: Vec<SessionSummary> = self
+            .map
+            .iter()
+            .map(|(id, e)| SessionSummary {
+                id: id.clone(),
+                turns: e.turns,
+                rows: e.cache.total_rows(),
+                bytes: e.cache.exact_bytes(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        out
     }
 
     /// Evict the least-recently-used session (memory-pressure shedding).
@@ -333,6 +373,30 @@ mod tests {
         st.put("b", e.cache, e.pending, e.turns);
         st.shed_lru().unwrap();
         assert_eq!(pool.sheddable_bytes(), 0, "shed_lru republishes immediately");
+    }
+
+    #[test]
+    fn summaries_and_remove_drive_the_sessions_op() {
+        let pool = BlockPool::unbounded(4);
+        let mut st = store(4, Duration::from_secs(60));
+        st.bind_pool(pool.clone());
+        st.put("b", cache_with_rows(3), 0, 2);
+        st.put("a", cache_with_rows(5), 0, 1);
+        let sums = st.summaries();
+        assert_eq!(sums.len(), 2);
+        assert_eq!(sums[0].id, "a", "summaries are sorted by id");
+        assert_eq!(sums[0].turns, 1);
+        assert_eq!(sums[0].rows, 5);
+        assert_eq!(sums[0].bytes, 5 * row_cost());
+        assert_eq!(sums[1].id, "b");
+        assert!(st.remove("a"), "resident id removes");
+        assert!(!st.remove("a"), "gone id reports false");
+        assert_eq!(st.len(), 1);
+        assert_eq!(
+            pool.sheddable_bytes(),
+            3 * row_cost(),
+            "remove republishes the sheddable gauge"
+        );
     }
 
     #[test]

@@ -541,6 +541,33 @@ impl KvCache {
         Ok(())
     }
 
+    /// Freeze the loose prefix of `layer` into pool blocks up to
+    /// `upto_rows` (aligned *down* to whole blocks; rows already frozen
+    /// are skipped).  Best-effort under a byte budget, like compaction's
+    /// freezing — rows simply stay loose on exhaustion.
+    ///
+    /// Safety contract (the caller's, not checked here): no future
+    /// scoring window may start below `upto_rows` on this cache or any
+    /// clone of it.  The radix prefix cache uses this at insert time to
+    /// freeze snapshot tails that compression will never touch — rows
+    /// below the layer's boundary (partition window starts are monotone
+    /// from `boundary.max(sink)`), or the whole layer for configurations
+    /// the driver never compacts (`PolicyKind::None`, skipped layers) —
+    /// so even never-compacted snapshots share CoW instead of deep-copying
+    /// their loose region into every clone.
+    pub fn freeze_layer_prefix(&mut self, layer: usize, upto_rows: usize) {
+        let d = self.d_head;
+        let pool = Arc::clone(self.gauge.pool());
+        let rpb = pool.rows_per_block();
+        let upto = (upto_rows.min(self.len(layer)) / rpb) * rpb;
+        for hi in 0..self.n_heads {
+            self.layers[layer].heads[hi].freeze_prefix(d, &pool, upto);
+            // Re-sync per head (as compaction does) so the next head's
+            // freeze budget checks never double-count drained bytes.
+            self.sync_gauge();
+        }
+    }
+
     /// Move every frozen block of `layer` back into contiguous loose
     /// storage.  Needed by global-scope policies (original H2O), whose
     /// scoring window spans the whole evictable region; a no-op for caches
@@ -816,6 +843,39 @@ mod tests {
         assert_eq!(pool.stats().resident_blocks, 0);
         assert!(pool.stats().free_blocks >= 2, "thawed blocks recycle to the free list");
         assert_eq!(c.len(0), 18);
+    }
+
+    /// Explicit prefix freezing (the radix-insert path): rows move into
+    /// pool blocks block-aligned, reads are unchanged, and clones share
+    /// the new blocks instead of copying the loose region.
+    #[test]
+    fn freeze_layer_prefix_is_block_aligned_and_read_transparent() {
+        let pool = BlockPool::unbounded(4);
+        let mut c = KvCache::new_in(pool.clone(), 1, 1, 2);
+        let mut rng = Rng::seed_from(23);
+        for t in 0..14 {
+            let k: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+            c.append_token(&k, &k, t).unwrap();
+        }
+        let before_k = c.head_k(0, 0);
+        let before_pos = c.positions(0, 0);
+        c.freeze_layer_prefix(0, 11); // aligns down to 8 = 2 blocks
+        assert_eq!(c.frozen_rows(0), 8);
+        assert_eq!(c.frozen_blocks(), 2);
+        assert_eq!(c.len(0), 14, "freezing never changes logical content");
+        assert_eq!(c.head_k(0, 0), before_k);
+        assert_eq!(c.positions(0, 0), before_pos);
+        // idempotent: a second call with a smaller target is a no-op
+        c.freeze_layer_prefix(0, 4);
+        assert_eq!(c.frozen_rows(0), 8);
+        // a clone shares the blocks (refcount), never copies them
+        let blocks_before = pool.stats().resident_blocks;
+        let clone = c.clone();
+        assert_eq!(pool.stats().resident_blocks, blocks_before);
+        assert_eq!(clone.head_k(0, 0), before_k);
+        // a target past the length clamps to the full (aligned) store
+        c.freeze_layer_prefix(0, usize::MAX);
+        assert_eq!(c.frozen_rows(0), 12);
     }
 
     /// H2O mass keeps accumulating on frozen rows (via the per-cache side

@@ -329,19 +329,45 @@ impl PrefixCache {
     }
 
     /// Store (or refresh) the snapshot for exactly `ids`.  The cache is
-    /// cloned — frozen blocks shared, loose tail copied — so the caller
-    /// keeps using its own.  No-ops for uncacheable configs, empty keys,
-    /// and single entries that alone bust the byte cap.
+    /// cloned — frozen blocks shared, loose tail copied — and the clone's
+    /// *stable* loose prefix is then frozen into pool blocks, so every
+    /// later attach of this snapshot shares those rows CoW instead of
+    /// re-copying them (without this, a `PolicyKind::None` snapshot —
+    /// which never compacts and therefore never freezes — deep-copies its
+    /// entire store into every clone).  Stable means rows no future
+    /// scoring window can start below: everything under the layer's
+    /// boundary (partition windows start at `boundary.max(sink)`,
+    /// monotone), or the whole layer when the driver never compacts it
+    /// (no-compression policy, skipped layers).  The caller keeps using
+    /// its own cache untouched.  No-ops for uncacheable configs, empty
+    /// keys, and single entries that alone bust the byte cap.
     pub fn insert(&self, cfg: &CompressionConfig, seed: u64, ids: &[i32], cache: &KvCache) {
         let Some(fp) = self.fingerprint(cfg, seed) else { return };
         if ids.is_empty() {
             return;
         }
-        let bytes = cache.exact_bytes();
+        // Cheap reject before the clone + freeze work: freezing never
+        // shrinks a cache's byte cost (block rounding + the duplicated
+        // frozen-attn side array only add), so an already-over-cap cache
+        // can never become storable.
+        if self.cfg.max_bytes > 0 && cache.exact_bytes() > self.cfg.max_bytes {
+            return;
+        }
+        let mut snapshot = cache.clone();
+        for layer in 0..snapshot.n_layers {
+            let never_compacted =
+                cfg.policy == PolicyKind::None || layer < cfg.skip_layers;
+            let upto = if never_compacted {
+                snapshot.len(layer)
+            } else {
+                snapshot.layers[layer].boundary
+            };
+            snapshot.freeze_layer_prefix(layer, upto);
+        }
+        let bytes = snapshot.exact_bytes();
         if self.cfg.max_bytes > 0 && bytes > self.cfg.max_bytes {
             return;
         }
-        let snapshot = cache.clone();
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let entry = Entry { cache: snapshot, bytes, last_used: inner.tick };
@@ -587,6 +613,40 @@ mod tests {
         let misses_before = pc.stats().misses;
         let _ = pc.lookup(&h, 0, &[9, 9, 9, 9]);
         assert_eq!(pc.stats().misses, misses_before, "bypass is not a miss");
+    }
+
+    /// ROADMAP §8 follow-up: a `PolicyKind::None` cache never compacts, so
+    /// before tail-freezing its snapshots were all-loose — every attach
+    /// deep-copied the whole store.  Insert now freezes the stable loose
+    /// prefix into blocks, so attaches share CoW like compressed entries.
+    #[test]
+    fn none_policy_snapshots_freeze_tails_and_share_cow() {
+        let pool = BlockPool::unbounded(4);
+        let pc = PrefixCache::new(PrefixConfig::default(), pool.clone());
+        let cfg = CompressionConfig { policy: PolicyKind::None, ..CompressionConfig::default() };
+        let c = cache_with_rows(&pool, 18); // never compacted: zero frozen blocks
+        assert_eq!(c.frozen_blocks(), 0);
+        let key: Vec<i32> = (0..18).collect();
+        pc.insert(&cfg, 0, &key, &c);
+        // the stored snapshot froze 16 of its 18 rows into 4 blocks...
+        assert_eq!(pool.stats().resident_blocks, 4);
+        let blocks_before = pool.stats().resident_blocks;
+        let (attached, depth) = pc.lookup(&cfg, 0, &[key.clone(), vec![99]].concat()).unwrap();
+        // ...and an attach shares them by refcount instead of copying
+        assert_eq!(depth, 18);
+        assert_eq!(attached.frozen_blocks(), 4);
+        assert_eq!(pool.stats().resident_blocks, blocks_before, "attach is CoW");
+        // reads are unchanged: the attached clone equals the original
+        assert_eq!(attached.head_k(0, 0), c.head_k(0, 0));
+        assert_eq!(attached.positions(0, 0), c.positions(0, 0));
+        // the original cache is untouched (freezing happened on the clone)
+        assert_eq!(c.frozen_blocks(), 0);
+        // skipped layers freeze fully too (never compacted by the driver)
+        let skip = CompressionConfig { skip_layers: 1, ..CompressionConfig::default() };
+        let pc2 = PrefixCache::new(PrefixConfig::default(), pool.clone());
+        pc2.insert(&skip, 0, &key, &c);
+        let (att2, _) = pc2.lookup(&skip, 0, &[key.clone(), vec![7]].concat()).unwrap();
+        assert!(att2.frozen_blocks() > 0, "skip-layer snapshot must freeze its tail");
     }
 
     #[test]

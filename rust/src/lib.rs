@@ -10,7 +10,11 @@
 //!   public API is streaming- and session-first: requests yield typed
 //!   [`coordinator::Event`] streams (cancellable mid-decode), and a
 //!   [`coordinator::SessionStore`] carries the compressed cache across
-//!   conversation turns so turn N+1 prefills only its new text.
+//!   conversation turns so turn N+1 prefills only its new text.  The wire
+//!   is the versioned `v1` protocol ([`api`], DESIGN.md §9) — typed
+//!   request/response/event shapes plus an ops control plane
+//!   (`stats`/`sessions`/`info`/`drain`) — consumed through the blocking
+//!   client SDK in [`client`].
 //! * **L2 (python/compile, build time only)** — a tiny GQA transformer in
 //!   JAX, AOT-lowered to HLO text that the PJRT runtime loads.
 //! * **L1 (python/compile/kernels)** — the LagKV scoring Pallas kernel,
@@ -30,7 +34,9 @@
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
 //! results.
 
+pub mod api;
 pub mod backend;
+pub mod client;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   info                         backend + model inventory
 //!   generate --prompt "..."      one-shot generation with any policy
-//!   serve [--port 7199]          TCP server (newline-delimited JSON)
+//!   serve [--port 7199]          TCP server (v1 wire protocol, NDJSON)
+//!   ops stats|info|sessions|drain [--port 7199]
+//!                                control plane of a running server
 //!   tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
 //!                                regenerate the paper's tables/figures
 //!
@@ -22,10 +24,12 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use lagkv::backend::EngineSpec;
+use lagkv::client::Client;
 use lagkv::config::ServingConfig;
 use lagkv::coordinator::{GenerateParams, Router, RouterConfig, SessionConfig};
 use lagkv::engine::Engine;
 use lagkv::harness;
+use lagkv::metrics::PoolGauges;
 use lagkv::server::Server;
 use lagkv::util::cli::Args;
 
@@ -43,6 +47,7 @@ fn run() -> Result<()> {
         "info" => info(&args),
         "generate" => generate(&args),
         "serve" => serve(&args),
+        "ops" => ops(&args),
         "tables" => tables(&args),
         _ => {
             print!("{HELP}");
@@ -60,14 +65,17 @@ USAGE:
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
               [--max-queue 256] [--sessions 64] [--session-ttl 600]
               [--pool-mb N] [--session-mb N] [--prefix-cache]
+  lagkv ops stats|info|sessions|drain [--port 7199] [--model M]
+            [--delete SESSION_ID]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
 
 BACKENDS: cpu (default, hermetic) | xla (--features xla + make artifacts)
 POLICIES: lagkv localkv l2norm h2o streaming random none
-WIRE PROTOCOL: see DESIGN.md (NDJSON events, {"cancel": id}, session_id;
-  byte-budgeted pools reject with the typed "pool-exhausted" error;
-  --prefix-cache shares identical prompt prefixes across sequences CoW)
+WIRE PROTOCOL v1: see DESIGN.md §9 ({"v":1,"op":...} envelopes, NDJSON
+  event streams, typed {"code","message"} errors, ops control plane:
+  stats/sessions/info/drain; legacy bare request lines accepted via the
+  compat shim).  Talk to it from Rust through lagkv::client::Client.
 "#;
 
 fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
@@ -137,7 +145,7 @@ fn generate(args: &Args) -> Result<()> {
         let router = Router::start(EngineSpec::from_args(args)?, &[model.clone()]);
         let handle = router.submit(&model, params.into_request(1)?)?;
         for ev in handle.events.iter() {
-            println!("{}", Server::render_event(&ev));
+            println!("{}", lagkv::api::event_line(&ev));
             if ev.is_terminal() {
                 break;
             }
@@ -178,6 +186,94 @@ fn serve(args: &Args) -> Result<()> {
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));
     server.serve(serving.port, stop)
+}
+
+/// Control plane of a running server, through the typed client SDK.
+fn ops(args: &Args) -> Result<()> {
+    let port = args.usize_or("port", 7199)? as u16;
+    let mut client = Client::connect(port)?;
+    let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("stats");
+    match action {
+        "stats" => {
+            let stats = client.stats()?;
+            println!("draining: {}", stats.draining);
+            for m in &stats.models {
+                let c = &m.coord;
+                println!("{}:", m.model);
+                let mut gauges = PoolGauges::from(&m.pool);
+                if let Some(p) = &m.prefix {
+                    gauges = gauges.with_prefix(p);
+                }
+                for line in gauges.render().lines() {
+                    println!("  {line}");
+                }
+                println!(
+                    "  coord: completed {} cancelled {} failed {} queued {}/{} \
+                     resumed {} shed {}+{} pool-rejected {}",
+                    c.completed,
+                    c.cancelled,
+                    c.failed,
+                    c.queued,
+                    m.queue_capacity,
+                    c.sessions_resumed,
+                    c.prefix_shed,
+                    c.sessions_shed,
+                    c.pool_rejected,
+                );
+                println!(
+                    "  sessions: {} entries, {:.1} KiB",
+                    m.sessions.entries,
+                    m.sessions.bytes as f64 / 1024.0
+                );
+            }
+        }
+        "info" => {
+            let info = client.info()?;
+            println!("protocol: v{}", info.version);
+            println!("policies: {}", info.policies.join(" "));
+            println!(
+                "queue depth {} | session capacity {} | prefix cache {}",
+                info.queue_depth, info.session_capacity, info.prefix_cache
+            );
+            for m in &info.models {
+                println!(
+                    "{}: prefill {:?} decode {:?} max_prompt {} tmax {} pool budget {:?}",
+                    m.model,
+                    m.prefill_buckets,
+                    m.decode_buckets,
+                    m.max_prompt_tokens,
+                    m.tmax,
+                    m.pool_budget_bytes,
+                );
+            }
+        }
+        "sessions" => {
+            if let Some(sid) = args.get("delete") {
+                let deleted = client.delete_session(args.get("model"), sid)?;
+                println!("deleted {deleted} session(s) named {sid:?}");
+                return Ok(());
+            }
+            let resp = client.sessions(args.get("model"))?;
+            for m in &resp.models {
+                println!("{}: {} session(s)", m.model, m.sessions.len());
+                for ss in &m.sessions {
+                    println!(
+                        "  {} turns={} rows={} bytes={}",
+                        ss.id, ss.turns, ss.rows, ss.bytes
+                    );
+                }
+            }
+        }
+        "drain" => {
+            let resp = client.drain()?;
+            println!(
+                "draining: {} ({} request(s) still in flight)",
+                resp.draining, resp.in_flight
+            );
+        }
+        other => bail!("unknown ops action {other:?} (stats|info|sessions|drain)"),
+    }
+    Ok(())
 }
 
 fn tables(args: &Args) -> Result<()> {

@@ -1,216 +1,56 @@
 //! TCP front end: newline-delimited JSON over std::net (the offline image
 //! has no tokio; one thread per connection is ample at this scale).
 //!
-//! The full wire protocol lives in DESIGN.md; the short version:
+//! Every line is parsed by [`crate::api::parse_line`] — the versioned `v1`
+//! envelope (`{"v":1,"op":...}`) or the legacy bare dialect via the compat
+//! shim — so this module owns no wire knowledge of its own: it binds
+//! sockets, assigns request ids, tracks live cancel flags, and maps each
+//! [`ApiRequest`] onto the router.
 //!
-//! Request line (all fields except `prompt` optional):
-//! ```json
-//! {"id": 1, "model": "llama_like", "prompt": "...", "policy": "lagkv",
-//!  "sink": 4, "lag": 64, "ratio": 0.5, "max_new": 72,
-//!  "stream": true, "session_id": "chat-7"}
-//! ```
+//! * `generate` — without `"stream"` the reply is one JSON line (the
+//!   folded [`crate::coordinator::Response`]); with `"stream": true` the
+//!   reply is NDJSON, one [`crate::coordinator::Event`] per line, and the
+//!   connection keeps accepting request lines while the stream runs.
+//! * `cancel` — aborts a live request (same or another connection), acked
+//!   with `{"event": "cancel_ack", ...}`; the aborted stream terminates
+//!   with a `cancelled` error event.
+//! * `stats` / `sessions` / `info` — the ops control plane: pool and
+//!   prefix-cache gauges, coordinator counters and queue depth, session
+//!   listing/deletion, and the engine facts clients self-configure from.
+//! * `drain` — closes admission (every later submit is a typed
+//!   `draining` rejection) while in-flight work finishes; the operator
+//!   then stops the accept loop for a clean shutdown.
 //!
-//! * Without `"stream"` the reply is one JSON line mirroring
-//!   [`crate::coordinator::Response`] (errors are structured
-//!   `{"code", "message"}` objects, never bare strings).
-//! * With `"stream": true` the reply is NDJSON: one line per
-//!   [`crate::coordinator::Event`] (`started`, `token`, `compression`,
-//!   then a terminal `done` or `error`), and the connection immediately
-//!   accepts further request lines while the stream runs.
-//! * `{"cancel": ID}` aborts a live request (same or another connection);
-//!   the server acks with `{"event": "cancel_ack", "id": ID, "found": ..}`
-//!   and the aborted stream terminates with an `error` event of code
-//!   `"cancelled"`.
-//! * Unknown request fields are a hard `bad-params` error listing the
-//!   offending keys — a typo in `stream` or `session_id` must never
-//!   silently fall back to one-shot, session-less behaviour.
-//! * When the server runs with a KV pool byte budget (`--pool-mb`), a
-//!   request that cannot fit even after LRU session shedding is answered
-//!   with the typed `pool-exhausted` error (same `{"code", "message"}`
-//!   shape) instead of being queued — memory backpressure is explicit on
-//!   the wire.
+//! Full protocol specification: DESIGN.md §9.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::{PolicyKind, ScorerBackend};
-use crate::coordinator::{ApiError, Event, GenHandle, GenerateParams, Request, Response, Router};
-use crate::util::json::{arr, n, obj, s, Json};
-
-/// Request-line fields the parser accepts; anything else is `bad-params`.
-const KNOWN_FIELDS: &[&str] = &[
-    "id",
-    "model",
-    "prompt",
-    "policy",
-    "sink",
-    "lag",
-    "ratio",
-    "scorer",
-    "skip_layers",
-    "max_new",
-    "seed",
-    "stream",
-    "session_id",
-];
-
-/// One parsed client line.
-pub enum ClientLine {
-    Generate { model: String, request: Request, stream: bool },
-    Cancel { id: u64 },
-}
+use crate::api::{
+    self, ApiRequest, CancelAck, CoordCounters, DrainResponse, InfoResponse, ModelSessions,
+    ModelStats, SessionGauges, SessionsRequest, SessionsResponse, StatsResponse,
+};
+use crate::config::PolicyKind;
+use crate::coordinator::{ApiError, GenHandle, Response, Router};
+use crate::util::json::obj;
 
 pub struct Server {
     pub router: Arc<Router>,
     next_id: AtomicU64,
     /// Cancel flags of in-flight requests, keyed by request id, so a
-    /// `{"cancel": id}` line on any connection can abort them.
+    /// cancel op on any connection can abort them.
     live: Mutex<HashMap<u64, Arc<AtomicBool>>>,
 }
 
 impl Server {
     pub fn new(router: Arc<Router>) -> Server {
         Server { router, next_id: AtomicU64::new(1), live: Mutex::new(HashMap::new()) }
-    }
-
-    fn bad(message: String) -> ApiError {
-        ApiError::BadParams { message }
-    }
-
-    /// Parse one client line into a generate request or a cancel command.
-    /// Absent fields use [`GenerateParams`] defaults; unknown fields are a
-    /// structured `bad-params` error naming every unrecognized key.
-    pub fn parse_line(&self, line: &str) -> Result<ClientLine, ApiError> {
-        let v = Json::parse(line).map_err(|e| Self::bad(format!("invalid JSON: {e:#}")))?;
-        let m = v.as_obj().map_err(|_| Self::bad("request must be a JSON object".into()))?;
-
-        if m.contains_key("cancel") {
-            let extra: Vec<&str> =
-                m.keys().filter(|k| k.as_str() != "cancel").map(|k| k.as_str()).collect();
-            if !extra.is_empty() {
-                return Err(Self::bad(format!("cancel line has extra fields: {extra:?}")));
-            }
-            let id = v
-                .get("cancel")
-                .and_then(|x| x.as_i64())
-                .map_err(|e| Self::bad(format!("bad cancel id: {e:#}")))?;
-            return Ok(ClientLine::Cancel { id: id as u64 });
-        }
-
-        let unknown: Vec<&str> = m
-            .keys()
-            .map(|k| k.as_str())
-            .filter(|k| !KNOWN_FIELDS.contains(k))
-            .collect();
-        if !unknown.is_empty() {
-            return Err(Self::bad(format!(
-                "unrecognized fields {unknown:?} (known: {KNOWN_FIELDS:?})"
-            )));
-        }
-
-        let mut p = GenerateParams::default();
-        let field = |e: anyhow::Error, name: &str| Self::bad(format!("field {name:?}: {e:#}"));
-        if let Some(x) = v.opt("model") {
-            p.model = x.as_str().map_err(|e| field(e, "model"))?.to_string();
-        }
-        if let Some(x) = v.opt("prompt") {
-            p.prompt = x.as_str().map_err(|e| field(e, "prompt"))?.to_string();
-        }
-        if let Some(x) = v.opt("policy") {
-            let name = x.as_str().map_err(|e| field(e, "policy"))?;
-            p.policy = PolicyKind::parse(name).map_err(|e| field(e, "policy"))?;
-        }
-        if let Some(x) = v.opt("sink") {
-            p.sink = x.as_usize().map_err(|e| field(e, "sink"))?;
-        }
-        if let Some(x) = v.opt("lag") {
-            p.lag = x.as_usize().map_err(|e| field(e, "lag"))?;
-        }
-        if let Some(x) = v.opt("ratio") {
-            p.ratio = x.as_f64().map_err(|e| field(e, "ratio"))?;
-        }
-        if let Some(x) = v.opt("scorer") {
-            p.scorer = match x.as_str().map_err(|e| field(e, "scorer"))? {
-                "xla" => ScorerBackend::Xla,
-                "rust" => ScorerBackend::Rust,
-                other => return Err(Self::bad(format!("unknown scorer {other:?} (rust|xla)"))),
-            };
-        }
-        if let Some(x) = v.opt("skip_layers") {
-            p.skip_layers = Some(x.as_usize().map_err(|e| field(e, "skip_layers"))?);
-        }
-        if let Some(x) = v.opt("max_new") {
-            p.max_new = x.as_usize().map_err(|e| field(e, "max_new"))?;
-        }
-        if let Some(x) = v.opt("seed") {
-            p.seed = x.as_i64().map_err(|e| field(e, "seed"))? as u64;
-        }
-        if let Some(x) = v.opt("session_id") {
-            p.session = Some(x.as_str().map_err(|e| field(e, "session_id"))?.to_string());
-        }
-        let stream = match v.opt("stream") {
-            Some(x) => x.as_bool().map_err(|e| field(e, "stream"))?,
-            None => false,
-        };
-        let id = match v.opt("id") {
-            Some(x) => x.as_i64().map_err(|e| field(e, "id"))? as u64,
-            None => self.next_id.fetch_add(1, Ordering::Relaxed),
-        };
-        let model = p.model.clone();
-        let request = p.into_request(id)?;
-        Ok(ClientLine::Generate { model, request, stream })
-    }
-
-    /// Render one event as an NDJSON line body.
-    pub fn render_event(ev: &Event) -> String {
-        let j = match ev {
-            Event::Started { id, prompt_tokens, reused_tokens } => obj(vec![
-                ("event", s("started")),
-                ("id", n(*id as f64)),
-                ("prompt_tokens", n(*prompt_tokens as f64)),
-                ("reused_tokens", n(*reused_tokens as f64)),
-            ]),
-            Event::Token { id, token, text_delta } => obj(vec![
-                ("event", s("token")),
-                ("id", n(*id as f64)),
-                ("token", n(*token as f64)),
-                ("text_delta", s(text_delta.clone())),
-            ]),
-            Event::Compression { id, layer_lens, evicted } => obj(vec![
-                ("event", s("compression")),
-                ("id", n(*id as f64)),
-                ("layer_lens", arr(layer_lens.iter().map(|&l| n(l as f64)).collect())),
-                ("evicted", n(*evicted as f64)),
-            ]),
-            Event::Done { id, usage, timings } => obj(vec![
-                ("event", s("done")),
-                ("id", n(*id as f64)),
-                ("prompt_tokens", n(usage.prompt_tokens as f64)),
-                ("new_tokens", n(usage.new_tokens as f64)),
-                ("reused_tokens", n(usage.reused_tokens as f64)),
-                ("cache_lens", arr(usage.cache_lens.iter().map(|&l| n(l as f64)).collect())),
-                ("compression_events", n(usage.compression_events as f64)),
-                ("queue_us", n(timings.queue_us as f64)),
-                ("prefill_us", n(timings.prefill_us as f64)),
-                ("decode_us", n(timings.decode_us as f64)),
-            ]),
-            Event::Error { id, error } => obj(vec![
-                ("event", s("error")),
-                ("id", n(*id as f64)),
-                ("error", error.to_json()),
-            ]),
-        };
-        j.to_string()
-    }
-
-    /// Render the one-shot response line.
-    pub fn render_response(resp: &Response) -> String {
-        resp.to_json().to_string()
     }
 
     /// Flip the cancel flag of a live request.  Returns whether the id was
@@ -225,15 +65,98 @@ impl Server {
         }
     }
 
-    /// How many requests are currently in flight (diagnostics / tests).
+    /// How many requests are currently in flight (diagnostics / tests /
+    /// the `drain` reply).
     pub fn live_requests(&self) -> usize {
         self.live.lock().unwrap().len()
+    }
+
+    /// Build the `stats` op reply from the router's live gauges.
+    pub fn stats_response(&self) -> StatsResponse {
+        let mut names = self.router.models();
+        names.sort();
+        let models = names
+            .into_iter()
+            .map(|m| {
+                let sessions = {
+                    let store = self.router.session_store(&m).expect("store per model");
+                    let st = store.lock().unwrap();
+                    SessionGauges { entries: st.len(), bytes: st.total_bytes() }
+                };
+                ModelStats {
+                    pool: self.router.pool(&m).expect("pool per model").stats(),
+                    prefix: self.router.prefix_cache(&m).map(|p| p.stats()),
+                    coord: CoordCounters::snapshot(
+                        &self.router.stats(&m).expect("stats per model"),
+                    ),
+                    sessions,
+                    queue_capacity: self.router.config().queue_depth,
+                    model: m,
+                }
+            })
+            .collect();
+        StatsResponse { draining: self.router.is_draining(), models }
+    }
+
+    /// Build the `sessions` op reply: list stores (optionally one model),
+    /// deleting a named session first when the request asks for it.
+    pub fn sessions_response(
+        &self,
+        req: &SessionsRequest,
+    ) -> Result<SessionsResponse, ApiError> {
+        let mut names = self.router.models();
+        names.sort();
+        if let Some(m) = &req.model {
+            if !names.contains(m) {
+                return Err(ApiError::UnknownModel { model: m.clone(), have: names });
+            }
+            names = vec![m.clone()];
+        }
+        let mut deleted = 0u64;
+        let mut models = Vec::new();
+        for name in names {
+            let store = self.router.session_store(&name).expect("store per model");
+            let mut st = store.lock().unwrap();
+            if let Some(sid) = &req.delete {
+                if st.remove(sid) {
+                    deleted += 1;
+                }
+            }
+            models.push(ModelSessions { model: name, sessions: st.summaries() });
+        }
+        Ok(SessionsResponse { models, deleted })
+    }
+
+    /// Build the `info` op reply.  Engines load asynchronously at boot, so
+    /// this briefly waits for every variant's load to *settle* — an `info`
+    /// fired right after bind (the CI smoke's first call) must see the
+    /// full inventory, while a variant whose engine failed publishes a
+    /// tombstone and stays absent without stalling the deadline.
+    pub fn info_response(&self) -> InfoResponse {
+        let mut names = self.router.models();
+        names.sort();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while names.iter().any(|m| !self.router.model_settled(m)) && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let models: Vec<api::ModelInfo> =
+            names.iter().filter_map(|m| self.router.model_info(m)).collect();
+        let cfg = self.router.config();
+        InfoResponse {
+            version: api::VERSION,
+            models,
+            policies: PolicyKind::all().iter().map(|p| p.name().to_string()).collect(),
+            queue_depth: cfg.queue_depth,
+            session_capacity: cfg.sessions.capacity,
+            prefix_cache: cfg.prefix_cache.is_some(),
+        }
     }
 
     fn forward_events(&self, id: u64, handle: GenHandle, writer: Arc<Mutex<TcpStream>>) {
         for ev in handle.events.iter() {
             let terminal = ev.is_terminal();
-            if write_line(&writer, &Self::render_event(&ev)).is_err() {
+            if write_line(&writer, &api::event_line(&ev)).is_err() {
                 // Connection gone: dropping the handle aborts the slot.
                 break;
             }
@@ -244,6 +167,57 @@ impl Server {
         self.live.lock().unwrap().remove(&id);
     }
 
+    fn handle_generate(
+        self: Arc<Self>,
+        gen_req: api::GenerateRequest,
+        writer: &Arc<Mutex<TcpStream>>,
+    ) -> Result<()> {
+        let id = gen_req
+            .id
+            .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
+        let streaming = gen_req.stream;
+        let model = gen_req.params.model.clone();
+        let submitted = match gen_req.params.into_request(id) {
+            Ok(request) => {
+                // Register under the live-map lock so a duplicate id can
+                // never clobber another request's cancel flag (or have its
+                // own entry removed by the first finisher).
+                let mut live = self.live.lock().unwrap();
+                if live.contains_key(&id) {
+                    Err(ApiError::BadParams {
+                        message: format!("request id {id} is already in flight"),
+                    })
+                } else {
+                    self.router.submit(&model, request).map(|handle| {
+                        live.insert(id, handle.cancel_flag());
+                        handle
+                    })
+                }
+            }
+            Err(e) => Err(e),
+        };
+        match submitted {
+            Ok(handle) => {
+                if streaming {
+                    // Forward events off-thread so this reader keeps
+                    // accepting cancel/request lines.
+                    let me = self.clone();
+                    let w = writer.clone();
+                    std::thread::spawn(move || me.forward_events(id, handle, w));
+                } else {
+                    let resp = handle.wait();
+                    self.live.lock().unwrap().remove(&id);
+                    write_line(writer, &api::response_line(&resp))?;
+                }
+            }
+            Err(e) => {
+                let resp = Response::from_error(id, e);
+                write_line(writer, &api::response_line(&resp))?;
+            }
+        }
+        Ok(())
+    }
+
     fn handle_conn(self: Arc<Self>, stream: TcpStream) -> Result<()> {
         let writer = Arc::new(Mutex::new(stream.try_clone().context("clone stream")?));
         let reader = BufReader::new(stream);
@@ -252,53 +226,34 @@ impl Server {
             if line.trim().is_empty() {
                 continue;
             }
-            match self.parse_line(&line) {
-                Ok(ClientLine::Cancel { id }) => {
-                    let found = self.cancel(id);
-                    let ack = obj(vec![
-                        ("event", s("cancel_ack")),
-                        ("id", n(id as f64)),
-                        ("found", Json::Bool(found)),
-                    ]);
-                    write_line(&writer, &ack.to_string())?;
+            match api::parse_line(&line) {
+                Ok(ApiRequest::Generate(gen_req)) => {
+                    self.clone().handle_generate(gen_req, &writer)?;
                 }
-                Ok(ClientLine::Generate { model, request, stream: streaming }) => {
-                    let id = request.id;
-                    // Register under the live-map lock so a duplicate id
-                    // can never clobber another request's cancel flag (or
-                    // have its own entry removed by the first finisher).
-                    let submitted = {
-                        let mut live = self.live.lock().unwrap();
-                        if live.contains_key(&id) {
-                            Err(ApiError::BadParams {
-                                message: format!("request id {id} is already in flight"),
-                            })
-                        } else {
-                            self.router.submit(&model, request).map(|handle| {
-                                live.insert(id, handle.cancel_flag());
-                                handle
-                            })
-                        }
-                    };
-                    match submitted {
-                        Ok(handle) => {
-                            if streaming {
-                                // Forward events off-thread so this reader
-                                // keeps accepting cancel/request lines.
-                                let me = self.clone();
-                                let w = writer.clone();
-                                std::thread::spawn(move || me.forward_events(id, handle, w));
-                            } else {
-                                let resp = handle.wait();
-                                self.live.lock().unwrap().remove(&id);
-                                write_line(&writer, &Self::render_response(&resp))?;
-                            }
-                        }
-                        Err(e) => {
-                            let resp = Response::from_error(id, e);
-                            write_line(&writer, &Self::render_response(&resp))?;
-                        }
+                Ok(ApiRequest::Cancel(c)) => {
+                    let ack = CancelAck { id: c.id, found: self.cancel(c.id) };
+                    write_line(&writer, &ack.to_json().to_string())?;
+                }
+                Ok(ApiRequest::Stats(_)) => {
+                    write_line(&writer, &self.stats_response().to_json().to_string())?;
+                }
+                Ok(ApiRequest::Sessions(sr)) => match self.sessions_response(&sr) {
+                    Ok(resp) => write_line(&writer, &resp.to_json().to_string())?,
+                    Err(e) => {
+                        write_line(&writer, &obj(vec![("error", e.to_json())]).to_string())?;
                     }
+                },
+                Ok(ApiRequest::Info(_)) => {
+                    write_line(&writer, &self.info_response().to_json().to_string())?;
+                }
+                Ok(ApiRequest::Drain(_)) => {
+                    // Close admission; in-flight slots and queued work run
+                    // to completion.  The operator stops the accept loop
+                    // (clean shutdown) once live_requests drains to zero.
+                    self.router.drain();
+                    let resp =
+                        DrainResponse { draining: true, in_flight: self.live_requests() };
+                    write_line(&writer, &resp.to_json().to_string())?;
                 }
                 Err(e) => {
                     write_line(&writer, &obj(vec![("error", e.to_json())]).to_string())?;
@@ -321,7 +276,8 @@ impl Server {
     /// Serve until `stop` flips true (checked between accepts).
     pub fn serve(self: Arc<Self>, port: u16, stop: Arc<AtomicBool>) -> Result<()> {
         let (listener, actual) = Self::bind(port)?;
-        eprintln!("lagkv server listening on 127.0.0.1:{actual}");
+        let v = api::VERSION;
+        eprintln!("lagkv server listening on 127.0.0.1:{actual} (wire protocol v{v})");
         self.serve_listener(listener, stop)
     }
 
@@ -361,206 +317,68 @@ fn write_line(writer: &Arc<Mutex<TcpStream>>, line: &str) -> std::io::Result<()>
     w.flush()
 }
 
-/// Minimal blocking client for the line protocol (used by serve_demo,
-/// the CI smoke binary, and integration tests).
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    pub fn connect(port: u16) -> Result<Client> {
-        let stream = TcpStream::connect(("127.0.0.1", port))?;
-        let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer })
-    }
-
-    pub fn send_line(&mut self, json: &str) -> Result<()> {
-        self.writer.write_all(json.as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
-        Ok(())
-    }
-
-    /// Read one JSON line (blocking).
-    pub fn read_json(&mut self) -> Result<Json> {
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(&line)
-    }
-
-    /// One-shot call: send a request line, read the single response line.
-    pub fn call(&mut self, request_json: &str) -> Result<Json> {
-        self.send_line(request_json)?;
-        self.read_json()
-    }
-
-    /// Streaming call: send a request line, collect event lines until the
-    /// terminal `done`/`error` (or a top-level parse-error reply).
-    pub fn stream(&mut self, request_json: &str) -> Result<Vec<Json>> {
-        self.send_line(request_json)?;
-        let mut events = Vec::new();
-        loop {
-            let v = self.read_json()?;
-            let kind =
-                v.opt("event").and_then(|e| e.as_str().ok()).unwrap_or("").to_string();
-            let terminal = kind == "done" || kind == "error" || kind.is_empty();
-            events.push(v);
-            if terminal {
-                return Ok(events);
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     use crate::backend::EngineSpec;
-    use crate::coordinator::{Timings, Usage};
+    use crate::util::json::Json;
 
-    fn server() -> Server {
-        Server::new(Arc::new(Router::start(EngineSpec::cpu(), &[])))
-    }
-
-    fn parse_gen(srv: &Server, line: &str) -> (String, Request, bool) {
-        match srv.parse_line(line).unwrap() {
-            ClientLine::Generate { model, request, stream } => (model, request, stream),
-            ClientLine::Cancel { .. } => panic!("expected a generate line"),
-        }
+    fn server(variants: &[&str]) -> Server {
+        let variants: Vec<String> = variants.iter().map(|s| s.to_string()).collect();
+        Server::new(Arc::new(Router::start(EngineSpec::cpu(), &variants)))
     }
 
     #[test]
-    fn parse_request_defaults_and_overrides() {
-        let srv = server();
-        let (model, req, stream) = parse_gen(
-            &srv,
-            r#"{"prompt": "hello", "policy": "h2o", "lag": 32, "max_new": 5}"#,
-        );
-        assert_eq!(model, "llama_like");
-        assert_eq!(req.compression.policy, PolicyKind::H2O);
-        assert_eq!(req.compression.lag, 32);
-        assert_eq!(req.max_new, 5);
-        assert_eq!(req.prompt, "hello");
-        assert!(req.session.is_none());
-        assert!(!stream);
-    }
-
-    #[test]
-    fn parse_stream_and_session_fields() {
-        let srv = server();
-        let (_, req, stream) = parse_gen(
-            &srv,
-            r#"{"prompt": "hi", "stream": true, "session_id": "chat-1"}"#,
-        );
-        assert!(stream);
-        assert_eq!(req.session.as_deref(), Some("chat-1"));
-    }
-
-    #[test]
-    fn bad_request_is_typed_error() {
-        let srv = server();
-        for line in ["{}", "not json", "[1,2]", r#"{"prompt": "x", "ratio": 0}"#] {
-            let err = srv.parse_line(line).unwrap_err();
-            assert_eq!(err.code(), "bad-params", "line {line:?}");
-        }
-    }
-
-    #[test]
-    fn unknown_fields_are_rejected_by_name() {
-        let srv = server();
-        let err = srv
-            .parse_line(r#"{"prompt": "x", "strem": true, "sessionid": "a"}"#)
-            .unwrap_err();
-        assert_eq!(err.code(), "bad-params");
-        let msg = err.message();
-        assert!(msg.contains("strem"), "message must name the typo: {msg}");
-        assert!(msg.contains("sessionid"), "message must name the typo: {msg}");
-    }
-
-    #[test]
-    fn cancel_line_parses_and_rejects_extras() {
-        let srv = server();
-        match srv.parse_line(r#"{"cancel": 12}"#).unwrap() {
-            ClientLine::Cancel { id } => assert_eq!(id, 12),
-            ClientLine::Generate { .. } => panic!("expected cancel"),
-        }
-        assert!(srv.parse_line(r#"{"cancel": 12, "model": "m"}"#).is_err());
-        // cancelling an unknown id is not found
+    fn cancel_of_unknown_id_is_not_found() {
+        let srv = server(&[]);
         assert!(!srv.cancel(12));
+        assert_eq!(srv.live_requests(), 0);
     }
 
     #[test]
-    fn response_renders_as_json() {
-        let resp = Response {
-            id: 3,
-            text: "42".into(),
-            tokens: vec![9, 2],
-            prompt_tokens: 10,
-            reused_tokens: 0,
-            cache_lens: vec![12, 12],
-            compression_events: 1,
-            queue_us: 5,
-            prefill_us: 6,
-            decode_us: 7,
-            error: None,
-        };
-        let v = Json::parse(&Server::render_response(&resp)).unwrap();
-        assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 3);
-        assert_eq!(v.get("text").unwrap().as_str().unwrap(), "42");
-        assert_eq!(v.get("cache_lens").unwrap().as_usize_vec().unwrap(), vec![12, 12]);
-        assert_eq!(*v.get("error").unwrap(), Json::Null);
+    fn stats_response_covers_every_model_sorted() {
+        let srv = server(&["qwen_like", "llama_like"]);
+        let stats = srv.stats_response();
+        let names: Vec<&str> = stats.models.iter().map(|m| m.model.as_str()).collect();
+        assert_eq!(names, vec!["llama_like", "qwen_like"], "sorted by model");
+        assert!(!stats.draining);
+        for m in &stats.models {
+            assert_eq!(m.queue_capacity, srv.router.config().queue_depth);
+            assert_eq!(m.sessions.entries, 0);
+            assert!(m.prefix.is_none(), "no prefix cache configured");
+        }
+        // the reply round-trips through its own wire form
+        let v = Json::parse(&stats.to_json().to_string()).unwrap();
+        assert_eq!(StatsResponse::from_json(&v).unwrap(), stats);
+        srv.router.drain();
+        assert!(srv.stats_response().draining);
     }
 
     #[test]
-    fn error_response_carries_code_and_message() {
-        let resp = Response::from_error(4, ApiError::QueueFull { model: "m".into() });
-        let v = Json::parse(&Server::render_response(&resp)).unwrap();
-        let e = v.get("error").unwrap();
-        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "queue-full");
-        assert!(!e.get("message").unwrap().as_str().unwrap().is_empty());
+    fn sessions_response_rejects_unknown_model() {
+        let srv = server(&["llama_like"]);
+        let bad = SessionsRequest { model: Some("nope".into()), delete: None };
+        let err = srv.sessions_response(&bad).unwrap_err();
+        assert_eq!(err.code(), "unknown-model");
+        let ok = srv.sessions_response(&SessionsRequest::default()).unwrap();
+        assert_eq!(ok.models.len(), 1);
+        assert_eq!(ok.deleted, 0);
+        assert!(ok.models[0].sessions.is_empty());
     }
 
     #[test]
-    fn pool_exhausted_renders_typed_wire_error() {
-        let resp = Response::from_error(
-            5,
-            ApiError::PoolExhausted { model: "m".into(), detail: "need 64 bytes".into() },
-        );
-        let v = Json::parse(&Server::render_response(&resp)).unwrap();
-        let e = v.get("error").unwrap();
-        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "pool-exhausted");
-        assert!(e.get("message").unwrap().as_str().unwrap().contains("need 64 bytes"));
-    }
-
-    #[test]
-    fn events_render_as_tagged_lines() {
-        let done = Event::Done {
-            id: 7,
-            usage: Usage {
-                prompt_tokens: 3,
-                new_tokens: 2,
-                reused_tokens: 0,
-                cache_lens: vec![5],
-                compression_events: 1,
-            },
-            timings: Timings { queue_us: 1, prefill_us: 2, decode_us: 3 },
-        };
-        let v = Json::parse(&Server::render_event(&done)).unwrap();
-        assert_eq!(v.get("event").unwrap().as_str().unwrap(), "done");
-        assert_eq!(v.get("new_tokens").unwrap().as_usize().unwrap(), 2);
-
-        let tok = Event::Token { id: 7, token: 1200, text_delta: " the".into() };
-        let v = Json::parse(&Server::render_event(&tok)).unwrap();
-        assert_eq!(v.get("event").unwrap().as_str().unwrap(), "token");
-        assert_eq!(v.get("text_delta").unwrap().as_str().unwrap(), " the");
-
-        let err = Event::Error { id: 7, error: ApiError::Cancelled };
-        let v = Json::parse(&Server::render_event(&err)).unwrap();
-        assert_eq!(
-            v.get("error").unwrap().get("code").unwrap().as_str().unwrap(),
-            "cancelled"
-        );
+    fn info_response_reports_engine_facts() {
+        let srv = server(&["llama_like"]);
+        let info = srv.info_response();
+        assert_eq!(info.version, api::VERSION);
+        assert_eq!(info.models.len(), 1, "the cpu engine must publish its facts");
+        let m = &info.models[0];
+        assert_eq!(m.model, "llama_like");
+        assert!(!m.prefill_buckets.is_empty());
+        assert!(m.decode_buckets.contains(&1));
+        assert_eq!(m.max_prompt_tokens, *m.prefill_buckets.iter().max().unwrap());
+        assert!(info.policies.contains(&"lagkv".to_string()));
+        assert!(!info.prefix_cache);
     }
 }

@@ -1,22 +1,25 @@
 //! Hermetic end-to-end tests on the CPU reference backend: generation,
 //! recursive compression cadence, continuous batching, the in-proc router
 //! (event streams, cancellation, bounded queue), and the TCP server
-//! (streaming NDJSON, multi-turn sessions) all run under plain
-//! `cargo test` — no artifacts, no XLA, no network beyond loopback.  This
-//! is the standing quality gate the PJRT integration tests
-//! (rust/tests/integration.rs) extend when artifacts exist.
+//! (streaming NDJSON, multi-turn sessions, the v1 ops control plane) all
+//! run under plain `cargo test` — no artifacts, no XLA, no network beyond
+//! loopback.  All TCP traffic goes through the typed `lagkv::client` SDK;
+//! the single hand-written JSON line below is the designated legacy
+//! compat-shim probe.  This is the standing quality gate the PJRT
+//! integration tests (rust/tests/integration.rs) extend when artifacts
+//! exist.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use lagkv::backend::EngineSpec;
+use lagkv::client::{Client, StreamItem};
 use lagkv::config::{CompressionConfig, PolicyKind, ScorerBackend};
 use lagkv::coordinator::{Event, GenerateParams, Router, RouterConfig, SessionConfig};
 use lagkv::engine::Engine;
 use lagkv::kvcache::ratio;
-use lagkv::server::{Client, Server};
-use lagkv::util::json::Json;
+use lagkv::server::Server;
 use lagkv::util::rng::Rng;
 use lagkv::workloads::passkey::{gen_passkey, PasskeySpec};
 
@@ -290,18 +293,13 @@ fn tcp_session_matches_concatenated_one_shot() {
     let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None });
     let turn1 = item.prompt;
     let turn2 = "<q> the pass key <a>";
-    let mk = |prompt: &str, id: u64| {
-        GenerateParams::new(prompt)
-            .lag(16)
-            .ratio(0.25)
-            .max_new(8)
-            .session("chat-parity")
-            .request_line(Some(id), false)
+    let mk = |prompt: &str| {
+        GenerateParams::new(prompt).lag(16).ratio(0.25).max_new(8).session("chat-parity")
     };
-    let t1 = client.call(&mk(&turn1, 1)).unwrap();
-    let t2 = client.call(&mk(turn2, 2)).unwrap();
+    let t1 = client.generate(Some(1), mk(&turn1)).unwrap();
+    let t2 = client.generate(Some(2), mk(turn2)).unwrap();
     for t in [&t1, &t2] {
-        assert_eq!(*t.get("error").unwrap(), Json::Null, "turn failed: {}", t.to_string());
+        assert!(t.error.is_none(), "turn failed: {t:?}");
     }
 
     let e = engine();
@@ -309,48 +307,31 @@ fn tcp_session_matches_concatenated_one_shot() {
     let ids2 = e.tokenizer.encode(turn2, false);
     // Turn 2 prefills only the new text (the reattached history is
     // accounted separately), and reuses the whole turn-1 conversation.
-    assert_eq!(t2.get("prompt_tokens").unwrap().as_usize().unwrap(), ids2.len());
-    assert_eq!(t1.get("prompt_tokens").unwrap().as_usize().unwrap(), ids1.len());
-    let toks1: Vec<i32> = t1
-        .get("tokens")
-        .unwrap()
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|x| x.as_i64().unwrap() as i32)
-        .collect();
+    assert_eq!(t2.prompt_tokens, ids2.len());
+    assert_eq!(t1.prompt_tokens, ids1.len());
     assert_eq!(
-        t2.get("reused_tokens").unwrap().as_usize().unwrap(),
-        ids1.len() + toks1.len() - 1,
+        t2.reused_tokens,
+        ids1.len() + t1.tokens.len() - 1,
         "turn 2 must reuse every token turn 1 appended"
     );
 
     // The equivalent single prompt: turn-1 prompt ++ turn-1 reply ++ turn-2
     // text, prefilled from scratch.
     let mut concat = ids1.clone();
-    concat.extend_from_slice(&toks1);
+    concat.extend_from_slice(&t1.tokens);
     concat.extend_from_slice(&ids2);
     let cfg = GenerateParams::new("x").lag(16).ratio(0.25).compression();
     let solo = e.generate_ids(&concat, &cfg, 8, 0).unwrap();
 
-    let toks2: Vec<i32> = t2
-        .get("tokens")
-        .unwrap()
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|x| x.as_i64().unwrap() as i32)
-        .collect();
-    assert_eq!(toks2, solo.tokens, "turn-2 decode must equal the concatenated one-shot");
+    assert_eq!(t2.tokens, solo.tokens, "turn-2 decode must equal the concatenated one-shot");
 
     // Eq. 10 trajectory continues across the turn boundary: the session
     // cache ends at exactly the closed-form length for the *whole*
     // conversation (the last generated token is never appended).
-    let lens2 = t2.get("cache_lens").unwrap().as_usize_vec().unwrap();
-    assert_eq!(lens2, solo.cache_lens);
+    assert_eq!(t2.cache_lens, solo.cache_lens);
     let total = concat.len() + solo.tokens.len() - 1;
     let want = ratio::retained_len(total, cfg.sink, cfg.lag, cfg.keep_per_partition());
-    for (layer, &len) in lens2.iter().enumerate() {
+    for (layer, &len) in t2.cache_lens.iter().enumerate() {
         assert_eq!(len, want, "layer {layer}: session cache off the Eq. 10 trajectory");
     }
     // and strictly fewer tokens were prefilled on turn 2 than a
@@ -361,40 +342,59 @@ fn tcp_session_matches_concatenated_one_shot() {
     accept.join().unwrap().unwrap();
 }
 
-/// Streaming and one-shot answers over TCP agree: folded deltas equal the
-/// one-shot text, event counts match the summary counters.
+/// Stream/one-shot parity through the typed client SDK: the folded stream
+/// ([`lagkv::client::GenStream::wait`]) and the one-shot call describe the
+/// same generation, field for field, and the raw typed events agree with
+/// the one-shot counters.
 #[test]
-fn tcp_streaming_events_match_one_shot() {
+fn tcp_streaming_events_match_one_shot_through_client() {
     let (_server, port, stop, accept) = boot_server();
     let mut client = Client::connect(port).unwrap();
     let mut rng = Rng::seed_from(8);
     let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 100, n_digits: 8, depth: None });
     let params = GenerateParams::new(item.prompt).lag(16).ratio(0.5).max_new(10);
 
-    let events = client.stream(&params.request_line(Some(1), true)).unwrap();
-    let one_shot = client.call(&params.request_line(Some(2), false)).unwrap();
-    assert_eq!(*one_shot.get("error").unwrap(), Json::Null);
+    let mut stream = client.generate_stream(1, params.clone()).unwrap();
+    let mut events = Vec::new();
+    while let Some(item) = stream.next().unwrap() {
+        if let StreamItem::Event(ev) = item {
+            events.push(ev);
+        }
+    }
+    let one_shot = client.generate(Some(2), params.clone()).unwrap();
+    assert!(one_shot.error.is_none(), "{one_shot:?}");
 
-    let kind = |v: &Json| v.opt("event").and_then(|e| e.as_str().ok()).unwrap_or("").to_string();
-    assert_eq!(kind(&events[0]), "started");
-    assert_eq!(kind(events.last().unwrap()), "done");
+    assert!(matches!(events.first(), Some(Event::Started { .. })), "events: {events:?}");
     let text: String = events
         .iter()
-        .filter(|v| kind(v) == "token")
-        .map(|v| v.get("text_delta").unwrap().as_str().unwrap().to_string())
+        .filter_map(|ev| match ev {
+            Event::Token { text_delta, .. } => Some(text_delta.as_str()),
+            _ => None,
+        })
         .collect();
-    assert_eq!(text, one_shot.get("text").unwrap().as_str().unwrap());
-    let n_compress = events.iter().filter(|v| kind(v) == "compression").count();
+    assert_eq!(text, one_shot.text, "delta concat must equal the one-shot text");
+    let n_compress =
+        events.iter().filter(|ev| matches!(ev, Event::Compression { .. })).count();
     assert_eq!(
-        n_compress,
-        one_shot.get("compression_events").unwrap().as_usize().unwrap(),
+        n_compress, one_shot.compression_events,
         "one compression event line per driver event"
     );
-    let done = events.last().unwrap();
-    assert_eq!(
-        done.get("cache_lens").unwrap().as_usize_vec().unwrap(),
-        one_shot.get("cache_lens").unwrap().as_usize_vec().unwrap()
-    );
+    match events.last() {
+        Some(Event::Done { usage, .. }) => {
+            assert_eq!(usage.cache_lens, one_shot.cache_lens);
+            assert_eq!(usage.new_tokens, one_shot.tokens.len());
+        }
+        other => panic!("stream must end with done, got {other:?}"),
+    }
+
+    // and the SDK's own fold agrees with the one-shot response wholesale
+    let folded = client.generate_stream(3, params).unwrap().wait().unwrap();
+    assert!(folded.error.is_none(), "{folded:?}");
+    assert_eq!(folded.text, one_shot.text);
+    assert_eq!(folded.tokens, one_shot.tokens);
+    assert_eq!(folded.prompt_tokens, one_shot.prompt_tokens);
+    assert_eq!(folded.cache_lens, one_shot.cache_lens);
+    assert_eq!(folded.compression_events, one_shot.compression_events);
 
     stop.store(true, Ordering::Relaxed);
     accept.join().unwrap().unwrap();
@@ -584,17 +584,112 @@ fn overlong_prompt_is_typed_bad_params_on_the_wire() {
     let (_server, port, stop, accept) = boot_server();
     let mut client = Client::connect(port).unwrap();
     let prompt = "the of and to in is it on as with ".repeat(80); // >> 640 tokens
-    let resp = client
-        .call(&GenerateParams::new(prompt).max_new(4).request_line(Some(1), false))
-        .unwrap();
-    let err = resp.get("error").unwrap();
-    assert_eq!(
-        err.get("code").unwrap().as_str().unwrap(),
-        "bad-params",
-        "wire payload: {resp:?}"
+    let resp = client.generate(Some(1), GenerateParams::new(prompt).max_new(4)).unwrap();
+    let err = resp.error.as_ref().expect("overlong prompt must error");
+    assert_eq!(err.code(), "bad-params", "wire payload: {resp:?}");
+    assert!(
+        err.message().contains("prefill bucket"),
+        "message must name the bound: {}",
+        err.message()
     );
-    let msg = err.get("message").unwrap().as_str().unwrap();
-    assert!(msg.contains("prefill bucket"), "message must name the bound: {msg}");
+    stop.store(true, Ordering::Relaxed);
+    accept.join().unwrap().unwrap();
+}
+
+/// Tentpole acceptance: a *legacy* bare request line (the pre-versioning
+/// dialect, no `{"v":1,"op":...}` envelope) still round-trips through the
+/// compat shim, and answers bit-identically to the equivalent v1 request.
+/// This is the one sanctioned hand-written JSON line in the e2e tier.
+#[test]
+fn legacy_bare_request_line_round_trips_via_compat_shim() {
+    let (_server, port, stop, accept) = boot_server();
+    let mut client = Client::connect(port).unwrap();
+
+    let legacy =
+        r#"{"id": 100, "prompt": "the pass key is 11223344 <q> pass key <a>", "lag": 16, "ratio": 0.5, "max_new": 6, "seed": 0}"#;
+    let raw = client.raw_call(legacy).unwrap();
+    let legacy_resp = lagkv::api::response_from_json(&raw).unwrap();
+    assert!(legacy_resp.error.is_none(), "legacy line failed: {legacy_resp:?}");
+    assert_eq!(legacy_resp.id, 100);
+    assert!(!legacy_resp.tokens.is_empty());
+
+    // the same request through the v1 SDK decodes identically
+    let params = GenerateParams::new("the pass key is 11223344 <q> pass key <a>")
+        .lag(16)
+        .ratio(0.5)
+        .max_new(6);
+    let v1_resp = client.generate(Some(101), params).unwrap();
+    assert!(v1_resp.error.is_none());
+    assert_eq!(v1_resp.tokens, legacy_resp.tokens, "shim must not change the generation");
+    assert_eq!(v1_resp.text, legacy_resp.text);
+    assert_eq!(v1_resp.cache_lens, legacy_resp.cache_lens);
+
+    // legacy cancel lines are shimmed too (unknown id: acked, not found)
+    let ack = client.raw_call(r#"{"cancel": 9999}"#).unwrap();
+    let ack = lagkv::api::CancelAck::from_json(&ack).unwrap();
+    assert!(!ack.found);
+
+    // and an unversioned typo is still the strict typed rejection
+    let bad = client.raw_call(r#"{"prompt": "x", "strem": true}"#).unwrap();
+    let err = bad.get("error").unwrap();
+    assert_eq!(err.get("code").unwrap().as_str().unwrap(), "bad-params");
+    assert!(err.get("message").unwrap().as_str().unwrap().contains("strem"));
+
+    stop.store(true, Ordering::Relaxed);
+    accept.join().unwrap().unwrap();
+}
+
+/// Ops control plane over TCP: `info` reports engine facts, `stats`
+/// reflects traffic, `sessions` lists and deletes stored conversations,
+/// and `drain` closes admission with the typed `draining` rejection while
+/// the connection stays serviceable.
+#[test]
+fn tcp_control_plane_info_stats_sessions_drain() {
+    let (_server, port, stop, accept) = boot_server();
+    let mut client = Client::connect(port).unwrap();
+
+    let info = client.info().unwrap();
+    assert_eq!(info.version, lagkv::api::VERSION);
+    assert_eq!(info.models.len(), 1);
+    assert_eq!(info.models[0].model, "llama_like");
+    assert!(info.models[0].max_prompt_tokens > 0);
+    assert_eq!(info.policies.len(), PolicyKind::all().len());
+
+    // one session turn of traffic
+    let mut rng = Rng::seed_from(63);
+    let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 80, n_digits: 8, depth: None });
+    let params = GenerateParams::new(item.prompt).lag(16).max_new(6).session("ops-chat");
+    let resp = client.generate(Some(1), params).unwrap();
+    assert!(resp.error.is_none(), "{resp:?}");
+
+    // stats reflect it
+    let stats = client.stats().unwrap();
+    assert!(!stats.draining);
+    let ms = &stats.models[0];
+    assert!(ms.coord.completed >= 1, "{:?}", ms.coord);
+    assert!(ms.pool.high_water_bytes > 0);
+
+    // the session is listable and deletable (poll: the store entry lands
+    // right after the terminal event)
+    let mut listed = client.sessions(None).unwrap();
+    for _ in 0..100 {
+        if !listed.models[0].sessions.is_empty() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        listed = client.sessions(None).unwrap();
+    }
+    assert_eq!(listed.models[0].sessions.len(), 1, "{listed:?}");
+    assert_eq!(listed.models[0].sessions[0].id, "ops-chat");
+    assert_eq!(client.delete_session(Some("llama_like"), "ops-chat").unwrap(), 1);
+    assert!(client.sessions(None).unwrap().models[0].sessions.is_empty());
+
+    // drain: typed rejection, stats report it, the link stays up
+    assert!(client.drain().unwrap().draining);
+    let rejected = client.generate(Some(2), GenerateParams::new("post-drain")).unwrap();
+    assert_eq!(rejected.error.as_ref().map(|e| e.code()), Some("draining"));
+    assert!(client.stats().unwrap().draining);
+
     stop.store(true, Ordering::Relaxed);
     accept.join().unwrap().unwrap();
 }

@@ -343,6 +343,167 @@ fn prop_stream_events_fold_to_one_shot_response() {
     router.shutdown();
 }
 
+/// Wire-protocol property (v1 tentpole): every `api::` shape round-trips
+/// `to_json` → `from_json` exactly under randomized contents — generate
+/// requests through BOTH the v1 envelope and the legacy compat shim,
+/// control-plane requests, events, responses, and typed errors — and an
+/// injected unknown field is always a `bad-params` rejection naming the
+/// key.
+#[test]
+fn prop_api_wire_shapes_round_trip_exactly() {
+    use lagkv::api::{self, ApiRequest, CancelRequest, GenerateRequest, SessionsRequest};
+    use lagkv::config::ScorerBackend;
+    use lagkv::coordinator::{ApiError, Timings, Usage};
+    use lagkv::util::json::Json;
+
+    prop::check(60, |g| {
+        // --- generate request, v1 envelope and legacy dialect ---
+        let mut params = GenerateParams::new(format!("prompt {} with spaces", g.usize(0, 999)))
+            .model(["llama_like", "qwen_like"][g.usize(0, 1)])
+            .policy(*g.pick(PolicyKind::all()))
+            .sink(g.usize(0, 8))
+            .lag(g.usize(1, 128))
+            .ratio([0.5, 0.25, 0.167, 0.125, 1.0][g.usize(0, 4)])
+            .max_new(g.usize(1, 600))
+            .seed(g.usize(0, 1 << 30) as u64);
+        if g.bool() {
+            params = params.scorer(ScorerBackend::Xla);
+        }
+        if g.bool() {
+            params = params.skip_layers(g.usize(0, 3));
+        }
+        if g.bool() {
+            params = params.session(format!("chat-{}", g.usize(0, 99)));
+        }
+        let req = GenerateRequest {
+            id: if g.bool() { Some(g.usize(0, 1 << 20) as u64) } else { None },
+            stream: g.bool(),
+            params,
+        };
+        let v1 = req.to_json().to_string();
+        match api::parse_line(&v1).map_err(|e| e.to_string())? {
+            ApiRequest::Generate(back) if back == req => {}
+            other => return Err(format!("v1 round-trip mismatch: {other:?} vs {req:?}")),
+        }
+        let legacy = req.to_legacy_json().to_string();
+        match api::parse_line(&legacy).map_err(|e| e.to_string())? {
+            ApiRequest::Generate(back) if back == req => {}
+            other => return Err(format!("legacy shim mismatch: {other:?}")),
+        }
+
+        // --- unknown-field rejection names the key, both dialects ---
+        for line in [&v1, &legacy] {
+            let mut m = Json::parse(line).unwrap().as_obj().unwrap().clone();
+            m.insert("bogus_key".to_string(), Json::Bool(true));
+            match api::parse_line(&Json::Obj(m).to_string()) {
+                Err(e) if e.code() == "bad-params" && e.message().contains("bogus_key") => {}
+                other => return Err(format!("unknown field not rejected: {other:?}")),
+            }
+        }
+
+        // --- control-plane requests ---
+        let reqs = [
+            ApiRequest::Cancel(CancelRequest { id: g.usize(0, 1 << 20) as u64 }),
+            ApiRequest::Sessions(SessionsRequest {
+                model: g.bool().then(|| "llama_like".to_string()),
+                delete: g.bool().then(|| format!("chat-{}", g.usize(0, 9))),
+            }),
+            ApiRequest::Stats(api::StatsRequest),
+            ApiRequest::Info(api::InfoRequest),
+            ApiRequest::Drain(api::DrainRequest),
+        ];
+        for r in &reqs {
+            let line = r.to_json().to_string();
+            match api::parse_line(&line).map_err(|e| e.to_string())? {
+                back if &back == r => {}
+                other => return Err(format!("op round-trip mismatch: {other:?} vs {r:?}")),
+            }
+        }
+
+        // --- typed errors ---
+        let errors = [
+            ApiError::QueueFull { model: format!("m{}", g.usize(0, 9)) },
+            ApiError::PoolExhausted {
+                model: "m".into(),
+                detail: format!("need {} bytes", g.usize(1, 1 << 20)),
+            },
+            ApiError::UnknownModel {
+                model: "x".into(),
+                have: vec!["llama_like".into(), "qwen_like".into()],
+            },
+            ApiError::BadParams { message: format!("bad {}", g.usize(0, 9)) },
+            ApiError::EngineFailure { message: "boom".into() },
+            ApiError::Cancelled,
+            ApiError::Draining { model: "m".into() },
+        ];
+        for e in &errors {
+            let back = ApiError::from_json(&Json::parse(&e.to_json().to_string()).unwrap())
+                .map_err(|x| x.to_string())?;
+            if &back != e {
+                return Err(format!("error round-trip mismatch: {back:?} vs {e:?}"));
+            }
+        }
+
+        // --- events ---
+        let usage = Usage {
+            prompt_tokens: g.usize(0, 600),
+            new_tokens: g.usize(0, 80),
+            reused_tokens: g.usize(0, 600),
+            cache_lens: (0..g.usize(1, 4)).map(|_| g.usize(0, 999)).collect(),
+            compression_events: g.usize(0, 30),
+        };
+        let timings = Timings {
+            queue_us: g.usize(0, 1 << 20) as u64,
+            prefill_us: g.usize(0, 1 << 20) as u64,
+            decode_us: g.usize(0, 1 << 20) as u64,
+        };
+        let id = g.usize(0, 1 << 20) as u64;
+        let events = [
+            Event::Started { id, prompt_tokens: usage.prompt_tokens, reused_tokens: 3 },
+            Event::Token {
+                id,
+                token: g.usize(0, 5000) as i32,
+                text_delta: format!(" tok{}", g.usize(0, 99)),
+            },
+            Event::Compression {
+                id,
+                layer_lens: usage.cache_lens.clone(),
+                evicted: g.usize(0, 64),
+            },
+            Event::Done { id, usage: usage.clone(), timings: timings.clone() },
+            Event::Error { id, error: errors[g.usize(0, errors.len() - 1)].clone() },
+        ];
+        for ev in &events {
+            let back = api::event_from_json(&Json::parse(&api::event_line(ev)).unwrap())
+                .map_err(|x| x.to_string())?;
+            if &back != ev {
+                return Err(format!("event round-trip mismatch: {back:?} vs {ev:?}"));
+            }
+        }
+
+        // --- one-shot responses ---
+        let resp = Response {
+            id,
+            text: format!("text {}", g.usize(0, 99)),
+            tokens: (0..usage.new_tokens).map(|_| g.usize(0, 5000) as i32).collect(),
+            prompt_tokens: usage.prompt_tokens,
+            reused_tokens: usage.reused_tokens,
+            cache_lens: usage.cache_lens.clone(),
+            compression_events: usage.compression_events,
+            queue_us: timings.queue_us,
+            prefill_us: timings.prefill_us,
+            decode_us: timings.decode_us,
+            error: g.bool().then(|| errors[g.usize(0, errors.len() - 1)].clone()),
+        };
+        let back = api::response_from_json(&Json::parse(&api::response_line(&resp)).unwrap())
+            .map_err(|x| x.to_string())?;
+        if back != resp {
+            return Err(format!("response round-trip mismatch: {back:?} vs {resp:?}"));
+        }
+        Ok(())
+    });
+}
+
 /// Allocator invariants under arbitrary append / compress / detach-clone /
 /// drop interleavings on one shared pool: when every cache is gone the
 /// refcount ledger reconciles to zero (no block leaks, no stray loose

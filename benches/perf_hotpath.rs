@@ -7,6 +7,9 @@
 //!     kvpool occupancy / high-water / fragmentation gauges),
 //!   * 2-turn session resume via `prefill_onto` (pool-ledger evidence
 //!     that a resume allocates only tail blocks),
+//!   * the b=1-kill acceptance bench: n=2048 resume through the legacy
+//!     copy-storm loop vs incremental b=1 vs the packed wide-bucket walk
+//!     (>=5x asserted; results land in BENCH_prefill.json),
 //!   * prefix-hit prefill on a shared-prefix workload (radix prefix
 //!     cache: zero deep row copies asserted via the pool ledger, fewer
 //!     backend prefill tokens than cold, hit/miss/reuse gauges),
@@ -22,6 +25,7 @@
 
 use std::time::Instant;
 
+use lagkv::backend::ExecBackend;
 use lagkv::compress::policy::make_policy;
 use lagkv::compress::{maybe_compress, scores, topk};
 use lagkv::config::{CompressionConfig, PolicyKind};
@@ -415,6 +419,154 @@ fn bench_prefix_cache() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The pre-rewrite `prefill_onto` loop, replicated via public APIs as the
+/// timing baseline: every token re-exports EVERY layer's padded K/V image
+/// (`layer_padded` allocates and copies `heads * tmax * d_head` rows) —
+/// the O(tokens x layers x tmax) copy storm the incremental rewrite and
+/// the packed wide-bucket walk both kill.  Deliberately kept in the old
+/// shape; do not "fix" it.
+fn legacy_copy_storm_prefill_onto(
+    engine: &Engine,
+    cache: &mut KvCache,
+    cfg: &CompressionConfig,
+    scorer: &mut dyn lagkv::compress::Scorer,
+    ids: &[i32],
+) -> anyhow::Result<()> {
+    use lagkv::backend::DecodeBatch;
+    let (nl, hkv, dh) = (engine.dims.n_layers, engine.dims.n_kv_heads, engine.dims.d_head);
+    let tmax = engine.tmax;
+    let per_slot = hkv * tmax * dh;
+    for &tok in ids {
+        let mut kbuf = Vec::with_capacity(nl * per_slot);
+        let mut vbuf = Vec::with_capacity(nl * per_slot);
+        let mut lens = Vec::with_capacity(nl);
+        for layer in 0..nl {
+            let (k, v) = cache.layer_padded(layer, tmax);
+            kbuf.extend_from_slice(&k);
+            vbuf.extend_from_slice(&v);
+            lens.push(cache.len(layer) as i32);
+        }
+        let pos = cache.appended as i32;
+        let out = engine.backend().decode(&DecodeBatch {
+            batch: 1,
+            k: &kbuf,
+            v: &vbuf,
+            lens: &lens,
+            pos: &[pos],
+            tokens: &[tok],
+        })?;
+        cache.append_token(&out.k_new, &out.v_new, pos)?;
+        maybe_compress(cache, cfg, scorer)?;
+    }
+    Ok(())
+}
+
+/// The b=1-kill acceptance bench: resume a session with n=2048 new tokens
+/// on a 2560-capacity CPU-ref backend and compare
+///   * the legacy copy-storm loop (before),
+///   * the incremental b=1 `prefill_onto` (after),
+///   * the packed wide-bucket `prefill_onto_batched` (after).
+/// All three must land identical cache shapes (bit-parity is pinned in
+/// rust/tests/properties.rs); the packed walk must clear the >=5x
+/// acceptance bound.  Results are written to BENCH_prefill.json.
+fn bench_prefill_kill_b1() -> anyhow::Result<()> {
+    use lagkv::backend::cpu_ref::CpuRefBackend;
+
+    const N: usize = 2048;
+    let (_, tokenizer) = CpuRefBackend::load("llama_like")?;
+    let backend = CpuRefBackend::with_capacity(&tokenizer.vocab, 2560);
+    let engine = Engine::new(Box::new(backend), tokenizer, "llama_like")?;
+    let cfg = CompressionConfig {
+        policy: PolicyKind::LagKv,
+        sink: 4,
+        lag: 64,
+        ratio: 0.25,
+        ..Default::default()
+    };
+
+    // shared history every variant resumes from, compressed once
+    let mut rng = Rng::seed_from(17);
+    let item = gen_passkey(&mut rng, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None });
+    let ids = engine.tokenizer.encode(&item.prompt, true);
+    let (_, mut base) = engine.prefill(&ids)?;
+    {
+        let mut scorer = engine.make_scorer(&cfg, 0);
+        maybe_compress(&mut base, &cfg, scorer.as_mut())?;
+    }
+    let history = base.appended;
+    let feed: Vec<i32> = (0..N).map(|i| ids[i % ids.len()]).collect();
+
+    let (legacy_ns, _) = time_it(1, 2, || {
+        let mut c = base.clone();
+        let mut sc = engine.make_scorer(&cfg, 0);
+        legacy_copy_storm_prefill_onto(&engine, &mut c, &cfg, sc.as_mut(), &feed).unwrap();
+        std::hint::black_box(c.len(0));
+    });
+    row(
+        &format!("resume n={N} (legacy copy-storm b=1)"),
+        legacy_ns,
+        "re-exports every layer every token",
+    );
+
+    let (incr_ns, _) = time_it(1, 3, || {
+        let mut c = base.clone();
+        let mut sc = engine.make_scorer(&cfg, 0);
+        engine.prefill_onto(&mut c, &cfg, sc.as_mut(), &feed).unwrap();
+        std::hint::black_box(c.len(0));
+    });
+    row(
+        &format!("resume n={N} (incremental b=1)"),
+        incr_ns,
+        &format!("{:.2}x the copy storm", legacy_ns / incr_ns),
+    );
+
+    let (packed_ns, _) = time_it(1, 3, || {
+        let mut c = base.clone();
+        let mut sc = engine.make_scorer(&cfg, 0);
+        engine.prefill_onto_batched(&mut c, &cfg, sc.as_mut(), &feed).unwrap();
+        std::hint::black_box(c.len(0));
+    });
+    row(
+        &format!("resume n={N} (packed wide bucket)"),
+        packed_ns,
+        &format!("{:.2}x the copy storm", legacy_ns / packed_ns),
+    );
+
+    // shape equivalence across all three (bit-parity pinned in properties)
+    let mut c_legacy = base.clone();
+    let mut c_incr = base.clone();
+    let mut c_packed = base.clone();
+    let mut s1 = engine.make_scorer(&cfg, 0);
+    let mut s2 = engine.make_scorer(&cfg, 0);
+    let mut s3 = engine.make_scorer(&cfg, 0);
+    legacy_copy_storm_prefill_onto(&engine, &mut c_legacy, &cfg, s1.as_mut(), &feed)?;
+    engine.prefill_onto(&mut c_incr, &cfg, s2.as_mut(), &feed)?;
+    engine.prefill_onto_batched(&mut c_packed, &cfg, s3.as_mut(), &feed)?;
+    for layer in 0..c_legacy.n_layers {
+        assert_eq!(c_legacy.len(layer), c_incr.len(layer), "incremental diverged");
+        assert_eq!(c_legacy.len(layer), c_packed.len(layer), "packed diverged");
+    }
+
+    let speedup_incr = legacy_ns / incr_ns;
+    let speedup_packed = legacy_ns / packed_ns;
+    assert!(
+        speedup_packed >= 5.0,
+        "acceptance bound: packed resume must be >=5x the legacy loop, got {speedup_packed:.2}x"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"prefill_kill_b1\",\n  \"backend\": \"cpu_ref\",\n  \
+         \"n_tokens\": {N},\n  \"tmax\": 2560,\n  \"history_tokens\": {history},\n  \
+         \"legacy_b1_ns\": {legacy_ns:.0},\n  \"incremental_b1_ns\": {incr_ns:.0},\n  \
+         \"packed_bucket_ns\": {packed_ns:.0},\n  \
+         \"speedup_incremental_vs_legacy\": {speedup_incr:.2},\n  \
+         \"speedup_packed_vs_legacy\": {speedup_packed:.2}\n}}\n"
+    );
+    std::fs::write("BENCH_prefill.json", json)?;
+    println!("  wrote BENCH_prefill.json");
+    Ok(())
+}
+
 /// Streaming latencies only the event API can expose: time-to-first-token
 /// (queue + prefill + first decode) and the inter-token gap, measured off
 /// the live `Router::submit` stream.
@@ -481,6 +633,10 @@ fn main() -> anyhow::Result<()> {
     match bench_prefix_cache() {
         Ok(()) => {}
         Err(e) => eprintln!("SKIP prefix-cache bench: {e:#}"),
+    }
+    match bench_prefill_kill_b1() {
+        Ok(()) => {}
+        Err(e) => eprintln!("SKIP prefill b=1-kill bench: {e:#}"),
     }
     match bench_streaming() {
         Ok(()) => {}

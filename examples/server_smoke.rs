@@ -344,7 +344,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 7. Drain handshake: admission closes with a typed rejection while
-    //    the connection stays serviceable, then the shutdown is clean.
+    //    the connection stays serviceable; undrain reopens it (the
+    //    rollback half of a rolling restart), then the shutdown is clean.
     let drained = client_b.drain()?;
     assert!(drained.draining);
     let rejected = client_b.generate(Some(34), turn("<q> the pass key <a>", 4))?;
@@ -355,6 +356,13 @@ fn main() -> anyhow::Result<()> {
     );
     assert!(client_b.stats()?.draining, "stats must report the drain");
     println!("drain ok: typed rejection after admission closed");
+
+    let reopened = client_b.undrain()?;
+    assert!(!reopened.draining, "undrain must report admission reopened");
+    assert!(!client_b.stats()?.draining, "stats must report the undrain");
+    let accepted = client_b.generate(Some(35), turn("<q> the pass key <a>", 4))?;
+    assert!(accepted.error.is_none(), "post-undrain submit must be accepted: {accepted:?}");
+    println!("undrain ok: admission reopened and a request ran");
 
     drop(client_a);
     drop(client_b);

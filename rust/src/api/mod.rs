@@ -11,6 +11,7 @@
 //! {"v": 1, "op": "sessions", "delete": "chat-42"}
 //! {"v": 1, "op": "info"}
 //! {"v": 1, "op": "drain"}
+//! {"v": 1, "op": "undrain"}
 //! ```
 //!
 //! * **Versioning** — `"v"` names the protocol revision.  Anything other
@@ -33,7 +34,7 @@
 //! one-shot [`crate::coordinator::Response`] lines, NDJSON
 //! [`crate::coordinator::Event`] streams, `cancel_ack` lines, and the
 //! control-plane payloads ([`StatsResponse`], [`SessionsResponse`],
-//! [`InfoResponse`], [`DrainResponse`]).
+//! [`InfoResponse`], [`DrainResponse`], [`UndrainResponse`]).
 
 use std::collections::BTreeMap;
 
@@ -125,6 +126,7 @@ pub enum ApiRequest {
     Sessions(SessionsRequest),
     Info(InfoRequest),
     Drain(DrainRequest),
+    Undrain(UndrainRequest),
 }
 
 impl ApiRequest {
@@ -138,6 +140,7 @@ impl ApiRequest {
             ApiRequest::Sessions(r) => r.to_json(),
             ApiRequest::Info(r) => r.to_json(),
             ApiRequest::Drain(r) => r.to_json(),
+            ApiRequest::Undrain(r) => r.to_json(),
         }
     }
 }
@@ -177,8 +180,12 @@ pub fn parse_line(line: &str) -> Result<ApiRequest, ApiError> {
                 reject_unknown(m, &[], true)?;
                 Ok(ApiRequest::Drain(DrainRequest))
             }
+            "undrain" => {
+                reject_unknown(m, &[], true)?;
+                Ok(ApiRequest::Undrain(UndrainRequest))
+            }
             other => Err(bad(format!(
-                "unknown op {other:?} (generate|cancel|stats|sessions|info|drain)"
+                "unknown op {other:?} (generate|cancel|stats|sessions|info|drain|undrain)"
             ))),
         }
     } else if m.contains_key("cancel") {
@@ -399,12 +406,24 @@ impl InfoRequest {
 }
 
 /// `{"v":1,"op":"drain"}` — close admission; in-flight work finishes.
+/// Reversible with [`UndrainRequest`] (rolling restarts that change their
+/// mind reopen admission without a process bounce).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DrainRequest;
 
 impl DrainRequest {
     pub fn to_json(&self) -> Json {
         obj(envelope("drain"))
+    }
+}
+
+/// `{"v":1,"op":"undrain"}` — reopen admission after a drain.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UndrainRequest;
+
+impl UndrainRequest {
+    pub fn to_json(&self) -> Json {
+        obj(envelope("undrain"))
     }
 }
 
@@ -954,7 +973,7 @@ impl InfoResponse {
 /// Reply to `{"v":1,"op":"drain"}`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DrainResponse {
-    /// Always true after the op (draining is irreversible).
+    /// True after the op; stays true until an `undrain` reopens admission.
     pub draining: bool,
     /// Requests still running or streaming at the time of the reply.
     pub in_flight: usize,
@@ -970,6 +989,31 @@ impl DrainResponse {
 
     pub fn from_json(v: &Json) -> Result<DrainResponse> {
         Ok(DrainResponse {
+            draining: v.get("draining")?.as_bool()?,
+            in_flight: v.get("in_flight")?.as_usize()?,
+        })
+    }
+}
+
+/// Reply to `{"v":1,"op":"undrain"}` — the mirror of [`DrainResponse`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UndrainResponse {
+    /// Always false after the op (admission is open again).
+    pub draining: bool,
+    /// Requests still running or streaming at the time of the reply.
+    pub in_flight: usize,
+}
+
+impl UndrainResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("undrain");
+        pairs.push(("draining", Json::Bool(self.draining)));
+        pairs.push(("in_flight", n(self.in_flight as f64)));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<UndrainResponse> {
+        Ok(UndrainResponse {
             draining: v.get("draining")?.as_bool()?,
             in_flight: v.get("in_flight")?.as_usize()?,
         })
@@ -1072,6 +1116,7 @@ mod tests {
             ApiRequest::Sessions(SessionsRequest::default()),
             ApiRequest::Info(InfoRequest),
             ApiRequest::Drain(DrainRequest),
+            ApiRequest::Undrain(UndrainRequest),
         ] {
             let line = req.to_json().to_string();
             assert_eq!(parse_line(&line).unwrap(), req, "round-trip of {line}");
@@ -1240,5 +1285,9 @@ mod tests {
         let drain = DrainResponse { draining: true, in_flight: 3 };
         let v = Json::parse(&drain.to_json().to_string()).unwrap();
         assert_eq!(DrainResponse::from_json(&v).unwrap(), drain);
+
+        let undrain = UndrainResponse { draining: false, in_flight: 2 };
+        let v = Json::parse(&undrain.to_json().to_string()).unwrap();
+        assert_eq!(UndrainResponse::from_json(&v).unwrap(), undrain);
     }
 }

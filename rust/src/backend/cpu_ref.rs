@@ -66,6 +66,15 @@ impl CpuRefBackend {
     }
 
     pub fn new(vocab: &Vocab) -> CpuRefBackend {
+        CpuRefBackend::with_capacity(vocab, 640)
+    }
+
+    /// Same synthetic model with a caller-chosen cache capacity.  KV rows
+    /// are a pure function of `(token, pos)` — independent of `max_seq` —
+    /// so two backends of different capacity emit byte-identical rows;
+    /// only the padded-buffer shapes and bucket menus change.  Benches use
+    /// this to run prompt lengths past the default 640-row ceiling.
+    pub fn with_capacity(vocab: &Vocab, max_seq: usize) -> CpuRefBackend {
         let dims = ModelDims {
             vocab_size: vocab.size(),
             d_model: 32,
@@ -74,17 +83,26 @@ impl CpuRefBackend {
             n_kv_heads: 2,
             d_head: 8,
             d_ff: 64,
-            max_seq: 640,
+            max_seq,
             rope_theta: 10_000.0,
             norm_eps: 1e-5,
         };
+        // Doubling prefill buckets up to the capacity; the default 640
+        // capacity reproduces the historical menu [128, 256, 512, 640].
+        let mut prefill_buckets = Vec::new();
+        let mut b = 128usize;
+        while b < max_seq {
+            prefill_buckets.push(b);
+            b *= 2;
+        }
+        prefill_buckets.push(max_seq);
         let w = dims.n_layers * dims.n_kv_heads * dims.d_head;
         let mut rng = Rng::seed_from(0xC0DE);
         let k_mean: Vec<f32> = (0..w).map(|_| rng.normal() * 1.5).collect();
         let v_mean: Vec<f32> = (0..w).map(|_| rng.normal() * 1.5).collect();
         CpuRefBackend {
             tmax: dims.max_seq,
-            prefill_buckets: vec![128, 256, 512, 640],
+            prefill_buckets,
             decode_buckets: vec![1, 4],
             k_mean,
             v_mean,
@@ -256,6 +274,14 @@ impl ExecBackend for CpuRefBackend {
         }
         Ok(DecodeOutput { logits, k_new, v_new, attn_rows })
     }
+
+    /// `decode` above derives `k_new`/`v_new`/`logits` from `(token, pos)`
+    /// alone and never dereferences row *contents* of `batch.k`/`batch.v`
+    /// (only `lens` feeds the attention surrogate), so sequential tokens
+    /// of one sequence may be packed across slots of a single call.
+    fn decode_is_kv_oblivious(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
@@ -329,6 +355,22 @@ mod tests {
                 assert_eq!(pre_row, dec_row, "layer {layer} head {h}");
             }
         }
+    }
+
+    #[test]
+    fn with_capacity_extends_buckets_and_preserves_rows() {
+        let vocab = Vocab::synthetic();
+        let small = CpuRefBackend::new(&vocab);
+        let big = CpuRefBackend::with_capacity(&vocab, 2560);
+        assert_eq!(small.prefill_buckets(), &[128, 256, 512, 640]);
+        assert_eq!(big.prefill_buckets(), &[128, 256, 512, 1024, 2048, 2560]);
+        assert_eq!(big.tmax(), 2560);
+        assert!(big.decode_is_kv_oblivious());
+        // capacity never changes row content: purity is over (token, pos)
+        let (k1, v1) = small.kv_row(42, 600);
+        let (k2, v2) = big.kv_row(42, 600);
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
     }
 
     #[test]

@@ -117,6 +117,22 @@ pub trait ExecBackend {
     /// Run one decode step over a fixed-shape batch.
     fn decode(&self, batch: &DecodeBatch<'_>) -> Result<DecodeOutput>;
 
+    /// True when [`ExecBackend::decode`]'s per-slot outputs (`k_new`,
+    /// `v_new`, `logits`) are pure functions of `(token, pos)` that never
+    /// read the packed `k`/`v` buffers or other slots.  Such a backend can
+    /// serve *sequential* tokens of one sequence packed across the slots of
+    /// a single wide decode call ([`Engine::prefill_onto_batched`]): slot
+    /// `s+1` does not need slot `s`'s KV row to be visible in the buffers.
+    ///
+    /// A real-attention backend must return `false` (the default): its
+    /// logits at position `p` attend over every cached row `< p`, so
+    /// in-call packing would read stale state.
+    ///
+    /// [`Engine::prefill_onto_batched`]: crate::engine::Engine::prefill_onto_batched
+    fn decode_is_kv_oblivious(&self) -> bool {
+        false
+    }
+
     /// Backend-accelerated scorer for this compression config, if the
     /// backend provides one (`None` -> the engine falls back to the
     /// pure-Rust policy scorer).

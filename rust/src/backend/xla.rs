@@ -138,6 +138,15 @@ impl ExecBackend for XlaBackend {
         })
     }
 
+    /// The lowered decode HLO runs real attention over the packed K/V
+    /// buffers, so a slot's logits depend on every cached row being
+    /// up to date — sequential in-call packing would read stale state.
+    /// Explicitly not KV-oblivious (suffix/resume prefill falls back to
+    /// the incremental b=1 path on this backend).
+    fn decode_is_kv_oblivious(&self) -> bool {
+        false
+    }
+
     fn scorer(&self, cfg: &CompressionConfig, seed: u64) -> Option<Box<dyn Scorer>> {
         if cfg.scorer != ScorerBackend::Xla {
             return None;

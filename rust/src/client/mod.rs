@@ -35,6 +35,7 @@ use anyhow::{bail, Context, Result};
 use crate::api::{
     self, CancelAck, CancelRequest, DrainRequest, DrainResponse, GenerateRequest, InfoRequest,
     InfoResponse, SessionsRequest, SessionsResponse, StatsRequest, StatsResponse,
+    UndrainRequest, UndrainResponse,
 };
 use crate::coordinator::{ApiError, Event, GenerateParams, Response};
 use crate::util::json::Json;
@@ -153,10 +154,18 @@ impl Client {
     }
 
     /// Control plane: close admission (typed `draining` rejections from
-    /// here on) while in-flight work finishes.  Irreversible.
+    /// here on) while in-flight work finishes.  Reversible with
+    /// [`Client::undrain`].
     pub fn drain(&mut self) -> Result<DrainResponse> {
         let v = self.op_call(&DrainRequest.to_json())?;
         DrainResponse::from_json(&v)
+    }
+
+    /// Control plane: reopen admission after a drain (the rollback half of
+    /// a rolling restart).
+    pub fn undrain(&mut self) -> Result<UndrainResponse> {
+        let v = self.op_call(&UndrainRequest.to_json())?;
+        UndrainResponse::from_json(&v)
     }
 
     /// Send a control-plane op and read its reply, surfacing a server-side

@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::CompressionConfig;
-use crate::engine::{Engine, SeqState, SlotState};
+use crate::engine::{Engine, PrefillJob, PrefillTask, SeqState, SlotState};
 use crate::tokenizer::EOS;
 use crate::util::argmax;
 
@@ -225,10 +225,20 @@ impl Coordinator {
             }
 
             // Decode burst, then recheck admissions.  Cancel flags are
-            // honoured at every step boundary.
+            // honoured at every step boundary, and every chunked cold
+            // prefill advances one segment per step — interleaved with the
+            // decode steps of in-flight sequences, so one long cold prompt
+            // costs each streaming sequence at most one segment's latency
+            // between tokens instead of a whole prefill.
             for _ in 0..self.admission_interval {
                 self.abort_flagged(&mut slots, &mut meta);
+                self.advance_prefills(&mut slots, &mut meta);
                 if !slots.iter().any(|s| s.active().is_some()) {
+                    if slots.iter().any(|s| s.is_prefilling()) {
+                        // Nothing to decode yet, but prefill segments
+                        // remain: keep burning burst iterations on them.
+                        continue;
+                    }
                     break;
                 }
                 self.engine.step_batch(&mut slots)?;
@@ -288,11 +298,13 @@ impl Coordinator {
                 pending.prompt_tokens = ids.len();
                 pending.reused_tokens = entry.cache.appended;
                 pending.turns = entry.turns;
-                let mut feed = vec![entry.pending];
-                feed.extend_from_slice(&ids);
-                if entry.cache.appended + feed.len() + 1 >= self.engine.tmax {
+                let feed = entry.resume_feed(&ids);
+                if !self.engine.feed_fits(entry.cache.appended, feed.len()) {
                     // Refuse before touching the cache so the stored
-                    // conversation survives for a shorter retry.
+                    // conversation survives for a shorter retry.  Same
+                    // capacity rule and typed rejection as every other
+                    // decode-path feed: a client-sized problem, so it
+                    // reaches the wire as {"code": "bad-params"}.
                     let sid = req.session.as_deref().unwrap_or("");
                     let message = format!(
                         "session {sid:?}: history of {} + {} new tokens exceeds capacity {}",
@@ -308,7 +320,7 @@ impl Coordinator {
                     );
                     pending.send(Event::Error {
                         id: pending.id,
-                        error: ApiError::EngineFailure { message },
+                        error: ApiError::BadParams { message },
                     });
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
                     return;
@@ -343,8 +355,11 @@ impl Coordinator {
                 }
                 self.stats.sessions_resumed.fetch_add(1, Ordering::Relaxed);
                 let mut cache = entry.cache;
+                // Packed wide-bucket suffix prefill (bit-identical to the
+                // b=1 trajectory; falls back to it on real-attention
+                // backends) — fast enough to stay synchronous.
                 self.engine
-                    .prefill_onto(&mut cache, &req.compression, scorer.as_mut(), &feed)
+                    .prefill_onto_batched(&mut cache, &req.compression, scorer.as_mut(), &feed)
                     .map(|(logits, events)| (logits, cache, events))
             }
             None => {
@@ -394,16 +409,30 @@ impl Coordinator {
                         prompt_ids: ids.clone(),
                     });
                 }
-                // Prefill through the radix prefix cache: attach the
-                // longest stored prompt prefix CoW and run the backend
-                // only over the unmatched suffix (cold path when the tree
-                // is disabled or misses).
-                self.engine
-                    .prefill_cached(&ids, &req.compression, scorer.as_mut(), req.seed)
-                    .map(|outcome| {
+                // Start the prefill through the radix prefix cache: a warm
+                // hit (longest stored prompt prefix attached CoW, packed
+                // suffix decode) completes right here; a cold prompt comes
+                // back as a chunked prefill that parks in the slot and is
+                // advanced segment-by-segment by the decode loop, so it
+                // never stalls in-flight decode for its whole length.
+                match self.engine.begin_prefill(&ids, &req.compression, scorer.as_mut(), req.seed)
+                {
+                    Ok(PrefillTask::Done(outcome)) => {
                         pending.reused_tokens = outcome.reused_tokens;
-                        (outcome.logits, outcome.cache, outcome.events)
-                    })
+                        Ok((outcome.logits, outcome.cache, outcome.events))
+                    }
+                    Ok(PrefillTask::Chunked(chunked)) => {
+                        slots[idx] = SlotState::prefilling(PrefillJob {
+                            chunked,
+                            scorer,
+                            compression: req.compression.clone(),
+                            max_new: req.max_new,
+                        });
+                        meta[idx] = Some(pending);
+                        return;
+                    }
+                    Err(e) => Err(e),
+                }
             }
         };
 
@@ -513,14 +542,74 @@ impl Coordinator {
         self.stash_session(&p, seq);
     }
 
+    /// Advance every in-progress chunked cold prefill by one segment.  A
+    /// finished prefill is promoted into a decoding sequence: `Started`
+    /// fires (TTFT semantics are unchanged — the client hears nothing
+    /// until its prompt is fully prefilled), the first token is sampled
+    /// from the prefill logits, and the slot joins the next decode step.
+    fn advance_prefills(&mut self, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
+        for idx in 0..slots.len() {
+            let Some(job) = slots[idx].prefill_mut() else { continue };
+            let stepped = job.chunked.step(&self.engine, job.scorer.as_mut());
+            let done = match stepped {
+                Ok(done) => done,
+                Err(e) => {
+                    slots[idx].take_prefill();
+                    let mut p = meta[idx].take().expect("prefilling slot has metadata");
+                    p.send(Event::Error {
+                        id: p.id,
+                        error: ApiError::EngineFailure { message: format!("{e:#}") },
+                    });
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            };
+            if !done {
+                continue;
+            }
+            let job = slots[idx].take_prefill().expect("prefill job present");
+            let PrefillJob { chunked, scorer, compression, max_new } = *job;
+            let outcome = chunked.finish(&self.engine);
+            let p = meta[idx].as_mut().expect("prefilling slot has metadata");
+            p.prefill_us = p.started.elapsed().as_micros() as u64;
+            p.started = Instant::now();
+            p.send(Event::Started {
+                id: p.id,
+                prompt_tokens: p.prompt_tokens,
+                reused_tokens: outcome.reused_tokens,
+            });
+            let first = argmax(&outcome.logits) as i32;
+            let mut slot = SlotState::occupied(outcome.cache, compression, scorer, first, max_new);
+            if let Some(seq) = slot.seq_mut() {
+                seq.compression_events += outcome.events.len();
+                seq.step_events = outcome.events;
+                seq.push_generated(first, self.engine.tmax);
+            }
+            slots[idx] = slot;
+            // emit the prefill-stage events and the first token; a freshly
+            // promoted sequence may already be done (max_new=1)
+            self.progress_slot(idx, slots, meta);
+            self.reap_slot(idx, slots, meta);
+        }
+    }
+
     /// Free every slot whose request was cancelled or whose event receiver
     /// is gone.  Runs at step boundaries, so an abort never wastes more
-    /// than one decode step.
+    /// than one decode step (or one prefill segment).
     fn abort_flagged(&mut self, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
         for idx in 0..slots.len() {
             let flagged = slots[idx].occupied_any()
                 && meta[idx].as_ref().map(|p| p.flagged()).unwrap_or(false);
             if !flagged {
+                continue;
+            }
+            if slots[idx].take_prefill().is_some() {
+                // Cancelled mid-prefill: the turn never started, so there
+                // is no conversation state to advance — same contract as a
+                // cancel while queued.  The reservation releases on drop.
+                let mut p = meta[idx].take().expect("prefilling slot has metadata");
+                p.send(Event::Error { id: p.id, error: ApiError::Cancelled });
+                self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
             let seq = slots[idx].take().unwrap();
@@ -583,8 +672,21 @@ impl Coordinator {
             (d.n_layers, d.n_kv_heads, d.d_head)
         };
         let needed = new_rows * crate::kvpool::row_bytes(nl, nh, dh);
-        let materialized: usize =
-            slots.iter().filter_map(|s| s.seq()).map(|q| q.cache.exact_bytes()).sum();
+        // Bytes already resident for in-flight work — decoding sequences
+        // plus partially-ingested chunked prefills — all of it covered by
+        // live reservations, so it is subtracted before adding `reserved`.
+        let materialized: usize = slots
+            .iter()
+            .map(|s| {
+                if let Some(q) = s.seq() {
+                    q.cache.exact_bytes()
+                } else if let Some(j) = s.prefill() {
+                    j.chunked.cache_bytes()
+                } else {
+                    0
+                }
+            })
+            .sum();
         loop {
             let resident = pool.resident_bytes();
             let reserved = self.reserved.load(Ordering::Relaxed);

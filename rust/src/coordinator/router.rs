@@ -263,9 +263,16 @@ impl Router {
 
     /// Close admission: every subsequent submit is a typed `draining`
     /// rejection while in-flight and already-queued work runs to
-    /// completion.  Irreversible — draining precedes a shutdown.
+    /// completion.  Reversible — [`Router::undrain`] reopens admission, so
+    /// a rolling restart that changes its mind keeps the warm process.
     pub fn drain(&self) {
         self.draining.store(true, Ordering::Relaxed);
+    }
+
+    /// Reopen admission after a [`Router::drain`].  A no-op when the
+    /// router is not draining.
+    pub fn undrain(&self) {
+        self.draining.store(false, Ordering::Relaxed);
     }
 
     pub fn is_draining(&self) -> bool {

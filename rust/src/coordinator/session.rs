@@ -57,6 +57,18 @@ pub struct SessionEntry {
     last_used: Instant,
 }
 
+impl SessionEntry {
+    /// The token feed a resume must run through the decode path: the
+    /// stored pending token first (so the cache trajectory matches the
+    /// equivalent concatenated prompt exactly), then the new turn's ids.
+    pub fn resume_feed(&self, ids: &[i32]) -> Vec<i32> {
+        let mut feed = Vec::with_capacity(1 + ids.len());
+        feed.push(self.pending);
+        feed.extend_from_slice(ids);
+        feed
+    }
+}
+
 /// Accounting view of one stored session, as reported by the control
 /// plane's `sessions` op (see [`crate::api`]).
 #[derive(Debug, Clone, PartialEq, Eq)]

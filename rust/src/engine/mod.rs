@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::{DecodeBatch, ExecBackend};
+use crate::backend::{DecodeBatch, ExecBackend, PrefillOutput};
 use crate::compress::driver::CompressionEvent;
 use crate::compress::{maybe_compress, policy::make_policy, Scorer};
 use crate::config::{CompressionConfig, ModelDims};
@@ -32,7 +32,7 @@ use crate::kvpool::{BlockPool, PrefixCache, PrefixConfig};
 use crate::tokenizer::Tokenizer;
 use crate::util::argmax as argmax_slice;
 
-pub use slot::{SeqState, SlotState};
+pub use slot::{PrefillJob, SeqState, SlotState};
 
 /// Result of a single-sequence generation.
 #[derive(Debug, Clone)]
@@ -62,6 +62,116 @@ pub struct PrefillOutcome {
     /// Prompt tokens attached from a radix prefix-cache snapshot instead
     /// of being run through the backend (0 on a cold prefill).
     pub reused_tokens: usize,
+}
+
+/// Segment granularity for chunked cold prefill when no prefix cache
+/// dictates a snapshot stride: small enough that a decode burst slips in
+/// between segments, large enough that the per-segment driver pass
+/// amortizes.
+pub const DEFAULT_PREFILL_STRIDE: usize = 64;
+
+/// A started prefill: either already complete (warm prefix hit, or a
+/// path-dependent policy that must run in one piece) or a cold prefill
+/// whose ingest/compression continues in segments.
+pub enum PrefillTask {
+    Done(PrefillOutcome),
+    Chunked(ChunkedPrefill),
+}
+
+/// A cold bucketed prefill split into `stride`-token ingest segments.
+///
+/// The backend compute already happened ([`Engine::begin_prefill`] holds
+/// its [`PrefillOutput`]); what remains — per-segment cache ingest, the
+/// recursive compression driver, optional prefix-tree snapshots — is
+/// advanced one segment per [`ChunkedPrefill::step`] call so the caller
+/// can interleave it with other work.  Segment boundaries are
+/// trajectory-invisible for order-insensitive policies: the driver fires
+/// the same events at the same row thresholds no matter how the ingest is
+/// sliced.
+pub struct ChunkedPrefill {
+    cfg: CompressionConfig,
+    seed: u64,
+    ids: Vec<i32>,
+    bucket: usize,
+    out: PrefillOutput,
+    cache: KvCache,
+    events: Vec<CompressionEvent>,
+    stride: usize,
+    /// Insert a prefix-tree snapshot at each interior segment boundary
+    /// (prefix cache enabled and the config is cacheable).
+    insert_snapshots: bool,
+}
+
+impl ChunkedPrefill {
+    /// Tokens ingested into the cache so far.
+    pub fn ingested(&self) -> usize {
+        self.cache.appended
+    }
+
+    /// Total prompt length.
+    pub fn total(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// True once every segment has been ingested.
+    pub fn is_done(&self) -> bool {
+        self.cache.appended >= self.ids.len()
+    }
+
+    /// Pool bytes the partially-built cache holds right now (admission
+    /// accounting: these rows are resident *and* covered by the request's
+    /// reservation, so occupancy math must not count them twice).
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.exact_bytes()
+    }
+
+    /// Ingest one more segment and fire any due compression.  Returns
+    /// `Ok(true)` when the prefill is complete ([`ChunkedPrefill::finish`]
+    /// may then be called), `Ok(false)` when more segments remain.
+    pub fn step(&mut self, engine: &Engine, scorer: &mut dyn Scorer) -> Result<bool> {
+        let from = self.cache.appended;
+        if from >= self.ids.len() {
+            return Ok(true);
+        }
+        let to = (from + self.stride).min(self.ids.len());
+        self.cache.ingest_prefill_segment(
+            &self.out.k,
+            &self.out.v,
+            &self.out.attn_sums,
+            self.bucket,
+            from,
+            to,
+        )?;
+        self.events.extend(maybe_compress(&mut self.cache, &self.cfg, scorer)?);
+        if to < self.ids.len() {
+            if self.insert_snapshots {
+                if let Some(prefix) = engine.prefix.as_ref() {
+                    prefix.insert(&self.cfg, self.seed, &self.ids[..to], &self.cache);
+                }
+            }
+            Ok(false)
+        } else {
+            Ok(true)
+        }
+    }
+
+    /// Consume the finished prefill into a [`PrefillOutcome`], inserting
+    /// the compression-final full-prompt snapshot into the prefix tree.
+    /// Must only be called after [`ChunkedPrefill::step`] returned true.
+    pub fn finish(self, engine: &Engine) -> PrefillOutcome {
+        debug_assert!(self.is_done(), "finish() on an unfinished chunked prefill");
+        if self.insert_snapshots {
+            if let Some(prefix) = engine.prefix.as_ref() {
+                prefix.insert(&self.cfg, self.seed, &self.ids, &self.cache);
+            }
+        }
+        PrefillOutcome {
+            logits: self.out.logits,
+            cache: self.cache,
+            events: self.events,
+            reused_tokens: 0,
+        }
+    }
 }
 
 pub struct Engine {
@@ -219,9 +329,10 @@ impl Engine {
     ///
     /// 1. **walk** — attach the deepest snapshot whose key is a proper
     ///    prefix of `ids` (CoW: zero deep copies of the shared prefix) and
-    ///    run only the unmatched suffix through the b=1 decode path
-    ///    ([`Engine::prefill_onto`] — the same trajectory a cold prefill
-    ///    would take, by driver order-insensitivity);
+    ///    run only the unmatched suffix through the packed wide-bucket
+    ///    decode path ([`Engine::prefill_onto_batched`] — bit-identical to
+    ///    the b=1 trajectory a cold prefill would take, by driver
+    ///    order-insensitivity);
     /// 2. **miss** — run the bucketed backend prefill, but ingest the
     ///    output in `stride`-token segments, compressing between segments
     ///    and inserting a snapshot at each boundary so future requests can
@@ -229,9 +340,11 @@ impl Engine {
     /// 3. either way, the compression-final full-prompt state is inserted
     ///    back into the tree.
     ///
-    /// With the cache disabled (or an attention-fed policy, which is
-    /// path-dependent and uncacheable) this is exactly the classic
-    /// prefill-then-compress path, byte for byte.
+    /// This is [`Engine::begin_prefill`] driven to completion in place;
+    /// the continuous batcher drives the same machinery one segment at a
+    /// time, interleaved with decode.  An attention-fed policy (which is
+    /// path-dependent and uncacheable) takes a single full-prompt segment
+    /// — exactly the classic prefill-then-compress path, byte for byte.
     pub fn prefill_cached(
         &self,
         ids: &[i32],
@@ -239,14 +352,39 @@ impl Engine {
         scorer: &mut dyn Scorer,
         seed: u64,
     ) -> Result<PrefillOutcome> {
-        let prefix = match self.prefix.as_ref().filter(|p| p.cacheable(cfg)) {
-            Some(p) => p,
-            None => {
-                let (logits, mut cache) = self.prefill(ids)?;
-                let events = maybe_compress(&mut cache, cfg, scorer)?;
-                return Ok(PrefillOutcome { logits, cache, events, reused_tokens: 0 });
+        match self.begin_prefill(ids, cfg, scorer, seed)? {
+            PrefillTask::Done(outcome) => Ok(outcome),
+            PrefillTask::Chunked(mut chunked) => {
+                while !chunked.step(self, scorer)? {}
+                Ok(chunked.finish(self))
             }
-        };
+        }
+    }
+
+    /// Start a prefill, splitting the cold path into resumable segments.
+    ///
+    /// * **warm hit** — the prefix walk + packed suffix decode run to
+    ///   completion here (the wide-bucket path made this cheap), returning
+    ///   [`PrefillTask::Done`];
+    /// * **cold** — the bucketed backend prefill runs here, but the
+    ///   segment-by-segment ingest + compression is handed back as a
+    ///   [`ChunkedPrefill`] the caller advances with
+    ///   [`ChunkedPrefill::step`] — the batcher interleaves those steps
+    ///   with in-flight decode so one long cold prompt no longer stalls
+    ///   the whole batch.
+    ///
+    /// Attention-fed policies get a single full-prompt segment: their
+    /// scoring is path-dependent, so mid-prompt compression boundaries
+    /// would be trajectory-visible.  Everything else is segment-safe by
+    /// driver order-insensitivity.
+    pub fn begin_prefill(
+        &self,
+        ids: &[i32],
+        cfg: &CompressionConfig,
+        scorer: &mut dyn Scorer,
+        seed: u64,
+    ) -> Result<PrefillTask> {
+        let prefix = self.prefix.as_ref().filter(|p| p.cacheable(cfg));
 
         // Walk: attach the longest stored proper prefix and decode-prefill
         // only the suffix.  The capacity guard runs *before* the lookup —
@@ -255,44 +393,54 @@ impl Engine {
         // which keeps the tree's hit gauges and LRU recency in step with
         // attaches that actually happen.  A backend error mid-suffix still
         // falls back to a cold prefill.
-        if self.backend.decode_buckets().contains(&1) && ids.len() + 1 < self.tmax {
-            if let Some((mut cache, depth)) = prefix.lookup(cfg, seed, ids) {
-                debug_assert_eq!(cache.appended, depth, "snapshot depth != key length");
-                if let Ok((logits, events)) =
-                    self.prefill_onto(&mut cache, cfg, scorer, &ids[depth..])
-                {
-                    prefix.insert(cfg, seed, ids, &cache);
-                    return Ok(PrefillOutcome { logits, cache, events, reused_tokens: depth });
+        if let Some(prefix) = prefix {
+            if self.suffix_decode_available(cfg) && self.feed_fits(0, ids.len()) {
+                if let Some((mut cache, depth)) = prefix.lookup(cfg, seed, ids) {
+                    debug_assert_eq!(cache.appended, depth, "snapshot depth != key length");
+                    if let Ok((logits, events)) =
+                        self.prefill_onto_batched(&mut cache, cfg, scorer, &ids[depth..])
+                    {
+                        prefix.insert(cfg, seed, ids, &cache);
+                        return Ok(PrefillTask::Done(PrefillOutcome {
+                            logits,
+                            cache,
+                            events,
+                            reused_tokens: depth,
+                        }));
+                    }
                 }
             }
         }
 
-        // Miss: bucketed prefill with segmented ingest + snapshots.
+        // Cold: one bucketed backend prefill, then segmented ingest.
         let bucket = self.pick_prefill_bucket(ids.len())?;
         let mut tokens = vec![0i32; bucket];
         tokens[..ids.len()].copy_from_slice(ids);
         let out = self.backend.prefill(&tokens, ids.len())?;
-        let mut cache = KvCache::new_in(
+        let cache = KvCache::new_in(
             Arc::clone(&self.pool),
             self.dims.n_layers,
             self.dims.n_kv_heads,
             self.dims.d_head,
         );
-        let mut events = Vec::new();
-        let stride = prefix.config().stride.max(1);
-        loop {
-            let from = cache.appended;
-            let to = (from + stride).min(ids.len());
-            cache.ingest_prefill_segment(&out.k, &out.v, &out.attn_sums, bucket, from, to)?;
-            events.extend(maybe_compress(&mut cache, cfg, scorer)?);
-            if to < ids.len() {
-                prefix.insert(cfg, seed, &ids[..to], &cache);
-            } else {
-                break;
-            }
-        }
-        prefix.insert(cfg, seed, ids, &cache);
-        Ok(PrefillOutcome { logits: out.logits, cache, events, reused_tokens: 0 })
+        let (stride, insert_snapshots) = if cfg.policy.needs_attention() {
+            (ids.len(), false)
+        } else if let Some(prefix) = prefix {
+            (prefix.config().stride.max(1), true)
+        } else {
+            (DEFAULT_PREFILL_STRIDE, false)
+        };
+        Ok(PrefillTask::Chunked(ChunkedPrefill {
+            cfg: cfg.clone(),
+            seed,
+            ids: ids.to_vec(),
+            bucket,
+            out,
+            cache,
+            events: Vec::new(),
+            stride,
+            insert_snapshots,
+        }))
     }
 
     /// One batched decode step over `slots` (entries may be idle).
@@ -366,12 +514,60 @@ impl Engine {
         Ok(())
     }
 
+    /// Unified capacity rule for every decode-path feed (b=1 incremental,
+    /// packed wide-bucket, generation steps): `n` tokens on top of
+    /// `appended` rows of history fit iff `appended + n < tmax` — one row
+    /// stays free so the step *after* the feed can still append.  This is
+    /// exactly the closure of the old per-token bail
+    /// (`appended + 1 >= tmax` before token `i` ⇔ `appended₀ + n >= tmax`
+    /// at `i = n-1`), checked up front so an oversized feed is refused
+    /// *before* any partial append mutates the cache.
+    pub fn feed_fits(&self, appended: usize, n: usize) -> bool {
+        appended + n < self.tmax
+    }
+
+    fn check_feed(&self, cache: &KvCache, n: usize) -> Result<()> {
+        if !self.feed_fits(cache.appended, n) {
+            bail!(
+                "session history of {} + feed of {n} tokens exceeds decode capacity {}",
+                cache.appended,
+                self.tmax
+            );
+        }
+        Ok(())
+    }
+
+    /// The widest decode bucket usable for *packed* suffix prefill, if the
+    /// backend and policy allow it: the backend's decode must be
+    /// KV-oblivious (so sequential tokens of one sequence can share a
+    /// call) and the policy must not feed on attention rows (the packed
+    /// call's attention surrogate is suppressed via zero lens).
+    fn packed_suffix_bucket(&self, cfg: &CompressionConfig) -> Option<usize> {
+        if cfg.policy.needs_attention() || !self.backend.decode_is_kv_oblivious() {
+            return None;
+        }
+        self.backend.decode_buckets().iter().copied().max().filter(|&b| b > 1)
+    }
+
+    /// Whether suffix/resume prefill can run on this backend at all —
+    /// either the classic b=1 bucket or the packed wide-bucket path.
+    pub fn suffix_decode_available(&self, cfg: &CompressionConfig) -> bool {
+        self.backend.decode_buckets().contains(&1) || self.packed_suffix_bucket(cfg).is_some()
+    }
+
     /// Incremental ("session") prefill: run `ids` through the decode path
     /// on top of an existing cache, appending each token at its absolute
     /// position and firing the recursive compression driver after every
     /// append — exactly the trajectory a concatenated one-shot prefill
     /// would have produced (the driver is order-insensitive).  Returns the
     /// last token's next-token logits plus the compression events fired.
+    ///
+    /// The padded K/V upload buffers are assembled **once** and patched
+    /// per token: each appended row lands at index `len-1` of its layer's
+    /// padded image, and only a compression event (which rewrites a
+    /// layer's row set) forces a full re-export of that one layer.  The
+    /// old shape of this loop re-exported every layer every token — the
+    /// O(prompt × layers × tmax) copy storm this rewrite removes.
     pub fn prefill_onto(
         &self,
         cache: &mut KvCache,
@@ -385,28 +581,26 @@ impl Engine {
         if !self.backend.decode_buckets().contains(&1) {
             bail!("prefill_onto needs a b=1 decode bucket");
         }
+        self.check_feed(cache, ids.len())?;
         let (nl, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
         let tmax = self.tmax;
         let per_slot = hkv * tmax * dh;
         let mut kbuf = vec![0.0f32; nl * per_slot];
         let mut vbuf = vec![0.0f32; nl * per_slot];
         let mut lens = vec![0i32; nl];
+        for layer in 0..nl {
+            let dst = layer * per_slot;
+            cache.layer_padded_into(
+                layer,
+                tmax,
+                &mut kbuf[dst..dst + per_slot],
+                &mut vbuf[dst..dst + per_slot],
+            );
+            lens[layer] = cache.len(layer) as i32;
+        }
         let mut events = Vec::new();
         let mut logits = Vec::new();
         for &tok in ids {
-            if cache.appended + 1 >= tmax {
-                bail!(
-                    "session history of {} tokens exceeds decode capacity {tmax}",
-                    cache.appended
-                );
-            }
-            for layer in 0..nl {
-                let (lk, lv) = cache.layer_padded(layer, tmax);
-                let dst = layer * per_slot;
-                kbuf[dst..dst + per_slot].copy_from_slice(&lk);
-                vbuf[dst..dst + per_slot].copy_from_slice(&lv);
-                lens[layer] = cache.len(layer) as i32;
-            }
             let pos = cache.appended as i32;
             let out = self.backend.decode(&DecodeBatch {
                 batch: 1,
@@ -420,8 +614,108 @@ impl Engine {
             if cfg.policy.needs_attention() {
                 cache.accumulate_attention(&out.attn_rows, tmax)?;
             }
-            events.extend(maybe_compress(cache, cfg, scorer)?);
+            // Patch the one appended row into the reused padded buffers.
+            for layer in 0..nl {
+                let row = cache.len(layer) - 1;
+                debug_assert!(row < tmax, "appended row {row} outside padded capacity {tmax}");
+                for h in 0..hkv {
+                    let src = (layer * hkv + h) * dh;
+                    let dst = layer * per_slot + h * tmax * dh + row * dh;
+                    kbuf[dst..dst + dh].copy_from_slice(&out.k_new[src..src + dh]);
+                    vbuf[dst..dst + dh].copy_from_slice(&out.v_new[src..src + dh]);
+                }
+                lens[layer] = cache.len(layer) as i32;
+            }
+            let step_events = maybe_compress(cache, cfg, scorer)?;
+            for ev in &step_events {
+                // Compaction rewrote this layer's row set; re-export it.
+                let dst = ev.layer * per_slot;
+                cache.layer_padded_into(
+                    ev.layer,
+                    tmax,
+                    &mut kbuf[dst..dst + per_slot],
+                    &mut vbuf[dst..dst + per_slot],
+                );
+                lens[ev.layer] = cache.len(ev.layer) as i32;
+            }
+            events.extend(step_events);
             logits = out.logits;
+        }
+        Ok((logits, events))
+    }
+
+    /// Wide-bucket ("packed") suffix prefill: pack sequential tokens of
+    /// one sequence across the slots of the largest decode bucket, cutting
+    /// backend calls by the bucket width.  Falls back to the incremental
+    /// b=1 [`Engine::prefill_onto`] when the backend's decode is not
+    /// KV-oblivious (real attention) or the policy feeds on attention.
+    ///
+    /// Trajectory safety: after each decode call the produced rows are
+    /// appended **in token order**, firing the recursive compression
+    /// driver at exactly the same per-token boundaries as the b=1 path —
+    /// so caches, compression events, and logits are bit-identical (the
+    /// property suite pins this across every `PolicyKind`).  The packed
+    /// K/V buffers are all-zero with zero lens: a KV-oblivious decode
+    /// never reads them, and zero lens suppresses the (unused) attention
+    /// surrogate rows.
+    pub fn prefill_onto_batched(
+        &self,
+        cache: &mut KvCache,
+        cfg: &CompressionConfig,
+        scorer: &mut dyn Scorer,
+        ids: &[i32],
+    ) -> Result<(Vec<f32>, Vec<crate::compress::driver::CompressionEvent>)> {
+        let b = match self.packed_suffix_bucket(cfg) {
+            Some(b) => b,
+            None => return self.prefill_onto(cache, cfg, scorer, ids),
+        };
+        if ids.is_empty() {
+            bail!("prefill_onto_batched: empty token stream");
+        }
+        self.check_feed(cache, ids.len())?;
+        let (nl, hkv, dh) = (self.dims.n_layers, self.dims.n_kv_heads, self.dims.d_head);
+        let tmax = self.tmax;
+        let per_slot = hkv * tmax * dh;
+        // Never read by a KV-oblivious decode; zero lens also skips the
+        // attention surrogate, whose rows are dead outputs on this path.
+        let kbuf = vec![0.0f32; nl * b * per_slot];
+        let vbuf = vec![0.0f32; nl * b * per_slot];
+        let lens = vec![0i32; nl * b];
+        let v_size = self.dims.vocab_size;
+        let mut events = Vec::new();
+        let mut logits = Vec::new();
+        for chunk in ids.chunks(b) {
+            let cb = chunk.len();
+            let mut pos = vec![0i32; b];
+            let mut tok = vec![0i32; b];
+            for (s, &t) in chunk.iter().enumerate() {
+                pos[s] = (cache.appended + s) as i32;
+                tok[s] = t;
+            }
+            let out = self.backend.decode(&DecodeBatch {
+                batch: b,
+                k: &kbuf,
+                v: &vbuf,
+                lens: &lens,
+                pos: &pos,
+                tokens: &tok,
+            })?;
+            for s in 0..cb {
+                let mut kn = Vec::with_capacity(nl * hkv * dh);
+                let mut vn = Vec::with_capacity(nl * hkv * dh);
+                for layer in 0..nl {
+                    let off = ((layer * b) + s) * hkv * dh;
+                    kn.extend_from_slice(&out.k_new[off..off + hkv * dh]);
+                    vn.extend_from_slice(&out.v_new[off..off + hkv * dh]);
+                }
+                debug_assert_eq!(
+                    cache.appended as i32, pos[s],
+                    "packed slot position drifted from the cache"
+                );
+                cache.append_token(&kn, &vn, pos[s])?;
+                events.extend(maybe_compress(cache, cfg, scorer)?);
+            }
+            logits = out.logits[(cb - 1) * v_size..cb * v_size].to_vec();
         }
         Ok((logits, events))
     }

@@ -3,6 +3,7 @@
 use crate::compress::driver::CompressionEvent;
 use crate::compress::Scorer;
 use crate::config::CompressionConfig;
+use crate::engine::ChunkedPrefill;
 use crate::kvcache::KvCache;
 use crate::tokenizer::EOS;
 
@@ -47,16 +48,41 @@ impl SeqState {
     }
 }
 
-/// A batch slot: occupied or idle.  Idle slots decode garbage on a zeroed
-/// cache; their outputs are ignored (the executable's shape is fixed).
-#[derive(Default)]
+/// A cold prefill occupying a slot segment-by-segment: the batcher
+/// advances `chunked` between decode bursts and promotes the slot to a
+/// [`SeqState`] when the last segment lands.
+pub struct PrefillJob {
+    pub chunked: ChunkedPrefill,
+    pub scorer: Box<dyn Scorer>,
+    pub compression: CompressionConfig,
+    pub max_new: usize,
+}
+
+enum Occupant {
+    /// Decodes garbage on a zeroed cache; outputs ignored (the
+    /// executable's shape is fixed).
+    Idle,
+    /// A chunked cold prefill owns the slot but contributes nothing to
+    /// decode steps yet (boxed: the job carries the whole prefill output).
+    Prefilling(Box<PrefillJob>),
+    /// A live (or just-finished) decoding sequence.
+    Seq(SeqState),
+}
+
+/// A batch slot: decoding, prefilling in segments, or idle.
 pub struct SlotState {
-    seq: Option<SeqState>,
+    occ: Occupant,
+}
+
+impl Default for SlotState {
+    fn default() -> SlotState {
+        SlotState::idle()
+    }
 }
 
 impl SlotState {
     pub fn idle() -> SlotState {
-        SlotState { seq: None }
+        SlotState { occ: Occupant::Idle }
     }
 
     pub fn occupied(
@@ -67,7 +93,7 @@ impl SlotState {
         max_new: usize,
     ) -> SlotState {
         SlotState {
-            seq: Some(SeqState {
+            occ: Occupant::Seq(SeqState {
                 cache,
                 compression,
                 scorer,
@@ -81,34 +107,83 @@ impl SlotState {
         }
     }
 
+    /// Occupy the slot with a chunked cold prefill.
+    pub fn prefilling(job: PrefillJob) -> SlotState {
+        SlotState { occ: Occupant::Prefilling(Box::new(job)) }
+    }
+
     pub fn active(&self) -> Option<&SeqState> {
-        self.seq.as_ref().filter(|s| !s.done)
+        self.seq().filter(|s| !s.done)
     }
 
     pub fn active_mut(&mut self) -> Option<&mut SeqState> {
-        self.seq.as_mut().filter(|s| !s.done)
+        self.seq_mut().filter(|s| !s.done)
     }
 
     /// The occupying sequence, finished or not (event emission needs to
     /// observe a sequence after its final step marks it done).
     pub fn seq(&self) -> Option<&SeqState> {
-        self.seq.as_ref()
+        match &self.occ {
+            Occupant::Seq(s) => Some(s),
+            _ => None,
+        }
     }
 
     pub fn seq_mut(&mut self) -> Option<&mut SeqState> {
-        self.seq.as_mut()
+        match &mut self.occ {
+            Occupant::Seq(s) => Some(s),
+            _ => None,
+        }
     }
 
+    /// True while a chunked prefill owns the slot.
+    pub fn is_prefilling(&self) -> bool {
+        matches!(self.occ, Occupant::Prefilling(_))
+    }
+
+    pub fn prefill(&self) -> Option<&PrefillJob> {
+        match &self.occ {
+            Occupant::Prefilling(job) => Some(job),
+            _ => None,
+        }
+    }
+
+    pub fn prefill_mut(&mut self) -> Option<&mut PrefillJob> {
+        match &mut self.occ {
+            Occupant::Prefilling(job) => Some(job),
+            _ => None,
+        }
+    }
+
+    /// Remove a prefill job from the slot (promotion or abort), leaving
+    /// it idle.  None when the slot holds no prefill.
+    pub fn take_prefill(&mut self) -> Option<Box<PrefillJob>> {
+        match std::mem::replace(&mut self.occ, Occupant::Idle) {
+            Occupant::Prefilling(job) => Some(job),
+            other => {
+                self.occ = other;
+                None
+            }
+        }
+    }
+
+    /// Occupied by anything — a sequence or an in-progress prefill.
     pub fn occupied_any(&self) -> bool {
-        self.seq.is_some()
+        !matches!(self.occ, Occupant::Idle)
     }
 
     pub fn finished(&self) -> bool {
-        self.seq.as_ref().map(|s| s.done).unwrap_or(false)
+        self.seq().map(|s| s.done).unwrap_or(false)
     }
 
     pub fn take(&mut self) -> Option<SeqState> {
-        self.seq.take()
+        match std::mem::replace(&mut self.occ, Occupant::Idle) {
+            Occupant::Seq(s) => Some(s),
+            other => {
+                self.occ = other;
+                None
+            }
+        }
     }
 }
 
@@ -162,7 +237,20 @@ mod tests {
         let mut s = SlotState::idle();
         assert!(s.active().is_none());
         assert!(!s.occupied_any());
+        assert!(!s.is_prefilling());
         assert!(!s.finished());
         assert!(s.take().is_none());
+        assert!(s.take_prefill().is_none());
+    }
+
+    #[test]
+    fn take_does_not_disturb_other_occupants() {
+        // take() must not silently evict a prefill job, and take_prefill()
+        // must not evict a sequence.
+        let mut s = mk_slot(3);
+        assert!(s.take_prefill().is_none());
+        assert!(s.occupied_any(), "sequence survives a take_prefill miss");
+        assert!(s.take().is_some());
+        assert!(!s.occupied_any());
     }
 }

@@ -585,14 +585,29 @@ impl KvCache {
     /// same for v)`; rows `>= len` are zero.
     pub fn layer_padded(&self, layer: usize, t_max: usize) -> (Vec<f32>, Vec<f32>) {
         let d = self.d_head;
-        let len = self.len(layer).min(t_max);
         let mut k = vec![0.0f32; self.n_heads * t_max * d];
         let mut v = vec![0.0f32; self.n_heads * t_max * d];
-        for (hi, head) in self.layers[layer].heads.iter().enumerate() {
-            let dst = hi * t_max * d;
-            head.copy_rows(d, len, &mut k[dst..dst + len * d], &mut v[dst..dst + len * d]);
-        }
+        self.layer_padded_into(layer, t_max, &mut k, &mut v);
         (k, v)
+    }
+
+    /// Allocation-free variant of [`KvCache::layer_padded`]: writes the
+    /// padded layer into caller-owned `[n_heads, t_max, d]` slices, zeroing
+    /// rows `>= len` so a reused buffer never leaks a longer previous
+    /// state.  The incremental decode paths call this once per layer per
+    /// *compression event* instead of once per token.
+    pub fn layer_padded_into(&self, layer: usize, t_max: usize, k: &mut [f32], v: &mut [f32]) {
+        let d = self.d_head;
+        let per_head = t_max * d;
+        assert_eq!(k.len(), self.n_heads * per_head, "layer_padded_into: k shape");
+        assert_eq!(v.len(), self.n_heads * per_head, "layer_padded_into: v shape");
+        let len = self.len(layer).min(t_max);
+        for (hi, head) in self.layers[layer].heads.iter().enumerate() {
+            let dst = hi * per_head;
+            head.copy_rows(d, len, &mut k[dst..dst + len * d], &mut v[dst..dst + len * d]);
+            k[dst + len * d..dst + per_head].fill(0.0);
+            v[dst + len * d..dst + per_head].fill(0.0);
+        }
     }
 
     /// Flat padded export of the whole cache: `[n_layers, n_heads, t_max, d]`.

@@ -207,9 +207,28 @@ impl BlockPool {
         inner.free.entry(d).or_default().push(bufs);
     }
 
+    /// Swap one gauge's registered loose bytes (`old` out, `new` in).
+    ///
+    /// Deregistering more bytes than the ledger holds is accounting drift —
+    /// a gauge double-dropped, or a byte count mutated behind the pool's
+    /// back.  The old `saturating_sub` silently absorbed that drift (and
+    /// with it, any bug that caused it); now it is a `debug_assert!` in
+    /// test builds, and release builds re-base the ledger on the surviving
+    /// registrations (`new` alone) instead of under-counting forever.
     pub(crate) fn adjust_loose(&self, old: usize, new: usize) {
         let mut inner = self.inner.lock().unwrap();
-        inner.loose_bytes = inner.loose_bytes.saturating_sub(old) + new;
+        inner.loose_bytes = match inner.loose_bytes.checked_sub(old) {
+            Some(rest) => rest + new,
+            None => {
+                debug_assert!(
+                    false,
+                    "pool ledger underflow: deregistering {old} loose bytes with only {} \
+                     registered",
+                    inner.loose_bytes
+                );
+                new
+            }
+        };
         inner.bump_high_water();
     }
 

@@ -4,7 +4,7 @@
 //!   info                         backend + model inventory
 //!   generate --prompt "..."      one-shot generation with any policy
 //!   serve [--port 7199]          TCP server (v1 wire protocol, NDJSON)
-//!   ops stats|info|sessions|drain [--port 7199]
+//!   ops stats|info|sessions|drain|undrain [--port 7199]
 //!                                control plane of a running server
 //!   tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
 //!                                regenerate the paper's tables/figures
@@ -65,7 +65,7 @@ USAGE:
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
               [--max-queue 256] [--sessions 64] [--session-ttl 600]
               [--pool-mb N] [--session-mb N] [--prefix-cache]
-  lagkv ops stats|info|sessions|drain [--port 7199] [--model M]
+  lagkv ops stats|info|sessions|drain|undrain [--port 7199] [--model M]
             [--delete SESSION_ID]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
@@ -74,8 +74,8 @@ BACKENDS: cpu (default, hermetic) | xla (--features xla + make artifacts)
 POLICIES: lagkv localkv l2norm h2o streaming random none
 WIRE PROTOCOL v1: see DESIGN.md §9 ({"v":1,"op":...} envelopes, NDJSON
   event streams, typed {"code","message"} errors, ops control plane:
-  stats/sessions/info/drain; legacy bare request lines accepted via the
-  compat shim).  Talk to it from Rust through lagkv::client::Client.
+  stats/sessions/info/drain/undrain; legacy bare request lines accepted
+  via the compat shim).  Talk to it from Rust through lagkv::client::Client.
 "#;
 
 fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
@@ -271,7 +271,14 @@ fn ops(args: &Args) -> Result<()> {
                 resp.draining, resp.in_flight
             );
         }
-        other => bail!("unknown ops action {other:?} (stats|info|sessions|drain)"),
+        "undrain" => {
+            let resp = client.undrain()?;
+            println!(
+                "draining: {} ({} request(s) still in flight)",
+                resp.draining, resp.in_flight
+            );
+        }
+        other => bail!("unknown ops action {other:?} (stats|info|sessions|drain|undrain)"),
     }
     Ok(())
 }

@@ -35,6 +35,7 @@ use anyhow::{Context, Result};
 use crate::api::{
     self, ApiRequest, CancelAck, CoordCounters, DrainResponse, InfoResponse, ModelSessions,
     ModelStats, SessionGauges, SessionsRequest, SessionsResponse, StatsResponse,
+    UndrainResponse,
 };
 use crate::config::PolicyKind;
 use crate::coordinator::{ApiError, GenHandle, Response, Router};
@@ -249,10 +250,19 @@ impl Server {
                 Ok(ApiRequest::Drain(_)) => {
                     // Close admission; in-flight slots and queued work run
                     // to completion.  The operator stops the accept loop
-                    // (clean shutdown) once live_requests drains to zero.
+                    // (clean shutdown) once live_requests drains to zero —
+                    // or reopens admission with `undrain`.
                     self.router.drain();
                     let resp =
                         DrainResponse { draining: true, in_flight: self.live_requests() };
+                    write_line(&writer, &resp.to_json().to_string())?;
+                }
+                Ok(ApiRequest::Undrain(_)) => {
+                    // Reopen admission: the rollback half of a rolling
+                    // restart.  In-flight work was never affected.
+                    self.router.undrain();
+                    let resp =
+                        UndrainResponse { draining: false, in_flight: self.live_requests() };
                     write_line(&writer, &resp.to_json().to_string())?;
                 }
                 Err(e) => {

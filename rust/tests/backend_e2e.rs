@@ -641,8 +641,9 @@ fn legacy_bare_request_line_round_trips_via_compat_shim() {
 
 /// Ops control plane over TCP: `info` reports engine facts, `stats`
 /// reflects traffic, `sessions` lists and deletes stored conversations,
-/// and `drain` closes admission with the typed `draining` rejection while
-/// the connection stays serviceable.
+/// `drain` closes admission with the typed `draining` rejection while the
+/// connection stays serviceable, and `undrain` reopens admission so the
+/// next request is accepted again.
 #[test]
 fn tcp_control_plane_info_stats_sessions_drain() {
     let (_server, port, stop, accept) = boot_server();
@@ -689,6 +690,103 @@ fn tcp_control_plane_info_stats_sessions_drain() {
     let rejected = client.generate(Some(2), GenerateParams::new("post-drain")).unwrap();
     assert_eq!(rejected.error.as_ref().map(|e| e.code()), Some("draining"));
     assert!(client.stats().unwrap().draining);
+
+    // undrain: the rollback half — admission reopens on the same link
+    let reopened = client.undrain().unwrap();
+    assert!(!reopened.draining, "undrain must report admission reopened");
+    assert!(!client.stats().unwrap().draining);
+    let accepted = client
+        .generate(Some(3), GenerateParams::new("post-undrain").max_new(4))
+        .unwrap();
+    assert!(accepted.error.is_none(), "post-undrain submit must run: {accepted:?}");
+
+    stop.store(true, Ordering::Relaxed);
+    accept.join().unwrap().unwrap();
+}
+
+/// Tentpole e2e: a long cold prompt prefills chunk-by-chunk interleaved
+/// with in-flight decode, so a streaming request keeps receiving tokens
+/// while the newcomer prefills — the old batcher ran the whole prefill
+/// inline in `admit`, stalling every live stream for its full duration.
+/// Counted rather than timed (CI-safe): stream A must deliver tokens in
+/// the window between B's submission and B's `Started` event, which fires
+/// only when B's prefill completes.
+#[test]
+fn tcp_cold_prefill_interleaves_with_streaming_decode() {
+    use std::time::Instant;
+
+    let (_server, port, stop, accept) = boot_server();
+    // A prompt whose greedy chain (policy: none) runs long enough that A
+    // is still decoding throughout B's admission + chunked prefill.
+    let chain = long_chain_prompt(&engine(), 300);
+
+    let mut client_a = Client::connect(port).unwrap();
+    let params_a = GenerateParams::new(chain).policy(PolicyKind::None).max_new(300);
+    let mut stream_a = client_a.generate_stream(41, params_a).unwrap();
+
+    // wait until A is demonstrably decoding before B shows up
+    let mut a_token_times: Vec<Instant> = Vec::new();
+    while a_token_times.len() < 2 {
+        match stream_a.next().unwrap() {
+            Some(StreamItem::Event(Event::Token { .. })) => a_token_times.push(Instant::now()),
+            Some(StreamItem::Event(Event::Error { error, .. })) => {
+                panic!("stream A died before B arrived: {error}")
+            }
+            Some(_) => {}
+            None => panic!("stream A ended before B arrived"),
+        }
+    }
+
+    // B: a long cold prompt (~550 tokens -> the 640 bucket, many chunks)
+    let b_thread = std::thread::spawn(move || {
+        let long_prompt = "the of and to in is it on as with ".repeat(55);
+        let mut client_b = Client::connect(port).unwrap();
+        let params_b = GenerateParams::new(long_prompt).lag(16).ratio(0.5).max_new(4);
+        let t_submit = Instant::now();
+        let mut stream_b = client_b.generate_stream(42, params_b).unwrap();
+        let mut t_started = None;
+        let mut b_tokens = 0usize;
+        while let Some(item) = stream_b.next().unwrap() {
+            match item {
+                StreamItem::Event(Event::Started { .. }) => t_started = Some(Instant::now()),
+                StreamItem::Event(Event::Token { .. }) => b_tokens += 1,
+                StreamItem::Event(Event::Error { error, .. }) => {
+                    panic!("request B failed: {error}")
+                }
+                _ => {}
+            }
+        }
+        assert!(b_tokens > 0, "B must decode after its chunked prefill");
+        (t_submit, t_started.expect("B never saw Started"))
+    });
+
+    // keep draining A the whole time, timestamping every token
+    loop {
+        match stream_a.next().unwrap() {
+            Some(StreamItem::Event(Event::Token { .. })) => a_token_times.push(Instant::now()),
+            Some(StreamItem::Event(Event::Error { error, .. })) => {
+                panic!("stream A failed: {error}")
+            }
+            Some(_) => {}
+            None => break,
+        }
+    }
+    let (t_submit, t_started) = b_thread.join().unwrap();
+
+    assert!(
+        t_started >= t_submit,
+        "Started cannot precede the submit that caused it"
+    );
+    let interleaved = a_token_times
+        .iter()
+        .filter(|&&t| t > t_submit && t < t_started)
+        .count();
+    assert!(
+        interleaved >= 2,
+        "stream A got only {interleaved} token(s) while B's cold prompt prefilled — \
+         the batcher stalled decode for the whole prefill ({} A tokens total)",
+        a_token_times.len()
+    );
 
     stop.store(true, Ordering::Relaxed);
     accept.join().unwrap().unwrap();

@@ -411,6 +411,7 @@ fn prop_api_wire_shapes_round_trip_exactly() {
             ApiRequest::Stats(api::StatsRequest),
             ApiRequest::Info(api::InfoRequest),
             ApiRequest::Drain(api::DrainRequest),
+            ApiRequest::Undrain(api::UndrainRequest),
         ];
         for r in &reqs {
             let line = r.to_json().to_string();
@@ -505,10 +506,15 @@ fn prop_api_wire_shapes_round_trip_exactly() {
 }
 
 /// Allocator invariants under arbitrary append / compress / detach-clone /
-/// drop interleavings on one shared pool: when every cache is gone the
-/// refcount ledger reconciles to zero (no block leaks, no stray loose
-/// bytes) and every block that ever froze was recycled through the free
-/// list rather than returned to the OS.
+/// drop / freeze / thaw / shed interleavings on one shared pool: the
+/// loose-byte ledger never saturates or silently underflows mid-run (a
+/// `saturating_sub` masked exactly that bug), and when every owner is gone
+/// the refcount ledger reconciles to zero (no block leaks, no stray loose
+/// bytes) with every frozen block recycled through the free list.
+///
+/// Thaw is exercised by mixing in a GLOBAL-scope policy (its compaction
+/// windows reach behind the frozen boundary); shed by a prefix tree on the
+/// same pool absorbing snapshots and dropping them LRU-first.
 #[test]
 fn prop_pool_ledger_reconciles_after_interleavings() {
     prop::check(25, |g| {
@@ -516,19 +522,25 @@ fn prop_pool_ledger_reconciles_after_interleavings() {
         let d = g.usize(1, 3);
         let nh = g.usize(1, 2);
         let cfg = CompressionConfig {
-            policy: PolicyKind::LagKv,
+            // H2O's global scope thaws frozen blocks during compaction —
+            // the ledger path the b=1 sweep's underflow fix guards.
+            policy: [PolicyKind::LagKv, PolicyKind::H2O][g.usize(0, 1)],
             sink: g.usize(0, 4),
             lag: [4usize, 8, 12][g.usize(0, 2)],
             ratio: 0.5,
             ..Default::default()
         };
+        let prefix = PrefixCache::new(
+            PrefixConfig { max_entries: 3, max_bytes: 0, stride: 4 },
+            pool.clone(),
+        );
         let mut scorer = make_policy(cfg.policy, g.case as u64);
         let mut rng = Rng::seed_from(g.case as u64 + 31);
         let mut caches = vec![KvCache::new_in(pool.clone(), 1, nh, d)];
         let mut froze_any = false;
         for _ in 0..g.usize(20, 140) {
             match g.usize(0, 9) {
-                0..=6 => {
+                0..=5 => {
                     let i = g.usize(0, caches.len() - 1);
                     let w = nh * d;
                     let t = caches[i].appended as i32;
@@ -538,12 +550,27 @@ fn prop_pool_ledger_reconciles_after_interleavings() {
                         .map_err(|e| format!("driver: {e:#}"))?;
                     froze_any |= caches[i].frozen_blocks() > 0;
                 }
-                7..=8 => {
+                6..=7 => {
                     // detach-style clone: shares frozen blocks CoW
                     if caches.len() < 4 {
                         let i = g.usize(0, caches.len() - 1);
                         let c = caches[i].clone();
                         caches.push(c);
+                    }
+                }
+                8 => {
+                    // freeze a snapshot into the prefix tree, or shed one
+                    if g.bool() {
+                        let i = g.usize(0, caches.len() - 1);
+                        let n = caches[i].appended;
+                        if n > 0 {
+                            let key: Vec<i32> = (0..n.min(g.usize(1, 10)))
+                                .map(|t| t as i32)
+                                .collect();
+                            prefix.insert(&cfg, 0, &key, &caches[i]);
+                        }
+                    } else {
+                        let _ = prefix.shed_lru();
                     }
                 }
                 _ => {
@@ -553,7 +580,31 @@ fn prop_pool_ledger_reconciles_after_interleavings() {
                     }
                 }
             }
+            // Mid-run ledger sanity after EVERY op.  A wrapped subtraction
+            // would land loose_bytes near usize::MAX; a silently clamped
+            // one (the old `saturating_sub` mask) drops the pool's
+            // resident total below the footprint of a single live owner.
+            let s = pool.stats();
+            if s.loose_bytes > usize::MAX / 2 {
+                return Err(format!("loose-byte ledger saturated: {}", s.loose_bytes));
+            }
+            let biggest = caches.iter().map(|c| c.exact_bytes()).max().unwrap_or(0);
+            if s.resident_bytes() < biggest {
+                return Err(format!(
+                    "ledger lost bytes: pool resident {} below a single cache's {biggest}",
+                    s.resident_bytes()
+                ));
+            }
+            let owned: usize = caches.iter().map(|c| c.exact_bytes()).sum();
+            if s.resident_bytes() > owned + prefix.stats().resident_bytes {
+                return Err(format!(
+                    "pool resident {} exceeds every owner's footprint ({owned} + tree {})",
+                    s.resident_bytes(),
+                    prefix.stats().resident_bytes
+                ));
+            }
         }
+        drop(prefix);
         // with a single never-cloned cache the pool count is exactly its
         // reference count; with clones it can only be smaller (sharing)
         let refs: usize = caches.iter().map(|c| c.frozen_blocks()).sum();
@@ -850,6 +901,101 @@ fn prefix_hit_decode_matches_cold_prefill_for_every_policy() {
             assert!(w2.reused_tokens > 0, "{}", policy.name());
         }
     }
+}
+
+/// The b=1-kill acceptance pin: the packed wide-bucket suffix walk
+/// (`prefill_onto_batched`) must be **bit-identical** to the incremental
+/// b=1 walk (`prefill_onto`) — same logits, same compression-event
+/// trajectory, same cache contents row for row — across every policy and
+/// randomized (sink, L, r, history, suffix).  The continuous batcher's
+/// session resume and the prefix cache's warm path both lean on this
+/// equivalence; attention-fed policies exercise the documented fallback
+/// (the packed path detects them and routes through b=1 itself).
+#[test]
+fn prop_prefill_onto_batched_matches_b1_bit_for_bit() {
+    prop::check(12, |g| {
+        let policy = *g.pick(PolicyKind::all());
+        let cfg = CompressionConfig {
+            policy,
+            sink: g.usize(0, 4),
+            lag: [4usize, 8, 16][g.usize(0, 2)],
+            ratio: [0.5, 0.25][g.usize(0, 1)],
+            ..Default::default()
+        };
+        let eng_a = Engine::cpu_ref("llama_like").unwrap();
+        let eng_b = Engine::cpu_ref("llama_like").unwrap();
+        let mut rng = Rng::seed_from(g.case as u64 + 9);
+        let item = gen_passkey(
+            &mut rng,
+            &PasskeySpec { n_filler: g.usize(30, 90), n_digits: 8, depth: None },
+        );
+        let base = eng_a.tokenizer.encode(&item.prompt, true);
+        let mut suffix = eng_a.tokenizer.encode("<q> the pass key <a>", false);
+        for _ in 0..g.usize(0, 2) {
+            suffix.extend(eng_a.tokenizer.encode("<q> remember the words <a>", false));
+        }
+        let (_, mut cache_a) = eng_a.prefill(&base).map_err(|e| format!("{e:#}"))?;
+        let (_, mut cache_b) = eng_b.prefill(&base).map_err(|e| format!("{e:#}"))?;
+        let mut sc_a = eng_a.make_scorer(&cfg, g.case as u64);
+        let mut sc_b = eng_b.make_scorer(&cfg, g.case as u64);
+        maybe_compress(&mut cache_a, &cfg, sc_a.as_mut())
+            .map_err(|e| format!("driver a: {e:#}"))?;
+        maybe_compress(&mut cache_b, &cfg, sc_b.as_mut())
+            .map_err(|e| format!("driver b: {e:#}"))?;
+
+        let (la, ea) = eng_a
+            .prefill_onto(&mut cache_a, &cfg, sc_a.as_mut(), &suffix)
+            .map_err(|e| format!("b=1 walk: {e:#}"))?;
+        let (lb, eb) = eng_b
+            .prefill_onto_batched(&mut cache_b, &cfg, sc_b.as_mut(), &suffix)
+            .map_err(|e| format!("packed walk: {e:#}"))?;
+
+        if la != lb {
+            return Err(format!("{}: final logits diverged", policy.name()));
+        }
+        if ea != eb {
+            return Err(format!(
+                "{}: compression trajectories diverged ({} vs {} events)",
+                policy.name(),
+                ea.len(),
+                eb.len()
+            ));
+        }
+        if cache_a.appended != cache_b.appended {
+            return Err(format!(
+                "{}: appended counters diverged ({} vs {})",
+                policy.name(),
+                cache_a.appended,
+                cache_b.appended
+            ));
+        }
+        for layer in 0..cache_a.n_layers {
+            if cache_a.len(layer) != cache_b.len(layer) {
+                return Err(format!("{}: layer {layer} lengths diverged", policy.name()));
+            }
+            for head in 0..cache_a.n_heads {
+                if cache_a.positions(layer, head) != cache_b.positions(layer, head) {
+                    return Err(format!(
+                        "{}: layer {layer} head {head} positions diverged",
+                        policy.name()
+                    ));
+                }
+                if cache_a.head_k(layer, head) != cache_b.head_k(layer, head) {
+                    return Err(format!(
+                        "{}: layer {layer} head {head} keys diverged",
+                        policy.name()
+                    ));
+                }
+                if cache_a.head_v(layer, head) != cache_b.head_v(layer, head) {
+                    return Err(format!(
+                        "{}: layer {layer} head {head} values diverged",
+                        policy.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 /// Prefix-tree ledger under randomized insert / hit / evict churn on one

@@ -13,6 +13,10 @@
 //!   * prefix-hit prefill on a shared-prefix workload (radix prefix
 //!     cache: zero deep row copies asserted via the pool ledger, fewer
 //!     backend prefill tokens than cold, hit/miss/reuse gauges),
+//!   * the tiered-storage round trip: demote every frozen block to the
+//!     disk store, fault the payload back with a full gather, re-demote
+//!     (sticky store ids write nothing) — ledger exactness and
+//!     bit-identity asserted; results land in BENCH_store.json,
 //!   * decode step (engine, literal path),
 //!   * prefill per bucket,
 //!   * end-to-end generation tokens/s,
@@ -567,6 +571,117 @@ fn bench_prefill_kill_b1() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Tiered-storage round trip (ISSUE 7's spill bench): build a pooled
+/// cache, demote every frozen block to a disk store under a tempdir,
+/// fault the whole payload back via a full gather, then re-demote (the
+/// sticky store id means the second spill writes nothing).  Asserts the
+/// per-tier ledger exact at every step and the faulted payload
+/// bit-identical — the randomized version lives in
+/// rust/tests/properties.rs — and records the timings in
+/// BENCH_store.json.  Store files live only under the tempdir, removed
+/// before returning.
+fn bench_store_spill() -> anyhow::Result<()> {
+    use lagkv::kvpool::block_bytes;
+    use lagkv::kvstore::KvStore;
+    use std::sync::Arc;
+
+    let dir = std::env::temp_dir().join(format!("lagkv-bench-store-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let run = || -> anyhow::Result<()> {
+        let store = Arc::new(KvStore::open(&dir)?);
+        let (nh, d, rpb) = (2usize, 32usize, 16usize);
+        let bpb = block_bytes(rpb, d);
+        let pool = BlockPool::unbounded(rpb);
+        pool.bind_store(Arc::clone(&store));
+        let mut cache = KvCache::new_in(pool.clone(), 1, nh, d);
+        let cfg = CompressionConfig {
+            policy: PolicyKind::LagKv,
+            sink: 4,
+            lag: 64,
+            ratio: 0.25,
+            ..Default::default()
+        };
+        let mut scorer = make_policy(cfg.policy, 0);
+        let mut rng = Rng::seed_from(19);
+        let w = nh * d;
+        for t in 0..2048i32 {
+            let kv: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+            cache.append_token(&kv, &kv, t)?;
+            maybe_compress(&mut cache, &cfg, scorer.as_mut())?;
+        }
+        let blocks = cache.frozen_blocks();
+        anyhow::ensure!(blocks > 0, "nothing froze — nothing to spill");
+        let snap: Vec<Vec<f32>> = (0..nh).map(|h| cache.head_k(0, h)).collect();
+
+        // demote everything resident
+        let t0 = Instant::now();
+        let (nblocks, nbytes) = pool.spill(usize::MAX);
+        let spill_ns = t0.elapsed().as_nanos() as f64;
+        anyhow::ensure!(
+            nblocks == blocks && nbytes == nblocks * bpb,
+            "spill ledger not exact: {nblocks}/{blocks} blocks, {nbytes} bytes"
+        );
+        let s = pool.stats();
+        anyhow::ensure!(
+            s.resident_blocks == 0 && s.spilled_blocks == nblocks && s.spilled_bytes == nbytes,
+            "tier gauges out of step after demote"
+        );
+        row(
+            &format!("store spill {nblocks} blocks -> disk"),
+            spill_ns,
+            &format!(
+                "{:.1} KiB, {:.2} MB/s",
+                nbytes as f64 / 1024.0,
+                nbytes as f64 * 1e3 / spill_ns
+            ),
+        );
+
+        // fault everything back with one full gather per head
+        let t1 = Instant::now();
+        let back: Vec<Vec<f32>> = (0..nh).map(|h| cache.head_k(0, h)).collect();
+        let fault_ns = t1.elapsed().as_nanos() as f64;
+        anyhow::ensure!(back == snap, "fault-in is not bit-identical");
+        let s = pool.stats();
+        anyhow::ensure!(
+            s.resident_blocks == nblocks && s.spilled_blocks == 0,
+            "fault-in created or lost blocks (no-deep-copy bound)"
+        );
+        row(
+            &format!("store fault {nblocks} blocks <- disk"),
+            fault_ns,
+            &format!("{:.2} MB/s, bit-identical", nbytes as f64 * 1e3 / fault_ns),
+        );
+
+        // re-demote: payloads already on disk, so nothing is re-serialized
+        let t2 = Instant::now();
+        let (nb2, _) = pool.spill(usize::MAX);
+        let redemote_ns = t2.elapsed().as_nanos() as f64;
+        anyhow::ensure!(nb2 == nblocks, "re-demote missed blocks");
+        row(
+            &format!("store re-demote {nblocks} blocks (sticky ids)"),
+            redemote_ns,
+            &format!("{:.2}x first spill", spill_ns / redemote_ns),
+        );
+        println!("{}", PoolGauges::from(&pool.stats()).render());
+
+        let json = format!(
+            "{{\n  \"bench\": \"store_spill_fault\",\n  \"rows_per_block\": {rpb},\n  \
+             \"blocks\": {nblocks},\n  \"payload_bytes\": {nbytes},\n  \
+             \"spill_ns\": {spill_ns:.0},\n  \"fault_ns\": {fault_ns:.0},\n  \
+             \"redemote_ns\": {redemote_ns:.0},\n  \
+             \"spill_mb_s\": {:.2},\n  \"fault_mb_s\": {:.2}\n}}\n",
+            nbytes as f64 * 1e3 / spill_ns,
+            nbytes as f64 * 1e3 / fault_ns,
+        );
+        std::fs::write("BENCH_store.json", json)?;
+        println!("  wrote BENCH_store.json");
+        Ok(())
+    };
+    let result = run();
+    let _ = std::fs::remove_dir_all(&dir);
+    result
+}
+
 /// Streaming latencies only the event API can expose: time-to-first-token
 /// (queue + prefill + first decode) and the inter-token gap, measured off
 /// the live `Router::submit` stream.
@@ -637,6 +752,10 @@ fn main() -> anyhow::Result<()> {
     match bench_prefill_kill_b1() {
         Ok(()) => {}
         Err(e) => eprintln!("SKIP prefill b=1-kill bench: {e:#}"),
+    }
+    match bench_store_spill() {
+        Ok(()) => {}
+        Err(e) => eprintln!("SKIP tiered-storage bench: {e:#}"),
     }
     match bench_streaming() {
         Ok(()) => {}

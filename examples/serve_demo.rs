@@ -9,15 +9,19 @@
 //! shutdown.
 //!
 //! Memory budgets: `--pool-mb N` caps each model's KV block pool (typed
-//! `pool-exhausted` rejections + three-tier shedding under pressure) and
+//! `pool-exhausted` rejections + spill-first shedding under pressure) and
 //! `--session-mb N` caps the session store's resident bytes.
 //! `--prefix-cache` shares identical prompt prefixes across sequences CoW
 //! (per-model hit/miss/reuse gauges are printed at the end).
+//! `--store-dir DIR` opts into tiered storage: cold frozen blocks spill to
+//! disk under pool pressure and detached sessions / prefix snapshots are
+//! WAL-journaled so they survive a restart of the demo.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo -- --requests 24 --clients 6
 //! cargo run --release --example serve_demo -- --pool-mb 4 --session-mb 1
 //! cargo run --release --example serve_demo -- --prefix-cache
+//! cargo run --release --example serve_demo -- --store-dir /tmp/lagkv-demo
 //! ```
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -50,6 +54,7 @@ fn main() -> anyhow::Result<()> {
     if args.has("prefix-cache") {
         router_cfg.prefix_cache = Some(lagkv::kvpool::PrefixConfig::default());
     }
+    router_cfg.store_dir = args.get("store-dir").map(std::path::PathBuf::from);
     let router = Arc::new(Router::start_with(spec, &models, router_cfg));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));

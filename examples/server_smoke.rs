@@ -185,6 +185,7 @@ fn main() -> anyhow::Result<()> {
         sessions: SessionConfig::default(),
         pool_max_bytes: Some(budget),
         prefix_cache: None,
+        store_dir: None,
     };
     let router2 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, tiny_cfg));
     let stats2 = router2.stats("llama_like").expect("model stats");
@@ -292,6 +293,7 @@ fn main() -> anyhow::Result<()> {
         sessions: SessionConfig::default(),
         pool_max_bytes: Some(prefix_budget),
         prefix_cache: Some(lagkv::kvpool::PrefixConfig { stride: 24, ..Default::default() }),
+        store_dir: None,
     };
     let router3 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, prefix_cfg));
     let server3 = Arc::new(Server::new(router3));
@@ -368,6 +370,111 @@ fn main() -> anyhow::Result<()> {
     drop(client_b);
     stop3.store(true, Ordering::Relaxed);
     serve3.join().expect("prefix server thread")?;
+
+    // 8. Tiered storage restart: populate a detached session and a shared
+    //    prefix on a --store-dir deployment, checkpoint over the wire,
+    //    kill the server, and restart on the same directory.  The replayed
+    //    inventory must serve the session resume and the prefix hit
+    //    without re-prefilling (reused_tokens > 0 for both), and the
+    //    restored blocks must sit on the disk tier until first touch
+    //    (spilled gauges over the wire).  Hermetic: the store lives in a
+    //    tempdir removed at the end.
+    let store_root =
+        std::env::temp_dir().join(format!("lagkv-smoke-store-{}", std::process::id()));
+    let store_cfg = || RouterConfig {
+        queue_depth: 8,
+        sessions: SessionConfig::default(),
+        pool_max_bytes: None,
+        prefix_cache: Some(lagkv::kvpool::PrefixConfig { stride: 24, ..Default::default() }),
+        store_dir: Some(store_root.clone()),
+    };
+    let mut rng4 = Rng::seed_from(91);
+    let sys4 = gen_passkey(&mut rng4, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None })
+        .prompt;
+    let turn4 = |q: &str| GenerateParams::new(format!("{sys4} {q}")).lag(16).ratio(0.5).max_new(8);
+
+    // first boot: one session turn + one prefix-warming request
+    let router4 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, store_cfg()));
+    let server4 = Arc::new(Server::new(router4));
+    let stop4 = Arc::new(AtomicBool::new(false));
+    let (listener4, port4) = Server::bind(0)?;
+    let serve4 = {
+        let server4 = server4.clone();
+        let stop4 = stop4.clone();
+        std::thread::spawn(move || server4.serve_listener(listener4, stop4))
+    };
+    let mut client4 = Client::connect(port4)?;
+    let warm = client4.generate(Some(40), turn4("<q> the pass key <a>").session("disk-1"))?;
+    assert!(warm.error.is_none(), "store-backed turn failed: {warm:?}");
+    // the store entry lands after the terminal event; poll until listed
+    for _ in 0..100 {
+        if !client4.sessions(None)?.models[0].sessions.is_empty() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(client4.sessions(None)?.models[0].sessions.len(), 1);
+    let cp = client4.checkpoint()?;
+    assert_eq!(cp.models.len(), 1, "one store to flush: {cp:?}");
+    let summary = cp.models[0].result.as_ref().expect("checkpoint must succeed");
+    assert!(summary.sessions >= 1, "the session must be journaled: {summary:?}");
+    assert!(summary.blocks > 0, "frozen blocks must be persisted: {summary:?}");
+    println!(
+        "checkpoint ok: {} session(s), {} prefix(es), {} block(s)",
+        summary.sessions, summary.prefixes, summary.blocks
+    );
+    drop(client4);
+    stop4.store(true, Ordering::Relaxed);
+    serve4.join().expect("store server thread")?;
+
+    // second boot, same directory: the journal replays the inventory
+    let router5 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, store_cfg()));
+    let server5 = Arc::new(Server::new(router5));
+    let stop5 = Arc::new(AtomicBool::new(false));
+    let (listener5, port5) = Server::bind(0)?;
+    let serve5 = {
+        let server5 = server5.clone();
+        let stop5 = stop5.clone();
+        std::thread::spawn(move || server5.serve_listener(listener5, stop5))
+    };
+    let mut client5 = Client::connect(port5)?;
+    let listed = client5.sessions(None)?;
+    assert_eq!(listed.models[0].sessions.len(), 1, "replayed session: {listed:?}");
+    assert_eq!(listed.models[0].sessions[0].id, "disk-1");
+    assert_eq!(listed.models[0].sessions[0].turns, 1, "turn count survives the restart");
+    let tiers = client5.stats()?;
+    let pool5 = &tiers.models[0].pool;
+    assert!(
+        pool5.spilled_blocks > 0,
+        "restored blocks must start on the disk tier: {pool5:?}"
+    );
+    assert_eq!(pool5.resident_blocks, 0, "nothing faults in before first touch: {pool5:?}");
+
+    // the detached session resumes without re-prefilling its history
+    let resumed = client5.generate(Some(41), turn4("<q> again <a>").session("disk-1"))?;
+    assert!(resumed.error.is_none(), "post-restart resume failed: {resumed:?}");
+    assert!(
+        resumed.reused_tokens > 0,
+        "the resumed session must reuse its replayed cache: {resumed:?}"
+    );
+
+    // the journaled prefix snapshot serves a cold client CoW
+    let hit = client5.generate(Some(42), turn4("<q> remember the words <a>"))?;
+    assert!(hit.error.is_none(), "post-restart prefix request failed: {hit:?}");
+    assert!(
+        hit.reused_tokens > 0,
+        "the replayed prefix snapshot must hit without re-prefilling: {hit:?}"
+    );
+    println!(
+        "restart ok: session resumed {} tokens, prefix reused {} tokens, \
+         {} block(s) replayed from disk",
+        resumed.reused_tokens, hit.reused_tokens, pool5.spilled_blocks,
+    );
+
+    drop(client5);
+    stop5.store(true, Ordering::Relaxed);
+    serve5.join().expect("restarted store server thread")?;
+    std::fs::remove_dir_all(&store_root).ok();
     println!("SMOKE OK");
     Ok(())
 }

@@ -12,6 +12,7 @@
 //! {"v": 1, "op": "info"}
 //! {"v": 1, "op": "drain"}
 //! {"v": 1, "op": "undrain"}
+//! {"v": 1, "op": "checkpoint"}
 //! ```
 //!
 //! * **Versioning** — `"v"` names the protocol revision.  Anything other
@@ -34,7 +35,8 @@
 //! one-shot [`crate::coordinator::Response`] lines, NDJSON
 //! [`crate::coordinator::Event`] streams, `cancel_ack` lines, and the
 //! control-plane payloads ([`StatsResponse`], [`SessionsResponse`],
-//! [`InfoResponse`], [`DrainResponse`], [`UndrainResponse`]).
+//! [`InfoResponse`], [`DrainResponse`], [`UndrainResponse`],
+//! [`CheckpointResponse`]).
 
 use std::collections::BTreeMap;
 
@@ -45,6 +47,7 @@ use crate::coordinator::{
     ApiError, CoordStats, Event, GenerateParams, Response, SessionSummary, Timings, Usage,
 };
 use crate::kvpool::{PoolStats, PrefixStats};
+use crate::kvstore::CheckpointSummary;
 use crate::util::json::{arr, n, obj, s, Json};
 
 /// The protocol revision this build speaks.
@@ -127,6 +130,7 @@ pub enum ApiRequest {
     Info(InfoRequest),
     Drain(DrainRequest),
     Undrain(UndrainRequest),
+    Checkpoint(CheckpointRequest),
 }
 
 impl ApiRequest {
@@ -141,6 +145,7 @@ impl ApiRequest {
             ApiRequest::Info(r) => r.to_json(),
             ApiRequest::Drain(r) => r.to_json(),
             ApiRequest::Undrain(r) => r.to_json(),
+            ApiRequest::Checkpoint(r) => r.to_json(),
         }
     }
 }
@@ -184,8 +189,13 @@ pub fn parse_line(line: &str) -> Result<ApiRequest, ApiError> {
                 reject_unknown(m, &[], true)?;
                 Ok(ApiRequest::Undrain(UndrainRequest))
             }
+            "checkpoint" => {
+                reject_unknown(m, &[], true)?;
+                Ok(ApiRequest::Checkpoint(CheckpointRequest))
+            }
             other => Err(bad(format!(
-                "unknown op {other:?} (generate|cancel|stats|sessions|info|drain|undrain)"
+                "unknown op {other:?} \
+                 (generate|cancel|stats|sessions|info|drain|undrain|checkpoint)"
             ))),
         }
     } else if m.contains_key("cancel") {
@@ -427,6 +437,18 @@ impl UndrainRequest {
     }
 }
 
+/// `{"v":1,"op":"checkpoint"}` — flush every model's disk store: journal
+/// the live session/prefix inventory, fsync, and compact the WAL.  A
+/// deployment without `--store-dir` answers with an empty model list.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CheckpointRequest;
+
+impl CheckpointRequest {
+    pub fn to_json(&self) -> Json {
+        obj(envelope("checkpoint"))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Generation responses: one-shot lines and NDJSON event streams
 // ---------------------------------------------------------------------------
@@ -606,6 +628,8 @@ fn pool_stats_to_json(p: &PoolStats) -> Json {
         ("high_water_bytes", n(p.high_water_bytes as f64)),
         ("resident_blocks", n(p.resident_blocks as f64)),
         ("free_blocks", n(p.free_blocks as f64)),
+        ("spilled_bytes", n(p.spilled_bytes as f64)),
+        ("spilled_blocks", n(p.spilled_blocks as f64)),
         // Derived, for dashboards; ignored on parse.
         ("resident_bytes", n(p.resident_bytes() as f64)),
         ("budget", p.budget.map(|b| n(b as f64)).unwrap_or(Json::Null)),
@@ -620,6 +644,8 @@ fn pool_stats_from_json(v: &Json) -> Result<PoolStats> {
         high_water_bytes: v.get("high_water_bytes")?.as_usize()?,
         resident_blocks: v.get("resident_blocks")?.as_usize()?,
         free_blocks: v.get("free_blocks")?.as_usize()?,
+        spilled_bytes: v.get("spilled_bytes")?.as_usize()?,
+        spilled_blocks: v.get("spilled_blocks")?.as_usize()?,
         budget: match v.get("budget")? {
             Json::Null => None,
             b => Some(b.as_usize()?),
@@ -664,6 +690,8 @@ pub struct CoordCounters {
     pub pool_rejected: u64,
     pub sessions_shed: u64,
     pub prefix_shed: u64,
+    /// Frozen blocks demoted to the disk tier under admission pressure.
+    pub blocks_spilled: u64,
     /// Requests waiting in the admission queue right now.
     pub queued: u64,
 }
@@ -679,6 +707,7 @@ impl CoordCounters {
             pool_rejected: stats.pool_rejected.load(Relaxed),
             sessions_shed: stats.sessions_shed.load(Relaxed),
             prefix_shed: stats.prefix_shed.load(Relaxed),
+            blocks_spilled: stats.blocks_spilled.load(Relaxed),
             queued: stats.queued.load(Relaxed),
         }
     }
@@ -692,6 +721,7 @@ impl CoordCounters {
             ("pool_rejected", n(self.pool_rejected as f64)),
             ("sessions_shed", n(self.sessions_shed as f64)),
             ("prefix_shed", n(self.prefix_shed as f64)),
+            ("blocks_spilled", n(self.blocks_spilled as f64)),
             ("queued", n(self.queued as f64)),
         ])
     }
@@ -705,6 +735,7 @@ impl CoordCounters {
             pool_rejected: u64_field(v, "pool_rejected")?,
             sessions_shed: u64_field(v, "sessions_shed")?,
             prefix_shed: u64_field(v, "prefix_shed")?,
+            blocks_spilled: u64_field(v, "blocks_spilled")?,
             queued: u64_field(v, "queued")?,
         })
     }
@@ -1020,6 +1051,70 @@ impl UndrainResponse {
     }
 }
 
+/// One model's checkpoint outcome in a [`CheckpointResponse`]: what the
+/// store persisted, or why the flush failed (per-model, so one sick disk
+/// never hides the healthy variants' results).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelCheckpoint {
+    pub model: String,
+    pub result: Result<CheckpointSummary, String>,
+}
+
+/// Reply to `{"v":1,"op":"checkpoint"}`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CheckpointResponse {
+    /// Sorted by model name; a variant without a disk store is absent.
+    pub models: Vec<ModelCheckpoint>,
+}
+
+impl CheckpointResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("checkpoint");
+        let models = self
+            .models
+            .iter()
+            .map(|m| {
+                let mut p = vec![("model", s(m.model.clone()))];
+                match &m.result {
+                    Ok(cp) => {
+                        p.push(("ok", Json::Bool(true)));
+                        p.push(("sessions", n(cp.sessions as f64)));
+                        p.push(("prefixes", n(cp.prefixes as f64)));
+                        p.push(("blocks", n(cp.blocks as f64)));
+                        p.push(("pages", n(cp.pages as f64)));
+                    }
+                    Err(e) => {
+                        p.push(("ok", Json::Bool(false)));
+                        p.push(("error", s(e.clone())));
+                    }
+                }
+                obj(p)
+            })
+            .collect();
+        pairs.push(("models", arr(models)));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<CheckpointResponse> {
+        let mut models = Vec::new();
+        for m in v.get("models")?.as_arr()? {
+            let model = m.get("model")?.as_str()?.to_string();
+            let result = if m.get("ok")?.as_bool()? {
+                Ok(CheckpointSummary {
+                    sessions: m.get("sessions")?.as_usize()?,
+                    prefixes: m.get("prefixes")?.as_usize()?,
+                    blocks: m.get("blocks")?.as_usize()?,
+                    pages: m.get("pages")?.as_usize()?,
+                })
+            } else {
+                Err(m.get("error")?.as_str()?.to_string())
+            };
+            models.push(ModelCheckpoint { model, result });
+        }
+        Ok(CheckpointResponse { models })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1117,6 +1212,7 @@ mod tests {
             ApiRequest::Info(InfoRequest),
             ApiRequest::Drain(DrainRequest),
             ApiRequest::Undrain(UndrainRequest),
+            ApiRequest::Checkpoint(CheckpointRequest),
         ] {
             let line = req.to_json().to_string();
             assert_eq!(parse_line(&line).unwrap(), req, "round-trip of {line}");
@@ -1206,6 +1302,8 @@ mod tests {
                     high_water_bytes: 5120,
                     resident_blocks: 3,
                     free_blocks: 1,
+                    spilled_bytes: 2048,
+                    spilled_blocks: 2,
                     budget: Some(8192),
                 },
                 prefix: Some(PrefixStats {
@@ -1238,6 +1336,8 @@ mod tests {
                     high_water_bytes: 0,
                     resident_blocks: 0,
                     free_blocks: 0,
+                    spilled_bytes: 0,
+                    spilled_blocks: 0,
                     budget: None,
                 },
                 prefix: None,
@@ -1289,5 +1389,29 @@ mod tests {
         let undrain = UndrainResponse { draining: false, in_flight: 2 };
         let v = Json::parse(&undrain.to_json().to_string()).unwrap();
         assert_eq!(UndrainResponse::from_json(&v).unwrap(), undrain);
+
+        let checkpoint = CheckpointResponse {
+            models: vec![
+                ModelCheckpoint {
+                    model: "llama_like".into(),
+                    result: Ok(CheckpointSummary {
+                        sessions: 2,
+                        prefixes: 1,
+                        blocks: 6,
+                        pages: 19,
+                    }),
+                },
+                ModelCheckpoint {
+                    model: "qwen_like".into(),
+                    result: Err("disk full".into()),
+                },
+            ],
+        };
+        let v = Json::parse(&checkpoint.to_json().to_string()).unwrap();
+        assert_eq!(CheckpointResponse::from_json(&v).unwrap(), checkpoint);
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "checkpoint");
+        let empty = CheckpointResponse::default();
+        let v = Json::parse(&empty.to_json().to_string()).unwrap();
+        assert_eq!(CheckpointResponse::from_json(&v).unwrap(), empty);
     }
 }

@@ -33,9 +33,9 @@ use std::net::TcpStream;
 use anyhow::{bail, Context, Result};
 
 use crate::api::{
-    self, CancelAck, CancelRequest, DrainRequest, DrainResponse, GenerateRequest, InfoRequest,
-    InfoResponse, SessionsRequest, SessionsResponse, StatsRequest, StatsResponse,
-    UndrainRequest, UndrainResponse,
+    self, CancelAck, CancelRequest, CheckpointRequest, CheckpointResponse, DrainRequest,
+    DrainResponse, GenerateRequest, InfoRequest, InfoResponse, SessionsRequest,
+    SessionsResponse, StatsRequest, StatsResponse, UndrainRequest, UndrainResponse,
 };
 use crate::coordinator::{ApiError, Event, GenerateParams, Response};
 use crate::util::json::Json;
@@ -166,6 +166,14 @@ impl Client {
     pub fn undrain(&mut self) -> Result<UndrainResponse> {
         let v = self.op_call(&UndrainRequest.to_json())?;
         UndrainResponse::from_json(&v)
+    }
+
+    /// Control plane: flush every model's disk store (journal the live
+    /// session/prefix inventory, fsync, compact the WAL).  Empty when the
+    /// server runs without `--store-dir`.
+    pub fn checkpoint(&mut self) -> Result<CheckpointResponse> {
+        let v = self.op_call(&CheckpointRequest.to_json())?;
+        CheckpointResponse::from_json(&v)
     }
 
     /// Send a control-plane op and read its reply, surfacing a server-side

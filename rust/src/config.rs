@@ -227,6 +227,11 @@ pub struct ServingConfig {
     /// Enable the radix prefix cache (share identical prompt-prefix KV
     /// across sequences, CoW).  CLI: `--prefix-cache`.
     pub prefix_cache: bool,
+    /// Root directory for the tiered KV store (`None` = memory-only).
+    /// CLI: `--store-dir DIR`.  Enables disk spill of cold frozen blocks
+    /// and WAL-journaled persistence of detached sessions and prefix
+    /// snapshots across restarts.
+    pub store_dir: Option<PathBuf>,
     /// Port for the TCP front-end.
     pub port: u16,
 }
@@ -243,6 +248,7 @@ impl Default for ServingConfig {
             pool_max_bytes: None,
             session_max_bytes: 0,
             prefix_cache: false,
+            store_dir: None,
             port: 7199,
         }
     }
@@ -261,6 +267,7 @@ impl ServingConfig {
         }
         c.session_max_bytes = args.usize_or("session-mb", 0)? * 1024 * 1024;
         c.prefix_cache = args.has("prefix-cache");
+        c.store_dir = args.get("store-dir").map(PathBuf::from);
         c.port = args.usize_or("port", c.port as usize)? as u16;
         Ok(c)
     }
@@ -349,6 +356,22 @@ mod tests {
         let zero =
             Args::parse(["--pool-mb", "0"].iter().map(|s| s.to_string())).unwrap();
         assert_eq!(ServingConfig::from_args(&zero).unwrap().pool_max_bytes, None);
+    }
+
+    #[test]
+    fn store_dir_flag() {
+        let empty = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(
+            ServingConfig::from_args(&empty).unwrap().store_dir,
+            None,
+            "memory-only by default"
+        );
+        let args = Args::parse(
+            ["--store-dir", "/tmp/kvstore"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = ServingConfig::from_args(&args).unwrap();
+        assert_eq!(c.store_dir, Some(PathBuf::from("/tmp/kvstore")));
     }
 
     #[test]

@@ -58,6 +58,10 @@ pub struct CoordStats {
     /// Prefix-cache snapshots evicted to make room under the pool budget
     /// (the cheapest sheddable class — always drained before sessions).
     pub prefix_shed: AtomicU64,
+    /// Frozen blocks demoted to the disk tier under pool pressure (the
+    /// tier *before* any shedding: demotion loses no state, only
+    /// residency).  Counts blocks, not bytes.
+    pub blocks_spilled: AtomicU64,
     /// Requests sitting in the admission queue right now (incremented by
     /// the router on enqueue, decremented here on dequeue) — the control
     /// plane's queue-depth gauge.
@@ -642,10 +646,13 @@ impl Coordinator {
     /// return the RAII byte reservation the caller stores on its
     /// [`Pending`] (released on every exit path by drop).
     ///
-    /// Shedding follows the three-tier order: **prefix-cache snapshots**
-    /// first (pure optimization — losing one costs a future prefill, never
-    /// data), then **detached sessions** (losing one costs a stored
-    /// conversation), then the typed rejection.
+    /// Reclaim is tiered, cheapest loss first.  **Tier 0** (only when a
+    /// disk store is bound): demote cold frozen blocks to the disk tier —
+    /// demotion loses no state at all, just residency, so it always runs
+    /// before anything is shed.  Then **prefix-cache snapshots** (pure
+    /// optimization — losing one costs a future prefill, never data), then
+    /// **detached sessions** (losing one costs a stored conversation),
+    /// then the typed rejection.
     ///
     /// Occupancy is judged as `resident - in-flight materialized +
     /// in-flight reservations`: running slots are charged their full
@@ -693,6 +700,17 @@ impl Coordinator {
             let effective = resident.saturating_sub(materialized) + reserved;
             if effective + needed <= budget {
                 return Ok(self.reserve(needed));
+            }
+            // Tier 0: with a disk store bound, demote cold frozen blocks
+            // before shedding anything — spill frees resident bytes at
+            // zero information cost (blocks fault back in on read).
+            if pool.has_store() {
+                let overflow = (effective + needed).saturating_sub(budget);
+                let (blocks, bytes) = pool.spill(overflow);
+                if bytes > 0 {
+                    self.stats.blocks_spilled.fetch_add(blocks as u64, Ordering::Relaxed);
+                    continue;
+                }
             }
             let prefix_bytes =
                 self.engine.prefix_cache().map(|p| p.total_bytes()).unwrap_or(0);

@@ -17,6 +17,7 @@
 //! [`Engine`]: crate::engine::Engine
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -27,7 +28,9 @@ use anyhow::Result;
 
 use crate::api::ModelInfo;
 use crate::backend::EngineSpec;
-use crate::kvpool::{BlockPool, PrefixCache, PrefixConfig};
+use crate::kvcache::KvCache;
+use crate::kvpool::{Block, BlockPool, PrefixCache, PrefixConfig};
+use crate::kvstore::{CheckpointSummary, KvStore};
 
 use super::{
     ApiError, CoordStats, Coordinator, Event, Request, Response, SessionConfig, SessionStore,
@@ -62,6 +65,12 @@ pub struct RouterConfig {
     /// are shared CoW across sequences, so a warm prefix costs zero deep
     /// copies and only the unmatched suffix runs on the backend.
     pub prefix_cache: Option<PrefixConfig>,
+    /// Root directory for the tiered KV store (`--store-dir`; `None` =
+    /// memory-only).  Each variant opens `<dir>/<variant>`: frozen blocks
+    /// can then spill to disk under pool pressure, detached sessions and
+    /// prefix snapshots are WAL-journaled, and boot replays the journal so
+    /// both survive a restart without re-prefilling.
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Default for RouterConfig {
@@ -71,6 +80,7 @@ impl Default for RouterConfig {
             sessions: SessionConfig::default(),
             pool_max_bytes: None,
             prefix_cache: None,
+            store_dir: None,
         }
     }
 }
@@ -107,6 +117,10 @@ pub struct Router {
     stats: HashMap<String, Arc<CoordStats>>,
     pools: HashMap<String, Arc<BlockPool>>,
     prefixes: HashMap<String, Arc<PrefixCache>>,
+    /// Per-model disk stores, when the router was started with
+    /// [`RouterConfig::store_dir`] (the `checkpoint` op flushes through
+    /// these).
+    stores: HashMap<String, Arc<KvStore>>,
     /// Per-model session stores, shared with the coordinator threads so
     /// the control plane (`sessions` op) can list/delete entries.
     sessions: HashMap<String, SharedSessionStore>,
@@ -137,6 +151,7 @@ impl Router {
         let mut pools = HashMap::new();
         let mut prefixes = HashMap::new();
         let mut sessions = HashMap::new();
+        let mut stores = HashMap::new();
         let mut infos = HashMap::new();
         let mut threads = Vec::new();
         for variant in variants {
@@ -157,6 +172,27 @@ impl Router {
             }
             let store = Arc::new(Mutex::new(SessionStore::new(cfg.sessions.clone())));
             sessions.insert(variant.clone(), Arc::clone(&store));
+            // Tiered storage opt-in: open this variant's disk store, bind
+            // it to the pool (spill/fault) and both journaling layers,
+            // then replay the journal so detached sessions and prefix
+            // snapshots from the previous run serve without re-prefilling.
+            if let Some(root) = &cfg.store_dir {
+                match KvStore::open(&root.join(variant)) {
+                    Ok(kv) => {
+                        let kv = Arc::new(kv);
+                        pool.bind_store(Arc::clone(&kv));
+                        store.lock().unwrap().bind_journal(Arc::clone(&kv));
+                        if let Some(pc) = &prefix {
+                            pc.bind_journal(Arc::clone(&kv));
+                        }
+                        restore_inventory(&kv, &pool, &store, prefix.as_deref());
+                        stores.insert(variant.clone(), kv);
+                    }
+                    Err(e) => eprintln!(
+                        "store for {variant} failed to open ({e:#}); serving memory-only"
+                    ),
+                }
+            }
             let info_slot: InfoSlot = Arc::new(Mutex::new(None));
             infos.insert(variant.clone(), Arc::clone(&info_slot));
             let spec = spec.clone();
@@ -210,6 +246,7 @@ impl Router {
             stats,
             pools,
             prefixes,
+            stores,
             sessions,
             infos,
             cfg,
@@ -242,6 +279,23 @@ impl Router {
     /// lists/deletes entries through it; the coordinator thread shares it).
     pub fn session_store(&self, model: &str) -> Option<SharedSessionStore> {
         self.sessions.get(model).cloned()
+    }
+
+    /// This model's disk store, when the router was started with a
+    /// [`RouterConfig::store_dir`].
+    pub fn store(&self, model: &str) -> Option<Arc<KvStore>> {
+        self.stores.get(model).cloned()
+    }
+
+    /// Checkpoint every variant's disk store: re-journal the live session
+    /// and prefix inventory, fsync, and compact the WAL to it.  Variants
+    /// without a store are skipped; results come back sorted by model
+    /// name so the `checkpoint` op's output is deterministic.
+    pub fn checkpoint(&self) -> Vec<(String, Result<CheckpointSummary>)> {
+        let mut out: Vec<(String, Result<CheckpointSummary>)> =
+            self.stores.iter().map(|(name, kv)| (name.clone(), kv.checkpoint())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 
     /// Engine facts for this model, once its coordinator thread has loaded
@@ -356,6 +410,40 @@ impl Router {
         self.senders.clear();
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+    }
+}
+
+/// Replay a freshly opened store's inventory into the serving state.
+/// Every descriptor restores through one shared handle map, so blocks
+/// that were CoW-shared across sessions and snapshots in the previous
+/// run come back as one `Block` each — same bytes resident once, shared
+/// again.  A descriptor that fails validation is reported and dropped
+/// (its records fall to the next checkpoint's GC); restore never takes
+/// the process down.
+fn restore_inventory(
+    kv: &Arc<KvStore>,
+    pool: &Arc<BlockPool>,
+    sessions: &SharedSessionStore,
+    prefix: Option<&PrefixCache>,
+) {
+    let mut handles: HashMap<u64, Arc<Block>> = HashMap::new();
+    for (id, desc) in kv.boot_sessions() {
+        match KvCache::restore(pool, kv, &desc, &mut handles) {
+            Ok(cache) => {
+                let pending = desc.get("pending").and_then(|j| j.as_i64()).unwrap_or(0) as i32;
+                let turns = desc.get("turns").and_then(|j| j.as_i64()).unwrap_or(0) as u32;
+                sessions.lock().unwrap().restore(&id, cache, pending, turns);
+            }
+            Err(e) => eprintln!("session {id} failed to restore ({e:#}); dropped"),
+        }
+    }
+    let Some(pc) = prefix else { return };
+    for (pid, desc) in kv.boot_prefixes() {
+        let restored = KvCache::restore(pool, kv, &desc, &mut handles)
+            .and_then(|cache| pc.restore(&desc, cache, pid));
+        if let Err(e) = restored {
+            eprintln!("prefix snapshot {pid} failed to restore ({e:#}); dropped");
         }
     }
 }

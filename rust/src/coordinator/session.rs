@@ -26,6 +26,8 @@ use std::time::{Duration, Instant};
 
 use crate::kvcache::KvCache;
 use crate::kvpool::BlockPool;
+use crate::kvstore::KvStore;
+use crate::util::json::{self, Json};
 
 /// Store bounds.  `capacity == 0` disables session persistence entirely
 /// (requests still run; their caches are simply dropped at the end).
@@ -91,17 +93,56 @@ pub struct SessionStore {
     /// router's `hard_pressure` pre-queue check never judges admission on
     /// stale sheddable bytes.
     pool: Option<Arc<BlockPool>>,
+    /// When bound, completed-turn `put`s persist the session's cache to
+    /// the store and every eviction path journals a remove (see
+    /// [`SessionStore::bind_journal`]).
+    journal: Option<Arc<KvStore>>,
 }
 
 impl SessionStore {
     pub fn new(cfg: SessionConfig) -> SessionStore {
-        SessionStore { cfg, map: HashMap::new(), pool: None }
+        SessionStore { cfg, map: HashMap::new(), pool: None, journal: None }
     }
 
     /// Bind the pool whose sheddable gauge mirrors this store.
     pub fn bind_pool(&mut self, pool: Arc<BlockPool>) {
         self.pool = Some(pool);
         self.publish();
+    }
+
+    /// Bind the durability journal: from now on every `put` persists the
+    /// session to `store`, and every eviction — explicit removal, LRU
+    /// shedding, byte-cap eviction, TTL expiry — journals a remove so a
+    /// restart can never resurrect a session this store already let go
+    /// of.  `take` deliberately journals nothing: a crash between a take
+    /// and the turn's closing `put` resumes from the last *completed*
+    /// turn (the put supersedes the old descriptor atomically).
+    pub fn bind_journal(&mut self, store: Arc<KvStore>) {
+        self.journal = Some(store);
+    }
+
+    fn journal_put(&self, id: &str) {
+        let (Some(store), Some(entry)) = (&self.journal, self.map.get(id)) else { return };
+        match entry.cache.persist(store) {
+            Ok(mut desc) => {
+                if let Json::Obj(map) = &mut desc {
+                    map.insert("pending".to_string(), json::n(entry.pending as f64));
+                    map.insert("turns".to_string(), json::n(entry.turns as f64));
+                }
+                if let Err(e) = store.journal_session_put(id, desc) {
+                    eprintln!("sessions: failed to journal {id:?}: {e:#}");
+                }
+            }
+            Err(e) => eprintln!("sessions: failed to persist {id:?}: {e:#}"),
+        }
+    }
+
+    fn journal_remove(&self, id: &str) {
+        if let Some(store) = &self.journal {
+            if let Err(e) = store.journal_session_remove(id) {
+                eprintln!("sessions: failed to journal removal of {id:?}: {e:#}");
+            }
+        }
     }
 
     fn publish(&self) {
@@ -143,6 +184,7 @@ impl SessionStore {
     pub fn remove(&mut self, id: &str) -> bool {
         let removed = self.map.remove(id).is_some();
         if removed {
+            self.journal_remove(id);
             self.publish();
         }
         removed
@@ -172,6 +214,7 @@ impl SessionStore {
         let entry = self.map.remove(&key)?;
         let bytes = entry.cache.exact_bytes();
         drop(entry);
+        self.journal_remove(&key);
         self.publish();
         Some((key, bytes))
     }
@@ -193,6 +236,7 @@ impl SessionStore {
         while !self.map.contains_key(id) && self.map.len() >= self.cfg.capacity {
             if let Some(key) = self.lru_key() {
                 self.map.remove(&key);
+                self.journal_remove(&key);
             } else {
                 break;
             }
@@ -203,11 +247,31 @@ impl SessionStore {
             while self.total_bytes() > self.cfg.max_bytes && !self.map.is_empty() {
                 if let Some(key) = self.lru_key() {
                     self.map.remove(&key);
+                    self.journal_remove(&key);
                 } else {
                     break;
                 }
             }
         }
+        // Journal last: the byte-cap loop above may have evicted the very
+        // entry being put (when it is itself the LRU), and eviction order
+        // in the journal must match eviction order in memory.
+        if self.map.contains_key(id) {
+            self.journal_put(id);
+        }
+        self.publish();
+    }
+
+    /// Insert a session rebuilt from the journal at boot.  Does not
+    /// re-journal (the bound store already holds this exact descriptor)
+    /// and does not enforce caps — the inventory was legal when
+    /// journaled, and TTL age restarts from boot.
+    pub fn restore(&mut self, id: &str, cache: KvCache, pending: i32, turns: u32) {
+        if self.cfg.capacity == 0 {
+            return;
+        }
+        let entry = SessionEntry { cache, pending, turns, last_used: Instant::now() };
+        self.map.insert(id.to_string(), entry);
         self.publish();
     }
 
@@ -218,7 +282,19 @@ impl SessionStore {
     fn purge_expired(&mut self) {
         let ttl = self.cfg.ttl;
         let now = Instant::now();
-        self.map.retain(|_, e| now.duration_since(e.last_used) <= ttl);
+        // Collect-then-remove (not `retain`) so every expired *journaled*
+        // session gets its remove record too — a TTL eviction that only
+        // dropped the in-memory entry would resurrect on replay.
+        let expired: Vec<String> = self
+            .map
+            .iter()
+            .filter(|(_, e)| now.duration_since(e.last_used) > ttl)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for id in expired {
+            self.map.remove(&id);
+            self.journal_remove(&id);
+        }
     }
 }
 
@@ -409,6 +485,38 @@ mod tests {
             3 * row_cost(),
             "remove republishes the sheddable gauge"
         );
+    }
+
+    /// Every eviction path of a *journaled* session must append a remove
+    /// record — otherwise replay resurrects sessions this store already
+    /// let go of (TTL expiry was the original offender: it used `retain`
+    /// and never told the journal).
+    #[test]
+    fn journaled_evictions_append_remove_records() {
+        use crate::kvstore::{testutil::TempDir, KvStore};
+        let dir = TempDir::new("sessions-journal");
+        let kv = Arc::new(KvStore::open(dir.path()).unwrap());
+        let mut st = store(2, Duration::from_millis(1));
+        st.bind_journal(Arc::clone(&kv));
+        st.put("a", cache_with_rows(2), 0, 1);
+        assert_eq!(kv.inventory_counts().0, 1, "put journals the session");
+        std::thread::sleep(Duration::from_millis(5));
+        // the next put's TTL purge expires "a"
+        st.put("b", cache_with_rows(2), 7, 1);
+        assert!(st.take("a").is_none());
+        assert_eq!(kv.inventory_counts().0, 1, "TTL eviction journaled its remove");
+        // re-put the taken "b" (take journals nothing; put supersedes),
+        // then shed it: the journal must drop to empty
+        let e = st.take("b").unwrap();
+        st.put("b", e.cache, e.pending, e.turns);
+        st.shed_lru().unwrap();
+        assert_eq!(kv.inventory_counts(), (0, 0, 0), "shed released every payload");
+        st.put("c", cache_with_rows(2), 0, 1);
+        assert!(st.remove("c"));
+        drop(st);
+        drop(kv);
+        let reopened = KvStore::open(dir.path()).unwrap();
+        assert_eq!(reopened.inventory_counts().0, 0, "replay resurrects nothing");
     }
 
     #[test]

@@ -48,11 +48,14 @@
 
 pub mod ratio;
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::kvpool::{row_bytes, Block, BlockPool, LooseGauge};
+use crate::kvstore::KvStore;
+use crate::util::json::{self, Json};
 
 /// Storage for one (layer, head): frozen pool blocks plus the loose tail.
 #[derive(Debug, Clone, Default)]
@@ -144,9 +147,10 @@ impl HeadStore {
         let mut pos = Vec::with_capacity(self.frozen_rows + self.pos.len());
         let mut attn = Vec::with_capacity(pos.capacity());
         for b in &self.frozen {
-            k.extend_from_slice(b.k());
-            v.extend_from_slice(b.v());
-            pos.extend_from_slice(b.pos());
+            let data = b.read();
+            k.extend_from_slice(data.k());
+            v.extend_from_slice(data.v());
+            pos.extend_from_slice(data.pos());
         }
         // Live mass, not the blocks' freeze-time snapshot.
         attn.extend_from_slice(&self.frozen_attn);
@@ -207,8 +211,9 @@ impl HeadStore {
                 return;
             }
             let take = b.rows().min(n_rows - row);
-            dst_k[row * d..(row + take) * d].copy_from_slice(&b.k()[..take * d]);
-            dst_v[row * d..(row + take) * d].copy_from_slice(&b.v()[..take * d]);
+            let data = b.read();
+            dst_k[row * d..(row + take) * d].copy_from_slice(&data.k()[..take * d]);
+            dst_v[row * d..(row + take) * d].copy_from_slice(&data.v()[..take * d]);
             row += take;
         }
         if row < n_rows {
@@ -221,7 +226,7 @@ impl HeadStore {
     fn gather_k(&self, d: usize) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.frozen_rows * d + self.k.len());
         for b in &self.frozen {
-            out.extend_from_slice(b.k());
+            out.extend_from_slice(b.read().k());
         }
         out.extend_from_slice(&self.k);
         out
@@ -230,7 +235,7 @@ impl HeadStore {
     fn gather_v(&self, d: usize) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.frozen_rows * d + self.v.len());
         for b in &self.frozen {
-            out.extend_from_slice(b.v());
+            out.extend_from_slice(b.read().v());
         }
         out.extend_from_slice(&self.v);
         out
@@ -664,7 +669,7 @@ impl KvCache {
         out.clear();
         out.reserve(h.frozen_rows + h.pos.len());
         for b in &h.frozen {
-            out.extend_from_slice(b.pos());
+            out.extend_from_slice(b.read().pos());
         }
         out.extend_from_slice(&h.pos);
     }
@@ -683,6 +688,137 @@ impl KvCache {
     pub fn head_attn(&self, layer: usize, head: usize) -> Vec<f32> {
         self.layers[layer].heads[head].gather_attn()
     }
+
+    // -- persistence (kvstore descriptors) -------------------------------------
+
+    /// Serialize this cache into a store descriptor: every frozen block
+    /// is persisted (or its existing record re-claimed — a block spilled
+    /// by the pool is never re-serialized) and each head's loose region
+    /// plus its live frozen-row attention mass becomes a binary sidecar
+    /// record.  The returned descriptor owns one store claim per block
+    /// reference; journaling it (`journal_session_put` /
+    /// `journal_prefix_put`) hands ownership to the store, which releases
+    /// the claims when the descriptor is superseded or removed.  On
+    /// failure every claim and sidecar written so far is rolled back.
+    pub fn persist(&self, store: &KvStore) -> Result<Json> {
+        let mut claimed: Vec<u64> = Vec::new();
+        let mut blobs: Vec<u64> = Vec::new();
+        match self.persist_desc(store, &mut claimed, &mut blobs) {
+            Ok(desc) => Ok(desc),
+            Err(e) => {
+                store.abort_blobs(&blobs);
+                for id in claimed {
+                    store.release_block(id);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn persist_desc(
+        &self,
+        store: &KvStore,
+        claimed: &mut Vec<u64>,
+        blobs: &mut Vec<u64>,
+    ) -> Result<Json> {
+        let mut layers = Vec::with_capacity(self.n_layers);
+        for layer in &self.layers {
+            let mut heads = Vec::with_capacity(self.n_heads);
+            for head in &layer.heads {
+                let mut fb = Vec::with_capacity(head.frozen.len());
+                for b in &head.frozen {
+                    let id = b.persist_into(store)?;
+                    claimed.push(id);
+                    fb.push(json::n(id as f64));
+                }
+                let sc = store.put_blob(&encode_sidecar(head))?;
+                blobs.push(sc);
+                heads.push(json::obj(vec![
+                    ("fr", json::n(head.frozen_rows as f64)),
+                    ("fb", json::arr(fb)),
+                    ("sc", json::n(sc as f64)),
+                ]));
+            }
+            layers.push(json::obj(vec![
+                ("b", json::n(layer.boundary as f64)),
+                ("heads", json::arr(heads)),
+            ]));
+        }
+        Ok(json::obj(vec![
+            ("nl", json::n(self.n_layers as f64)),
+            ("nh", json::n(self.n_heads as f64)),
+            ("d", json::n(self.d_head as f64)),
+            ("app", json::n(self.appended as f64)),
+            ("cache", json::obj(vec![("layers", json::arr(layers))])),
+        ]))
+    }
+
+    /// Rebuild a cache from a descriptor produced by [`KvCache::persist`]
+    /// (the boot restore path).  Blocks adopt lazily — they start spilled
+    /// and fault in on first read, so restoring a large inventory costs
+    /// no resident bytes up front.  `handles` must be shared across every
+    /// restore of one boot so a block referenced by several descriptors
+    /// (a detached session and a prefix snapshot sharing a CoW prefix)
+    /// materializes as one `Arc<Block>`, exactly as before the restart.
+    pub fn restore(
+        pool: &Arc<BlockPool>,
+        store: &KvStore,
+        desc: &Json,
+        handles: &mut HashMap<u64, Arc<Block>>,
+    ) -> Result<KvCache> {
+        let nl = desc.get("nl")?.as_usize()?;
+        let nh = desc.get("nh")?.as_usize()?;
+        let d = desc.get("d")?.as_usize()?;
+        let appended = desc.get("app")?.as_usize()?;
+        let layers_json = desc.get("cache")?.get("layers")?.as_arr()?;
+        if layers_json.len() != nl {
+            bail!("restore: descriptor has {} layers, dims say {nl}", layers_json.len());
+        }
+        let mut cache = KvCache::new_in(Arc::clone(pool), nl, nh, d);
+        cache.appended = appended;
+        for (li, layer_json) in layers_json.iter().enumerate() {
+            let heads_json = layer_json.get("heads")?.as_arr()?;
+            if heads_json.len() != nh {
+                bail!("restore: layer {li} has {} heads, dims say {nh}", heads_json.len());
+            }
+            cache.layers[li].boundary = layer_json.get("b")?.as_usize()?;
+            for (hi, head_json) in heads_json.iter().enumerate() {
+                let fr = head_json.get("fr")?.as_usize()?;
+                let mut blocks = Vec::new();
+                let mut rows = 0usize;
+                for id_json in head_json.get("fb")?.as_arr()? {
+                    let id = id_json.as_i64()? as u64;
+                    let block = match handles.get(&id) {
+                        Some(b) => Arc::clone(b),
+                        None => {
+                            let (b_rows, b_d, _) = store
+                                .block_dims(id)
+                                .ok_or_else(|| anyhow!("restore: unknown block {id}"))?;
+                            if b_d != d {
+                                bail!("restore: block {id} width {b_d} != cache width {d}");
+                            }
+                            let b = BlockPool::adopt_spilled(pool, id, b_rows, b_d);
+                            handles.insert(id, Arc::clone(&b));
+                            b
+                        }
+                    };
+                    rows += block.rows();
+                    blocks.push(block);
+                }
+                if rows != fr {
+                    bail!("restore: head ({li},{hi}) blocks cover {rows} rows, descriptor says {fr}");
+                }
+                let sc = head_json.get("sc")?.as_i64()? as u64;
+                let blob = store.read_blob(sc)?;
+                let head = &mut cache.layers[li].heads[hi];
+                head.frozen = blocks;
+                head.frozen_rows = fr;
+                decode_sidecar(&blob, d, fr, head)?;
+            }
+        }
+        cache.sync_gauge();
+        Ok(cache)
+    }
 }
 
 /// A borrowed view of `l` consecutive rows of one head.
@@ -691,6 +827,74 @@ pub struct Window<'a> {
     pub v: &'a [f32],
     pub attn: &'a [f32],
     pub pos: &'a [i32],
+}
+
+// -- sidecar serialization (little-endian, mirrors kvstore's block codec) ------
+
+/// Encode a head's non-block state — the live frozen-row attention mass
+/// plus the whole loose region.  Binary because JSON cannot round-trip
+/// non-finite f32 bits:
+/// `[fr u32][frozen_attn f32×fr][n u32][k f32×n·d][v f32×n·d][pos i32×n][attn f32×n]`.
+fn encode_sidecar(head: &HeadStore) -> Vec<u8> {
+    let n = head.pos.len();
+    let mut out = Vec::with_capacity(
+        8 + (head.frozen_attn.len() + head.k.len() + head.v.len() + 2 * n) * 4,
+    );
+    out.extend_from_slice(&(head.frozen_attn.len() as u32).to_le_bytes());
+    for x in &head.frozen_attn {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    for x in &head.k {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in &head.v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for p in &head.pos {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    for x in &head.attn {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn take_u32(buf: &[u8], off: &mut usize) -> Result<usize> {
+    let b = buf.get(*off..*off + 4).ok_or_else(|| anyhow!("short sidecar record"))?;
+    *off += 4;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize)
+}
+
+fn take_f32s(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
+    let end = *off + n * 4;
+    let s = buf.get(*off..end).ok_or_else(|| anyhow!("short sidecar record"))?;
+    *off = end;
+    Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Decode a sidecar into `head`'s loose region + frozen attention mass.
+/// `fr` is the descriptor's frozen-row count — the blob must agree.
+fn decode_sidecar(buf: &[u8], d: usize, fr: usize, head: &mut HeadStore) -> Result<()> {
+    let mut off = 0usize;
+    let n_frozen = take_u32(buf, &mut off)?;
+    if n_frozen != fr {
+        bail!("sidecar frozen-mass length {n_frozen} != descriptor frozen rows {fr}");
+    }
+    head.frozen_attn = take_f32s(buf, &mut off, n_frozen)?;
+    let n = take_u32(buf, &mut off)?;
+    head.k = take_f32s(buf, &mut off, n * d)?;
+    head.v = take_f32s(buf, &mut off, n * d)?;
+    let pos_bytes =
+        buf.get(off..off + n * 4).ok_or_else(|| anyhow!("short sidecar record"))?;
+    head.pos =
+        pos_bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    off += n * 4;
+    head.attn = take_f32s(buf, &mut off, n)?;
+    if off != buf.len() {
+        bail!("sidecar record has {} trailing bytes", buf.len() - off);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1000,5 +1204,72 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// A persisted cache restores bit-identically across a store reopen:
+    /// frozen blocks adopt lazily (starting spilled, faulting in on first
+    /// read), the loose tail and the *live* frozen-row attention mass come
+    /// back from the sidecar, and reads drain the spilled tier to zero.
+    #[test]
+    fn persist_restore_round_trips_across_reopen() {
+        use crate::kvstore::{testutil::TempDir, KvStore};
+        let dir = TempDir::new("kvcache-persist");
+        let pool = BlockPool::unbounded(4);
+        let mut c = KvCache::new_in(pool.clone(), 2, 2, 3);
+        let mut rng = Rng::seed_from(77);
+        for t in 0..20 {
+            let k: Vec<f32> = (0..2 * 2 * 3).map(|_| rng.normal()).collect();
+            let v: Vec<f32> = (0..2 * 2 * 3).map(|_| rng.normal()).collect();
+            c.append_token(&k, &v, t).unwrap();
+        }
+        // freezes rows [0, 8) of layer 0; layer 1 stays fully loose
+        c.compact_layer(0, 10, 4, &[vec![0, 2], vec![1, 3]]).unwrap();
+        assert_eq!(c.frozen_rows(0), 8);
+        // accumulate onto a frozen row *after* the freeze: restore must
+        // return this live value, not the block's freeze-time snapshot
+        let mut row = vec![0.0f32; 2 * 2 * 32];
+        row[2] = 1.5;
+        c.accumulate_attention(&row, 32).unwrap();
+        let pairs: Vec<(usize, usize)> =
+            (0..2).flat_map(|l| (0..2).map(move |h| (l, h))).collect();
+        let snapshot: Vec<_> = pairs
+            .iter()
+            .map(|&(l, h)| (c.head_k(l, h), c.head_v(l, h), c.positions(l, h), c.head_attn(l, h)))
+            .collect();
+        let lens = c.lens();
+        let boundary = c.layers[0].boundary;
+        let appended = c.appended;
+        {
+            let store = KvStore::open(dir.path()).unwrap();
+            let desc = c.persist(&store).unwrap();
+            store.journal_session_put("s", desc).unwrap();
+            store.checkpoint().unwrap();
+        }
+        drop(c);
+        let store = Arc::new(KvStore::open(dir.path()).unwrap());
+        let pool2 = BlockPool::unbounded(4);
+        pool2.bind_store(Arc::clone(&store));
+        let desc = store.boot_sessions().pop().unwrap().1;
+        let mut handles = HashMap::new();
+        let r = KvCache::restore(&pool2, &store, &desc, &mut handles).unwrap();
+        assert_eq!(r.lens(), lens);
+        assert_eq!(r.appended, appended);
+        assert_eq!(r.layers[0].boundary, boundary);
+        assert_eq!(r.frozen_rows(0), 8);
+        assert_eq!(handles.len(), 2, "one shared handle per distinct block");
+        let spilled = pool2.stats();
+        assert_eq!(spilled.spilled_blocks, 2, "blocks adopt lazily, starting spilled");
+        assert_eq!(spilled.resident_blocks, 0);
+        for (i, &(l, h)) in pairs.iter().enumerate() {
+            let (k, v, pos, attn) = &snapshot[i];
+            assert_eq!(&r.head_k(l, h), k, "layer {l} head {h} keys");
+            assert_eq!(&r.head_v(l, h), v);
+            assert_eq!(&r.positions(l, h), pos);
+            assert_eq!(&r.head_attn(l, h), attn, "live frozen mass restored");
+        }
+        // the reads above faulted every block back in
+        let after = pool2.stats();
+        assert_eq!(after.spilled_blocks, 0);
+        assert_eq!(after.resident_blocks, 2);
     }
 }

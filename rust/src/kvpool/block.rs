@@ -1,13 +1,35 @@
-//! Fixed-size KV blocks: the unit the pool hands out and recycles.
+//! Fixed-size KV blocks: the unit the pool hands out, recycles — and,
+//! when a [`kvstore::KvStore`] is bound, demotes to disk and faults back.
+//!
+//! Residency state machine (per block, under its own `RwLock`):
+//!
+//! ```text
+//!            try_demote (pool.spill)
+//!   Resident ────────────────────────▶ Spilled
+//!   bufs: Some                         bufs: None
+//!   store_id: 0 or id ◀──────────────  store_id: id
+//!            fault-in (Block::read)
+//! ```
+//!
+//! Blocks are immutable from birth, so demotion never loses writes: the
+//! payload on disk is bit-identical to the buffers it replaced, and a
+//! block that was persisted once is never re-serialized (fault-in leaves
+//! `store_id` set; a later demote just drops the buffers again).
+//!
+//! [`kvstore::KvStore`]: crate::kvstore::KvStore
 
 use std::fmt;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock, RwLockReadGuard};
+
+use crate::kvstore::KvStore;
 
 use super::BlockPool;
 
 /// The raw buffers behind one block: `rows × d_head` keys and values plus
-/// the per-row position and attention-mass side arrays.  Lives either
-/// inside a live [`Block`] or parked in the pool's free list.
+/// the per-row position and attention-mass side arrays.  Lives inside a
+/// resident [`Block`], parked in the pool's free list, or — for a spilled
+/// block — nowhere: the payload is a page-store record.
 #[derive(Default)]
 pub struct BlockBufs {
     pub k: Vec<f32>,
@@ -41,40 +63,41 @@ pub fn block_bytes(rows: usize, d: usize) -> usize {
         + rows * (std::mem::size_of::<i32>() + std::mem::size_of::<f32>())
 }
 
+struct BlockState {
+    /// `Some` while resident; `None` while the payload lives on disk.
+    bufs: Option<BlockBufs>,
+    /// Store id once persisted (0 = never persisted).  Sticky: survives
+    /// fault-in so a re-demote writes nothing.
+    store_id: u64,
+}
+
 /// One immutable, refcounted block of KV rows.
 ///
 /// Blocks are always created *full* (exactly `rows_per_block` rows) and
 /// never mutated afterwards — that immutability is what makes sharing a
 /// frozen prefix between a live cache and a detached session copy-on-write
-/// safe by construction.  Dropping the last reference returns the buffers
-/// to the owning pool's free list.
+/// safe by construction, and what makes disk demotion safe: re-reading a
+/// spilled payload is guaranteed bit-identical.  Dropping the last
+/// reference returns resident buffers to the owning pool's free list and
+/// releases the store's live claim on a persisted payload.
 pub struct Block {
-    /// `Some` until drop hands the buffers back to the pool.
-    bufs: Option<BlockBufs>,
+    state: RwLock<BlockState>,
     rows: usize,
     d: usize,
+    /// Pool-clock value of the last `read()`: the spill LRU signal.
+    tick: AtomicU64,
     pool: Arc<BlockPool>,
 }
 
-impl Block {
-    pub(super) fn new(bufs: BlockBufs, rows: usize, d: usize, pool: Arc<BlockPool>) -> Block {
-        debug_assert_eq!(bufs.k.len(), rows * d);
-        debug_assert_eq!(bufs.v.len(), rows * d);
-        debug_assert_eq!(bufs.pos.len(), rows);
-        debug_assert_eq!(bufs.attn.len(), rows);
-        Block { bufs: Some(bufs), rows, d, pool }
-    }
+/// Read guard over a block's payload.  Holding it pins the block
+/// resident: demotion uses `try_write` and skips blocks under read.
+pub struct BlockData<'a> {
+    guard: RwLockReadGuard<'a, BlockState>,
+}
 
+impl BlockData<'_> {
     fn bufs(&self) -> &BlockBufs {
-        self.bufs.as_ref().expect("block buffers live until drop")
-    }
-
-    pub fn rows(&self) -> usize {
-        self.rows
-    }
-
-    pub fn d(&self) -> usize {
-        self.d
+        self.guard.bufs.as_ref().expect("guard only issued over resident state")
     }
 
     /// Row-major keys, `rows * d`.
@@ -99,16 +122,129 @@ impl Block {
     pub fn attn(&self) -> &[f32] {
         &self.bufs().attn
     }
+}
+
+impl Block {
+    pub(super) fn new(bufs: BlockBufs, rows: usize, d: usize, pool: Arc<BlockPool>) -> Block {
+        debug_assert_eq!(bufs.k.len(), rows * d);
+        debug_assert_eq!(bufs.v.len(), rows * d);
+        debug_assert_eq!(bufs.pos.len(), rows);
+        debug_assert_eq!(bufs.attn.len(), rows);
+        Block {
+            state: RwLock::new(BlockState { bufs: Some(bufs), store_id: 0 }),
+            rows,
+            d,
+            tick: AtomicU64::new(0),
+            pool,
+        }
+    }
+
+    /// A handle over an already-persisted payload, starting spilled
+    /// (restart restore path: the payload stays on disk until read).
+    pub(super) fn restored(rows: usize, d: usize, store_id: u64, pool: Arc<BlockPool>) -> Block {
+        debug_assert!(store_id != 0);
+        Block {
+            state: RwLock::new(BlockState { bufs: None, store_id }),
+            rows,
+            d,
+            tick: AtomicU64::new(0),
+            pool,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
 
     pub fn payload_bytes(&self) -> usize {
         block_bytes(self.rows, self.d)
+    }
+
+    pub fn is_resident(&self) -> bool {
+        self.state.read().unwrap().bufs.is_some()
+    }
+
+    pub(super) fn last_tick(&self) -> u64 {
+        self.tick.load(Ordering::Relaxed)
+    }
+
+    /// Access the payload, faulting it in from the store when spilled.
+    /// Infallible by design — decode never fails mid-request on tiering —
+    /// so an unreadable store record (torn file, dead disk) panics.
+    pub fn read(&self) -> BlockData<'_> {
+        self.tick.store(self.pool.next_tick(), Ordering::Relaxed);
+        loop {
+            {
+                let guard = self.state.read().unwrap();
+                if guard.bufs.is_some() {
+                    return BlockData { guard };
+                }
+            }
+            self.fault_in();
+        }
+    }
+
+    fn fault_in(&self) {
+        let mut st = self.state.write().unwrap();
+        if st.bufs.is_some() {
+            return; // raced with another reader's fault-in
+        }
+        let bufs = self.pool.fault_block(st.store_id, self.rows, self.d);
+        st.bufs = Some(bufs);
+    }
+
+    /// Persist the payload (if not already on disk) and take one claim
+    /// for a descriptor that will reference it.
+    pub fn persist_into(&self, store: &KvStore) -> anyhow::Result<u64> {
+        let mut st = self.state.write().unwrap();
+        if st.store_id == 0 {
+            let bufs = st.bufs.as_ref().expect("an unpersisted block is resident");
+            st.store_id =
+                store.persist_block(self.rows, self.d, &bufs.k, &bufs.v, &bufs.pos, &bufs.attn)?;
+        }
+        store.retain_block(st.store_id);
+        Ok(st.store_id)
+    }
+
+    /// Demote to disk: persist (first time only), drop the buffers, move
+    /// the ledger bytes resident → spilled.  Skips — returning `None` —
+    /// when the block is already spilled, under an active read guard, or
+    /// the store write fails.
+    pub(super) fn try_demote(&self, store: &KvStore) -> Option<usize> {
+        let mut st = self.state.try_write().ok()?;
+        st.bufs.as_ref()?;
+        if st.store_id == 0 {
+            let bufs = st.bufs.as_ref().expect("checked above");
+            match store.persist_block(self.rows, self.d, &bufs.k, &bufs.v, &bufs.pos, &bufs.attn) {
+                Ok(id) => st.store_id = id,
+                Err(e) => {
+                    eprintln!("kvpool: spill write failed, keeping block resident: {e:#}");
+                    return None;
+                }
+            }
+        }
+        let bufs = st.bufs.take().expect("checked above");
+        // ledger moves under the state lock so a racing fault-in observes
+        // state + ledger atomically
+        self.pool.on_demoted(self.rows, self.d, bufs);
+        Some(self.payload_bytes())
     }
 }
 
 impl Drop for Block {
     fn drop(&mut self) {
-        if let Some(bufs) = self.bufs.take() {
-            self.pool.release(self.rows, self.d, bufs);
+        let st = self.state.get_mut().unwrap();
+        let store_id = st.store_id;
+        match st.bufs.take() {
+            Some(bufs) => self.pool.release(self.rows, self.d, bufs),
+            None => self.pool.release_spilled(self.rows, self.d),
+        }
+        if store_id != 0 {
+            self.pool.release_store_claim(store_id);
         }
     }
 }
@@ -119,6 +255,7 @@ impl fmt::Debug for Block {
             .field("rows", &self.rows)
             .field("d", &self.d)
             .field("bytes", &self.payload_bytes())
+            .field("resident", &self.is_resident())
             .finish()
     }
 }

@@ -35,10 +35,12 @@ pub mod stats;
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
 
-pub use block::{block_bytes, Block, BlockBufs};
+use crate::kvstore::KvStore;
+
+pub use block::{block_bytes, Block, BlockBufs, BlockData};
 pub use radix::{PrefixCache, PrefixConfig, PrefixStats};
 pub use stats::{PoolExhausted, PoolStats};
 
@@ -60,6 +62,11 @@ struct PoolInner {
     high_water: usize,
     resident_blocks: usize,
     free_blocks: usize,
+    /// Payload bytes of blocks demoted to the disk tier (their buffers
+    /// recycled).  Not resident: spilled bytes never count against the
+    /// budget — that is the whole point of demotion.
+    spilled_bytes: usize,
+    spilled_blocks: usize,
 }
 
 impl PoolInner {
@@ -85,7 +92,31 @@ pub struct BlockPool {
     /// Bytes reclaimable by shedding every prefix-cache snapshot (the
     /// cheapest sheddable class; published by [`radix::PrefixCache`]).
     prefix_sheddable: AtomicUsize,
+    /// Logical clock stamped onto blocks on every read: the spill LRU.
+    clock: AtomicU64,
+    /// Bound disk tier, when `--store-dir` is in play: spill target and
+    /// fault-in source.
+    store: Mutex<Option<Arc<KvStore>>>,
+    /// Every live block (weak), so `spill` can find demotion candidates.
+    /// Compacted amortized-O(1) as dead entries accumulate.
+    registry: Mutex<Registry>,
     inner: Mutex<PoolInner>,
+}
+
+#[derive(Default)]
+struct Registry {
+    items: Vec<Weak<Block>>,
+    compact_at: usize,
+}
+
+impl Registry {
+    fn push(&mut self, block: &Arc<Block>) {
+        if self.items.len() >= self.compact_at.max(64) {
+            self.items.retain(|w| w.strong_count() > 0);
+            self.compact_at = self.items.len() * 2;
+        }
+        self.items.push(Arc::downgrade(block));
+    }
 }
 
 impl BlockPool {
@@ -100,6 +131,9 @@ impl BlockPool {
             max_bytes,
             sheddable: AtomicUsize::new(0),
             prefix_sheddable: AtomicUsize::new(0),
+            clock: AtomicU64::new(0),
+            store: Mutex::new(None),
+            registry: Mutex::new(Registry::default()),
             inner: Mutex::new(PoolInner::default()),
         })
     }
@@ -127,6 +161,8 @@ impl BlockPool {
             high_water_bytes: inner.high_water,
             resident_blocks: inner.resident_blocks,
             free_blocks: inner.free_blocks,
+            spilled_bytes: inner.spilled_bytes,
+            spilled_blocks: inner.spilled_blocks,
             budget: self.max_bytes,
         }
     }
@@ -192,7 +228,33 @@ impl BlockPool {
         bufs.v.extend_from_slice(v);
         bufs.pos.extend_from_slice(pos);
         bufs.attn.extend_from_slice(attn);
-        Ok(Arc::new(Block::new(bufs, rows, d, Arc::clone(pool))))
+        let block = Arc::new(Block::new(bufs, rows, d, Arc::clone(pool)));
+        this.registry.lock().unwrap().push(&block);
+        Ok(block)
+    }
+
+    /// Adopt a block whose payload already lives in the bound store (the
+    /// restart restore path).  Starts spilled — zero resident bytes — and
+    /// faults in lazily on first read; takes the live handle's claim on
+    /// the store record.
+    pub fn adopt_spilled(
+        pool: &Arc<BlockPool>,
+        store_id: u64,
+        rows: usize,
+        d: usize,
+    ) -> Arc<Block> {
+        let bytes = block_bytes(rows, d);
+        {
+            let mut inner = pool.inner.lock().unwrap();
+            inner.spilled_bytes += bytes;
+            inner.spilled_blocks += 1;
+        }
+        if let Some(store) = pool.store() {
+            store.retain_block(store_id);
+        }
+        let block = Arc::new(Block::restored(rows, d, store_id, Arc::clone(pool)));
+        pool.registry.lock().unwrap().push(&block);
+        block
     }
 
     /// Return a dropped block's buffers to the free list (called from
@@ -205,6 +267,141 @@ impl BlockPool {
         inner.free_bytes += bytes;
         inner.free_blocks += 1;
         inner.free.entry(d).or_default().push(bufs);
+    }
+
+    // -- disk tier (spill / fault) ---------------------------------------------
+
+    /// Bind the disk tier.  Done once at router start; from then on
+    /// `spill` can demote cold blocks and spilled blocks fault back in
+    /// transparently on read.
+    pub fn bind_store(&self, store: Arc<KvStore>) {
+        *self.store.lock().unwrap() = Some(store);
+    }
+
+    pub fn store(&self) -> Option<Arc<KvStore>> {
+        self.store.lock().unwrap().clone()
+    }
+
+    pub fn has_store(&self) -> bool {
+        self.store.lock().unwrap().is_some()
+    }
+
+    /// Next value of the block-read clock (the spill LRU ordering).
+    pub(crate) fn next_tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Demote cold blocks to the disk tier until at least `target` bytes
+    /// have left residency or no candidate remains.  Returns
+    /// `(blocks_demoted, bytes_demoted)`.  Candidates are every live
+    /// resident block, coldest first (least-recently-read); blocks under
+    /// an active read guard are skipped, not waited on.  A no-op without
+    /// a bound store.
+    pub fn spill(&self, target: usize) -> (usize, usize) {
+        let Some(store) = self.store() else {
+            return (0, 0);
+        };
+        if target == 0 {
+            return (0, 0);
+        }
+        let mut candidates: Vec<(u64, Arc<Block>)> = Vec::new();
+        {
+            let mut reg = self.registry.lock().unwrap();
+            reg.items.retain(|w| w.strong_count() > 0);
+            for w in reg.items.iter() {
+                if let Some(b) = w.upgrade() {
+                    if b.is_resident() {
+                        candidates.push((b.last_tick(), b));
+                    }
+                }
+            }
+        }
+        candidates.sort_by_key(|(tick, _)| *tick);
+        let mut blocks = 0usize;
+        let mut bytes = 0usize;
+        for (_, b) in candidates {
+            if bytes >= target {
+                break;
+            }
+            if let Some(n) = b.try_demote(&store) {
+                blocks += 1;
+                bytes += n;
+            }
+        }
+        (blocks, bytes)
+    }
+
+    /// Ledger half of a demotion (called by `Block::try_demote` with the
+    /// block's state lock held, so residency and accounting move
+    /// together): bytes leave the resident tier for the spilled tier and
+    /// the buffers are recycled.
+    pub(crate) fn on_demoted(&self, rows: usize, d: usize, bufs: BlockBufs) {
+        let bytes = block_bytes(rows, d);
+        let mut inner = self.inner.lock().unwrap();
+        inner.block_bytes -= bytes;
+        inner.resident_blocks -= 1;
+        inner.spilled_bytes += bytes;
+        inner.spilled_blocks += 1;
+        inner.free_bytes += bytes;
+        inner.free_blocks += 1;
+        inner.free.entry(d).or_default().push(bufs);
+    }
+
+    /// Fault a spilled payload back in: read the store record, move the
+    /// ledger bytes spilled → resident, and fill (recycled) buffers.
+    ///
+    /// Deliberately *not* budget-checked: fault-in happens on the decode
+    /// path (`window()` walking a re-attached cache), which must never
+    /// fail on a pool limit; the next admission sees the grown residency
+    /// and sheds or spills accordingly.  Panics when the bound store
+    /// cannot produce the payload — that is a torn store file, not a
+    /// recoverable serving condition.
+    pub(crate) fn fault_block(&self, store_id: u64, rows: usize, d: usize) -> BlockBufs {
+        let store = self.store().expect("faulting a spilled block requires its bound store");
+        let payload = store
+            .read_block(store_id)
+            .unwrap_or_else(|e| panic!("kvpool: fault-in of block {store_id} failed: {e:#}"));
+        assert_eq!((payload.rows, payload.d), (rows, d), "store payload dims drifted");
+        let bytes = block_bytes(rows, d);
+        let mut bufs = {
+            let mut inner = self.inner.lock().unwrap();
+            let bufs = match inner.free.get_mut(&d).and_then(|fl| fl.pop()) {
+                Some(b) => {
+                    inner.free_blocks -= 1;
+                    inner.free_bytes -= bytes;
+                    b
+                }
+                None => BlockBufs::with_capacity(rows, d),
+            };
+            inner.spilled_bytes -= bytes;
+            inner.spilled_blocks -= 1;
+            inner.block_bytes += bytes;
+            inner.resident_blocks += 1;
+            inner.bump_high_water();
+            bufs
+        };
+        bufs.clear();
+        bufs.k.extend_from_slice(&payload.k);
+        bufs.v.extend_from_slice(&payload.v);
+        bufs.pos.extend_from_slice(&payload.pos);
+        bufs.attn.extend_from_slice(&payload.attn);
+        bufs
+    }
+
+    /// A spilled block's last handle dropped: its bytes leave the spilled
+    /// tier (the store claim is released separately).
+    pub(crate) fn release_spilled(&self, rows: usize, d: usize) {
+        let bytes = block_bytes(rows, d);
+        let mut inner = self.inner.lock().unwrap();
+        inner.spilled_bytes -= bytes;
+        inner.spilled_blocks -= 1;
+    }
+
+    /// Drop the live handle's claim on a persisted payload.
+    pub(crate) fn release_store_claim(&self, store_id: u64) {
+        if let Some(store) = self.store() {
+            store.release_block(store_id);
+        }
     }
 
     /// Swap one gauge's registered loose bytes (`old` out, `new` in).
@@ -251,15 +448,23 @@ impl BlockPool {
     }
 
     /// True when a budget is set and the pool would stay at or over it
-    /// even if every sheddable byte — prefix-cache snapshots and detached
-    /// sessions, in that order — were reclaimed: the router's cheap
-    /// reject-before-enqueue signal.  Unbudgeted pools are never under
-    /// pressure.
+    /// even if every reclaimable byte were taken back: the router's cheap
+    /// reject-before-enqueue signal.  Reclaimable covers the sheddable
+    /// classes (prefix-cache snapshots, then detached sessions) and —
+    /// with a disk tier bound — every frozen block byte, since spilling
+    /// demotes those without destroying state.  The two sets overlap
+    /// (sheddable caches hold blocks), so their *maximum* is used: a
+    /// valid lower bound on the union that never double-counts.
+    /// Unbudgeted pools are never under pressure.
     pub fn hard_pressure(&self) -> bool {
         match self.max_bytes {
             None => false,
             Some(budget) => {
-                self.resident_bytes().saturating_sub(self.sheddable_bytes()) >= budget
+                let mut reclaimable = self.sheddable_bytes();
+                if self.has_store() {
+                    reclaimable = reclaimable.max(self.inner.lock().unwrap().block_bytes);
+                }
+                self.resident_bytes().saturating_sub(reclaimable) >= budget
             }
         }
     }
@@ -351,8 +556,8 @@ mod tests {
         assert_eq!(s.resident_blocks, 2);
         assert_eq!(s.block_bytes, 2 * bytes);
         assert_eq!(s.high_water_bytes, 2 * bytes);
-        assert_eq!(b1.k(), &k[..]);
-        assert_eq!(b1.pos(), &pos[..]);
+        assert_eq!(b1.read().k(), &k[..]);
+        assert_eq!(b1.read().pos(), &pos[..]);
         drop(b1);
         drop(b2);
         let s = pool.stats();
@@ -376,7 +581,7 @@ mod tests {
         assert_eq!(pool.stats().resident_blocks, 1, "sharing is a refcount bump");
         drop(a);
         assert_eq!(pool.stats().resident_blocks, 1);
-        assert_eq!(b.k(), &k[..]);
+        assert_eq!(b.read().k(), &k[..]);
         drop(b);
         assert_eq!(pool.stats().resident_blocks, 0);
     }
@@ -461,5 +666,89 @@ mod tests {
     fn row_bytes_counts_side_arrays() {
         // 2 layers x 2 heads x (2*8 floats + pos + attn) = 4 * (64 + 8)
         assert_eq!(row_bytes(2, 2, 8), 4 * (64 + 8));
+    }
+
+    #[test]
+    fn spill_and_fault_round_trip_is_ledger_exact_and_bit_identical() {
+        let dir = crate::kvstore::testutil::TempDir::new("pool-spill");
+        let store = Arc::new(KvStore::open(dir.path()).unwrap());
+        let pool = BlockPool::unbounded(4);
+        pool.bind_store(Arc::clone(&store));
+        let d = 3;
+        let (k, v, pos, attn) = filled(4, d);
+        let bytes = block_bytes(4, d);
+        let b1 = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap();
+        let b2 = BlockPool::alloc_block(&pool, d, &k, &v, &pos, &attn, 0).unwrap();
+        let _ = b2.read(); // stamp b2 hotter than b1
+        let (nblocks, nbytes) = pool.spill(1);
+        assert_eq!((nblocks, nbytes), (1, bytes), "coldest block demotes first");
+        assert!(!b1.is_resident());
+        assert!(b2.is_resident());
+        let s = pool.stats();
+        assert_eq!(s.block_bytes, bytes);
+        assert_eq!((s.spilled_bytes, s.spilled_blocks), (bytes, 1));
+        assert_eq!(s.resident_blocks, 1);
+        assert_eq!(s.free_blocks, 1, "demoted buffers recycle to the free list");
+        // fault back in on read: bit-identical payload, ledger moves back
+        assert_eq!(b1.read().k(), &k[..]);
+        assert_eq!(b1.read().v(), &v[..]);
+        assert_eq!(b1.read().pos(), &pos[..]);
+        assert!(b1.is_resident());
+        let s = pool.stats();
+        assert_eq!((s.spilled_bytes, s.spilled_blocks), (0, 0));
+        assert_eq!(s.block_bytes, 2 * bytes);
+        drop(b1);
+        drop(b2);
+        let s = pool.stats();
+        assert_eq!(s.block_bytes, 0);
+        assert_eq!(s.spilled_bytes, 0);
+        assert_eq!((s.resident_blocks, s.spilled_blocks), (0, 0));
+        let (_, _, blocks) = store.inventory_counts();
+        assert_eq!(blocks, 0, "the last handle released the store record");
+    }
+
+    #[test]
+    fn active_read_guard_pins_block_resident() {
+        let dir = crate::kvstore::testutil::TempDir::new("pool-pin");
+        let store = Arc::new(KvStore::open(dir.path()).unwrap());
+        let pool = BlockPool::unbounded(2);
+        pool.bind_store(store);
+        let (k, v, pos, attn) = filled(2, 2);
+        let b = BlockPool::alloc_block(&pool, 2, &k, &v, &pos, &attn, 0).unwrap();
+        let guard = b.read();
+        assert_eq!(pool.spill(usize::MAX), (0, 0), "a read guard pins the block");
+        assert_eq!(guard.k(), &k[..]);
+        drop(guard);
+        let (nblocks, _) = pool.spill(usize::MAX);
+        assert_eq!(nblocks, 1);
+        // a re-demote after fault-in writes nothing new: same store record
+        assert_eq!(b.read().k(), &k[..]);
+        assert_eq!(pool.spill(usize::MAX).0, 1);
+        assert!(!b.is_resident());
+    }
+
+    #[test]
+    fn adopt_spilled_restores_a_persisted_block() {
+        let dir = crate::kvstore::testutil::TempDir::new("pool-adopt");
+        let store = Arc::new(KvStore::open(dir.path()).unwrap());
+        let (k, v, pos, attn) = filled(4, 3);
+        let id = {
+            let pool = BlockPool::unbounded(4);
+            pool.bind_store(Arc::clone(&store));
+            let b = BlockPool::alloc_block(&pool, 3, &k, &v, &pos, &attn, 0).unwrap();
+            // a descriptor-style claim keeps the payload after the handle dies
+            b.persist_into(&store).unwrap()
+        };
+        let pool = BlockPool::unbounded(4);
+        pool.bind_store(Arc::clone(&store));
+        let b = BlockPool::adopt_spilled(&pool, id, 4, 3);
+        assert!(!b.is_resident(), "restored blocks start on the disk tier");
+        let s = pool.stats();
+        assert_eq!((s.spilled_blocks, s.block_bytes), (1, 0));
+        assert_eq!(b.read().k(), &k[..], "lazy fault-in yields the original payload");
+        store.release_block(id); // the descriptor claim goes away
+        drop(b);
+        let (_, _, blocks) = store.inventory_counts();
+        assert_eq!(blocks, 0);
     }
 }

@@ -29,8 +29,9 @@
 //!   is what lets compression compose with prefix caching at all.
 //!
 //! Entries are the *cheapest* sheddable class: the coordinator evicts tree
-//! leaves before detached sessions under pool pressure (three-tier order:
-//! prefix entries, then sessions, then typed rejection), and the tree
+//! leaves before detached sessions under pool pressure (reclaim order:
+//! disk spill when a store is bound, then prefix entries, then sessions,
+//! then typed rejection), and the tree
 //! publishes its resident bytes to the pool's prefix-sheddable gauge so
 //! the router's `hard_pressure` pre-queue check never rejects on bytes a
 //! shed could reclaim.
@@ -43,8 +44,12 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use anyhow::{bail, Result};
+
 use crate::config::{CompressionConfig, PolicyKind, ScorerBackend};
 use crate::kvcache::KvCache;
+use crate::kvstore::KvStore;
+use crate::util::json::{self, Json};
 
 use super::BlockPool;
 
@@ -107,6 +112,10 @@ struct Entry {
     cache: KvCache,
     bytes: usize,
     last_used: u64,
+    /// Journal id of this snapshot's descriptor in the bound store
+    /// (0 = not journaled).  Eviction must remove the record, or replay
+    /// would resurrect an entry the tree already let go of.
+    pid: u64,
 }
 
 struct Edge {
@@ -138,6 +147,9 @@ struct Inner {
     entries: usize,
     bytes: usize,
     c: Counters,
+    /// When bound, inserts persist their snapshot and evictions journal
+    /// its removal (see [`PrefixCache::bind_journal`]).
+    journal: Option<Arc<KvStore>>,
 }
 
 /// The per-engine prefix cache.  Interior mutex: one engine lives on one
@@ -150,6 +162,42 @@ pub struct PrefixCache {
 
 fn common_len(a: &[i32], b: &[i32]) -> usize {
     a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+/// Fingerprint → descriptor JSON.  `ratio` travels as its f64 value (the
+/// shortest-round-trip `Display` is bit-exact through parse); `seed` as a
+/// decimal string, since f64 cannot carry every u64 exactly.
+fn fp_to_json(fp: &Fingerprint) -> Json {
+    json::obj(vec![
+        ("policy", json::s(fp.policy.name())),
+        ("sink", json::n(fp.sink as f64)),
+        ("lag", json::n(fp.lag as f64)),
+        ("ratio", json::n(f64::from_bits(fp.ratio_bits))),
+        ("skip", json::n(fp.skip_layers as f64)),
+        (
+            "scorer",
+            json::s(match fp.scorer {
+                ScorerBackend::Rust => "rust",
+                ScorerBackend::Xla => "xla",
+            }),
+        ),
+        ("seed", json::s(fp.seed.to_string())),
+    ])
+}
+
+fn fp_from_json(j: &Json) -> Result<Fingerprint> {
+    Ok(Fingerprint {
+        policy: PolicyKind::parse(j.get("policy")?.as_str()?)?,
+        sink: j.get("sink")?.as_usize()?,
+        lag: j.get("lag")?.as_usize()?,
+        ratio_bits: j.get("ratio")?.as_f64()?.to_bits(),
+        skip_layers: j.get("skip")?.as_usize()?,
+        scorer: match j.get("scorer")?.as_str()? {
+            "xla" => ScorerBackend::Xla,
+            _ => ScorerBackend::Rust,
+        },
+        seed: j.get("seed")?.as_str()?.parse()?,
+    })
 }
 
 /// Returns the entry previously stored at exactly this key, if any.
@@ -273,6 +321,57 @@ impl PrefixCache {
         &self.cfg
     }
 
+    /// Bind the durability journal: from now on inserts persist their
+    /// snapshot (descriptor = cache + key ids + fingerprint) and every
+    /// eviction — cap, supersede, pressure shed — journals its removal.
+    pub fn bind_journal(&self, store: Arc<KvStore>) {
+        self.inner.lock().unwrap().journal = Some(store);
+    }
+
+    /// Persist + journal one snapshot; returns its journal id (0 when no
+    /// journal is bound or the write failed — serving continues either way).
+    fn journal_insert(
+        journal: &Option<Arc<KvStore>>,
+        fp: &Fingerprint,
+        ids: &[i32],
+        cache: &KvCache,
+    ) -> u64 {
+        let Some(store) = journal else { return 0 };
+        match cache.persist(store) {
+            Ok(mut desc) => {
+                if let Json::Obj(map) = &mut desc {
+                    map.insert(
+                        "ids".to_string(),
+                        json::arr(ids.iter().map(|&t| json::n(t as f64)).collect()),
+                    );
+                    map.insert("fp".to_string(), fp_to_json(fp));
+                }
+                match store.journal_prefix_put(desc) {
+                    Ok(pid) => pid,
+                    Err(e) => {
+                        eprintln!("prefix-cache: failed to journal snapshot: {e:#}");
+                        0
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("prefix-cache: failed to persist snapshot: {e:#}");
+                0
+            }
+        }
+    }
+
+    fn journal_remove_pid(journal: &Option<Arc<KvStore>>, pid: u64) {
+        if pid == 0 {
+            return;
+        }
+        if let Some(store) = journal {
+            if let Err(e) = store.journal_prefix_remove(pid) {
+                eprintln!("prefix-cache: failed to journal snapshot removal: {e:#}");
+            }
+        }
+    }
+
     /// Whether this compression config may use the tree at all.
     /// Attention-fed policies are path-dependent and always bypass.
     pub fn cacheable(&self, cfg: &CompressionConfig) -> bool {
@@ -370,10 +469,14 @@ impl PrefixCache {
         }
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
-        let entry = Entry { cache: snapshot, bytes, last_used: inner.tick };
+        let pid = Self::journal_insert(&inner.journal, &fp, ids, &snapshot);
+        let entry = Entry { cache: snapshot, bytes, last_used: inner.tick, pid };
         let replaced = insert_rec(inner.trees.entry(fp).or_default(), ids, entry);
         match replaced {
-            Some(old) => inner.bytes = inner.bytes - old.bytes + bytes,
+            Some(old) => {
+                Self::journal_remove_pid(&inner.journal, old.pid);
+                inner.bytes = inner.bytes - old.bytes + bytes;
+            }
             None => {
                 inner.entries += 1;
                 inner.bytes += bytes;
@@ -388,6 +491,47 @@ impl PrefixCache {
             }
         }
         self.publish(&inner);
+    }
+
+    /// Insert a snapshot rebuilt from the journal at boot.  The key ids
+    /// and fingerprint come from the descriptor itself; `pid` is the
+    /// existing journal id (no re-journal, no freeze pass — the restored
+    /// cache is already block-backed).  Caps still apply: an over-cap
+    /// restore sheds LRU entries, journaling their removals.
+    pub fn restore(&self, desc: &Json, cache: KvCache, pid: u64) -> Result<()> {
+        let fp = fp_from_json(desc.get("fp")?)?;
+        let ids_json = desc.get("ids")?.as_arr()?;
+        let mut ids = Vec::with_capacity(ids_json.len());
+        for j in ids_json {
+            ids.push(j.as_i64()? as i32);
+        }
+        if ids.is_empty() {
+            bail!("restored snapshot has an empty key");
+        }
+        let bytes = cache.exact_bytes();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let entry = Entry { cache, bytes, last_used: inner.tick, pid };
+        let replaced = insert_rec(inner.trees.entry(fp).or_default(), &ids, entry);
+        match replaced {
+            Some(old) => {
+                Self::journal_remove_pid(&inner.journal, old.pid);
+                inner.bytes = inner.bytes - old.bytes + bytes;
+            }
+            None => {
+                inner.entries += 1;
+                inner.bytes += bytes;
+            }
+        }
+        while inner.entries > self.cfg.max_entries
+            || (self.cfg.max_bytes > 0 && inner.bytes > self.cfg.max_bytes)
+        {
+            if Self::shed_lru_locked(&mut inner).is_none() {
+                break;
+            }
+        }
+        self.publish(&inner);
+        Ok(())
     }
 
     /// Evict the least-recently-used snapshot (memory-pressure shedding).
@@ -417,6 +561,7 @@ impl PrefixCache {
         }
         let (_, fp, path) = best?;
         let removed = remove_rec(inner.trees.get_mut(&fp)?, &path)?;
+        Self::journal_remove_pid(&inner.journal, removed.pid);
         let empty = inner
             .trees
             .get(&fp)
@@ -647,6 +792,58 @@ mod tests {
         pc2.insert(&skip, 0, &key, &c);
         let (att2, _) = pc2.lookup(&skip, 0, &[key.clone(), vec![7]].concat()).unwrap();
         assert!(att2.frozen_blocks() > 0, "skip-layer snapshot must freeze its tail");
+    }
+
+    /// Journal round trip: inserts journal descriptors, supersede and
+    /// shed journal removals, and a restored snapshot serves lookups
+    /// bit-identically under the same fingerprint.
+    #[test]
+    fn journaled_snapshots_survive_restart_and_evictions_do_not() {
+        use crate::kvstore::{testutil::TempDir, KvStore};
+        let dir = TempDir::new("radix-journal");
+        let cfg = lag_cfg();
+        let key: Vec<i32> = (0..12).collect();
+        {
+            let kv = Arc::new(KvStore::open(dir.path()).unwrap());
+            let (pool, pc) = pc(16, 0);
+            pool.bind_store(Arc::clone(&kv));
+            pc.bind_journal(Arc::clone(&kv));
+            pc.insert(&cfg, 0, &key, &cache_with_rows(&pool, 12));
+            assert_eq!(kv.inventory_counts().1, 1, "insert journals the snapshot");
+            // refreshing the same key supersedes, never leaks
+            pc.insert(&cfg, 0, &key, &cache_with_rows(&pool, 12));
+            assert_eq!(kv.inventory_counts().1, 1);
+            // a second key, then shed it: its record must go too
+            pc.insert(&cfg, 0, &[9, 9], &cache_with_rows(&pool, 2));
+            assert_eq!(kv.inventory_counts().1, 2);
+            let probe = [key.clone(), vec![55]].concat();
+            assert!(pc.lookup(&cfg, 0, &probe).is_some(), "refresh the long key's LRU stamp");
+            pc.shed_lru().unwrap(); // sheds [9,9]
+            assert_eq!(kv.inventory_counts().1, 1, "shed journaled its removal");
+            kv.checkpoint().unwrap();
+        }
+        let kv = Arc::new(KvStore::open(dir.path()).unwrap());
+        let (pool2, pc2) = pc(16, 0);
+        pool2.bind_store(Arc::clone(&kv));
+        pc2.bind_journal(Arc::clone(&kv));
+        let mut handles = std::collections::HashMap::new();
+        let boot = kv.boot_prefixes();
+        assert_eq!(boot.len(), 1, "only the surviving snapshot replays");
+        for (pid, desc) in boot {
+            let cache = KvCache::restore(&pool2, &kv, &desc, &mut handles).unwrap();
+            pc2.restore(&desc, cache, pid).unwrap();
+        }
+        assert_eq!(pc2.len(), 1);
+        let (attached, depth) = pc2.lookup(&cfg, 0, &[key.clone(), vec![99]].concat()).unwrap();
+        assert_eq!(depth, 12);
+        assert_eq!(attached.appended, 12);
+        // restored snapshot reads back the original payload
+        let expect = cache_with_rows(&BlockPool::unbounded(4), 12);
+        assert_eq!(attached.head_k(0, 0), expect.head_k(0, 0));
+        // shedding the restored entry unwinds the journal completely
+        drop(attached);
+        pc2.shed_lru().unwrap();
+        assert_eq!(kv.inventory_counts(), (0, 0, 0));
     }
 
     #[test]

@@ -26,6 +26,11 @@ pub struct PoolStats {
     pub resident_blocks: usize,
     /// Count of recycled buffers in the free list.
     pub free_blocks: usize,
+    /// Payload bytes demoted to the disk tier (`kvstore`): referenced by
+    /// live handles but not resident, and not counted against the budget.
+    pub spilled_bytes: usize,
+    /// Count of live blocks currently on the disk tier.
+    pub spilled_blocks: usize,
     /// The byte budget, when the pool is budgeted.
     pub budget: Option<usize>,
 }
@@ -87,9 +92,11 @@ mod tests {
             high_water_bytes: 1000,
             resident_blocks: 3,
             free_blocks: 1,
+            spilled_bytes: 4096,
+            spilled_blocks: 2,
             budget: Some(2000),
         };
-        assert_eq!(s.resident_bytes(), 800);
+        assert_eq!(s.resident_bytes(), 800, "spilled bytes are not resident");
         assert!((s.fragmentation() - 0.2).abs() < 1e-12);
         let empty = PoolStats {
             block_bytes: 0,
@@ -98,6 +105,8 @@ mod tests {
             high_water_bytes: 0,
             resident_blocks: 0,
             free_blocks: 0,
+            spilled_bytes: 0,
+            spilled_blocks: 0,
             budget: None,
         };
         assert_eq!(empty.fragmentation(), 0.0);

@@ -1,0 +1,209 @@
+//! Buffer pool: a fixed set of in-memory frames caching store pages.
+//!
+//! Classic design — page table, pin counts, dirty bits, LRU write-back —
+//! sized small (64 frames = 512 KiB) because the store sits under a
+//! mutex-guarded facade and every heap operation touches only a handful
+//! of pages.  Pins are held for the duration of one heap call, never
+//! across calls, so eviction can always find a victim.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::disk::DiskManager;
+use super::page::{Page, PageKind};
+
+pub const DEFAULT_FRAMES: usize = 64;
+
+struct Frame {
+    page: Page,
+    page_id: u32,
+    pin: u32,
+    dirty: bool,
+    tick: u64,
+    valid: bool,
+}
+
+pub struct BufferPool {
+    disk: DiskManager,
+    frames: Vec<Frame>,
+    /// page_id -> frame index, for every valid frame.
+    table: HashMap<u32, usize>,
+    clock: u64,
+}
+
+impl BufferPool {
+    pub fn new(disk: DiskManager, capacity: usize) -> BufferPool {
+        assert!(capacity > 0, "buffer pool needs at least one frame");
+        let frames = (0..capacity)
+            .map(|_| Frame { page: Page::new(), page_id: 0, pin: 0, dirty: false, tick: 0, valid: false })
+            .collect();
+        BufferPool { disk, frames, table: HashMap::new(), clock: 0 }
+    }
+
+    pub fn disk(&self) -> &DiskManager {
+        &self.disk
+    }
+
+    fn touch(&mut self, frame: usize) {
+        self.clock += 1;
+        self.frames[frame].tick = self.clock;
+    }
+
+    /// Pick a frame for a new resident page: an invalid frame if one
+    /// exists, else the least-recently-used unpinned frame (flushing it
+    /// first when dirty).
+    fn victim(&mut self) -> Result<usize> {
+        if let Some(i) = self.frames.iter().position(|f| !f.valid) {
+            return Ok(i);
+        }
+        let mut best: Option<usize> = None;
+        for (i, f) in self.frames.iter().enumerate() {
+            if f.pin == 0 && best.map_or(true, |b| f.tick < self.frames[b].tick) {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else {
+            bail!("buffer pool exhausted: every frame is pinned");
+        };
+        if self.frames[i].dirty {
+            self.disk.write_page(self.frames[i].page_id, &self.frames[i].page)?;
+            self.frames[i].dirty = false;
+        }
+        self.table.remove(&self.frames[i].page_id);
+        self.frames[i].valid = false;
+        Ok(i)
+    }
+
+    /// Load (or find) a page and pin it; returns the frame index.
+    pub fn fetch(&mut self, page_id: u32) -> Result<usize> {
+        if let Some(&i) = self.table.get(&page_id) {
+            self.frames[i].pin += 1;
+            self.touch(i);
+            return Ok(i);
+        }
+        let i = self.victim()?;
+        self.disk.read_page(page_id, &mut self.frames[i].page)?;
+        self.frames[i].page_id = page_id;
+        self.frames[i].pin = 1;
+        self.frames[i].dirty = false;
+        self.frames[i].valid = true;
+        self.table.insert(page_id, i);
+        self.touch(i);
+        Ok(i)
+    }
+
+    /// Allocate a fresh page on disk, initialize it in a pinned frame.
+    pub fn create(&mut self, kind: PageKind) -> Result<(u32, usize)> {
+        let page_id = self.disk.allocate_page()?;
+        let i = self.victim()?;
+        self.frames[i].page.init(kind, page_id);
+        self.frames[i].page_id = page_id;
+        self.frames[i].pin = 1;
+        self.frames[i].dirty = true;
+        self.frames[i].valid = true;
+        self.table.insert(page_id, i);
+        self.touch(i);
+        Ok((page_id, i))
+    }
+
+    pub fn page(&self, frame: usize) -> &Page {
+        debug_assert!(self.frames[frame].valid);
+        &self.frames[frame].page
+    }
+
+    /// Mutable access marks the frame dirty.
+    pub fn page_mut(&mut self, frame: usize) -> &mut Page {
+        debug_assert!(self.frames[frame].valid);
+        self.frames[frame].dirty = true;
+        &mut self.frames[frame].page
+    }
+
+    pub fn unpin(&mut self, frame: usize) {
+        debug_assert!(self.frames[frame].pin > 0, "unpin without a pin");
+        self.frames[frame].pin = self.frames[frame].pin.saturating_sub(1);
+    }
+
+    /// Drop a page from the cache (if resident) and return it to the
+    /// disk free list.  The page must not be pinned.
+    pub fn free_page(&mut self, page_id: u32) -> Result<()> {
+        if let Some(i) = self.table.remove(&page_id) {
+            debug_assert_eq!(self.frames[i].pin, 0, "freeing a pinned page");
+            self.frames[i].valid = false;
+            self.frames[i].dirty = false;
+        }
+        self.disk.free_page(page_id)
+    }
+
+    /// Write every dirty frame back and sync the file.
+    pub fn flush_all(&mut self) -> Result<()> {
+        for i in 0..self.frames.len() {
+            if self.frames[i].valid && self.frames[i].dirty {
+                self.disk.write_page(self.frames[i].page_id, &self.frames[i].page)?;
+                self.frames[i].dirty = false;
+            }
+        }
+        self.disk.sync()
+    }
+
+    pub fn num_pages(&self) -> u32 {
+        self.disk.num_pages()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::TempDir;
+    use super::*;
+
+    fn pool(dir: &TempDir, frames: usize) -> BufferPool {
+        let dm = DiskManager::open(&dir.path().join("store.pages")).unwrap();
+        BufferPool::new(dm, frames)
+    }
+
+    #[test]
+    fn create_fetch_and_write_back() {
+        let dir = TempDir::new("buf");
+        let mut bp = pool(&dir, 4);
+        let (id, f) = bp.create(PageKind::Slotted).unwrap();
+        let slot = bp.page_mut(f).insert(b"cached").unwrap();
+        bp.unpin(f);
+        bp.flush_all().unwrap();
+        // fetch through the cache and through a cold pool
+        let f2 = bp.fetch(id).unwrap();
+        assert_eq!(bp.page(f2).read_slot(slot).unwrap(), b"cached");
+        bp.unpin(f2);
+        drop(bp);
+        let mut cold = pool(&dir, 4);
+        let f3 = cold.fetch(id).unwrap();
+        assert_eq!(cold.page(f3).read_slot(slot).unwrap(), b"cached");
+        cold.unpin(f3);
+    }
+
+    #[test]
+    fn lru_evicts_unpinned_and_flushes_dirty() {
+        let dir = TempDir::new("buf-lru");
+        let mut bp = pool(&dir, 2);
+        let (a, fa) = bp.create(PageKind::Slotted).unwrap();
+        let sa = bp.page_mut(fa).insert(b"aaaa").unwrap();
+        bp.unpin(fa);
+        let (_b, fb) = bp.create(PageKind::Slotted).unwrap();
+        bp.unpin(fb);
+        // a third resident page must evict page `a` (the LRU), writing it back
+        let (_c, fc) = bp.create(PageKind::Slotted).unwrap();
+        bp.unpin(fc);
+        let fa2 = bp.fetch(a).unwrap();
+        assert_eq!(bp.page(fa2).read_slot(sa).unwrap(), b"aaaa", "dirty eviction wrote back");
+        bp.unpin(fa2);
+    }
+
+    #[test]
+    fn all_pinned_is_a_typed_error() {
+        let dir = TempDir::new("buf-pin");
+        let mut bp = pool(&dir, 1);
+        let (_a, fa) = bp.create(PageKind::Slotted).unwrap();
+        assert!(bp.create(PageKind::Slotted).is_err(), "no victim while every frame is pinned");
+        bp.unpin(fa);
+        assert!(bp.create(PageKind::Slotted).is_ok());
+    }
+}

@@ -1,0 +1,298 @@
+//! Record heap: variable-length byte records over the buffer pool.
+//!
+//! A record's *head fragment* lives in a slot of a [`PageKind::Slotted`]
+//! page; payloads larger than the fragment spill across a chain of
+//! [`PageKind::Overflow`] pages linked by the page header's `next`
+//! pointer.  Head fragment format:
+//!
+//! ```text
+//! [total_len u32][first_overflow u32][fragment bytes...]
+//! ```
+//!
+//! A [`RecordId`] is `(page, slot)` of the head fragment — stable for the
+//! record's lifetime because slot deletion compacts payloads without
+//! renumbering slots.  Encoded as `page << 16 | slot` where it crosses a
+//! serialization boundary (WAL records, cache descriptors).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::buffer::BufferPool;
+use super::page::{PageKind, OVERFLOW_CAP, PAGE_SIZE};
+
+/// Head-fragment prefix: total_len + first_overflow.
+const HEAD_PREFIX: usize = 8;
+/// Don't start a head fragment in a page with less room than this —
+/// a tiny fragment wastes a slot and pushes everything to overflow.
+const MIN_HEAD_FRAG: usize = 64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RecordId {
+    pub page: u32,
+    pub slot: u16,
+}
+
+impl RecordId {
+    pub fn to_u64(self) -> u64 {
+        (self.page as u64) << 16 | self.slot as u64
+    }
+
+    pub fn from_u64(v: u64) -> RecordId {
+        RecordId { page: (v >> 16) as u32, slot: (v & 0xffff) as u16 }
+    }
+}
+
+pub struct RecordHeap {
+    pool: BufferPool,
+    /// Free bytes per slotted page (insert candidates), rebuilt at open.
+    space: BTreeMap<u32, usize>,
+}
+
+impl RecordHeap {
+    /// Wrap a buffer pool, scanning existing slotted pages to rebuild the
+    /// free-space map.
+    pub fn open(mut pool: BufferPool) -> Result<RecordHeap> {
+        let mut space = BTreeMap::new();
+        for id in 0..pool.num_pages() {
+            let f = pool.fetch(id)?;
+            let (kind, free) = (pool.page(f).kind(), pool.page(f).free_space());
+            pool.unpin(f);
+            if kind == Some(PageKind::Slotted) {
+                space.insert(id, free);
+            }
+        }
+        Ok(RecordHeap { pool, space })
+    }
+
+    pub fn num_pages(&self) -> u32 {
+        self.pool.num_pages()
+    }
+
+    /// Every live record id (head fragments), for reachability sweeps.
+    pub fn live_records(&mut self) -> Result<Vec<RecordId>> {
+        let mut out = Vec::new();
+        let pages: Vec<u32> = self.space.keys().copied().collect();
+        for id in pages {
+            let f = self.pool.fetch(id)?;
+            for slot in 0..self.pool.page(f).n_slots() {
+                if self.pool.page(f).read_slot(slot).is_some() {
+                    out.push(RecordId { page: id, slot });
+                }
+            }
+            self.pool.unpin(f);
+        }
+        Ok(out)
+    }
+
+    /// Store a record; returns its id.
+    pub fn put(&mut self, data: &[u8]) -> Result<RecordId> {
+        if data.is_empty() {
+            bail!("empty records are not stored");
+        }
+        // choose a head page: first slotted page whose free space fits a
+        // useful fragment, else a fresh page
+        let want = HEAD_PREFIX + data.len().min(MIN_HEAD_FRAG);
+        let head_page = self
+            .space
+            .iter()
+            .find(|(_, &free)| free >= want)
+            .map(|(&id, _)| id);
+        let (head_page, head_frame) = match head_page {
+            Some(id) => (id, self.pool.fetch(id)?),
+            None => {
+                let (id, f) = self.pool.create(PageKind::Slotted)?;
+                (id, f)
+            }
+        };
+        let frag_cap = self.pool.page(head_frame).free_space().saturating_sub(HEAD_PREFIX);
+        let frag_len = data.len().min(frag_cap);
+        // build the overflow chain for the remainder first, so the head
+        // fragment can point at its first page
+        let first_overflow = self.write_chain(&data[frag_len..])?;
+        let mut head = Vec::with_capacity(HEAD_PREFIX + frag_len);
+        head.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        head.extend_from_slice(&first_overflow.to_le_bytes());
+        head.extend_from_slice(&data[..frag_len]);
+        let slot = self
+            .pool
+            .page_mut(head_frame)
+            .insert(&head)
+            .expect("free_space guaranteed the head fragment fits");
+        let free = self.pool.page(head_frame).free_space();
+        self.pool.unpin(head_frame);
+        self.space.insert(head_page, free);
+        Ok(RecordId { page: head_page, slot })
+    }
+
+    /// Write `rest` across a chain of overflow pages; returns the first
+    /// page id (0 = no overflow; page 0 is always the first slotted page
+    /// or WAL-adjacent metadata, never an overflow page).
+    fn write_chain(&mut self, rest: &[u8]) -> Result<u32> {
+        if rest.is_empty() {
+            return Ok(0);
+        }
+        let mut first = 0u32;
+        let mut prev: Option<(u32, usize)> = None;
+        for chunk in rest.chunks(OVERFLOW_CAP) {
+            let (id, f) = self.pool.create(PageKind::Overflow)?;
+            self.pool.page_mut(f).bytes_mut()[PAGE_SIZE - OVERFLOW_CAP..][..chunk.len()]
+                .copy_from_slice(chunk);
+            if let Some((_, pf)) = prev {
+                self.pool.page_mut(pf).set_next(id);
+                self.pool.unpin(pf);
+            } else {
+                first = id;
+            }
+            prev = Some((id, f));
+        }
+        if let Some((_, pf)) = prev {
+            self.pool.unpin(pf);
+        }
+        Ok(first)
+    }
+
+    /// Copy a record's head fragment out of its page.
+    fn read_head(&mut self, rec: RecordId) -> Result<Vec<u8>> {
+        let f = self.pool.fetch(rec.page)?;
+        let head = self.pool.page(f).read_slot(rec.slot).map(|h| h.to_vec());
+        self.pool.unpin(f);
+        match head {
+            Some(h) if h.len() >= HEAD_PREFIX => Ok(h),
+            Some(_) => bail!("corrupt record head at page {} slot {}", rec.page, rec.slot),
+            None => bail!("no record at page {} slot {}", rec.page, rec.slot),
+        }
+    }
+
+    /// Read a whole record back.
+    pub fn get(&mut self, rec: RecordId) -> Result<Vec<u8>> {
+        let head = self.read_head(rec)?;
+        let total = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
+        let mut next = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(&head[HEAD_PREFIX..]);
+        while out.len() < total {
+            if next == 0 {
+                bail!("truncated overflow chain for record at page {} slot {}", rec.page, rec.slot);
+            }
+            let f = self.pool.fetch(next)?;
+            let kind = self.pool.page(f).kind();
+            let following = self.pool.page(f).next();
+            if kind != Some(PageKind::Overflow) {
+                self.pool.unpin(f);
+                bail!("overflow chain hit a non-overflow page {next}");
+            }
+            let take = (total - out.len()).min(OVERFLOW_CAP);
+            out.extend_from_slice(&self.pool.page(f).bytes()[PAGE_SIZE - OVERFLOW_CAP..][..take]);
+            self.pool.unpin(f);
+            next = following;
+        }
+        if out.len() != total {
+            bail!("record length mismatch: got {} of {total}", out.len());
+        }
+        Ok(out)
+    }
+
+    /// Delete a record, freeing its overflow pages and compacting its
+    /// head page.  A fully-emptied head page returns to the free list.
+    pub fn delete(&mut self, rec: RecordId) -> Result<()> {
+        let head = self.read_head(rec)?;
+        let mut next = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
+        let f = self.pool.fetch(rec.page)?;
+        self.pool.page_mut(f).delete_slot(rec.slot);
+        let (live, free) = (self.pool.page(f).live_slots(), self.pool.page(f).free_space());
+        self.pool.unpin(f);
+        if live == 0 {
+            self.space.remove(&rec.page);
+            self.pool.free_page(rec.page)?;
+        } else {
+            self.space.insert(rec.page, free);
+        }
+        while next != 0 {
+            let f = self.pool.fetch(next)?;
+            let following = self.pool.page(f).next();
+            self.pool.unpin(f);
+            self.pool.free_page(next)?;
+            next = following;
+        }
+        Ok(())
+    }
+
+    /// Write back every dirty page and sync to stable storage.
+    pub fn flush(&mut self) -> Result<()> {
+        self.pool.flush_all()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::disk::DiskManager;
+    use super::super::testutil::TempDir;
+    use super::*;
+
+    fn heap(dir: &TempDir) -> RecordHeap {
+        let dm = DiskManager::open(&dir.path().join("store.pages")).unwrap();
+        RecordHeap::open(BufferPool::new(dm, 8)).unwrap()
+    }
+
+    #[test]
+    fn small_records_round_trip_and_pack() {
+        let dir = TempDir::new("heap");
+        let mut h = heap(&dir);
+        let a = h.put(b"one").unwrap();
+        let b = h.put(b"two-two").unwrap();
+        assert_eq!(a.page, b.page, "small records pack into one page");
+        assert_eq!(h.get(a).unwrap(), b"one");
+        assert_eq!(h.get(b).unwrap(), b"two-two");
+        h.delete(a).unwrap();
+        assert!(h.get(a).is_err());
+        assert_eq!(h.get(b).unwrap(), b"two-two", "neighbors survive delete + compaction");
+    }
+
+    #[test]
+    fn oversized_record_chains_overflow_pages() {
+        let dir = TempDir::new("heap-big");
+        let mut h = heap(&dir);
+        // ~3 pages of payload: one head fragment + at least two overflow pages
+        let big: Vec<u8> = (0..3 * PAGE_SIZE).map(|i| (i * 31 % 251) as u8).collect();
+        let rec = h.put(&big).unwrap();
+        assert!(h.num_pages() >= 3);
+        assert_eq!(h.get(rec).unwrap(), big, "bit-for-bit through the chain");
+        let pages_before = h.num_pages();
+        h.delete(rec).unwrap();
+        // freed overflow pages are reused, not appended
+        let rec2 = h.put(&big).unwrap();
+        assert_eq!(h.num_pages(), pages_before, "delete returned the chain to the free list");
+        assert_eq!(h.get(rec2).unwrap(), big);
+    }
+
+    #[test]
+    fn records_survive_reopen() {
+        let dir = TempDir::new("heap-reopen");
+        let big: Vec<u8> = (0..PAGE_SIZE * 2).map(|i| (i % 256) as u8).collect();
+        let (a, b) = {
+            let mut h = heap(&dir);
+            let a = h.put(b"persisted").unwrap();
+            let b = h.put(&big).unwrap();
+            h.flush().unwrap();
+            (a, b)
+        };
+        let mut h = heap(&dir);
+        assert_eq!(h.get(a).unwrap(), b"persisted");
+        assert_eq!(h.get(b).unwrap(), big);
+        // the rebuilt space map still packs new small records
+        let c = h.put(b"more").unwrap();
+        assert_eq!(c.page, a.page);
+        assert_eq!(
+            h.live_records().unwrap().len(),
+            3,
+            "live_records sees all heads after reopen"
+        );
+    }
+
+    #[test]
+    fn record_id_encoding_round_trips() {
+        let r = RecordId { page: 0xabcdef, slot: 0x1234 };
+        assert_eq!(RecordId::from_u64(r.to_u64()), r);
+    }
+}

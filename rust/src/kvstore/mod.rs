@@ -1,0 +1,772 @@
+//! Tiered KV storage: a paged disk store + WAL-journaled inventory.
+//!
+//! LagKV's frozen blocks are immutable, refcounted, and final by the
+//! driver's contract — which makes them perfect cold-tier payloads: a
+//! spilled block can be re-read bit-for-bit because nothing can have
+//! written through it in the meantime.  This module is the disk half of
+//! that tiering:
+//!
+//! * [`page`] — 8 KiB slotted pages (SNIPPETS' classic layout plus an
+//!   overflow `next` pointer, since one frozen block outgrows a page);
+//! * [`disk`] — [`DiskManager`]: raw page I/O over one store file with a
+//!   header-scan-recovered free-page list;
+//! * [`buffer`] — [`BufferPool`]: frame table, pin counts, dirty bits,
+//!   LRU write-back;
+//! * [`heap`] — [`RecordHeap`]: variable-length records with overflow
+//!   chains, addressed by stable [`RecordId`]s;
+//! * [`wal`] — the append-only inventory journal (+ checkpoint rewrite).
+//!
+//! [`KvStore`] is the mutex-guarded facade the serving stack talks to.
+//! Block payloads and per-head sidecars are stored as little-endian
+//! binary records (JSON cannot round-trip `inf`/`NaN` f32 bits); the
+//! journal carries only ids, dims, and descriptor JSON.  Durability
+//! contract: appends are flushed to the OS immediately, but only a
+//! [`KvStore::checkpoint`] (fsync + journal rewrite) is crash-durable —
+//! replay validates every referenced record and drops descriptors whose
+//! payloads did not survive, so a torn tail degrades to a smaller
+//! inventory, never a corrupt one.
+
+pub mod buffer;
+pub mod disk;
+pub mod heap;
+pub mod page;
+pub mod wal;
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub use buffer::BufferPool;
+pub use disk::DiskManager;
+pub use heap::{RecordHeap, RecordId};
+pub use wal::{Wal, WalRecord};
+
+/// One block's deserialized payload, bit-identical to what was persisted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockPayload {
+    pub rows: usize,
+    pub d: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub pos: Vec<i32>,
+    pub attn: Vec<f32>,
+}
+
+/// What a checkpoint persisted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CheckpointSummary {
+    pub sessions: usize,
+    pub prefixes: usize,
+    pub blocks: usize,
+    pub pages: usize,
+}
+
+struct BlockMeta {
+    rec: RecordId,
+    rows: usize,
+    d: usize,
+    /// Payload bytes (`kvpool::block_bytes(rows, d)`).
+    bytes: usize,
+    /// Outstanding claims: at most one live in-memory `Block` handle plus
+    /// one per journaled descriptor referencing this block.  At zero the
+    /// record is deleted and a `bdel` appended.
+    refs: usize,
+}
+
+struct StoreInner {
+    heap: RecordHeap,
+    wal: Wal,
+    blocks: HashMap<u64, BlockMeta>,
+    sessions: HashMap<String, Json>,
+    prefixes: HashMap<u64, Json>,
+    /// Sidecar records written but not yet committed into a journaled
+    /// descriptor: invisible to checkpoint GC until committed or aborted.
+    limbo: HashSet<RecordId>,
+    next_block: u64,
+    next_prefix: u64,
+}
+
+/// The store facade: one per model variant, shared `Arc` between the
+/// block pool (spill/fault), the session store and prefix cache
+/// (journaling), and the router (checkpoint, boot restore).
+pub struct KvStore {
+    dir: PathBuf,
+    inner: Mutex<StoreInner>,
+}
+
+impl KvStore {
+    /// Open (or create) the store under `dir`: replay the journal,
+    /// validate every referenced payload, garbage-collect unreferenced
+    /// blocks, and compact the journal to the surviving inventory.
+    pub fn open(dir: &Path) -> Result<KvStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create store dir {}", dir.display()))?;
+        let pages_path = dir.join("store.pages");
+        let wal_path = dir.join("wal.log");
+        let disk = DiskManager::open(&pages_path)?;
+        let mut heap = RecordHeap::open(BufferPool::new(disk, buffer::DEFAULT_FRAMES))?;
+
+        // fold the journal into the final inventory
+        let mut blocks: HashMap<u64, BlockMeta> = HashMap::new();
+        let mut sessions: HashMap<String, Json> = HashMap::new();
+        let mut prefixes: HashMap<u64, Json> = HashMap::new();
+        let mut next_block = 1u64;
+        let mut next_prefix = 1u64;
+        for rec in Wal::replay(&wal_path)? {
+            match rec {
+                WalRecord::BlockPut { id, rec, rows, d, bytes } => {
+                    next_block = next_block.max(id + 1);
+                    blocks.insert(
+                        id,
+                        BlockMeta { rec: RecordId::from_u64(rec), rows, d, bytes, refs: 0 },
+                    );
+                }
+                WalRecord::BlockDel { id } => {
+                    blocks.remove(&id);
+                }
+                WalRecord::SessionPut { id, desc } => {
+                    sessions.insert(id, desc);
+                }
+                WalRecord::SessionDel { id } => {
+                    sessions.remove(&id);
+                }
+                WalRecord::PrefixPut { pid, desc } => {
+                    next_prefix = next_prefix.max(pid + 1);
+                    prefixes.insert(pid, desc);
+                }
+                WalRecord::PrefixDel { pid } => {
+                    prefixes.remove(&pid);
+                }
+            }
+        }
+
+        // validate descriptors against the page store; count block refs.
+        // A descriptor whose payloads did not survive the crash (appended
+        // after the last checkpoint, pages never flushed) is dropped.
+        let mut block_ok: HashMap<u64, bool> = HashMap::new();
+        let mut keep_session: HashMap<String, Json> = HashMap::new();
+        let mut keep_prefix: HashMap<u64, Json> = HashMap::new();
+        for (id, desc) in sessions {
+            if desc_is_valid(&desc, &blocks, &mut heap, &mut block_ok) {
+                keep_session.insert(id, desc);
+            } else {
+                eprintln!("kvstore: dropping session {id:?}: payload missing (torn journal tail)");
+            }
+        }
+        for (pid, desc) in prefixes {
+            if desc_is_valid(&desc, &blocks, &mut heap, &mut block_ok) {
+                keep_prefix.insert(pid, desc);
+            } else {
+                eprintln!("kvstore: dropping prefix snapshot {pid}: payload missing");
+            }
+        }
+        for desc in keep_session.values().chain(keep_prefix.values()) {
+            for_each_ref(desc, &mut |bid| {
+                if let Some(meta) = blocks.get_mut(&bid) {
+                    meta.refs += 1;
+                }
+            });
+        }
+        // GC blocks nothing references (e.g. spill records of caches that
+        // were live at crash time)
+        let dead: Vec<u64> =
+            blocks.iter().filter(|(_, m)| m.refs == 0).map(|(&id, _)| id).collect();
+        for id in &dead {
+            let rec = blocks.remove(id).expect("dead id came from the map").rec;
+            let _ = heap.delete(rec);
+        }
+
+        let wal = Wal::open(&wal_path)?;
+        let store = KvStore {
+            dir: dir.to_path_buf(),
+            inner: Mutex::new(StoreInner {
+                heap,
+                wal,
+                blocks,
+                sessions: keep_session,
+                prefixes: keep_prefix,
+                limbo: HashSet::new(),
+                next_block,
+                next_prefix,
+            }),
+        };
+        // compact the journal to the surviving inventory (also makes the
+        // replayed state durable before anything new is appended)
+        store.checkpoint()?;
+        Ok(store)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// (sessions, prefixes, blocks) currently journaled.
+    pub fn inventory_counts(&self) -> (usize, usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.sessions.len(), inner.prefixes.len(), inner.blocks.len())
+    }
+
+    // -- blocks ----------------------------------------------------------------
+
+    /// Persist one block payload; returns its store id with one claim (the
+    /// caller's live handle).  Appends a `blk` journal record.
+    pub fn persist_block(
+        &self,
+        rows: usize,
+        d: usize,
+        k: &[f32],
+        v: &[f32],
+        pos: &[i32],
+        attn: &[f32],
+    ) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_block;
+        inner.next_block += 1;
+        let data = encode_block(rows, d, k, v, pos, attn);
+        let bytes = data.len() - BLOCK_HEADER;
+        let rec = inner.heap.put(&data)?;
+        inner.blocks.insert(id, BlockMeta { rec, rows, d, bytes, refs: 1 });
+        inner.wal.append(&WalRecord::BlockPut { id, rec: rec.to_u64(), rows, d, bytes })?;
+        Ok(id)
+    }
+
+    /// Add a claim (a journaled descriptor reference, or a restored live
+    /// handle at boot).
+    pub fn retain_block(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(meta) = inner.blocks.get_mut(&id) {
+            meta.refs += 1;
+        } else {
+            debug_assert!(false, "retain of unknown block {id}");
+        }
+    }
+
+    /// Drop a claim; the last one deletes the payload and journals `bdel`.
+    pub fn release_block(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.release_block(id);
+    }
+
+    /// Read a block payload back (fault-in path).
+    pub fn read_block(&self, id: u64) -> Result<BlockPayload> {
+        let mut inner = self.inner.lock().unwrap();
+        let (rec, rows, d) = match inner.blocks.get(&id) {
+            Some(m) => (m.rec, m.rows, m.d),
+            None => bail!("read of unknown block {id}"),
+        };
+        let data = inner.heap.get(rec)?;
+        let payload = decode_block(&data)?;
+        if payload.rows != rows || payload.d != d {
+            bail!("block {id} dims changed on disk: {}x{} vs {rows}x{d}", payload.rows, payload.d);
+        }
+        Ok(payload)
+    }
+
+    /// `(rows, d, payload_bytes)` of a journaled block.
+    pub fn block_dims(&self, id: u64) -> Option<(usize, usize, usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner.blocks.get(&id).map(|m| (m.rows, m.d, m.bytes))
+    }
+
+    // -- sidecars (opaque byte records referenced from descriptors) ------------
+
+    /// Store descriptor-owned bytes (loose tails, frozen attention).  The
+    /// record sits in limbo — protected from checkpoint GC but not yet
+    /// owned — until a descriptor referencing it is journaled.
+    pub fn put_blob(&self, data: &[u8]) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let rec = inner.heap.put(data)?;
+        inner.limbo.insert(rec);
+        Ok(rec.to_u64())
+    }
+
+    pub fn read_blob(&self, rec: u64) -> Result<Vec<u8>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.heap.get(RecordId::from_u64(rec))
+    }
+
+    /// Error-path cleanup: delete limbo blobs a failed persist wrote.
+    pub fn abort_blobs(&self, recs: &[u64]) {
+        let mut inner = self.inner.lock().unwrap();
+        for &r in recs {
+            let rec = RecordId::from_u64(r);
+            if inner.limbo.remove(&rec) {
+                let _ = inner.heap.delete(rec);
+            }
+        }
+    }
+
+    // -- journaled inventory ---------------------------------------------------
+
+    /// Journal a session descriptor (superseding any previous one for the
+    /// same id: its claims are released and its sidecars deleted).  The
+    /// new descriptor's sidecars leave limbo; its block ids must already
+    /// hold claims taken via [`KvStore::retain_block`].
+    pub fn journal_session_put(&self, id: &str, desc: Json) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.commit_sidecars(&desc);
+        inner.wal.append(&WalRecord::SessionPut { id: id.to_string(), desc: desc.clone() })?;
+        if let Some(old) = inner.sessions.insert(id.to_string(), desc) {
+            inner.release_desc(&old);
+        }
+        Ok(())
+    }
+
+    /// Journal removal of a session.  Harmless when the id was never
+    /// journaled (the caller need not track that) — returns whether a
+    /// descriptor was actually dropped.
+    pub fn journal_session_remove(&self, id: &str) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(old) = inner.sessions.remove(id) else {
+            return Ok(false);
+        };
+        inner.wal.append(&WalRecord::SessionDel { id: id.to_string() })?;
+        inner.release_desc(&old);
+        Ok(true)
+    }
+
+    /// Journal a prefix snapshot descriptor; returns its journal id.
+    pub fn journal_prefix_put(&self, desc: Json) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let pid = inner.next_prefix;
+        inner.next_prefix += 1;
+        inner.commit_sidecars(&desc);
+        inner.wal.append(&WalRecord::PrefixPut { pid, desc: desc.clone() })?;
+        inner.prefixes.insert(pid, desc);
+        Ok(pid)
+    }
+
+    pub fn journal_prefix_remove(&self, pid: u64) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(old) = inner.prefixes.remove(&pid) else {
+            return Ok(false);
+        };
+        inner.wal.append(&WalRecord::PrefixDel { pid })?;
+        inner.release_desc(&old);
+        Ok(true)
+    }
+
+    /// The boot inventory: journaled sessions and prefix snapshots, for
+    /// the router to rebuild in-memory state from.
+    pub fn boot_sessions(&self) -> Vec<(String, Json)> {
+        let inner = self.inner.lock().unwrap();
+        inner.sessions.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    pub fn boot_prefixes(&self) -> Vec<(u64, Json)> {
+        let inner = self.inner.lock().unwrap();
+        inner.prefixes.iter().map(|(&k, v)| (k, v.clone())).collect()
+    }
+
+    /// Make the store crash-durable: sweep unreachable heap records,
+    /// flush + fsync every dirty page, then atomically rewrite the
+    /// journal to exactly the live inventory.
+    pub fn checkpoint(&self) -> Result<CheckpointSummary> {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        // reachability sweep over heap records
+        let mut reachable: HashSet<RecordId> = inner.limbo.iter().copied().collect();
+        for meta in inner.blocks.values() {
+            reachable.insert(meta.rec);
+        }
+        for desc in inner.sessions.values().chain(inner.prefixes.values()) {
+            for_each_sidecar(desc, &mut |rec| {
+                reachable.insert(RecordId::from_u64(rec));
+            });
+        }
+        for rec in inner.heap.live_records()? {
+            if !reachable.contains(&rec) {
+                inner.heap.delete(rec)?;
+            }
+        }
+        inner.heap.flush()?;
+        // journal rewrite: the page store is durable before the journal
+        // claims this inventory
+        let mut records = Vec::new();
+        let mut ids: Vec<&u64> = inner.blocks.keys().collect();
+        ids.sort();
+        for id in ids {
+            let m = &inner.blocks[id];
+            records.push(WalRecord::BlockPut {
+                id: *id,
+                rec: m.rec.to_u64(),
+                rows: m.rows,
+                d: m.d,
+                bytes: m.bytes,
+            });
+        }
+        for (id, desc) in &inner.sessions {
+            records.push(WalRecord::SessionPut { id: id.clone(), desc: desc.clone() });
+        }
+        for (&pid, desc) in &inner.prefixes {
+            records.push(WalRecord::PrefixPut { pid, desc: desc.clone() });
+        }
+        inner.wal.checkpoint(&records)?;
+        Ok(CheckpointSummary {
+            sessions: inner.sessions.len(),
+            prefixes: inner.prefixes.len(),
+            blocks: inner.blocks.len(),
+            pages: inner.heap.num_pages() as usize,
+        })
+    }
+}
+
+impl StoreInner {
+    fn release_block(&mut self, id: u64) {
+        let Some(meta) = self.blocks.get_mut(&id) else {
+            debug_assert!(false, "release of unknown block {id}");
+            return;
+        };
+        meta.refs -= 1;
+        if meta.refs > 0 {
+            return;
+        }
+        let meta = self.blocks.remove(&id).expect("meta was just read");
+        if let Err(e) = self.heap.delete(meta.rec) {
+            eprintln!("kvstore: failed to delete block {id}: {e:#}");
+        }
+        if let Err(e) = self.wal.append(&WalRecord::BlockDel { id }) {
+            eprintln!("kvstore: failed to journal bdel {id}: {e:#}");
+        }
+    }
+
+    /// Release every claim a superseded/removed descriptor held: one per
+    /// block reference, plus its sidecar records.
+    fn release_desc(&mut self, desc: &Json) {
+        let mut blocks = Vec::new();
+        let mut sidecars = Vec::new();
+        for_each_ref(desc, &mut |bid| blocks.push(bid));
+        for_each_sidecar(desc, &mut |rec| sidecars.push(rec));
+        for bid in blocks {
+            self.release_block(bid);
+        }
+        for rec in sidecars {
+            let rec = RecordId::from_u64(rec);
+            self.limbo.remove(&rec);
+            if let Err(e) = self.heap.delete(rec) {
+                eprintln!("kvstore: failed to delete sidecar: {e:#}");
+            }
+        }
+    }
+
+    /// A descriptor is being journaled: its sidecars are now owned.
+    fn commit_sidecars(&mut self, desc: &Json) {
+        let mut sidecars = Vec::new();
+        for_each_sidecar(desc, &mut |rec| sidecars.push(rec));
+        for rec in sidecars {
+            self.limbo.remove(&RecordId::from_u64(rec));
+        }
+    }
+}
+
+/// Visit every block id (`fb` arrays) in a descriptor's cache tree.
+fn for_each_ref(desc: &Json, on_block: &mut dyn FnMut(u64)) {
+    walk_heads(desc, &mut |head| {
+        if let Some(Ok(fb)) = head.opt("fb").map(|a| a.as_arr()) {
+            for id in fb {
+                if let Ok(n) = id.as_i64() {
+                    on_block(n as u64);
+                }
+            }
+        }
+    });
+}
+
+/// Visit every sidecar record id (`sc` fields) in a descriptor.
+fn for_each_sidecar(desc: &Json, on_sidecar: &mut dyn FnMut(u64)) {
+    walk_heads(desc, &mut |head| {
+        if let Some(Ok(sc)) = head.opt("sc").map(|s| s.as_i64()) {
+            if sc != 0 {
+                on_sidecar(sc as u64);
+            }
+        }
+    });
+}
+
+fn walk_heads(desc: &Json, f: &mut dyn FnMut(&Json)) {
+    let layers = desc
+        .opt("cache")
+        .and_then(|c| c.opt("layers"))
+        .and_then(|l| l.as_arr().ok());
+    let Some(layers) = layers else { return };
+    for layer in layers {
+        let Some(heads) = layer.opt("heads").and_then(|h| h.as_arr().ok()) else { continue };
+        for head in heads {
+            f(head);
+        }
+    }
+}
+
+/// Can every payload this descriptor references be read back?
+fn desc_is_valid(
+    desc: &Json,
+    blocks: &HashMap<u64, BlockMeta>,
+    heap: &mut RecordHeap,
+    block_ok: &mut HashMap<u64, bool>,
+) -> bool {
+    let mut ok = true;
+    let mut bids = Vec::new();
+    let mut sidecars = Vec::new();
+    for_each_ref(desc, &mut |bid| bids.push(bid));
+    for_each_sidecar(desc, &mut |rec| sidecars.push(rec));
+    for bid in bids {
+        let good = *block_ok.entry(bid).or_insert_with(|| match blocks.get(&bid) {
+            Some(meta) => heap
+                .get(meta.rec)
+                .map(|data| data.len() == BLOCK_HEADER + meta.bytes)
+                .unwrap_or(false),
+            None => false,
+        });
+        ok &= good;
+    }
+    for rec in sidecars {
+        ok &= heap.get(RecordId::from_u64(rec)).is_ok();
+    }
+    ok
+}
+
+// -- binary block serialization (little-endian) --------------------------------
+
+/// `[rows u32][d u32]` ahead of the payload.
+const BLOCK_HEADER: usize = 8;
+
+fn encode_block(rows: usize, d: usize, k: &[f32], v: &[f32], pos: &[i32], attn: &[f32]) -> Vec<u8> {
+    debug_assert_eq!(k.len(), rows * d);
+    debug_assert_eq!(v.len(), rows * d);
+    debug_assert_eq!(pos.len(), rows);
+    debug_assert_eq!(attn.len(), rows);
+    let mut out = Vec::with_capacity(BLOCK_HEADER + (k.len() + v.len() + attn.len()) * 4 + pos.len() * 4);
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&(d as u32).to_le_bytes());
+    for x in k {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for p in pos {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    for x in attn {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn take_f32s(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
+    let end = *off + n * 4;
+    let slice = buf.get(*off..end).ok_or_else(|| anyhow!("short block record"))?;
+    let out = slice.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    *off = end;
+    Ok(out)
+}
+
+fn decode_block(buf: &[u8]) -> Result<BlockPayload> {
+    if buf.len() < BLOCK_HEADER {
+        bail!("block record shorter than its header");
+    }
+    let rows = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    let d = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    let mut off = BLOCK_HEADER;
+    let k = take_f32s(buf, &mut off, rows * d)?;
+    let v = take_f32s(buf, &mut off, rows * d)?;
+    let pos_bytes = buf.get(off..off + rows * 4).ok_or_else(|| anyhow!("short block record"))?;
+    let pos: Vec<i32> =
+        pos_bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    off += rows * 4;
+    let attn = take_f32s(buf, &mut off, rows)?;
+    if off != buf.len() {
+        bail!("block record has {} trailing bytes", buf.len() - off);
+    }
+    Ok(BlockPayload { rows, d, k, v, pos, attn })
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Unique per-test directory under the system tempdir, removed on
+    /// drop — the hermetic tier leaves zero repo-root artifacts.
+    pub struct TempDir {
+        path: PathBuf,
+    }
+
+    impl TempDir {
+        pub fn new(tag: &str) -> TempDir {
+            static SEQ: AtomicUsize = AtomicUsize::new(0);
+            let n = SEQ.fetch_add(1, Ordering::Relaxed);
+            let path = std::env::temp_dir()
+                .join(format!("lagkv-{}-{}-{}", tag, std::process::id(), n));
+            std::fs::create_dir_all(&path).unwrap();
+            TempDir { path }
+        }
+
+        pub fn path(&self) -> &Path {
+            &self.path
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::TempDir;
+    use super::*;
+    use crate::util::json;
+
+    fn payload(rows: usize, d: usize, salt: f32) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>) {
+        let k: Vec<f32> = (0..rows * d).map(|i| i as f32 + salt).collect();
+        let v: Vec<f32> = k.iter().map(|x| -x * 0.5).collect();
+        let pos: Vec<i32> = (0..rows as i32).collect();
+        // deliberately include non-finite bits: binary storage must keep them
+        let mut attn = vec![0.25f32; rows];
+        attn[0] = f32::INFINITY;
+        (k, v, pos, attn)
+    }
+
+    fn head_desc(blocks: &[u64], sc: u64) -> Json {
+        json::obj(vec![(
+            "cache",
+            json::obj(vec![(
+                "layers",
+                json::arr(vec![json::obj(vec![(
+                    "heads",
+                    json::arr(vec![json::obj(vec![
+                        ("fb", json::arr(blocks.iter().map(|&b| json::n(b as f64)).collect())),
+                        ("sc", json::n(sc as f64)),
+                    ])]),
+                )])]),
+            )]),
+        )])
+    }
+
+    #[test]
+    fn block_codec_is_bit_exact() {
+        let (k, v, pos, attn) = payload(4, 3, 0.125);
+        let enc = encode_block(4, 3, &k, &v, &pos, &attn);
+        let dec = decode_block(&enc).unwrap();
+        assert_eq!(dec.rows, 4);
+        assert_eq!(dec.d, 3);
+        assert_eq!(dec.k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   k.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        assert_eq!(dec.v, v);
+        assert_eq!(dec.pos, pos);
+        assert!(dec.attn[0].is_infinite(), "non-finite f32 bits survive");
+    }
+
+    #[test]
+    fn block_lifecycle_spans_reopen() {
+        let dir = TempDir::new("store");
+        let (k, v, pos, attn) = payload(4, 2, 1.0);
+        let id = {
+            let store = KvStore::open(dir.path()).unwrap();
+            let id = store.persist_block(4, 2, &k, &v, &pos, &attn).unwrap();
+            // a journaled descriptor keeps the block alive across restart
+            store.retain_block(id);
+            store
+                .journal_session_put("s1", head_desc(&[id], 0))
+                .unwrap();
+            store.release_block(id); // the live handle drops with the process
+            store.checkpoint().unwrap();
+            id
+        };
+        let store = KvStore::open(dir.path()).unwrap();
+        assert_eq!(store.inventory_counts(), (1, 0, 1));
+        let got = store.read_block(id).unwrap();
+        assert_eq!(got.k, k);
+        assert_eq!(got.v, v);
+        assert_eq!(got.pos, pos);
+        assert_eq!(store.block_dims(id), Some((4, 2, got.k.len() * 4 + got.v.len() * 4 + 4 * 8)));
+        // removing the session releases the last claim: block gone
+        assert!(store.journal_session_remove("s1").unwrap());
+        assert!(store.read_block(id).is_err());
+        assert_eq!(store.inventory_counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn unreferenced_blocks_are_gced_at_open() {
+        let dir = TempDir::new("store-gc");
+        {
+            let store = KvStore::open(dir.path()).unwrap();
+            let (k, v, pos, attn) = payload(2, 2, 0.0);
+            // spilled by a live cache, never journaled into a descriptor:
+            // the live handle dies with the process
+            store.persist_block(2, 2, &k, &v, &pos, &attn).unwrap();
+            store.checkpoint().unwrap();
+        }
+        let store = KvStore::open(dir.path()).unwrap();
+        assert_eq!(store.inventory_counts(), (0, 0, 0), "orphan block was collected");
+    }
+
+    #[test]
+    fn superseding_a_session_releases_the_old_claims() {
+        let dir = TempDir::new("store-supersede");
+        let store = KvStore::open(dir.path()).unwrap();
+        let (k, v, pos, attn) = payload(2, 2, 0.0);
+        let a = store.persist_block(2, 2, &k, &v, &pos, &attn).unwrap();
+        store.retain_block(a);
+        let sc_a = store.put_blob(b"tail-a").unwrap();
+        store.journal_session_put("s", head_desc(&[a], sc_a)).unwrap();
+        // turn 2: same block (still claimed) plus a new one and a new tail
+        let b = store.persist_block(2, 2, &v, &k, &pos, &attn).unwrap();
+        store.retain_block(a);
+        store.retain_block(b);
+        let sc_b = store.put_blob(b"tail-b").unwrap();
+        store.journal_session_put("s", head_desc(&[a, b], sc_b)).unwrap();
+        assert!(store.read_blob(sc_a).is_err(), "old sidecar deleted on supersede");
+        assert_eq!(store.read_blob(sc_b).unwrap(), b"tail-b");
+        let (_, _, blocks) = store.inventory_counts();
+        assert_eq!(blocks, 2);
+        // drop the live handles, then the session: everything unwinds
+        store.release_block(a);
+        store.release_block(b);
+        store.journal_session_remove("s").unwrap();
+        assert_eq!(store.inventory_counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn crash_replay_without_checkpoint_keeps_flushed_state() {
+        let dir = TempDir::new("store-crash");
+        let (k, v, pos, attn) = payload(2, 3, 2.0);
+        {
+            let store = KvStore::open(dir.path()).unwrap();
+            let id = store.persist_block(2, 3, &k, &v, &pos, &attn).unwrap();
+            store.retain_block(id);
+            store.journal_session_put("crashy", head_desc(&[id], 0)).unwrap();
+            // flush pages the way a checkpoint would, but *without* the
+            // journal rewrite — then "crash" (drop without cleanup)
+            store.checkpoint().unwrap();
+            let pid = store.journal_prefix_put(head_desc(&[id], 0));
+            // the prefix put retains nothing extra here: invalid on
+            // replay only if its payloads are unreadable — they are
+            // readable, so it survives; but we did not retain the block
+            // for it, which open() tolerates by recounting refs itself
+            let _ = pid;
+        }
+        let store = KvStore::open(dir.path()).unwrap();
+        let (sessions, prefixes, blocks) = store.inventory_counts();
+        assert_eq!((sessions, blocks), (1, 1));
+        assert_eq!(prefixes, 1, "journal tail after the checkpoint replays too");
+    }
+
+    #[test]
+    fn checkpoint_sweeps_orphaned_records() {
+        let dir = TempDir::new("store-sweep");
+        let store = KvStore::open(dir.path()).unwrap();
+        let sc = store.put_blob(b"limbo bytes").unwrap();
+        store.checkpoint().unwrap();
+        assert_eq!(store.read_blob(sc).unwrap(), b"limbo bytes", "limbo survives checkpoint");
+        store.abort_blobs(&[sc]);
+        assert!(store.read_blob(sc).is_err(), "aborted blob is deleted");
+    }
+}

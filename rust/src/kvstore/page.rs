@@ -1,0 +1,301 @@
+//! Slotted pages: the fixed-size on-disk unit of the KV store.
+//!
+//! Layout (little-endian, 8 KiB):
+//!
+//! ```text
+//! ┌─────────────────────────────────────────────┐
+//! │ Header (14 bytes)                           │
+//! │   kind u16 | page_id u32 | n_slots u16      │
+//! │   free_off u16 | next u32                   │
+//! ├─────────────────────────────────────────────┤
+//! │ Slot directory (grows downward)             │
+//! │   [offset u16, len u16] per record          │
+//! ├─────────────────────────────────────────────┤
+//! │ Free space                                  │
+//! ├─────────────────────────────────────────────┤
+//! │ Record payloads (grow upward from page end) │
+//! └─────────────────────────────────────────────┘
+//! ```
+//!
+//! `next` chains overflow pages: one frozen KV block (16 rows × d=64 ≈
+//! 8.3 KiB of payload) does not fit a single page, so a record's head
+//! fragment lives in a slotted page and the remainder spills across raw
+//! [`PageKind::Overflow`] pages whose whole body past the header is
+//! payload.  Deleting a slot compacts the payload region in place; slot
+//! indices stay stable (record ids embed them) and dead slots are reused
+//! by later inserts.
+
+pub const PAGE_SIZE: usize = 8192;
+pub const HEADER_LEN: usize = 14;
+pub const SLOT_LEN: usize = 4;
+/// Payload capacity of one overflow page (everything past the header).
+pub const OVERFLOW_CAP: usize = PAGE_SIZE - HEADER_LEN;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u16)]
+pub enum PageKind {
+    /// On the free list: contents are garbage.
+    Free = 0,
+    /// Slotted record page (head fragments).
+    Slotted = 1,
+    /// Raw continuation payload of an oversized record.
+    Overflow = 2,
+}
+
+impl PageKind {
+    pub fn from_u16(v: u16) -> Option<PageKind> {
+        match v {
+            0 => Some(PageKind::Free),
+            1 => Some(PageKind::Slotted),
+            2 => Some(PageKind::Overflow),
+            _ => None,
+        }
+    }
+}
+
+/// One in-memory page image.
+pub struct Page {
+    data: Box<[u8; PAGE_SIZE]>,
+}
+
+impl Default for Page {
+    fn default() -> Page {
+        Page::new()
+    }
+}
+
+impl Page {
+    pub fn new() -> Page {
+        Page { data: Box::new([0u8; PAGE_SIZE]) }
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data[..]
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data[..]
+    }
+
+    fn u16_at(&self, off: usize) -> u16 {
+        u16::from_le_bytes([self.data[off], self.data[off + 1]])
+    }
+
+    fn set_u16(&mut self, off: usize, v: u16) {
+        self.data[off..off + 2].copy_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32_at(&self, off: usize) -> u32 {
+        u32::from_le_bytes([self.data[off], self.data[off + 1], self.data[off + 2], self.data[off + 3]])
+    }
+
+    fn set_u32(&mut self, off: usize, v: u32) {
+        self.data[off..off + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    // -- header ----------------------------------------------------------------
+
+    /// Reset to an empty page of the given kind.
+    pub fn init(&mut self, kind: PageKind, page_id: u32) {
+        self.data.fill(0);
+        self.set_u16(0, kind as u16);
+        self.set_u32(2, page_id);
+        self.set_u16(6, 0); // n_slots
+        self.set_u16(8, PAGE_SIZE as u16); // free_off (8192 fits u16)
+        self.set_u32(10, 0); // next
+    }
+
+    pub fn kind(&self) -> Option<PageKind> {
+        PageKind::from_u16(self.u16_at(0))
+    }
+
+    pub fn page_id(&self) -> u32 {
+        self.u32_at(2)
+    }
+
+    pub fn n_slots(&self) -> u16 {
+        self.u16_at(6)
+    }
+
+    fn free_off(&self) -> usize {
+        self.u16_at(8) as usize
+    }
+
+    pub fn next(&self) -> u32 {
+        self.u32_at(10)
+    }
+
+    pub fn set_next(&mut self, next: u32) {
+        self.set_u32(10, next);
+    }
+
+    // -- slot directory --------------------------------------------------------
+
+    fn slot_entry(&self, slot: u16) -> (usize, usize) {
+        let base = HEADER_LEN + slot as usize * SLOT_LEN;
+        (self.u16_at(base) as usize, self.u16_at(base + 2) as usize)
+    }
+
+    fn set_slot_entry(&mut self, slot: u16, off: usize, len: usize) {
+        let base = HEADER_LEN + slot as usize * SLOT_LEN;
+        self.set_u16(base, off as u16);
+        self.set_u16(base + 2, len as u16);
+    }
+
+    fn dead_slot(&self) -> Option<u16> {
+        (0..self.n_slots()).find(|&i| {
+            let (off, _) = self.slot_entry(i);
+            off == 0
+        })
+    }
+
+    /// Count of live (non-deleted) slots.
+    pub fn live_slots(&self) -> usize {
+        (0..self.n_slots())
+            .filter(|&i| {
+                let (off, _) = self.slot_entry(i);
+                off != 0
+            })
+            .count()
+    }
+
+    /// Bytes a new record payload could occupy right now, accounting for
+    /// the slot-directory growth an insert may need.
+    pub fn free_space(&self) -> usize {
+        let dir_growth = if self.dead_slot().is_some() { 0 } else { SLOT_LEN };
+        let dir_end = HEADER_LEN + self.n_slots() as usize * SLOT_LEN + dir_growth;
+        self.free_off().saturating_sub(dir_end)
+    }
+
+    /// Insert a payload; returns its slot index, or `None` when it does
+    /// not fit.  Reuses the lowest dead slot before growing the directory.
+    pub fn insert(&mut self, payload: &[u8]) -> Option<u16> {
+        if payload.is_empty() || payload.len() > self.free_space() {
+            return None;
+        }
+        let off = self.free_off() - payload.len();
+        let slot = match self.dead_slot() {
+            Some(s) => s,
+            None => {
+                let s = self.n_slots();
+                self.set_u16(6, s + 1);
+                s
+            }
+        };
+        self.data[off..off + payload.len()].copy_from_slice(payload);
+        self.set_u16(8, off as u16);
+        self.set_slot_entry(slot, off, payload.len());
+        Some(slot)
+    }
+
+    pub fn read_slot(&self, slot: u16) -> Option<&[u8]> {
+        if slot >= self.n_slots() {
+            return None;
+        }
+        let (off, len) = self.slot_entry(slot);
+        if off == 0 {
+            return None;
+        }
+        Some(&self.data[off..off + len])
+    }
+
+    /// Delete a slot and compact the payload region so `free_space` stays
+    /// exact.  Surviving slot indices (and so record ids) are unchanged.
+    pub fn delete_slot(&mut self, slot: u16) {
+        if slot >= self.n_slots() {
+            return;
+        }
+        let (off, _) = self.slot_entry(slot);
+        if off == 0 {
+            return;
+        }
+        self.set_slot_entry(slot, 0, 0);
+        self.compact();
+    }
+
+    /// Repack live payloads against the end of the page, highest offset
+    /// first, so deleted space is reclaimed.  Moves are always toward
+    /// higher addresses, which `copy_within` handles in place.
+    fn compact(&mut self) {
+        let mut live: Vec<(u16, usize, usize)> = (0..self.n_slots())
+            .filter_map(|i| {
+                let (off, len) = self.slot_entry(i);
+                (off != 0).then_some((i, off, len))
+            })
+            .collect();
+        live.sort_by(|a, b| b.1.cmp(&a.1));
+        let mut dest = PAGE_SIZE;
+        for (slot, off, len) in live {
+            dest -= len;
+            if dest != off {
+                self.data.copy_within(off..off + len, dest);
+                self.set_slot_entry(slot, dest, len);
+            }
+        }
+        self.set_u16(8, dest as u16);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_and_header_round_trip() {
+        let mut p = Page::new();
+        p.init(PageKind::Slotted, 7);
+        assert_eq!(p.kind(), Some(PageKind::Slotted));
+        assert_eq!(p.page_id(), 7);
+        assert_eq!(p.n_slots(), 0);
+        assert_eq!(p.next(), 0);
+        p.set_next(99);
+        assert_eq!(p.next(), 99);
+        assert_eq!(p.free_space(), PAGE_SIZE - HEADER_LEN - SLOT_LEN);
+    }
+
+    #[test]
+    fn insert_read_delete_compacts() {
+        let mut p = Page::new();
+        p.init(PageKind::Slotted, 1);
+        let a = p.insert(b"alpha").unwrap();
+        let b = p.insert(b"beta-beta").unwrap();
+        let c = p.insert(b"gamma").unwrap();
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!(p.read_slot(b).unwrap(), b"beta-beta");
+        let before = p.free_space();
+        p.delete_slot(b);
+        assert_eq!(p.read_slot(b), None);
+        assert_eq!(p.free_space(), before + b"beta-beta".len(), "compaction reclaims space");
+        // survivors kept their bytes and their slot ids
+        assert_eq!(p.read_slot(a).unwrap(), b"alpha");
+        assert_eq!(p.read_slot(c).unwrap(), b"gamma");
+        // dead slot is reused before the directory grows
+        let d = p.insert(b"delta").unwrap();
+        assert_eq!(d, b);
+        assert_eq!(p.n_slots(), 3);
+        assert_eq!(p.live_slots(), 3);
+    }
+
+    #[test]
+    fn insert_rejects_overflow() {
+        let mut p = Page::new();
+        p.init(PageKind::Slotted, 1);
+        let cap = p.free_space();
+        assert!(p.insert(&vec![1u8; cap + 1]).is_none());
+        let slot = p.insert(&vec![2u8; cap]).unwrap();
+        assert_eq!(p.free_space(), 0);
+        assert_eq!(p.read_slot(slot).unwrap().len(), cap);
+    }
+
+    #[test]
+    fn delete_all_empties_page() {
+        let mut p = Page::new();
+        p.init(PageKind::Slotted, 1);
+        let a = p.insert(b"x").unwrap();
+        let b = p.insert(b"y").unwrap();
+        p.delete_slot(a);
+        p.delete_slot(b);
+        assert_eq!(p.live_slots(), 0);
+        assert_eq!(p.free_space(), PAGE_SIZE - HEADER_LEN - SLOT_LEN * 2);
+    }
+}

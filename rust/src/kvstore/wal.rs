@@ -1,0 +1,251 @@
+//! Write-ahead journal for the store's *inventory*: which blocks,
+//! sessions, and prefix snapshots exist, and where their payloads live.
+//!
+//! One JSON object per line, append-only:
+//!
+//! ```text
+//! {"op":"blk","id":7,"rec":131072,"rows":16,"d":64,"bytes":8320}
+//! {"op":"bdel","id":7}
+//! {"op":"sput","id":"chat-7","desc":{...}}
+//! {"op":"srem","id":"chat-7"}
+//! {"op":"pput","pid":3,"desc":{...}}
+//! {"op":"pdel","pid":3}
+//! ```
+//!
+//! Payload bytes (f32 KV data, sidecars) never pass through the journal —
+//! JSON cannot carry `inf`/`NaN` bit patterns — only record ids into the
+//! page store.  Replay folds the lines into the final inventory; a
+//! truncated or garbled tail (torn final append) ends replay at the last
+//! whole record instead of failing the boot.  A *checkpoint* rewrites the
+//! journal to exactly the live inventory (tmp file + fsync + atomic
+//! rename), which is also the store's compaction.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    BlockPut { id: u64, rec: u64, rows: usize, d: usize, bytes: usize },
+    BlockDel { id: u64 },
+    SessionPut { id: String, desc: Json },
+    SessionDel { id: String },
+    PrefixPut { pid: u64, desc: Json },
+    PrefixDel { pid: u64 },
+}
+
+impl WalRecord {
+    pub fn to_line(&self) -> String {
+        let v = match self {
+            WalRecord::BlockPut { id, rec, rows, d, bytes } => json::obj(vec![
+                ("op", json::s("blk")),
+                ("id", json::n(*id as f64)),
+                ("rec", json::n(*rec as f64)),
+                ("rows", json::n(*rows as f64)),
+                ("d", json::n(*d as f64)),
+                ("bytes", json::n(*bytes as f64)),
+            ]),
+            WalRecord::BlockDel { id } => {
+                json::obj(vec![("op", json::s("bdel")), ("id", json::n(*id as f64))])
+            }
+            WalRecord::SessionPut { id, desc } => json::obj(vec![
+                ("op", json::s("sput")),
+                ("id", json::s(id.clone())),
+                ("desc", desc.clone()),
+            ]),
+            WalRecord::SessionDel { id } => {
+                json::obj(vec![("op", json::s("srem")), ("id", json::s(id.clone()))])
+            }
+            WalRecord::PrefixPut { pid, desc } => json::obj(vec![
+                ("op", json::s("pput")),
+                ("pid", json::n(*pid as f64)),
+                ("desc", desc.clone()),
+            ]),
+            WalRecord::PrefixDel { pid } => {
+                json::obj(vec![("op", json::s("pdel")), ("pid", json::n(*pid as f64))])
+            }
+        };
+        v.to_string()
+    }
+
+    pub fn from_line(line: &str) -> Result<WalRecord> {
+        let v = Json::parse(line)?;
+        let op = v.get("op")?.as_str()?;
+        Ok(match op {
+            "blk" => WalRecord::BlockPut {
+                id: v.get("id")?.as_i64()? as u64,
+                rec: v.get("rec")?.as_i64()? as u64,
+                rows: v.get("rows")?.as_usize()?,
+                d: v.get("d")?.as_usize()?,
+                bytes: v.get("bytes")?.as_usize()?,
+            },
+            "bdel" => WalRecord::BlockDel { id: v.get("id")?.as_i64()? as u64 },
+            "sput" => WalRecord::SessionPut {
+                id: v.get("id")?.as_str()?.to_string(),
+                desc: v.get("desc")?.clone(),
+            },
+            "srem" => WalRecord::SessionDel { id: v.get("id")?.as_str()?.to_string() },
+            "pput" => WalRecord::PrefixPut {
+                pid: v.get("pid")?.as_i64()? as u64,
+                desc: v.get("desc")?.clone(),
+            },
+            "pdel" => WalRecord::PrefixDel { pid: v.get("pid")?.as_i64()? as u64 },
+            other => bail!("unknown WAL op {other:?}"),
+        })
+    }
+}
+
+pub struct Wal {
+    path: PathBuf,
+    out: BufWriter<File>,
+}
+
+impl Wal {
+    /// Open the journal for appending (creating it if missing).  Call
+    /// [`Wal::replay`] *before* this to read the existing records.
+    pub fn open(path: &Path) -> Result<Wal> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        Ok(Wal { path: path.to_path_buf(), out: BufWriter::new(file) })
+    }
+
+    /// Fold the journal into its surviving records.  Stops quietly at the
+    /// first unparsable line (a torn tail from a crash mid-append).
+    pub fn replay(path: &Path) -> Result<Vec<WalRecord>> {
+        let mut text = String::new();
+        match File::open(path) {
+            Ok(mut f) => {
+                f.read_to_string(&mut text)
+                    .with_context(|| format!("read journal {}", path.display()))?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e).with_context(|| format!("open journal {}", path.display())),
+        }
+        let mut out = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match WalRecord::from_line(line) {
+                Ok(rec) => out.push(rec),
+                Err(_) => break, // torn tail: everything before it is intact
+            }
+        }
+        Ok(out)
+    }
+
+    /// Append one record.  Flushed to the OS immediately; durable to the
+    /// device only at the next [`Wal::checkpoint`] (or OS writeback).
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let mut line = rec.to_line();
+        line.push('\n');
+        self.out.write_all(line.as_bytes())?;
+        self.out.flush()?;
+        Ok(())
+    }
+
+    /// Atomically replace the journal with exactly `records`: write a tmp
+    /// file, fsync it, rename over the live journal, reopen for append.
+    pub fn checkpoint(&mut self, records: &[WalRecord]) -> Result<()> {
+        let tmp = self.path.with_extension("tmp");
+        {
+            let mut f = BufWriter::new(File::create(&tmp)?);
+            for rec in records {
+                let mut line = rec.to_line();
+                line.push('\n');
+                f.write_all(line.as_bytes())?;
+            }
+            f.flush()?;
+            f.get_ref().sync_data()?;
+        }
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("swap journal {}", self.path.display()))?;
+        let file = OpenOptions::new().append(true).open(&self.path)?;
+        self.out = BufWriter::new(file);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::TempDir;
+    use super::*;
+
+    fn sample() -> Vec<WalRecord> {
+        vec![
+            WalRecord::BlockPut { id: 1, rec: 65536, rows: 16, d: 8, bytes: 1152 },
+            WalRecord::SessionPut {
+                id: "chat-7".into(),
+                desc: Json::parse(r#"{"pending":3,"turns":2}"#).unwrap(),
+            },
+            WalRecord::PrefixPut { pid: 9, desc: Json::parse(r#"{"tokens":[1,2,3]}"#).unwrap() },
+            WalRecord::BlockDel { id: 1 },
+            WalRecord::SessionDel { id: "chat-7".into() },
+            WalRecord::PrefixDel { pid: 9 },
+        ]
+    }
+
+    #[test]
+    fn records_round_trip_as_lines() {
+        for rec in sample() {
+            let line = rec.to_line();
+            assert_eq!(WalRecord::from_line(&line).unwrap(), rec, "round trip of {line}");
+        }
+    }
+
+    #[test]
+    fn append_and_replay() {
+        let dir = TempDir::new("wal");
+        let path = dir.path().join("wal.log");
+        {
+            let mut wal = Wal::open(&path).unwrap();
+            for rec in sample() {
+                wal.append(&rec).unwrap();
+            }
+        }
+        assert_eq!(Wal::replay(&path).unwrap(), sample());
+        assert_eq!(Wal::replay(&dir.path().join("missing")).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn torn_tail_ends_replay_cleanly() {
+        let dir = TempDir::new("wal-torn");
+        let path = dir.path().join("wal.log");
+        {
+            let mut wal = Wal::open(&path).unwrap();
+            for rec in sample() {
+                wal.append(&rec).unwrap();
+            }
+        }
+        // simulate a crash mid-append: chop the file inside the last line
+        let text = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 4]).unwrap();
+        let got = Wal::replay(&path).unwrap();
+        assert_eq!(got, sample()[..sample().len() - 1].to_vec());
+    }
+
+    #[test]
+    fn checkpoint_rewrites_atomically() {
+        let dir = TempDir::new("wal-ckpt");
+        let path = dir.path().join("wal.log");
+        let mut wal = Wal::open(&path).unwrap();
+        for rec in sample() {
+            wal.append(&rec).unwrap();
+        }
+        let compacted = vec![WalRecord::BlockPut { id: 2, rec: 4, rows: 4, d: 2, bytes: 96 }];
+        wal.checkpoint(&compacted).unwrap();
+        // post-checkpoint appends land after the compacted inventory
+        wal.append(&WalRecord::BlockDel { id: 2 }).unwrap();
+        drop(wal);
+        let got = Wal::replay(&path).unwrap();
+        assert_eq!(got, vec![compacted[0].clone(), WalRecord::BlockDel { id: 2 }]);
+        assert!(!dir.path().join("wal.tmp").exists(), "tmp file is consumed by the rename");
+    }
+}

@@ -44,6 +44,7 @@ pub mod engine;
 pub mod harness;
 pub mod kvcache;
 pub mod kvpool;
+pub mod kvstore;
 pub mod metrics;
 #[cfg(feature = "xla")]
 pub mod runtime;

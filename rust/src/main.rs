@@ -4,7 +4,7 @@
 //!   info                         backend + model inventory
 //!   generate --prompt "..."      one-shot generation with any policy
 //!   serve [--port 7199]          TCP server (v1 wire protocol, NDJSON)
-//!   ops stats|info|sessions|drain|undrain [--port 7199]
+//!   ops stats|info|sessions|drain|undrain|checkpoint [--port 7199]
 //!                                control plane of a running server
 //!   tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
 //!                                regenerate the paper's tables/figures
@@ -65,8 +65,9 @@ USAGE:
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
               [--max-queue 256] [--sessions 64] [--session-ttl 600]
               [--pool-mb N] [--session-mb N] [--prefix-cache]
-  lagkv ops stats|info|sessions|drain|undrain [--port 7199] [--model M]
-            [--delete SESSION_ID]
+              [--store-dir DIR]
+  lagkv ops stats|info|sessions|drain|undrain|checkpoint [--port 7199]
+            [--model M] [--delete SESSION_ID]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
 
@@ -74,8 +75,12 @@ BACKENDS: cpu (default, hermetic) | xla (--features xla + make artifacts)
 POLICIES: lagkv localkv l2norm h2o streaming random none
 WIRE PROTOCOL v1: see DESIGN.md §9 ({"v":1,"op":...} envelopes, NDJSON
   event streams, typed {"code","message"} errors, ops control plane:
-  stats/sessions/info/drain/undrain; legacy bare request lines accepted
-  via the compat shim).  Talk to it from Rust through lagkv::client::Client.
+  stats/sessions/info/drain/undrain/checkpoint; legacy bare request lines
+  accepted via the compat shim).  Talk to it from Rust through
+  lagkv::client::Client.
+TIERED STORAGE: --store-dir DIR spills cold frozen KV blocks to disk under
+  pool pressure and WAL-journals detached sessions + prefix snapshots, so
+  both survive a restart (see DESIGN.md §11).
 "#;
 
 fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
@@ -181,6 +186,7 @@ fn serve(args: &Args) -> Result<()> {
         },
         pool_max_bytes: serving.pool_max_bytes,
         prefix_cache: serving.prefix_cache.then(lagkv::kvpool::PrefixConfig::default),
+        store_dir: serving.store_dir.clone(),
     };
     let router = Arc::new(Router::start_with(EngineSpec::from_args(args)?, &models, router_cfg));
     let server = Arc::new(Server::new(router));
@@ -209,7 +215,7 @@ fn ops(args: &Args) -> Result<()> {
                 }
                 println!(
                     "  coord: completed {} cancelled {} failed {} queued {}/{} \
-                     resumed {} shed {}+{} pool-rejected {}",
+                     resumed {} shed {}+{} spilled {} pool-rejected {}",
                     c.completed,
                     c.cancelled,
                     c.failed,
@@ -218,6 +224,7 @@ fn ops(args: &Args) -> Result<()> {
                     c.sessions_resumed,
                     c.prefix_shed,
                     c.sessions_shed,
+                    c.blocks_spilled,
                     c.pool_rejected,
                 );
                 println!(
@@ -278,7 +285,25 @@ fn ops(args: &Args) -> Result<()> {
                 resp.draining, resp.in_flight
             );
         }
-        other => bail!("unknown ops action {other:?} (stats|info|sessions|drain|undrain)"),
+        "checkpoint" => {
+            let resp = client.checkpoint()?;
+            if resp.models.is_empty() {
+                println!("no disk stores (server runs without --store-dir)");
+            }
+            for m in &resp.models {
+                match &m.result {
+                    Ok(cp) => println!(
+                        "{}: checkpointed {} session(s), {} prefix(es), {} block(s) \
+                         across {} page(s)",
+                        m.model, cp.sessions, cp.prefixes, cp.blocks, cp.pages
+                    ),
+                    Err(e) => println!("{}: checkpoint failed: {e}", m.model),
+                }
+            }
+        }
+        other => bail!(
+            "unknown ops action {other:?} (stats|info|sessions|drain|undrain|checkpoint)"
+        ),
     }
     Ok(())
 }

@@ -20,6 +20,10 @@ pub struct PoolGauges {
     pub resident_blocks: usize,
     /// Idle fraction of the pool's total allocation, in percent.
     pub fragmentation_pct: f64,
+    /// Payload bytes demoted to the disk tier (not resident, not budget).
+    pub spilled_bytes: usize,
+    /// Live blocks currently on the disk tier.
+    pub spilled_blocks: usize,
     /// The configured byte budget, when one is set.
     pub budget_bytes: Option<usize>,
     /// Prefix-cache gauges, when the deployment runs one ([`PrefixStats`]
@@ -35,6 +39,8 @@ impl From<&PoolStats> for PoolGauges {
             high_water_bytes: s.high_water_bytes,
             resident_blocks: s.resident_blocks,
             fragmentation_pct: s.fragmentation() * 100.0,
+            spilled_bytes: s.spilled_bytes,
+            spilled_blocks: s.spilled_blocks,
             budget_bytes: s.budget,
             prefix: None,
         }
@@ -65,6 +71,15 @@ impl PoolGauges {
             self.free_bytes as f64 / 1024.0,
             self.fragmentation_pct,
         );
+        // Tier gauge only when the disk tier holds data, so memory-only
+        // deployments keep their pinned one-line shape.
+        if self.spilled_blocks > 0 {
+            out.push_str(&format!(
+                ", spilled {:.1} KiB ({} blocks)",
+                self.spilled_bytes as f64 / 1024.0,
+                self.spilled_blocks,
+            ));
+        }
         if let Some(p) = &self.prefix {
             out.push_str(&format!(
                 "\nprefix: {} entries {:.1} KiB, hits {} / misses {}, \
@@ -225,6 +240,8 @@ mod tests {
             high_water_bytes: 5120,
             resident_blocks: 3,
             free_blocks: 1,
+            spilled_bytes: 0,
+            spilled_blocks: 0,
             budget: Some(8192),
         };
         let g = PoolGauges::from(&s);
@@ -235,9 +252,14 @@ mod tests {
         assert!(line.contains("4.0 KiB"), "rendered: {line}");
         assert!(line.contains("3 blocks"), "rendered: {line}");
         assert!(line.contains("fragmentation 20.0%"), "rendered: {line}");
+        assert!(!line.contains("spilled"), "no tier segment while the disk tier is empty");
         let unbudgeted = PoolGauges::from(&PoolStats { budget: None, ..s });
         assert!(unbudgeted.render().contains("budget inf"));
         assert!(!unbudgeted.render().contains("prefix:"), "no prefix line unless attached");
+        let spilled =
+            PoolGauges::from(&PoolStats { spilled_bytes: 2048, spilled_blocks: 2, ..s });
+        let line = spilled.render();
+        assert!(line.contains("spilled 2.0 KiB (2 blocks)"), "rendered: {line}");
     }
 
     #[test]
@@ -249,6 +271,8 @@ mod tests {
             high_water_bytes: 2048,
             resident_blocks: 2,
             free_blocks: 0,
+            spilled_bytes: 0,
+            spilled_blocks: 0,
             budget: None,
         };
         let p = PrefixStats {

@@ -33,9 +33,9 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::api::{
-    self, ApiRequest, CancelAck, CoordCounters, DrainResponse, InfoResponse, ModelSessions,
-    ModelStats, SessionGauges, SessionsRequest, SessionsResponse, StatsResponse,
-    UndrainResponse,
+    self, ApiRequest, CancelAck, CheckpointResponse, CoordCounters, DrainResponse,
+    InfoResponse, ModelCheckpoint, ModelSessions, ModelStats, SessionGauges, SessionsRequest,
+    SessionsResponse, StatsResponse, UndrainResponse,
 };
 use crate::config::PolicyKind;
 use crate::coordinator::{ApiError, GenHandle, Response, Router};
@@ -126,6 +126,21 @@ impl Server {
             models.push(ModelSessions { model: name, sessions: st.summaries() });
         }
         Ok(SessionsResponse { models, deleted })
+    }
+
+    /// Build the `checkpoint` op reply: flush every variant's disk store.
+    /// A deployment without `--store-dir` answers with an empty list.
+    pub fn checkpoint_response(&self) -> CheckpointResponse {
+        let models = self
+            .router
+            .checkpoint()
+            .into_iter()
+            .map(|(model, result)| ModelCheckpoint {
+                model,
+                result: result.map_err(|e| format!("{e:#}")),
+            })
+            .collect();
+        CheckpointResponse { models }
     }
 
     /// Build the `info` op reply.  Engines load asynchronously at boot, so
@@ -265,6 +280,9 @@ impl Server {
                         UndrainResponse { draining: false, in_flight: self.live_requests() };
                     write_line(&writer, &resp.to_json().to_string())?;
                 }
+                Ok(ApiRequest::Checkpoint(_)) => {
+                    write_line(&writer, &self.checkpoint_response().to_json().to_string())?;
+                }
                 Err(e) => {
                     write_line(&writer, &obj(vec![("error", e.to_json())]).to_string())?;
                 }
@@ -363,6 +381,15 @@ mod tests {
         assert_eq!(StatsResponse::from_json(&v).unwrap(), stats);
         srv.router.drain();
         assert!(srv.stats_response().draining);
+    }
+
+    #[test]
+    fn checkpoint_without_a_store_is_empty() {
+        let srv = server(&["llama_like"]);
+        let cp = srv.checkpoint_response();
+        assert!(cp.models.is_empty(), "no --store-dir, nothing to flush");
+        let v = Json::parse(&cp.to_json().to_string()).unwrap();
+        assert_eq!(CheckpointResponse::from_json(&v).unwrap(), cp);
     }
 
     #[test]

@@ -3,21 +3,31 @@
 //! Taxonomy (see ROADMAP "Open items"):
 //! * **property** — Eq. 10 ledger reconciliation, sink immunity, per-head
 //!   shape contract, top-k tie/NaN behavior, stream/one-shot parity of the
-//!   serving API, under randomized configs;
+//!   serving API, tier churn against a real disk store (per-tier ledger
+//!   exactness + bit-identical spill→fault round trips), and WAL
+//!   checkpoint/crash-replay inventory reproduction, under randomized
+//!   configs;
 //! * **sim-regression** — the paper's headline ordering (LagKV retains
 //!   more needle tokens than recency eviction at equal compression) on the
 //!   model-free simulator.
+//!
+//! The tiered-storage properties write only under the system tempdir
+//! (removed on drop) — the suite stays hermetic.
+
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use lagkv::backend::EngineSpec;
 use lagkv::compress::driver::CompressionEvent;
 use lagkv::compress::maybe_compress;
-use lagkv::compress::policy::make_policy;
+use lagkv::compress::policy::{make_policy, Scorer};
 use lagkv::compress::topk::{topk_indices, topk_indices_into};
 use lagkv::config::{CompressionConfig, PolicyKind};
 use lagkv::coordinator::{Event, GenerateParams, Response, Router};
 use lagkv::engine::Engine;
 use lagkv::kvcache::{ratio, KvCache};
-use lagkv::kvpool::{BlockPool, PrefixCache, PrefixConfig};
+use lagkv::kvpool::{block_bytes, BlockPool, PrefixCache, PrefixConfig};
+use lagkv::kvstore::KvStore;
 use lagkv::sim::{self, SimSpec};
 use lagkv::util::argmax;
 use lagkv::util::prop;
@@ -1075,6 +1085,364 @@ fn prop_prefix_tree_ledger_reconciles_under_churn() {
         }
         if s.free_bytes > s.high_water_bytes {
             return Err("free list grew past the high-water mark".into());
+        }
+        Ok(())
+    });
+}
+
+/// Unique scratch directory under the system tempdir, removed on drop —
+/// the tiered-storage properties stay hermetic like everything else here
+/// (kvstore's own TempDir helper is crate-internal).
+struct TestDir(std::path::PathBuf);
+
+impl TestDir {
+    fn new(tag: &str) -> TestDir {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let path =
+            std::env::temp_dir().join(format!("lagkv-prop-{tag}-{}-{n}", std::process::id()));
+        std::fs::create_dir_all(&path).unwrap();
+        TestDir(path)
+    }
+
+    fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for TestDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Every head's full contents of a 1-layer cache, gathered through the
+/// fault-in path (the gather itself promotes spilled blocks).
+type HeadSnap = (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>);
+
+fn tier_snap(c: &KvCache) -> Vec<HeadSnap> {
+    (0..c.n_heads)
+        .map(|h| (c.head_k(0, h), c.head_v(0, h), c.positions(0, h), c.head_attn(0, h)))
+        .collect()
+}
+
+fn grown_cache(
+    pool: &Arc<BlockPool>,
+    d: usize,
+    n: usize,
+    cfg: &CompressionConfig,
+    scorer: &mut dyn Scorer,
+    rng: &mut Rng,
+) -> Result<KvCache, String> {
+    let mut c = KvCache::new_in(Arc::clone(pool), 1, 1, d);
+    for _ in 0..n {
+        fill_one(&mut c, rng);
+        maybe_compress(&mut c, cfg, scorer).map_err(|e| format!("driver: {e:#}"))?;
+    }
+    Ok(c)
+}
+
+/// Tier churn (disk-spill tentpole): under random append / demote /
+/// fault-in / clone / drop interleavings against a real on-disk store,
+/// the per-tier ledger stays *exact* after every op — uniform block
+/// geometry makes both tiers countable to the byte — every spilled
+/// payload faults back bit-identical, and tearing every owner down
+/// empties both tiers and releases every store claim.
+#[test]
+fn prop_tier_churn_keeps_ledger_exact_and_spill_bit_identical() {
+    prop::check(8, |g| {
+        let dir = TestDir::new("tier");
+        let store = Arc::new(KvStore::open(dir.path()).map_err(|e| format!("open: {e:#}"))?);
+        let rpb = 4usize;
+        let pool = BlockPool::unbounded(rpb);
+        pool.bind_store(Arc::clone(&store));
+        let d = g.usize(1, 3);
+        let nh = g.usize(1, 2);
+        let bpb = block_bytes(rpb, d);
+        let cfg = CompressionConfig {
+            policy: PolicyKind::LagKv,
+            sink: g.usize(0, 3),
+            lag: [4usize, 8][g.usize(0, 1)],
+            ratio: 0.5,
+            ..Default::default()
+        };
+        let mut scorer = make_policy(cfg.policy, g.case as u64);
+        let mut rng = Rng::seed_from(g.case as u64 + 201);
+        let mut caches = vec![KvCache::new_in(pool.clone(), 1, nh, d)];
+        for _ in 0..g.usize(25, 90) {
+            match g.usize(0, 9) {
+                0..=4 => {
+                    let i = g.usize(0, caches.len() - 1);
+                    fill_one(&mut caches[i], &mut rng);
+                    maybe_compress(&mut caches[i], &cfg, scorer.as_mut())
+                        .map_err(|e| format!("driver: {e:#}"))?;
+                }
+                5..=6 => {
+                    // demote a sliver or everything; the call's own
+                    // accounting must agree with the gauge deltas
+                    let target = if g.bool() { usize::MAX } else { g.usize(1, 2 * bpb) };
+                    let before = pool.stats();
+                    let (nblocks, nbytes) = pool.spill(target);
+                    let after = pool.stats();
+                    if nbytes != nblocks * bpb {
+                        return Err(format!(
+                            "spill returned {nbytes} bytes for {nblocks} blocks of {bpb}"
+                        ));
+                    }
+                    if after.spilled_blocks != before.spilled_blocks + nblocks
+                        || after.spilled_bytes != before.spilled_bytes + nbytes
+                    {
+                        return Err("spilled gauges diverged from the spill return".into());
+                    }
+                    if after.resident_bytes() + nbytes != before.resident_bytes() {
+                        return Err("demotion did not move bytes resident -> spilled".into());
+                    }
+                }
+                7 => {
+                    // promote: a full gather after demoting everything
+                    // must reproduce the pre-spill contents bit for bit
+                    let i = g.usize(0, caches.len() - 1);
+                    if caches[i].frozen_blocks() > 0 {
+                        let snap = tier_snap(&caches[i]);
+                        pool.spill(usize::MAX);
+                        if tier_snap(&caches[i]) != snap {
+                            return Err("fault-in changed a spilled block's bytes".into());
+                        }
+                    }
+                }
+                8 => {
+                    // detach-style clone: shares frozen blocks CoW, and a
+                    // shared block still demotes/faults exactly once
+                    if caches.len() < 4 {
+                        let i = g.usize(0, caches.len() - 1);
+                        let c = caches[i].clone();
+                        caches.push(c);
+                    }
+                }
+                _ => {
+                    if caches.len() > 1 {
+                        let i = g.usize(0, caches.len() - 1);
+                        caches.swap_remove(i);
+                    }
+                }
+            }
+            // per-op tier reconciliation: every frozen block is full (rpb
+            // rows at width d), so both tiers are exactly countable
+            let s = pool.stats();
+            if s.spilled_bytes != s.spilled_blocks * bpb {
+                return Err(format!(
+                    "spilled tier out of step: {} bytes vs {} blocks",
+                    s.spilled_bytes, s.spilled_blocks
+                ));
+            }
+            if s.block_bytes != s.resident_blocks * bpb {
+                return Err(format!(
+                    "resident tier out of step: {} bytes vs {} blocks",
+                    s.block_bytes, s.resident_blocks
+                ));
+            }
+            let owned: usize = caches.iter().map(|c| c.exact_bytes()).sum();
+            let pooled = s.resident_bytes() + s.spilled_bytes;
+            if pooled > owned {
+                return Err(format!(
+                    "both tiers together ({pooled}) exceed every owner's footprint ({owned})"
+                ));
+            }
+            let biggest = caches.iter().map(|c| c.exact_bytes()).max().unwrap_or(0);
+            if pooled < biggest {
+                return Err(format!(
+                    "tiers ({pooled}) lost bytes against a single cache's {biggest}"
+                ));
+            }
+        }
+        // deterministic round trip even when the walk never froze: grow
+        // the first cache until it pages, demote everything, fault back
+        for _ in 0..400 {
+            if caches[0].frozen_blocks() > 0 {
+                break;
+            }
+            fill_one(&mut caches[0], &mut rng);
+            maybe_compress(&mut caches[0], &cfg, scorer.as_mut())
+                .map_err(|e| format!("driver: {e:#}"))?;
+        }
+        if caches[0].frozen_blocks() == 0 {
+            return Err("could not freeze a block in 400 appends".into());
+        }
+        let snap = tier_snap(&caches[0]);
+        pool.spill(usize::MAX);
+        let s = pool.stats();
+        if s.resident_blocks != 0 {
+            return Err(format!(
+                "{} blocks stayed resident with no read guard held",
+                s.resident_blocks
+            ));
+        }
+        let total = s.spilled_blocks;
+        if tier_snap(&caches[0]) != snap {
+            return Err("spilled payloads are not bit-identical after fault-in".into());
+        }
+        let s = pool.stats();
+        if s.resident_blocks + s.spilled_blocks != total {
+            return Err("fault-in created or lost blocks".into());
+        }
+        // teardown: dropping every owner (spilled blocks included) must
+        // empty both tiers and release every store claim
+        caches.clear();
+        let s = pool.stats();
+        if s.resident_blocks != 0 || s.resident_bytes() != 0 {
+            return Err(format!("resident tier leaked ({} blocks)", s.resident_blocks));
+        }
+        if s.spilled_blocks != 0 || s.spilled_bytes != 0 {
+            return Err(format!("spilled tier leaked ({} blocks)", s.spilled_blocks));
+        }
+        let (_, _, blocks) = store.inventory_counts();
+        if blocks != 0 {
+            return Err(format!("{blocks} store records survive with no live claim"));
+        }
+        Ok(())
+    });
+}
+
+/// WAL tentpole: a random churn of session / prefix-snapshot journal
+/// puts, removes, supersedes, and mid-run checkpoints — ending in a
+/// crash (drop with no final cleanup) — replays to *exactly* the
+/// surviving inventory: same ids, same counts, every restored cache
+/// bit-identical to what was journaled, removes never resurrect (the
+/// eviction no-resurrect fix), and restored blocks adopt spilled-first
+/// (zero resident bytes until read).
+#[test]
+fn prop_wal_checkpoint_crash_replay_reproduces_inventory() {
+    prop::check(6, |g| {
+        let dir = TestDir::new("wal");
+        let d = g.usize(1, 2);
+        let cfg = CompressionConfig {
+            policy: PolicyKind::LagKv,
+            sink: g.usize(0, 2),
+            lag: 4,
+            ratio: 0.5,
+            ..Default::default()
+        };
+        let mut scorer = make_policy(cfg.policy, g.case as u64);
+        let mut rng = Rng::seed_from(g.case as u64 + 307);
+        let mut want_sessions: HashMap<String, (usize, Vec<HeadSnap>)> = HashMap::new();
+        let mut want_prefixes: HashMap<u64, (usize, Vec<HeadSnap>)> = HashMap::new();
+        {
+            let store =
+                Arc::new(KvStore::open(dir.path()).map_err(|e| format!("open: {e:#}"))?);
+            let pool = BlockPool::unbounded(4);
+            pool.bind_store(Arc::clone(&store));
+            // live handles persist alongside the journal, as in serving —
+            // their claims must not keep records alive past the crash
+            let mut live: Vec<KvCache> = Vec::new();
+            for _ in 0..g.usize(10, 40) {
+                match g.usize(0, 6) {
+                    0..=2 => {
+                        // journal a session; a small id space forces
+                        // supersedes (old claims must release)
+                        let n = g.usize(3, 30);
+                        let c = grown_cache(&pool, d, n, &cfg, scorer.as_mut(), &mut rng)?;
+                        let id = format!("s{}", g.usize(0, 4));
+                        let desc = c.persist(&store).map_err(|e| format!("persist: {e:#}"))?;
+                        store
+                            .journal_session_put(&id, desc)
+                            .map_err(|e| format!("sput: {e:#}"))?;
+                        want_sessions.insert(id, (c.appended, tier_snap(&c)));
+                        live.push(c);
+                    }
+                    3 => {
+                        let id = format!("s{}", g.usize(0, 4));
+                        let dropped = store
+                            .journal_session_remove(&id)
+                            .map_err(|e| format!("srem: {e:#}"))?;
+                        if dropped != want_sessions.remove(&id).is_some() {
+                            return Err(format!("remove of {id} disagrees with the mirror"));
+                        }
+                    }
+                    4 => {
+                        let n = g.usize(3, 30);
+                        let c = grown_cache(&pool, d, n, &cfg, scorer.as_mut(), &mut rng)?;
+                        let desc = c.persist(&store).map_err(|e| format!("persist: {e:#}"))?;
+                        let pid = store
+                            .journal_prefix_put(desc)
+                            .map_err(|e| format!("pput: {e:#}"))?;
+                        want_prefixes.insert(pid, (c.appended, tier_snap(&c)));
+                        live.push(c);
+                    }
+                    5 => {
+                        let next_pid = want_prefixes.keys().next().copied();
+                        if let Some(pid) = next_pid {
+                            if !store
+                                .journal_prefix_remove(pid)
+                                .map_err(|e| format!("prem: {e:#}"))?
+                            {
+                                return Err(format!("journaled prefix {pid} was not dropped"));
+                            }
+                            want_prefixes.remove(&pid);
+                        }
+                    }
+                    _ => {
+                        store.checkpoint().map_err(|e| format!("checkpoint: {e:#}"))?;
+                    }
+                }
+                let (ns, np, _) = store.inventory_counts();
+                if ns != want_sessions.len() || np != want_prefixes.len() {
+                    return Err(format!(
+                        "live inventory ({ns} sessions, {np} prefixes) drifted from the \
+                         mirror ({}, {})",
+                        want_sessions.len(),
+                        want_prefixes.len()
+                    ));
+                }
+            }
+            store.checkpoint().map_err(|e| format!("checkpoint: {e:#}"))?;
+            // a torn tail of pure removes after the last checkpoint must
+            // still replay: evictions never resurrect
+            if g.bool() {
+                let victim = want_sessions.keys().next().cloned();
+                if let Some(id) = victim {
+                    store.journal_session_remove(&id).map_err(|e| format!("srem: {e:#}"))?;
+                    want_sessions.remove(&id);
+                }
+            }
+            // crash: the store and every live handle drop right here,
+            // with no further checkpoint
+        }
+        let store = Arc::new(KvStore::open(dir.path()).map_err(|e| format!("reopen: {e:#}"))?);
+        let (ns, np, _) = store.inventory_counts();
+        if ns != want_sessions.len() || np != want_prefixes.len() {
+            return Err(format!(
+                "replay produced ({ns} sessions, {np} prefixes), expected ({}, {})",
+                want_sessions.len(),
+                want_prefixes.len()
+            ));
+        }
+        let pool = BlockPool::unbounded(4);
+        pool.bind_store(Arc::clone(&store));
+        let mut handles = HashMap::new();
+        for (id, desc) in store.boot_sessions() {
+            let Some(want) = want_sessions.get(&id) else {
+                return Err(format!("session {id} resurrected after removal"));
+            };
+            let resident_before = pool.stats().resident_blocks;
+            let c = KvCache::restore(&pool, &store, &desc, &mut handles)
+                .map_err(|e| format!("restore {id}: {e:#}"))?;
+            if pool.stats().resident_blocks != resident_before {
+                return Err("restore faulted blocks in before first read".into());
+            }
+            if c.appended != want.0 || tier_snap(&c) != want.1 {
+                return Err(format!("session {id} did not restore bit-identically"));
+            }
+        }
+        for (pid, desc) in store.boot_prefixes() {
+            let Some(want) = want_prefixes.get(&pid) else {
+                return Err(format!("prefix snapshot {pid} resurrected after removal"));
+            };
+            let c = KvCache::restore(&pool, &store, &desc, &mut handles)
+                .map_err(|e| format!("restore prefix {pid}: {e:#}"))?;
+            if c.appended != want.0 || tier_snap(&c) != want.1 {
+                return Err(format!("prefix snapshot {pid} did not restore bit-identically"));
+            }
         }
         Ok(())
     });

@@ -9,7 +9,8 @@
 //!     that a resume allocates only tail blocks),
 //!   * the b=1-kill acceptance bench: n=2048 resume through the legacy
 //!     copy-storm loop vs incremental b=1 vs the packed wide-bucket walk
-//!     (>=5x asserted; results land in BENCH_prefill.json),
+//!     (>=5x asserted; results plus p50/p90/p99 segment-latency rows
+//!     from the telemetry `HistogramRegistry` land in BENCH_prefill.json),
 //!   * prefix-hit prefill on a shared-prefix workload (radix prefix
 //!     cache: zero deep row copies asserted via the pool ledger, fewer
 //!     backend prefill tokens than cold, hit/miss/reuse gauges),
@@ -475,6 +476,7 @@ fn legacy_copy_storm_prefill_onto(
 /// acceptance bound.  Results are written to BENCH_prefill.json.
 fn bench_prefill_kill_b1() -> anyhow::Result<()> {
     use lagkv::backend::cpu_ref::CpuRefBackend;
+    use lagkv::telemetry::{HistogramRegistry, Metric};
 
     const N: usize = 2048;
     let (_, tokenizer) = CpuRefBackend::load("llama_like")?;
@@ -551,6 +553,31 @@ fn bench_prefill_kill_b1() -> anyhow::Result<()> {
         assert_eq!(c_legacy.len(layer), c_packed.len(layer), "packed diverged");
     }
 
+    // Latency distribution through the telemetry registry: replay the
+    // packed resume in batcher-sized segments, record each segment's wall
+    // time as a `prefill_segment` sample, and fold the percentile rows the
+    // server reports over `ops stats`/`ops trace` into the JSON below.
+    let registry = HistogramRegistry::new();
+    {
+        let mut c = base.clone();
+        let mut sc = engine.make_scorer(&cfg, 0);
+        for seg in feed.chunks(128) {
+            let t0 = Instant::now();
+            engine.prefill_onto_batched(&mut c, &cfg, sc.as_mut(), seg)?;
+            registry.record(Metric::PrefillSegment, t0.elapsed().as_micros() as u64);
+        }
+    }
+    let seg = registry
+        .summaries()
+        .into_iter()
+        .find(|h| h.metric == Metric::PrefillSegment)
+        .expect("the segment replay recorded samples");
+    row(
+        "resume segment p50 (128-tok chunks)",
+        seg.p50_us as f64 * 1e3,
+        &format!("p90 {} us, p99 {} us over {} segments", seg.p90_us, seg.p99_us, seg.count),
+    );
+
     let speedup_incr = legacy_ns / incr_ns;
     let speedup_packed = legacy_ns / packed_ns;
     assert!(
@@ -564,7 +591,10 @@ fn bench_prefill_kill_b1() -> anyhow::Result<()> {
          \"legacy_b1_ns\": {legacy_ns:.0},\n  \"incremental_b1_ns\": {incr_ns:.0},\n  \
          \"packed_bucket_ns\": {packed_ns:.0},\n  \
          \"speedup_incremental_vs_legacy\": {speedup_incr:.2},\n  \
-         \"speedup_packed_vs_legacy\": {speedup_packed:.2}\n}}\n"
+         \"speedup_packed_vs_legacy\": {speedup_packed:.2},\n  \
+         \"segment_samples\": {},\n  \"segment_p50_us\": {},\n  \
+         \"segment_p90_us\": {},\n  \"segment_p99_us\": {}\n}}\n",
+        seg.count, seg.p50_us, seg.p90_us, seg.p99_us
     );
     std::fs::write("BENCH_prefill.json", json)?;
     println!("  wrote BENCH_prefill.json");

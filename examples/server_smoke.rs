@@ -11,7 +11,11 @@
 //! * memory-pressure admission on a tiny byte-budgeted pool: LRU session
 //!   shedding, the typed `pool-exhausted` rejection, recovery;
 //! * the radix prefix cache: CoW prefix reuse across clients
-//!   (`reused_tokens > 0`), prefix-snapshot shedding under pressure.
+//!   (`reused_tokens > 0`), prefix-snapshot shedding under pressure;
+//! * observability: the `trace` op returns a complete span timeline
+//!   (queued → admitted → prefill segments → first token → compression →
+//!   done) with monotone timestamps, nonzero TTFT, zero dropped events,
+//!   and the `--trace-dir` NDJSON file carries the same spans.
 //!
 //! Exits non-zero on any protocol violation.
 //!
@@ -54,7 +58,9 @@ fn main() -> anyhow::Result<()> {
     let prompt = long_prompt(&probe)?;
 
     let models = vec!["llama_like".to_string()];
-    let cfg = RouterConfig::default();
+    let trace_root =
+        std::env::temp_dir().join(format!("lagkv-smoke-trace-{}", std::process::id()));
+    let cfg = RouterConfig { trace_dir: Some(trace_root.clone()), ..Default::default() };
     let router = Arc::new(Router::start_with(EngineSpec::cpu(), &models, cfg));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));
@@ -160,6 +166,82 @@ fn main() -> anyhow::Result<()> {
     assert!(ms.prefix.is_none(), "no prefix cache configured");
     println!("stats ok: completed {} cancelled {}", ms.coord.completed, ms.coord.cancelled);
 
+    // 3c. Observability end-to-end: stream a request long enough that the
+    //     compression driver fires, then read its span through the `trace`
+    //     op — the full queued → admitted → prefill → first-token →
+    //     compression → done timeline with monotone timestamps, nonzero
+    //     TTFT, and an exactly-zero drop counter.
+    use lagkv::telemetry::SpanEventKind;
+    let traced_prompt = "the of and to in is it on as with ".repeat(16);
+    let params = GenerateParams::new(traced_prompt).lag(8).ratio(0.5).max_new(8);
+    let mut stream = client.generate_stream(3, params)?;
+    let mut compression_events = 0usize;
+    while let Some(item) = stream.next()? {
+        if let StreamItem::Event(Event::Compression { .. }) = item {
+            compression_events += 1;
+        }
+    }
+    assert!(compression_events >= 1, "the traced request must compress");
+    // the span publishes when the slot is reaped, just after the terminal
+    // event reaches us — poll briefly
+    let mut span = None;
+    for _ in 0..100 {
+        let tr = client.trace()?;
+        assert_eq!(tr.models.len(), 1);
+        assert_eq!(tr.models[0].dropped_events, 0, "no span may be dropped: {tr:?}");
+        if let Some(sp) = tr.models[0].spans.iter().find(|sp| sp.id == 3) {
+            span = Some(sp.clone());
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let span = span.expect("the traced request's span must be served by `trace`");
+    let kinds: Vec<SpanEventKind> = span.events.iter().map(|e| e.kind).collect();
+    assert_eq!(kinds.first(), Some(&SpanEventKind::Queued), "span opens queued: {kinds:?}");
+    assert_eq!(kinds.last(), Some(&SpanEventKind::Done), "span closes done: {kinds:?}");
+    assert!(kinds.contains(&SpanEventKind::Admitted), "missing admitted: {kinds:?}");
+    assert!(
+        kinds.contains(&SpanEventKind::PrefillSegment),
+        "missing prefill segments: {kinds:?}"
+    );
+    assert!(kinds.contains(&SpanEventKind::Compression), "missing compression: {kinds:?}");
+    assert!(kinds.contains(&SpanEventKind::FirstToken), "missing first token: {kinds:?}");
+    for w in span.events.windows(2) {
+        assert!(w[0].t_us <= w[1].t_us, "span timestamps must be monotone: {span:?}");
+    }
+    let queued_t = span.first(SpanEventKind::Queued).unwrap().t_us;
+    let first_tok_t = span.first(SpanEventKind::FirstToken).unwrap().t_us;
+    assert!(first_tok_t > queued_t, "TTFT must be nonzero: {span:?}");
+    let tr = client.trace()?;
+    let ttft = tr.models[0]
+        .histograms
+        .iter()
+        .find(|h| h.metric.name() == "ttft")
+        .expect("a completed request must feed the ttft histogram");
+    assert!(ttft.count >= 1 && ttft.p50_us > 0, "ttft summary: {ttft:?}");
+    // the same spans stream to the --trace-dir NDJSON file (the trace
+    // snapshot above forced a drain, which also writes the file)
+    let trace_file = trace_root.join("llama_like.trace.ndjson");
+    let ndjson = std::fs::read_to_string(&trace_file)?;
+    assert!(
+        ndjson.lines().any(|l| l.contains("\"id\":3")),
+        "trace file must carry span 3: {trace_file:?}"
+    );
+    println!(
+        "trace ok: span 3 with {} event(s), ttft p50 {}us, {} NDJSON line(s)",
+        span.events.len(),
+        ttft.p50_us,
+        ndjson.lines().count()
+    );
+
+    // and the `stats` op folds the same histogram summaries in
+    let stats_after = client.stats()?;
+    let ms_hists = &stats_after.models[0].histograms;
+    assert!(
+        ms_hists.iter().any(|h| h.metric.name() == "ttft"),
+        "stats must fold histogram summaries in: {ms_hists:?}"
+    );
+
     // 4. Clean shutdown.  The forwarder thread deregisters its request
     //    right after writing the terminal line; give it a moment.
     drop(client);
@@ -186,6 +268,7 @@ fn main() -> anyhow::Result<()> {
         pool_max_bytes: Some(budget),
         prefix_cache: None,
         store_dir: None,
+        trace_dir: None,
     };
     let router2 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, tiny_cfg));
     let stats2 = router2.stats("llama_like").expect("model stats");
@@ -294,6 +377,7 @@ fn main() -> anyhow::Result<()> {
         pool_max_bytes: Some(prefix_budget),
         prefix_cache: Some(lagkv::kvpool::PrefixConfig { stride: 24, ..Default::default() }),
         store_dir: None,
+        trace_dir: None,
     };
     let router3 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, prefix_cfg));
     let server3 = Arc::new(Server::new(router3));
@@ -387,6 +471,7 @@ fn main() -> anyhow::Result<()> {
         pool_max_bytes: None,
         prefix_cache: Some(lagkv::kvpool::PrefixConfig { stride: 24, ..Default::default() }),
         store_dir: Some(store_root.clone()),
+        trace_dir: None,
     };
     let mut rng4 = Rng::seed_from(91);
     let sys4 = gen_passkey(&mut rng4, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None })
@@ -475,6 +560,7 @@ fn main() -> anyhow::Result<()> {
     stop5.store(true, Ordering::Relaxed);
     serve5.join().expect("restarted store server thread")?;
     std::fs::remove_dir_all(&store_root).ok();
+    std::fs::remove_dir_all(&trace_root).ok();
     println!("SMOKE OK");
     Ok(())
 }

@@ -13,6 +13,7 @@
 //! {"v": 1, "op": "drain"}
 //! {"v": 1, "op": "undrain"}
 //! {"v": 1, "op": "checkpoint"}
+//! {"v": 1, "op": "trace"}
 //! ```
 //!
 //! * **Versioning** — `"v"` names the protocol revision.  Anything other
@@ -36,7 +37,7 @@
 //! [`crate::coordinator::Event`] streams, `cancel_ack` lines, and the
 //! control-plane payloads ([`StatsResponse`], [`SessionsResponse`],
 //! [`InfoResponse`], [`DrainResponse`], [`UndrainResponse`],
-//! [`CheckpointResponse`]).
+//! [`CheckpointResponse`], [`TraceResponse`]).
 
 use std::collections::BTreeMap;
 
@@ -48,6 +49,7 @@ use crate::coordinator::{
 };
 use crate::kvpool::{PoolStats, PrefixStats};
 use crate::kvstore::CheckpointSummary;
+use crate::telemetry::{HistogramSummary, Span};
 use crate::util::json::{arr, n, obj, s, Json};
 
 /// The protocol revision this build speaks.
@@ -131,6 +133,7 @@ pub enum ApiRequest {
     Drain(DrainRequest),
     Undrain(UndrainRequest),
     Checkpoint(CheckpointRequest),
+    Trace(TraceRequest),
 }
 
 impl ApiRequest {
@@ -146,6 +149,7 @@ impl ApiRequest {
             ApiRequest::Drain(r) => r.to_json(),
             ApiRequest::Undrain(r) => r.to_json(),
             ApiRequest::Checkpoint(r) => r.to_json(),
+            ApiRequest::Trace(r) => r.to_json(),
         }
     }
 }
@@ -193,9 +197,13 @@ pub fn parse_line(line: &str) -> Result<ApiRequest, ApiError> {
                 reject_unknown(m, &[], true)?;
                 Ok(ApiRequest::Checkpoint(CheckpointRequest))
             }
+            "trace" => {
+                reject_unknown(m, &[], true)?;
+                Ok(ApiRequest::Trace(TraceRequest))
+            }
             other => Err(bad(format!(
                 "unknown op {other:?} \
-                 (generate|cancel|stats|sessions|info|drain|undrain|checkpoint)"
+                 (generate|cancel|stats|sessions|info|drain|undrain|checkpoint|trace)"
             ))),
         }
     } else if m.contains_key("cancel") {
@@ -449,6 +457,18 @@ impl CheckpointRequest {
     }
 }
 
+/// `{"v":1,"op":"trace"}` — recent request spans plus latency histogram
+/// summaries, per model.  Serves the telemetry ring's live snapshot; the
+/// full history streams to `--trace-dir` NDJSON files (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceRequest;
+
+impl TraceRequest {
+    pub fn to_json(&self) -> Json {
+        obj(envelope("trace"))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Generation responses: one-shot lines and NDJSON event streams
 // ---------------------------------------------------------------------------
@@ -630,6 +650,8 @@ fn pool_stats_to_json(p: &PoolStats) -> Json {
         ("free_blocks", n(p.free_blocks as f64)),
         ("spilled_bytes", n(p.spilled_bytes as f64)),
         ("spilled_blocks", n(p.spilled_blocks as f64)),
+        ("faults", n(p.faults as f64)),
+        ("fault_bytes", n(p.fault_bytes as f64)),
         // Derived, for dashboards; ignored on parse.
         ("resident_bytes", n(p.resident_bytes() as f64)),
         ("budget", p.budget.map(|b| n(b as f64)).unwrap_or(Json::Null)),
@@ -646,6 +668,8 @@ fn pool_stats_from_json(v: &Json) -> Result<PoolStats> {
         free_blocks: v.get("free_blocks")?.as_usize()?,
         spilled_bytes: v.get("spilled_bytes")?.as_usize()?,
         spilled_blocks: v.get("spilled_blocks")?.as_usize()?,
+        faults: u64_field(v, "faults")?,
+        fault_bytes: v.get("fault_bytes")?.as_usize()?,
         budget: match v.get("budget")? {
             Json::Null => None,
             b => Some(b.as_usize()?),
@@ -760,6 +784,9 @@ pub struct ModelStats {
     pub sessions: SessionGauges,
     /// Configured admission-queue capacity (current depth: `coord.queued`).
     pub queue_capacity: usize,
+    /// Latency percentiles from the telemetry registry (empty until the
+    /// model has served traffic; every entry has `count > 0`).
+    pub histograms: Vec<HistogramSummary>,
 }
 
 impl ModelStats {
@@ -777,6 +804,7 @@ impl ModelStats {
                 ]),
             ),
             ("queue_capacity", n(self.queue_capacity as f64)),
+            ("histograms", arr(self.histograms.iter().map(|h| h.to_json()).collect())),
         ])
     }
 
@@ -795,6 +823,12 @@ impl ModelStats {
                 bytes: sg.get("bytes")?.as_usize()?,
             },
             queue_capacity: v.get("queue_capacity")?.as_usize()?,
+            histograms: v
+                .get("histograms")?
+                .as_arr()?
+                .iter()
+                .map(HistogramSummary::from_json)
+                .collect::<Result<Vec<_>>>()?,
         })
     }
 }
@@ -1082,6 +1116,7 @@ impl CheckpointResponse {
                         p.push(("prefixes", n(cp.prefixes as f64)));
                         p.push(("blocks", n(cp.blocks as f64)));
                         p.push(("pages", n(cp.pages as f64)));
+                        p.push(("elapsed_us", n(cp.elapsed_us as f64)));
                     }
                     Err(e) => {
                         p.push(("ok", Json::Bool(false)));
@@ -1105,6 +1140,7 @@ impl CheckpointResponse {
                     prefixes: m.get("prefixes")?.as_usize()?,
                     blocks: m.get("blocks")?.as_usize()?,
                     pages: m.get("pages")?.as_usize()?,
+                    elapsed_us: u64_field(m, "elapsed_us")?,
                 })
             } else {
                 Err(m.get("error")?.as_str()?.to_string())
@@ -1112,6 +1148,76 @@ impl CheckpointResponse {
             models.push(ModelCheckpoint { model, result });
         }
         Ok(CheckpointResponse { models })
+    }
+}
+
+/// One model's telemetry snapshot in a [`TraceResponse`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelTrace {
+    pub model: String,
+    /// Span events lost to sink backpressure since startup (exact count;
+    /// a healthy deployment reads 0).
+    pub dropped_events: u64,
+    /// Most recent completed request spans, oldest first.
+    pub spans: Vec<Span>,
+    /// Latency percentiles, one entry per [`crate::telemetry::Metric`]
+    /// that has recorded at least one sample.
+    pub histograms: Vec<HistogramSummary>,
+}
+
+impl ModelTrace {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(self.model.clone())),
+            ("dropped_events", n(self.dropped_events as f64)),
+            ("spans", arr(self.spans.iter().map(|sp| sp.to_json()).collect())),
+            ("histograms", arr(self.histograms.iter().map(|h| h.to_json()).collect())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ModelTrace> {
+        Ok(ModelTrace {
+            model: v.get("model")?.as_str()?.to_string(),
+            dropped_events: u64_field(v, "dropped_events")?,
+            spans: v
+                .get("spans")?
+                .as_arr()?
+                .iter()
+                .map(Span::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            histograms: v
+                .get("histograms")?
+                .as_arr()?
+                .iter()
+                .map(HistogramSummary::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// Reply to `{"v":1,"op":"trace"}`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceResponse {
+    /// Sorted by model name, one entry per served variant.
+    pub models: Vec<ModelTrace>,
+}
+
+impl TraceResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = envelope("trace");
+        pairs.push(("models", arr(self.models.iter().map(|m| m.to_json()).collect())));
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceResponse> {
+        Ok(TraceResponse {
+            models: v
+                .get("models")?
+                .as_arr()?
+                .iter()
+                .map(ModelTrace::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
     }
 }
 
@@ -1213,12 +1319,17 @@ mod tests {
             ApiRequest::Drain(DrainRequest),
             ApiRequest::Undrain(UndrainRequest),
             ApiRequest::Checkpoint(CheckpointRequest),
+            ApiRequest::Trace(TraceRequest),
         ] {
             let line = req.to_json().to_string();
             assert_eq!(parse_line(&line).unwrap(), req, "round-trip of {line}");
         }
         assert_eq!(
             parse_line(r#"{"v":1,"op":"stats","extra":1}"#).unwrap_err().code(),
+            "bad-params"
+        );
+        assert_eq!(
+            parse_line(r#"{"v":1,"op":"trace","model":"m"}"#).unwrap_err().code(),
             "bad-params"
         );
     }
@@ -1304,6 +1415,8 @@ mod tests {
                     free_blocks: 1,
                     spilled_bytes: 2048,
                     spilled_blocks: 2,
+                    faults: 4,
+                    fault_bytes: 3072,
                     budget: Some(8192),
                 },
                 prefix: Some(PrefixStats {
@@ -1319,6 +1432,13 @@ mod tests {
                 coord: CoordCounters { completed: 9, queued: 2, ..Default::default() },
                 sessions: SessionGauges { entries: 1, bytes: 2048 },
                 queue_capacity: 256,
+                histograms: vec![HistogramSummary {
+                    metric: crate::telemetry::Metric::Ttft,
+                    count: 9,
+                    p50_us: 1200,
+                    p90_us: 2500,
+                    p99_us: 4100,
+                }],
             }],
         };
         let v = Json::parse(&stats.to_json().to_string()).unwrap();
@@ -1338,12 +1458,15 @@ mod tests {
                     free_blocks: 0,
                     spilled_bytes: 0,
                     spilled_blocks: 0,
+                    faults: 0,
+                    fault_bytes: 0,
                     budget: None,
                 },
                 prefix: None,
                 coord: CoordCounters::default(),
                 sessions: SessionGauges::default(),
                 queue_capacity: 8,
+                histograms: Vec::new(),
             }],
         };
         let v = Json::parse(&unbudgeted.to_json().to_string()).unwrap();
@@ -1399,6 +1522,7 @@ mod tests {
                         prefixes: 1,
                         blocks: 6,
                         pages: 19,
+                        elapsed_us: 740,
                     }),
                 },
                 ModelCheckpoint {
@@ -1413,5 +1537,56 @@ mod tests {
         let empty = CheckpointResponse::default();
         let v = Json::parse(&empty.to_json().to_string()).unwrap();
         assert_eq!(CheckpointResponse::from_json(&v).unwrap(), empty);
+    }
+
+    #[test]
+    fn trace_response_round_trips() {
+        use crate::telemetry::{Metric, SpanEvent, SpanEventKind};
+        let trace = TraceResponse {
+            models: vec![
+                ModelTrace {
+                    model: "llama_like".into(),
+                    dropped_events: 0,
+                    spans: vec![Span {
+                        id: 7,
+                        events: vec![
+                            SpanEvent { t_us: 10, kind: SpanEventKind::Queued, value: 0 },
+                            SpanEvent { t_us: 25, kind: SpanEventKind::Admitted, value: 0 },
+                            SpanEvent {
+                                t_us: 60,
+                                kind: SpanEventKind::PrefillSegment,
+                                value: 64,
+                            },
+                            SpanEvent { t_us: 90, kind: SpanEventKind::FirstToken, value: 0 },
+                            SpanEvent { t_us: 120, kind: SpanEventKind::Done, value: 0 },
+                        ],
+                    }],
+                    histograms: vec![HistogramSummary {
+                        metric: Metric::Ttft,
+                        count: 1,
+                        p50_us: 80,
+                        p90_us: 80,
+                        p99_us: 80,
+                    }],
+                },
+                ModelTrace {
+                    model: "qwen_like".into(),
+                    dropped_events: 3,
+                    spans: Vec::new(),
+                    histograms: Vec::new(),
+                },
+            ],
+        };
+        let v = Json::parse(&trace.to_json().to_string()).unwrap();
+        assert_eq!(TraceResponse::from_json(&v).unwrap(), trace);
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "trace");
+        let empty = TraceResponse::default();
+        let v = Json::parse(&empty.to_json().to_string()).unwrap();
+        assert_eq!(TraceResponse::from_json(&v).unwrap(), empty);
+        // span/histogram payloads reject unknown keys all the way down
+        let bad = r#"{"v":1,"op":"trace","models":[{"model":"m","dropped_events":0,
+            "spans":[{"id":1,"events":[{"t_us":1,"kind":"queued","value":0,"extra":1}]}],
+            "histograms":[]}]}"#;
+        assert!(TraceResponse::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 }

@@ -35,7 +35,8 @@ use anyhow::{bail, Context, Result};
 use crate::api::{
     self, CancelAck, CancelRequest, CheckpointRequest, CheckpointResponse, DrainRequest,
     DrainResponse, GenerateRequest, InfoRequest, InfoResponse, SessionsRequest,
-    SessionsResponse, StatsRequest, StatsResponse, UndrainRequest, UndrainResponse,
+    SessionsResponse, StatsRequest, StatsResponse, TraceRequest, TraceResponse,
+    UndrainRequest, UndrainResponse,
 };
 use crate::coordinator::{ApiError, Event, GenerateParams, Response};
 use crate::util::json::Json;
@@ -174,6 +175,13 @@ impl Client {
     pub fn checkpoint(&mut self) -> Result<CheckpointResponse> {
         let v = self.op_call(&CheckpointRequest.to_json())?;
         CheckpointResponse::from_json(&v)
+    }
+
+    /// Control plane: recent request spans and latency histogram
+    /// summaries per model (the telemetry ring's live snapshot).
+    pub fn trace(&mut self) -> Result<TraceResponse> {
+        let v = self.op_call(&TraceRequest.to_json())?;
+        TraceResponse::from_json(&v)
     }
 
     /// Send a control-plane op and read its reply, surfacing a server-side

@@ -232,6 +232,9 @@ pub struct ServingConfig {
     /// and WAL-journaled persistence of detached sessions and prefix
     /// snapshots across restarts.
     pub store_dir: Option<PathBuf>,
+    /// Directory for per-model NDJSON request traces (`None` = in-memory
+    /// trace snapshots only).  CLI: `--trace-dir DIR`.
+    pub trace_dir: Option<PathBuf>,
     /// Port for the TCP front-end.
     pub port: u16,
 }
@@ -249,6 +252,7 @@ impl Default for ServingConfig {
             session_max_bytes: 0,
             prefix_cache: false,
             store_dir: None,
+            trace_dir: None,
             port: 7199,
         }
     }
@@ -268,6 +272,7 @@ impl ServingConfig {
         c.session_max_bytes = args.usize_or("session-mb", 0)? * 1024 * 1024;
         c.prefix_cache = args.has("prefix-cache");
         c.store_dir = args.get("store-dir").map(PathBuf::from);
+        c.trace_dir = args.get("trace-dir").map(PathBuf::from);
         c.port = args.usize_or("port", c.port as usize)? as u16;
         Ok(c)
     }
@@ -372,6 +377,22 @@ mod tests {
         .unwrap();
         let c = ServingConfig::from_args(&args).unwrap();
         assert_eq!(c.store_dir, Some(PathBuf::from("/tmp/kvstore")));
+    }
+
+    #[test]
+    fn trace_dir_flag() {
+        let empty = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(
+            ServingConfig::from_args(&empty).unwrap().trace_dir,
+            None,
+            "in-memory tracing by default"
+        );
+        let args = Args::parse(
+            ["--trace-dir", "/tmp/traces"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = ServingConfig::from_args(&args).unwrap();
+        assert_eq!(c.trace_dir, Some(PathBuf::from("/tmp/traces")));
     }
 
     #[test]

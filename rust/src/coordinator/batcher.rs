@@ -37,6 +37,7 @@ use anyhow::Result;
 
 use crate::config::CompressionConfig;
 use crate::engine::{Engine, PrefillJob, PrefillTask, SeqState, SlotState};
+use crate::telemetry::{Metric, SpanBuilder, SpanEventKind, Telemetry};
 use crate::tokenizer::EOS;
 use crate::util::argmax;
 
@@ -62,10 +63,47 @@ pub struct CoordStats {
     /// tier *before* any shedding: demotion loses no state, only
     /// residency).  Counts blocks, not bytes.
     pub blocks_spilled: AtomicU64,
-    /// Requests sitting in the admission queue right now (incremented by
-    /// the router on enqueue, decremented here on dequeue) — the control
-    /// plane's queue-depth gauge.
+    /// Requests sitting in the admission queue right now — the control
+    /// plane's queue-depth gauge.  Maintained exclusively by RAII
+    /// [`QueueToken`]s: enqueue mints one, and its drop (dequeue, queue
+    /// drain, channel teardown) releases exactly one unit, so the gauge
+    /// can never leak an increment or double-decrement across threads.
     pub queued: AtomicU64,
+}
+
+impl CoordStats {
+    /// Claim one unit of the `queued` gauge; the returned token releases
+    /// it exactly once on drop, whichever path dequeues (or drops) the
+    /// work item.
+    pub fn enqueue_token(self: &Arc<Self>) -> QueueToken {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        QueueToken { stats: Arc::clone(self) }
+    }
+}
+
+/// RAII unit of [`CoordStats::queued`].  Travels inside the [`WorkItem`]
+/// from the router's enqueue to the batcher's dequeue; dropping it on any
+/// path — admission, drain-on-shutdown, an abandoned channel — releases
+/// the gauge exactly once.
+pub struct QueueToken {
+    stats: Arc<CoordStats>,
+}
+
+impl Drop for QueueToken {
+    fn drop(&mut self) {
+        // The token is the only decrementer, so underflow here means a
+        // bookkeeping bug (a unit released twice), not a race: scream in
+        // debug builds, keep the gauge pinned at zero in release.
+        let _ = self.stats.queued.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| {
+            match q.checked_sub(1) {
+                Some(rest) => Some(rest),
+                None => {
+                    debug_assert!(false, "queued gauge underflow: a token released twice?");
+                    Some(0)
+                }
+            }
+        });
+    }
 }
 
 /// RAII share of the coordinator's in-flight byte reservations.  Admission
@@ -115,6 +153,10 @@ pub struct Coordinator {
     stats: Arc<CoordStats>,
     /// Sum of live [`Reservation`]s (in-flight worst-case bytes).
     reserved: Arc<AtomicUsize>,
+    /// Per-model telemetry hub (None for direct-fed coordinators): span
+    /// publication on every terminal path plus the prefill-segment
+    /// latency histogram.
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 struct Pending {
@@ -147,6 +189,10 @@ struct Pending {
     /// finished cache back into the radix prefix tree under prompt ids +
     /// appended generation.
     prefix_insert: Option<PrefixInsert>,
+    /// Span recorder stamped through the slot lifecycle and published
+    /// (non-blocking) on the terminal path.  Disabled builders make every
+    /// stamp a no-op.
+    span: SpanBuilder,
 }
 
 impl Pending {
@@ -187,6 +233,22 @@ impl Coordinator {
             sessions,
             stats,
             reserved: Arc::new(AtomicUsize::new(0)),
+            telemetry: None,
+        }
+    }
+
+    /// Bind the model's telemetry hub: terminal spans publish through its
+    /// non-blocking sink and prefill-segment latencies feed its registry.
+    pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
+        self.telemetry = Some(telemetry);
+    }
+
+    /// Terminal span bookkeeping: stamp the terminal event, derive the
+    /// span-delta histograms, and publish through the non-blocking sink.
+    fn finish_span(&self, p: &mut Pending, terminal: SpanEventKind) {
+        if let Some(tel) = &self.telemetry {
+            let span = std::mem::replace(&mut p.span, SpanBuilder::disabled());
+            tel.finish_span(span, terminal);
         }
     }
 
@@ -255,12 +317,10 @@ impl Coordinator {
     }
 
     fn admit(&mut self, item: WorkItem, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
-        // Dequeue gauge (saturating: a directly-fed coordinator, e.g. in a
-        // unit test, never enqueued through the router's increment).
-        let _ = self
-            .stats
-            .queued
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| Some(q.saturating_sub(1)));
+        // Dequeue: dropping the RAII token releases the `queued` gauge
+        // exactly once (None for directly-fed coordinators, e.g. unit
+        // tests, which never enqueued through the router's mint).
+        drop(item.queue_token);
         let idx = slots.iter().position(|s| !s.occupied_any()).expect("free slot");
         let req = item.request;
         let mut pending = Pending {
@@ -279,13 +339,17 @@ impl Coordinator {
             sent_tokens: 0,
             reservation: None,
             prefix_insert: None,
+            span: item.span,
         };
         if pending.flagged() {
-            // Cancelled while queued: never prefill.
+            // Cancelled while queued: never prefill (the span ends
+            // Queued → Cancelled without ever being Admitted).
             pending.send(Event::Error { id: pending.id, error: ApiError::Cancelled });
             self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            self.finish_span(&mut pending, SpanEventKind::Cancelled);
             return;
         }
+        pending.span.record(SpanEventKind::Admitted);
 
         let t0 = Instant::now();
         let mut scorer = self.engine.make_scorer(&req.compression, req.seed);
@@ -327,13 +391,15 @@ impl Coordinator {
                         error: ApiError::BadParams { message },
                     });
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    self.finish_span(&mut pending, SpanEventKind::Failed);
                     return;
                 }
                 // Memory-pressure admission: the reattached history is
                 // already resident, so budget only the new turn's rows —
                 // but reserve history + estimate so later admissions keep
                 // counting the history once it moves into the slot.
-                match self.ensure_pool_capacity(feed.len() + req.max_new, slots) {
+                match self.ensure_pool_capacity(feed.len() + req.max_new, slots, &mut pending.span)
+                {
                     Ok(mut reservation) => {
                         reservation.add(entry.cache.exact_bytes());
                         pending.reservation = Some(reservation);
@@ -354,10 +420,12 @@ impl Coordinator {
                             },
                         });
                         self.stats.pool_rejected.fetch_add(1, Ordering::Relaxed);
+                        self.finish_span(&mut pending, SpanEventKind::Failed);
                         return;
                     }
                 }
                 self.stats.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+                pending.span.record_v(SpanEventKind::SessionResume, pending.reused_tokens as u64);
                 let mut cache = entry.cache;
                 // Packed wide-bucket suffix prefill (bit-identical to the
                 // b=1 trajectory; falls back to it on real-attention
@@ -385,9 +453,11 @@ impl Coordinator {
                         },
                     });
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    self.finish_span(&mut pending, SpanEventKind::Failed);
                     return;
                 }
-                match self.ensure_pool_capacity(ids.len() + req.max_new, slots) {
+                match self.ensure_pool_capacity(ids.len() + req.max_new, slots, &mut pending.span)
+                {
                     Ok(reservation) => pending.reservation = Some(reservation),
                     Err(detail) => {
                         pending.send(Event::Error {
@@ -398,6 +468,7 @@ impl Coordinator {
                             },
                         });
                         self.stats.pool_rejected.fetch_add(1, Ordering::Relaxed);
+                        self.finish_span(&mut pending, SpanEventKind::Failed);
                         return;
                     }
                 }
@@ -444,6 +515,12 @@ impl Coordinator {
             Ok((logits, cache, events)) => {
                 pending.prefill_us = t0.elapsed().as_micros() as u64;
                 pending.started = Instant::now();
+                // A synchronous prefill (resume or warm hit) is one
+                // segment on the timeline.
+                pending.span.record_v(SpanEventKind::PrefillSegment, pending.prompt_tokens as u64);
+                if let Some(tel) = &self.telemetry {
+                    tel.record(Metric::PrefillSegment, pending.prefill_us);
+                }
                 pending.send(Event::Started {
                     id: pending.id,
                     prompt_tokens: pending.prompt_tokens,
@@ -475,6 +552,7 @@ impl Coordinator {
                     error: ApiError::EngineFailure { message: format!("{e:#}") },
                 });
                 self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                self.finish_span(&mut pending, SpanEventKind::Failed);
             }
         }
     }
@@ -484,6 +562,7 @@ impl Coordinator {
     fn progress_slot(&self, idx: usize, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
         let Some(seq) = slots[idx].seq_mut() else { return };
         let Some(p) = meta[idx].as_mut() else { return };
+        let fired = seq.step_events.len();
         for ev in std::mem::take(&mut seq.step_events) {
             // Each event carries its own post-event length snapshot, so a
             // burst of events in one pass streams the true per-event
@@ -493,6 +572,9 @@ impl Coordinator {
                 evicted: ev.l - ev.kept,
                 layer_lens: ev.layer_lens,
             });
+        }
+        if fired > 0 {
+            p.span.record_v(SpanEventKind::Compression, fired as u64);
         }
         while p.sent_tokens < seq.generated.len() {
             let token = seq.generated[p.sent_tokens];
@@ -507,6 +589,13 @@ impl Coordinator {
             };
             p.send(Event::Token { id: p.id, token, text_delta });
             p.sent_tokens += 1;
+            // The first emitted token is the TTFT boundary; every later
+            // one is a decode step carrying the running sent count.
+            if p.sent_tokens == 1 {
+                p.span.record(SpanEventKind::FirstToken);
+            } else {
+                p.span.record_v(SpanEventKind::DecodeStep, p.sent_tokens as u64);
+            }
         }
     }
 
@@ -543,6 +632,7 @@ impl Coordinator {
         }
         p.send(Event::Done { id: p.id, usage, timings });
         self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.finish_span(&mut p, SpanEventKind::Done);
         self.stash_session(&p, seq);
     }
 
@@ -554,7 +644,12 @@ impl Coordinator {
     fn advance_prefills(&mut self, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
         for idx in 0..slots.len() {
             let Some(job) = slots[idx].prefill_mut() else { continue };
+            let t0_us = self.telemetry.as_ref().map(|t| t.now_us());
             let stepped = job.chunked.step(&self.engine, job.scorer.as_mut());
+            let ingested = job.chunked.ingested();
+            if let Some(tel) = &self.telemetry {
+                tel.record(Metric::PrefillSegment, tel.now_us().saturating_sub(t0_us.unwrap()));
+            }
             let done = match stepped {
                 Ok(done) => done,
                 Err(e) => {
@@ -565,9 +660,13 @@ impl Coordinator {
                         error: ApiError::EngineFailure { message: format!("{e:#}") },
                     });
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    self.finish_span(&mut p, SpanEventKind::Failed);
                     continue;
                 }
             };
+            if let Some(p) = meta[idx].as_mut() {
+                p.span.record_v(SpanEventKind::PrefillSegment, ingested as u64);
+            }
             if !done {
                 continue;
             }
@@ -614,12 +713,14 @@ impl Coordinator {
                 let mut p = meta[idx].take().expect("prefilling slot has metadata");
                 p.send(Event::Error { id: p.id, error: ApiError::Cancelled });
                 self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                self.finish_span(&mut p, SpanEventKind::Cancelled);
                 continue;
             }
             let seq = slots[idx].take().unwrap();
             let mut p = meta[idx].take().expect("occupied slot has metadata");
             p.send(Event::Error { id: p.id, error: ApiError::Cancelled });
             self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            self.finish_span(&mut p, SpanEventKind::Cancelled);
             // A cancelled turn still advances its conversation: the cache
             // holds everything decoded so far.
             self.stash_session(&p, seq);
@@ -671,6 +772,7 @@ impl Coordinator {
         &mut self,
         new_rows: usize,
         slots: &[SlotState],
+        span: &mut SpanBuilder,
     ) -> Result<Reservation, String> {
         let pool = self.engine.pool().clone();
         let Some(budget) = pool.budget() else { return Ok(self.reserve(0)) };
@@ -709,6 +811,9 @@ impl Coordinator {
                 let (blocks, bytes) = pool.spill(overflow);
                 if bytes > 0 {
                     self.stats.blocks_spilled.fetch_add(blocks as u64, Ordering::Relaxed);
+                    // Admission stalled on this demotion; the span carries
+                    // how many bytes had to move to the disk tier.
+                    span.record_v(SpanEventKind::SpillStall, bytes as u64);
                     continue;
                 }
             }
@@ -744,5 +849,122 @@ impl Coordinator {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenerateParams;
+    use crate::telemetry::{Clock, FakeClock, Telemetry};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::mpsc;
+
+    /// Hermetic fake-clock pin of the span lifecycle for a chunked cold
+    /// prefill: queued → admitted → prefill segments (strictly growing
+    /// ingest counts, ending at the full prompt) → first token → decode
+    /// steps interleaved with compression firings → done, on a monotone
+    /// timeline — and the RAII queue token returns the gauge to zero.
+    #[test]
+    fn chunked_prefill_span_pins_the_lifecycle_order() {
+        let engine = Engine::cpu_ref("llama_like").unwrap();
+        let clock = Arc::new(FakeClock::new());
+        let tel = Arc::new(Telemetry::with_clock(Arc::clone(&clock) as Arc<dyn Clock>));
+        let stats = Arc::new(CoordStats::default());
+        let mut coord =
+            Coordinator::with_config(engine, SessionConfig::default(), Arc::clone(&stats));
+        coord.set_telemetry(Arc::clone(&tel));
+
+        let prompt = "the of and to in is it on as with ".repeat(16);
+        let params = GenerateParams::new(prompt).lag(8).ratio(0.5).max_new(4);
+        let req = params.into_request(77).unwrap();
+        let prompt_tokens = coord.engine.tokenizer.encode(&req.prompt, true).len();
+        assert!(
+            prompt_tokens > crate::engine::DEFAULT_PREFILL_STRIDE,
+            "prompt must exceed one stride to exercise chunked prefill"
+        );
+
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (ev_tx, ev_rx) = mpsc::channel();
+        tx.send(WorkItem {
+            request: req,
+            events: ev_tx,
+            cancel: Arc::new(AtomicBool::new(false)),
+            enqueued: Instant::now(),
+            span: tel.begin_span(77),
+            queue_token: Some(stats.enqueue_token()),
+        })
+        .unwrap();
+        assert_eq!(stats.queued.load(Ordering::Relaxed), 1, "token minted on enqueue");
+        drop(tx);
+        std::thread::spawn(move || coord.run(rx)).join().unwrap().unwrap();
+
+        let mut new_tokens = 0;
+        for ev in ev_rx.iter() {
+            if let Event::Done { usage, .. } = &ev {
+                new_tokens = usage.new_tokens;
+            }
+        }
+        assert!(new_tokens >= 1, "request decoded");
+
+        let spans = tel.recent_spans();
+        assert_eq!(spans.len(), 1);
+        let span = &spans[0];
+        assert_eq!(span.id, 77);
+        let kinds: Vec<SpanEventKind> = span.events.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds[0], SpanEventKind::Queued);
+        assert_eq!(kinds[1], SpanEventKind::Admitted);
+        assert_eq!(kinds.last(), Some(&SpanEventKind::Done));
+
+        let segs: Vec<u64> = span
+            .events
+            .iter()
+            .filter(|e| e.kind == SpanEventKind::PrefillSegment)
+            .map(|e| e.value)
+            .collect();
+        assert!(segs.len() >= 2, "one stamp per chunked segment: {segs:?}");
+        assert!(segs.windows(2).all(|w| w[0] < w[1]), "ingest counts grow: {segs:?}");
+        assert_eq!(*segs.last().unwrap() as usize, prompt_tokens, "final segment = full prompt");
+
+        let pos = |k: SpanEventKind| span.events.iter().position(|e| e.kind == k);
+        let first_tok = pos(SpanEventKind::FirstToken).expect("first token stamped");
+        let last_seg =
+            span.events.iter().rposition(|e| e.kind == SpanEventKind::PrefillSegment).unwrap();
+        assert!(last_seg < first_tok, "every prefill segment precedes the first token");
+        assert!(
+            pos(SpanEventKind::Compression).is_some(),
+            "lag=8 over a {prompt_tokens}-token prompt must fire the driver"
+        );
+        let steps: Vec<u64> = span
+            .events
+            .iter()
+            .filter(|e| e.kind == SpanEventKind::DecodeStep)
+            .map(|e| e.value)
+            .collect();
+        assert_eq!(steps, (2..=new_tokens as u64).collect::<Vec<_>>(), "sent counts in order");
+        for w in span.events.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "monotone timeline");
+        }
+
+        assert_eq!(stats.queued.load(Ordering::Relaxed), 0, "RAII token released on dequeue");
+        assert_eq!(tel.dropped_events(), 0);
+        let summaries = tel.summaries();
+        for metric in [Metric::QueueWait, Metric::Ttft, Metric::PrefillSegment] {
+            assert!(
+                summaries.iter().any(|s| s.metric == metric),
+                "span deltas populate {metric:?}"
+            );
+        }
+    }
+
+    /// The queued gauge is released exactly once per token even when items
+    /// are dropped without ever reaching a coordinator (queue teardown).
+    #[test]
+    fn queue_tokens_release_exactly_once() {
+        let stats = Arc::new(CoordStats::default());
+        let tokens: Vec<QueueToken> = (0..3).map(|_| stats.enqueue_token()).collect();
+        assert_eq!(stats.queued.load(Ordering::Relaxed), 3);
+        drop(tokens);
+        assert_eq!(stats.queued.load(Ordering::Relaxed), 0);
     }
 }

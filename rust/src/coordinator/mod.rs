@@ -464,16 +464,24 @@ impl Response {
     }
 }
 
-/// A queued unit: request, its live event channel, its cancel flag, and
-/// the enqueue timestamp.
+/// A queued unit: request, its live event channel, its cancel flag, the
+/// enqueue timestamp, and the request's telemetry recorders.
 pub struct WorkItem {
     pub request: Request,
     pub events: mpsc::Sender<Event>,
     pub cancel: Arc<AtomicBool>,
     pub enqueued: std::time::Instant,
+    /// Span recorder the batcher stamps through the slot lifecycle.
+    /// [`SpanBuilder::disabled`] for direct-fed coordinators (tests).
+    ///
+    /// [`SpanBuilder::disabled`]: crate::telemetry::SpanBuilder::disabled
+    pub span: crate::telemetry::SpanBuilder,
+    /// RAII claim on the `queued` gauge (see [`CoordStats::enqueue_token`]);
+    /// `None` when the item bypassed the router's accounting.
+    pub queue_token: Option<batcher::QueueToken>,
 }
 
-pub use batcher::{CoordStats, Coordinator};
+pub use batcher::{CoordStats, Coordinator, QueueToken};
 pub use router::{GenHandle, Router, RouterConfig};
 pub use session::{SessionConfig, SessionStore, SessionSummary};
 

@@ -31,6 +31,7 @@ use crate::backend::EngineSpec;
 use crate::kvcache::KvCache;
 use crate::kvpool::{Block, BlockPool, PrefixCache, PrefixConfig};
 use crate::kvstore::{CheckpointSummary, KvStore};
+use crate::telemetry::{Metric, SpanBuilder, Telemetry, TelemetryConfig};
 
 use super::{
     ApiError, CoordStats, Coordinator, Event, Request, Response, SessionConfig, SessionStore,
@@ -71,6 +72,11 @@ pub struct RouterConfig {
     /// prefix snapshots are WAL-journaled, and boot replays the journal so
     /// both survive a restart without re-prefilling.
     pub store_dir: Option<PathBuf>,
+    /// Write per-model NDJSON request traces under this directory
+    /// (`--trace-dir`; `None` = in-memory trace snapshots only).  Spans
+    /// publish through a bounded non-blocking sink either way; the
+    /// directory only adds the background file flusher.
+    pub trace_dir: Option<PathBuf>,
 }
 
 impl Default for RouterConfig {
@@ -81,6 +87,7 @@ impl Default for RouterConfig {
             pool_max_bytes: None,
             prefix_cache: None,
             store_dir: None,
+            trace_dir: None,
         }
     }
 }
@@ -128,6 +135,10 @@ pub struct Router {
     /// loads (`None` until then, or forever if the load failed) — the
     /// control plane's `info` op reads these.
     infos: HashMap<String, InfoSlot>,
+    /// Per-model telemetry hubs: request spans, the non-blocking trace
+    /// sink, and the latency histogram registry (the `trace` op reads
+    /// these; `stats` folds in the histogram summaries).
+    telemetry: HashMap<String, Arc<Telemetry>>,
     cfg: RouterConfig,
     /// Once set, admission is closed: every submit is a typed `draining`
     /// rejection while in-flight work runs to completion.
@@ -153,7 +164,9 @@ impl Router {
         let mut sessions = HashMap::new();
         let mut stores = HashMap::new();
         let mut infos = HashMap::new();
+        let mut telemetry = HashMap::new();
         let mut threads = Vec::new();
+        let tel_cfg = TelemetryConfig { trace_dir: cfg.trace_dir.clone() };
         for variant in variants {
             let (tx, rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
             senders.insert(variant.clone(), tx);
@@ -161,6 +174,17 @@ impl Router {
             stats.insert(variant.clone(), coord_stats.clone());
             let pool = BlockPool::new(BlockPool::DEFAULT_ROWS_PER_BLOCK, cfg.pool_max_bytes);
             pools.insert(variant.clone(), pool.clone());
+            // Telemetry hub: spans, the non-blocking sink, and the latency
+            // registry.  An unwritable trace dir degrades to in-memory
+            // tracing — observability must never take down serving.
+            let tel = Telemetry::new(&tel_cfg, variant).unwrap_or_else(|e| {
+                eprintln!("trace file for {variant} failed to open ({e:#}); tracing in-memory");
+                Telemetry::new(&TelemetryConfig::default(), variant)
+                    .expect("memory-only telemetry cannot fail")
+            });
+            let tel = Arc::new(tel);
+            telemetry.insert(variant.clone(), Arc::clone(&tel));
+            pool.set_telemetry(Arc::clone(&tel));
             // Constructed here (not inside the engine) so gauges stay
             // readable from outside the coordinator thread.
             let prefix = cfg
@@ -203,6 +227,7 @@ impl Router {
                     if let Some(pc) = prefix {
                         engine.set_prefix_cache(pc);
                     }
+                    engine.set_telemetry(Arc::clone(&tel));
                     // Publish the engine facts the `info` op self-configures
                     // clients from, before the first request is served.
                     *info_slot.lock().unwrap() = Some(Some(ModelInfo {
@@ -214,6 +239,7 @@ impl Router {
                         pool_budget_bytes: engine.pool().budget(),
                     }));
                     let mut coord = Coordinator::with_store(engine, store, coord_stats);
+                    coord.set_telemetry(tel);
                     if let Err(e) = coord.run(rx) {
                         eprintln!("coordinator {name} died: {e:#}");
                     }
@@ -227,12 +253,9 @@ impl Router {
                         message: format!("engine {name} failed to load: {e:#}"),
                     };
                     eprintln!("{error}");
+                    // Each drained item's RAII queue token releases the
+                    // `queued` gauge when the item drops at scope end.
                     while let Ok(item) = rx.recv() {
-                        let _ = coord_stats
-                            .queued
-                            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| {
-                                Some(q.saturating_sub(1))
-                            });
                         let _ = item.events.send(Event::Error {
                             id: item.request.id,
                             error: error.clone(),
@@ -249,6 +272,7 @@ impl Router {
             stores,
             sessions,
             infos,
+            telemetry,
             cfg,
             draining: AtomicBool::new(false),
             threads,
@@ -287,13 +311,28 @@ impl Router {
         self.stores.get(model).cloned()
     }
 
+    /// This model's telemetry hub (recent request spans, drop counter,
+    /// latency histogram summaries) — the `trace` op reads it.
+    pub fn telemetry(&self, model: &str) -> Option<Arc<Telemetry>> {
+        self.telemetry.get(model).cloned()
+    }
+
     /// Checkpoint every variant's disk store: re-journal the live session
     /// and prefix inventory, fsync, and compact the WAL to it.  Variants
     /// without a store are skipped; results come back sorted by model
     /// name so the `checkpoint` op's output is deterministic.
     pub fn checkpoint(&self) -> Vec<(String, Result<CheckpointSummary>)> {
-        let mut out: Vec<(String, Result<CheckpointSummary>)> =
-            self.stores.iter().map(|(name, kv)| (name.clone(), kv.checkpoint())).collect();
+        let mut out: Vec<(String, Result<CheckpointSummary>)> = self
+            .stores
+            .iter()
+            .map(|(name, kv)| {
+                let res = kv.checkpoint();
+                if let (Ok(summary), Some(tel)) = (&res, self.telemetry.get(name)) {
+                    tel.record(Metric::Checkpoint, summary.elapsed_us);
+                }
+                (name.clone(), res)
+            })
+            .collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }
@@ -366,35 +405,30 @@ impl Router {
         let (etx, erx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let id = request.id;
+        // Span birth (stamps `Queued`) and the RAII queue-depth claim.
+        // The token travels inside the item: the batcher's dequeue drops
+        // it, and a failed send below drops it with the returned item —
+        // the gauge can neither leak nor underflow.
+        let span = self
+            .telemetry
+            .get(model)
+            .map(|tel| tel.begin_span(id))
+            .unwrap_or_else(SpanBuilder::disabled);
+        let queue_token = self.stats.get(model).map(|stats| stats.enqueue_token());
         let item = WorkItem {
             request,
             events: etx,
             cancel: cancel.clone(),
             enqueued: Instant::now(),
+            span,
+            queue_token,
         };
-        // Queue-depth gauge: incremented BEFORE the send so the
-        // coordinator's dequeue decrement (saturating) can never observe
-        // the item ahead of the increment and leave a phantom count;
-        // failed sends take their increment back.
-        let stats = self.stats.get(model);
-        if let Some(stats) = stats {
-            stats.queued.fetch_add(1, Ordering::Relaxed);
-        }
         match tx.try_send(item) {
             Ok(()) => Ok(GenHandle { id, events: erx, cancel }),
-            Err(e) => {
-                if let Some(stats) = stats {
-                    stats.queued.fetch_sub(1, Ordering::Relaxed);
-                }
-                match e {
-                    TrySendError::Full(_) => {
-                        Err(ApiError::QueueFull { model: model.to_string() })
-                    }
-                    TrySendError::Disconnected(_) => Err(ApiError::EngineFailure {
-                        message: format!("coordinator for {model} is gone"),
-                    }),
-                }
-            }
+            Err(TrySendError::Full(_)) => Err(ApiError::QueueFull { model: model.to_string() }),
+            Err(TrySendError::Disconnected(_)) => Err(ApiError::EngineFailure {
+                message: format!("coordinator for {model} is gone"),
+            }),
         }
     }
 

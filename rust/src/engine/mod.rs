@@ -20,6 +20,7 @@ pub mod slot;
 
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -29,6 +30,7 @@ use crate::compress::{maybe_compress, policy::make_policy, Scorer};
 use crate::config::{CompressionConfig, ModelDims};
 use crate::kvcache::KvCache;
 use crate::kvpool::{BlockPool, PrefixCache, PrefixConfig};
+use crate::telemetry::{Metric, Telemetry};
 use crate::tokenizer::Tokenizer;
 use crate::util::argmax as argmax_slice;
 
@@ -142,7 +144,7 @@ impl ChunkedPrefill {
             from,
             to,
         )?;
-        self.events.extend(maybe_compress(&mut self.cache, &self.cfg, scorer)?);
+        self.events.extend(engine.timed_compress(&mut self.cache, &self.cfg, scorer)?);
         if to < self.ids.len() {
             if self.insert_snapshots {
                 if let Some(prefix) = engine.prefix.as_ref() {
@@ -185,6 +187,9 @@ pub struct Engine {
     pool: Arc<BlockPool>,
     /// Radix prefix cache over the pool's frozen blocks (None = disabled).
     prefix: Option<Arc<PrefixCache>>,
+    /// Per-model telemetry hub (None outside a router): compression-pass
+    /// latencies feed its histogram registry.
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl Engine {
@@ -208,6 +213,7 @@ impl Engine {
             tmax,
             pool: BlockPool::unbounded(BlockPool::DEFAULT_ROWS_PER_BLOCK),
             prefix: None,
+            telemetry: None,
         })
     }
 
@@ -241,6 +247,32 @@ impl Engine {
     /// The engine's radix prefix cache, when one is enabled.
     pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
         self.prefix.as_ref()
+    }
+
+    /// Attach the model's telemetry hub (the router builds one per
+    /// variant): every compression-driver pass that fires records its
+    /// latency into the hub's histogram registry.
+    pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
+        self.telemetry = Some(telemetry);
+    }
+
+    /// One compression-driver pass, timed into the `compression` latency
+    /// histogram when a hub is attached.  Passes that fire no event are
+    /// not recorded — the histogram measures real compaction work, not
+    /// the per-token threshold check.
+    fn timed_compress(
+        &self,
+        cache: &mut KvCache,
+        cfg: &CompressionConfig,
+        scorer: &mut dyn Scorer,
+    ) -> Result<Vec<CompressionEvent>> {
+        let Some(tel) = &self.telemetry else { return maybe_compress(cache, cfg, scorer) };
+        let t0 = Instant::now();
+        let events = maybe_compress(cache, cfg, scorer)?;
+        if !events.is_empty() {
+            tel.record(Metric::Compression, t0.elapsed().as_micros() as u64);
+        }
+        Ok(events)
     }
 
     /// Hermetic default: the pure-Rust synthetic reference backend.
@@ -504,7 +536,7 @@ impl Engine {
                 seq.cache.accumulate_attention(&row, tmax)?;
             }
             let events =
-                maybe_compress(&mut seq.cache, &seq.compression, seq.scorer.as_mut())?;
+                self.timed_compress(&mut seq.cache, &seq.compression, seq.scorer.as_mut())?;
             seq.compression_events += events.len();
             seq.step_events = events;
 
@@ -626,7 +658,7 @@ impl Engine {
                 }
                 lens[layer] = cache.len(layer) as i32;
             }
-            let step_events = maybe_compress(cache, cfg, scorer)?;
+            let step_events = self.timed_compress(cache, cfg, scorer)?;
             for ev in &step_events {
                 // Compaction rewrote this layer's row set; re-export it.
                 let dst = ev.layer * per_slot;
@@ -713,7 +745,7 @@ impl Engine {
                     "packed slot position drifted from the cache"
                 );
                 cache.append_token(&kn, &vn, pos[s])?;
-                events.extend(maybe_compress(cache, cfg, scorer)?);
+                events.extend(self.timed_compress(cache, cfg, scorer)?);
             }
             logits = out.logits[(cb - 1) * v_size..cb * v_size].to_vec();
         }

@@ -39,6 +39,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
 use crate::kvstore::KvStore;
+use crate::telemetry::{Metric, Telemetry};
 
 pub use block::{block_bytes, Block, BlockBufs, BlockData};
 pub use radix::{PrefixCache, PrefixConfig, PrefixStats};
@@ -67,6 +68,10 @@ struct PoolInner {
     /// budget — that is the whole point of demotion.
     spilled_bytes: usize,
     spilled_blocks: usize,
+    /// Cumulative fault-ins (disk → pool); monotone, unlike the spill
+    /// gauges, which move both ways as blocks demote and return.
+    faults: u64,
+    fault_bytes: usize,
 }
 
 impl PoolInner {
@@ -100,6 +105,9 @@ pub struct BlockPool {
     /// Every live block (weak), so `spill` can find demotion candidates.
     /// Compacted amortized-O(1) as dead entries accumulate.
     registry: Mutex<Registry>,
+    /// Bound telemetry hub, when the router runs one: spill and fault-in
+    /// durations land in its histogram registry.
+    telemetry: Mutex<Option<Arc<Telemetry>>>,
     inner: Mutex<PoolInner>,
 }
 
@@ -134,6 +142,7 @@ impl BlockPool {
             clock: AtomicU64::new(0),
             store: Mutex::new(None),
             registry: Mutex::new(Registry::default()),
+            telemetry: Mutex::new(None),
             inner: Mutex::new(PoolInner::default()),
         })
     }
@@ -163,6 +172,8 @@ impl BlockPool {
             free_blocks: inner.free_blocks,
             spilled_bytes: inner.spilled_bytes,
             spilled_blocks: inner.spilled_blocks,
+            faults: inner.faults,
+            fault_bytes: inner.fault_bytes,
             budget: self.max_bytes,
         }
     }
@@ -286,6 +297,16 @@ impl BlockPool {
         self.store.lock().unwrap().is_some()
     }
 
+    /// Bind the model's telemetry hub (router start).  Spill and fault-in
+    /// durations are recorded into its histogram registry from then on.
+    pub fn set_telemetry(&self, telemetry: Arc<Telemetry>) {
+        *self.telemetry.lock().unwrap() = Some(telemetry);
+    }
+
+    fn telemetry(&self) -> Option<Arc<Telemetry>> {
+        self.telemetry.lock().unwrap().clone()
+    }
+
     /// Next value of the block-read clock (the spill LRU ordering).
     pub(crate) fn next_tick(&self) -> u64 {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
@@ -317,15 +338,20 @@ impl BlockPool {
             }
         }
         candidates.sort_by_key(|(tick, _)| *tick);
+        let telemetry = self.telemetry();
         let mut blocks = 0usize;
         let mut bytes = 0usize;
         for (_, b) in candidates {
             if bytes >= target {
                 break;
             }
+            let t0 = std::time::Instant::now();
             if let Some(n) = b.try_demote(&store) {
                 blocks += 1;
                 bytes += n;
+                if let Some(tel) = &telemetry {
+                    tel.record(Metric::Spill, t0.elapsed().as_micros() as u64);
+                }
             }
         }
         (blocks, bytes)
@@ -357,6 +383,7 @@ impl BlockPool {
     /// cannot produce the payload — that is a torn store file, not a
     /// recoverable serving condition.
     pub(crate) fn fault_block(&self, store_id: u64, rows: usize, d: usize) -> BlockBufs {
+        let t0 = std::time::Instant::now();
         let store = self.store().expect("faulting a spilled block requires its bound store");
         let payload = store
             .read_block(store_id)
@@ -377,6 +404,8 @@ impl BlockPool {
             inner.spilled_blocks -= 1;
             inner.block_bytes += bytes;
             inner.resident_blocks += 1;
+            inner.faults += 1;
+            inner.fault_bytes += bytes;
             inner.bump_high_water();
             bufs
         };
@@ -385,6 +414,9 @@ impl BlockPool {
         bufs.v.extend_from_slice(&payload.v);
         bufs.pos.extend_from_slice(&payload.pos);
         bufs.attn.extend_from_slice(&payload.attn);
+        if let Some(tel) = self.telemetry() {
+            tel.record(Metric::Fault, t0.elapsed().as_micros() as u64);
+        }
         bufs
     }
 
@@ -689,6 +721,7 @@ mod tests {
         assert_eq!((s.spilled_bytes, s.spilled_blocks), (bytes, 1));
         assert_eq!(s.resident_blocks, 1);
         assert_eq!(s.free_blocks, 1, "demoted buffers recycle to the free list");
+        assert_eq!((s.faults, s.fault_bytes), (0, 0), "nothing faulted yet");
         // fault back in on read: bit-identical payload, ledger moves back
         assert_eq!(b1.read().k(), &k[..]);
         assert_eq!(b1.read().v(), &v[..]);
@@ -697,6 +730,7 @@ mod tests {
         let s = pool.stats();
         assert_eq!((s.spilled_bytes, s.spilled_blocks), (0, 0));
         assert_eq!(s.block_bytes, 2 * bytes);
+        assert_eq!((s.faults, s.fault_bytes), (1, bytes), "one fault-in, counted once");
         drop(b1);
         drop(b2);
         let s = pool.stats();

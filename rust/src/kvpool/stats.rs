@@ -31,6 +31,12 @@ pub struct PoolStats {
     pub spilled_bytes: usize,
     /// Count of live blocks currently on the disk tier.
     pub spilled_blocks: usize,
+    /// Cumulative count of block fault-ins (disk → pool).  Monotone:
+    /// spill gauges move both ways as blocks demote and return, but every
+    /// fault-in is a request-path disk read worth seeing.
+    pub faults: u64,
+    /// Cumulative payload bytes faulted back in.
+    pub fault_bytes: usize,
     /// The byte budget, when the pool is budgeted.
     pub budget: Option<usize>,
 }
@@ -94,6 +100,8 @@ mod tests {
             free_blocks: 1,
             spilled_bytes: 4096,
             spilled_blocks: 2,
+            faults: 1,
+            fault_bytes: 2048,
             budget: Some(2000),
         };
         assert_eq!(s.resident_bytes(), 800, "spilled bytes are not resident");
@@ -107,6 +115,8 @@ mod tests {
             free_blocks: 0,
             spilled_bytes: 0,
             spilled_blocks: 0,
+            faults: 0,
+            fault_bytes: 0,
             budget: None,
         };
         assert_eq!(empty.fragmentation(), 0.0);

@@ -56,13 +56,15 @@ pub struct BlockPayload {
     pub attn: Vec<f32>,
 }
 
-/// What a checkpoint persisted.
+/// What a checkpoint persisted, and how long it took.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CheckpointSummary {
     pub sessions: usize,
     pub prefixes: usize,
     pub blocks: usize,
     pub pages: usize,
+    /// Wall-clock duration of the sweep + fsync + journal rewrite.
+    pub elapsed_us: u64,
 }
 
 struct BlockMeta {
@@ -366,6 +368,7 @@ impl KvStore {
     /// flush + fsync every dirty page, then atomically rewrite the
     /// journal to exactly the live inventory.
     pub fn checkpoint(&self) -> Result<CheckpointSummary> {
+        let t0 = std::time::Instant::now();
         let mut inner = self.inner.lock().unwrap();
         let inner = &mut *inner;
         // reachability sweep over heap records
@@ -411,6 +414,7 @@ impl KvStore {
             prefixes: inner.prefixes.len(),
             blocks: inner.blocks.len(),
             pages: inner.heap.num_pages() as usize,
+            elapsed_us: t0.elapsed().as_micros() as u64,
         })
     }
 }

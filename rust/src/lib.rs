@@ -50,6 +50,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod tokenizer;
 pub mod util;
 pub mod workloads;

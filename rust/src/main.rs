@@ -4,7 +4,7 @@
 //!   info                         backend + model inventory
 //!   generate --prompt "..."      one-shot generation with any policy
 //!   serve [--port 7199]          TCP server (v1 wire protocol, NDJSON)
-//!   ops stats|info|sessions|drain|undrain|checkpoint [--port 7199]
+//!   ops stats|info|sessions|drain|undrain|checkpoint|trace [--port 7199]
 //!                                control plane of a running server
 //!   tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
 //!                                regenerate the paper's tables/figures
@@ -65,8 +65,8 @@ USAGE:
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
               [--max-queue 256] [--sessions 64] [--session-ttl 600]
               [--pool-mb N] [--session-mb N] [--prefix-cache]
-              [--store-dir DIR]
-  lagkv ops stats|info|sessions|drain|undrain|checkpoint [--port 7199]
+              [--store-dir DIR] [--trace-dir DIR]
+  lagkv ops stats|info|sessions|drain|undrain|checkpoint|trace [--port 7199]
             [--model M] [--delete SESSION_ID]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
@@ -81,6 +81,10 @@ WIRE PROTOCOL v1: see DESIGN.md §9 ({"v":1,"op":...} envelopes, NDJSON
 TIERED STORAGE: --store-dir DIR spills cold frozen KV blocks to disk under
   pool pressure and WAL-journals detached sessions + prefix snapshots, so
   both survive a restart (see DESIGN.md §11).
+OBSERVABILITY: every request records a span (queued -> prefill segments ->
+  decode -> compression -> done); `lagkv ops trace` shows recent spans and
+  p50/p90/p99 latency summaries, --trace-dir DIR streams spans as NDJSON
+  (see DESIGN.md §12).
 "#;
 
 fn load_engine(args: &Args, variant: &str) -> Result<Arc<Engine>> {
@@ -187,6 +191,7 @@ fn serve(args: &Args) -> Result<()> {
         pool_max_bytes: serving.pool_max_bytes,
         prefix_cache: serving.prefix_cache.then(lagkv::kvpool::PrefixConfig::default),
         store_dir: serving.store_dir.clone(),
+        trace_dir: serving.trace_dir.clone(),
     };
     let router = Arc::new(Router::start_with(EngineSpec::from_args(args)?, &models, router_cfg));
     let server = Arc::new(Server::new(router));
@@ -232,6 +237,16 @@ fn ops(args: &Args) -> Result<()> {
                     m.sessions.entries,
                     m.sessions.bytes as f64 / 1024.0
                 );
+                for h in &m.histograms {
+                    println!(
+                        "  {}: n={} p50={}us p90={}us p99={}us",
+                        h.metric.name(),
+                        h.count,
+                        h.p50_us,
+                        h.p90_us,
+                        h.p99_us
+                    );
+                }
             }
         }
         "info" => {
@@ -294,15 +309,45 @@ fn ops(args: &Args) -> Result<()> {
                 match &m.result {
                     Ok(cp) => println!(
                         "{}: checkpointed {} session(s), {} prefix(es), {} block(s) \
-                         across {} page(s)",
-                        m.model, cp.sessions, cp.prefixes, cp.blocks, cp.pages
+                         across {} page(s) in {}us",
+                        m.model, cp.sessions, cp.prefixes, cp.blocks, cp.pages, cp.elapsed_us
                     ),
                     Err(e) => println!("{}: checkpoint failed: {e}", m.model),
                 }
             }
         }
+        "trace" => {
+            let resp = client.trace()?;
+            for m in &resp.models {
+                println!(
+                    "{}: {} recent span(s), {} dropped event(s)",
+                    m.model,
+                    m.spans.len(),
+                    m.dropped_events
+                );
+                for sp in &m.spans {
+                    let t0 = sp.events.first().map(|e| e.t_us).unwrap_or(0);
+                    let steps: Vec<String> = sp
+                        .events
+                        .iter()
+                        .map(|e| format!("{}@{}us", e.kind.name(), e.t_us.saturating_sub(t0)))
+                        .collect();
+                    println!("  span {}: {}", sp.id, steps.join(" "));
+                }
+                for h in &m.histograms {
+                    println!(
+                        "  {}: n={} p50={}us p90={}us p99={}us",
+                        h.metric.name(),
+                        h.count,
+                        h.p50_us,
+                        h.p90_us,
+                        h.p99_us
+                    );
+                }
+            }
+        }
         other => bail!(
-            "unknown ops action {other:?} (stats|info|sessions|drain|undrain|checkpoint)"
+            "unknown ops action {other:?} (stats|info|sessions|drain|undrain|checkpoint|trace)"
         ),
     }
     Ok(())

@@ -24,6 +24,10 @@ pub struct PoolGauges {
     pub spilled_bytes: usize,
     /// Live blocks currently on the disk tier.
     pub spilled_blocks: usize,
+    /// Cumulative block fault-ins (disk → pool).
+    pub faults: u64,
+    /// Cumulative payload bytes faulted back in.
+    pub fault_bytes: usize,
     /// The configured byte budget, when one is set.
     pub budget_bytes: Option<usize>,
     /// Prefix-cache gauges, when the deployment runs one ([`PrefixStats`]
@@ -41,6 +45,8 @@ impl From<&PoolStats> for PoolGauges {
             fragmentation_pct: s.fragmentation() * 100.0,
             spilled_bytes: s.spilled_bytes,
             spilled_blocks: s.spilled_blocks,
+            faults: s.faults,
+            fault_bytes: s.fault_bytes,
             budget_bytes: s.budget,
             prefix: None,
         }
@@ -78,6 +84,13 @@ impl PoolGauges {
                 ", spilled {:.1} KiB ({} blocks)",
                 self.spilled_bytes as f64 / 1024.0,
                 self.spilled_blocks,
+            ));
+        }
+        if self.faults > 0 {
+            out.push_str(&format!(
+                ", faulted {:.1} KiB ({} blocks)",
+                self.fault_bytes as f64 / 1024.0,
+                self.faults,
             ));
         }
         if let Some(p) = &self.prefix {
@@ -124,6 +137,10 @@ impl Histogram {
         self.samples_us.len()
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
     pub fn mean_ms(&self) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
@@ -147,6 +164,20 @@ impl Histogram {
         let rank = ((q * self.samples_us.len() as f64).ceil() as usize)
             .clamp(1, self.samples_us.len());
         self.samples_us[rank - 1] as f64 / 1000.0
+    }
+
+    /// q in [0, 1]; nearest-rank, integer microseconds — the wire form
+    /// ([`HistogramSummary`]) stays integer-exact through JSON.
+    ///
+    /// [`HistogramSummary`]: crate::telemetry::HistogramSummary
+    pub fn quantile_us(&mut self, q: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let rank = ((q * self.samples_us.len() as f64).ceil() as usize)
+            .clamp(1, self.samples_us.len());
+        self.samples_us[rank - 1]
     }
 
     pub fn p50_ms(&mut self) -> f64 {
@@ -242,6 +273,8 @@ mod tests {
             free_blocks: 1,
             spilled_bytes: 0,
             spilled_blocks: 0,
+            faults: 0,
+            fault_bytes: 0,
             budget: Some(8192),
         };
         let g = PoolGauges::from(&s);
@@ -260,6 +293,10 @@ mod tests {
             PoolGauges::from(&PoolStats { spilled_bytes: 2048, spilled_blocks: 2, ..s });
         let line = spilled.render();
         assert!(line.contains("spilled 2.0 KiB (2 blocks)"), "rendered: {line}");
+        assert!(!line.contains("faulted"), "no fault segment before any fault-in");
+        let faulted = PoolGauges::from(&PoolStats { faults: 3, fault_bytes: 3072, ..s });
+        let line = faulted.render();
+        assert!(line.contains("faulted 3.0 KiB (3 blocks)"), "rendered: {line}");
     }
 
     #[test]
@@ -273,6 +310,8 @@ mod tests {
             free_blocks: 0,
             spilled_bytes: 0,
             spilled_blocks: 0,
+            faults: 0,
+            fault_bytes: 0,
             budget: None,
         };
         let p = PrefixStats {

@@ -34,8 +34,8 @@ use anyhow::{Context, Result};
 
 use crate::api::{
     self, ApiRequest, CancelAck, CheckpointResponse, CoordCounters, DrainResponse,
-    InfoResponse, ModelCheckpoint, ModelSessions, ModelStats, SessionGauges, SessionsRequest,
-    SessionsResponse, StatsResponse, UndrainResponse,
+    InfoResponse, ModelCheckpoint, ModelSessions, ModelStats, ModelTrace, SessionGauges,
+    SessionsRequest, SessionsResponse, StatsResponse, TraceResponse, UndrainResponse,
 };
 use crate::config::PolicyKind;
 use crate::coordinator::{ApiError, GenHandle, Response, Router};
@@ -92,6 +92,11 @@ impl Server {
                     ),
                     sessions,
                     queue_capacity: self.router.config().queue_depth,
+                    histograms: self
+                        .router
+                        .telemetry(&m)
+                        .map(|t| t.summaries())
+                        .unwrap_or_default(),
                     model: m,
                 }
             })
@@ -141,6 +146,27 @@ impl Server {
             })
             .collect();
         CheckpointResponse { models }
+    }
+
+    /// Build the `trace` op reply: per model, the most recent completed
+    /// request spans, the sink's exact drop counter, and latency
+    /// percentiles from the histogram registry.
+    pub fn trace_response(&self) -> TraceResponse {
+        let mut names = self.router.models();
+        names.sort();
+        let models = names
+            .into_iter()
+            .map(|m| {
+                let tel = self.router.telemetry(&m);
+                ModelTrace {
+                    dropped_events: tel.as_ref().map(|t| t.dropped_events()).unwrap_or(0),
+                    spans: tel.as_ref().map(|t| t.recent_spans()).unwrap_or_default(),
+                    histograms: tel.as_ref().map(|t| t.summaries()).unwrap_or_default(),
+                    model: m,
+                }
+            })
+            .collect();
+        TraceResponse { models }
     }
 
     /// Build the `info` op reply.  Engines load asynchronously at boot, so
@@ -283,6 +309,9 @@ impl Server {
                 Ok(ApiRequest::Checkpoint(_)) => {
                     write_line(&writer, &self.checkpoint_response().to_json().to_string())?;
                 }
+                Ok(ApiRequest::Trace(_)) => {
+                    write_line(&writer, &self.trace_response().to_json().to_string())?;
+                }
                 Err(e) => {
                     write_line(&writer, &obj(vec![("error", e.to_json())]).to_string())?;
                 }
@@ -381,6 +410,21 @@ mod tests {
         assert_eq!(StatsResponse::from_json(&v).unwrap(), stats);
         srv.router.drain();
         assert!(srv.stats_response().draining);
+    }
+
+    #[test]
+    fn trace_response_covers_every_model_sorted() {
+        let srv = server(&["qwen_like", "llama_like"]);
+        let tr = srv.trace_response();
+        let names: Vec<&str> = tr.models.iter().map(|m| m.model.as_str()).collect();
+        assert_eq!(names, vec!["llama_like", "qwen_like"], "sorted by model");
+        for m in &tr.models {
+            assert_eq!(m.dropped_events, 0);
+            assert!(m.spans.is_empty(), "no traffic yet");
+            assert!(m.histograms.is_empty(), "no samples yet");
+        }
+        let v = Json::parse(&tr.to_json().to_string()).unwrap();
+        assert_eq!(TraceResponse::from_json(&v).unwrap(), tr);
     }
 
     #[test]

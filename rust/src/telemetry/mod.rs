@@ -1,0 +1,842 @@
+//! Request-span tracing and latency histograms behind a non-blocking sink.
+//!
+//! Three pieces, all hermetic:
+//!
+//! * **Spans** — each request carries a [`SpanBuilder`] through the
+//!   router/batcher lifecycle, stamping [`SpanEvent`]s (queued, admitted,
+//!   prefill segments, per-token decode steps, compression firings, spill
+//!   stalls, terminal state) from a [`Clock`].  Production uses
+//!   [`MonotonicClock`]; tests pin exact timelines with [`FakeClock`].
+//! * **Sink** — finished spans go through [`EventSink::try_publish`],
+//!   which *never blocks the batcher*: a full ring or a contended lock
+//!   drops the span and bumps an exact `dropped_events` counter.  A
+//!   background flusher drains the ring in batches to an NDJSON trace
+//!   file (one span per line) when `--trace-dir` is set; the most recent
+//!   spans are always retained in memory for the `trace` op.
+//! * **Histograms** — [`Telemetry::finish_span`] derives queue-wait,
+//!   TTFT, and inter-token latencies from span deltas; the pool, engine,
+//!   and router record spill/fault, compression, and checkpoint
+//!   durations directly.  [`HistogramRegistry`] aggregates everything
+//!   into integer-microsecond p50/p90/p99 summaries (exact on the wire —
+//!   no float round-trip).
+//!
+//! One [`Telemetry`] hub exists per model; the router builds it and hands
+//! `Arc`s to the coordinator, engine, and block pool.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write as IoWrite};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::Histogram;
+use crate::util::json::{self, Json};
+
+// -- clock ---------------------------------------------------------------------
+
+/// Monotonic time source for span timestamps.  Abstracted so hermetic
+/// tests can pin exact timelines with [`FakeClock`].
+pub trait Clock: Send + Sync {
+    /// Microseconds since this clock's origin.  Must be monotone
+    /// non-decreasing across threads.
+    fn now_us(&self) -> u64;
+}
+
+/// Production clock: microseconds since construction, via [`Instant`].
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+}
+
+/// Test clock: time advances only when the test says so.
+#[derive(Default)]
+pub struct FakeClock {
+    now: AtomicU64,
+}
+
+impl FakeClock {
+    pub fn new() -> FakeClock {
+        FakeClock::default()
+    }
+
+    pub fn advance_us(&self, us: u64) {
+        self.now.fetch_add(us, Ordering::SeqCst);
+    }
+
+    pub fn set_us(&self, us: u64) {
+        self.now.store(us, Ordering::SeqCst);
+    }
+}
+
+impl Clock for FakeClock {
+    fn now_us(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+// -- span model ----------------------------------------------------------------
+
+/// What happened at one point in a request's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanEventKind {
+    /// Accepted into the admission queue (span birth).
+    Queued,
+    /// Dequeued by the batcher into a slot.
+    Admitted,
+    /// Session cache restored (detached → live); value = resumed rows.
+    SessionResume,
+    /// One chunked-prefill segment ingested; value = tokens so far.
+    PrefillSegment,
+    /// First generated token emitted (TTFT boundary).
+    FirstToken,
+    /// One decode step appended a token; value = tokens sent so far.
+    DecodeStep,
+    /// Compression driver fired during this step; value = event count.
+    Compression,
+    /// Admission stalled on a pool spill; value = bytes demoted.
+    SpillStall,
+    /// Terminal: completed normally.
+    Done,
+    /// Terminal: cancelled by the client.
+    Cancelled,
+    /// Terminal: failed with an error.
+    Failed,
+}
+
+impl SpanEventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanEventKind::Queued => "queued",
+            SpanEventKind::Admitted => "admitted",
+            SpanEventKind::SessionResume => "session_resume",
+            SpanEventKind::PrefillSegment => "prefill_segment",
+            SpanEventKind::FirstToken => "first_token",
+            SpanEventKind::DecodeStep => "decode_step",
+            SpanEventKind::Compression => "compression",
+            SpanEventKind::SpillStall => "spill_stall",
+            SpanEventKind::Done => "done",
+            SpanEventKind::Cancelled => "cancelled",
+            SpanEventKind::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SpanEventKind> {
+        Ok(match s {
+            "queued" => SpanEventKind::Queued,
+            "admitted" => SpanEventKind::Admitted,
+            "session_resume" => SpanEventKind::SessionResume,
+            "prefill_segment" => SpanEventKind::PrefillSegment,
+            "first_token" => SpanEventKind::FirstToken,
+            "decode_step" => SpanEventKind::DecodeStep,
+            "compression" => SpanEventKind::Compression,
+            "spill_stall" => SpanEventKind::SpillStall,
+            "done" => SpanEventKind::Done,
+            "cancelled" => SpanEventKind::Cancelled,
+            "failed" => SpanEventKind::Failed,
+            other => bail!("unknown span event kind {other:?}"),
+        })
+    }
+}
+
+/// One timestamped point on a request's timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Clock microseconds (monotone within a span).
+    pub t_us: u64,
+    pub kind: SpanEventKind,
+    /// Kind-specific payload (see [`SpanEventKind`] docs); 0 when unused.
+    pub value: u64,
+}
+
+impl SpanEvent {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("t_us", json::n(self.t_us as f64)),
+            ("kind", json::s(self.kind.name())),
+            ("value", json::n(self.value as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SpanEvent> {
+        let m = v.as_obj()?;
+        for k in m.keys() {
+            if !matches!(k.as_str(), "t_us" | "kind" | "value") {
+                bail!("unknown field {k:?} in span event");
+            }
+        }
+        Ok(SpanEvent {
+            t_us: v.get("t_us")?.as_i64()? as u64,
+            kind: SpanEventKind::parse(v.get("kind")?.as_str()?)?,
+            value: v.get("value")?.as_i64()? as u64,
+        })
+    }
+}
+
+/// One request's full timeline: the sink's publish unit, the NDJSON trace
+/// file's line unit, and the `trace` op's wire unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Request id (the coordinator's handle id).
+    pub id: u64,
+    pub events: Vec<SpanEvent>,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("id", json::n(self.id as f64)),
+            ("events", json::arr(self.events.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Span> {
+        let m = v.as_obj()?;
+        for k in m.keys() {
+            if !matches!(k.as_str(), "id" | "events") {
+                bail!("unknown field {k:?} in span");
+            }
+        }
+        let events = v
+            .get("events")?
+            .as_arr()?
+            .iter()
+            .map(SpanEvent::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Span { id: v.get("id")?.as_i64()? as u64, events })
+    }
+
+    /// Timestamp of the first event of `kind`.
+    pub fn first(&self, kind: SpanEventKind) -> Option<&SpanEvent> {
+        self.events.iter().find(|e| e.kind == kind)
+    }
+}
+
+/// The per-request recorder the router creates and the batcher stamps.
+/// Disabled builders (no clock) make every record a no-op, so code paths
+/// without a telemetry hub pay nothing and need no `Option` plumbing.
+pub struct SpanBuilder {
+    clock: Option<Arc<dyn Clock>>,
+    span: Span,
+}
+
+impl SpanBuilder {
+    /// A recorder that ignores everything (direct-fed coordinators,
+    /// tests that don't care about tracing).
+    pub fn disabled() -> SpanBuilder {
+        SpanBuilder { clock: None, span: Span { id: 0, events: Vec::new() } }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.clock.is_some()
+    }
+
+    /// Current clock reading, for callers that time an operation and
+    /// record its duration as the event value.  0 when disabled.
+    pub fn now_us(&self) -> u64 {
+        self.clock.as_ref().map(|c| c.now_us()).unwrap_or(0)
+    }
+
+    pub fn record(&mut self, kind: SpanEventKind) {
+        self.record_v(kind, 0);
+    }
+
+    pub fn record_v(&mut self, kind: SpanEventKind, value: u64) {
+        if let Some(clock) = &self.clock {
+            self.span.events.push(SpanEvent { t_us: clock.now_us(), kind, value });
+        }
+    }
+
+    pub fn events(&self) -> &[SpanEvent] {
+        &self.span.events
+    }
+}
+
+// -- event sink ----------------------------------------------------------------
+
+/// In-memory depth of the publish ring: spans the flusher has not yet
+/// drained.  Beyond it, publishes drop (and are counted) — the batcher is
+/// never back-pressured by a slow trace consumer.
+pub const DEFAULT_SINK_CAPACITY: usize = 256;
+
+/// Finished spans retained in memory for `trace` snapshots.
+pub const DEFAULT_RECENT_CAPACITY: usize = 64;
+
+struct SinkInner {
+    /// Published but not yet drained.
+    ring: VecDeque<Span>,
+    /// Most recently drained spans (the live snapshot).
+    recent: VecDeque<Span>,
+    /// NDJSON trace file, when tracing to disk is enabled.
+    file: Option<BufWriter<File>>,
+}
+
+/// Bounded, non-blocking span sink.
+///
+/// Contract: [`EventSink::try_publish`] takes the inner lock with
+/// `try_lock` and refuses (rather than waits) when the lock is contended
+/// or the ring is full; every refusal increments `dropped_events`
+/// exactly once.  Draining (flusher thread, or any snapshot request)
+/// moves the ring into the bounded `recent` window and appends each
+/// drained span as one NDJSON line to the trace file.
+pub struct EventSink {
+    inner: Mutex<SinkInner>,
+    capacity: usize,
+    recent_capacity: usize,
+    published: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl EventSink {
+    pub fn new(capacity: usize, recent_capacity: usize, file: Option<File>) -> EventSink {
+        EventSink {
+            inner: Mutex::new(SinkInner {
+                ring: VecDeque::with_capacity(capacity.min(1024)),
+                recent: VecDeque::with_capacity(recent_capacity.min(1024)),
+                file: file.map(BufWriter::new),
+            }),
+            capacity,
+            recent_capacity,
+            published: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish a finished span without ever blocking: a contended lock or
+    /// a full ring drops the span and bumps the exact drop counter.
+    pub fn try_publish(&self, span: Span) -> bool {
+        if let Ok(mut inner) = self.inner.try_lock() {
+            if inner.ring.len() < self.capacity {
+                inner.ring.push_back(span);
+                self.published.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+        false
+    }
+
+    /// Batch-drain the ring: retain drained spans in the `recent` window
+    /// and append them to the NDJSON trace file.  Returns how many spans
+    /// were drained.  Called from the flusher thread and forced before
+    /// every snapshot so `trace` responses are deterministic.
+    pub fn drain(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let drained = inner.ring.len();
+        if drained == 0 {
+            return 0;
+        }
+        let mut write_err = false;
+        while let Some(span) = inner.ring.pop_front() {
+            if let Some(file) = inner.file.as_mut() {
+                write_err |= writeln!(file, "{}", span.to_json().to_string()).is_err();
+            }
+            if inner.recent.len() == self.recent_capacity {
+                inner.recent.pop_front();
+            }
+            inner.recent.push_back(span);
+        }
+        if let Some(file) = inner.file.as_mut() {
+            write_err |= file.flush().is_err();
+        }
+        if write_err {
+            // Tracing must never take down serving; drop the writer and
+            // keep serving in-memory snapshots.
+            eprintln!("telemetry: trace file write failed; disabling file tracing");
+            inner.file = None;
+        }
+        drained
+    }
+
+    /// The most recently drained spans, oldest first (drains first so the
+    /// snapshot includes everything published so far).
+    pub fn recent(&self) -> Vec<Span> {
+        self.drain();
+        let inner = self.inner.lock().unwrap();
+        inner.recent.iter().cloned().collect()
+    }
+
+    /// Spans accepted by `try_publish` so far.
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::Relaxed)
+    }
+
+    /// Spans refused by `try_publish` so far — exact, never sampled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+// -- histogram registry --------------------------------------------------------
+
+/// The latency families the registry aggregates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Queued → first generated token.
+    Ttft,
+    /// Between successive generated tokens.
+    InterToken,
+    /// Queued → admitted into a slot.
+    QueueWait,
+    /// One chunked-prefill segment (ingest + driver pass).
+    PrefillSegment,
+    /// One compression-driver pass that fired at least one event.
+    Compression,
+    /// One `KvStore::checkpoint`.
+    Checkpoint,
+    /// One block demotion (pool → disk).
+    Spill,
+    /// One block fault-in (disk → pool).
+    Fault,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Ttft => "ttft",
+            Metric::InterToken => "inter_token",
+            Metric::QueueWait => "queue_wait",
+            Metric::PrefillSegment => "prefill_segment",
+            Metric::Compression => "compression",
+            Metric::Checkpoint => "checkpoint",
+            Metric::Spill => "spill",
+            Metric::Fault => "fault",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Metric> {
+        for m in Metric::all() {
+            if m.name() == s {
+                return Ok(*m);
+            }
+        }
+        bail!("unknown metric {s:?}")
+    }
+
+    pub fn all() -> &'static [Metric] {
+        &[
+            Metric::Ttft,
+            Metric::InterToken,
+            Metric::QueueWait,
+            Metric::PrefillSegment,
+            Metric::Compression,
+            Metric::Checkpoint,
+            Metric::Spill,
+            Metric::Fault,
+        ]
+    }
+}
+
+/// Wire/snapshot form of one metric's histogram: integer microseconds so
+/// the v1 round-trip is exact (no f64 printing in the hot contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramSummary {
+    pub metric: Metric,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+}
+
+impl HistogramSummary {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("metric", json::s(self.metric.name())),
+            ("count", json::n(self.count as f64)),
+            ("p50_us", json::n(self.p50_us as f64)),
+            ("p90_us", json::n(self.p90_us as f64)),
+            ("p99_us", json::n(self.p99_us as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<HistogramSummary> {
+        let m = v.as_obj()?;
+        for k in m.keys() {
+            if !matches!(k.as_str(), "metric" | "count" | "p50_us" | "p90_us" | "p99_us") {
+                bail!("unknown field {k:?} in histogram summary");
+            }
+        }
+        Ok(HistogramSummary {
+            metric: Metric::parse(v.get("metric")?.as_str()?)?,
+            count: v.get("count")?.as_i64()? as u64,
+            p50_us: v.get("p50_us")?.as_i64()? as u64,
+            p90_us: v.get("p90_us")?.as_i64()? as u64,
+            p99_us: v.get("p99_us")?.as_i64()? as u64,
+        })
+    }
+}
+
+/// One [`Histogram`] per [`Metric`], summarized as p50/p90/p99.
+pub struct HistogramRegistry {
+    hists: Vec<Mutex<Histogram>>,
+}
+
+impl HistogramRegistry {
+    pub fn new() -> HistogramRegistry {
+        HistogramRegistry {
+            hists: Metric::all().iter().map(|_| Mutex::new(Histogram::default())).collect(),
+        }
+    }
+
+    pub fn record(&self, metric: Metric, us: u64) {
+        let idx = Metric::all().iter().position(|m| *m == metric).expect("every metric indexed");
+        self.hists[idx].lock().unwrap().record_us(us);
+    }
+
+    /// Summaries of every metric with at least one sample, in
+    /// [`Metric::all`] order.
+    pub fn summaries(&self) -> Vec<HistogramSummary> {
+        Metric::all()
+            .iter()
+            .zip(&self.hists)
+            .filter_map(|(metric, hist)| {
+                let mut hist = hist.lock().unwrap();
+                if hist.is_empty() {
+                    return None;
+                }
+                Some(HistogramSummary {
+                    metric: *metric,
+                    count: hist.count() as u64,
+                    p50_us: hist.quantile_us(0.50),
+                    p90_us: hist.quantile_us(0.90),
+                    p99_us: hist.quantile_us(0.99),
+                })
+            })
+            .collect()
+    }
+}
+
+impl Default for HistogramRegistry {
+    fn default() -> Self {
+        HistogramRegistry::new()
+    }
+}
+
+// -- hub -----------------------------------------------------------------------
+
+/// How often the flusher thread drains the sink to the trace file.
+const FLUSH_INTERVAL: std::time::Duration = std::time::Duration::from_millis(50);
+
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryConfig {
+    /// Write one NDJSON trace file per model under this directory
+    /// (`<model>.trace.ndjson`).  `None` = in-memory snapshots only.
+    pub trace_dir: Option<PathBuf>,
+}
+
+/// Per-model telemetry hub: clock + sink + histogram registry.  The
+/// router builds one per model and shares it with the coordinator,
+/// engine, and block pool.
+pub struct Telemetry {
+    clock: Arc<dyn Clock>,
+    sink: Arc<EventSink>,
+    hists: HistogramRegistry,
+    next_id: AtomicU64,
+}
+
+impl Telemetry {
+    /// Production hub.  When `trace_dir` is set, opens the model's trace
+    /// file and spawns the batch flusher (which exits on its own once the
+    /// sink is dropped).
+    pub fn new(cfg: &TelemetryConfig, model: &str) -> Result<Telemetry> {
+        let file = match &cfg.trace_dir {
+            None => None,
+            Some(dir) => {
+                std::fs::create_dir_all(dir)?;
+                Some(File::create(trace_path(dir, model))?)
+            }
+        };
+        let sink =
+            Arc::new(EventSink::new(DEFAULT_SINK_CAPACITY, DEFAULT_RECENT_CAPACITY, file));
+        if cfg.trace_dir.is_some() {
+            spawn_flusher(Arc::downgrade(&sink), model);
+        }
+        Ok(Telemetry {
+            clock: Arc::new(MonotonicClock::new()),
+            sink,
+            hists: HistogramRegistry::new(),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Hermetic hub on a caller-controlled clock; no file, no flusher.
+    pub fn with_clock(clock: Arc<dyn Clock>) -> Telemetry {
+        Telemetry {
+            clock,
+            sink: Arc::new(EventSink::new(DEFAULT_SINK_CAPACITY, DEFAULT_RECENT_CAPACITY, None)),
+            hists: HistogramRegistry::new(),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    pub fn sink(&self) -> &Arc<EventSink> {
+        &self.sink
+    }
+
+    /// Begin a request span: allocates an id (overridden by the router
+    /// with the request's handle id once known) and stamps `Queued`.
+    pub fn begin_span(&self, id: u64) -> SpanBuilder {
+        let id = if id != 0 { id } else { self.next_id.fetch_add(1, Ordering::Relaxed) };
+        let mut b = SpanBuilder { clock: Some(Arc::clone(&self.clock)), span: Span { id, events: Vec::new() } };
+        b.record(SpanEventKind::Queued);
+        b
+    }
+
+    /// Stamp the terminal event, derive the span-delta histograms
+    /// (queue wait, TTFT, inter-token), and publish — non-blocking.
+    pub fn finish_span(&self, mut builder: SpanBuilder, terminal: SpanEventKind) {
+        if !builder.is_enabled() {
+            return;
+        }
+        builder.record(terminal);
+        let span = builder.span;
+        let queued = span.first(SpanEventKind::Queued).map(|e| e.t_us);
+        if let (Some(q), Some(a)) = (queued, span.first(SpanEventKind::Admitted)) {
+            self.record(Metric::QueueWait, a.t_us.saturating_sub(q));
+        }
+        if let (Some(q), Some(f)) = (queued, span.first(SpanEventKind::FirstToken)) {
+            self.record(Metric::Ttft, f.t_us.saturating_sub(q));
+        }
+        let mut prev_token: Option<u64> = span.first(SpanEventKind::FirstToken).map(|e| e.t_us);
+        for ev in &span.events {
+            if ev.kind == SpanEventKind::DecodeStep {
+                if let Some(prev) = prev_token {
+                    self.record(Metric::InterToken, ev.t_us.saturating_sub(prev));
+                }
+                prev_token = Some(ev.t_us);
+            }
+        }
+        self.sink.try_publish(span);
+    }
+
+    pub fn record(&self, metric: Metric, us: u64) {
+        self.hists.record(metric, us);
+    }
+
+    pub fn summaries(&self) -> Vec<HistogramSummary> {
+        self.hists.summaries()
+    }
+
+    /// Live snapshot: drains the sink first so every span finished before
+    /// this call is visible.
+    pub fn recent_spans(&self) -> Vec<Span> {
+        self.sink.recent()
+    }
+
+    pub fn dropped_events(&self) -> u64 {
+        self.sink.dropped()
+    }
+}
+
+/// The model's NDJSON trace file path under a trace dir.
+pub fn trace_path(dir: &Path, model: &str) -> PathBuf {
+    dir.join(format!("{model}.trace.ndjson"))
+}
+
+fn spawn_flusher(sink: Weak<EventSink>, model: &str) {
+    let name = format!("lagkv-trace-{model}");
+    let spawn = std::thread::Builder::new().name(name).spawn(move || loop {
+        std::thread::sleep(FLUSH_INTERVAL);
+        match sink.upgrade() {
+            Some(sink) => {
+                sink.drain();
+            }
+            None => break, // hub dropped: exit quietly
+        }
+    });
+    if let Err(e) = spawn {
+        eprintln!("telemetry: failed to spawn trace flusher: {e}");
+    }
+}
+
+impl Drop for Telemetry {
+    fn drop(&mut self) {
+        // Final batch flush so short-lived processes lose nothing.
+        self.sink.drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_hub() -> (Arc<FakeClock>, Telemetry) {
+        let clock = Arc::new(FakeClock::new());
+        let tel = Telemetry::with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        (clock, tel)
+    }
+
+    #[test]
+    fn span_deltas_feed_the_registry() {
+        let (clock, tel) = fake_hub();
+        let mut b = tel.begin_span(7); // Queued at t=0
+        clock.advance_us(100);
+        b.record(SpanEventKind::Admitted);
+        clock.advance_us(400);
+        b.record(SpanEventKind::FirstToken);
+        clock.advance_us(30);
+        b.record_v(SpanEventKind::DecodeStep, 1);
+        clock.advance_us(50);
+        b.record_v(SpanEventKind::DecodeStep, 2);
+        tel.finish_span(b, SpanEventKind::Done);
+
+        let spans = tel.recent_spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].id, 7);
+        let summaries = tel.summaries();
+        let get = |m: Metric| summaries.iter().find(|s| s.metric == m).unwrap();
+        assert_eq!(get(Metric::QueueWait).p50_us, 100);
+        assert_eq!(get(Metric::Ttft).p50_us, 500);
+        let it = get(Metric::InterToken);
+        assert_eq!(it.count, 2, "first-token→step and step→step");
+        assert_eq!(it.p50_us, 30);
+        assert_eq!(it.p99_us, 50);
+        assert_eq!(tel.dropped_events(), 0);
+    }
+
+    #[test]
+    fn timestamps_are_monotone_under_a_fake_clock() {
+        let (clock, tel) = fake_hub();
+        let mut b = tel.begin_span(1);
+        for i in 0..5 {
+            clock.advance_us(10);
+            b.record_v(SpanEventKind::PrefillSegment, i);
+        }
+        tel.finish_span(b, SpanEventKind::Done);
+        let span = &tel.recent_spans()[0];
+        for w in span.events.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "monotone timeline");
+        }
+        assert_eq!(span.events.first().unwrap().kind, SpanEventKind::Queued);
+        assert_eq!(span.events.last().unwrap().kind, SpanEventKind::Done);
+    }
+
+    #[test]
+    fn sink_full_drops_exactly_and_never_blocks() {
+        let sink = EventSink::new(4, 4, None);
+        for i in 0..10 {
+            sink.try_publish(Span { id: i, events: Vec::new() });
+        }
+        assert_eq!(sink.published(), 4);
+        assert_eq!(sink.dropped(), 6, "drops counted exactly");
+        assert_eq!(sink.drain(), 4);
+        // ring drained: publishes flow again, recent window is bounded
+        for i in 10..16 {
+            sink.try_publish(Span { id: i, events: Vec::new() });
+        }
+        let recent = sink.recent();
+        assert_eq!(recent.len(), 4, "recent window bounded");
+        assert_eq!(recent.last().unwrap().id, 13, "ring capacity bounds the second burst");
+        assert_eq!(sink.dropped(), 8);
+    }
+
+    #[test]
+    fn try_publish_refuses_under_contention() {
+        let sink = EventSink::new(16, 16, None);
+        let guard = sink.inner.lock().unwrap();
+        assert!(!sink.try_publish(Span { id: 1, events: Vec::new() }), "contended lock refuses");
+        assert_eq!(sink.dropped(), 1);
+        drop(guard);
+        assert!(sink.try_publish(Span { id: 1, events: Vec::new() }));
+    }
+
+    #[test]
+    fn span_json_round_trips_exactly() {
+        let span = Span {
+            id: 42,
+            events: vec![
+                SpanEvent { t_us: 0, kind: SpanEventKind::Queued, value: 0 },
+                SpanEvent { t_us: 10, kind: SpanEventKind::Admitted, value: 0 },
+                SpanEvent { t_us: 25, kind: SpanEventKind::PrefillSegment, value: 64 },
+                SpanEvent { t_us: 30, kind: SpanEventKind::Compression, value: 2 },
+                SpanEvent { t_us: 44, kind: SpanEventKind::Done, value: 0 },
+            ],
+        };
+        let text = span.to_json().to_string();
+        let back = Span::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, span);
+        assert_eq!(back.to_json().to_string(), text);
+        // strictness: an unknown field is a hard error
+        let spiked = text.replace("\"id\":", "\"bogus\":1,\"id\":");
+        assert!(Span::from_json(&Json::parse(&spiked).unwrap()).is_err());
+    }
+
+    #[test]
+    fn histogram_summary_json_round_trips() {
+        let s = HistogramSummary {
+            metric: Metric::Ttft,
+            count: 12,
+            p50_us: 1500,
+            p90_us: 4000,
+            p99_us: 9000,
+        };
+        let text = s.to_json().to_string();
+        let back = HistogramSummary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        for m in Metric::all() {
+            assert_eq!(Metric::parse(m.name()).unwrap(), *m);
+        }
+        assert!(Metric::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn trace_file_gets_ndjson_lines() {
+        let dir = crate::kvstore::testutil::TempDir::new("trace");
+        let cfg = TelemetryConfig { trace_dir: Some(dir.path().to_path_buf()) };
+        let tel = Telemetry::new(&cfg, "toy").unwrap();
+        let b = tel.begin_span(1);
+        tel.finish_span(b, SpanEventKind::Done);
+        let b = tel.begin_span(2);
+        tel.finish_span(b, SpanEventKind::Cancelled);
+        tel.sink().drain();
+        let text = std::fs::read_to_string(trace_path(dir.path(), "toy")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let s0 = Span::from_json(&Json::parse(lines[0]).unwrap()).unwrap();
+        assert_eq!(s0.id, 1);
+        assert_eq!(s0.events.last().unwrap().kind, SpanEventKind::Done);
+        let s1 = Span::from_json(&Json::parse(lines[1]).unwrap()).unwrap();
+        assert_eq!(s1.events.last().unwrap().kind, SpanEventKind::Cancelled);
+    }
+
+    #[test]
+    fn disabled_builder_is_free_and_silent() {
+        let mut b = SpanBuilder::disabled();
+        b.record(SpanEventKind::Admitted);
+        b.record_v(SpanEventKind::DecodeStep, 3);
+        assert!(b.events().is_empty());
+        assert!(!b.is_enabled());
+        let (_, tel) = fake_hub();
+        tel.finish_span(b, SpanEventKind::Done);
+        assert!(tel.recent_spans().is_empty(), "disabled spans are never published");
+    }
+}

@@ -422,6 +422,8 @@ fn prop_api_wire_shapes_round_trip_exactly() {
             ApiRequest::Info(api::InfoRequest),
             ApiRequest::Drain(api::DrainRequest),
             ApiRequest::Undrain(api::UndrainRequest),
+            ApiRequest::Checkpoint(api::CheckpointRequest),
+            ApiRequest::Trace(api::TraceRequest),
         ];
         for r in &reqs {
             let line = r.to_json().to_string();
@@ -510,6 +512,167 @@ fn prop_api_wire_shapes_round_trip_exactly() {
             .map_err(|x| x.to_string())?;
         if back != resp {
             return Err(format!("response round-trip mismatch: {back:?} vs {resp:?}"));
+        }
+
+        // --- trace response: randomized spans + histogram summaries ---
+        use lagkv::api::{ModelTrace, TraceResponse};
+        use lagkv::telemetry::{HistogramSummary, Metric, Span, SpanEvent, SpanEventKind};
+        let kinds = [
+            SpanEventKind::Queued,
+            SpanEventKind::Admitted,
+            SpanEventKind::SessionResume,
+            SpanEventKind::PrefillSegment,
+            SpanEventKind::FirstToken,
+            SpanEventKind::DecodeStep,
+            SpanEventKind::Compression,
+            SpanEventKind::SpillStall,
+            SpanEventKind::Done,
+            SpanEventKind::Cancelled,
+            SpanEventKind::Failed,
+        ];
+        let mut t = 0u64;
+        let spans: Vec<Span> = (0..g.usize(0, 3))
+            .map(|i| Span {
+                id: i as u64 + 1,
+                events: (0..g.usize(1, 6))
+                    .map(|_| {
+                        t += g.usize(1, 900) as u64;
+                        SpanEvent {
+                            t_us: t,
+                            kind: *g.pick(&kinds),
+                            value: g.usize(0, 1 << 20) as u64,
+                        }
+                    })
+                    .collect(),
+            })
+            .collect();
+        let histograms: Vec<HistogramSummary> = Metric::all()
+            .iter()
+            .filter(|_| g.bool())
+            .map(|m| {
+                let p50 = g.usize(0, 1 << 20) as u64;
+                HistogramSummary {
+                    metric: *m,
+                    count: g.usize(1, 1 << 20) as u64,
+                    p50_us: p50,
+                    p90_us: p50 + g.usize(0, 1 << 10) as u64,
+                    p99_us: p50 + g.usize(0, 1 << 12) as u64,
+                }
+            })
+            .collect();
+        let trace = TraceResponse {
+            models: vec![ModelTrace {
+                model: ["llama_like", "qwen_like"][g.usize(0, 1)].to_string(),
+                dropped_events: g.usize(0, 99) as u64,
+                spans,
+                histograms,
+            }],
+        };
+        let v = Json::parse(&trace.to_json().to_string()).unwrap();
+        let back = TraceResponse::from_json(&v).map_err(|x| x.to_string())?;
+        if back != trace {
+            return Err(format!("trace round-trip mismatch: {back:?} vs {trace:?}"));
+        }
+        // unknown keys are rejected at every nesting level of the payload
+        for line in [
+            // inside a span event
+            r#"{"v":1,"op":"trace","models":[{"model":"m","dropped_events":0,
+               "spans":[{"id":1,"events":[{"t_us":1,"kind":"queued","value":0,"bogus_key":1}]}],
+               "histograms":[]}]}"#,
+            // inside a span
+            r#"{"v":1,"op":"trace","models":[{"model":"m","dropped_events":0,
+               "spans":[{"id":1,"events":[],"bogus_key":1}],"histograms":[]}]}"#,
+            // inside a histogram summary
+            r#"{"v":1,"op":"trace","models":[{"model":"m","dropped_events":0,"spans":[],
+               "histograms":[{"metric":"ttft","count":1,"p50_us":1,"p90_us":1,"p99_us":1,
+               "bogus_key":1}]}]}"#,
+        ] {
+            if TraceResponse::from_json(&Json::parse(line).unwrap()).is_ok() {
+                return Err(format!("unknown field accepted in {line}"));
+            }
+        }
+        // and an unknown key on the trace *request* is a typed rejection
+        match api::parse_line(r#"{"v":1,"op":"trace","bogus_key":1}"#) {
+            Err(e) if e.code() == "bad-params" && e.message().contains("bogus_key") => {}
+            other => return Err(format!("trace request unknown field: {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+/// Telemetry sink property: publishing is provably non-blocking.  A
+/// publisher racing a drainer always makes progress (no deadlock, no
+/// waiting on the sink lock), and every span is accounted for exactly —
+/// `published + dropped == submitted` — whether it was refused by a full
+/// ring or a contended lock.  With no drainer at all, a ring of capacity
+/// `k` accepts exactly `k` spans and drops the rest, counted exactly.
+#[test]
+fn prop_trace_publish_never_blocks_and_counts_drops_exactly() {
+    use lagkv::telemetry::{EventSink, Span, SpanEvent, SpanEventKind};
+
+    fn span(id: u64) -> Span {
+        Span {
+            id,
+            events: vec![SpanEvent { t_us: id, kind: SpanEventKind::Done, value: 0 }],
+        }
+    }
+
+    prop::check(12, |g| {
+        // --- overflow with no drainer: exact capacity split ---
+        let cap = g.usize(1, 16);
+        let total = cap + g.usize(1, 32);
+        let sink = EventSink::new(cap, 4, None);
+        let accepted = (0..total).filter(|&i| sink.try_publish(span(i as u64))).count();
+        if accepted != cap {
+            return Err(format!("ring of {cap} accepted {accepted}"));
+        }
+        if sink.published() != cap as u64 || sink.dropped() != (total - cap) as u64 {
+            return Err(format!(
+                "ledger off: published {} dropped {} of {total}",
+                sink.published(),
+                sink.dropped()
+            ));
+        }
+
+        // --- publisher vs. drainer race: progress + exact accounting ---
+        let sink = Arc::new(EventSink::new(g.usize(1, 8), 4, None));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let drainer = {
+            let sink = Arc::clone(&sink);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut drained = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    drained += sink.drain();
+                }
+                drained + sink.drain()
+            })
+        };
+        let total = g.usize(50, 400);
+        let t0 = std::time::Instant::now();
+        let mut published = 0u64;
+        for i in 0..total {
+            if sink.try_publish(span(i as u64)) {
+                published += 1;
+            }
+        }
+        let elapsed = t0.elapsed();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let drained = drainer.join().unwrap();
+        // Progress: publishing N spans against a contended lock must never
+        // stall; a generous wall-clock bound catches an accidental
+        // blocking lock (which would serialize behind the drain loop).
+        if elapsed > std::time::Duration::from_secs(5) {
+            return Err(format!("publisher stalled: {total} publishes took {elapsed:?}"));
+        }
+        if sink.published() != published || published + sink.dropped() != total as u64 {
+            return Err(format!(
+                "accounting off: {published} accepted + {} dropped != {total}",
+                sink.dropped()
+            ));
+        }
+        if (drained as u64) != published {
+            return Err(format!("drained {drained} != accepted {published}"));
         }
         Ok(())
     });

@@ -31,15 +31,15 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::config::CompressionConfig;
 use crate::engine::{Engine, PrefillJob, PrefillTask, SeqState, SlotState};
-use crate::telemetry::{Metric, SpanBuilder, SpanEventKind, Telemetry};
+use crate::telemetry::{Clock, Metric, MonotonicClock, SpanBuilder, SpanEventKind, Telemetry};
 use crate::tokenizer::EOS;
-use crate::util::argmax;
+use crate::util::{argmax, locked};
 
 use super::{ApiError, Event, SessionConfig, SessionStore, Timings, Usage, WorkItem};
 
@@ -76,6 +76,8 @@ impl CoordStats {
     /// it exactly once on drop, whichever path dequeues (or drops) the
     /// work item.
     pub fn enqueue_token(self: &Arc<Self>) -> QueueToken {
+        // lint: allow(ledger): the mint half of the QueueToken RAII pair —
+        // the matching release lives in QueueToken::drop
         self.queued.fetch_add(1, Ordering::Relaxed);
         QueueToken { stats: Arc::clone(self) }
     }
@@ -85,6 +87,7 @@ impl CoordStats {
 /// from the router's enqueue to the batcher's dequeue; dropping it on any
 /// path — admission, drain-on-shutdown, an abandoned channel — releases
 /// the gauge exactly once.
+#[must_use = "dropping a QueueToken immediately releases its queued-gauge unit"]
 pub struct QueueToken {
     stats: Arc<CoordStats>,
 }
@@ -112,6 +115,7 @@ impl Drop for QueueToken {
 /// explicit cancel, handle-drop abort, engine error, even a pool rejection
 /// mid-admission — returns the bytes, so a leaked reservation can never
 /// permanently inflate the occupancy estimate and starve admission.
+#[must_use = "dropping a Reservation immediately returns its reserved bytes"]
 struct Reservation {
     bytes: usize,
     total: Arc<AtomicUsize>,
@@ -157,6 +161,10 @@ pub struct Coordinator {
     /// publication on every terminal path plus the prefill-segment
     /// latency histogram.
     telemetry: Option<Arc<Telemetry>>,
+    /// Time source for queue/prefill/decode timings.  Monotonic by
+    /// default; `set_telemetry` swaps in the hub's clock so Timings and
+    /// span stamps share one (fake-clock-testable) timeline.
+    clock: Arc<dyn Clock>,
 }
 
 struct Pending {
@@ -172,7 +180,8 @@ struct Pending {
     prefill_us: u64,
     prompt_tokens: usize,
     reused_tokens: usize,
-    started: Instant,
+    /// Coordinator-clock reading (µs) when the current phase began.
+    started_us: u64,
     /// Digit-ness of the last emitted visible token (`None` before the
     /// first), which is all `Tokenizer::decode_delta` needs to extend the
     /// running text in O(1) per token.
@@ -226,7 +235,7 @@ impl Coordinator {
     ) -> Self {
         // The store republishes the pool's sheddable-bytes gauge on every
         // mutation from here on (take, put, byte-cap eviction, shedding).
-        sessions.lock().unwrap().bind_pool(Arc::clone(engine.pool()));
+        locked(&sessions).bind_pool(Arc::clone(engine.pool()));
         Coordinator {
             engine,
             admission_interval: 8,
@@ -234,12 +243,16 @@ impl Coordinator {
             stats,
             reserved: Arc::new(AtomicUsize::new(0)),
             telemetry: None,
+            clock: Arc::new(MonotonicClock::new()),
         }
     }
 
     /// Bind the model's telemetry hub: terminal spans publish through its
     /// non-blocking sink and prefill-segment latencies feed its registry.
+    /// The coordinator adopts the hub's clock so request timings and span
+    /// stamps are deltas on the same timeline.
     pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
+        self.clock = Arc::clone(telemetry.clock());
         self.telemetry = Some(telemetry);
     }
 
@@ -321,8 +334,11 @@ impl Coordinator {
         // exactly once (None for directly-fed coordinators, e.g. unit
         // tests, which never enqueued through the router's mint).
         drop(item.queue_token);
+        // lint: allow(panic): both call sites run under the admission loop's
+        // `any(!occupied)` guard, so a free slot provably exists
         let idx = slots.iter().position(|s| !s.occupied_any()).expect("free slot");
         let req = item.request;
+        let now_us = self.clock.now_us();
         let mut pending = Pending {
             events: item.events,
             cancel: item.cancel,
@@ -330,11 +346,11 @@ impl Coordinator {
             id: req.id,
             session: req.session.clone(),
             turns: 0,
-            queue_us: item.enqueued.elapsed().as_micros() as u64,
+            queue_us: now_us.saturating_sub(item.enqueued_us),
             prefill_us: 0,
             prompt_tokens: 0,
             reused_tokens: 0,
-            started: Instant::now(),
+            started_us: now_us,
             prev_digit: None,
             sent_tokens: 0,
             reservation: None,
@@ -351,12 +367,11 @@ impl Coordinator {
         }
         pending.span.record(SpanEventKind::Admitted);
 
-        let t0 = Instant::now();
+        let t0_us = self.clock.now_us();
         let mut scorer = self.engine.make_scorer(&req.compression, req.seed);
         // take() republishes the sheddable gauge: the entry's bytes stop
         // being sheddable the moment we hold it.
-        let resumed =
-            req.session.as_deref().and_then(|sid| self.sessions.lock().unwrap().take(sid));
+        let resumed = req.session.as_deref().and_then(|sid| locked(&self.sessions).take(sid));
         // (logits, cache, prefill-stage compression events)
         let prefill = match resumed {
             Some(entry) => {
@@ -380,12 +395,7 @@ impl Coordinator {
                         feed.len(),
                         self.engine.tmax
                     );
-                    self.sessions.lock().unwrap().put(
-                        sid,
-                        entry.cache,
-                        entry.pending,
-                        entry.turns,
-                    );
+                    locked(&self.sessions).put(sid, entry.cache, entry.pending, entry.turns);
                     pending.send(Event::Error {
                         id: pending.id,
                         error: ApiError::BadParams { message },
@@ -406,12 +416,7 @@ impl Coordinator {
                     }
                     Err(detail) => {
                         let sid = req.session.as_deref().unwrap_or("");
-                        self.sessions.lock().unwrap().put(
-                            sid,
-                            entry.cache,
-                            entry.pending,
-                            entry.turns,
-                        );
+                        locked(&self.sessions).put(sid, entry.cache, entry.pending, entry.turns);
                         pending.send(Event::Error {
                             id: pending.id,
                             error: ApiError::PoolExhausted {
@@ -513,8 +518,9 @@ impl Coordinator {
 
         match prefill {
             Ok((logits, cache, events)) => {
-                pending.prefill_us = t0.elapsed().as_micros() as u64;
-                pending.started = Instant::now();
+                let now_us = self.clock.now_us();
+                pending.prefill_us = now_us.saturating_sub(t0_us);
+                pending.started_us = now_us;
                 // A synchronous prefill (resume or warm hit) is one
                 // segment on the timeline.
                 pending.span.record_v(SpanEventKind::PrefillSegment, pending.prompt_tokens as u64);
@@ -603,7 +609,11 @@ impl Coordinator {
         if !slots[idx].finished() {
             return;
         }
-        let seq = slots[idx].take().unwrap();
+        // lint: allow(panic): `finished()` returned true, so the slot holds a
+        // sequence and its paired metadata — violated only by a slot-accounting
+        // bug, which should fail loudly
+        let seq = slots[idx].take().expect("finished slot holds a sequence");
+        // lint: allow(panic): same slot/metadata pairing invariant as above
         let mut p = meta[idx].take().expect("finished slot has metadata");
         let usage = Usage {
             prompt_tokens: p.prompt_tokens,
@@ -615,7 +625,7 @@ impl Coordinator {
         let timings = Timings {
             queue_us: p.queue_us,
             prefill_us: p.prefill_us,
-            decode_us: p.started.elapsed().as_micros() as u64,
+            decode_us: self.clock.now_us().saturating_sub(p.started_us),
         };
         // A completed request's compression-final cache goes back into the
         // radix prefix tree keyed by its full appended token stream (the
@@ -644,16 +654,18 @@ impl Coordinator {
     fn advance_prefills(&mut self, slots: &mut [SlotState], meta: &mut [Option<Pending>]) {
         for idx in 0..slots.len() {
             let Some(job) = slots[idx].prefill_mut() else { continue };
-            let t0_us = self.telemetry.as_ref().map(|t| t.now_us());
+            let t0_us = self.clock.now_us();
             let stepped = job.chunked.step(&self.engine, job.scorer.as_mut());
             let ingested = job.chunked.ingested();
             if let Some(tel) = &self.telemetry {
-                tel.record(Metric::PrefillSegment, tel.now_us().saturating_sub(t0_us.unwrap()));
+                tel.record(Metric::PrefillSegment, self.clock.now_us().saturating_sub(t0_us));
             }
             let done = match stepped {
                 Ok(done) => done,
                 Err(e) => {
                     slots[idx].take_prefill();
+                    // lint: allow(panic): a prefilling slot always carries
+                    // metadata — set together in admit()
                     let mut p = meta[idx].take().expect("prefilling slot has metadata");
                     p.send(Event::Error {
                         id: p.id,
@@ -670,12 +682,16 @@ impl Coordinator {
             if !done {
                 continue;
             }
+            // lint: allow(panic): `prefill_mut()` returned Some above and
+            // nothing freed the slot since
             let job = slots[idx].take_prefill().expect("prefill job present");
             let PrefillJob { chunked, scorer, compression, max_new } = *job;
             let outcome = chunked.finish(&self.engine);
+            // lint: allow(panic): a prefilling slot always carries metadata
             let p = meta[idx].as_mut().expect("prefilling slot has metadata");
-            p.prefill_us = p.started.elapsed().as_micros() as u64;
-            p.started = Instant::now();
+            let now_us = self.clock.now_us();
+            p.prefill_us = now_us.saturating_sub(p.started_us);
+            p.started_us = now_us;
             p.send(Event::Started {
                 id: p.id,
                 prompt_tokens: p.prompt_tokens,
@@ -710,13 +726,18 @@ impl Coordinator {
                 // Cancelled mid-prefill: the turn never started, so there
                 // is no conversation state to advance — same contract as a
                 // cancel while queued.  The reservation releases on drop.
+                // lint: allow(panic): a prefilling slot always carries metadata
                 let mut p = meta[idx].take().expect("prefilling slot has metadata");
                 p.send(Event::Error { id: p.id, error: ApiError::Cancelled });
                 self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
                 self.finish_span(&mut p, SpanEventKind::Cancelled);
                 continue;
             }
-            let seq = slots[idx].take().unwrap();
+            // lint: allow(panic): the flagged check above required
+            // `occupied_any()` plus present metadata, and take_prefill() just
+            // returned None, so a decoding sequence is the only remaining state
+            let seq = slots[idx].take().expect("occupied slot holds a sequence");
+            // lint: allow(panic): same pairing invariant as above
             let mut p = meta[idx].take().expect("occupied slot has metadata");
             p.send(Event::Error { id: p.id, error: ApiError::Cancelled });
             self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
@@ -730,13 +751,15 @@ impl Coordinator {
     fn stash_session(&mut self, p: &Pending, seq: SeqState) {
         if let Some(sid) = &p.session {
             // put() republishes the pool's sheddable gauge itself.
-            self.sessions.lock().unwrap().put(sid, seq.cache, seq.next_token, p.turns + 1);
+            locked(&self.sessions).put(sid, seq.cache, seq.next_token, p.turns + 1);
         }
     }
 
     /// Record `bytes` against the shared in-flight total and hand back the
     /// RAII share that returns them on drop.
     fn reserve(&self, bytes: usize) -> Reservation {
+        // lint: allow(ledger): the mint half of the Reservation RAII pair —
+        // the matching release lives in Reservation::drop
         self.reserved.fetch_add(bytes, Ordering::Relaxed);
         Reservation { bytes, total: Arc::clone(&self.reserved) }
     }
@@ -819,7 +842,7 @@ impl Coordinator {
             }
             let prefix_bytes =
                 self.engine.prefix_cache().map(|p| p.total_bytes()).unwrap_or(0);
-            let sheddable = prefix_bytes + self.sessions.lock().unwrap().total_bytes();
+            let sheddable = prefix_bytes + locked(&self.sessions).total_bytes();
             if effective.saturating_sub(sheddable) + needed > budget {
                 return Err(format!(
                     "{needed} bytes needed for {new_rows} rows, {effective} effectively \
@@ -835,7 +858,7 @@ impl Coordinator {
                 }
             }
             // Tier 2: detached sessions.
-            match self.sessions.lock().unwrap().shed_lru() {
+            match locked(&self.sessions).shed_lru() {
                 Some(_) => {
                     self.stats.sessions_shed.fetch_add(1, Ordering::Relaxed);
                 }
@@ -890,22 +913,31 @@ mod tests {
             request: req,
             events: ev_tx,
             cancel: Arc::new(AtomicBool::new(false)),
-            enqueued: Instant::now(),
+            enqueued_us: tel.now_us(),
             span: tel.begin_span(77),
             queue_token: Some(stats.enqueue_token()),
         })
         .unwrap();
         assert_eq!(stats.queued.load(Ordering::Relaxed), 1, "token minted on enqueue");
+        // The coordinator adopted the hub's fake clock in set_telemetry, so
+        // advancing it here *is* the queue wait: admit() must measure exactly
+        // this delta between the enqueue stamp and admission.
+        clock.advance_us(1234);
         drop(tx);
         std::thread::spawn(move || coord.run(rx)).join().unwrap().unwrap();
 
         let mut new_tokens = 0;
+        let mut done_timings = None;
         for ev in ev_rx.iter() {
-            if let Event::Done { usage, .. } = &ev {
+            if let Event::Done { usage, timings } = &ev {
                 new_tokens = usage.new_tokens;
+                done_timings = Some(timings.clone());
             }
         }
         assert!(new_tokens >= 1, "request decoded");
+        let timings = done_timings.expect("Done carries timings");
+        assert_eq!(timings.queue_us, 1234, "queue wait measured on the shared fake clock");
+        assert_eq!(timings.decode_us, 0, "frozen clock: no decode time can elapse");
 
         let spans = tel.recent_spans();
         assert_eq!(spans.len(), 1);

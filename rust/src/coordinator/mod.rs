@@ -470,7 +470,10 @@ pub struct WorkItem {
     pub request: Request,
     pub events: mpsc::Sender<Event>,
     pub cancel: Arc<AtomicBool>,
-    pub enqueued: std::time::Instant,
+    /// Coordinator-clock reading (µs) when the item was enqueued, stamped
+    /// from the model's telemetry clock (0 for hub-less coordinators);
+    /// `admit()` subtracts it on the same clock to get the queue wait.
+    pub enqueued_us: u64,
     /// Span recorder the batcher stamps through the slot lifecycle.
     /// [`SpanBuilder::disabled`] for direct-fed coordinators (tests).
     ///

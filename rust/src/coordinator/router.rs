@@ -22,7 +22,6 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -179,8 +178,9 @@ impl Router {
             // tracing — observability must never take down serving.
             let tel = Telemetry::new(&tel_cfg, variant).unwrap_or_else(|e| {
                 eprintln!("trace file for {variant} failed to open ({e:#}); tracing in-memory");
-                Telemetry::new(&TelemetryConfig::default(), variant)
-                    .expect("memory-only telemetry cannot fail")
+                // lint: allow(panic): the default config has no trace dir, so
+                // this constructor performs no I/O and cannot fail
+                Telemetry::new(&TelemetryConfig::default(), variant).expect("memory-only telemetry cannot fail")
             });
             let tel = Arc::new(tel);
             telemetry.insert(variant.clone(), Arc::clone(&tel));
@@ -205,7 +205,7 @@ impl Router {
                     Ok(kv) => {
                         let kv = Arc::new(kv);
                         pool.bind_store(Arc::clone(&kv));
-                        store.lock().unwrap().bind_journal(Arc::clone(&kv));
+                        crate::util::locked(&store).bind_journal(Arc::clone(&kv));
                         if let Some(pc) = &prefix {
                             pc.bind_journal(Arc::clone(&kv));
                         }
@@ -230,7 +230,7 @@ impl Router {
                     engine.set_telemetry(Arc::clone(&tel));
                     // Publish the engine facts the `info` op self-configures
                     // clients from, before the first request is served.
-                    *info_slot.lock().unwrap() = Some(Some(ModelInfo {
+                    *crate::util::locked(&info_slot) = Some(Some(ModelInfo {
                         model: name.clone(),
                         prefill_buckets: engine.backend().prefill_buckets().to_vec(),
                         decode_buckets: engine.decode_buckets().to_vec(),
@@ -248,7 +248,7 @@ impl Router {
                     // Tombstone: the `info` op's settle-wait must be able
                     // to tell "load failed" from "still loading", or every
                     // info call would stall its full deadline.
-                    *info_slot.lock().unwrap() = Some(None);
+                    *crate::util::locked(&info_slot) = Some(None);
                     let error = ApiError::EngineFailure {
                         message: format!("engine {name} failed to load: {e:#}"),
                     };
@@ -340,13 +340,13 @@ impl Router {
     /// Engine facts for this model, once its coordinator thread has loaded
     /// the engine (`None` while loading, or forever if the load failed).
     pub fn model_info(&self, model: &str) -> Option<ModelInfo> {
-        self.infos.get(model).and_then(|slot| slot.lock().unwrap().clone().flatten())
+        self.infos.get(model).and_then(|slot| crate::util::locked(slot).clone().flatten())
     }
 
     /// Whether this model's engine load has settled (loaded *or* failed) —
     /// the `info` op waits on this, never on a failed load.
     pub fn model_settled(&self, model: &str) -> bool {
-        self.infos.get(model).map(|slot| slot.lock().unwrap().is_some()).unwrap_or(true)
+        self.infos.get(model).map(|slot| crate::util::locked(slot).is_some()).unwrap_or(true)
     }
 
     /// The serving knobs this router was started with.
@@ -415,11 +415,15 @@ impl Router {
             .map(|tel| tel.begin_span(id))
             .unwrap_or_else(SpanBuilder::disabled);
         let queue_token = self.stats.get(model).map(|stats| stats.enqueue_token());
+        // Stamp the enqueue instant on the same clock the coordinator will
+        // read at admission (0 for hub-less coordinators: no hub, no spans,
+        // and queue_us saturates to 0 rather than going negative).
+        let enqueued_us = self.telemetry.get(model).map(|tel| tel.now_us()).unwrap_or(0);
         let item = WorkItem {
             request,
             events: etx,
             cancel: cancel.clone(),
-            enqueued: Instant::now(),
+            enqueued_us,
             span,
             queue_token,
         };
@@ -467,7 +471,7 @@ fn restore_inventory(
             Ok(cache) => {
                 let pending = desc.get("pending").and_then(|j| j.as_i64()).unwrap_or(0) as i32;
                 let turns = desc.get("turns").and_then(|j| j.as_i64()).unwrap_or(0) as u32;
-                sessions.lock().unwrap().restore(&id, cache, pending, turns);
+                crate::util::locked(sessions).restore(&id, cache, pending, turns);
             }
             Err(e) => eprintln!("session {id} failed to restore ({e:#}); dropped"),
         }

@@ -22,11 +22,12 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::kvcache::KvCache;
 use crate::kvpool::BlockPool;
 use crate::kvstore::KvStore;
+use crate::telemetry::{Clock, MonotonicClock};
 use crate::util::json::{self, Json};
 
 /// Store bounds.  `capacity == 0` disables session persistence entirely
@@ -56,7 +57,9 @@ pub struct SessionEntry {
     pub cache: KvCache,
     pub pending: i32,
     pub turns: u32,
-    last_used: Instant,
+    /// Store-clock reading (µs) at the last take/put — LRU order and TTL
+    /// age are judged on the store's [`Clock`].
+    last_used_us: u64,
 }
 
 impl SessionEntry {
@@ -97,11 +100,20 @@ pub struct SessionStore {
     /// the store and every eviction path journals a remove (see
     /// [`SessionStore::bind_journal`]).
     journal: Option<Arc<KvStore>>,
+    /// Time source for TTL expiry and LRU ordering; monotonic in
+    /// production, swappable for fake-clock tests.
+    clock: Arc<dyn Clock>,
 }
 
 impl SessionStore {
     pub fn new(cfg: SessionConfig) -> SessionStore {
-        SessionStore { cfg, map: HashMap::new(), pool: None, journal: None }
+        SessionStore {
+            cfg,
+            map: HashMap::new(),
+            pool: None,
+            journal: None,
+            clock: Arc::new(MonotonicClock::new()),
+        }
     }
 
     /// Bind the pool whose sheddable gauge mirrors this store.
@@ -241,7 +253,7 @@ impl SessionStore {
                 break;
             }
         }
-        let entry = SessionEntry { cache, pending, turns, last_used: Instant::now() };
+        let entry = SessionEntry { cache, pending, turns, last_used_us: self.clock.now_us() };
         self.map.insert(id.to_string(), entry);
         if self.cfg.max_bytes > 0 {
             while self.total_bytes() > self.cfg.max_bytes && !self.map.is_empty() {
@@ -270,25 +282,25 @@ impl SessionStore {
         if self.cfg.capacity == 0 {
             return;
         }
-        let entry = SessionEntry { cache, pending, turns, last_used: Instant::now() };
+        let entry = SessionEntry { cache, pending, turns, last_used_us: self.clock.now_us() };
         self.map.insert(id.to_string(), entry);
         self.publish();
     }
 
     fn lru_key(&self) -> Option<String> {
-        self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
+        self.map.iter().min_by_key(|(_, e)| e.last_used_us).map(|(k, _)| k.clone())
     }
 
     fn purge_expired(&mut self) {
-        let ttl = self.cfg.ttl;
-        let now = Instant::now();
+        let ttl_us = self.cfg.ttl.as_micros() as u64;
+        let now_us = self.clock.now_us();
         // Collect-then-remove (not `retain`) so every expired *journaled*
         // session gets its remove record too — a TTL eviction that only
         // dropped the in-memory entry would resurrect on replay.
         let expired: Vec<String> = self
             .map
             .iter()
-            .filter(|(_, e)| now.duration_since(e.last_used) > ttl)
+            .filter(|(_, e)| now_us.saturating_sub(e.last_used_us) > ttl_us)
             .map(|(k, _)| k.clone())
             .collect();
         for id in expired {

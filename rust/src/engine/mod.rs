@@ -20,7 +20,6 @@ pub mod slot;
 
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -30,7 +29,7 @@ use crate::compress::{maybe_compress, policy::make_policy, Scorer};
 use crate::config::{CompressionConfig, ModelDims};
 use crate::kvcache::KvCache;
 use crate::kvpool::{BlockPool, PrefixCache, PrefixConfig};
-use crate::telemetry::{Metric, Telemetry};
+use crate::telemetry::{Clock, Metric, MonotonicClock, Telemetry};
 use crate::tokenizer::Tokenizer;
 use crate::util::argmax as argmax_slice;
 
@@ -190,6 +189,10 @@ pub struct Engine {
     /// Per-model telemetry hub (None outside a router): compression-pass
     /// latencies feed its histogram registry.
     telemetry: Option<Arc<Telemetry>>,
+    /// Time source for compression / prefill / decode timing.  Follows
+    /// the telemetry hub's clock once one is attached, so hermetic tests
+    /// can pin engine timings with a `FakeClock`.
+    clock: Arc<dyn Clock>,
 }
 
 impl Engine {
@@ -214,6 +217,7 @@ impl Engine {
             pool: BlockPool::unbounded(BlockPool::DEFAULT_ROWS_PER_BLOCK),
             prefix: None,
             telemetry: None,
+            clock: Arc::new(MonotonicClock::new()),
         })
     }
 
@@ -253,6 +257,7 @@ impl Engine {
     /// variant): every compression-driver pass that fires records its
     /// latency into the hub's histogram registry.
     pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
+        self.clock = Arc::clone(telemetry.clock());
         self.telemetry = Some(telemetry);
     }
 
@@ -267,10 +272,10 @@ impl Engine {
         scorer: &mut dyn Scorer,
     ) -> Result<Vec<CompressionEvent>> {
         let Some(tel) = &self.telemetry else { return maybe_compress(cache, cfg, scorer) };
-        let t0 = Instant::now();
+        let t0_us = self.clock.now_us();
         let events = maybe_compress(cache, cfg, scorer)?;
         if !events.is_empty() {
-            tel.record(Metric::Compression, t0.elapsed().as_micros() as u64);
+            tel.record(Metric::Compression, self.clock.now_us().saturating_sub(t0_us));
         }
         Ok(events)
     }
@@ -780,12 +785,12 @@ impl Engine {
         max_new: usize,
         seed: u64,
     ) -> Result<GenOutput> {
-        let t0 = std::time::Instant::now();
+        let t0_us = self.clock.now_us();
         let mut scorer = self.make_scorer(cfg, seed);
         // prefill + prefill-stage recursive compression (through the radix
         // prefix cache when the engine has one enabled)
         let outcome = self.prefill_cached(ids, cfg, scorer.as_mut(), seed)?;
-        let prefill_us = t0.elapsed().as_micros() as u64;
+        let prefill_us = self.clock.now_us().saturating_sub(t0_us);
 
         let first = argmax_slice(&outcome.logits) as i32;
         let reused_tokens = outcome.reused_tokens;
@@ -796,12 +801,12 @@ impl Engine {
             seq.push_generated(first, self.tmax);
         }
 
-        let t1 = std::time::Instant::now();
+        let t1_us = self.clock.now_us();
         let mut slots = vec![slot];
         while slots[0].active().map(|s| !s.done).unwrap_or(false) {
             self.step_batch(&mut slots)?;
         }
-        let decode_us = t1.elapsed().as_micros() as u64;
+        let decode_us = self.clock.now_us().saturating_sub(t1_us);
         let seq = slots[0].take().unwrap();
         let text = self.tokenizer.decode(&seq.generated_without_eos());
         Ok(GenOutput {

@@ -91,6 +91,7 @@ pub struct Block {
 
 /// Read guard over a block's payload.  Holding it pins the block
 /// resident: demotion uses `try_write` and skips blocks under read.
+#[must_use = "dropping a BlockData releases the read pin, making the block demotable again"]
 pub struct BlockData<'a> {
     guard: RwLockReadGuard<'a, BlockState>,
 }

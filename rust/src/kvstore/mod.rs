@@ -230,6 +230,7 @@ impl KvStore {
         inner.next_block += 1;
         let data = encode_block(rows, d, k, v, pos, attn);
         let bytes = data.len() - BLOCK_HEADER;
+        // lint: allow(lock-order): `heap.put` is the buffer pool's method, not `SessionStore::put` — the lint's name-level call graph merges them, fabricating a KvStore.inner -> Block.state edge
         let rec = inner.heap.put(&data)?;
         inner.blocks.insert(id, BlockMeta { rec, rows, d, bytes, refs: 1 });
         inner.wal.append(&WalRecord::BlockPut { id, rec: rec.to_u64(), rows, d, bytes })?;
@@ -281,6 +282,7 @@ impl KvStore {
     /// owned — until a descriptor referencing it is journaled.
     pub fn put_blob(&self, data: &[u8]) -> Result<u64> {
         let mut inner = self.inner.lock().unwrap();
+        // lint: allow(lock-order): `heap.put` is the buffer pool's method, not `SessionStore::put` — the lint's name-level call graph merges them, fabricating a KvStore.inner -> Block.state edge
         let rec = inner.heap.put(data)?;
         inner.limbo.insert(rec);
         Ok(rec.to_u64())
@@ -368,6 +370,7 @@ impl KvStore {
     /// flush + fsync every dirty page, then atomically rewrite the
     /// journal to exactly the live inventory.
     pub fn checkpoint(&self) -> Result<CheckpointSummary> {
+        // lint: allow(clock): checkpoint duration measures real disk I/O; a fake clock would report 0 and hide fsync stalls
         let t0 = std::time::Instant::now();
         let mut inner = self.inner.lock().unwrap();
         let inner = &mut *inner;

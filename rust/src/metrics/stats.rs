@@ -214,6 +214,7 @@ impl Default for ThroughputMeter {
 
 impl ThroughputMeter {
     pub fn new() -> Self {
+        // lint: allow(clock): throughput is tokens per *wall-clock* second for bench reports; a virtual clock would be meaningless here
         ThroughputMeter { start: Instant::now(), tokens: 0, requests: 0 }
     }
 

@@ -28,7 +28,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -39,7 +39,9 @@ use crate::api::{
 };
 use crate::config::PolicyKind;
 use crate::coordinator::{ApiError, GenHandle, Response, Router};
+use crate::telemetry::{Clock, MonotonicClock};
 use crate::util::json::obj;
+use crate::util::locked;
 
 pub struct Server {
     pub router: Arc<Router>,
@@ -47,17 +49,25 @@ pub struct Server {
     /// Cancel flags of in-flight requests, keyed by request id, so a
     /// cancel op on any connection can abort them.
     live: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+    /// Time source for the `info` settle deadline; monotonic in production,
+    /// swappable so timeout behaviour stays fake-clock-testable.
+    clock: Arc<dyn Clock>,
 }
 
 impl Server {
     pub fn new(router: Arc<Router>) -> Server {
-        Server { router, next_id: AtomicU64::new(1), live: Mutex::new(HashMap::new()) }
+        Server {
+            router,
+            next_id: AtomicU64::new(1),
+            live: Mutex::new(HashMap::new()),
+            clock: Arc::new(MonotonicClock::new()),
+        }
     }
 
     /// Flip the cancel flag of a live request.  Returns whether the id was
     /// known (an already-finished or never-seen id is `false`).
     pub fn cancel(&self, id: u64) -> bool {
-        match self.live.lock().unwrap().get(&id) {
+        match locked(&self.live).get(&id) {
             Some(flag) => {
                 flag.store(true, Ordering::Relaxed);
                 true
@@ -69,7 +79,7 @@ impl Server {
     /// How many requests are currently in flight (diagnostics / tests /
     /// the `drain` reply).
     pub fn live_requests(&self) -> usize {
-        self.live.lock().unwrap().len()
+        locked(&self.live).len()
     }
 
     /// Build the `stats` op reply from the router's live gauges.
@@ -78,18 +88,27 @@ impl Server {
         names.sort();
         let models = names
             .into_iter()
-            .map(|m| {
+            .filter_map(|m| {
+                // The router's per-model maps are built once at start, so a
+                // listed model always resolves today; if a future dynamic
+                // registry unloads one mid-snapshot, drop its row rather
+                // than panic the control plane.
+                let (pool, stats, store) = match (
+                    self.router.pool(&m),
+                    self.router.stats(&m),
+                    self.router.session_store(&m),
+                ) {
+                    (Some(p), Some(c), Some(s)) => (p, c, s),
+                    _ => return None,
+                };
                 let sessions = {
-                    let store = self.router.session_store(&m).expect("store per model");
-                    let st = store.lock().unwrap();
+                    let st = locked(&store);
                     SessionGauges { entries: st.len(), bytes: st.total_bytes() }
                 };
-                ModelStats {
-                    pool: self.router.pool(&m).expect("pool per model").stats(),
+                Some(ModelStats {
+                    pool: pool.stats(),
                     prefix: self.router.prefix_cache(&m).map(|p| p.stats()),
-                    coord: CoordCounters::snapshot(
-                        &self.router.stats(&m).expect("stats per model"),
-                    ),
+                    coord: CoordCounters::snapshot(&stats),
                     sessions,
                     queue_capacity: self.router.config().queue_depth,
                     histograms: self
@@ -98,7 +117,7 @@ impl Server {
                         .map(|t| t.summaries())
                         .unwrap_or_default(),
                     model: m,
-                }
+                })
             })
             .collect();
         StatsResponse { draining: self.router.is_draining(), models }
@@ -121,8 +140,10 @@ impl Server {
         let mut deleted = 0u64;
         let mut models = Vec::new();
         for name in names {
-            let store = self.router.session_store(&name).expect("store per model");
-            let mut st = store.lock().unwrap();
+            // Same contract as `stats_response`: skip rather than panic if a
+            // model's store vanished between listing and lookup.
+            let Some(store) = self.router.session_store(&name) else { continue };
+            let mut st = locked(&store);
             if let Some(sid) = &req.delete {
                 if st.remove(sid) {
                     deleted += 1;
@@ -177,8 +198,9 @@ impl Server {
     pub fn info_response(&self) -> InfoResponse {
         let mut names = self.router.models();
         names.sort();
-        let deadline = Instant::now() + Duration::from_secs(5);
-        while names.iter().any(|m| !self.router.model_settled(m)) && Instant::now() < deadline
+        let deadline_us = self.clock.now_us() + 5_000_000;
+        while names.iter().any(|m| !self.router.model_settled(m))
+            && self.clock.now_us() < deadline_us
         {
             std::thread::sleep(Duration::from_millis(10));
         }
@@ -206,7 +228,7 @@ impl Server {
                 break;
             }
         }
-        self.live.lock().unwrap().remove(&id);
+        locked(&self.live).remove(&id);
     }
 
     fn handle_generate(
@@ -224,7 +246,7 @@ impl Server {
                 // Register under the live-map lock so a duplicate id can
                 // never clobber another request's cancel flag (or have its
                 // own entry removed by the first finisher).
-                let mut live = self.live.lock().unwrap();
+                let mut live = locked(&self.live);
                 if live.contains_key(&id) {
                     Err(ApiError::BadParams {
                         message: format!("request id {id} is already in flight"),
@@ -248,7 +270,7 @@ impl Server {
                     std::thread::spawn(move || me.forward_events(id, handle, w));
                 } else {
                     let resp = handle.wait();
-                    self.live.lock().unwrap().remove(&id);
+                    locked(&self.live).remove(&id);
                     write_line(writer, &api::response_line(&resp))?;
                 }
             }
@@ -368,7 +390,7 @@ impl Server {
 }
 
 fn write_line(writer: &Arc<Mutex<TcpStream>>, line: &str) -> std::io::Result<()> {
-    let mut w = writer.lock().unwrap();
+    let mut w = locked(writer);
     w.write_all(line.as_bytes())?;
     w.write_all(b"\n")?;
     w.flush()

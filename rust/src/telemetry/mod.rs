@@ -35,6 +35,7 @@ use anyhow::{bail, Result};
 
 use crate::metrics::Histogram;
 use crate::util::json::{self, Json};
+use crate::util::locked;
 
 // -- clock ---------------------------------------------------------------------
 
@@ -341,7 +342,7 @@ impl EventSink {
     /// were drained.  Called from the flusher thread and forced before
     /// every snapshot so `trace` responses are deterministic.
     pub fn drain(&self) -> usize {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = locked(&self.inner);
         let inner = &mut *inner;
         let drained = inner.ring.len();
         if drained == 0 {
@@ -373,7 +374,7 @@ impl EventSink {
     /// snapshot includes everything published so far).
     pub fn recent(&self) -> Vec<Span> {
         self.drain();
-        let inner = self.inner.lock().unwrap();
+        let inner = locked(&self.inner);
         inner.recent.iter().cloned().collect()
     }
 
@@ -490,18 +491,34 @@ impl HistogramSummary {
 /// One [`Histogram`] per [`Metric`], summarized as p50/p90/p99.
 pub struct HistogramRegistry {
     hists: Vec<Mutex<Histogram>>,
+    dropped_samples: AtomicU64,
 }
 
 impl HistogramRegistry {
     pub fn new() -> HistogramRegistry {
         HistogramRegistry {
             hists: Metric::all().iter().map(|_| Mutex::new(Histogram::default())).collect(),
+            dropped_samples: AtomicU64::new(0),
         }
     }
 
+    /// Record one sample without ever blocking the caller: `record` sits
+    /// on the span-finish path, so a contended histogram drops the sample
+    /// and bumps the exact drop counter instead of waiting.
     pub fn record(&self, metric: Metric, us: u64) {
-        let idx = Metric::all().iter().position(|m| *m == metric).expect("every metric indexed");
-        self.hists[idx].lock().unwrap().record_us(us);
+        // `Metric::all` lists variants in declaration order, so the enum
+        // discriminant doubles as the registry index.
+        let idx = metric as usize;
+        if let Ok(mut hist) = self.hists[idx].try_lock() {
+            hist.record_us(us);
+        } else {
+            self.dropped_samples.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Samples refused by `record` under lock contention — exact.
+    pub fn dropped_samples(&self) -> u64 {
+        self.dropped_samples.load(Ordering::Relaxed)
     }
 
     /// Summaries of every metric with at least one sample, in
@@ -511,7 +528,7 @@ impl HistogramRegistry {
             .iter()
             .zip(&self.hists)
             .filter_map(|(metric, hist)| {
-                let mut hist = hist.lock().unwrap();
+                let mut hist = locked(hist);
                 if hist.is_empty() {
                     return None;
                 }

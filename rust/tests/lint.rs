@@ -1,0 +1,65 @@
+//! Hermetic static-analysis self-check: the real tree must lint clean
+//! against the checked-in baseline, and the baseline must never
+//! grandfather anything in the swept layers.  Runs under plain
+//! `cargo test -q` — same contract as CI's dedicated lint step
+//! (`cargo run -p lagkv-lint -- check`).
+
+use std::path::Path;
+
+use lagkv_lint::baseline::Baseline;
+use lagkv_lint::{check_tree, Rule};
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_baseline() -> Baseline {
+    let path = repo_root().join("tools").join("lagkv-lint").join("baseline.txt");
+    Baseline::load(&path).expect("baseline parses")
+}
+
+#[test]
+fn real_tree_lints_clean_with_baseline() {
+    let vios = check_tree(repo_root()).expect("tree scans");
+    let (remaining, _grandfathered) = load_baseline().apply(vios);
+    let report: Vec<String> = remaining.iter().map(|v| v.to_string()).collect();
+    assert!(
+        remaining.is_empty(),
+        "lagkv-lint violations (fix, or add `// lint: allow(<rule>): <reason>`):\n{}",
+        report.join("\n")
+    );
+}
+
+#[test]
+fn baseline_grandfathers_only_panics_outside_the_swept_layers() {
+    for (rule, path, count) in load_baseline().entries() {
+        assert_eq!(
+            *rule,
+            Rule::Panic,
+            "only pre-existing panic sites may be grandfathered; {path} grandfathers {rule}"
+        );
+        assert!(*count > 0, "dead baseline entry for {path}");
+        for swept in
+            ["rust/src/server/", "rust/src/coordinator/", "rust/src/api/", "rust/src/telemetry/"]
+        {
+            assert!(
+                !path.starts_with(swept),
+                "{path}: the swept layers carry no baseline — use typed errors or an allow comment"
+            );
+        }
+    }
+}
+
+#[test]
+fn baseline_counts_are_not_stale() {
+    // Every entry's budget must be fully consumed: a lowered real count
+    // means the baseline should shrink with it (ratchet, not cushion).
+    let vios = check_tree(repo_root()).expect("tree scans");
+    for (rule, path, count) in load_baseline().entries() {
+        let found = vios.iter().filter(|v| v.rule == *rule && &v.file == path).count();
+        assert!(
+            found >= *count,
+            "baseline grants {count} `{rule}` in {path} but only {found} exist — lower the entry"
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Checked-in baseline of grandfathered violations.
+//!
+//! Format: one entry per line, `<rule> <path> <count>`, with `#`
+//! comments and blank lines ignored:
+//!
+//! ```text
+//! # pre-existing panic sites, to be burned down
+//! panic rust/src/kvpool/mod.rs 20
+//! ```
+//!
+//! Applying the baseline suppresses up to `count` violations of `rule`
+//! in `path` (lowest lines first).  The budget never goes negative and
+//! unused budget is simply ignored — so deleting a grandfathered site
+//! keeps the tree green, while adding a new one overflows the budget and
+//! fails the lint.
+
+use std::path::Path;
+
+use crate::{Rule, Violation};
+
+#[derive(Debug, Default)]
+pub struct Baseline {
+    entries: Vec<(Rule, String, usize)>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (Some(rule), Some(path), Some(count), None) =
+                (parts.next(), parts.next(), parts.next(), parts.next())
+            else {
+                return Err(format!(
+                    "baseline line {}: expected `<rule> <path> <count>`, got {raw:?}",
+                    lineno + 1
+                ));
+            };
+            let rule = Rule::parse(rule)
+                .ok_or_else(|| format!("baseline line {}: unknown rule {rule:?}", lineno + 1))?;
+            let count: usize = count
+                .parse()
+                .map_err(|_| format!("baseline line {}: bad count {count:?}", lineno + 1))?;
+            entries.push((rule, path.to_string(), count));
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Load a baseline file; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Baseline::parse(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Baseline::default()),
+            Err(e) => Err(format!("read {}: {e}", path.display())),
+        }
+    }
+
+    pub fn entries(&self) -> &[(Rule, String, usize)] {
+        &self.entries
+    }
+
+    /// Split `vios` into (still-failing, grandfathered-count).  `vios`
+    /// must be sorted by (rule, file, line) — [`crate::check_tree`]'s
+    /// output order — so the suppressed sites are the lowest lines.
+    pub fn apply(&self, vios: Vec<Violation>) -> (Vec<Violation>, usize) {
+        let mut budget: Vec<(Rule, &str, usize)> =
+            self.entries.iter().map(|(r, p, c)| (*r, p.as_str(), *c)).collect();
+        let mut remaining = Vec::new();
+        let mut grandfathered = 0usize;
+        'vio: for v in vios {
+            for slot in budget.iter_mut() {
+                if slot.0 == v.rule && slot.1 == v.file && slot.2 > 0 {
+                    slot.2 -= 1;
+                    grandfathered += 1;
+                    continue 'vio;
+                }
+            }
+            remaining.push(v);
+        }
+        (remaining, grandfathered)
+    }
+}

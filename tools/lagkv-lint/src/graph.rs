@@ -1,0 +1,249 @@
+//! The two whole-program rules: sink reachability (rule 4) and the
+//! held-while-acquiring lock graph (rule 5).
+//!
+//! Call resolution is name-level and deliberately approximate:
+//!
+//! * `self.f()` resolves against the enclosing impl's `Impl::f` first —
+//!   the only case where the receiver type is knowable from tokens.
+//! * Other method and path calls resolve by bare name, *except* names on
+//!   the std stoplist ([`crate::is_std_name`]): without the stoplist,
+//!   `Vec::push` or `Mutex::lock` would alias every crate function of
+//!   the same name and flood both rules with fabricated paths.
+//! * Calls whose name starts uppercase (tuple-struct constructors,
+//!   `Some(..)`) are never calls into crate functions.
+//!
+//! Both rules operate on function *objects* (definition sites), not
+//! names, so two same-named functions in different impls stay distinct
+//! once resolved.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+
+use crate::scan::{CallKind, FnInfo};
+use crate::{is_std_name, Rule, Violation, SINK_ROOTS};
+
+/// Resolve one call to the function definitions it may target.
+fn resolve(
+    caller: &FnInfo,
+    name: &str,
+    kind: CallKind,
+    fns: &[FnInfo],
+    by_name: &HashMap<String, Vec<usize>>,
+) -> Vec<usize> {
+    if kind == CallKind::SelfRecv {
+        if let Some(imp) = caller.qual.split("::").next().filter(|_| caller.qual.contains("::")) {
+            let want = format!("{imp}::{name}");
+            let same: Vec<usize> = by_name
+                .get(name)
+                .map(|ids| ids.iter().copied().filter(|&g| fns[g].qual == want).collect())
+                .unwrap_or_default();
+            if !same.is_empty() {
+                return same;
+            }
+        }
+    }
+    if kind != CallKind::Free && is_std_name(name) {
+        return Vec::new();
+    }
+    by_name.get(name).cloned().unwrap_or_default()
+}
+
+/// Rule 4: any blocking lock site in a function reachable from the
+/// telemetry publish roots is a violation — those paths must use
+/// `try_lock` and drop on contention.
+pub fn sink_blocking_violations(
+    fns: &[FnInfo],
+    by_name: &HashMap<String, Vec<usize>>,
+) -> Vec<Violation> {
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut work: Vec<usize> = Vec::new();
+    for root in SINK_ROOTS {
+        if let Some(ids) = by_name.get(root) {
+            work.extend(ids.iter().copied());
+        }
+    }
+    while let Some(fidx) = work.pop() {
+        if !seen.insert(fidx) {
+            continue;
+        }
+        for call in &fns[fidx].calls {
+            for g in resolve(&fns[fidx], &call.name, call.kind, fns, by_name) {
+                if !seen.contains(&g) {
+                    work.push(g);
+                }
+            }
+        }
+    }
+    let mut vios = Vec::new();
+    for &fidx in &seen {
+        for &line in &fns[fidx].blocking {
+            vios.push(Violation {
+                rule: Rule::SinkBlocking,
+                file: fns[fidx].file.clone(),
+                line,
+                msg: format!(
+                    "blocking lock in `{}`, reachable from the sink roots",
+                    fns[fidx].qual
+                ),
+            });
+        }
+    }
+    vios
+}
+
+/// Rule 5: build the held-while-acquiring edge set — direct edges from
+/// each function, plus interprocedural edges from held labels at a call
+/// site to every lock the callee may transitively take — and report each
+/// strongly connected component as a potential deadlock cycle.
+pub fn lock_order_violations(
+    fns: &[FnInfo],
+    by_name: &HashMap<String, Vec<usize>>,
+) -> Vec<Violation> {
+    // transitive lock sets, to fixpoint
+    let mut trans: Vec<BTreeSet<String>> = fns
+        .iter()
+        .map(|f| f.locks.iter().map(|(lbl, _)| lbl.clone()).collect())
+        .collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for fidx in 0..fns.len() {
+            let mut additions: Vec<String> = Vec::new();
+            for call in &fns[fidx].calls {
+                for g in resolve(&fns[fidx], &call.name, call.kind, fns, by_name) {
+                    for lbl in &trans[g] {
+                        if !trans[fidx].contains(lbl) && !additions.contains(lbl) {
+                            additions.push(lbl.clone());
+                        }
+                    }
+                }
+            }
+            if !additions.is_empty() {
+                trans[fidx].extend(additions);
+                changed = true;
+            }
+        }
+    }
+
+    // edge map: (held, acquired) -> first witness (file, line, note)
+    let mut edges: BTreeMap<(String, String), (String, u32, String)> = BTreeMap::new();
+    for f in fns {
+        for (a, b, line) in &f.edges {
+            edges
+                .entry((a.clone(), b.clone()))
+                .or_insert_with(|| (f.file.clone(), *line, "direct".to_string()));
+        }
+    }
+    for fidx in 0..fns.len() {
+        for call in &fns[fidx].calls {
+            if call.held.is_empty() {
+                continue;
+            }
+            for g in resolve(&fns[fidx], &call.name, call.kind, fns, by_name) {
+                for a in &call.held {
+                    for b in &trans[g] {
+                        if a != b {
+                            edges.entry((a.clone(), b.clone())).or_insert_with(|| {
+                                (fns[fidx].file.clone(), call.line, format!("via {}()", call.name))
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut graph: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        graph.entry(a.as_str()).or_default().insert(b.as_str());
+    }
+    let mut vios = Vec::new();
+    for cyc in find_cycles(&graph) {
+        let members: BTreeSet<&str> = cyc.iter().copied().collect();
+        let mut steps: Vec<String> = Vec::new();
+        let mut first: Option<(String, u32)> = None;
+        for ((a, b), (file, line, note)) in &edges {
+            if members.contains(a.as_str()) && members.contains(b.as_str()) {
+                if first.is_none() {
+                    first = Some((file.clone(), *line));
+                }
+                steps.push(format!("{a}->{b} ({file}:{line} {note})"));
+            }
+        }
+        let (file, line) = first.unwrap_or_else(|| ("?".to_string(), 0));
+        let names: Vec<&str> = members.iter().copied().collect();
+        vios.push(Violation {
+            rule: Rule::LockOrder,
+            file,
+            line,
+            msg: format!(
+                "potential deadlock cycle among {{{}}}: {}",
+                names.join(", "),
+                steps.join("; ")
+            ),
+        });
+    }
+    vios
+}
+
+/// Tarjan SCCs over the label graph; only components that can actually
+/// loop (size > 1, or a self-edge) are cycles.
+fn find_cycles<'a>(graph: &BTreeMap<&'a str, BTreeSet<&'a str>>) -> Vec<Vec<&'a str>> {
+    struct State<'a> {
+        index: HashMap<&'a str, usize>,
+        low: HashMap<&'a str, usize>,
+        stack: Vec<&'a str>,
+        on: HashSet<&'a str>,
+        counter: usize,
+        out: Vec<Vec<&'a str>>,
+    }
+    fn strong<'a>(v: &'a str, graph: &BTreeMap<&'a str, BTreeSet<&'a str>>, st: &mut State<'a>) {
+        st.index.insert(v, st.counter);
+        st.low.insert(v, st.counter);
+        st.counter += 1;
+        st.stack.push(v);
+        st.on.insert(v);
+        if let Some(succs) = graph.get(v) {
+            for &w in succs {
+                if !st.index.contains_key(w) {
+                    strong(w, graph, st);
+                    let lw = st.low[w];
+                    let lv = st.low.get_mut(v).expect("v indexed above");
+                    *lv = (*lv).min(lw);
+                } else if st.on.contains(w) {
+                    let iw = st.index[w];
+                    let lv = st.low.get_mut(v).expect("v indexed above");
+                    *lv = (*lv).min(iw);
+                }
+            }
+        }
+        if st.low[v] == st.index[v] {
+            let mut comp: Vec<&str> = Vec::new();
+            while let Some(w) = st.stack.pop() {
+                st.on.remove(w);
+                comp.push(w);
+                if w == v {
+                    break;
+                }
+            }
+            let self_loop = graph.get(v).is_some_and(|s| s.contains(v));
+            if comp.len() > 1 || self_loop {
+                comp.sort_unstable();
+                st.out.push(comp);
+            }
+        }
+    }
+    let mut st = State {
+        index: HashMap::new(),
+        low: HashMap::new(),
+        stack: Vec::new(),
+        on: HashSet::new(),
+        counter: 0,
+        out: Vec::new(),
+    };
+    for &v in graph.keys() {
+        if !st.index.contains_key(v) {
+            strong(v, graph, &mut st);
+        }
+    }
+    st.out
+}

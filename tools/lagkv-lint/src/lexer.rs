@@ -1,0 +1,263 @@
+//! Minimal Rust lexer: just enough token structure for the rule engine.
+//!
+//! Comments never become tokens; instead each comment's text is recorded
+//! against its starting line so the allow-comment grammar
+//! (`// lint: allow(<rule>): <reason>`) can be resolved per line.  String
+//! and char literals are consumed whole (their content can never trigger
+//! a rule), lifetimes are distinguished from char literals, and numeric
+//! literals fold a fractional part only when a digit follows the dot —
+//! so `0..n` lexes as range punctuation, not a float.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::Rule;
+
+/// Token class.  Only identifiers and punctuation carry text; literal
+/// payloads are irrelevant to every rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Id,
+    Num,
+    Str,
+    CharLit,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Lexed file: the token stream plus everything the allow-comment
+/// machinery needs.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// Line -> rules suppressed by an allow comment on that line.
+    pub allow: HashMap<u32, HashSet<Rule>>,
+    /// Lines holding only comments (no tokens): candidates for the
+    /// "contiguous comment block immediately above" allow placement.
+    pub comment_only: HashSet<u32>,
+}
+
+impl Lexed {
+    /// Is `rule` suppressed at `line`?  True when the allow comment sits
+    /// on the line itself or anywhere in the contiguous comment-only
+    /// block immediately above it.
+    pub fn allowed(&self, rule: Rule, line: u32) -> bool {
+        if self.allow.get(&line).is_some_and(|s| s.contains(&rule)) {
+            return true;
+        }
+        let mut prev = line.wrapping_sub(1);
+        while self.comment_only.contains(&prev) {
+            if self.allow.get(&prev).is_some_and(|s| s.contains(&rule)) {
+                return true;
+            }
+            prev = prev.wrapping_sub(1);
+        }
+        false
+    }
+}
+
+fn is_id_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_id(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// `// lint: allow(<rule>): <reason>` — the reason is mandatory so every
+/// escape hatch is justified in place.
+fn parse_allow(comment: &str) -> Option<Rule> {
+    let idx = comment.find("lint:")?;
+    let rest = comment[idx + 5..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rule = Rule::parse(&rest[..close])?;
+    let rest = rest[close + 1..].strip_prefix(':')?;
+    if rest.trim_start().is_empty() {
+        return None;
+    }
+    Some(rule)
+}
+
+pub fn lex(text: &str) -> Lexed {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<(u32, String)> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let j = text[i..].find('\n').map(|k| i + k).unwrap_or(n);
+            comments.push((line, text[i..j].to_string()));
+            i = j;
+            continue;
+        }
+        // (nested) block comment, attributed to its starting line
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = line;
+            let mut depth = 1usize;
+            let mut buf = String::from("/*");
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    buf.push_str("/*");
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    buf.push_str("*/");
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    buf.push(b[i] as char);
+                    i += 1;
+                }
+            }
+            comments.push((start, buf));
+            continue;
+        }
+        // raw strings: r"..." r#"..."# br"..."
+        if c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r') {
+            let p = if c == b'b' { i + 2 } else { i + 1 };
+            let mut h = p;
+            while h < n && b[h] == b'#' {
+                h += 1;
+            }
+            if h < n && b[h] == b'"' {
+                let hashes = h - p;
+                let mut j = h + 1;
+                'raw: while j < n {
+                    if b[j] == b'"' {
+                        let mut k = j + 1;
+                        let mut seen = 0usize;
+                        while k < n && b[k] == b'#' && seen < hashes {
+                            k += 1;
+                            seen += 1;
+                        }
+                        if seen == hashes {
+                            j = k;
+                            break 'raw;
+                        }
+                    }
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+                i = j;
+                continue;
+            }
+        }
+        // plain strings: "..." b"..."
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            if c == b'b' {
+                i += 1;
+            }
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'\n' {
+                    line += 1;
+                }
+                if b[i] == b'"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                let mut j = i + 2;
+                if j < n {
+                    j += 1;
+                }
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                i = j + 1;
+                toks.push(Tok { kind: TokKind::CharLit, text: String::new(), line });
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' {
+                i += 3;
+                toks.push(Tok { kind: TokKind::CharLit, text: String::new(), line });
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && is_id(b[j]) {
+                j += 1;
+            }
+            i = j;
+            toks.push(Tok { kind: TokKind::Lifetime, text: String::new(), line });
+            continue;
+        }
+        if is_id_start(c) {
+            let mut j = i;
+            while j < n && is_id(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Id, text: text[i..j].to_string(), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_id(b[j]) {
+                j += 1;
+            }
+            // fractional part only when a digit follows the dot, so
+            // `0..n` stays range punctuation
+            if j + 1 < n && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_id(b[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text: String::new(), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: (c as char).to_string(), line });
+        i += 1;
+    }
+
+    let mut allow: HashMap<u32, HashSet<Rule>> = HashMap::new();
+    for (ln, ctext) in &comments {
+        if let Some(rule) = parse_allow(ctext) {
+            allow.entry(*ln).or_default().insert(rule);
+        }
+    }
+    let tok_lines: HashSet<u32> = toks.iter().map(|t| t.line).collect();
+    let comment_only: HashSet<u32> =
+        comments.iter().map(|(ln, _)| *ln).filter(|ln| !tok_lines.contains(ln)).collect();
+
+    Lexed { toks, allow, comment_only }
+}

@@ -1,0 +1,204 @@
+//! lagkv-lint — project-specific static analysis for the lagkv serving
+//! stack.  Pure std, zero external dependencies, hermetic by contract
+//! (`CARGO_NET_OFFLINE=true` builds it from a cold cache).
+//!
+//! The tool lexes every file under `<root>/rust/src`, walks the token
+//! stream with a lightweight structural scanner (impl blocks, functions,
+//! brace depth, guard lifetimes), and enforces five rules:
+//!
+//! 1. **no-panic-in-serving** (`panic`) — `unwrap()` / `expect()` /
+//!    `panic!` / `todo!` / `unimplemented!` are forbidden in the serving
+//!    directories (`server/`, `coordinator/`, `kvpool/`, `kvstore/`,
+//!    `telemetry/`, `api/`).
+//! 2. **clock-discipline** (`clock`) — `Instant::now` / `SystemTime::now`
+//!    only inside the telemetry `Clock` impls; everything else takes time
+//!    from a `Clock` so tests can pin timelines.
+//! 3. **ledger-discipline** (`ledger`) — raw `fetch_add` / `fetch_sub` /
+//!    `store` / `fetch_update` on the byte-gauge atomics are forbidden
+//!    outside `kvpool/stats.rs` and the RAII guard impls.
+//! 4. **no-blocking-in-sink** (`sink-blocking`) — blocking `.lock()` is
+//!    forbidden in any function reachable from the telemetry publish
+//!    roots (`try_publish`, `finish_span`, `record`, ...).
+//! 5. **lock-order** (`lock-order`) — per-function lock-acquisition
+//!    sequences feed an approximate intra-crate call graph; cycles in
+//!    the held-while-acquiring graph are reported as potential
+//!    deadlocks.
+//!
+//! Inline escapes use `// lint: allow(<rule>): <reason>` on the
+//! offending line or in the contiguous comment block immediately above
+//! it; the reason is mandatory.  Grandfathered sites live in a
+//! checked-in baseline (see [`baseline`]).
+//!
+//! The scanner is deliberately approximate — name-level call resolution
+//! with a stoplist of ubiquitous std method names, lexical guard
+//! lifetimes — and the approximations are documented in DESIGN.md §13.
+
+pub mod baseline;
+pub mod graph;
+pub mod lexer;
+pub mod scan;
+
+use std::fmt;
+use std::path::Path;
+
+/// The five rules, in reporting order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Rule {
+    Panic,
+    Clock,
+    Ledger,
+    SinkBlocking,
+    LockOrder,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] =
+        [Rule::Panic, Rule::Clock, Rule::Ledger, Rule::SinkBlocking, Rule::LockOrder];
+
+    /// The name used in allow comments and baseline entries.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Panic => "panic",
+            Rule::Clock => "clock",
+            Rule::Ledger => "ledger",
+            Rule::SinkBlocking => "sink-blocking",
+            Rule::LockOrder => "lock-order",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.name() == s)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One diagnostic: rule, repo-relative file, 1-based line, message.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: Rule,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Directories (under `rust/src/`) where rule 1 applies: a panic here
+/// takes down serving, not a bench or a test binary.
+pub const SERVING_DIRS: [&str; 6] =
+    ["server/", "coordinator/", "kvpool/", "kvstore/", "telemetry/", "api/"];
+
+/// Byte-gauge atomics owned by the RAII accounting layer.
+pub const GAUGES: [&str; 5] = ["sheddable", "prefix_sheddable", "queued", "reserved", "total"];
+
+/// Raw atomic ops that mutate a gauge.
+pub const LEDGER_OPS: [&str; 4] = ["fetch_add", "fetch_sub", "store", "fetch_update"];
+
+/// Files where raw gauge ops are the point (the accounting layer itself).
+pub const LEDGER_FILES: [&str; 1] = ["kvpool/stats.rs"];
+
+/// RAII guard impls whose mint/release halves own their gauge ops.
+pub const GUARD_IMPLS: [&str; 3] = ["Reservation", "QueueToken", "LooseGauge"];
+
+/// Sanctioned lock-wrapper functions: their bodies are exempt from the
+/// lock rules because every *call site* is treated as the lock site.
+pub const WRAPPER_FNS: [&str; 1] = ["locked"];
+
+/// Impls allowed to read the real clock (rule 2).
+pub const CLOCK_IMPLS: [&str; 1] = ["MonotonicClock"];
+
+/// Telemetry publish roots: nothing reachable from these may block.
+pub const SINK_ROOTS: [&str; 5] =
+    ["try_publish", "finish_span", "record", "record_v", "begin_span"];
+
+/// Method names that collide with ubiquitous std methods: calls through
+/// a non-`self` receiver with these names are NOT resolved to crate
+/// functions.  A documented under-approximation of the call graph —
+/// without it, `Vec::push` or `HashMap::insert` would alias every crate
+/// function of the same name and the graph would be all noise.
+pub const STD_NAMES: [&str; 119] = [
+    "new", "with_capacity", "default", "clone", "push", "pop", "insert", "remove", "get",
+    "get_mut", "len", "is_empty", "iter", "iter_mut", "into_iter", "drain", "clear", "contains",
+    "contains_key", "retain", "extend", "entry", "keys", "values", "take", "replace", "next",
+    "collect", "map", "filter", "filter_map", "fold", "find", "position", "any", "all", "count",
+    "last", "first", "rev", "zip", "chain", "enumerate", "flatten", "flat_map", "sum", "min",
+    "max", "sort", "sort_by", "sort_by_key", "split_off", "append", "as_ref", "as_mut", "as_str",
+    "as_slice", "as_bytes", "to_vec", "to_string", "into", "from", "try_from", "try_into",
+    "parse", "fmt", "eq", "cmp", "hash", "drop", "send", "recv", "try_recv", "join", "spawn",
+    "sleep", "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_update",
+    "compare_exchange", "lock", "try_lock", "read", "write", "unwrap", "expect", "unwrap_or",
+    "unwrap_or_else", "unwrap_or_default", "ok", "err", "is_some", "is_none", "is_ok", "is_err",
+    "flush", "write_all", "read_exact", "read_to_end", "read_to_string", "write_fmt",
+    "starts_with", "ends_with", "trim", "split", "splitn", "lines", "bytes", "chars",
+    "min_by_key", "max_by_key", "copy_from_slice", "extend_from_slice", "resize", "truncate",
+    "reserve",
+];
+
+/// Extra stoplist entries that did not fit the first array cleanly.
+pub const STD_NAMES_EXTRA: [&str; 22] = [
+    "elapsed", "duration_since", "as_micros", "as_millis", "as_secs", "saturating_sub",
+    "saturating_add", "checked_sub", "checked_add", "min_by", "max_by", "to_owned", "into_inner",
+    "abs", "rem", "clamp", "windows", "chunks", "concat", "repeat", "get_or_insert_with", "drop",
+];
+
+pub fn is_std_name(name: &str) -> bool {
+    STD_NAMES.contains(&name) || STD_NAMES_EXTRA.contains(&name)
+}
+
+/// Is this repo-relative path inside a serving directory?
+pub fn in_serving(rel: &str) -> bool {
+    SERVING_DIRS
+        .iter()
+        .any(|d| rel.contains(&format!("rust/src/{d}")) || rel.starts_with(d))
+}
+
+/// Lint the tree rooted at `root` (expects sources under
+/// `<root>/rust/src`).  Returns every violation, sorted by
+/// (rule, file, line) — baseline application is the caller's business.
+pub fn check_tree(root: &Path) -> Result<Vec<Violation>, String> {
+    let src = root.join("rust").join("src");
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    walk(&src, &mut files)?;
+    files.sort();
+
+    let mut ctx = scan::ScanCtx::default();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| format!("{} escapes root", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        scan::scan_file(&text, &rel, &mut ctx);
+    }
+    let mut vios = ctx.vios;
+    vios.extend(graph::sink_blocking_violations(&ctx.fns, &ctx.by_name));
+    vios.extend(graph::lock_order_violations(&ctx.fns, &ctx.by_name));
+    vios.sort_by(|a, b| (a.rule, &a.file, a.line).cmp(&(b.rule, &b.file, b.line)));
+    Ok(vios)
+}
+
+fn walk(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

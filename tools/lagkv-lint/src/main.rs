@@ -1,0 +1,74 @@
+//! CLI: `cargo run -p lagkv-lint -- check [--root <dir>] [--baseline
+//! <file> | --no-baseline]`.
+//!
+//! Prints every non-grandfathered violation grouped by rule, then a
+//! one-line summary `lagkv-lint: violations=N baseline=M`, and exits
+//! non-zero when N > 0 (the CI contract).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use lagkv_lint::baseline::Baseline;
+use lagkv_lint::{check_tree, Rule};
+
+const USAGE: &str = "usage: lagkv-lint check [--root <dir>] [--baseline <file> | --no-baseline]";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("lagkv-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<ExitCode, String> {
+    let mut it = args.iter();
+    let Some(cmd) = it.next() else {
+        return Err(USAGE.to_string());
+    };
+    if cmd != "check" {
+        return Err(format!("unknown command {cmd:?}\n{USAGE}"));
+    }
+    let mut root = PathBuf::from(".");
+    let mut baseline_path: Option<PathBuf> = None;
+    let mut no_baseline = false;
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => {
+                root = PathBuf::from(it.next().ok_or_else(|| USAGE.to_string())?);
+            }
+            "--baseline" => {
+                baseline_path =
+                    Some(PathBuf::from(it.next().ok_or_else(|| USAGE.to_string())?));
+            }
+            "--no-baseline" => no_baseline = true,
+            other => return Err(format!("unknown flag {other:?}\n{USAGE}")),
+        }
+    }
+
+    let vios = check_tree(&root)?;
+    let baseline = if no_baseline {
+        Baseline::default()
+    } else {
+        let path = baseline_path
+            .unwrap_or_else(|| root.join("tools").join("lagkv-lint").join("baseline.txt"));
+        Baseline::load(&path)?
+    };
+    let (remaining, grandfathered) = baseline.apply(vios);
+
+    for rule in Rule::ALL {
+        let of_rule: Vec<_> = remaining.iter().filter(|v| v.rule == rule).collect();
+        if of_rule.is_empty() {
+            continue;
+        }
+        eprintln!("== {rule}: {}", of_rule.len());
+        for v in of_rule {
+            eprintln!("  {}:{}: {}", v.file, v.line, v.msg);
+        }
+    }
+    println!("lagkv-lint: violations={} baseline={grandfathered}", remaining.len());
+    Ok(if remaining.is_empty() { ExitCode::SUCCESS } else { ExitCode::FAILURE })
+}

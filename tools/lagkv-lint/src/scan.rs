@@ -1,0 +1,571 @@
+//! Single-file structural scan: walks the token stream tracking impl
+//! blocks, function bodies, brace depth, and lock-guard lifetimes, and
+//! emits the per-site rules (panic, clock, ledger) plus the per-function
+//! facts (calls, acquisitions, blocking sites, direct lock edges) the
+//! graph rules consume.
+//!
+//! Guard lifetimes are lexical: a temporary guard (`x.lock()` used in an
+//! expression) dies at the next `;`, a let-bound guard dies when its
+//! block closes or at an explicit `drop(var)`.  That is an
+//! approximation — a guard moved out of a `match` scrutinee lives
+//! slightly longer in rustc's model — but it errs toward *longer* held
+//! spans, which only adds candidate edges, never hides one.
+
+use std::collections::HashMap;
+
+use crate::lexer::{lex, Lexed, Tok, TokKind};
+use crate::{in_serving, Rule, Violation, CLOCK_IMPLS, GAUGES, GUARD_IMPLS, LEDGER_FILES,
+            LEDGER_OPS, WRAPPER_FNS};
+
+const KEYWORDS: [&str; 35] = [
+    "if", "else", "while", "for", "loop", "match", "return", "fn", "let", "mut", "pub", "impl",
+    "struct", "enum", "trait", "mod", "use", "crate", "self", "Self", "super", "move", "ref",
+    "in", "as", "where", "break", "continue", "const", "static", "type", "unsafe", "dyn", "true",
+    "false",
+];
+
+fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+/// How a call names its target — drives resolution in [`crate::graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallKind {
+    /// `self.f()` — resolved against the enclosing impl first.
+    SelfRecv,
+    /// `recv.f()` / `Path::f()` — name-level, gated by the std stoplist.
+    Method,
+    /// `f()` — free function, always name-level.
+    Free,
+}
+
+#[derive(Debug, Clone)]
+pub struct Call {
+    pub name: String,
+    pub line: u32,
+    /// Lock labels held at the call site (for interprocedural edges).
+    pub held: Vec<String>,
+    pub kind: CallKind,
+}
+
+/// Per-function facts accumulated by the scan.
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    pub name: String,
+    /// `Impl::name` inside an impl block, bare `name` otherwise.
+    pub qual: String,
+    pub file: String,
+    pub calls: Vec<Call>,
+    /// Lock acquisitions `(label, line)` in source order.
+    pub locks: Vec<(String, u32)>,
+    /// Blocking-lock sites (rule 4 candidates if this fn is reachable
+    /// from a sink root).
+    pub blocking: Vec<u32>,
+    /// Direct held-while-acquiring edges `(held, acquired, line)`.
+    pub edges: Vec<(String, String, u32)>,
+}
+
+#[derive(Default)]
+pub struct ScanCtx {
+    pub vios: Vec<Violation>,
+    pub fns: Vec<FnInfo>,
+    /// Function name -> indices into `fns` (every definition site).
+    pub by_name: HashMap<String, Vec<usize>>,
+}
+
+struct Guard {
+    label: String,
+    /// The let binding holding the guard, when there is one (`_` and
+    /// temporaries get `None`).
+    var: Option<String>,
+    /// Brace depth at acquisition: the guard dies when its block closes.
+    depth: i32,
+    /// Expression temporary: dies at the next `;`.
+    temp: bool,
+}
+
+fn text_at(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+fn kind_at(toks: &[Tok], i: usize) -> Option<TokKind> {
+    toks.get(i).map(|t| t.kind)
+}
+
+/// `toks[i]` is `impl`; returns `(type name, index of the body open
+/// brace or terminator)`.  Skips generics, takes the last path segment,
+/// and prefers the segment after `for` (`impl Clock for MonotonicClock`
+/// names `MonotonicClock`).
+fn impl_name_from(toks: &[Tok], i: usize) -> (String, usize) {
+    let n = toks.len();
+    let mut j = i + 1;
+    if text_at(toks, j) == "<" {
+        let mut depth = 1;
+        j += 1;
+        while j < n && depth > 0 {
+            match text_at(toks, j) {
+                "<" => depth += 1,
+                ">" => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    let mut segs: Vec<String> = Vec::new();
+    let mut after_for: Option<Vec<String>> = None;
+    while j < n {
+        let t = text_at(toks, j);
+        if t == "{" || t == ";" || t == "where" {
+            break;
+        }
+        if kind_at(toks, j) == Some(TokKind::Id) && t == "for" {
+            after_for = Some(Vec::new());
+        } else if kind_at(toks, j) == Some(TokKind::Id) && !is_keyword(t) {
+            match &mut after_for {
+                Some(v) => v.push(t.to_string()),
+                None => segs.push(t.to_string()),
+            }
+        } else if t == "<" {
+            let mut depth = 1;
+            j += 1;
+            while j < n && depth > 0 {
+                match text_at(toks, j) {
+                    "<" => depth += 1,
+                    ">" => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            continue;
+        }
+        j += 1;
+    }
+    let path = after_for.unwrap_or(segs);
+    let name = path.last().cloned().unwrap_or_else(|| "?".to_string());
+    (name, j)
+}
+
+/// Collect the dotted receiver path ending at token `end` (inclusive):
+/// for `self.inner.lock()` with `end` at `inner`, yields
+/// `Impl.inner`.  Returns `None` for pathless receivers.
+fn path_label(toks: &[Tok], end: usize, cur_impl: Option<&str>) -> Option<String> {
+    let mut segs: Vec<String> = Vec::new();
+    let mut j = end as isize;
+    let mut expecting_id = true;
+    while j >= 0 {
+        let idx = j as usize;
+        if expecting_id && kind_at(toks, idx) == Some(TokKind::Id) {
+            segs.push(toks[idx].text.clone());
+            expecting_id = false;
+            j -= 1;
+        } else if !expecting_id && text_at(toks, idx) == "." {
+            expecting_id = true;
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    segs.reverse();
+    if segs.is_empty() {
+        return None;
+    }
+    if segs[0] == "self" {
+        let rest = &segs[1..];
+        if rest.is_empty() {
+            return None;
+        }
+        return Some(format!("{}.{}", cur_impl.unwrap_or("?"), rest.join(".")));
+    }
+    Some(segs.join("."))
+}
+
+/// Does the statement containing token `start_idx` begin with
+/// `let [mut] <var>`?  Returns the bound variable name.
+fn stmt_is_let(toks: &[Tok], start_idx: usize) -> (bool, Option<String>) {
+    let mut j = start_idx as isize - 1;
+    while j >= 0 {
+        let t = text_at(toks, j as usize);
+        if t == ";" || t == "{" || t == "}" {
+            break;
+        }
+        j -= 1;
+    }
+    let j = (j + 1) as usize;
+    if text_at(toks, j) != "let" {
+        return (false, None);
+    }
+    let mut k = j + 1;
+    if text_at(toks, k) == "mut" {
+        k += 1;
+    }
+    if kind_at(toks, k) == Some(TokKind::Id) {
+        return (true, Some(toks[k].text.clone()));
+    }
+    (true, None)
+}
+
+/// Skip a `#[test]` / `#[cfg(test)]`-guarded item: advance past the next
+/// item's body (to its matching close brace) or terminator.
+fn skip_item(toks: &[Tok], mut j: usize) -> usize {
+    let n = toks.len();
+    while j < n {
+        let t = text_at(toks, j);
+        if t == ";" {
+            return j + 1;
+        }
+        if t == "{" {
+            let mut depth = 1;
+            j += 1;
+            while j < n && depth > 0 {
+                match text_at(toks, j) {
+                    "{" => depth += 1,
+                    "}" => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            return j;
+        }
+        j += 1;
+    }
+    j
+}
+
+pub fn scan_file(text: &str, rel: &str, ctx: &mut ScanCtx) {
+    let lexed = lex(text);
+    let toks = &lexed.toks;
+    let n = toks.len();
+
+    let mut i = 0usize;
+    let mut depth: i32 = 0;
+    let mut impl_stack: Vec<(String, i32)> = Vec::new();
+    // (index into ctx.fns, depth at open, live guards)
+    let mut fn_stack: Vec<(usize, i32, Vec<Guard>)> = Vec::new();
+    let mut pending_skip = false;
+
+    while i < n {
+        let tok = &toks[i];
+        let t = tok.text.as_str();
+        let line = tok.line;
+        let is_id = tok.kind == TokKind::Id;
+
+        // attribute: detect test regions
+        if t == "#" && text_at(toks, i + 1) == "[" {
+            let mut j = i + 2;
+            let mut bd = 1;
+            let mut ids: Vec<&str> = Vec::new();
+            while j < n && bd > 0 {
+                match text_at(toks, j) {
+                    "[" => bd += 1,
+                    "]" => bd -= 1,
+                    _ => {
+                        if kind_at(toks, j) == Some(TokKind::Id) {
+                            ids.push(&toks[j].text);
+                        }
+                    }
+                }
+                j += 1;
+            }
+            let test_only = ids == ["test"]
+                || (ids.first() == Some(&"cfg")
+                    && ids.contains(&"test")
+                    && !ids.contains(&"not"));
+            if test_only {
+                pending_skip = true;
+            }
+            i = j;
+            continue;
+        }
+
+        if pending_skip
+            && is_id
+            && matches!(
+                t,
+                "fn" | "mod" | "struct" | "enum" | "impl" | "trait" | "const" | "static" | "use"
+                    | "pub"
+            )
+        {
+            pending_skip = false;
+            i = skip_item(toks, i);
+            continue;
+        }
+
+        if is_id && t == "impl" {
+            let (name, j) = impl_name_from(toks, i);
+            if text_at(toks, j) == "{" {
+                impl_stack.push((name, depth));
+                depth += 1;
+                i = j + 1;
+            } else {
+                i = j;
+            }
+            continue;
+        }
+
+        if is_id && t == "fn" && kind_at(toks, i + 1) == Some(TokKind::Id) {
+            let fname = toks[i + 1].text.clone();
+            let mut j = i + 2;
+            while j < n && text_at(toks, j) != "{" && text_at(toks, j) != ";" {
+                j += 1;
+            }
+            if text_at(toks, j) == "{" {
+                let imp = impl_stack.last().map(|(name, _)| name.clone());
+                let qual = match &imp {
+                    Some(imp) => format!("{imp}::{fname}"),
+                    None => fname.clone(),
+                };
+                let idx = ctx.fns.len();
+                ctx.fns.push(FnInfo {
+                    name: fname.clone(),
+                    qual,
+                    file: rel.to_string(),
+                    calls: Vec::new(),
+                    locks: Vec::new(),
+                    blocking: Vec::new(),
+                    edges: Vec::new(),
+                });
+                ctx.by_name.entry(fname).or_default().push(idx);
+                fn_stack.push((idx, depth, Vec::new()));
+                depth += 1;
+                i = j + 1;
+            } else {
+                i = j;
+            }
+            continue;
+        }
+
+        if t == "{" {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t == "}" {
+            depth -= 1;
+            let mut fn_closed = false;
+            if let Some((_, fdepth, guards)) = fn_stack.last_mut() {
+                guards.retain(|g| g.depth < depth);
+                fn_closed = depth == *fdepth;
+            }
+            if fn_closed {
+                fn_stack.pop();
+            }
+            if impl_stack.last().is_some_and(|(_, d)| *d == depth) {
+                impl_stack.pop();
+            }
+            i += 1;
+            continue;
+        }
+        if t == ";" {
+            if let Some((_, _, guards)) = fn_stack.last_mut() {
+                guards.retain(|g| !g.temp);
+            }
+            i += 1;
+            continue;
+        }
+
+        if is_id {
+            let nxt = text_at(toks, i + 1);
+            let prv = if i > 0 { text_at(toks, i - 1) } else { "" };
+            let cur_impl: Option<String> = impl_stack.last().map(|(name, _)| name.clone());
+
+            // rule 1: no-panic-in-serving
+            if in_serving(rel) {
+                let hit = if matches!(t, "panic" | "todo" | "unimplemented") && nxt == "!" {
+                    Some(format!("{t}!"))
+                } else if matches!(t, "unwrap" | "expect") && prv == "." && nxt == "(" {
+                    Some(format!(".{t}()"))
+                } else {
+                    None
+                };
+                if let Some(hit) = hit {
+                    if !lexed.allowed(Rule::Panic, line) {
+                        ctx.vios.push(Violation {
+                            rule: Rule::Panic,
+                            file: rel.to_string(),
+                            line,
+                            msg: format!("`{hit}` on a serving path"),
+                        });
+                    }
+                }
+            }
+
+            // rule 2: clock-discipline
+            if t == "now"
+                && prv == ":"
+                && i >= 3
+                && text_at(toks, i - 2) == ":"
+                && kind_at(toks, i - 3) == Some(TokKind::Id)
+                && matches!(text_at(toks, i - 3), "Instant" | "SystemTime")
+            {
+                let ok = cur_impl.as_deref().is_some_and(|im| CLOCK_IMPLS.contains(&im));
+                if !ok && !lexed.allowed(Rule::Clock, line) {
+                    ctx.vios.push(Violation {
+                        rule: Rule::Clock,
+                        file: rel.to_string(),
+                        line,
+                        msg: format!(
+                            "`{}::now` outside the telemetry Clock impls",
+                            text_at(toks, i - 3)
+                        ),
+                    });
+                }
+            }
+
+            // rule 3: ledger-discipline
+            if LEDGER_OPS.contains(&t)
+                && prv == "."
+                && nxt == "("
+                && i >= 2
+                && kind_at(toks, i - 2) == Some(TokKind::Id)
+                && GAUGES.contains(&text_at(toks, i - 2))
+            {
+                let ok = LEDGER_FILES.iter().any(|f| rel.ends_with(f))
+                    || cur_impl.as_deref().is_some_and(|im| GUARD_IMPLS.contains(&im));
+                if !ok && !lexed.allowed(Rule::Ledger, line) {
+                    ctx.vios.push(Violation {
+                        rule: Rule::Ledger,
+                        file: rel.to_string(),
+                        line,
+                        msg: format!(
+                            "raw `.{t}` on byte-gauge `{}` outside the RAII guards",
+                            text_at(toks, i - 2)
+                        ),
+                    });
+                }
+            }
+
+            // calls + rule 4 blocking sites + rule 5 acquisitions
+            if nxt == "("
+                && !is_keyword(t)
+                && prv != "fn"
+                && !t.chars().next().is_some_and(char::is_uppercase)
+            {
+                if let Some((fidx, _, guards)) = fn_stack.last() {
+                    let mut held: Vec<String> =
+                        guards.iter().map(|g| g.label.clone()).collect();
+                    if lexed.allowed(Rule::LockOrder, line) {
+                        held.clear();
+                    }
+                    let kind = if prv == "." && i >= 2 && text_at(toks, i - 2) == "self" {
+                        CallKind::SelfRecv
+                    } else if prv == "." || prv == ":" {
+                        CallKind::Method
+                    } else {
+                        CallKind::Free
+                    };
+                    ctx.fns[*fidx].calls.push(Call {
+                        name: t.to_string(),
+                        line,
+                        held,
+                        kind,
+                    });
+                }
+                let in_wrapper = fn_stack
+                    .last()
+                    .is_some_and(|(fidx, _, _)| WRAPPER_FNS.contains(&ctx.fns[*fidx].name.as_str()));
+
+                if t == "lock" && prv == "." && !in_wrapper {
+                    if let Some((fidx, _, _)) = fn_stack.last() {
+                        if !lexed.allowed(Rule::SinkBlocking, line) {
+                            ctx.fns[*fidx].blocking.push(line);
+                        }
+                    }
+                    let lbl = path_label(toks, i.saturating_sub(2), cur_impl.as_deref());
+                    let binding = stmt_is_let(toks, i.saturating_sub(2));
+                    acquire(ctx, &lexed, &mut fn_stack, lbl, line, binding, depth);
+                } else if matches!(t, "read" | "write")
+                    && prv == "."
+                    && text_at(toks, i + 2) == ")"
+                    && !in_wrapper
+                {
+                    let lbl = path_label(toks, i.saturating_sub(2), cur_impl.as_deref());
+                    let binding = stmt_is_let(toks, i.saturating_sub(2));
+                    acquire(ctx, &lexed, &mut fn_stack, lbl, line, binding, depth);
+                } else if t == "locked" {
+                    if let Some((fidx, _, _)) = fn_stack.last() {
+                        if !lexed.allowed(Rule::SinkBlocking, line) {
+                            ctx.fns[*fidx].blocking.push(line);
+                        }
+                    }
+                    // crate::util::locked(&self.inner) — label from the argument path
+                    let mut j = i + 2;
+                    if text_at(toks, j) == "&" {
+                        j += 1;
+                    }
+                    let mut segs: Vec<String> = Vec::new();
+                    while j < n
+                        && (kind_at(toks, j) == Some(TokKind::Id) || text_at(toks, j) == ".")
+                    {
+                        if kind_at(toks, j) == Some(TokKind::Id) {
+                            segs.push(toks[j].text.clone());
+                        }
+                        j += 1;
+                    }
+                    let lbl = if segs.is_empty() {
+                        None
+                    } else if segs[0] == "self" {
+                        if segs.len() > 1 {
+                            Some(format!(
+                                "{}.{}",
+                                cur_impl.as_deref().unwrap_or("?"),
+                                segs[1..].join(".")
+                            ))
+                        } else {
+                            None
+                        }
+                    } else {
+                        Some(segs.join("."))
+                    };
+                    let binding = stmt_is_let(toks, i);
+                    acquire(ctx, &lexed, &mut fn_stack, lbl, line, binding, depth);
+                } else if t == "drop"
+                    && kind_at(toks, i + 2) == Some(TokKind::Id)
+                    && text_at(toks, i + 3) == ")"
+                {
+                    if let Some((_, _, guards)) = fn_stack.last_mut() {
+                        let var = text_at(toks, i + 2).to_string();
+                        guards.retain(|g| g.var.as_deref() != Some(var.as_str()));
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Register a lock acquisition in the innermost function: record it,
+/// emit direct held-while-acquiring edges against every live guard, and
+/// push a new guard whose lifetime depends on whether the statement
+/// let-binds it.  An `allow(lock-order)` on the line removes the
+/// acquisition from the graph entirely.
+fn acquire(
+    ctx: &mut ScanCtx,
+    lexed: &Lexed,
+    fn_stack: &mut [(usize, i32, Vec<Guard>)],
+    label: Option<String>,
+    line: u32,
+    binding: (bool, Option<String>),
+    depth: i32,
+) {
+    let label = label.unwrap_or_else(|| "?".to_string());
+    if lexed.allowed(Rule::LockOrder, line) {
+        return;
+    }
+    let Some((fidx, _, guards)) = fn_stack.last_mut() else {
+        return;
+    };
+    ctx.fns[*fidx].locks.push((label.clone(), line));
+    for g in guards.iter() {
+        if g.label != label {
+            ctx.fns[*fidx].edges.push((g.label.clone(), label.clone(), line));
+        }
+    }
+    let (is_let, var) = binding;
+    let held = is_let && var.as_deref() != Some("_");
+    guards.push(Guard {
+        label,
+        var: if held { var } else { None },
+        depth,
+        temp: !held,
+    });
+}

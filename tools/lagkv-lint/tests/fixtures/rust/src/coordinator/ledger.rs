@@ -1,0 +1,29 @@
+//! Fixture: rule 3 (ledger-discipline) seeds.  Raw atomic ops on the
+//! byte-gauge names are only legal in the accounting module and the
+//! RAII guard impls.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct FxStats {
+    pub queued: AtomicU64,
+    pub reserved: AtomicU64,
+}
+
+impl FxStats {
+    pub fn fx_bump(&self) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn fx_sanctioned(&self) {
+        // lint: allow(ledger): fixture mint half of an RAII pair
+        self.reserved.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+pub struct QueueToken;
+
+impl QueueToken {
+    pub fn fx_release(stats: &FxStats) {
+        stats.queued.fetch_sub(1, Ordering::Relaxed);
+    }
+}

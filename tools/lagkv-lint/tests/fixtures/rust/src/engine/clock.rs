@@ -1,0 +1,25 @@
+//! Fixture: rule 2 (clock-discipline) seeds.  The clock rule applies
+//! tree-wide: only the telemetry `Clock` impls may read the real clock.
+
+use std::time::{Instant, SystemTime};
+
+pub struct FxClock;
+
+impl FxClock {
+    pub fn fx_now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+pub fn fx_wall() -> SystemTime {
+    // lint: allow(clock): fixture measures real wall time by design
+    SystemTime::now()
+}
+
+pub struct MonotonicClock;
+
+impl MonotonicClock {
+    pub fn fx_origin() -> Instant {
+        Instant::now()
+    }
+}

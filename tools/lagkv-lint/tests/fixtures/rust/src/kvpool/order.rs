@@ -1,0 +1,57 @@
+//! Fixture: rule 5 (lock-order) seeds — a two-function deadlock cycle
+//! (`fx_ab` takes a then b, `fx_ba` takes b then a), plus an identical
+//! shape whose inverted acquisition carries an allow comment and so
+//! contributes no edge.
+
+use std::sync::Mutex;
+
+pub struct FxOrder {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl FxOrder {
+    pub fn fx_ab(&self) -> u32 {
+        let ga = self.a.lock();
+        let gb = self.b.lock();
+        match (ga, gb) {
+            (Ok(x), Ok(y)) => *x + *y,
+            _ => 0,
+        }
+    }
+
+    pub fn fx_ba(&self) -> u32 {
+        let gb = self.b.lock();
+        let ga = self.a.lock();
+        match (ga, gb) {
+            (Ok(x), Ok(y)) => *x + *y,
+            _ => 0,
+        }
+    }
+}
+
+pub struct FxOrderOk {
+    c: Mutex<u32>,
+    d: Mutex<u32>,
+}
+
+impl FxOrderOk {
+    pub fn fx_cd(&self) -> u32 {
+        let gc = self.c.lock();
+        let gd = self.d.lock();
+        match (gc, gd) {
+            (Ok(x), Ok(y)) => *x + *y,
+            _ => 0,
+        }
+    }
+
+    pub fn fx_dc(&self) -> u32 {
+        let gd = self.d.lock();
+        // lint: allow(lock-order): fixture-sanctioned inverted order, the d->c path is startup-only
+        let gc = self.c.lock();
+        match (gc, gd) {
+            (Ok(x), Ok(y)) => *x + *y,
+            _ => 0,
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Fixture: rule 1 (no-panic-in-serving) seeds.  `server/` is a serving
+//! directory, so every panicking construct below must be flagged unless
+//! an allow comment sanctions it.
+
+pub fn fx_panics(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect("fixture");
+    if a + b == 0 {
+        panic!("fixture");
+    }
+    // lint: allow(panic): fixture-sanctioned invariant, the caller checked is_some
+    let c = v.unwrap();
+    a + b + c
+}
+
+pub fn fx_todo() {
+    todo!()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fx_test_panics_are_ignored() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,36 @@
+//! Fixture: rule 4 (no-blocking-in-sink) seeds.  `try_publish` is a
+//! sink root; everything it reaches must use `try_lock`.
+
+use std::sync::Mutex;
+
+pub struct FxSink {
+    inner: Mutex<Vec<u32>>,
+    bad: Mutex<Vec<u32>>,
+}
+
+impl FxSink {
+    pub fn try_publish(&self, v: u32) {
+        self.fx_blocking_push(v);
+        self.fx_sanctioned_push(v);
+        self.fx_nonblocking_push(v);
+    }
+
+    fn fx_blocking_push(&self, v: u32) {
+        if let Ok(mut inner) = self.bad.lock() {
+            inner.push(v);
+        }
+    }
+
+    fn fx_sanctioned_push(&self, v: u32) {
+        // lint: allow(sink-blocking): fixture exercises the escape hatch
+        if let Ok(mut inner) = self.inner.lock() {
+            inner.push(v);
+        }
+    }
+
+    fn fx_nonblocking_push(&self, v: u32) {
+        if let Ok(mut inner) = self.inner.try_lock() {
+            inner.push(v);
+        }
+    }
+}

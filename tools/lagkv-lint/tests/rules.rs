@@ -1,0 +1,128 @@
+//! Rule-engine tests over the checked-in fixture tree
+//! (`tests/fixtures/rust/src/**`), which mimics the real source layout
+//! so the directory-scoped rules apply.  Each rule has a seeded
+//! violation (asserted present at its exact line) and an
+//! allow-comment-suppressed twin (asserted absent) — so these tests fail
+//! both when a rule goes blind and when the escape hatch breaks.
+
+use std::path::Path;
+
+use lagkv_lint::baseline::Baseline;
+use lagkv_lint::{check_tree, Rule, Violation};
+
+fn fixture_vios() -> Vec<Violation> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures");
+    check_tree(&root).expect("fixture tree scans")
+}
+
+fn at(vios: &[Violation], rule: Rule, file: &str, line: u32) -> bool {
+    vios.iter().any(|v| v.rule == rule && v.file == file && v.line == line)
+}
+
+fn count(vios: &[Violation], rule: Rule) -> usize {
+    vios.iter().filter(|v| v.rule == rule).count()
+}
+
+#[test]
+fn panic_rule_flags_serving_sites_and_honors_allow() {
+    let vios = fixture_vios();
+    let f = "rust/src/server/panics.rs";
+    assert!(at(&vios, Rule::Panic, f, 6), "unwrap() flagged");
+    assert!(at(&vios, Rule::Panic, f, 7), "expect() flagged");
+    assert!(at(&vios, Rule::Panic, f, 9), "panic! flagged");
+    assert!(at(&vios, Rule::Panic, f, 17), "todo! flagged");
+    assert!(!at(&vios, Rule::Panic, f, 12), "allow(panic) suppresses the line below it");
+    // the #[cfg(test)] module's unwrap is not a violation
+    assert_eq!(count(&vios, Rule::Panic), 4, "{vios:?}");
+}
+
+#[test]
+fn clock_rule_flags_non_clock_impls_and_honors_allow() {
+    let vios = fixture_vios();
+    let f = "rust/src/engine/clock.rs";
+    assert!(at(&vios, Rule::Clock, f, 10), "Instant::now outside a Clock impl flagged");
+    assert!(!at(&vios, Rule::Clock, f, 16), "allow(clock) suppresses SystemTime::now");
+    assert!(!at(&vios, Rule::Clock, f, 22), "MonotonicClock impl may read the real clock");
+    assert_eq!(count(&vios, Rule::Clock), 1, "{vios:?}");
+}
+
+#[test]
+fn ledger_rule_flags_raw_gauge_ops_and_honors_allow() {
+    let vios = fixture_vios();
+    let f = "rust/src/coordinator/ledger.rs";
+    assert!(at(&vios, Rule::Ledger, f, 14), "raw fetch_add on `queued` flagged");
+    assert!(!at(&vios, Rule::Ledger, f, 19), "allow(ledger) suppresses the mint half");
+    assert!(!at(&vios, Rule::Ledger, f, 27), "guard impls (QueueToken) own their gauge ops");
+    assert_eq!(count(&vios, Rule::Ledger), 1, "{vios:?}");
+}
+
+#[test]
+fn sink_rule_flags_blocking_locks_reachable_from_roots() {
+    let vios = fixture_vios();
+    let f = "rust/src/telemetry/sink.rs";
+    assert!(at(&vios, Rule::SinkBlocking, f, 19), "blocking .lock() reachable from try_publish");
+    assert!(!at(&vios, Rule::SinkBlocking, f, 26), "allow(sink-blocking) suppresses");
+    assert!(!at(&vios, Rule::SinkBlocking, f, 32), "try_lock never blocks");
+    assert_eq!(count(&vios, Rule::SinkBlocking), 1, "{vios:?}");
+}
+
+#[test]
+fn lock_order_rule_reports_the_two_function_cycle_once() {
+    let vios = fixture_vios();
+    let cycles: Vec<&Violation> =
+        vios.iter().filter(|v| v.rule == Rule::LockOrder).collect();
+    assert_eq!(cycles.len(), 1, "exactly the FxOrder cycle: {cycles:?}");
+    let c = cycles[0];
+    assert_eq!(c.file, "rust/src/kvpool/order.rs");
+    assert!(c.msg.contains("FxOrder.a") && c.msg.contains("FxOrder.b"), "{}", c.msg);
+    assert!(
+        !c.msg.contains("FxOrderOk"),
+        "allow(lock-order) on the inverted acquisition kills the FxOrderOk cycle: {}",
+        c.msg
+    );
+}
+
+#[test]
+fn baseline_grandfathers_exact_counts() {
+    let vios = fixture_vios();
+    let total = vios.len();
+    let baseline = Baseline::parse(
+        "# fixture baseline\n\
+         panic rust/src/server/panics.rs 3\n\
+         clock rust/src/engine/clock.rs 99\n",
+    )
+    .expect("baseline parses");
+    let (remaining, grandfathered) = baseline.apply(vios);
+    // 3 of 4 panics grandfathered (lowest lines first) + the 1 clock hit;
+    // overcounted budget is ignored, never banked
+    assert_eq!(grandfathered, 4);
+    assert_eq!(remaining.len(), total - 4);
+    assert!(at(&remaining, Rule::Panic, "rust/src/server/panics.rs", 17));
+    assert!(!at(&remaining, Rule::Panic, "rust/src/server/panics.rs", 6));
+    assert_eq!(count(&remaining, Rule::Clock), 0);
+}
+
+#[test]
+fn baseline_rejects_malformed_lines() {
+    assert!(Baseline::parse("panic onlytwo").is_err());
+    assert!(Baseline::parse("nosuchrule a/b.rs 3").is_err());
+    assert!(Baseline::parse("panic a/b.rs many").is_err());
+    assert!(Baseline::parse("panic a/b.rs 3 extra").is_err());
+    assert!(Baseline::parse("# just comments\n\n").expect("ok").entries().is_empty());
+}
+
+#[test]
+fn allow_comment_requires_a_reason() {
+    // a reasonless allow is not an allow: the violation must survive
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures");
+    let text = std::fs::read_to_string(
+        root.join("rust").join("src").join("server").join("panics.rs"),
+    )
+    .expect("fixture readable");
+    assert!(text.contains("lint: allow(panic):"), "fixture carries a well-formed allow");
+
+    let mut ctx = lagkv_lint::scan::ScanCtx::default();
+    let bad = "pub fn f(v: Option<u32>) -> u32 {\n    // lint: allow(panic):\n    v.unwrap()\n}\n";
+    lagkv_lint::scan::scan_file(bad, "rust/src/server/x.rs", &mut ctx);
+    assert_eq!(ctx.vios.len(), 1, "reasonless allow must not suppress: {:?}", ctx.vios);
+}

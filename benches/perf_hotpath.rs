@@ -18,6 +18,10 @@
 //!     disk store, fault the payload back with a full gather, re-demote
 //!     (sticky store ids write nothing) — ledger exactness and
 //!     bit-identity asserted; results land in BENCH_store.json,
+//!   * the block codec (`--quant int8`): encode-at-freeze and
+//!     decode-at-read throughput across block geometries plus the
+//!     end-to-end resident-byte saving of an int8 freeze — error bound
+//!     asserted; results land in BENCH_quant.json,
 //!   * decode step (engine, literal path),
 //!   * prefill per bucket,
 //!   * end-to-end generation tokens/s,
@@ -712,6 +716,113 @@ fn bench_store_spill() -> anyhow::Result<()> {
     result
 }
 
+/// Block-codec hot loop (the quantized-KV bench): encode-at-freeze and
+/// decode-at-read throughput of the int8 codec across block geometries,
+/// plus the end-to-end resident-byte saving of an int8 freeze against
+/// the fp32 identity path (the ledger numbers the server budgets on).
+/// Asserts every decoded row inside the per-row half-step error bound —
+/// the randomized version lives in rust/tests/properties.rs — and
+/// records results in BENCH_quant.json.
+fn bench_quant_codec() -> anyhow::Result<()> {
+    use lagkv::kvpool::block_bytes;
+    use lagkv::quant::{CodecKind, QuantSpec};
+    use std::sync::Arc;
+
+    let codec = CodecKind::Int8Sym.codec();
+    let mut geoms = Vec::new();
+    for &(rows, d) in &[(16usize, 64usize), (16, 128), (64, 128)] {
+        let mut rng = Rng::seed_from(23);
+        let k: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let raw_bytes = 2 * rows * d * 4;
+
+        let (enc_ns, _) = time_it(3, 200, || {
+            std::hint::black_box(codec.encode(rows, d, &k, &v));
+        });
+        row(
+            &format!("int8 encode {rows}x{d}"),
+            enc_ns,
+            &format!("{:.2} GB/s", raw_bytes as f64 / enc_ns),
+        );
+
+        let enc = codec.encode(rows, d, &k, &v);
+        let mut ko = Vec::new();
+        let mut vo = Vec::new();
+        let (dec_ns, _) = time_it(3, 200, || {
+            ko.clear();
+            vo.clear();
+            codec.decode(rows, d, &enc, &mut ko, &mut vo);
+            std::hint::black_box(ko.len());
+        });
+        row(
+            &format!("int8 decode {rows}x{d}"),
+            dec_ns,
+            &format!("{:.2} GB/s", raw_bytes as f64 / dec_ns),
+        );
+
+        // round-trip error bound: half a per-row quantization step
+        for (orig_all, dec_all) in [(&k, &ko), (&v, &vo)] {
+            for r in 0..rows {
+                let orig = &orig_all[r * d..(r + 1) * d];
+                let dec = &dec_all[r * d..(r + 1) * d];
+                let max_abs = orig.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                let bound = max_abs / 127.0 * 0.501 + 1e-7;
+                for (o, x) in orig.iter().zip(dec) {
+                    anyhow::ensure!(
+                        (o - x).abs() <= bound,
+                        "row {r}: decode outside the half-step bound"
+                    );
+                }
+            }
+        }
+
+        let enc_bytes = CodecKind::Int8Sym.encoded_block_bytes(rows, d);
+        geoms.push(format!(
+            "    {{\"rows\": {rows}, \"d\": {d}, \"raw_kv_bytes\": {raw_bytes}, \
+             \"encoded_block_bytes\": {enc_bytes}, \"encode_ns\": {enc_ns:.0}, \
+             \"decode_ns\": {dec_ns:.0}, \"encode_gb_s\": {:.2}, \"decode_gb_s\": {:.2}}}",
+            raw_bytes as f64 / enc_ns,
+            raw_bytes as f64 / dec_ns,
+        ));
+    }
+
+    // end-to-end: freeze the same 512-row stream through each codec and
+    // compare the exact resident footprint the admission budget sees
+    let (nh, d, rpb) = (2usize, 64usize, 16usize);
+    let mut fp = KvCache::new_in(BlockPool::unbounded(rpb), 1, nh, d);
+    let mut q = KvCache::new_in(BlockPool::unbounded(rpb), 1, nh, d);
+    q.set_quant(Arc::new(QuantSpec::all(CodecKind::Int8Sym)));
+    let mut rng = Rng::seed_from(29);
+    for t in 0..512i32 {
+        let kv: Vec<f32> = (0..nh * d).map(|_| rng.normal()).collect();
+        fp.append_token(&kv, &kv, t)?;
+        q.append_token(&kv, &kv, t)?;
+    }
+    fp.freeze_layer_prefix(0, 512);
+    q.freeze_layer_prefix(0, 512);
+    let (fp_bytes, q_bytes) = (fp.exact_bytes(), q.exact_bytes());
+    let saving = 1.0 - q_bytes as f64 / fp_bytes as f64;
+    println!(
+        "  int8 freeze of 512x{nh}x{d}: {q_bytes} B vs fp32 {fp_bytes} B \
+         ({:.1}% resident saving, block {} -> {} B)",
+        saving * 100.0,
+        block_bytes(rpb, d),
+        CodecKind::Int8Sym.encoded_block_bytes(rpb, d),
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"quant_codec\",\n  \"codec\": \"int8\",\n  \
+         \"geometries\": [\n{}\n  ],\n  \
+         \"freeze_rows\": 512,\n  \"freeze_heads\": {nh},\n  \"freeze_d\": {d},\n  \
+         \"fp32_exact_bytes\": {fp_bytes},\n  \"int8_exact_bytes\": {q_bytes},\n  \
+         \"resident_saving\": {saving:.4}\n}}\n",
+        geoms.join(",\n"),
+    );
+    std::fs::write("BENCH_quant.json", json)?;
+    println!("  wrote BENCH_quant.json");
+    Ok(())
+}
+
 /// Streaming latencies only the event API can expose: time-to-first-token
 /// (queue + prefill + first decode) and the inter-token gap, measured off
 /// the live `Router::submit` stream.
@@ -786,6 +897,10 @@ fn main() -> anyhow::Result<()> {
     match bench_store_spill() {
         Ok(()) => {}
         Err(e) => eprintln!("SKIP tiered-storage bench: {e:#}"),
+    }
+    match bench_quant_codec() {
+        Ok(()) => {}
+        Err(e) => eprintln!("SKIP quant-codec bench: {e:#}"),
     }
     match bench_streaming() {
         Ok(()) => {}

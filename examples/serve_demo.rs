@@ -15,13 +15,18 @@
 //! (per-model hit/miss/reuse gauges are printed at the end).
 //! `--store-dir DIR` opts into tiered storage: cold frozen blocks spill to
 //! disk under pool pressure and detached sessions / prefix snapshots are
-//! WAL-journaled so they survive a restart of the demo.
+//! WAL-journaled so they survive a restart of the demo; `--store-max-mb N`
+//! caps that directory (coldest spilled inventory evicted LRU over the
+//! cap).  `--quant int8[:LAYERS]` freezes blocks through the int8 codec —
+//! the per-model gauge line grows a `quantized` segment showing exact
+//! encoded residency.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo -- --requests 24 --clients 6
 //! cargo run --release --example serve_demo -- --pool-mb 4 --session-mb 1
 //! cargo run --release --example serve_demo -- --prefix-cache
-//! cargo run --release --example serve_demo -- --store-dir /tmp/lagkv-demo
+//! cargo run --release --example serve_demo -- --store-dir /tmp/lagkv-demo --store-max-mb 64
+//! cargo run --release --example serve_demo -- --quant int8
 //! ```
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -55,6 +60,13 @@ fn main() -> anyhow::Result<()> {
         router_cfg.prefix_cache = Some(lagkv::kvpool::PrefixConfig::default());
     }
     router_cfg.store_dir = args.get("store-dir").map(std::path::PathBuf::from);
+    match args.usize_or("store-max-mb", 0)? {
+        0 => {} // absent or explicit 0: uncapped, like --pool-mb 0
+        mb => router_cfg.store_max_bytes = Some(mb * 1024 * 1024),
+    }
+    if let Some(q) = args.get("quant") {
+        router_cfg.quant = lagkv::quant::QuantSpec::parse(q)?;
+    }
     let router = Arc::new(Router::start_with(spec, &models, router_cfg));
     let server = Arc::new(Server::new(router));
     let stop = Arc::new(AtomicBool::new(false));

@@ -15,7 +15,10 @@
 //! * observability: the `trace` op returns a complete span timeline
 //!   (queued → admitted → prefill segments → first token → compression →
 //!   done) with monotone timestamps, nonzero TTFT, zero dropped events,
-//!   and the `--trace-dir` NDJSON file carries the same spans.
+//!   and the `--trace-dir` NDJSON file carries the same spans;
+//! * quantized mode (`--quant int8`): frozen blocks land encoded — the
+//!   `quant_bytes`/`quant_blocks` gauges report exact encoded residency
+//!   over the wire — and a session resume round-trips through them.
 //!
 //! Exits non-zero on any protocol violation.
 //!
@@ -267,8 +270,7 @@ fn main() -> anyhow::Result<()> {
         sessions: SessionConfig::default(),
         pool_max_bytes: Some(budget),
         prefix_cache: None,
-        store_dir: None,
-        trace_dir: None,
+        ..Default::default()
     };
     let router2 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, tiny_cfg));
     let stats2 = router2.stats("llama_like").expect("model stats");
@@ -376,8 +378,7 @@ fn main() -> anyhow::Result<()> {
         sessions: SessionConfig::default(),
         pool_max_bytes: Some(prefix_budget),
         prefix_cache: Some(lagkv::kvpool::PrefixConfig { stride: 24, ..Default::default() }),
-        store_dir: None,
-        trace_dir: None,
+        ..Default::default()
     };
     let router3 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, prefix_cfg));
     let server3 = Arc::new(Server::new(router3));
@@ -471,7 +472,7 @@ fn main() -> anyhow::Result<()> {
         pool_max_bytes: None,
         prefix_cache: Some(lagkv::kvpool::PrefixConfig { stride: 24, ..Default::default() }),
         store_dir: Some(store_root.clone()),
-        trace_dir: None,
+        ..Default::default()
     };
     let mut rng4 = Rng::seed_from(91);
     let sys4 = gen_passkey(&mut rng4, &PasskeySpec { n_filler: 120, n_digits: 16, depth: None })
@@ -559,6 +560,56 @@ fn main() -> anyhow::Result<()> {
     drop(client5);
     stop5.store(true, Ordering::Relaxed);
     serve5.join().expect("restarted store server thread")?;
+
+    // 9. Quantized mode (`--quant int8`): every frozen block lands
+    //    encoded, the stats op reports *exact* encoded residency
+    //    (quant_bytes is a closed-form multiple of quant_blocks), and a
+    //    session resume round-trips through encoded blocks.
+    let quant_cfg = RouterConfig {
+        queue_depth: 8,
+        sessions: SessionConfig::default(),
+        quant: lagkv::quant::QuantSpec::parse("int8").expect("int8 spec parses"),
+        ..Default::default()
+    };
+    let router6 = Arc::new(Router::start_with(EngineSpec::cpu(), &models, quant_cfg));
+    let server6 = Arc::new(Server::new(router6));
+    let stop6 = Arc::new(AtomicBool::new(false));
+    let (listener6, port6) = Server::bind(0)?;
+    let serve6 = {
+        let server6 = server6.clone();
+        let stop6 = stop6.clone();
+        std::thread::spawn(move || server6.serve_listener(listener6, stop6))
+    };
+    let mut client6 = Client::connect(port6)?;
+    let q1 = client6.generate(Some(60), turn4("<q> the pass key <a>").session("q-1"))?;
+    assert!(q1.error.is_none(), "quantized turn failed: {q1:?}");
+    let qstats = client6.stats()?;
+    let qpool = &qstats.models[0].pool;
+    assert!(qpool.quant_blocks > 0, "compression must freeze encoded blocks: {qpool:?}");
+    let enc_bpb = lagkv::quant::CodecKind::Int8Sym.encoded_block_bytes(
+        lagkv::kvpool::BlockPool::DEFAULT_ROWS_PER_BLOCK,
+        dims.d_head,
+    );
+    assert_eq!(
+        qpool.quant_bytes,
+        qpool.quant_blocks * enc_bpb,
+        "encoded residency must be exact over the wire: {qpool:?}"
+    );
+    assert_eq!(qpool.resident_blocks, 0, "no plain block under --quant int8: {qpool:?}");
+    let q2 = client6.generate(Some(61), turn4("<q> again <a>").session("q-1"))?;
+    assert!(q2.error.is_none(), "quantized resume failed: {q2:?}");
+    assert!(
+        q2.reused_tokens > 0,
+        "the resumed session must reuse its encoded cache: {q2:?}"
+    );
+    println!(
+        "quantized ok: {} encoded block(s) = {} bytes exact, resume reused {} tokens",
+        qpool.quant_blocks, qpool.quant_bytes, q2.reused_tokens,
+    );
+    drop(client6);
+    stop6.store(true, Ordering::Relaxed);
+    serve6.join().expect("quantized server thread")?;
+
     std::fs::remove_dir_all(&store_root).ok();
     std::fs::remove_dir_all(&trace_root).ok();
     println!("SMOKE OK");

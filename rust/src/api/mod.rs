@@ -117,6 +117,15 @@ fn u64_field(v: &Json, name: &str) -> Result<u64> {
     Ok(v.get(name)?.as_i64()? as u64)
 }
 
+/// A numeric field that newer revisions added: absent parses as zero so
+/// either side of the wire may lag the other by one protocol rev.
+fn opt_usize(v: &Json, name: &str) -> Result<usize> {
+    match v.opt(name) {
+        Some(x) => x.as_usize(),
+        None => Ok(0),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Requests
 // ---------------------------------------------------------------------------
@@ -650,6 +659,9 @@ fn pool_stats_to_json(p: &PoolStats) -> Json {
         ("free_blocks", n(p.free_blocks as f64)),
         ("spilled_bytes", n(p.spilled_bytes as f64)),
         ("spilled_blocks", n(p.spilled_blocks as f64)),
+        ("quant_bytes", n(p.quant_bytes as f64)),
+        ("quant_blocks", n(p.quant_blocks as f64)),
+        ("dq_bytes", n(p.dq_bytes as f64)),
         ("faults", n(p.faults as f64)),
         ("fault_bytes", n(p.fault_bytes as f64)),
         // Derived, for dashboards; ignored on parse.
@@ -668,6 +680,11 @@ fn pool_stats_from_json(v: &Json) -> Result<PoolStats> {
         free_blocks: v.get("free_blocks")?.as_usize()?,
         spilled_bytes: v.get("spilled_bytes")?.as_usize()?,
         spilled_blocks: v.get("spilled_blocks")?.as_usize()?,
+        // Absent on servers that predate quantization: default to zero so
+        // a newer ops client can still read their stats.
+        quant_bytes: opt_usize(v, "quant_bytes")?,
+        quant_blocks: opt_usize(v, "quant_blocks")?,
+        dq_bytes: opt_usize(v, "dq_bytes")?,
         faults: u64_field(v, "faults")?,
         fault_bytes: v.get("fault_bytes")?.as_usize()?,
         budget: match v.get("budget")? {
@@ -1415,6 +1432,9 @@ mod tests {
                     free_blocks: 1,
                     spilled_bytes: 2048,
                     spilled_blocks: 2,
+                    quant_bytes: 416,
+                    quant_blocks: 1,
+                    dq_bytes: 1152,
                     faults: 4,
                     fault_bytes: 3072,
                     budget: Some(8192),
@@ -1458,6 +1478,9 @@ mod tests {
                     free_blocks: 0,
                     spilled_bytes: 0,
                     spilled_blocks: 0,
+                    quant_bytes: 0,
+                    quant_blocks: 0,
+                    dq_bytes: 0,
                     faults: 0,
                     fault_bytes: 0,
                     budget: None,

@@ -95,6 +95,9 @@ impl Scorer for XlaScorer {
             PolicyKind::Streaming | PolicyKind::None => {
                 Ok((0..inp.l).map(|i| i as f32).collect())
             }
+            PolicyKind::StreamingLlm => {
+                Ok(inp.positions.iter().map(|&p| p as f32).collect())
+            }
             PolicyKind::Random => RandomScorer { seed: self.seed }.score(inp),
         }
     }

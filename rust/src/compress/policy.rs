@@ -127,6 +127,28 @@ impl Scorer for StreamingScorer {
     }
 }
 
+/// StreamingLLM proper (sink + recency window): the score of a token is
+/// its absolute position, under GLOBAL scope — the oldest evictable
+/// tokens go first, anywhere in the cache, so what survives is exactly
+/// the attention sink plus the newest window.  Needs no attention
+/// statistics, which makes it the cheap FlashAttention-compatible
+/// baseline LagKV must beat (pinned in sim-regression).
+pub struct StreamingLlmScorer;
+
+impl Scorer for StreamingLlmScorer {
+    fn name(&self) -> &'static str {
+        "streamingllm"
+    }
+
+    fn score(&mut self, inp: &PartitionInput<'_>) -> Result<Vec<f32>> {
+        Ok(inp.positions.iter().map(|&p| p as f32).collect())
+    }
+
+    fn global_scope(&self) -> bool {
+        true
+    }
+}
+
 /// Uniform-random retention (sanity floor).  Seeded per (layer, head,
 /// partition-start position) so runs are reproducible and heads diverge.
 pub struct RandomScorer {
@@ -157,6 +179,7 @@ pub fn make_policy(kind: PolicyKind, seed: u64) -> Box<dyn Scorer> {
         PolicyKind::L2Norm => Box::new(L2NormScorer),
         PolicyKind::H2O => Box::new(H2oScorer),
         PolicyKind::Streaming | PolicyKind::None => Box::new(StreamingScorer),
+        PolicyKind::StreamingLlm => Box::new(StreamingLlmScorer),
         PolicyKind::Random => Box::new(RandomScorer { seed }),
     }
 }
@@ -225,6 +248,22 @@ mod tests {
         let mut p = make_policy(PolicyKind::Streaming, 0);
         let s = p.score(&dummy_input(&k, &k, &attn, &pos, l, d)).unwrap();
         assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn streamingllm_is_global_recency() {
+        let l = 5;
+        let d = 1;
+        let k = vec![0.0; l];
+        let attn = vec![0.0; l];
+        // non-contiguous positions (mid-cache, post-eviction): the score
+        // must track the token's age, not its slot index
+        let pos = vec![3, 7, 8, 20, 21];
+        let mut p = make_policy(PolicyKind::StreamingLlm, 0);
+        assert!(p.global_scope(), "evicts across the whole cache");
+        assert!(!p.needs_attention());
+        let s = p.score(&dummy_input(&k, &k, &attn, &pos, l, d)).unwrap();
+        assert_eq!(s, vec![3.0, 7.0, 8.0, 20.0, 21.0]);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::quant::QuantSpec;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -67,6 +68,10 @@ pub enum PolicyKind {
     H2O,
     /// StreamingLLM-style recency: keep the newest rL of each partition.
     Streaming,
+    /// StreamingLLM proper (sink + global recency): victims are the oldest
+    /// evictable tokens anywhere in the cache, not per partition — what
+    /// survives is exactly the attention sink plus the newest window.
+    StreamingLlm,
     /// Uniform-random retention (sanity floor).
     Random,
     /// No compression (the paper's "Baseline" rows).
@@ -81,6 +86,7 @@ impl PolicyKind {
             "l2norm" | "l2" => PolicyKind::L2Norm,
             "h2o" => PolicyKind::H2O,
             "streaming" | "window" => PolicyKind::Streaming,
+            "streamingllm" | "sink-recency" => PolicyKind::StreamingLlm,
             "random" => PolicyKind::Random,
             "none" | "baseline" | "full" => PolicyKind::None,
             other => bail!("unknown policy {other:?}"),
@@ -94,6 +100,7 @@ impl PolicyKind {
             PolicyKind::L2Norm => "l2norm",
             PolicyKind::H2O => "h2o",
             PolicyKind::Streaming => "streaming",
+            PolicyKind::StreamingLlm => "streamingllm",
             PolicyKind::Random => "random",
             PolicyKind::None => "none",
         }
@@ -106,6 +113,7 @@ impl PolicyKind {
             PolicyKind::L2Norm,
             PolicyKind::H2O,
             PolicyKind::Streaming,
+            PolicyKind::StreamingLlm,
             PolicyKind::Random,
             PolicyKind::None,
         ]
@@ -232,6 +240,15 @@ pub struct ServingConfig {
     /// and WAL-journaled persistence of detached sessions and prefix
     /// snapshots across restarts.
     pub store_dir: Option<PathBuf>,
+    /// Byte cap on the tiered store's page file (`None` = uncapped).
+    /// CLI: `--store-max-mb N` (mebibytes; 0 = uncapped, matching
+    /// `--pool-mb`).  Over the cap the coldest spilled inventory (prefix
+    /// snapshots first, then detached sessions) is evicted LRU.
+    pub store_max_bytes: Option<usize>,
+    /// Block codec map for frozen KV blocks.  CLI: `--quant int8` (all
+    /// layers) or `--quant int8:0,2-5` (those layers only); default fp32
+    /// (no quantization).
+    pub quant: QuantSpec,
     /// Directory for per-model NDJSON request traces (`None` = in-memory
     /// trace snapshots only).  CLI: `--trace-dir DIR`.
     pub trace_dir: Option<PathBuf>,
@@ -252,6 +269,8 @@ impl Default for ServingConfig {
             session_max_bytes: 0,
             prefix_cache: false,
             store_dir: None,
+            store_max_bytes: None,
+            quant: QuantSpec::fp32(),
             trace_dir: None,
             port: 7199,
         }
@@ -272,6 +291,13 @@ impl ServingConfig {
         c.session_max_bytes = args.usize_or("session-mb", 0)? * 1024 * 1024;
         c.prefix_cache = args.has("prefix-cache");
         c.store_dir = args.get("store-dir").map(PathBuf::from);
+        match args.usize_or("store-max-mb", 0)? {
+            0 => {} // absent or explicit 0: uncapped, like --pool-mb
+            mb => c.store_max_bytes = Some(mb * 1024 * 1024),
+        }
+        if let Some(q) = args.get("quant") {
+            c.quant = QuantSpec::parse(q)?;
+        }
         c.trace_dir = args.get("trace-dir").map(PathBuf::from);
         c.port = args.usize_or("port", c.port as usize)? as u16;
         Ok(c)
@@ -401,6 +427,37 @@ mod tests {
         assert!(!ServingConfig::from_args(&empty).unwrap().prefix_cache, "off by default");
         let on = Args::parse(["--prefix-cache"].iter().map(|s| s.to_string())).unwrap();
         assert!(ServingConfig::from_args(&on).unwrap().prefix_cache);
+    }
+
+    #[test]
+    fn quant_flag() {
+        let empty = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert!(ServingConfig::from_args(&empty).unwrap().quant.is_noop(), "fp32 by default");
+        let args =
+            Args::parse(["--quant", "int8:0-3"].iter().map(|s| s.to_string())).unwrap();
+        let c = ServingConfig::from_args(&args).unwrap();
+        assert_eq!(c.quant, QuantSpec::parse("int8:0-3").unwrap());
+        let bad = Args::parse(["--quant", "fp16"].iter().map(|s| s.to_string())).unwrap();
+        assert!(ServingConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn store_cap_flag() {
+        let empty = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(
+            ServingConfig::from_args(&empty).unwrap().store_max_bytes,
+            None,
+            "uncapped by default"
+        );
+        let args =
+            Args::parse(["--store-max-mb", "4"].iter().map(|s| s.to_string())).unwrap();
+        assert_eq!(
+            ServingConfig::from_args(&args).unwrap().store_max_bytes,
+            Some(4 * 1024 * 1024)
+        );
+        let zero =
+            Args::parse(["--store-max-mb", "0"].iter().map(|s| s.to_string())).unwrap();
+        assert_eq!(ServingConfig::from_args(&zero).unwrap().store_max_bytes, None);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::backend::EngineSpec;
 use crate::kvcache::KvCache;
 use crate::kvpool::{Block, BlockPool, PrefixCache, PrefixConfig};
 use crate::kvstore::{CheckpointSummary, KvStore};
+use crate::quant::QuantSpec;
 use crate::telemetry::{Metric, SpanBuilder, Telemetry, TelemetryConfig};
 
 use super::{
@@ -71,6 +72,15 @@ pub struct RouterConfig {
     /// prefix snapshots are WAL-journaled, and boot replays the journal so
     /// both survive a restart without re-prefilling.
     pub store_dir: Option<PathBuf>,
+    /// Byte cap on each variant's disk store (`--store-max-mb`; `None` =
+    /// uncapped).  Over the cap the store evicts its coldest spilled
+    /// inventory LRU — prefix snapshots first, then detached sessions —
+    /// appending tombstones so replay never resurrects evicted payloads.
+    pub store_max_bytes: Option<usize>,
+    /// Block codec map installed on every engine (`--quant int8[:layers]`;
+    /// default fp32 = no quantization).  Frozen blocks on selected layers
+    /// encode through it; reads decode transparently.
+    pub quant: QuantSpec,
     /// Write per-model NDJSON request traces under this directory
     /// (`--trace-dir`; `None` = in-memory trace snapshots only).  Spans
     /// publish through a bounded non-blocking sink either way; the
@@ -86,6 +96,8 @@ impl Default for RouterConfig {
             pool_max_bytes: None,
             prefix_cache: None,
             store_dir: None,
+            store_max_bytes: None,
+            quant: QuantSpec::fp32(),
             trace_dir: None,
         }
     }
@@ -166,6 +178,7 @@ impl Router {
         let mut telemetry = HashMap::new();
         let mut threads = Vec::new();
         let tel_cfg = TelemetryConfig { trace_dir: cfg.trace_dir.clone() };
+        let quant = Arc::new(cfg.quant.clone());
         for variant in variants {
             let (tx, rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
             senders.insert(variant.clone(), tx);
@@ -201,7 +214,7 @@ impl Router {
             // then replay the journal so detached sessions and prefix
             // snapshots from the previous run serve without re-prefilling.
             if let Some(root) = &cfg.store_dir {
-                match KvStore::open(&root.join(variant)) {
+                match KvStore::open_with_cap(&root.join(variant), cfg.store_max_bytes) {
                     Ok(kv) => {
                         let kv = Arc::new(kv);
                         pool.bind_store(Arc::clone(&kv));
@@ -221,6 +234,7 @@ impl Router {
             infos.insert(variant.clone(), Arc::clone(&info_slot));
             let spec = spec.clone();
             let name = variant.clone();
+            let quant = Arc::clone(&quant);
             threads.push(std::thread::spawn(move || match spec.build(&name) {
                 Ok(mut engine) => {
                     engine.set_pool(pool);
@@ -228,6 +242,7 @@ impl Router {
                         engine.set_prefix_cache(pc);
                     }
                     engine.set_telemetry(Arc::clone(&tel));
+                    engine.set_quant(quant);
                     // Publish the engine facts the `info` op self-configures
                     // clients from, before the first request is served.
                     *crate::util::locked(&info_slot) = Some(Some(ModelInfo {

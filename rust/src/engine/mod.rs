@@ -29,6 +29,7 @@ use crate::compress::{maybe_compress, policy::make_policy, Scorer};
 use crate::config::{CompressionConfig, ModelDims};
 use crate::kvcache::KvCache;
 use crate::kvpool::{BlockPool, PrefixCache, PrefixConfig};
+use crate::quant::QuantSpec;
 use crate::telemetry::{Clock, Metric, MonotonicClock, Telemetry};
 use crate::tokenizer::Tokenizer;
 use crate::util::argmax as argmax_slice;
@@ -186,6 +187,9 @@ pub struct Engine {
     pool: Arc<BlockPool>,
     /// Radix prefix cache over the pool's frozen blocks (None = disabled).
     prefix: Option<Arc<PrefixCache>>,
+    /// Block codec map (`--quant`) installed on every cache this engine
+    /// creates: freezes encode through it, reads decode transparently.
+    quant: Arc<QuantSpec>,
     /// Per-model telemetry hub (None outside a router): compression-pass
     /// latencies feed its histogram registry.
     telemetry: Option<Arc<Telemetry>>,
@@ -216,9 +220,33 @@ impl Engine {
             tmax,
             pool: BlockPool::unbounded(BlockPool::DEFAULT_ROWS_PER_BLOCK),
             prefix: None,
+            quant: Arc::new(QuantSpec::fp32()),
             telemetry: None,
             clock: Arc::new(MonotonicClock::new()),
         })
+    }
+
+    /// Install the block codec map (`--quant`).  Applies to caches created
+    /// from here on; earlier caches keep the spec they were created with.
+    pub fn set_quant(&mut self, quant: Arc<QuantSpec>) {
+        self.quant = quant;
+    }
+
+    /// The engine's block codec map.
+    pub fn quant(&self) -> &Arc<QuantSpec> {
+        &self.quant
+    }
+
+    /// A fresh cache on the engine's pool with the engine's codec map.
+    fn new_cache(&self) -> KvCache {
+        let mut cache = KvCache::new_in(
+            Arc::clone(&self.pool),
+            self.dims.n_layers,
+            self.dims.n_kv_heads,
+            self.dims.d_head,
+        );
+        cache.set_quant(Arc::clone(&self.quant));
+        cache
     }
 
     /// Swap in a shared (possibly byte-budgeted) KV block pool.  Called by
@@ -351,12 +379,7 @@ impl Engine {
         let mut tokens = vec![0i32; bucket];
         tokens[..ids.len()].copy_from_slice(ids);
         let out = self.backend.prefill(&tokens, ids.len())?;
-        let mut cache = KvCache::new_in(
-            Arc::clone(&self.pool),
-            self.dims.n_layers,
-            self.dims.n_kv_heads,
-            self.dims.d_head,
-        );
+        let mut cache = self.new_cache();
         cache.ingest_prefill(&out.k, &out.v, &out.attn_sums, bucket, ids.len())?;
         Ok((out.logits, cache))
     }
@@ -454,12 +477,7 @@ impl Engine {
         let mut tokens = vec![0i32; bucket];
         tokens[..ids.len()].copy_from_slice(ids);
         let out = self.backend.prefill(&tokens, ids.len())?;
-        let cache = KvCache::new_in(
-            Arc::clone(&self.pool),
-            self.dims.n_layers,
-            self.dims.n_kv_heads,
-            self.dims.d_head,
-        );
+        let cache = self.new_cache();
         let (stride, insert_snapshots) = if cfg.policy.needs_attention() {
             (ids.len(), false)
         } else if let Some(prefix) = prefix {

@@ -55,6 +55,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::kvpool::{row_bytes, Block, BlockPool, LooseGauge};
 use crate::kvstore::KvStore;
+use crate::quant::{CodecKind, QuantSpec};
 use crate::util::json::{self, Json};
 
 /// Storage for one (layer, head): frozen pool blocks plus the loose tail.
@@ -99,7 +100,7 @@ impl HeadStore {
     /// Best-effort: freezing is an optimization (paging + CoW sharing),
     /// never a correctness requirement, so budget exhaustion just leaves
     /// the remaining rows loose for admission control to deal with.
-    fn freeze_prefix(&mut self, d: usize, pool: &Arc<BlockPool>, upto: usize) {
+    fn freeze_prefix(&mut self, d: usize, pool: &Arc<BlockPool>, upto: usize, kind: CodecKind) {
         let rows = pool.rows_per_block();
         // Loose bytes each freeze drains (K, V, positions; the attention
         // mass migrates to `frozen_attn` and stays loose).  The pool's
@@ -107,14 +108,17 @@ impl HeadStore {
         // successive block's budget check must also credit everything this
         // call already drained — otherwise drained-but-still-gauged bytes
         // double-count and freezing stalls exactly under budget pressure.
+        // The credit is the drained *fp32* loose bytes regardless of codec:
+        // it reverses the loose gauge, not the (smaller) encoded charge.
         let replaced =
             rows * (2 * d * std::mem::size_of::<f32>() + std::mem::size_of::<i32>());
         let mut drained = 0usize;
         while self.frozen_rows + rows <= upto {
             let w = rows * d;
-            match BlockPool::alloc_block(
+            match BlockPool::alloc_quant_block(
                 pool,
                 d,
+                kind,
                 &self.k[..w],
                 &self.v[..w],
                 &self.pos[..rows],
@@ -269,6 +273,12 @@ pub struct KvCache {
     /// Registers the loose-region bytes with the owning pool (cloning a
     /// cache registers the clone's own copy; dropping deregisters).
     gauge: LooseGauge,
+    /// Per-layer block codec map: every freeze on this cache encodes
+    /// through `quant.codec_for(layer)`.  Defaults to fp32 (identity);
+    /// the engine installs the serving configuration's spec on every
+    /// cache it creates.  Shared, immutable — clones keep encoding the
+    /// same way.
+    quant: Arc<QuantSpec>,
 }
 
 impl KvCache {
@@ -297,12 +307,25 @@ impl KvCache {
                 .collect(),
             appended: 0,
             gauge: LooseGauge::new(pool),
+            quant: Arc::new(QuantSpec::fp32()),
         }
     }
 
     /// The pool this cache allocates from.
     pub fn pool(&self) -> &Arc<BlockPool> {
         self.gauge.pool()
+    }
+
+    /// Install the block codec map.  Applies to *future* freezes only —
+    /// already-frozen blocks keep the codec they were encoded with (each
+    /// block carries its own tag), so flipping the spec mid-life is safe.
+    pub fn set_quant(&mut self, quant: Arc<QuantSpec>) {
+        self.quant = quant;
+    }
+
+    /// The codec map freezes on this cache encode through.
+    pub fn quant(&self) -> &Arc<QuantSpec> {
+        &self.quant
     }
 
     /// Current row count of `layer` (uniform across its heads).
@@ -533,9 +556,10 @@ impl KvCache {
         let pool = Arc::clone(self.gauge.pool());
         let rpb = pool.rows_per_block();
         let freeze_upto = (start / rpb) * rpb;
+        let kind = self.quant.codec_for(layer);
         for hi in 0..self.n_heads {
             let head = &mut self.layers[layer].heads[hi];
-            head.freeze_prefix(d, &pool, freeze_upto);
+            head.freeze_prefix(d, &pool, freeze_upto, kind);
             head.compact_window(d, start, l, &keeps[hi]);
             // Re-sync after every head so the next head's freeze budget
             // checks never double-count bytes this head just drained or
@@ -565,8 +589,9 @@ impl KvCache {
         let pool = Arc::clone(self.gauge.pool());
         let rpb = pool.rows_per_block();
         let upto = (upto_rows.min(self.len(layer)) / rpb) * rpb;
+        let kind = self.quant.codec_for(layer);
         for hi in 0..self.n_heads {
-            self.layers[layer].heads[hi].freeze_prefix(d, &pool, upto);
+            self.layers[layer].heads[hi].freeze_prefix(d, &pool, upto, kind);
             // Re-sync per head (as compaction does) so the next head's
             // freeze budget checks never double-count drained bytes.
             self.sync_gauge();
@@ -797,7 +822,12 @@ impl KvCache {
                             if b_d != d {
                                 bail!("restore: block {id} width {b_d} != cache width {d}");
                             }
-                            let b = BlockPool::adopt_spilled(pool, id, b_rows, b_d);
+                            let tag = store
+                                .block_codec(id)
+                                .ok_or_else(|| anyhow!("restore: unknown block {id}"))?;
+                            let codec = CodecKind::from_tag(tag)
+                                .ok_or_else(|| anyhow!("restore: block {id} has unknown codec tag {tag}"))?;
+                            let b = BlockPool::adopt_spilled(pool, id, b_rows, b_d, codec);
                             handles.insert(id, Arc::clone(&b));
                             b
                         }
@@ -938,6 +968,43 @@ mod tests {
         assert_eq!(&after_h0[4 * d..5 * d], &before_h0[6 * d..7 * d]);
         assert_eq!(c.positions(0, 0), vec![0, 1, 3, 5, 6, 7]);
         assert_eq!(c.positions(0, 1), vec![0, 1, 2, 4, 6, 7]);
+    }
+
+    #[test]
+    fn quantized_freeze_shrinks_bytes_and_reads_decode_transparently() {
+        let (nh, d) = (2, 4);
+        let mut fp = filled(1, nh, d, 40);
+        let mut q = fp.clone();
+        q.set_quant(Arc::new(QuantSpec::all(CodecKind::Int8Sym)));
+        fp.freeze_layer_prefix(0, 32);
+        q.freeze_layer_prefix(0, 32);
+        assert_eq!(fp.frozen_rows(0), q.frozen_rows(0), "same rows froze either way");
+        assert!(q.frozen_blocks() > 0);
+        assert!(
+            q.exact_bytes() < fp.exact_bytes(),
+            "int8 blocks are exact-accounted smaller: {} vs {}",
+            q.exact_bytes(),
+            fp.exact_bytes()
+        );
+        let s = q.pool().stats();
+        assert_eq!(s.quant_blocks, q.frozen_blocks(), "every frozen block encoded");
+        assert_eq!(
+            s.quant_bytes,
+            s.quant_blocks * CodecKind::Int8Sym.encoded_block_bytes(q.pool().rows_per_block(), d)
+        );
+        // reads decode transparently: positions exact, rows error-bounded
+        assert_eq!(q.positions(0, 0), fp.positions(0, 0));
+        let (kf, kq) = (fp.head_k(0, 0), q.head_k(0, 0));
+        assert_eq!(kf.len(), kq.len());
+        let max_abs = kf.iter().fold(0f32, |m, x| m.max(x.abs()));
+        for (a, b) in kf.iter().zip(&kq) {
+            assert!((a - b).abs() <= max_abs / 127.0 + 1e-6, "dequantized row within bound");
+        }
+        // thaw dequantizes: lossy but the cache stays structurally sound
+        q.thaw_layer(0);
+        assert_eq!(q.frozen_rows(0), 0);
+        assert_eq!(q.len(0), 40);
+        assert_eq!(q.positions(0, 1), fp.positions(0, 1));
     }
 
     #[test]

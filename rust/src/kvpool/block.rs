@@ -16,6 +16,25 @@
 //! block that was persisted once is never re-serialized (fault-in leaves
 //! `store_id` set; a later demote just drops the buffers again).
 //!
+//! ## Quantized blocks
+//!
+//! A block frozen through a lossy codec ([`crate::quant`]) holds its
+//! payload *encoded*: `quant` carries the packed int8 data + scale
+//! sidecar plus the uncompressed `pos`/`attn` side arrays.  `bufs` then
+//! doubles as the **decoded-row cache** — filled lazily on first
+//! [`Block::read`] (so `window`/`layer_padded`/`prefill_onto` stay
+//! decode-transparent) and dropped under decode-cache pressure or on
+//! demote.  The residency machine gains one axis:
+//!
+//! ```text
+//!   encoded-resident:  quant: Some            (bufs: None or Some)
+//!   spilled:           quant: None, bufs: None, store_id: id
+//! ```
+//!
+//! Spill serializes the *encoded* payload + sidecar — never a
+//! decode-then-respill — so disk pages shrink by the codec's factor and
+//! a faulted block is bit-identical to its encoded form.
+//!
 //! [`kvstore::KvStore`]: crate::kvstore::KvStore
 
 use std::fmt;
@@ -23,6 +42,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock, RwLockReadGuard};
 
 use crate::kvstore::KvStore;
+use crate::quant::{CodecKind, EncodedKv};
 
 use super::BlockPool;
 
@@ -63,9 +83,23 @@ pub fn block_bytes(rows: usize, d: usize) -> usize {
         + rows * (std::mem::size_of::<i32>() + std::mem::size_of::<f32>())
 }
 
+/// The encoded payload of a quantized block: packed codec output plus
+/// the uncompressed per-row side arrays (positions and freeze-time
+/// attention mass are never quantized — they are exact metadata).
+pub(super) struct QuantPayload {
+    pub(super) enc: EncodedKv,
+    pub(super) pos: Vec<i32>,
+    pub(super) attn: Vec<f32>,
+}
+
 struct BlockState {
     /// `Some` while resident; `None` while the payload lives on disk.
+    /// For a quantized block this is the *decoded-row cache*: droppable
+    /// at any time while `quant` is resident, rebuilt on the next read.
     bufs: Option<BlockBufs>,
+    /// `Some` while a quantized block's encoded payload is resident;
+    /// always `None` for plain (fp32) blocks.
+    quant: Option<QuantPayload>,
     /// Store id once persisted (0 = never persisted).  Sticky: survives
     /// fault-in so a re-demote writes nothing.
     store_id: u64,
@@ -84,6 +118,10 @@ pub struct Block {
     state: RwLock<BlockState>,
     rows: usize,
     d: usize,
+    /// The codec this block was frozen through.  Immutable, like the
+    /// payload: [`CodecKind::Fp32`] means a plain block (`quant` stays
+    /// `None` forever).
+    codec: CodecKind,
     /// Pool-clock value of the last `read()`: the spill LRU signal.
     tick: AtomicU64,
     pool: Arc<BlockPool>,
@@ -132,9 +170,38 @@ impl Block {
         debug_assert_eq!(bufs.pos.len(), rows);
         debug_assert_eq!(bufs.attn.len(), rows);
         Block {
-            state: RwLock::new(BlockState { bufs: Some(bufs), store_id: 0 }),
+            state: RwLock::new(BlockState { bufs: Some(bufs), quant: None, store_id: 0 }),
             rows,
             d,
+            codec: CodecKind::Fp32,
+            tick: AtomicU64::new(0),
+            pool,
+        }
+    }
+
+    /// A quantized block, born encoded-resident with a cold decode cache.
+    pub(super) fn new_quant(
+        kind: CodecKind,
+        enc: EncodedKv,
+        pos: Vec<i32>,
+        attn: Vec<f32>,
+        rows: usize,
+        d: usize,
+        pool: Arc<BlockPool>,
+    ) -> Block {
+        debug_assert!(kind != CodecKind::Fp32, "fp32 freezes take the plain-block path");
+        debug_assert_eq!(enc.byte_len(), kind.codec().encoded_kv_bytes(rows, d));
+        debug_assert_eq!(pos.len(), rows);
+        debug_assert_eq!(attn.len(), rows);
+        Block {
+            state: RwLock::new(BlockState {
+                bufs: None,
+                quant: Some(QuantPayload { enc, pos, attn }),
+                store_id: 0,
+            }),
+            rows,
+            d,
+            codec: kind,
             tick: AtomicU64::new(0),
             pool,
         }
@@ -142,12 +209,19 @@ impl Block {
 
     /// A handle over an already-persisted payload, starting spilled
     /// (restart restore path: the payload stays on disk until read).
-    pub(super) fn restored(rows: usize, d: usize, store_id: u64, pool: Arc<BlockPool>) -> Block {
+    pub(super) fn restored(
+        rows: usize,
+        d: usize,
+        codec: CodecKind,
+        store_id: u64,
+        pool: Arc<BlockPool>,
+    ) -> Block {
         debug_assert!(store_id != 0);
         Block {
-            state: RwLock::new(BlockState { bufs: None, store_id }),
+            state: RwLock::new(BlockState { bufs: None, quant: None, store_id }),
             rows,
             d,
+            codec,
             tick: AtomicU64::new(0),
             pool,
         }
@@ -161,23 +235,56 @@ impl Block {
         self.d
     }
 
+    /// The codec this block's payload is stored under.
+    pub fn codec(&self) -> CodecKind {
+        self.codec
+    }
+
+    /// Resident bytes of this block's payload in its stored form: plain
+    /// [`block_bytes`] for fp32, the exact encoded size for a quantized
+    /// block.  The decode cache is accounted separately (pool `dq_bytes`).
     pub fn payload_bytes(&self) -> usize {
-        block_bytes(self.rows, self.d)
+        self.codec.encoded_block_bytes(self.rows, self.d)
     }
 
     pub fn is_resident(&self) -> bool {
+        let st = self.state.read().unwrap();
+        st.bufs.is_some() || st.quant.is_some()
+    }
+
+    /// Does this quantized block currently hold a decoded-row cache?
+    /// (Always false for plain blocks: their `bufs` *is* the payload.)
+    pub(super) fn has_decoded(&self) -> bool {
+        if self.codec == CodecKind::Fp32 {
+            return false;
+        }
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
         self.state.read().unwrap().bufs.is_some()
+    }
+
+    /// A clone of the encoded payload, when resident (tests / analysis:
+    /// the spill→fault bit-identity property compares these).
+    pub fn encoded(&self) -> Option<EncodedKv> {
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+        self.state.read().unwrap().quant.as_ref().map(|q| q.enc.clone())
     }
 
     pub(super) fn last_tick(&self) -> u64 {
         self.tick.load(Ordering::Relaxed)
     }
 
-    /// Access the payload, faulting it in from the store when spilled.
-    /// Infallible by design — decode never fails mid-request on tiering —
-    /// so an unreadable store record (torn file, dead disk) panics.
+    /// Access the payload, faulting it in from the store when spilled and
+    /// decoding it when quantized.  Infallible by design — decode never
+    /// fails mid-request on tiering — so an unreadable store record (torn
+    /// file, dead disk) panics.
     pub fn read(&self) -> BlockData<'_> {
         self.tick.store(self.pool.next_tick(), Ordering::Relaxed);
+        if self.codec != CodecKind::Fp32 {
+            // Keep the decode cache inside its budget before (possibly)
+            // growing it; this block was just stamped hottest, so it is
+            // the last trim candidate.
+            self.pool.maybe_trim_decoded();
+        }
         loop {
             {
                 let guard = self.state.read().unwrap();
@@ -189,23 +296,57 @@ impl Block {
         }
     }
 
+    /// Make `bufs` present: fault the payload in from the store when
+    /// spilled, then (for a quantized block) decode it into the cache.
     fn fault_in(&self) {
-        let mut st = self.state.write().unwrap();
+        let mut guard = self.state.write().unwrap();
+        let st = &mut *guard;
         if st.bufs.is_some() {
             return; // raced with another reader's fault-in
         }
-        let bufs = self.pool.fault_block(st.store_id, self.rows, self.d);
-        st.bufs = Some(bufs);
+        if self.codec == CodecKind::Fp32 {
+            st.bufs = Some(self.pool.fault_block(st.store_id, self.rows, self.d));
+            return;
+        }
+        if st.quant.is_none() {
+            let (enc, pos, attn) =
+                self.pool.fault_quant_block(st.store_id, self.codec, self.rows, self.d);
+            st.quant = Some(QuantPayload { enc, pos, attn });
+        }
+        if let Some(q) = st.quant.as_ref() {
+            st.bufs =
+                Some(self.pool.decode_block(self.codec, self.rows, self.d, &q.enc, &q.pos, &q.attn));
+        }
     }
 
     /// Persist the payload (if not already on disk) and take one claim
-    /// for a descriptor that will reference it.
+    /// for a descriptor that will reference it.  Quantized blocks persist
+    /// their *encoded* form.
     pub fn persist_into(&self, store: &KvStore) -> anyhow::Result<u64> {
         let mut st = self.state.write().unwrap();
         if st.store_id == 0 {
-            let bufs = st.bufs.as_ref().expect("an unpersisted block is resident");
-            st.store_id =
-                store.persist_block(self.rows, self.d, &bufs.k, &bufs.v, &bufs.pos, &bufs.attn)?;
+            if self.codec == CodecKind::Fp32 {
+                let bufs = st.bufs.as_ref().expect("an unpersisted block is resident");
+                st.store_id = store.persist_block(
+                    self.rows,
+                    self.d,
+                    &bufs.k,
+                    &bufs.v,
+                    &bufs.pos,
+                    &bufs.attn,
+                )?;
+            } else {
+                // lint: allow(panic): the state machine keeps an unpersisted quant block encoded-resident
+                let q = st.quant.as_ref().expect("an unpersisted quant block is encoded-resident");
+                st.store_id = store.persist_quant_block(
+                    self.rows,
+                    self.d,
+                    self.codec,
+                    &q.enc,
+                    &q.pos,
+                    &q.attn,
+                )?;
+            }
         }
         store.retain_block(st.store_id);
         Ok(st.store_id)
@@ -214,25 +355,64 @@ impl Block {
     /// Demote to disk: persist (first time only), drop the buffers, move
     /// the ledger bytes resident → spilled.  Skips — returning `None` —
     /// when the block is already spilled, under an active read guard, or
-    /// the store write fails.
+    /// the store write fails.  Returns the resident bytes freed (for a
+    /// quantized block: the encoded payload plus any decode cache).
     pub(super) fn try_demote(&self, store: &KvStore) -> Option<usize> {
-        let mut st = self.state.try_write().ok()?;
-        st.bufs.as_ref()?;
+        let mut guard = self.state.try_write().ok()?;
+        let st = &mut *guard;
+        if self.codec == CodecKind::Fp32 {
+            st.bufs.as_ref()?;
+            if st.store_id == 0 {
+                let bufs = st.bufs.as_ref().expect("checked above");
+                match store.persist_block(self.rows, self.d, &bufs.k, &bufs.v, &bufs.pos, &bufs.attn)
+                {
+                    Ok(id) => st.store_id = id,
+                    Err(e) => {
+                        eprintln!("kvpool: spill write failed, keeping block resident: {e:#}");
+                        return None;
+                    }
+                }
+            }
+            let bufs = st.bufs.take().expect("checked above");
+            // ledger moves under the state lock so a racing fault-in observes
+            // state + ledger atomically
+            self.pool.on_demoted(self.rows, self.d, bufs);
+            return Some(self.payload_bytes());
+        }
+        let q = st.quant.take()?;
         if st.store_id == 0 {
-            let bufs = st.bufs.as_ref().expect("checked above");
-            match store.persist_block(self.rows, self.d, &bufs.k, &bufs.v, &bufs.pos, &bufs.attn) {
+            match store.persist_quant_block(self.rows, self.d, self.codec, &q.enc, &q.pos, &q.attn)
+            {
                 Ok(id) => st.store_id = id,
                 Err(e) => {
-                    eprintln!("kvpool: spill write failed, keeping block resident: {e:#}");
+                    eprintln!("kvpool: quant spill write failed, keeping block resident: {e:#}");
+                    st.quant = Some(q);
                     return None;
                 }
             }
         }
-        let bufs = st.bufs.take().expect("checked above");
-        // ledger moves under the state lock so a racing fault-in observes
-        // state + ledger atomically
-        self.pool.on_demoted(self.rows, self.d, bufs);
-        Some(self.payload_bytes())
+        let decoded = st.bufs.take();
+        let freed = self.payload_bytes()
+            + decoded.as_ref().map_or(0, |_| block_bytes(self.rows, self.d));
+        self.pool.on_demoted_quant(self.rows, self.d, self.codec, decoded);
+        Some(freed)
+    }
+
+    /// Drop a quantized block's decoded-row cache (decode-cache budget
+    /// trim).  The encoded payload stays resident, so the next read just
+    /// re-decodes — no disk involved.  Skips blocks under an active read
+    /// guard or currently spilled.  Returns the cache bytes freed.
+    pub(super) fn try_drop_decoded(&self) -> Option<usize> {
+        if self.codec == CodecKind::Fp32 {
+            return None;
+        }
+        let mut st = self.state.try_write().ok()?;
+        if st.quant.is_none() {
+            return None; // spilled: the cache is already gone
+        }
+        let bufs = st.bufs.take()?;
+        self.pool.on_decoded_dropped(self.rows, self.d, bufs);
+        Some(block_bytes(self.rows, self.d))
     }
 }
 
@@ -240,9 +420,17 @@ impl Drop for Block {
     fn drop(&mut self) {
         let st = self.state.get_mut().unwrap();
         let store_id = st.store_id;
-        match st.bufs.take() {
-            Some(bufs) => self.pool.release(self.rows, self.d, bufs),
-            None => self.pool.release_spilled(self.rows, self.d),
+        if self.codec == CodecKind::Fp32 {
+            match st.bufs.take() {
+                Some(bufs) => self.pool.release(self.rows, self.d, bufs),
+                None => self.pool.release_spilled(self.payload_bytes()),
+            }
+        } else {
+            let decoded = st.bufs.take();
+            match st.quant.take() {
+                Some(_) => self.pool.release_quant(self.rows, self.d, self.codec, decoded),
+                None => self.pool.release_spilled(self.payload_bytes()),
+            }
         }
         if store_id != 0 {
             self.pool.release_store_claim(store_id);
@@ -255,6 +443,7 @@ impl fmt::Debug for Block {
         f.debug_struct("Block")
             .field("rows", &self.rows)
             .field("d", &self.d)
+            .field("codec", &self.codec)
             .field("bytes", &self.payload_bytes())
             .field("resident", &self.is_resident())
             .finish()

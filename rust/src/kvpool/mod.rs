@@ -39,6 +39,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
 use crate::kvstore::KvStore;
+use crate::quant::{CodecKind, EncodedKv};
 use crate::telemetry::{Metric, Telemetry};
 
 pub use block::{block_bytes, Block, BlockBufs, BlockData};
@@ -72,11 +73,28 @@ struct PoolInner {
     /// gauges, which move both ways as blocks demote and return.
     faults: u64,
     fault_bytes: usize,
+    /// Exact encoded bytes of resident quantized blocks (payload +
+    /// sidecar + side arrays, in [`CodecKind::encoded_block_bytes`]
+    /// units).  Invariant under freeze/thaw/spill/fault churn:
+    /// `quant_bytes == Σ_blocks encoded_block_bytes` — the property suite
+    /// pins this with randomized churn.
+    quant_bytes: usize,
+    quant_blocks: usize,
+    /// Bytes in decoded-row caches of quantized blocks (fp32 copies kept
+    /// for read paths; droppable at any time, bounded by the pool's
+    /// decode-cache budget).
+    dq_bytes: usize,
 }
 
 impl PoolInner {
+    /// Live data bytes: plain blocks, loose regions, encoded quantized
+    /// blocks, and their decoded-row caches.
+    fn resident(&self) -> usize {
+        self.block_bytes + self.loose_bytes + self.quant_bytes + self.dq_bytes
+    }
+
     fn bump_high_water(&mut self) {
-        let resident = self.block_bytes + self.loose_bytes;
+        let resident = self.resident();
         if resident > self.high_water {
             self.high_water = resident;
         }
@@ -108,6 +126,9 @@ pub struct BlockPool {
     /// Bound telemetry hub, when the router runs one: spill and fault-in
     /// durations land in its histogram registry.
     telemetry: Mutex<Option<Arc<Telemetry>>>,
+    /// Byte budget for the decoded-row caches of quantized blocks
+    /// (`dq_bytes`); reads trim coldest-first above it.
+    dq_budget: AtomicUsize,
     inner: Mutex<PoolInner>,
 }
 
@@ -132,6 +153,12 @@ impl BlockPool {
     /// freezes as exactly four blocks.
     pub const DEFAULT_ROWS_PER_BLOCK: usize = 16;
 
+    /// Default byte budget for decoded-row caches of quantized blocks:
+    /// 32 MiB — enough to keep every hot block's fp32 copy around at the
+    /// scales this stack serves, small enough that quantization's resident
+    /// saving survives heavy read traffic.
+    pub const DEFAULT_DECODE_CACHE_BYTES: usize = 32 << 20;
+
     pub fn new(rows_per_block: usize, max_bytes: Option<usize>) -> Arc<BlockPool> {
         assert!(rows_per_block > 0, "rows_per_block must be positive");
         Arc::new(BlockPool {
@@ -143,6 +170,7 @@ impl BlockPool {
             store: Mutex::new(None),
             registry: Mutex::new(Registry::default()),
             telemetry: Mutex::new(None),
+            dq_budget: AtomicUsize::new(BlockPool::DEFAULT_DECODE_CACHE_BYTES),
             inner: Mutex::new(PoolInner::default()),
         })
     }
@@ -174,14 +202,28 @@ impl BlockPool {
             spilled_blocks: inner.spilled_blocks,
             faults: inner.faults,
             fault_bytes: inner.fault_bytes,
+            quant_bytes: inner.quant_bytes,
+            quant_blocks: inner.quant_blocks,
+            dq_bytes: inner.dq_bytes,
             budget: self.max_bytes,
         }
     }
 
-    /// Live data bytes right now (blocks + registered loose regions).
+    /// Live data bytes right now: plain blocks, registered loose regions,
+    /// encoded quantized blocks, and their decoded-row caches.
     pub fn resident_bytes(&self) -> usize {
         let inner = self.inner.lock().unwrap();
-        inner.block_bytes + inner.loose_bytes
+        inner.resident()
+    }
+
+    /// Set the byte budget for decoded-row caches of quantized blocks.
+    /// Reads trim coldest caches first once `dq_bytes` passes it.
+    pub fn set_decode_cache_budget(&self, bytes: usize) {
+        self.dq_budget.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn decode_cache_budget(&self) -> usize {
+        self.dq_budget.load(Ordering::Relaxed)
     }
 
     /// Allocate one full block holding exactly `rows_per_block` rows,
@@ -216,7 +258,7 @@ impl BlockPool {
         let mut bufs = {
             let mut inner = this.inner.lock().unwrap();
             if let Some(budget) = this.max_bytes {
-                let resident = inner.block_bytes + inner.loose_bytes;
+                let resident = inner.resident();
                 if resident + bytes > budget.saturating_add(loose_credit) {
                     return Err(PoolExhausted { needed: bytes, resident, budget });
                 }
@@ -244,17 +286,81 @@ impl BlockPool {
         Ok(block)
     }
 
+    /// Allocate one full block through a codec: [`CodecKind::Fp32`]
+    /// routes to the plain [`BlockPool::alloc_block`] path (identical
+    /// blocks, identical ledger); any lossy codec encodes here — the
+    /// single encode point of the whole stack — and the block is born
+    /// encoded-resident, accounted under `quant_bytes`/`quant_blocks` in
+    /// exact [`CodecKind::encoded_block_bytes`] units.  Budget and
+    /// `loose_credit` semantics match `alloc_block`, but the budget check
+    /// uses the *encoded* size, so freezing through a shrinking codec is
+    /// strictly net-negative and always admissible at a full budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn alloc_quant_block(
+        pool: &Arc<BlockPool>,
+        d: usize,
+        kind: CodecKind,
+        k: &[f32],
+        v: &[f32],
+        pos: &[i32],
+        attn: &[f32],
+        loose_credit: usize,
+    ) -> Result<Arc<Block>, PoolExhausted> {
+        if kind == CodecKind::Fp32 {
+            return BlockPool::alloc_block(pool, d, k, v, pos, attn, loose_credit);
+        }
+        let this: &BlockPool = pool;
+        let rows = this.rows_per_block;
+        assert_eq!(k.len(), rows * d, "alloc_quant_block: k must hold {rows} rows of width {d}");
+        assert_eq!(v.len(), rows * d, "alloc_quant_block: v must hold {rows} rows of width {d}");
+        assert_eq!(pos.len(), rows, "alloc_quant_block: pos must hold {rows} rows");
+        assert_eq!(attn.len(), rows, "alloc_quant_block: attn must hold {rows} rows");
+        let bytes = kind.encoded_block_bytes(rows, d);
+        {
+            // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+            let mut inner = this.inner.lock().unwrap();
+            if let Some(budget) = this.max_bytes {
+                let resident = inner.resident();
+                if resident + bytes > budget.saturating_add(loose_credit) {
+                    return Err(PoolExhausted { needed: bytes, resident, budget });
+                }
+            }
+            inner.quant_bytes += bytes;
+            inner.quant_blocks += 1;
+            inner.bump_high_water();
+        }
+        let timer = this.quant_timer();
+        let enc = kind.codec().encode(rows, d, k, v);
+        this.finish_quant_timer(timer);
+        debug_assert_eq!(enc.byte_len(), kind.codec().encoded_kv_bytes(rows, d));
+        let block = Arc::new(Block::new_quant(
+            kind,
+            enc,
+            pos.to_vec(),
+            attn.to_vec(),
+            rows,
+            d,
+            Arc::clone(pool),
+        ));
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+        this.registry.lock().unwrap().push(&block);
+        Ok(block)
+    }
+
     /// Adopt a block whose payload already lives in the bound store (the
     /// restart restore path).  Starts spilled — zero resident bytes — and
     /// faults in lazily on first read; takes the live handle's claim on
-    /// the store record.
+    /// the store record.  `codec` must match the persisted record's codec
+    /// (the store metadata carries it), so the spilled gauge moves in the
+    /// encoded units the eventual fault-in will reverse.
     pub fn adopt_spilled(
         pool: &Arc<BlockPool>,
         store_id: u64,
         rows: usize,
         d: usize,
+        codec: CodecKind,
     ) -> Arc<Block> {
-        let bytes = block_bytes(rows, d);
+        let bytes = codec.encoded_block_bytes(rows, d);
         {
             let mut inner = pool.inner.lock().unwrap();
             inner.spilled_bytes += bytes;
@@ -263,7 +369,7 @@ impl BlockPool {
         if let Some(store) = pool.store() {
             store.retain_block(store_id);
         }
-        let block = Arc::new(Block::restored(rows, d, store_id, Arc::clone(pool)));
+        let block = Arc::new(Block::restored(rows, d, codec, store_id, Arc::clone(pool)));
         pool.registry.lock().unwrap().push(&block);
         block
     }
@@ -305,6 +411,24 @@ impl BlockPool {
 
     fn telemetry(&self) -> Option<Arc<Telemetry>> {
         self.telemetry.lock().unwrap().clone()
+    }
+
+    /// Start timing one codec pass (encode or decode).  Returns `None`
+    /// when no telemetry hub is bound, so the hot path pays one mutex
+    /// clone and nothing else.
+    fn quant_timer(&self) -> Option<(Arc<Telemetry>, u64)> {
+        self.telemetry().map(|tel| {
+            let t0_us = tel.now_us();
+            (tel, t0_us)
+        })
+    }
+
+    /// Close a [`BlockPool::quant_timer`] span into the `quantized`
+    /// histogram.
+    fn finish_quant_timer(&self, timer: Option<(Arc<Telemetry>, u64)>) {
+        if let Some((tel, t0_us)) = timer {
+            tel.record(Metric::Quant, tel.now_us().saturating_sub(t0_us));
+        }
     }
 
     /// Next value of the block-read clock (the spill LRU ordering).
@@ -357,6 +481,49 @@ impl BlockPool {
         (blocks, bytes)
     }
 
+    /// Keep the decoded-row cache under its budget by dropping the
+    /// coldest decoded copies.  Quantized blocks stay encoded-resident;
+    /// only their fp32 decode caches are shed, so this never touches the
+    /// store and never loses data.  Called from `Block::read` *before*
+    /// any block lock is taken (the reading block has just stamped the
+    /// freshest tick, making it the last candidate — a reader never
+    /// thrashes its own cache).  Skips blocks under an active read guard
+    /// via `try_drop_decoded`'s non-blocking write attempt.
+    pub(crate) fn maybe_trim_decoded(&self) {
+        let budget = self.dq_budget.load(Ordering::Relaxed);
+        {
+            // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+            let inner = self.inner.lock().unwrap();
+            if inner.dq_bytes <= budget {
+                return;
+            }
+        }
+        let mut candidates: Vec<(u64, Arc<Block>)> = Vec::new();
+        {
+            // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+            let mut reg = self.registry.lock().unwrap();
+            reg.items.retain(|w| w.strong_count() > 0);
+            for w in reg.items.iter() {
+                if let Some(b) = w.upgrade() {
+                    if b.has_decoded() {
+                        candidates.push((b.last_tick(), b));
+                    }
+                }
+            }
+        }
+        candidates.sort_by_key(|(tick, _)| *tick);
+        for (_, b) in candidates {
+            {
+                // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+                let inner = self.inner.lock().unwrap();
+                if inner.dq_bytes <= budget {
+                    return;
+                }
+            }
+            b.try_drop_decoded();
+        }
+    }
+
     /// Ledger half of a demotion (called by `Block::try_demote` with the
     /// block's state lock held, so residency and accounting move
     /// together): bytes leave the resident tier for the spilled tier and
@@ -368,6 +535,48 @@ impl BlockPool {
         inner.resident_blocks -= 1;
         inner.spilled_bytes += bytes;
         inner.spilled_blocks += 1;
+        inner.free_bytes += bytes;
+        inner.free_blocks += 1;
+        inner.free.entry(d).or_default().push(bufs);
+    }
+
+    /// Ledger half of a *quantized* demotion: the encoded payload's bytes
+    /// move quant → spilled (same exact encoded units the fault-in will
+    /// reverse), and any decoded fp32 cache the block was carrying is
+    /// dropped alongside — its buffers recycle to the free list.  The
+    /// encoded `Vec<u8>`s travel with the store write and are not pooled.
+    pub(crate) fn on_demoted_quant(
+        &self,
+        rows: usize,
+        d: usize,
+        kind: CodecKind,
+        decoded: Option<BlockBufs>,
+    ) {
+        let enc_bytes = kind.encoded_block_bytes(rows, d);
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+        let mut inner = self.inner.lock().unwrap();
+        inner.quant_bytes -= enc_bytes;
+        inner.quant_blocks -= 1;
+        inner.spilled_bytes += enc_bytes;
+        inner.spilled_blocks += 1;
+        if let Some(bufs) = decoded {
+            let bytes = block_bytes(rows, d);
+            inner.dq_bytes -= bytes;
+            inner.free_bytes += bytes;
+            inner.free_blocks += 1;
+            inner.free.entry(d).or_default().push(bufs);
+        }
+    }
+
+    /// Ledger half of a decode-cache trim (called by
+    /// `Block::try_drop_decoded` with the block's state lock held): the
+    /// fp32 copy leaves the `dq_bytes` gauge and its buffers recycle.
+    /// The block itself stays encoded-resident.
+    pub(crate) fn on_decoded_dropped(&self, rows: usize, d: usize, bufs: BlockBufs) {
+        let bytes = block_bytes(rows, d);
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+        let mut inner = self.inner.lock().unwrap();
+        inner.dq_bytes -= bytes;
         inner.free_bytes += bytes;
         inner.free_blocks += 1;
         inner.free.entry(d).or_default().push(bufs);
@@ -421,13 +630,115 @@ impl BlockPool {
         bufs
     }
 
-    /// A spilled block's last handle dropped: its bytes leave the spilled
-    /// tier (the store claim is released separately).
-    pub(crate) fn release_spilled(&self, rows: usize, d: usize) {
+    /// Fault a spilled *encoded* payload back in: read the quant store
+    /// record (encoded data + sidecar + side arrays, exactly the bytes
+    /// the demotion wrote — never a decode round-trip) and move the
+    /// ledger bytes spilled → quant.  Like [`BlockPool::fault_block`],
+    /// deliberately not budget-checked, and a torn store record panics.
+    pub(crate) fn fault_quant_block(
+        &self,
+        store_id: u64,
+        kind: CodecKind,
+        rows: usize,
+        d: usize,
+    ) -> (EncodedKv, Vec<i32>, Vec<f32>) {
+        let telemetry = self.telemetry();
+        let t0_us = telemetry.as_ref().map(|tel| tel.now_us());
+        // lint: allow(panic): a missing store on the fault path is a wiring bug, not a serving condition
+        let store = self.store().expect("faulting a spilled block requires its bound store");
+        let payload = store
+            .read_quant_block(store_id)
+            // lint: allow(panic): a torn store record is unrecoverable by design (mirrors fault_block)
+            .unwrap_or_else(|e| panic!("kvpool: fault-in of quant block {store_id} failed: {e:#}"));
+        assert_eq!((payload.rows, payload.d), (rows, d), "store payload dims drifted");
+        assert_eq!(payload.codec, kind.tag(), "store payload codec drifted");
+        let bytes = kind.encoded_block_bytes(rows, d);
+        {
+            // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+            let mut inner = self.inner.lock().unwrap();
+            inner.spilled_bytes -= bytes;
+            inner.spilled_blocks -= 1;
+            inner.quant_bytes += bytes;
+            inner.quant_blocks += 1;
+            inner.faults += 1;
+            inner.fault_bytes += bytes;
+            inner.bump_high_water();
+        }
+        if let (Some(tel), Some(t0_us)) = (&telemetry, t0_us) {
+            tel.record(Metric::Fault, tel.now_us().saturating_sub(t0_us));
+        }
+        (EncodedKv { data: payload.data, sidecar: payload.sidecar }, payload.pos, payload.attn)
+    }
+
+    /// Decode an encoded block into fp32 row buffers (the decoded-row
+    /// cache).  Buffers come off the free list when one of the right
+    /// width is available; the decoded copy is accounted under
+    /// `dq_bytes` in full fp32 `block_bytes` units.
+    pub(crate) fn decode_block(
+        &self,
+        kind: CodecKind,
+        rows: usize,
+        d: usize,
+        enc: &EncodedKv,
+        pos: &[i32],
+        attn: &[f32],
+    ) -> BlockBufs {
+        let timer = self.quant_timer();
         let bytes = block_bytes(rows, d);
+        let mut bufs = {
+            // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+            let mut inner = self.inner.lock().unwrap();
+            let bufs = match inner.free.get_mut(&d).and_then(|fl| fl.pop()) {
+                Some(b) => {
+                    inner.free_blocks -= 1;
+                    inner.free_bytes -= bytes;
+                    b
+                }
+                None => BlockBufs::with_capacity(rows, d),
+            };
+            inner.dq_bytes += bytes;
+            inner.bump_high_water();
+            bufs
+        };
+        bufs.clear();
+        kind.codec().decode(rows, d, enc, &mut bufs.k, &mut bufs.v);
+        bufs.pos.extend_from_slice(pos);
+        bufs.attn.extend_from_slice(attn);
+        self.finish_quant_timer(timer);
+        bufs
+    }
+
+    /// A spilled block's last handle dropped: its payload bytes (fp32 or
+    /// encoded — the caller passes its own `payload_bytes()`) leave the
+    /// spilled tier.  The store claim is released separately.
+    pub(crate) fn release_spilled(&self, bytes: usize) {
         let mut inner = self.inner.lock().unwrap();
         inner.spilled_bytes -= bytes;
         inner.spilled_blocks -= 1;
+    }
+
+    /// An encoded-resident block's last handle dropped: encoded bytes
+    /// leave the quant gauges (the encoded buffers are plain `Vec`s, not
+    /// pooled) and any decoded cache recycles to the free list.
+    pub(crate) fn release_quant(
+        &self,
+        rows: usize,
+        d: usize,
+        kind: CodecKind,
+        decoded: Option<BlockBufs>,
+    ) {
+        let enc_bytes = kind.encoded_block_bytes(rows, d);
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the pool
+        let mut inner = self.inner.lock().unwrap();
+        inner.quant_bytes -= enc_bytes;
+        inner.quant_blocks -= 1;
+        if let Some(bufs) = decoded {
+            let bytes = block_bytes(rows, d);
+            inner.dq_bytes -= bytes;
+            inner.free_bytes += bytes;
+            inner.free_blocks += 1;
+            inner.free.entry(d).or_default().push(bufs);
+        }
     }
 
     /// Drop the live handle's claim on a persisted payload.
@@ -497,7 +808,12 @@ impl BlockPool {
             Some(budget) => {
                 let mut reclaimable = self.sheddable_bytes();
                 if self.has_store() {
-                    reclaimable = reclaimable.max(self.inner.lock().unwrap().block_bytes);
+                    // Every frozen block byte is demotable: fp32 blocks,
+                    // encoded-resident quant blocks, and their decoded
+                    // caches (which vanish when their block demotes).
+                    let inner = self.inner.lock().unwrap();
+                    reclaimable =
+                        reclaimable.max(inner.block_bytes + inner.quant_bytes + inner.dq_bytes);
                 }
                 self.resident_bytes().saturating_sub(reclaimable) >= budget
             }
@@ -779,7 +1095,7 @@ mod tests {
         };
         let pool = BlockPool::unbounded(4);
         pool.bind_store(Arc::clone(&store));
-        let b = BlockPool::adopt_spilled(&pool, id, 4, 3);
+        let b = BlockPool::adopt_spilled(&pool, id, 4, 3, CodecKind::Fp32);
         assert!(!b.is_resident(), "restored blocks start on the disk tier");
         let s = pool.stats();
         assert_eq!((s.spilled_blocks, s.block_bytes), (1, 0));
@@ -788,5 +1104,116 @@ mod tests {
         drop(b);
         let (_, _, blocks) = store.inventory_counts();
         assert_eq!(blocks, 0);
+    }
+
+    #[test]
+    fn quant_alloc_is_ledger_exact_and_reads_decode() {
+        let pool = BlockPool::unbounded(4);
+        let d = 3;
+        let (k, v, pos, attn) = filled(4, d);
+        let enc_bytes = CodecKind::Int8Sym.encoded_block_bytes(4, d);
+        assert!(enc_bytes < block_bytes(4, d), "int8 must shrink the block");
+        let b =
+            BlockPool::alloc_quant_block(&pool, d, CodecKind::Int8Sym, &k, &v, &pos, &attn, 0)
+                .unwrap();
+        assert_eq!(b.codec(), CodecKind::Int8Sym);
+        let s = pool.stats();
+        assert_eq!((s.quant_bytes, s.quant_blocks), (enc_bytes, 1));
+        assert_eq!((s.block_bytes, s.resident_blocks), (0, 0), "no fp32 residency");
+        assert_eq!(s.dq_bytes, 0, "nothing decoded until first read");
+        assert_eq!(pool.resident_bytes(), enc_bytes);
+        // first read decodes into the cache; side arrays are exact
+        {
+            let g = b.read();
+            assert_eq!(g.pos(), &pos[..]);
+            assert_eq!(g.attn(), &attn[..]);
+            let scale = k.iter().fold(0f32, |m, x| m.max(x.abs())) / 127.0;
+            for (orig, deq) in k.iter().zip(g.k()) {
+                assert!((orig - deq).abs() <= scale, "row error bounded by its scale");
+            }
+        }
+        let s = pool.stats();
+        assert_eq!(s.dq_bytes, block_bytes(4, d), "decoded cache accounted in fp32 units");
+        assert_eq!(pool.resident_bytes(), enc_bytes + block_bytes(4, d));
+        drop(b);
+        let s = pool.stats();
+        assert_eq!((s.quant_bytes, s.quant_blocks, s.dq_bytes), (0, 0, 0));
+        assert_eq!(s.free_blocks, 1, "decoded buffers recycle; encoded ones don't pool");
+    }
+
+    #[test]
+    fn quant_fp32_routes_to_plain_alloc() {
+        let pool = BlockPool::unbounded(2);
+        let (k, v, pos, attn) = filled(2, 2);
+        let b = BlockPool::alloc_quant_block(&pool, 2, CodecKind::Fp32, &k, &v, &pos, &attn, 0)
+            .unwrap();
+        assert_eq!(b.codec(), CodecKind::Fp32);
+        let s = pool.stats();
+        assert_eq!((s.quant_blocks, s.resident_blocks), (0, 1));
+        assert_eq!(b.read().k(), &k[..], "identity codec is bit-exact");
+    }
+
+    #[test]
+    fn quant_spill_and_fault_keeps_encoded_payload_bit_identical() {
+        let dir = crate::kvstore::testutil::TempDir::new("pool-quant-spill");
+        let store = Arc::new(KvStore::open(dir.path()).unwrap());
+        let pool = BlockPool::unbounded(4);
+        pool.bind_store(Arc::clone(&store));
+        let d = 3;
+        let (k, v, pos, attn) = filled(4, d);
+        let enc_bytes = CodecKind::Int8Sym.encoded_block_bytes(4, d);
+        let b =
+            BlockPool::alloc_quant_block(&pool, d, CodecKind::Int8Sym, &k, &v, &pos, &attn, 0)
+                .unwrap();
+        let before = b.encoded().expect("encoded-resident");
+        let deq_before: Vec<f32> = b.read().k().to_vec();
+        let (nblocks, nbytes) = pool.spill(usize::MAX);
+        assert_eq!((nblocks, nbytes), (1, enc_bytes + block_bytes(4, d)));
+        assert!(!b.is_resident());
+        let s = pool.stats();
+        assert_eq!((s.spilled_bytes, s.spilled_blocks), (enc_bytes, 1));
+        assert_eq!((s.quant_bytes, s.quant_blocks, s.dq_bytes), (0, 0, 0));
+        assert_eq!(s.free_blocks, 1, "the decoded cache recycled on demote");
+        // fault back: the *encoded* payload round-trips bit-identically
+        assert_eq!(b.read().pos(), &pos[..]);
+        let after = b.encoded().expect("encoded-resident after fault");
+        assert_eq!(before.data, after.data, "encoded rows are bit-identical across spill");
+        assert_eq!(before.sidecar, after.sidecar, "sidecar scales are bit-identical");
+        assert_eq!(b.read().k(), &deq_before[..], "so dequantized rows are too");
+        let s = pool.stats();
+        assert_eq!((s.quant_bytes, s.quant_blocks), (enc_bytes, 1));
+        assert_eq!((s.faults, s.fault_bytes), (1, enc_bytes));
+        drop(b);
+        let (_, _, blocks) = store.inventory_counts();
+        assert_eq!(blocks, 0, "the last handle released the store record");
+    }
+
+    #[test]
+    fn decode_cache_trims_coldest_over_budget() {
+        let pool = BlockPool::unbounded(2);
+        let d = 2;
+        let (k, v, pos, attn) = filled(2, d);
+        let bytes = block_bytes(2, d);
+        let b1 =
+            BlockPool::alloc_quant_block(&pool, d, CodecKind::Int8Sym, &k, &v, &pos, &attn, 0)
+                .unwrap();
+        let b2 =
+            BlockPool::alloc_quant_block(&pool, d, CodecKind::Int8Sym, &k, &v, &pos, &attn, 0)
+                .unwrap();
+        // budget admits exactly one decoded copy
+        pool.set_decode_cache_budget(bytes);
+        assert_eq!(pool.decode_cache_budget(), bytes);
+        let _ = b1.read(); // decode b1 (within budget: nothing trims)
+        assert_eq!(pool.stats().dq_bytes, bytes);
+        let _ = b2.read(); // decode b2 (trim runs *before* the decode, so both live)
+        assert_eq!(pool.stats().dq_bytes, 2 * bytes);
+        let _ = b2.read(); // the next read sees the overrun and trims the coldest (b1)
+        let s = pool.stats();
+        assert_eq!(s.dq_bytes, bytes, "trim keeps the cache at one decoded copy");
+        assert_eq!(s.quant_blocks, 2, "both blocks stay encoded-resident");
+        assert!(b1.is_resident(), "trimming a decode cache never evicts the block");
+        assert!(b2.is_resident());
+        // b1 re-decodes transparently on its next read
+        assert_eq!(b1.read().pos(), &pos[..]);
     }
 }

@@ -37,14 +37,25 @@ pub struct PoolStats {
     pub faults: u64,
     /// Cumulative payload bytes faulted back in.
     pub fault_bytes: usize,
+    /// Encoded bytes held by quantized (encoded-resident) blocks, in
+    /// exact `CodecKind::encoded_block_bytes` units — data plus sidecar
+    /// plus side arrays.
+    pub quant_bytes: usize,
+    /// Count of live quantized blocks resident in encoded form.
+    pub quant_blocks: usize,
+    /// Bytes in the decoded-row cache: fp32 copies of encoded blocks,
+    /// counted in full `block_bytes` units, trimmed LRU against the
+    /// pool's decode-cache budget.
+    pub dq_bytes: usize,
     /// The byte budget, when the pool is budgeted.
     pub budget: Option<usize>,
 }
 
 impl PoolStats {
-    /// Live data bytes: blocks plus registered loose regions.
+    /// Live data bytes: blocks (fp32 and encoded) plus decoded caches
+    /// plus registered loose regions.
     pub fn resident_bytes(&self) -> usize {
-        self.block_bytes + self.loose_bytes
+        self.block_bytes + self.loose_bytes + self.quant_bytes + self.dq_bytes
     }
 
     /// Fraction of the pool's total allocation sitting idle in the free
@@ -102,10 +113,15 @@ mod tests {
             spilled_blocks: 2,
             faults: 1,
             fault_bytes: 2048,
+            quant_bytes: 0,
+            quant_blocks: 0,
+            dq_bytes: 0,
             budget: Some(2000),
         };
         assert_eq!(s.resident_bytes(), 800, "spilled bytes are not resident");
         assert!((s.fragmentation() - 0.2).abs() < 1e-12);
+        let quant = PoolStats { quant_bytes: 100, dq_bytes: 50, quant_blocks: 1, ..s };
+        assert_eq!(quant.resident_bytes(), 950, "encoded and decoded bytes are resident");
         let empty = PoolStats {
             block_bytes: 0,
             loose_bytes: 0,
@@ -117,6 +133,9 @@ mod tests {
             spilled_blocks: 0,
             faults: 0,
             fault_bytes: 0,
+            quant_bytes: 0,
+            quant_blocks: 0,
+            dq_bytes: 0,
             budget: None,
         };
         assert_eq!(empty.fragmentation(), 0.0);

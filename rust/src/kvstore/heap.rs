@@ -69,6 +69,16 @@ impl RecordHeap {
         self.pool.num_pages()
     }
 
+    /// Bytes of the page file occupied by in-use pages (total minus the
+    /// free list).  The store's disk-tier byte cap is enforced against
+    /// this: the file itself never shrinks, but evicting cold inventory
+    /// returns pages to the free list, which new writes reuse instead of
+    /// growing the file.
+    pub fn used_bytes(&self) -> usize {
+        let disk = self.pool.disk();
+        (disk.num_pages() as usize).saturating_sub(disk.free_pages()) * crate::kvstore::page::PAGE_SIZE
+    }
+
     /// Every live record id (head fragments), for reachability sweeps.
     pub fn live_records(&mut self) -> Result<Vec<RecordId>> {
         let mut out = Vec::new();

@@ -38,6 +38,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::quant::{CodecKind, EncodedKv};
 use crate::util::json::Json;
 
 pub use buffer::BufferPool;
@@ -52,6 +53,22 @@ pub struct BlockPayload {
     pub d: usize,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+    pub pos: Vec<i32>,
+    pub attn: Vec<f32>,
+}
+
+/// A quantized block's persisted form: the *encoded* payload exactly as
+/// the codec produced it at freeze time (data + sidecar), plus the fp32
+/// side arrays.  Spill never decodes and fault-in never re-encodes, so
+/// the bytes round-trip bit-identically through the disk tier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantBlockPayload {
+    pub rows: usize,
+    pub d: usize,
+    /// [`CodecKind`] tag (never 0/fp32 — plain blocks use [`BlockPayload`]).
+    pub codec: u8,
+    pub data: Vec<u8>,
+    pub sidecar: Vec<u8>,
     pub pos: Vec<i32>,
     pub attn: Vec<f32>,
 }
@@ -71,8 +88,12 @@ struct BlockMeta {
     rec: RecordId,
     rows: usize,
     d: usize,
-    /// Payload bytes (`kvpool::block_bytes(rows, d)`).
+    /// Record bytes past the 8-byte header: `kvpool::block_bytes(rows, d)`
+    /// for fp32 blocks, the (smaller) encoded form for quantized ones.
     bytes: usize,
+    /// [`CodecKind`] tag: 0 = fp32 ([`BlockPayload`] record layout),
+    /// nonzero = encoded ([`QuantBlockPayload`] layout).
+    codec: u8,
     /// Outstanding claims: at most one live in-memory `Block` handle plus
     /// one per journaled descriptor referencing this block.  At zero the
     /// record is deleted and a `bdel` appended.
@@ -90,6 +111,14 @@ struct StoreInner {
     limbo: HashSet<RecordId>,
     next_block: u64,
     next_prefix: u64,
+    /// Disk-tier byte cap (`--store-max-mb`), enforced against the page
+    /// file's in-use bytes; `None` = unbounded.
+    max_bytes: Option<usize>,
+    /// Monotone recency counter for the disk-tier LRU: descriptors are
+    /// stamped when journaled, coldest evicted first under the cap.
+    lru_clock: u64,
+    session_stamp: HashMap<String, u64>,
+    prefix_stamp: HashMap<u64, u64>,
 }
 
 /// The store facade: one per model variant, shared `Arc` between the
@@ -105,6 +134,18 @@ impl KvStore {
     /// validate every referenced payload, garbage-collect unreferenced
     /// blocks, and compact the journal to the surviving inventory.
     pub fn open(dir: &Path) -> Result<KvStore> {
+        KvStore::open_with_cap(dir, None)
+    }
+
+    /// [`KvStore::open`] with a disk-tier byte cap (`--store-max-mb`).
+    /// When the page file's in-use bytes exceed the cap — at boot or
+    /// after any write — the coldest journaled descriptors are evicted
+    /// (prefix snapshots before sessions, LRU within each class) until
+    /// the store fits or nothing evictable remains.  Eviction releases
+    /// the descriptors' block claims, so unshared payloads are deleted
+    /// with `bdel` journaled — replay never resurrects them — and an
+    /// evicted session simply resumes cold (shed semantics).
+    pub fn open_with_cap(dir: &Path, max_bytes: Option<usize>) -> Result<KvStore> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("create store dir {}", dir.display()))?;
         let pages_path = dir.join("store.pages");
@@ -120,11 +161,11 @@ impl KvStore {
         let mut next_prefix = 1u64;
         for rec in Wal::replay(&wal_path)? {
             match rec {
-                WalRecord::BlockPut { id, rec, rows, d, bytes } => {
+                WalRecord::BlockPut { id, rec, rows, d, bytes, codec } => {
                     next_block = next_block.max(id + 1);
                     blocks.insert(
                         id,
-                        BlockMeta { rec: RecordId::from_u64(rec), rows, d, bytes, refs: 0 },
+                        BlockMeta { rec: RecordId::from_u64(rec), rows, d, bytes, codec, refs: 0 },
                     );
                 }
                 WalRecord::BlockDel { id } => {
@@ -183,19 +224,39 @@ impl KvStore {
         }
 
         let wal = Wal::open(&wal_path)?;
-        let store = KvStore {
-            dir: dir.to_path_buf(),
-            inner: Mutex::new(StoreInner {
-                heap,
-                wal,
-                blocks,
-                sessions: keep_session,
-                prefixes: keep_prefix,
-                limbo: HashSet::new(),
-                next_block,
-                next_prefix,
-            }),
+        let mut inner = StoreInner {
+            heap,
+            wal,
+            blocks,
+            sessions: keep_session,
+            prefixes: keep_prefix,
+            limbo: HashSet::new(),
+            next_block,
+            next_prefix,
+            max_bytes,
+            lru_clock: 0,
+            session_stamp: HashMap::new(),
+            prefix_stamp: HashMap::new(),
         };
+        // seed the LRU stamps for the restored inventory (prefixes colder
+        // than sessions, matching the memory tier's shed ordering), then
+        // enforce the cap on what survived the restart
+        let mut pids: Vec<u64> = inner.prefixes.keys().copied().collect();
+        pids.sort_unstable();
+        for pid in pids {
+            inner.lru_clock += 1;
+            let stamp = inner.lru_clock;
+            inner.prefix_stamp.insert(pid, stamp);
+        }
+        let mut sids: Vec<String> = inner.sessions.keys().cloned().collect();
+        sids.sort_unstable();
+        for sid in sids {
+            inner.lru_clock += 1;
+            let stamp = inner.lru_clock;
+            inner.session_stamp.insert(sid, stamp);
+        }
+        inner.enforce_cap();
+        let store = KvStore { dir: dir.to_path_buf(), inner: Mutex::new(inner) };
         // compact the journal to the surviving inventory (also makes the
         // replayed state durable before anything new is appended)
         store.checkpoint()?;
@@ -232,8 +293,41 @@ impl KvStore {
         let bytes = data.len() - BLOCK_HEADER;
         // lint: allow(lock-order): `heap.put` is the buffer pool's method, not `SessionStore::put` — the lint's name-level call graph merges them, fabricating a KvStore.inner -> Block.state edge
         let rec = inner.heap.put(&data)?;
-        inner.blocks.insert(id, BlockMeta { rec, rows, d, bytes, refs: 1 });
-        inner.wal.append(&WalRecord::BlockPut { id, rec: rec.to_u64(), rows, d, bytes })?;
+        inner.blocks.insert(id, BlockMeta { rec, rows, d, bytes, codec: 0, refs: 1 });
+        inner.wal.append(&WalRecord::BlockPut { id, rec: rec.to_u64(), rows, d, bytes, codec: 0 })?;
+        inner.enforce_cap();
+        Ok(id)
+    }
+
+    /// Persist one *encoded* block payload (the spill half of the
+    /// quantized tier): the codec's data + sidecar bytes are written
+    /// verbatim — never dequantized — so the disk page shrinks by the
+    /// codec's factor and a later fault-in is bit-identical.  Appends a
+    /// `blk` journal record carrying the codec tag.
+    pub fn persist_quant_block(
+        &self,
+        rows: usize,
+        d: usize,
+        kind: CodecKind,
+        enc: &EncodedKv,
+        pos: &[i32],
+        attn: &[f32],
+    ) -> Result<u64> {
+        if kind == CodecKind::Fp32 {
+            bail!("fp32 blocks persist through persist_block");
+        }
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the store
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_block;
+        inner.next_block += 1;
+        let data = encode_quant_block(rows, d, enc, pos, attn);
+        let bytes = data.len() - BLOCK_HEADER;
+        // lint: allow(lock-order): `heap.put` is the buffer pool's method, not `SessionStore::put` — the lint's name-level call graph merges them, fabricating a KvStore.inner -> Block.state edge
+        let rec = inner.heap.put(&data)?;
+        let codec = kind.tag();
+        inner.blocks.insert(id, BlockMeta { rec, rows, d, bytes, codec, refs: 1 });
+        inner.wal.append(&WalRecord::BlockPut { id, rec: rec.to_u64(), rows, d, bytes, codec })?;
+        inner.enforce_cap();
         Ok(id)
     }
 
@@ -257,12 +351,34 @@ impl KvStore {
     /// Read a block payload back (fault-in path).
     pub fn read_block(&self, id: u64) -> Result<BlockPayload> {
         let mut inner = self.inner.lock().unwrap();
-        let (rec, rows, d) = match inner.blocks.get(&id) {
-            Some(m) => (m.rec, m.rows, m.d),
+        let (rec, rows, d, codec) = match inner.blocks.get(&id) {
+            Some(m) => (m.rec, m.rows, m.d, m.codec),
             None => bail!("read of unknown block {id}"),
         };
+        if codec != 0 {
+            bail!("block {id} is quantized (codec {codec}); read it via read_quant_block");
+        }
         let data = inner.heap.get(rec)?;
         let payload = decode_block(&data)?;
+        if payload.rows != rows || payload.d != d {
+            bail!("block {id} dims changed on disk: {}x{} vs {rows}x{d}", payload.rows, payload.d);
+        }
+        Ok(payload)
+    }
+
+    /// Read an encoded block payload back (quantized fault-in path).
+    pub fn read_quant_block(&self, id: u64) -> Result<QuantBlockPayload> {
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the store
+        let mut inner = self.inner.lock().unwrap();
+        let (rec, rows, d, codec) = match inner.blocks.get(&id) {
+            Some(m) => (m.rec, m.rows, m.d, m.codec),
+            None => bail!("read of unknown block {id}"),
+        };
+        if codec == 0 {
+            bail!("block {id} is fp32; read it via read_block");
+        }
+        let data = inner.heap.get(rec)?;
+        let payload = decode_quant_block(&data, codec)?;
         if payload.rows != rows || payload.d != d {
             bail!("block {id} dims changed on disk: {}x{} vs {rows}x{d}", payload.rows, payload.d);
         }
@@ -273,6 +389,21 @@ impl KvStore {
     pub fn block_dims(&self, id: u64) -> Option<(usize, usize, usize)> {
         let inner = self.inner.lock().unwrap();
         inner.blocks.get(&id).map(|m| (m.rows, m.d, m.bytes))
+    }
+
+    /// A journaled block's [`CodecKind`] tag (0 = fp32).
+    pub fn block_codec(&self, id: u64) -> Option<u8> {
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the store
+        let inner = self.inner.lock().unwrap();
+        inner.blocks.get(&id).map(|m| m.codec)
+    }
+
+    /// In-use bytes of the page file (what the `--store-max-mb` cap is
+    /// enforced against).
+    pub fn used_bytes(&self) -> usize {
+        // lint: allow(panic): lock poisoning is unrecoverable by design across the store
+        let inner = self.inner.lock().unwrap();
+        inner.heap.used_bytes()
     }
 
     // -- sidecars (opaque byte records referenced from descriptors) ------------
@@ -317,6 +448,10 @@ impl KvStore {
         if let Some(old) = inner.sessions.insert(id.to_string(), desc) {
             inner.release_desc(&old);
         }
+        inner.lru_clock += 1;
+        let stamp = inner.lru_clock;
+        inner.session_stamp.insert(id.to_string(), stamp);
+        inner.enforce_cap();
         Ok(())
     }
 
@@ -328,6 +463,7 @@ impl KvStore {
         let Some(old) = inner.sessions.remove(id) else {
             return Ok(false);
         };
+        inner.session_stamp.remove(id);
         inner.wal.append(&WalRecord::SessionDel { id: id.to_string() })?;
         inner.release_desc(&old);
         Ok(true)
@@ -341,6 +477,10 @@ impl KvStore {
         inner.commit_sidecars(&desc);
         inner.wal.append(&WalRecord::PrefixPut { pid, desc: desc.clone() })?;
         inner.prefixes.insert(pid, desc);
+        inner.lru_clock += 1;
+        let stamp = inner.lru_clock;
+        inner.prefix_stamp.insert(pid, stamp);
+        inner.enforce_cap();
         Ok(pid)
     }
 
@@ -349,6 +489,7 @@ impl KvStore {
         let Some(old) = inner.prefixes.remove(&pid) else {
             return Ok(false);
         };
+        inner.prefix_stamp.remove(&pid);
         inner.wal.append(&WalRecord::PrefixDel { pid })?;
         inner.release_desc(&old);
         Ok(true)
@@ -403,6 +544,7 @@ impl KvStore {
                 rows: m.rows,
                 d: m.d,
                 bytes: m.bytes,
+                codec: m.codec,
             });
         }
         for (id, desc) in &inner.sessions {
@@ -468,6 +610,64 @@ impl StoreInner {
             self.limbo.remove(&RecordId::from_u64(rec));
         }
     }
+
+    /// Evict cold inventory until the page file's in-use bytes fit the
+    /// cap (no-op when unbounded).  Eviction targets *descriptors*, never
+    /// block records directly: a spilled block a live handle still claims
+    /// keeps its payload (refs stay positive) and only loses the
+    /// descriptor's claim, while unshared payloads unwind through
+    /// `release_block`, which deletes the record and journals `bdel` —
+    /// replay never resurrects an evicted block.  Prefix snapshots go
+    /// before sessions (they are pure recompute), LRU within each class;
+    /// the single most-recently-stamped descriptor is never evicted (the
+    /// cap must not cannibalize the write that triggered it), so like any
+    /// LRU the cap is exceeded by at most one working set.  Returns the
+    /// number of descriptors evicted.
+    fn enforce_cap(&mut self) -> usize {
+        let Some(cap) = self.max_bytes else {
+            return 0;
+        };
+        let mut evicted = 0;
+        while self.heap.used_bytes() > cap {
+            let hottest =
+                self.prefix_stamp.values().chain(self.session_stamp.values()).copied().max();
+            let pick_prefix =
+                coldest(&self.prefix_stamp).filter(|pid| Some(self.prefix_stamp[pid]) != hottest);
+            if let Some(pid) = pick_prefix {
+                self.prefix_stamp.remove(&pid);
+                if let Some(old) = self.prefixes.remove(&pid) {
+                    if let Err(e) = self.wal.append(&WalRecord::PrefixDel { pid }) {
+                        eprintln!("kvstore: failed to journal evicted prefix {pid}: {e:#}");
+                    }
+                    self.release_desc(&old);
+                    eprintln!("kvstore: store cap: evicted cold prefix snapshot {pid}");
+                    evicted += 1;
+                }
+                continue;
+            }
+            let pick_session =
+                coldest(&self.session_stamp).filter(|sid| Some(self.session_stamp[sid]) != hottest);
+            if let Some(sid) = pick_session {
+                self.session_stamp.remove(&sid);
+                if let Some(old) = self.sessions.remove(&sid) {
+                    if let Err(e) = self.wal.append(&WalRecord::SessionDel { id: sid.clone() }) {
+                        eprintln!("kvstore: failed to journal evicted session {sid:?}: {e:#}");
+                    }
+                    self.release_desc(&old);
+                    eprintln!("kvstore: store cap: evicted cold session {sid:?}");
+                    evicted += 1;
+                }
+                continue;
+            }
+            break; // nothing evictable remains; live-handle payloads stay
+        }
+        evicted
+    }
+}
+
+/// The least-recently-stamped key in an LRU stamp map.
+fn coldest<K: Clone + Eq + std::hash::Hash>(stamps: &HashMap<K, u64>) -> Option<K> {
+    stamps.iter().min_by_key(|(_, &t)| t).map(|(k, _)| k.clone())
 }
 
 /// Visit every block id (`fb` arrays) in a descriptor's cache tree.
@@ -590,6 +790,62 @@ fn decode_block(buf: &[u8]) -> Result<BlockPayload> {
         bail!("block record has {} trailing bytes", buf.len() - off);
     }
     Ok(BlockPayload { rows, d, k, v, pos, attn })
+}
+
+/// Quantized record layout, sharing the fp32 8-byte dims header so
+/// `desc_is_valid`'s `header + bytes` length check covers both:
+/// `[rows u32][d u32][dlen u32][slen u32][data][sidecar][pos i32×rows][attn f32×rows]`.
+fn encode_quant_block(
+    rows: usize,
+    d: usize,
+    enc: &EncodedKv,
+    pos: &[i32],
+    attn: &[f32],
+) -> Vec<u8> {
+    debug_assert_eq!(pos.len(), rows);
+    debug_assert_eq!(attn.len(), rows);
+    let mut out =
+        Vec::with_capacity(BLOCK_HEADER + 8 + enc.data.len() + enc.sidecar.len() + rows * 8);
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&(d as u32).to_le_bytes());
+    out.extend_from_slice(&(enc.data.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(enc.sidecar.len() as u32).to_le_bytes());
+    out.extend_from_slice(&enc.data);
+    out.extend_from_slice(&enc.sidecar);
+    for p in pos {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    for x in attn {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn decode_quant_block(buf: &[u8], codec: u8) -> Result<QuantBlockPayload> {
+    if buf.len() < BLOCK_HEADER + 8 {
+        bail!("quant block record shorter than its header");
+    }
+    let rows = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    let d = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    let dlen = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    let slen = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]) as usize;
+    let mut off = BLOCK_HEADER + 8;
+    let data =
+        buf.get(off..off + dlen).ok_or_else(|| anyhow!("short quant block record"))?.to_vec();
+    off += dlen;
+    let sidecar =
+        buf.get(off..off + slen).ok_or_else(|| anyhow!("short quant block record"))?.to_vec();
+    off += slen;
+    let pos_bytes =
+        buf.get(off..off + rows * 4).ok_or_else(|| anyhow!("short quant block record"))?;
+    let pos: Vec<i32> =
+        pos_bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    off += rows * 4;
+    let attn = take_f32s(buf, &mut off, rows)?;
+    if off != buf.len() {
+        bail!("quant block record has {} trailing bytes", buf.len() - off);
+    }
+    Ok(QuantBlockPayload { rows, d, codec, data, sidecar, pos, attn })
 }
 
 #[cfg(test)]
@@ -764,6 +1020,65 @@ mod tests {
         let (sessions, prefixes, blocks) = store.inventory_counts();
         assert_eq!((sessions, blocks), (1, 1));
         assert_eq!(prefixes, 1, "journal tail after the checkpoint replays too");
+    }
+
+    #[test]
+    fn quant_block_round_trips_encoded_bytes_across_reopen() {
+        let dir = TempDir::new("store-quant");
+        let enc = EncodedKv { data: vec![1u8, 2, 255, 0, 17, 3, 4, 5], sidecar: vec![9u8; 16] };
+        let pos: Vec<i32> = vec![0, 1];
+        let attn = vec![0.5f32, f32::INFINITY];
+        let id = {
+            let store = KvStore::open(dir.path()).unwrap();
+            let id = store
+                .persist_quant_block(2, 2, CodecKind::Int8Sym, &enc, &pos, &attn)
+                .unwrap();
+            store.retain_block(id);
+            store.journal_session_put("q1", head_desc(&[id], 0)).unwrap();
+            store.release_block(id);
+            store.checkpoint().unwrap();
+            id
+        };
+        let store = KvStore::open(dir.path()).unwrap();
+        assert_eq!(store.block_codec(id), Some(CodecKind::Int8Sym.tag()), "codec survives replay");
+        let got = store.read_quant_block(id).unwrap();
+        assert_eq!(got.data, enc.data, "encoded bytes are bit-identical");
+        assert_eq!(got.sidecar, enc.sidecar);
+        assert_eq!(got.pos, pos);
+        assert!(got.attn[1].is_infinite());
+        assert!(store.read_block(id).is_err(), "the fp32 reader refuses a quant record");
+        store.journal_session_remove("q1").unwrap();
+        assert_eq!(store.inventory_counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn store_cap_evicts_cold_descriptors_lru() {
+        let dir = TempDir::new("store-cap");
+        // each ~8.3 KiB block spans two 8 KiB pages; a two-page cap fits
+        // one block's inventory but not two
+        let (k, v, pos, attn) = payload(32, 32, 0.0);
+        let store = KvStore::open_with_cap(dir.path(), Some(2 * 8192)).unwrap();
+        let a = store.persist_block(32, 32, &k, &v, &pos, &attn).unwrap();
+        store.retain_block(a);
+        let _pid = store.journal_prefix_put(head_desc(&[a], 0)).unwrap();
+        store.release_block(a); // only the prefix claim keeps block a
+        let b = store.persist_block(32, 32, &v, &k, &pos, &attn).unwrap();
+        store.retain_block(b);
+        store.journal_session_put("hot", head_desc(&[b], 0)).unwrap();
+        // the cold prefix was evicted to make room: pdel + bdel journaled,
+        // its unshared block gone; the freshly stamped session is never
+        // self-evicted
+        let (sessions, prefixes, _) = store.inventory_counts();
+        assert_eq!((sessions, prefixes), (1, 0), "cold prefix evicted before the session");
+        assert!(store.read_block(a).is_err(), "evicted prefix released its block");
+        assert!(store.read_block(b).is_ok(), "the hot payload survives");
+        // replay never resurrects the evicted inventory
+        store.release_block(b);
+        drop(store);
+        let store = KvStore::open_with_cap(dir.path(), Some(2 * 8192)).unwrap();
+        let (sessions, prefixes, _) = store.inventory_counts();
+        assert_eq!(prefixes, 0, "pdel/bdel kept the eviction durable");
+        assert_eq!(sessions, 1, "the survivor is intact after reopen");
     }
 
     #[test]

@@ -30,7 +30,12 @@ use crate::util::json::{self, Json};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum WalRecord {
-    BlockPut { id: u64, rec: u64, rows: usize, d: usize, bytes: usize },
+    /// `codec` is the block's [`CodecKind`] tag (0 = fp32).  Serialized
+    /// as an optional `"q"` field so journals written before quantization
+    /// existed replay unchanged (absent ⇒ 0).
+    ///
+    /// [`CodecKind`]: crate::quant::CodecKind
+    BlockPut { id: u64, rec: u64, rows: usize, d: usize, bytes: usize, codec: u8 },
     BlockDel { id: u64 },
     SessionPut { id: String, desc: Json },
     SessionDel { id: String },
@@ -41,14 +46,20 @@ pub enum WalRecord {
 impl WalRecord {
     pub fn to_line(&self) -> String {
         let v = match self {
-            WalRecord::BlockPut { id, rec, rows, d, bytes } => json::obj(vec![
-                ("op", json::s("blk")),
-                ("id", json::n(*id as f64)),
-                ("rec", json::n(*rec as f64)),
-                ("rows", json::n(*rows as f64)),
-                ("d", json::n(*d as f64)),
-                ("bytes", json::n(*bytes as f64)),
-            ]),
+            WalRecord::BlockPut { id, rec, rows, d, bytes, codec } => {
+                let mut fields = vec![
+                    ("op", json::s("blk")),
+                    ("id", json::n(*id as f64)),
+                    ("rec", json::n(*rec as f64)),
+                    ("rows", json::n(*rows as f64)),
+                    ("d", json::n(*d as f64)),
+                    ("bytes", json::n(*bytes as f64)),
+                ];
+                if *codec != 0 {
+                    fields.push(("q", json::n(*codec as f64)));
+                }
+                json::obj(fields)
+            }
             WalRecord::BlockDel { id } => {
                 json::obj(vec![("op", json::s("bdel")), ("id", json::n(*id as f64))])
             }
@@ -82,6 +93,10 @@ impl WalRecord {
                 rows: v.get("rows")?.as_usize()?,
                 d: v.get("d")?.as_usize()?,
                 bytes: v.get("bytes")?.as_usize()?,
+                codec: match v.opt("q") {
+                    Some(q) => q.as_i64()? as u8,
+                    None => 0, // pre-quantization journal line
+                },
             },
             "bdel" => WalRecord::BlockDel { id: v.get("id")?.as_i64()? as u64 },
             "sput" => WalRecord::SessionPut {
@@ -180,7 +195,8 @@ mod tests {
 
     fn sample() -> Vec<WalRecord> {
         vec![
-            WalRecord::BlockPut { id: 1, rec: 65536, rows: 16, d: 8, bytes: 1152 },
+            WalRecord::BlockPut { id: 1, rec: 65536, rows: 16, d: 8, bytes: 1152, codec: 0 },
+            WalRecord::BlockPut { id: 3, rec: 131072, rows: 16, d: 8, bytes: 416, codec: 1 },
             WalRecord::SessionPut {
                 id: "chat-7".into(),
                 desc: Json::parse(r#"{"pending":3,"turns":2}"#).unwrap(),
@@ -198,6 +214,19 @@ mod tests {
             let line = rec.to_line();
             assert_eq!(WalRecord::from_line(&line).unwrap(), rec, "round trip of {line}");
         }
+    }
+
+    #[test]
+    fn pre_quantization_blk_lines_parse_as_fp32() {
+        // a journal written before the codec field existed has no "q"
+        let line = r#"{"op":"blk","id":5,"rec":256,"rows":4,"d":2,"bytes":96}"#;
+        assert_eq!(
+            WalRecord::from_line(line).unwrap(),
+            WalRecord::BlockPut { id: 5, rec: 256, rows: 4, d: 2, bytes: 96, codec: 0 }
+        );
+        // and fp32 lines written today stay byte-compatible with it
+        let rec = WalRecord::BlockPut { id: 5, rec: 256, rows: 4, d: 2, bytes: 96, codec: 0 };
+        assert!(!rec.to_line().contains("\"q\""), "fp32 omits the codec field");
     }
 
     #[test]
@@ -239,7 +268,8 @@ mod tests {
         for rec in sample() {
             wal.append(&rec).unwrap();
         }
-        let compacted = vec![WalRecord::BlockPut { id: 2, rec: 4, rows: 4, d: 2, bytes: 96 }];
+        let compacted =
+            vec![WalRecord::BlockPut { id: 2, rec: 4, rows: 4, d: 2, bytes: 96, codec: 0 }];
         wal.checkpoint(&compacted).unwrap();
         // post-checkpoint appends land after the compacted inventory
         wal.append(&WalRecord::BlockDel { id: 2 }).unwrap();

@@ -46,6 +46,7 @@ pub mod kvcache;
 pub mod kvpool;
 pub mod kvstore;
 pub mod metrics;
+pub mod quant;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod server;

@@ -65,14 +65,15 @@ USAGE:
   lagkv serve [--port 7199] [--models llama_like,qwen_like]
               [--max-queue 256] [--sessions 64] [--session-ttl 600]
               [--pool-mb N] [--session-mb N] [--prefix-cache]
-              [--store-dir DIR] [--trace-dir DIR]
+              [--store-dir DIR] [--store-max-mb N] [--trace-dir DIR]
+              [--quant int8[:LAYERS]]
   lagkv ops stats|info|sessions|drain|undrain|checkpoint|trace [--port 7199]
             [--model M] [--delete SESSION_ID]
   lagkv tables --table1|--fig2|--fig3|--fig4|--fig5|--h2o|--ratio|--sim
                [--items N] [--lag L] [--out FILE]
 
 BACKENDS: cpu (default, hermetic) | xla (--features xla + make artifacts)
-POLICIES: lagkv localkv l2norm h2o streaming random none
+POLICIES: lagkv localkv l2norm h2o streaming streamingllm random none
 WIRE PROTOCOL v1: see DESIGN.md §9 ({"v":1,"op":...} envelopes, NDJSON
   event streams, typed {"code","message"} errors, ops control plane:
   stats/sessions/info/drain/undrain/checkpoint; legacy bare request lines
@@ -80,7 +81,11 @@ WIRE PROTOCOL v1: see DESIGN.md §9 ({"v":1,"op":...} envelopes, NDJSON
   lagkv::client::Client.
 TIERED STORAGE: --store-dir DIR spills cold frozen KV blocks to disk under
   pool pressure and WAL-journals detached sessions + prefix snapshots, so
-  both survive a restart (see DESIGN.md §11).
+  both survive a restart (see DESIGN.md §11).  --store-max-mb N caps the
+  page file; over the cap the coldest spilled inventory is evicted LRU.
+QUANTIZED KV: --quant int8 encodes frozen blocks as per-row symmetric int8
+  (4x smaller resident/spilled KV); --quant int8:0,2-5 quantizes only those
+  layers.  Reads decode transparently (see DESIGN.md §14).
 OBSERVABILITY: every request records a span (queued -> prefill segments ->
   decode -> compression -> done); `lagkv ops trace` shows recent spans and
   p50/p90/p99 latency summaries, --trace-dir DIR streams spans as NDJSON
@@ -191,6 +196,8 @@ fn serve(args: &Args) -> Result<()> {
         pool_max_bytes: serving.pool_max_bytes,
         prefix_cache: serving.prefix_cache.then(lagkv::kvpool::PrefixConfig::default),
         store_dir: serving.store_dir.clone(),
+        store_max_bytes: serving.store_max_bytes,
+        quant: serving.quant.clone(),
         trace_dir: serving.trace_dir.clone(),
     };
     let router = Arc::new(Router::start_with(EngineSpec::from_args(args)?, &models, router_cfg));

@@ -24,6 +24,12 @@ pub struct PoolGauges {
     pub spilled_bytes: usize,
     /// Live blocks currently on the disk tier.
     pub spilled_blocks: usize,
+    /// Encoded bytes of quantized blocks resident in the pool.
+    pub quant_bytes: usize,
+    /// Live encoded-resident quantized blocks.
+    pub quant_blocks: usize,
+    /// Decoded-row cache bytes held for quantized block reads.
+    pub dq_bytes: usize,
     /// Cumulative block fault-ins (disk → pool).
     pub faults: u64,
     /// Cumulative payload bytes faulted back in.
@@ -45,6 +51,9 @@ impl From<&PoolStats> for PoolGauges {
             fragmentation_pct: s.fragmentation() * 100.0,
             spilled_bytes: s.spilled_bytes,
             spilled_blocks: s.spilled_blocks,
+            quant_bytes: s.quant_bytes,
+            quant_blocks: s.quant_blocks,
+            dq_bytes: s.dq_bytes,
             faults: s.faults,
             fault_bytes: s.fault_bytes,
             budget_bytes: s.budget,
@@ -91,6 +100,15 @@ impl PoolGauges {
                 ", faulted {:.1} KiB ({} blocks)",
                 self.fault_bytes as f64 / 1024.0,
                 self.faults,
+            ));
+        }
+        // Codec gauge only under --quant, same reasoning as the tier gauge.
+        if self.quant_blocks > 0 {
+            out.push_str(&format!(
+                ", quantized {:.1} KiB ({} blocks, decode cache {:.1} KiB)",
+                self.quant_bytes as f64 / 1024.0,
+                self.quant_blocks,
+                self.dq_bytes as f64 / 1024.0,
             ));
         }
         if let Some(p) = &self.prefix {
@@ -274,6 +292,9 @@ mod tests {
             free_blocks: 1,
             spilled_bytes: 0,
             spilled_blocks: 0,
+            quant_bytes: 0,
+            quant_blocks: 0,
+            dq_bytes: 0,
             faults: 0,
             fault_bytes: 0,
             budget: Some(8192),
@@ -298,6 +319,18 @@ mod tests {
         let faulted = PoolGauges::from(&PoolStats { faults: 3, fault_bytes: 3072, ..s });
         let line = faulted.render();
         assert!(line.contains("faulted 3.0 KiB (3 blocks)"), "rendered: {line}");
+        assert!(!line.contains("quantized"), "no codec segment without --quant");
+        let quantized = PoolGauges::from(&PoolStats {
+            quant_bytes: 2048,
+            quant_blocks: 4,
+            dq_bytes: 1024,
+            ..s
+        });
+        let line = quantized.render();
+        assert!(
+            line.contains("quantized 2.0 KiB (4 blocks, decode cache 1.0 KiB)"),
+            "rendered: {line}"
+        );
     }
 
     #[test]
@@ -311,6 +344,9 @@ mod tests {
             free_blocks: 0,
             spilled_bytes: 0,
             spilled_blocks: 0,
+            quant_bytes: 0,
+            quant_blocks: 0,
+            dq_bytes: 0,
             faults: 0,
             fault_bytes: 0,
             budget: None,

@@ -1,0 +1,518 @@
+//! Per-block KV codecs: encode-at-freeze / decode-at-read compression of
+//! frozen pool blocks.
+//!
+//! LagKV's eviction shrinks the cache by dropping tokens; this module is
+//! multiplicative on what survives.  The design leans on the pool's block
+//! immutability contract: a frozen block is written exactly once (at
+//! freeze time, in `HeadStore::freeze_prefix`) and never mutated, so a
+//! lossy codec has a single well-defined encode point and decode is a
+//! pure function of the encoded payload — re-reading (or spilling and
+//! faulting) a quantized block is bit-identical *in the encoded domain*
+//! by construction.
+//!
+//! Two codecs:
+//!
+//! * [`Fp32`] — the identity codec.  Encoded form is the raw
+//!   little-endian f32 payload; `encoded_block_bytes` equals
+//!   [`block_bytes`], so an "fp32-quantized" block costs exactly what a
+//!   plain block costs (the pool routes it to the plain path).
+//! * [`Int8Sym`] — per-row symmetric int8.  Each K row and each V row
+//!   quantizes independently: `scale = max_abs(row) / 127`,
+//!   `q = clamp(round(x / scale), -127, 127)`, `x' = q * scale`.  The
+//!   per-row f32 scales live in a *sidecar* so the quantized tensor data
+//!   stays densely packed.  Max-abs reconstruction error is bounded by
+//!   `scale / 2` per row (no value clips: the row max maps to ±127
+//!   exactly), which the property suite pins.
+//!
+//! Byte accounting is exact and closed-form: for a block of `rows` rows
+//! at head width `d`,
+//!
+//! ```text
+//!   fp32: rows * (8d + 8)              (== kvpool::block_bytes)
+//!   int8: rows * (2d + 16)             (qk + qv + 2 scales + pos + attn)
+//! ```
+//!
+//! (`+8`/`+16` cover the uncompressed per-row `pos: i32` / `attn: f32`
+//! side entries, and for int8 the two f32 scales.)  The pool's
+//! `quant_bytes` gauge moves in exactly these units, so the ledger
+//! reconciliation property `quant_bytes == Σ encoded_block_bytes` holds
+//! with equality, not approximately.
+//!
+//! [`block_bytes`]: crate::kvpool::block_bytes
+
+use anyhow::{bail, Result};
+
+/// Identity of a block codec: stable tags are persisted in the kvstore
+/// block metadata and WAL, so the enum is append-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodecKind {
+    /// Identity: raw f32, no sidecar.
+    Fp32,
+    /// Per-row symmetric int8 with f32 scales in the sidecar.
+    Int8Sym,
+}
+
+impl CodecKind {
+    /// Stable on-disk tag (WAL `"q"` field, block record header).
+    pub fn tag(self) -> u8 {
+        match self {
+            CodecKind::Fp32 => 0,
+            CodecKind::Int8Sym => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<CodecKind> {
+        match tag {
+            0 => Some(CodecKind::Fp32),
+            1 => Some(CodecKind::Int8Sym),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecKind::Fp32 => "fp32",
+            CodecKind::Int8Sym => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CodecKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fp32" | "none" => CodecKind::Fp32,
+            "int8" | "int8sym" | "int8-sym" => CodecKind::Int8Sym,
+            other => bail!("unknown codec {other:?} (fp32|int8)"),
+        })
+    }
+
+    /// The codec implementation behind this kind.
+    pub fn codec(self) -> &'static dyn BlockCodec {
+        match self {
+            CodecKind::Fp32 => &Fp32,
+            CodecKind::Int8Sym => &Int8Sym,
+        }
+    }
+
+    /// Exact resident bytes of one encoded block of `rows` rows at head
+    /// width `d`: the encoded K/V payload + sidecar, plus the (never
+    /// compressed) per-row `pos: i32` and `attn: f32` side arrays.  This
+    /// is the unit the pool's `quant_bytes` ledger moves in, and — for
+    /// [`CodecKind::Fp32`] — equals [`crate::kvpool::block_bytes`].
+    pub fn encoded_block_bytes(self, rows: usize, d: usize) -> usize {
+        self.codec().encoded_kv_bytes(rows, d)
+            + rows * (std::mem::size_of::<i32>() + std::mem::size_of::<f32>())
+    }
+}
+
+/// The encoded form of one block's K/V payload: densely packed tensor
+/// `data` plus a codec-specific `sidecar` (per-row scales for int8;
+/// empty for fp32).  Spill serializes exactly these bytes — never a
+/// decode-then-respill — so a spilled quantized block faults back
+/// bit-identical to its encoded form.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EncodedKv {
+    pub data: Vec<u8>,
+    pub sidecar: Vec<u8>,
+}
+
+impl EncodedKv {
+    /// Total encoded K/V bytes (data + sidecar).
+    pub fn byte_len(&self) -> usize {
+        self.data.len() + self.sidecar.len()
+    }
+}
+
+/// A block codec: a pure, deterministic mapping between a block's f32
+/// K/V payload and its encoded form.  `decode(encode(x))` need not equal
+/// `x` (lossy is the point), but `encode` is called exactly once per
+/// block (freeze time) and `decode` must be total on anything `encode`
+/// produced — decode failures on the read path are unrepresentable.
+pub trait BlockCodec: Send + Sync {
+    fn kind(&self) -> CodecKind;
+
+    /// Exact encoded size (data + sidecar) of `rows` rows at width `d`.
+    fn encoded_kv_bytes(&self, rows: usize, d: usize) -> usize;
+
+    /// Encode a block's K and V (each `rows * d`, row-major).
+    fn encode(&self, rows: usize, d: usize, k: &[f32], v: &[f32]) -> EncodedKv;
+
+    /// Append the decoded K and V rows onto `k_out` / `v_out`.
+    fn decode(
+        &self,
+        rows: usize,
+        d: usize,
+        enc: &EncodedKv,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    );
+}
+
+/// The identity codec: encoded form is the little-endian f32 payload.
+pub struct Fp32;
+
+impl BlockCodec for Fp32 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Fp32
+    }
+
+    fn encoded_kv_bytes(&self, rows: usize, d: usize) -> usize {
+        2 * rows * d * std::mem::size_of::<f32>()
+    }
+
+    fn encode(&self, rows: usize, d: usize, k: &[f32], v: &[f32]) -> EncodedKv {
+        assert_eq!(k.len(), rows * d, "Fp32::encode: k shape");
+        assert_eq!(v.len(), rows * d, "Fp32::encode: v shape");
+        let mut data = Vec::with_capacity(2 * rows * d * 4);
+        for x in k.iter().chain(v.iter()) {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        EncodedKv { data, sidecar: Vec::new() }
+    }
+
+    fn decode(
+        &self,
+        rows: usize,
+        d: usize,
+        enc: &EncodedKv,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        let n = rows * d;
+        assert_eq!(enc.data.len(), 2 * n * 4, "Fp32::decode: payload shape");
+        assert!(enc.sidecar.is_empty(), "Fp32::decode: unexpected sidecar");
+        k_out.reserve(n);
+        v_out.reserve(n);
+        for (i, c) in enc.data.chunks_exact(4).enumerate() {
+            let x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            if i < n {
+                k_out.push(x);
+            } else {
+                v_out.push(x);
+            }
+        }
+    }
+}
+
+/// Per-row symmetric int8: `data = [qk i8×rows·d | qv i8×rows·d]`,
+/// `sidecar = [k_scales f32×rows | v_scales f32×rows]` (little-endian).
+pub struct Int8Sym;
+
+fn quantize_rows(rows: usize, d: usize, src: &[f32], data: &mut Vec<u8>, scales: &mut Vec<u8>) {
+    for r in 0..rows {
+        let row = &src[r * d..(r + 1) * d];
+        let max_abs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = max_abs / 127.0;
+        scales.extend_from_slice(&scale.to_le_bytes());
+        if scale == 0.0 {
+            data.extend(std::iter::repeat(0u8).take(d));
+        } else {
+            for &x in row {
+                let q = (x / scale).round().clamp(-127.0, 127.0) as i8;
+                data.push(q as u8);
+            }
+        }
+    }
+}
+
+fn dequantize_rows(rows: usize, d: usize, data: &[u8], scales: &[u8], out: &mut Vec<f32>) {
+    debug_assert_eq!(data.len(), rows * d);
+    debug_assert_eq!(scales.len(), rows * 4);
+    out.reserve(rows * d);
+    for r in 0..rows {
+        let s = &scales[r * 4..(r + 1) * 4];
+        let scale = f32::from_le_bytes([s[0], s[1], s[2], s[3]]);
+        for &b in &data[r * d..(r + 1) * d] {
+            out.push((b as i8) as f32 * scale);
+        }
+    }
+}
+
+impl BlockCodec for Int8Sym {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Int8Sym
+    }
+
+    fn encoded_kv_bytes(&self, rows: usize, d: usize) -> usize {
+        // qk + qv (one byte per element) + one f32 scale per K row and per
+        // V row
+        2 * rows * d + 2 * rows * std::mem::size_of::<f32>()
+    }
+
+    fn encode(&self, rows: usize, d: usize, k: &[f32], v: &[f32]) -> EncodedKv {
+        assert_eq!(k.len(), rows * d, "Int8Sym::encode: k shape");
+        assert_eq!(v.len(), rows * d, "Int8Sym::encode: v shape");
+        let mut data = Vec::with_capacity(2 * rows * d);
+        let mut sidecar = Vec::with_capacity(2 * rows * 4);
+        quantize_rows(rows, d, k, &mut data, &mut sidecar);
+        quantize_rows(rows, d, v, &mut data, &mut sidecar);
+        EncodedKv { data, sidecar }
+    }
+
+    fn decode(
+        &self,
+        rows: usize,
+        d: usize,
+        enc: &EncodedKv,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        let n = rows * d;
+        assert_eq!(enc.data.len(), 2 * n, "Int8Sym::decode: payload shape");
+        assert_eq!(enc.sidecar.len(), 2 * rows * 4, "Int8Sym::decode: sidecar shape");
+        dequantize_rows(rows, d, &enc.data[..n], &enc.sidecar[..rows * 4], k_out);
+        dequantize_rows(rows, d, &enc.data[n..], &enc.sidecar[rows * 4..], v_out);
+    }
+}
+
+/// The engine's quantization configuration: one codec kind plus an
+/// optional layer selector — the CLI's `--quant int8` (all layers) or
+/// `--quant int8:0,2-5` (those layers only; the rest stay fp32).  The
+/// per-layer map is how heterogeneous budgets (KVCompose-style) slot in
+/// without touching the pool: the cache asks `codec_for(layer)` at each
+/// freeze point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    kind: CodecKind,
+    /// Inclusive `(lo, hi)` layer ranges; `None` = every layer.
+    sel: Option<Vec<(usize, usize)>>,
+}
+
+impl Default for QuantSpec {
+    fn default() -> Self {
+        QuantSpec::fp32()
+    }
+}
+
+impl QuantSpec {
+    /// The no-op spec: every layer stays fp32 (plain blocks).
+    pub fn fp32() -> QuantSpec {
+        QuantSpec { kind: CodecKind::Fp32, sel: None }
+    }
+
+    /// Apply `kind` to every layer.
+    pub fn all(kind: CodecKind) -> QuantSpec {
+        QuantSpec { kind, sel: None }
+    }
+
+    /// Parse the CLI form: `"int8"`, `"int8:0,2-5"`, `"fp32"`.
+    pub fn parse(s: &str) -> Result<QuantSpec> {
+        let (kind_str, sel_str) = match s.split_once(':') {
+            Some((k, rest)) => (k, Some(rest)),
+            None => (s, None),
+        };
+        let kind = CodecKind::parse(kind_str)?;
+        let sel = match sel_str {
+            None => None,
+            Some(rest) => {
+                let mut ranges = Vec::new();
+                for part in rest.split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        bail!("empty layer range in quant spec {s:?}");
+                    }
+                    let (lo, hi) = match part.split_once('-') {
+                        Some((a, b)) => {
+                            let lo: usize = a
+                                .trim()
+                                .parse()
+                                .map_err(|_| anyhow::anyhow!("bad layer {a:?} in {s:?}"))?;
+                            let hi: usize = b
+                                .trim()
+                                .parse()
+                                .map_err(|_| anyhow::anyhow!("bad layer {b:?} in {s:?}"))?;
+                            (lo, hi)
+                        }
+                        None => {
+                            let l: usize = part
+                                .parse()
+                                .map_err(|_| anyhow::anyhow!("bad layer {part:?} in {s:?}"))?;
+                            (l, l)
+                        }
+                    };
+                    if lo > hi {
+                        bail!("descending layer range {lo}-{hi} in quant spec {s:?}");
+                    }
+                    ranges.push((lo, hi));
+                }
+                if ranges.is_empty() {
+                    bail!("empty layer selector in quant spec {s:?}");
+                }
+                Some(ranges)
+            }
+        };
+        Ok(QuantSpec { kind, sel })
+    }
+
+    pub fn kind(&self) -> CodecKind {
+        self.kind
+    }
+
+    /// The codec this spec assigns to `layer`.
+    pub fn codec_for(&self, layer: usize) -> CodecKind {
+        if self.kind == CodecKind::Fp32 {
+            return CodecKind::Fp32;
+        }
+        match &self.sel {
+            None => self.kind,
+            Some(ranges) => {
+                if ranges.iter().any(|&(lo, hi)| lo <= layer && layer <= hi) {
+                    self.kind
+                } else {
+                    CodecKind::Fp32
+                }
+            }
+        }
+    }
+
+    /// True when no layer would ever encode (the default configuration).
+    pub fn is_noop(&self) -> bool {
+        self.kind == CodecKind::Fp32
+    }
+
+    /// Round-trippable display form (`"int8"`, `"int8:0,2-5"`, `"fp32"`).
+    pub fn label(&self) -> String {
+        match &self.sel {
+            None => self.kind.name().to_string(),
+            Some(ranges) => {
+                let parts: Vec<String> = ranges
+                    .iter()
+                    .map(|&(lo, hi)| {
+                        if lo == hi {
+                            format!("{lo}")
+                        } else {
+                            format!("{lo}-{hi}")
+                        }
+                    })
+                    .collect();
+                format!("{}:{}", self.kind.name(), parts.join(","))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_rows(rows: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed_from(seed);
+        let k: Vec<f32> = (0..rows * d).map(|_| rng.normal() * 3.0).collect();
+        let v: Vec<f32> = (0..rows * d).map(|_| rng.normal() * 0.1).collect();
+        (k, v)
+    }
+
+    #[test]
+    fn fp32_round_trips_bit_exact() {
+        let (rows, d) = (4, 5);
+        let (k, v) = random_rows(rows, d, 1);
+        let enc = Fp32.encode(rows, d, &k, &v);
+        assert_eq!(enc.byte_len(), Fp32.encoded_kv_bytes(rows, d));
+        assert!(enc.sidecar.is_empty());
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        Fp32.decode(rows, d, &enc, &mut k2, &mut v2);
+        assert_eq!(k2, k);
+        assert_eq!(v2, v);
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_scale_per_row() {
+        let (rows, d) = (16, 8);
+        let (k, v) = random_rows(rows, d, 7);
+        let enc = Int8Sym.encode(rows, d, &k, &v);
+        assert_eq!(enc.byte_len(), Int8Sym.encoded_kv_bytes(rows, d));
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        Int8Sym.decode(rows, d, &enc, &mut k2, &mut v2);
+        for (src, dec, scales) in
+            [(&k, &k2, &enc.sidecar[..rows * 4]), (&v, &v2, &enc.sidecar[rows * 4..])]
+        {
+            for r in 0..rows {
+                let s = &scales[r * 4..(r + 1) * 4];
+                let scale = f32::from_le_bytes([s[0], s[1], s[2], s[3]]);
+                let max_abs =
+                    src[r * d..(r + 1) * d].iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                assert!((scale - max_abs / 127.0).abs() <= f32::EPSILON * max_abs.max(1.0));
+                for i in r * d..(r + 1) * d {
+                    let err = (src[i] - dec[i]).abs();
+                    assert!(
+                        err <= scale * 0.5 + 1e-6,
+                        "row {r} err {err} > scale/2 = {}",
+                        scale * 0.5
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_rows_and_deterministic_re_encode() {
+        let (rows, d) = (3, 4);
+        let k = vec![0.0f32; rows * d];
+        let mut v = vec![0.0f32; rows * d];
+        v[5] = 2.5; // one non-zero row in v
+        let enc = Int8Sym.encode(rows, d, &k, &v);
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        Int8Sym.decode(rows, d, &enc, &mut k2, &mut v2);
+        assert!(k2.iter().all(|&x| x == 0.0), "all-zero rows decode to zero");
+        assert_eq!(v2[5], 2.5, "row max reconstructs exactly (q = ±127)");
+        // encode is a pure function: same input, same bytes
+        assert_eq!(Int8Sym.encode(rows, d, &k, &v), enc);
+    }
+
+    #[test]
+    fn encoded_byte_arithmetic_is_closed_form() {
+        for (rows, d) in [(16, 8), (4, 3), (1, 1), (16, 64)] {
+            assert_eq!(
+                CodecKind::Fp32.encoded_block_bytes(rows, d),
+                crate::kvpool::block_bytes(rows, d),
+                "fp32 encoded bytes equal plain block bytes"
+            );
+            assert_eq!(CodecKind::Int8Sym.encoded_block_bytes(rows, d), rows * (2 * d + 16));
+        }
+    }
+
+    #[test]
+    fn codec_kind_tags_round_trip() {
+        for kind in [CodecKind::Fp32, CodecKind::Int8Sym] {
+            assert_eq!(CodecKind::from_tag(kind.tag()), Some(kind));
+            assert_eq!(CodecKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.codec().kind(), kind);
+        }
+        assert_eq!(CodecKind::from_tag(7), None);
+        assert!(CodecKind::parse("fp16").is_err());
+    }
+
+    #[test]
+    fn quant_spec_parse_and_layer_map() {
+        let all = QuantSpec::parse("int8").unwrap();
+        assert_eq!(all.kind(), CodecKind::Int8Sym);
+        assert!(!all.is_noop());
+        for l in 0..32 {
+            assert_eq!(all.codec_for(l), CodecKind::Int8Sym);
+        }
+        assert_eq!(all.label(), "int8");
+
+        let some = QuantSpec::parse("int8:0,2-5,9").unwrap();
+        for (l, want) in [
+            (0, CodecKind::Int8Sym),
+            (1, CodecKind::Fp32),
+            (2, CodecKind::Int8Sym),
+            (5, CodecKind::Int8Sym),
+            (6, CodecKind::Fp32),
+            (9, CodecKind::Int8Sym),
+            (10, CodecKind::Fp32),
+        ] {
+            assert_eq!(some.codec_for(l), want, "layer {l}");
+        }
+        assert_eq!(some.label(), "int8:0,2-5,9");
+        assert_eq!(QuantSpec::parse(&some.label()).unwrap(), some);
+
+        let noop = QuantSpec::parse("fp32").unwrap();
+        assert!(noop.is_noop());
+        assert_eq!(noop, QuantSpec::default());
+
+        assert!(QuantSpec::parse("int8:").is_err());
+        assert!(QuantSpec::parse("int8:5-2").is_err());
+        assert!(QuantSpec::parse("int8:a").is_err());
+        assert!(QuantSpec::parse("fp16").is_err());
+    }
+}

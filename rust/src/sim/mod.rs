@@ -13,9 +13,12 @@
 //! the model-free analogue of the passkey experiments, used for wide sweeps
 //! (thousands of configurations in seconds) and for property tests.
 
+use std::sync::Arc;
+
 use crate::compress::{maybe_compress, policy::make_policy};
 use crate::config::{CompressionConfig, PolicyKind};
 use crate::kvcache::KvCache;
+use crate::quant::QuantSpec;
 use crate::util::rng::Rng;
 
 /// Statistical shape of the synthetic stream.
@@ -36,6 +39,12 @@ pub struct SimSpec {
     /// itself regardless of policy — the Fig. 2 "r*L vs needle length"
     /// mechanism, which sim tests exercise explicitly.
     pub needle: (usize, usize),
+    /// Block codec the simulated cache freezes through (`--quant`'s map).
+    /// Defaults to fp32 (identity).  With int8 the driver scores over
+    /// *decoded* rows, so runs measure whether the policy ordering
+    /// survives quantization noise — the sim-tier twin of the paper's
+    /// "quantization-friendly" claim.
+    pub quant: QuantSpec,
 }
 
 impl Default for SimSpec {
@@ -49,6 +58,7 @@ impl Default for SimSpec {
             channel_scale: 2.0,
             salience_boost: 3.0,
             needle: (200, 8),
+            quant: QuantSpec::fp32(),
         }
     }
 }
@@ -69,6 +79,7 @@ pub struct SimReport {
 /// Generate the stream and run the driver; measure needle retention.
 pub fn run(spec: &SimSpec, cfg: &CompressionConfig, seed: u64) -> SimReport {
     let mut cache = KvCache::new(spec.n_layers, spec.n_heads, spec.d_head);
+    cache.set_quant(Arc::new(spec.quant.clone()));
     let mut scorer = make_policy(cfg.policy, seed);
     let mut rng = Rng::seed_from(seed);
 
@@ -246,6 +257,31 @@ mod tests {
     #[test]
     fn retained_fraction_matches_ratio_math() {
         let spec = SimSpec::default();
+        let cfg = CompressionConfig {
+            policy: PolicyKind::LagKv,
+            sink: 4,
+            lag: 32,
+            ratio: 0.25,
+            ..Default::default()
+        };
+        let rep = run(&spec, &cfg, 1);
+        let want = crate::kvcache::ratio::retained_len(
+            spec.n_tokens,
+            cfg.sink,
+            cfg.lag,
+            cfg.keep_per_partition(),
+        );
+        assert_eq!(rep.cache_len, want);
+    }
+
+    #[test]
+    fn int8_blocks_preserve_the_length_law() {
+        // Same run, frozen through the int8 codec: values are lossy but
+        // the retention arithmetic (Eq. 10) is codec-independent.
+        let spec = SimSpec {
+            quant: QuantSpec::all(crate::quant::CodecKind::Int8Sym),
+            ..Default::default()
+        };
         let cfg = CompressionConfig {
             policy: PolicyKind::LagKv,
             sink: 4,

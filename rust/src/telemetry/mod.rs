@@ -410,6 +410,8 @@ pub enum Metric {
     Spill,
     /// One block fault-in (disk → pool).
     Fault,
+    /// One block codec operation: encode-at-freeze or decode-at-read.
+    Quant,
 }
 
 impl Metric {
@@ -423,6 +425,7 @@ impl Metric {
             Metric::Checkpoint => "checkpoint",
             Metric::Spill => "spill",
             Metric::Fault => "fault",
+            Metric::Quant => "quantized",
         }
     }
 
@@ -445,6 +448,7 @@ impl Metric {
             Metric::Checkpoint,
             Metric::Spill,
             Metric::Fault,
+            Metric::Quant,
         ]
     }
 }

@@ -465,8 +465,7 @@ fn pool_pressure_sheds_sessions_and_rejects_typed() {
         sessions: SessionConfig::default(),
         pool_max_bytes: Some(200 * row),
         prefix_cache: None,
-        store_dir: None,
-        trace_dir: None,
+        ..RouterConfig::default()
     };
     let router = Router::start_with(EngineSpec::cpu(), &["llama_like".to_string()], cfg);
     let stats = router.stats("llama_like").unwrap();
@@ -543,8 +542,7 @@ fn cancel_under_budget_releases_the_reservation() {
         sessions: SessionConfig::default(),
         pool_max_bytes: Some(900 * row),
         prefix_cache: None,
-        store_dir: None,
-        trace_dir: None,
+        ..RouterConfig::default()
     };
     let router = Router::start_with(EngineSpec::cpu(), &["llama_like".to_string()], cfg);
     let stats = router.stats("llama_like").unwrap();

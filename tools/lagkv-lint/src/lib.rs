@@ -98,7 +98,16 @@ pub const SERVING_DIRS: [&str; 6] =
     ["server/", "coordinator/", "kvpool/", "kvstore/", "telemetry/", "api/"];
 
 /// Byte-gauge atomics owned by the RAII accounting layer.
-pub const GAUGES: [&str; 5] = ["sheddable", "prefix_sheddable", "queued", "reserved", "total"];
+pub const GAUGES: [&str; 8] = [
+    "sheddable",
+    "prefix_sheddable",
+    "queued",
+    "reserved",
+    "total",
+    "quant_bytes",
+    "quant_blocks",
+    "dq_bytes",
+];
 
 /// Raw atomic ops that mutate a gauge.
 pub const LEDGER_OPS: [&str; 4] = ["fetch_add", "fetch_sub", "store", "fetch_update"];

@@ -7,11 +7,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct FxStats {
     pub queued: AtomicU64,
     pub reserved: AtomicU64,
+    pub quant_bytes: AtomicU64,
 }
 
 impl FxStats {
     pub fn fx_bump(&self) {
         self.queued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn fx_quant_bump(&self) {
+        self.quant_bytes.fetch_add(416, Ordering::Relaxed);
     }
 
     pub fn fx_sanctioned(&self) {

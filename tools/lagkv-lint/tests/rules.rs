@@ -50,10 +50,11 @@ fn clock_rule_flags_non_clock_impls_and_honors_allow() {
 fn ledger_rule_flags_raw_gauge_ops_and_honors_allow() {
     let vios = fixture_vios();
     let f = "rust/src/coordinator/ledger.rs";
-    assert!(at(&vios, Rule::Ledger, f, 14), "raw fetch_add on `queued` flagged");
-    assert!(!at(&vios, Rule::Ledger, f, 19), "allow(ledger) suppresses the mint half");
-    assert!(!at(&vios, Rule::Ledger, f, 27), "guard impls (QueueToken) own their gauge ops");
-    assert_eq!(count(&vios, Rule::Ledger), 1, "{vios:?}");
+    assert!(at(&vios, Rule::Ledger, f, 15), "raw fetch_add on `queued` flagged");
+    assert!(at(&vios, Rule::Ledger, f, 19), "raw fetch_add on `quant_bytes` flagged");
+    assert!(!at(&vios, Rule::Ledger, f, 24), "allow(ledger) suppresses the mint half");
+    assert!(!at(&vios, Rule::Ledger, f, 32), "guard impls (QueueToken) own their gauge ops");
+    assert_eq!(count(&vios, Rule::Ledger), 2, "{vios:?}");
 }
 
 #[test]
